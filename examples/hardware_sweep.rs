@@ -1,0 +1,62 @@
+//! Hardware design-space exploration with the 45 nm cost model.
+//!
+//! Reproduces the paper's hardware evaluation interactively: Table V
+//! (three accelerator organizations at α = 0.1), Fig 7 (area vs α), and
+//! a traffic breakdown showing *where* the DM energy win comes from
+//! (weight-SRAM reads collapse into cheaper β reads + 10× fewer GRNG
+//! samples).
+//!
+//! ```bash
+//! cargo run --release --offline --example hardware_sweep
+//! ```
+
+use bayesdm::hwsim::arch::{AcceleratorConfig, Organization};
+use bayesdm::hwsim::report::{fig7_rows, render_fig7, render_table5, table5_rows};
+use bayesdm::hwsim::sim::{method_for, simulate, traffic_for};
+use bayesdm::MNIST_ARCH;
+
+fn main() {
+    // Table V (accuracy columns need the quantized functional model; the
+    // CLI `tables --table 5` fills them — here the hardware numbers).
+    let rows = table5_rows(&[None, None, None]);
+    println!("{}", render_table5(&rows));
+
+    // Fig 7: area vs alpha.
+    let rows = fig7_rows(&[1.0, 0.8, 0.6, 0.5, 0.4, 0.3, 0.2, 0.1, 0.05]);
+    println!("{}", render_fig7(&rows));
+
+    // Where does the energy go?  Traffic breakdown per organization.
+    println!("memory traffic per inference (bytes, 8-bit words):");
+    println!(
+        "  {:<14} {:>12} {:>12} {:>12} {:>12} {:>14}",
+        "org", "weight rd", "beta rd", "beta wr", "act rd+wr", "grng samples"
+    );
+    for org in [Organization::Standard, Organization::Hybrid, Organization::DmBnn] {
+        let t = traffic_for(&MNIST_ARCH, &method_for(org));
+        println!(
+            "  {:<14} {:>12} {:>12} {:>12} {:>12} {:>14}",
+            org.name(),
+            t.weight_reads,
+            t.beta_reads,
+            t.beta_writes,
+            t.act_reads + t.act_writes,
+            t.grng_samples,
+        );
+    }
+
+    // GRNG-inclusive energy (the paper excludes it "for fairness"; with it
+    // included the DM advantage grows — fewer samples, §III-C2).
+    println!("\nenergy with GRNG included vs excluded (µJ):");
+    for org in [Organization::Standard, Organization::Hybrid, Organization::DmBnn] {
+        let cfg = AcceleratorConfig::paper_table5(org);
+        let without = simulate(&cfg, false).energy_uj;
+        let with = simulate(&cfg, true).energy_uj;
+        println!(
+            "  {:<14} excl {:>8.1}  incl {:>8.1}  (+{:.1}%)",
+            org.name(),
+            without,
+            with,
+            100.0 * (with / without - 1.0)
+        );
+    }
+}

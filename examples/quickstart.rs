@@ -1,0 +1,66 @@
+//! Quickstart: load the artifacts, classify one image with each method,
+//! and show the DM plan + uncertainty signal.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use anyhow::{Context, Result};
+
+use bayesdm::coordinator::plan::{InferenceMethod, PlanSummary};
+use bayesdm::coordinator::{vote, Executor};
+use bayesdm::dataset::{load_images, load_weights};
+use bayesdm::runtime::Engine;
+use bayesdm::MNIST_ARCH;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // 1. Bring up the engine: PJRT CPU client + AOT artifact manifest.
+    let engine = Engine::new(&artifacts).context("run `make artifacts` first")?;
+    println!(
+        "engine up: {} artifacts, arch {:?}",
+        engine.manifest.artifacts.len(),
+        engine.manifest.arch
+    );
+
+    // 2. Load the trained mean-field posterior and build the executor
+    //    (weights are uploaded to the device once, here).
+    let weights = load_weights(format!("{artifacts}/weights_mnist_bnn.bin"))?;
+    let exec = Executor::new(engine, weights, 0xC0FFEE)?;
+
+    // 3. Grab a test image.
+    let test = load_images(format!("{artifacts}/data_mnist_test.bin"))?;
+    let (x, label) = (test.image(0), test.labels[0]);
+    println!("classifying test image 0 (true label {label})\n");
+
+    // 4. Run all three of the paper's inference methods.
+    for method in [
+        InferenceMethod::Standard { t: 100 },
+        InferenceMethod::Hybrid { t: 100 },
+        InferenceMethod::paper_dm(1.0),
+    ] {
+        let t0 = std::time::Instant::now();
+        let logits = exec.evaluate(x, &method)?;
+        let probs = vote::softmax_mean(&logits);
+        let class = vote::argmax(&probs);
+        println!(
+            "{:<9} voters={:<5} -> class {} (p={:.3}, entropy={:.3} nats) in {:>6.1} ms",
+            method.name(),
+            logits.len(),
+            class,
+            probs[class],
+            vote::predictive_entropy(&logits),
+            t0.elapsed().as_secs_f64() * 1e3,
+        );
+    }
+
+    // 5. Show what the DM-BNN plan dispatches under the memory-friendly
+    //    α = 0.1 schedule (Fig 5).
+    println!("\nDM-BNN dispatch plan at α = 0.1:");
+    let plan = PlanSummary::build(&MNIST_ARCH, &InferenceMethod::paper_dm(0.1), 10);
+    for (name, count) in &plan.dispatches {
+        println!("  {count:>5} × {name}");
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! End-to-end serving driver (DESIGN.md §5 "E2E").
+//!
+//! Boots the router/batcher over the PJRT executor, replays test-set
+//! images as classification requests for each of the paper's three
+//! methods, and reports accuracy, throughput and latency percentiles —
+//! the serving-shape comparison behind EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --offline --example serve_mnist [-- <requests>]
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use bayesdm::coordinator::plan::InferenceMethod;
+use bayesdm::coordinator::{serve, Executor, ServerConfig};
+use bayesdm::dataset::{load_images, load_weights};
+use bayesdm::runtime::Engine;
+
+const ARTIFACTS: &str = "artifacts";
+
+fn main() -> Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("requests must be a number"))
+        .unwrap_or(100);
+
+    let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin"))
+        .context("run `make artifacts` first")?;
+    let n = requests.min(test.len());
+
+    println!("end-to-end serving driver: {n} requests per method\n");
+    println!(
+        "{:<10} {:>9} {:>10} {:>10} {:>10} {:>8}",
+        "method", "req/s", "p50 (ms)", "p99 (ms)", "voters", "accuracy"
+    );
+
+    for method in [
+        InferenceMethod::Standard { t: 100 },
+        InferenceMethod::Hybrid { t: 100 },
+        InferenceMethod::paper_dm(1.0),
+        InferenceMethod::paper_dm(0.1),
+    ] {
+        let label = if let InferenceMethod::DmBnn { alpha, .. } = &method {
+            format!("dm a={alpha}")
+        } else {
+            method.name().to_string()
+        };
+        let handle = serve(
+            || {
+                let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin"))?;
+                Executor::new(Engine::new(ARTIFACTS)?, weights, 0xE2E)
+            },
+            ServerConfig { max_batch: 8, workers: 2, ..ServerConfig::default() },
+        );
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(n);
+        for i in 0..n {
+            pending.push((
+                test.labels[i],
+                handle
+                    .classify(test.image(i).to_vec(), method.clone())
+                    .map_err(anyhow::Error::msg)?,
+            ));
+        }
+        let mut correct = 0usize;
+        let mut voters = 0usize;
+        for (lbl, p) in pending {
+            let r = p.wait().map_err(anyhow::Error::msg)?;
+            voters = r.voters;
+            if r.class == lbl as usize {
+                correct += 1;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let s = handle.metrics.summary();
+        println!(
+            "{:<10} {:>9.2} {:>10.1} {:>10.1} {:>10} {:>7.1}%",
+            label,
+            n as f64 / dt,
+            s.p50_us.unwrap_or(0) as f64 / 1e3,
+            s.p99_us.unwrap_or(0) as f64 / 1e3,
+            voters,
+            100.0 * correct as f64 / n as f64,
+        );
+        handle.shutdown();
+    }
+    println!("\n(paper Table V shape: DM ≈ 4× faster than standard at equal+ voters)");
+    Ok(())
+}

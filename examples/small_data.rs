@@ -1,0 +1,104 @@
+//! Small-data & uncertainty: the BNN behaviours Fig 6 and §V-A motivate.
+//!
+//! Three demonstrations on the served posterior:
+//!
+//! 1. the shrink-ratio protocol (paper §V-A) on the native synthetic
+//!    dataset — how many images survive each ratio;
+//! 2. predictive entropy as an uncertainty signal: corrupting an input
+//!    (occlusion / noise) must raise the BNN's entropy — the core reason
+//!    to pay for Bayesian inference at the edge;
+//! 3. the Fig 6 accuracy curves, rendered from `artifacts/fig6.json`
+//!    when present (`make fig6`).
+//!
+//! ```bash
+//! cargo run --release --offline --example small_data
+//! ```
+
+use anyhow::{Context, Result};
+
+use bayesdm::coordinator::plan::InferenceMethod;
+use bayesdm::coordinator::{vote, Executor};
+use bayesdm::dataset::{load_images, load_weights, shrink_subset, SynthSpec, Synthesizer};
+use bayesdm::runtime::Engine;
+use bayesdm::util::Json;
+
+const ARTIFACTS: &str = "artifacts";
+
+fn main() -> Result<()> {
+    // --- 1. shrink-ratio protocol on the native generator ----------------
+    println!("shrink-ratio protocol (nominal 60000 images, paper §V-A):");
+    let mut synth = Synthesizer::new(SynthSpec::mnist());
+    let pool = synth.dataset(3000);
+    for ratio in [16usize, 64, 256, 1024] {
+        let sub = shrink_subset(&pool, ratio, 60_000, 7);
+        println!("  ratio {ratio:>5} -> {:>4} images ({} per class)", sub.len(), sub.len() / 10);
+    }
+
+    // --- 2. uncertainty under corruption ---------------------------------
+    let engine = Engine::new(ARTIFACTS).context("run `make artifacts` first")?;
+    let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin"))?;
+    let exec = Executor::new(engine, weights, 0x5EED)?;
+    let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin"))?;
+    let method = InferenceMethod::Standard { t: 50 };
+
+    println!("\npredictive entropy under input corruption (50 voters):");
+    println!("  {:<22} {:>8} {:>10}", "input", "class", "entropy");
+    let x = test.image(1).to_vec();
+    let logits = exec.evaluate(&x, &method)?;
+    println!(
+        "  {:<22} {:>8} {:>10.3}",
+        "clean",
+        vote::argmax(&vote::mean_vote(&logits)),
+        vote::predictive_entropy(&logits)
+    );
+    // occlude the centre 12x12 patch
+    let mut occluded = x.clone();
+    for r in 8..20 {
+        for c in 8..20 {
+            occluded[r * 28 + c] = 0.0;
+        }
+    }
+    let logits_o = exec.evaluate(&occluded, &method)?;
+    println!(
+        "  {:<22} {:>8} {:>10.3}",
+        "centre occluded",
+        vote::argmax(&vote::mean_vote(&logits_o)),
+        vote::predictive_entropy(&logits_o)
+    );
+    // pure noise
+    let mut g = bayesdm::grng::uniform::XorShift128Plus::new(17);
+    use bayesdm::grng::uniform::UniformSource;
+    let noise: Vec<f32> = (0..784).map(|_| g.next_f32()).collect();
+    let logits_n = exec.evaluate(&noise, &method)?;
+    println!(
+        "  {:<22} {:>8} {:>10.3}",
+        "uniform noise",
+        vote::argmax(&vote::mean_vote(&logits_n)),
+        vote::predictive_entropy(&logits_n)
+    );
+    println!("  (entropy should increase top to bottom)");
+
+    // --- 3. Fig 6 curves ---------------------------------------------------
+    match std::fs::read_to_string(format!("{ARTIFACTS}/fig6.json")) {
+        Ok(text) => {
+            let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("\nFig 6 (from artifacts/fig6.json):");
+            for (ds, curve) in v.get("datasets").and_then(Json::as_obj).unwrap() {
+                println!("  {ds}:");
+                let nn = curve.get("nn").and_then(Json::as_obj).unwrap();
+                let bnn = curve.get("bnn").and_then(Json::as_obj).unwrap();
+                let mut ratios: Vec<usize> = nn.keys().filter_map(|k| k.parse().ok()).collect();
+                ratios.sort_unstable();
+                for r in ratios {
+                    let a = nn[&r.to_string()].as_f64().unwrap_or(0.0);
+                    let b = bnn[&r.to_string()].as_f64().unwrap_or(0.0);
+                    let bar = |v: f64| "#".repeat((v * 30.0) as usize);
+                    println!("    ratio {r:>5}  NN  {:>5.1}% {}", 100.0 * a, bar(a));
+                    println!("               BNN {:>5.1}% {}", 100.0 * b, bar(b));
+                }
+            }
+        }
+        Err(_) => println!("\n(fig6.json not built — run `make fig6` for the accuracy curves)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,431 @@
+"""AOT artifact builder -- the single entry point of the compile path.
+
+``python -m compile.aot --out ../artifacts`` produces everything the rust
+binary needs at runtime (and nothing python-shaped survives past here):
+
+* ``*.hlo.txt``          -- HLO text modules for every kernel variant the
+  coordinator dispatches (precompute / dm / standard / fused-standard, at
+  every (M-block, N, T-block, relu) shape in the execution plans,
+  including the alpha-blocked row-slice variants of Fig 5).
+* ``weights_mnist_bnn.bin`` -- trained mean-field posterior (BDMW format).
+* ``data_mnist_test.bin`` / ``data_fmnist_test.bin`` -- synthetic test
+  sets (BDM1 format, see data.py).
+* ``manifest.json``      -- machine-readable index: artifact name, file,
+  parameter order/shapes/dtypes, semantic metadata; plus the training
+  history and python-side reference accuracies the rust tests cross-check.
+
+Run ``--fig6`` separately to regenerate the Fig 6 accuracy-vs-shrink-ratio
+curves (trains 20 models; slower, not needed by the request path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import numpy as np
+
+from . import data as D
+from . import train as T
+from .hlo import lower_to_hlo_text, shape_struct
+from .kernels import dm as kdm
+from .kernels import standard as kstd
+from .model import (
+    MNIST_ARCH,
+    forward_standard_fused,
+    forward_standard_tail_fused,
+    layer_dims,
+)
+
+MAGIC_WEIGHTS = 0x574D4442  # "BDMW"
+
+#: Voter-block sizes lowered for each dataflow.  tb=10 is the scheduling
+#: quantum (DM-BNN samples t_l = 10 per layer; standard T=100 runs as ten
+#: blocks); tb=100 exists for the perf ablation (dispatch amortization).
+T_BLOCKS = (10, 100)
+
+#: alpha values of the memory-friendly framework lowered as row-sliced
+#: artifacts (Fig 5 / Fig 7).  alpha=1.0 is the unblocked baseline.
+ALPHAS = (1.0, 0.5, 0.2, 0.1)
+
+
+def write_weights_bin(path: str, params) -> None:
+    """BDMW: magic, n_layers, then per layer M,N + mu,sigma,mu_b,sigma_b f32."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", MAGIC_WEIGHTS, len(params)))
+        for p in params:
+            m, n = p["mu"].shape
+            f.write(struct.pack("<II", m, n))
+            for key in ("mu", "sigma", "mu_b", "sigma_b"):
+                f.write(np.asarray(p[key], np.float32).tobytes(order="C"))
+
+
+def read_weights_bin(path: str):
+    """Round-trip reader (used by tests)."""
+    with open(path, "rb") as f:
+        magic, n_layers = struct.unpack("<II", f.read(8))
+        assert magic == MAGIC_WEIGHTS
+        params = []
+        for _ in range(n_layers):
+            m, n = struct.unpack("<II", f.read(8))
+            p = {}
+            for key, count in (
+                ("mu", m * n), ("sigma", m * n), ("mu_b", m), ("sigma_b", m)
+            ):
+                arr = np.frombuffer(f.read(4 * count), np.float32)
+                p[key] = arr.reshape((m, n) if count == m * n else (m,)).copy()
+            params.append(p)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Artifact construction.
+# ---------------------------------------------------------------------------
+
+
+def _alpha_blocks(m: int) -> dict[float, int]:
+    """Row-block size per alpha; rounds to >=1 and must divide M to keep
+    the coverage invariant (every output row computed exactly once)."""
+    out = {}
+    for a in ALPHAS:
+        mb = max(1, round(m * a))
+        while m % mb != 0:
+            mb -= 1
+        out[a] = mb
+    return out
+
+
+def build_artifact_specs(arch=MNIST_ARCH):
+    """Enumerate every (kind, shape) artifact the execution plans need.
+
+    Returns a dict name -> spec; shapes are deduplicated across layers and
+    alphas (e.g. layer-2 dm at alpha=1.0 and layer-1 alpha-slices may
+    coincide).  `relu` is part of the key: hidden layers fuse the
+    activation, the output layer does not.
+    """
+    dims = layer_dims(arch)
+    num_layers = len(dims)
+    specs: dict[str, dict] = {}
+
+    def add(name, kind, params, outputs, meta):
+        if name not in specs:
+            specs[name] = {
+                "name": name,
+                "kind": kind,
+                "file": f"{name}.hlo.txt",
+                "params": params,
+                "outputs": outputs,
+                "meta": meta,
+            }
+
+    for li, (m, n) in enumerate(dims):
+        relu = li != num_layers - 1
+        # Pre-compute: one per (M, N).
+        add(
+            f"precompute_m{m}_n{n}",
+            "precompute",
+            [
+                {"name": "x", "shape": [n], "dtype": "f32"},
+                {"name": "sigma", "shape": [m, n], "dtype": "f32"},
+                {"name": "mu", "shape": [m, n], "dtype": "f32"},
+            ],
+            [
+                {"name": "beta", "shape": [m, n], "dtype": "f32"},
+                {"name": "eta", "shape": [m], "dtype": "f32"},
+            ],
+            {"m": m, "n": n},
+        )
+        for tb in T_BLOCKS:
+            # Standard dataflow (full M only -- the baseline never slices).
+            rtag = "r" if relu else "nr"
+            add(
+                f"std_m{m}_n{n}_t{tb}_{rtag}",
+                "standard",
+                [
+                    {"name": "h", "shape": [tb, m, n], "dtype": "f32"},
+                    {"name": "sigma", "shape": [m, n], "dtype": "f32"},
+                    {"name": "mu", "shape": [m, n], "dtype": "f32"},
+                    {"name": "x", "shape": [n], "dtype": "f32"},
+                    {"name": "hb", "shape": [tb, m], "dtype": "f32"},
+                    {"name": "sigma_b", "shape": [m], "dtype": "f32"},
+                    {"name": "mu_b", "shape": [m], "dtype": "f32"},
+                ],
+                [{"name": "y", "shape": [tb, m], "dtype": "f32"}],
+                {"m": m, "n": n, "t": tb, "relu": relu},
+            )
+            # DM dataflow at every alpha row-slice (Fig 5).
+            for alpha, mb in _alpha_blocks(m).items():
+                if tb == 100 and mb != m:
+                    continue  # perf-ablation block only needed unsliced
+                add(
+                    f"dm_m{mb}_n{n}_t{tb}_{rtag}",
+                    "dm",
+                    [
+                        {"name": "h", "shape": [tb, mb, n], "dtype": "f32"},
+                        {"name": "beta", "shape": [mb, n], "dtype": "f32"},
+                        {"name": "eta", "shape": [mb], "dtype": "f32"},
+                        {"name": "hb", "shape": [tb, mb], "dtype": "f32"},
+                        {"name": "sigma_b", "shape": [mb], "dtype": "f32"},
+                        {"name": "mu_b", "shape": [mb], "dtype": "f32"},
+                    ],
+                    [{"name": "y", "shape": [tb, mb], "dtype": "f32"}],
+                    {"m": mb, "n": n, "t": tb, "relu": relu, "full_m": m},
+                )
+
+    # Fused whole-net standard graph (perf comparison / quickstart).
+    tb = 10
+    params = [{"name": "x", "shape": [arch[0]], "dtype": "f32"}]
+    for li, (m, n) in enumerate(dims):
+        params += [
+            {"name": f"mu{li}", "shape": [m, n], "dtype": "f32"},
+            {"name": f"sigma{li}", "shape": [m, n], "dtype": "f32"},
+            {"name": f"mu_b{li}", "shape": [m], "dtype": "f32"},
+            {"name": f"sigma_b{li}", "shape": [m], "dtype": "f32"},
+        ]
+    for li, (m, n) in enumerate(dims):
+        params.append({"name": f"h{li}", "shape": [tb, m, n], "dtype": "f32"})
+    for li, (m, n) in enumerate(dims):
+        params.append({"name": f"hb{li}", "shape": [tb, m], "dtype": "f32"})
+    add(
+        f"std_full_t{tb}",
+        "standard_full",
+        params,
+        [{"name": "logits", "shape": [tb, dims[-1][0]], "dtype": "f32"}],
+        {"arch": list(arch), "t": tb},
+    )
+
+    # Fused standard *tail* (layers >= 2) over per-voter activations: the
+    # Hybrid plan's second stage (Fig 4a).
+    tail = dims[1:]
+    params = [{"name": "y1", "shape": [tb, dims[0][0]], "dtype": "f32"}]
+    for li, (m, n) in enumerate(tail):
+        params += [
+            {"name": f"mu{li}", "shape": [m, n], "dtype": "f32"},
+            {"name": f"sigma{li}", "shape": [m, n], "dtype": "f32"},
+            {"name": f"mu_b{li}", "shape": [m], "dtype": "f32"},
+            {"name": f"sigma_b{li}", "shape": [m], "dtype": "f32"},
+        ]
+    for li, (m, n) in enumerate(tail):
+        params.append({"name": f"h{li}", "shape": [tb, m, n], "dtype": "f32"})
+    for li, (m, n) in enumerate(tail):
+        params.append({"name": f"hb{li}", "shape": [tb, m], "dtype": "f32"})
+    add(
+        f"std_tail_t{tb}",
+        "standard_tail",
+        params,
+        [{"name": "logits", "shape": [tb, dims[-1][0]], "dtype": "f32"}],
+        {"arch": list(arch), "t": tb},
+    )
+    return specs
+
+
+def lower_artifact(spec, out_dir: str) -> int:
+    """Lower one artifact spec to HLO text; returns byte size."""
+    kind = spec["kind"]
+    meta = spec["meta"]
+    args = [shape_struct(p["shape"]) for p in spec["params"]]
+
+    if kind == "precompute":
+        fn = lambda x, sigma, mu: kdm.precompute(x, sigma, mu)
+    elif kind == "dm":
+        relu = meta["relu"]
+        fn = lambda h, beta, eta, hb, sb, mb: kdm.dm_forward_bias(
+            h, beta, eta, hb, sb, mb, relu=relu
+        )
+    elif kind == "standard":
+        relu = meta["relu"]
+        fn = lambda h, sigma, mu, x, hb, sb, mb: kstd.standard_forward_bias(
+            h, sigma, mu, x, hb, sb, mb, relu=relu
+        )
+    elif kind == "standard_full":
+        arch = tuple(meta["arch"])
+        nl = len(arch) - 1
+
+        def fn(*flat):
+            x = flat[0]
+            params = []
+            for li in range(nl):
+                base = 1 + 4 * li
+                params.append(
+                    {
+                        "mu": flat[base],
+                        "sigma": flat[base + 1],
+                        "mu_b": flat[base + 2],
+                        "sigma_b": flat[base + 3],
+                    }
+                )
+            hs = list(flat[1 + 4 * nl : 1 + 5 * nl])
+            hbs = list(flat[1 + 5 * nl : 1 + 6 * nl])
+            return forward_standard_fused(params, x, hs, hbs)
+
+    elif kind == "standard_tail":
+        arch = tuple(meta["arch"])
+        nt = len(arch) - 2  # tail layers
+
+        def fn(*flat):
+            y1 = flat[0]
+            params = []
+            for li in range(nt):
+                base = 1 + 4 * li
+                params.append(
+                    {
+                        "mu": flat[base],
+                        "sigma": flat[base + 1],
+                        "mu_b": flat[base + 2],
+                        "sigma_b": flat[base + 3],
+                    }
+                )
+            hs = list(flat[1 + 4 * nt : 1 + 5 * nt])
+            hbs = list(flat[1 + 5 * nt : 1 + 6 * nt])
+            return forward_standard_tail_fused(params, y1, hs, hbs)
+
+    else:
+        raise ValueError(f"unknown artifact kind {kind}")
+
+    text = lower_to_hlo_text(fn, *args)
+    path = os.path.join(out_dir, spec["file"])
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# ---------------------------------------------------------------------------
+# Fig 6: accuracy vs shrink ratio, NN vs BNN, both surrogate datasets.
+# ---------------------------------------------------------------------------
+
+FIG6_RATIOS = (4, 16, 64, 256, 1024)
+
+
+def run_fig6(out_dir: str, quick: bool = False) -> dict:
+    """Train NN + BNN per shrink ratio per dataset; dump fig6.json."""
+    ratios = FIG6_RATIOS if not quick else (64, 1024)
+    results = {"ratios": list(ratios), "datasets": {}}
+    for spec in (D.DatasetSpec.mnist(), D.DatasetSpec.fmnist()):
+        print(f"[fig6] dataset {spec.name}")
+        # Pool = the shrink-ratio-4 size; larger ratios subset from it.
+        pool_x, pool_y = D.generate(spec, 15000, "train")
+        test_x, test_y = D.generate(spec, 10000, "test")
+        curve = {"nn": {}, "bnn": {}}
+        for ratio in ratios:
+            # Small sets need more passes to converge; cap the step budget.
+            # Both models get the identical schedule (paper: "training
+            # parameters ... are set to be the same for fairness") — the
+            # long schedule is exactly where the MLE baseline overfits and
+            # the Bayesian prior pays off (Fig 6's point).  Small-data
+            # points are seed-averaged: a 60-image subset has ±1pt noise
+            # across draws, comparable to the NN/BNN gap itself.
+            seeds = (0, 1, 2) if ratio >= 64 and not quick else (0,)
+            accs_nn, accs_bnn = [], []
+            n_sub, epochs = 0, 0
+            for seed in seeds:
+                sx, sy = D.shrink_subset(
+                    pool_x, pool_y, max(1, ratio // 4), seed=7 + 13 * seed
+                )
+                n_sub = len(sy)
+                epochs = int(np.clip(120000 // max(n_sub, 1), 15, 300))
+                nn = T.train_nn(sx, sy, epochs=epochs, seed=seed)
+                accs_nn.append(T.accuracy(T.nn_predict(nn, test_x), test_y))
+                bnn, _ = T.train_bnn(
+                    sx, sy, epochs=epochs, seed=seed, kl_scale=0.02
+                )
+                accs_bnn.append(
+                    T.accuracy(T.bnn_predict_vote(bnn, test_x, t=50, seed=seed),
+                               test_y)
+                )
+            acc_nn = float(np.mean(accs_nn))
+            acc_bnn = float(np.mean(accs_bnn))
+            curve["nn"][str(ratio)] = acc_nn
+            curve["bnn"][str(ratio)] = acc_bnn
+            print(
+                f"[fig6]   ratio {ratio:5d} (n={n_sub:5d}, ep={epochs:3d}, "
+                f"seeds={len(seeds)}) nn {acc_nn:.4f}  bnn {acc_bnn:.4f}"
+            )
+        results["datasets"][spec.name] = curve
+    path = os.path.join(out_dir, "fig6.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[fig6] wrote {path}")
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Main build.
+# ---------------------------------------------------------------------------
+
+
+def build(out_dir: str, *, quick: bool = False, fig6: bool = False,
+          train_size: int = 20000, epochs: int = 15) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+
+    if fig6:
+        return run_fig6(out_dir, quick=quick)
+
+    if quick:
+        train_size, epochs = 2000, 3
+
+    manifest: dict = {"arch": list(MNIST_ARCH), "artifacts": [],
+                      "t_blocks": list(T_BLOCKS), "alphas": list(ALPHAS)}
+
+    # 1. Datasets.
+    spec = D.DatasetSpec.mnist()
+    train_x, train_y = D.generate(spec, train_size, "train")
+    test_x, test_y = D.generate(spec, 10000, "test")
+    D.write_images_bin(os.path.join(out_dir, "data_mnist_test.bin"), test_x, test_y)
+    fspec = D.DatasetSpec.fmnist()
+    ftest_x, ftest_y = D.generate(fspec, 10000, "test")
+    D.write_images_bin(os.path.join(out_dir, "data_fmnist_test.bin"), ftest_x, ftest_y)
+    print(f"[aot] datasets written ({time.time()-t0:.1f}s)")
+
+    # 2. Train the BNN posterior the rust runtime serves.
+    bnn, history = T.train_bnn(
+        train_x, train_y, epochs=epochs, log_every=max(1, epochs // 5)
+    )
+    write_weights_bin(os.path.join(out_dir, "weights_mnist_bnn.bin"), bnn)
+    acc_mean = T.accuracy(T.bnn_predict_mean(bnn, test_x), test_y)
+    acc_vote = T.accuracy(T.bnn_predict_vote(bnn, test_x[:2000], t=20), test_y[:2000])
+    print(f"[aot] BNN trained: mean-acc {acc_mean:.4f} vote-acc(2k) {acc_vote:.4f} "
+          f"({time.time()-t0:.1f}s)")
+    manifest["training"] = {
+        "train_size": train_size,
+        "epochs": epochs,
+        "history": history[-3:],
+        "test_accuracy_posterior_mean": acc_mean,
+        "test_accuracy_vote20_first2k": acc_vote,
+    }
+
+    # 3. Lower every artifact.
+    specs = build_artifact_specs()
+    total = 0
+    for name, s in sorted(specs.items()):
+        size = lower_artifact(s, out_dir)
+        total += size
+        manifest["artifacts"].append(s)
+    print(f"[aot] {len(specs)} HLO artifacts, {total/1e6:.2f} MB text "
+          f"({time.time()-t0:.1f}s)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written; build done in {time.time()-t0:.1f}s")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny training run (CI smoke)")
+    ap.add_argument("--fig6", action="store_true",
+                    help="regenerate fig6.json instead of the main build")
+    ap.add_argument("--train-size", type=int, default=20000)
+    ap.add_argument("--epochs", type=int, default=15)
+    args = ap.parse_args()
+    build(args.out, quick=args.quick, fig6=args.fig6,
+          train_size=args.train_size, epochs=args.epochs)
+
+
+if __name__ == "__main__":
+    main()

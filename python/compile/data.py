@@ -1,0 +1,221 @@
+"""Synthetic MNIST / FMNIST surrogate datasets (build-time).
+
+The sandbox has no network access, so the paper's MNIST / Fashion-MNIST
+downloads are substituted by deterministic *prototype-based* synthetic
+datasets with the same tensor contract: 28x28 grayscale images in [0, 1],
+10 balanced classes, 60000 nominal training images and 10000 test images.
+
+Design (documented in DESIGN.md §3):
+
+* Each class owns a *prototype* image: a sum of K Gaussian bumps whose
+  centres / widths / amplitudes are drawn from a seeded PRNG.  Prototypes
+  are smooth, spatially structured, and pairwise distinct -- like digit
+  strokes, they give a linear-ish but non-trivial decision problem.
+* A sample is: translated prototype (integer shift, +-2 px)  x  brightness
+  jitter  +  per-pixel Gaussian noise  +  occasional occlusion patch.
+* The FMNIST surrogate uses a different seed, more bumps per class and a
+  higher noise floor, making it the "harder" dataset as in the paper.
+
+Everything derives from ``numpy.random.Generator(PCG64(seed))`` so the
+dataset is reproducible bit-for-bit given the same numpy version.  The
+*binary files* written by :func:`write_images_bin` are the interchange
+format with the rust side (`rust/src/dataset/loader.rs`); rust never
+re-derives the python dataset, it loads these files (and has its own
+generator of the same family for self-contained tests).
+
+Binary format ``BDM1`` (little endian)::
+
+    magic  u32  = 0x31_4D_44_42  ("BDM1")
+    count  u32
+    dim    u32  (= 784)
+    pixels u8[count * dim]   (0..255, row major)
+    labels u8[count]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+MAGIC_IMAGES = 0x314D4442  # "BDM1" little-endian
+IMG_SIDE = 28
+IMG_DIM = IMG_SIDE * IMG_SIDE
+NUM_CLASSES = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """Full description of a synthetic dataset variant."""
+
+    name: str
+    seed: int
+    bumps_per_class: int
+    noise_sigma: float
+    occlusion_prob: float
+    max_shift: int
+    distractor_bumps: int
+    shared_bumps: int  # bumps shared with the next class (inter-class overlap)
+
+    @staticmethod
+    def mnist() -> "DatasetSpec":
+        """Digit-like surrogate: few strokes, moderate noise/confusability.
+
+        Tuned so a 784-200-200-10 MLP trained on ~20k samples lands in the
+        mid-90s accuracy regime (paper Table IV: 96.73%) and degrades
+        visibly under the Fig 6 shrink-ratio protocol.
+        """
+        return DatasetSpec(
+            name="mnist_synth",
+            seed=20200601,
+            bumps_per_class=4,
+            noise_sigma=0.18,
+            occlusion_prob=0.08,
+            max_shift=3,
+            distractor_bumps=1,
+            shared_bumps=1,
+        )
+
+    @staticmethod
+    def fmnist() -> "DatasetSpec":
+        """Clothing-like surrogate: denser texture, higher noise => harder."""
+        return DatasetSpec(
+            name="fmnist_synth",
+            seed=20200602,
+            bumps_per_class=6,
+            noise_sigma=0.28,
+            occlusion_prob=0.15,
+            max_shift=3,
+            distractor_bumps=2,
+            shared_bumps=2,
+        )
+
+
+def class_prototypes(spec: DatasetSpec) -> np.ndarray:
+    """Return the (10, 28, 28) float32 prototype stack for ``spec``.
+
+    Each prototype is a normalized sum of anisotropic Gaussian bumps.  The
+    bump parameters are drawn once from the spec's seed so that train and
+    test splits share identical prototypes.
+    """
+    rng = np.random.default_rng(spec.seed)
+    ys, xs = np.mgrid[0:IMG_SIDE, 0:IMG_SIDE].astype(np.float32)
+
+    def bump():
+        cy, cx = rng.uniform(5, IMG_SIDE - 5, size=2)
+        sy, sx = rng.uniform(1.5, 4.5, size=2)
+        amp = rng.uniform(0.6, 1.0)
+        return amp * np.exp(
+            -((ys - cy) ** 2 / (2 * sy**2) + (xs - cx) ** 2 / (2 * sx**2))
+        )
+
+    # Per-class private bumps plus a pool shared between adjacent classes:
+    # class c mixes in the first `shared_bumps` bumps of class (c+1) % 10,
+    # producing the inter-class confusability real digits/clothes have.
+    private = [
+        [bump() for _ in range(spec.bumps_per_class)] for _ in range(NUM_CLASSES)
+    ]
+    protos = np.zeros((NUM_CLASSES, IMG_SIDE, IMG_SIDE), dtype=np.float32)
+    for c in range(NUM_CLASSES):
+        img = np.sum(private[c], axis=0)
+        neighbour = private[(c + 1) % NUM_CLASSES]
+        for b in neighbour[: spec.shared_bumps]:
+            img = img + 0.7 * b
+        img /= max(img.max(), 1e-6)
+        protos[c] = img
+    return protos
+
+
+def _render(
+    rng: np.random.Generator, proto: np.ndarray, spec: DatasetSpec
+) -> np.ndarray:
+    """Render one noisy, jittered sample from a class prototype."""
+    ys, xs = np.mgrid[0:IMG_SIDE, 0:IMG_SIDE].astype(np.float32)
+    dy, dx = rng.integers(-spec.max_shift, spec.max_shift + 1, size=2)
+    img = np.roll(np.roll(proto, dy, axis=0), dx, axis=1)
+    img = img * rng.uniform(0.5, 1.0)
+    # Distractor bumps: class-agnostic structure that a classifier must
+    # learn to ignore -- the main confusability knob.
+    for _ in range(spec.distractor_bumps):
+        cy, cx = rng.uniform(3, IMG_SIDE - 3, size=2)
+        s = rng.uniform(1.5, 3.5)
+        img = img + rng.uniform(0.3, 0.7) * np.exp(
+            -((ys - cy) ** 2 + (xs - cx) ** 2) / (2 * s**2)
+        ).astype(np.float32)
+    img = img + rng.normal(0.0, spec.noise_sigma, size=img.shape).astype(np.float32)
+    if rng.random() < spec.occlusion_prob:
+        oy = int(rng.integers(0, IMG_SIDE - 8))
+        ox = int(rng.integers(0, IMG_SIDE - 8))
+        img[oy : oy + 8, ox : ox + 8] = 0.0
+    return np.clip(img, 0.0, 1.0)
+
+
+def generate(
+    spec: DatasetSpec, count: int, split: str
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``count`` (images, labels) for ``split`` in {train, test}.
+
+    Classes are balanced (count is rounded up to a multiple of 10, then
+    truncated).  Split selection perturbs the stream seed so train and test
+    never share noise realizations.
+    """
+    assert split in ("train", "test")
+    protos = class_prototypes(spec)
+    stream_seed = spec.seed * 2 + (0 if split == "train" else 1)
+    rng = np.random.default_rng(stream_seed)
+    per_class = (count + NUM_CLASSES - 1) // NUM_CLASSES
+    images = np.zeros((per_class * NUM_CLASSES, IMG_DIM), dtype=np.float32)
+    labels = np.zeros(per_class * NUM_CLASSES, dtype=np.uint8)
+    idx = 0
+    for _ in range(per_class):
+        for c in range(NUM_CLASSES):
+            images[idx] = _render(rng, protos[c], spec).reshape(-1)
+            labels[idx] = c
+            idx += 1
+    # Shuffle deterministically so batches mix classes.
+    perm = rng.permutation(len(labels))
+    return images[perm][:count], labels[perm][:count]
+
+
+def shrink_subset(
+    images: np.ndarray, labels: np.ndarray, ratio: int, seed: int = 7
+) -> tuple[np.ndarray, np.ndarray]:
+    """Class-balanced subset per the paper's *shrink ratio* protocol.
+
+    With a shrink ratio R, each class keeps ``ceil(len / R / 10)`` images
+    randomly selected from the full set (paper §V-A: ratio 256 keeps ~24
+    images per class).
+    """
+    rng = np.random.default_rng(seed + ratio)
+    per_class = max(1, int(np.ceil(len(labels) / ratio / NUM_CLASSES)))
+    keep: list[np.ndarray] = []
+    for c in range(NUM_CLASSES):
+        (cls_idx,) = np.nonzero(labels == c)
+        take = min(per_class, len(cls_idx))
+        keep.append(rng.choice(cls_idx, size=take, replace=False))
+    sel = np.concatenate(keep)
+    rng.shuffle(sel)
+    return images[sel], labels[sel]
+
+
+def write_images_bin(path: str, images: np.ndarray, labels: np.ndarray) -> None:
+    """Write the ``BDM1`` binary consumed by rust `dataset::loader`."""
+    assert images.ndim == 2 and images.shape[1] == IMG_DIM
+    assert len(images) == len(labels)
+    pixels = np.clip(np.round(images * 255.0), 0, 255).astype(np.uint8)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC_IMAGES, len(labels), IMG_DIM))
+        f.write(pixels.tobytes(order="C"))
+        f.write(labels.astype(np.uint8).tobytes())
+
+
+def read_images_bin(path: str) -> tuple[np.ndarray, np.ndarray]:
+    """Read a ``BDM1`` file back (round-trip check for tests)."""
+    with open(path, "rb") as f:
+        magic, count, dim = struct.unpack("<III", f.read(12))
+        assert magic == MAGIC_IMAGES, f"bad magic {magic:#x}"
+        pixels = np.frombuffer(f.read(count * dim), dtype=np.uint8)
+        labels = np.frombuffer(f.read(count), dtype=np.uint8)
+    images = pixels.reshape(count, dim).astype(np.float32) / 255.0
+    return images, labels.copy()

@@ -1,0 +1,34 @@
+"""HLO-text lowering helper (the AOT interchange with the rust runtime).
+
+HLO *text* -- not ``lowered.compile().serialize()`` and not the serialized
+``HloModuleProto`` -- is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published ``xla`` 0.1.6 crate binds) rejects (``proto.id() <= INT_MAX``).
+The text parser on the rust side (`HloModuleProto::from_text_file`)
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs are always lowered with ``return_tuple=True`` so the rust side
+uniformly unwraps with ``to_tuple*``.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, *example_args, static_argnames=()) -> str:
+    """Lower ``jax.jit(fn)`` at the example shapes and return HLO text."""
+    lowered = jax.jit(fn, static_argnames=static_argnames).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_struct(shape, dtype="float32"):
+    """Shorthand for jax.ShapeDtypeStruct."""
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels for the DM-BNN reproduction.
+
+Modules:
+    dm        -- DM precompute + feed-forward kernels (Algorithm 2).
+    standard  -- baseline sampled-weight voter kernel (Algorithm 1).
+    ref       -- pure-jnp oracles (correctness ground truth).
+    blocks    -- tile-size selection + VMEM footprint accounting.
+"""
+from . import blocks, dm, ref, standard  # noqa: F401

@@ -1,0 +1,49 @@
+"""Block-shape selection shared by the Pallas kernels.
+
+Pallas grids here require exact divisibility (we never rely on implicit
+padding so that the HBM<->VMEM schedule stays explicit -- DESIGN.md
+§Hardware-Adaptation).  ``pick_block`` returns the largest divisor of
+``dim`` that is <= ``cap``; for the paper's shapes (M in {200, 10},
+T in {10, 100}) this always lands on a natural tile.
+
+``vmem_bytes`` estimates the per-program VMEM footprint of the DM
+feed-forward kernel -- used by the structural perf analysis in
+EXPERIMENTS.md §Perf (interpret mode gives no real timing signal, the
+footprint/roofline analysis is the optimization target instead).
+"""
+
+from __future__ import annotations
+
+
+def pick_block(dim: int, cap: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``cap`` (>= 1)."""
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    cap = max(1, min(cap, dim))
+    for b in range(cap, 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+# Default tile caps.  N is kept whole (max 784 in the paper's nets: a full
+# beta row-block of 128x784 f32 is ~392 KiB, comfortably inside a 16 MiB
+# VMEM budget together with the streamed H tile).
+T_BLOCK_CAP = 16
+M_BLOCK_CAP = 128
+
+
+def dm_vmem_bytes(t_blk: int, m_blk: int, n: int, itemsize: int = 4) -> int:
+    """VMEM bytes touched per DM feed-forward program instance.
+
+    h tile (t_blk, m_blk, n) streamed + resident beta (m_blk, n) + eta
+    (m_blk,) + output tile (t_blk, m_blk).
+    """
+    return itemsize * (t_blk * m_blk * n + m_blk * n + m_blk + t_blk * m_blk)
+
+
+def standard_vmem_bytes(t_blk: int, m_blk: int, n: int, itemsize: int = 4) -> int:
+    """VMEM bytes per standard-dataflow program: h + sigma + mu + x + out."""
+    return itemsize * (
+        t_blk * m_blk * n + 2 * m_blk * n + n + t_blk * m_blk
+    )

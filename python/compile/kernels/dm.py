@@ -1,0 +1,212 @@
+"""Pallas kernels for the DM (feature Decomposition & Memorization) dataflow.
+
+Two kernels implement Algorithm 2 of the paper:
+
+* :func:`precompute` -- lines 1-2: ``beta = sigma o x``, ``eta = mu . x``.
+  Runs once per distinct layer input; its outputs are the *memorized*
+  features.
+* :func:`dm_forward` -- lines 4-6 for a whole voter block: given a
+  (T, M, N) stack of uncertainty matrices H and the memorized (beta, eta),
+  produce the (T, M) voter outputs ``y_k = <H_k, beta>_L + eta``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): beta/eta are the VMEM-resident
+operands -- they play the role of the paper's SRAM-memorized features --
+while H is streamed tile-by-tile from HBM.  The BlockSpec index maps below
+*are* the paper's alpha-blocking schedule: the grid dimension over M row
+blocks corresponds to the memory-friendly iteration of Fig 5 (alpha =
+m_blk / M), and the grid dimension over T corresponds to the alpha*T
+voters evaluated simultaneously.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain HLO
+that the rust runtime runs unmodified.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .blocks import M_BLOCK_CAP, T_BLOCK_CAP, pick_block
+
+
+def _precompute_kernel(x_ref, sigma_ref, mu_ref, beta_ref, eta_ref):
+    """One M-row block of the pre-compute stage.
+
+    Loads the full input vector x (shared by every block -- the 1-to-T
+    relationship the DM strategy exploits) plus an (m_blk, N) tile of
+    sigma/mu, and writes the matching beta tile and eta slice.
+    """
+    x = x_ref[...]  # (N,)
+    sigma = sigma_ref[...]  # (m_blk, N)
+    mu = mu_ref[...]  # (m_blk, N)
+    beta_ref[...] = sigma * x[None, :]
+    eta_ref[...] = jnp.sum(mu * x[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("m_block",))
+def precompute(x, sigma, mu, *, m_block: int | None = None):
+    """``(beta, eta) = (sigma o x, mu . x)`` via a row-blocked Pallas kernel.
+
+    Args:
+        x: (N,) layer input.
+        sigma: (M, N) posterior scale matrix.
+        mu: (M, N) posterior location matrix.
+        m_block: row-block size (must divide M); default auto-picked.
+
+    Returns:
+        beta: (M, N) memorized element-wise feature.
+        eta: (M,) memorized mat-vec feature.
+    """
+    m, n = sigma.shape
+    assert mu.shape == (m, n) and x.shape == (n,)
+    mb = m_block or pick_block(m, M_BLOCK_CAP)
+    assert m % mb == 0, f"m_block {mb} must divide M {m}"
+    grid = (m // mb,)
+    return pl.pallas_call(
+        _precompute_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),  # x: broadcast to all blocks
+            pl.BlockSpec((mb, n), lambda i: (i, 0)),  # sigma row block
+            pl.BlockSpec((mb, n), lambda i: (i, 0)),  # mu row block
+        ],
+        out_specs=[
+            pl.BlockSpec((mb, n), lambda i: (i, 0)),  # beta row block
+            pl.BlockSpec((mb,), lambda i: (i,)),  # eta slice
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), sigma.dtype),
+            jax.ShapeDtypeStruct((m,), sigma.dtype),
+        ],
+        interpret=True,
+    )(x, sigma, mu)
+
+
+def _dm_forward_kernel(h_ref, beta_ref, eta_ref, out_ref, *, relu: bool):
+    """One (T-block, M-block) tile of the DM feed-forward stage.
+
+    The line-wise inner product ``<H_k, beta>_L`` is a multiply +
+    row-reduction: on TPU this maps to the VPU (it is reduction-bound, not
+    an MXU matmul -- the whole point of DM is that the matmul against x was
+    hoisted into the memorized beta).
+    """
+    h = h_ref[...]  # (t_blk, m_blk, N) streamed
+    beta = beta_ref[...]  # (m_blk, N)     resident / memorized
+    eta = eta_ref[...]  # (m_blk,)
+    z = jnp.sum(h * beta[None, :, :], axis=-1) + eta[None, :]
+    if relu:
+        z = jnp.maximum(z, 0.0)
+    out_ref[...] = z
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relu", "t_block", "m_block")
+)
+def dm_forward(
+    h,
+    beta,
+    eta,
+    *,
+    relu: bool = False,
+    t_block: int | None = None,
+    m_block: int | None = None,
+):
+    """Voter-block DM feed-forward: ``y_k = <H_k, beta>_L + eta``.
+
+    Args:
+        h: (T, M, N) uncertainty stack sampled from N(0, 1).
+        beta: (M, N) memorized feature (``sigma o x``).
+        eta: (M,) memorized feature (``mu . x``).
+        relu: apply the hidden-layer activation in-kernel (fused).
+        t_block / m_block: tile sizes; must divide T / M.
+
+    Returns:
+        (T, M) voter outputs.
+    """
+    t, m, n = h.shape
+    assert beta.shape == (m, n) and eta.shape == (m,)
+    tb = t_block or pick_block(t, T_BLOCK_CAP)
+    mb = m_block or pick_block(m, M_BLOCK_CAP)
+    assert t % tb == 0 and m % mb == 0
+    grid = (t // tb, m // mb)
+    kernel = functools.partial(_dm_forward_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, mb, n), lambda i, j: (i, j, 0)),  # H tile
+            pl.BlockSpec((mb, n), lambda i, j: (j, 0)),  # beta resident
+            pl.BlockSpec((mb,), lambda i, j: (j,)),  # eta resident
+        ],
+        out_specs=pl.BlockSpec((tb, mb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, m), h.dtype),
+        interpret=True,
+    )(h, beta, eta)
+
+
+def _dm_forward_bias_kernel(
+    h_ref, beta_ref, eta_ref, hb_ref, sb_ref, mb_ref, out_ref, *, relu: bool
+):
+    """DM tile including the per-voter sampled bias term."""
+    h = h_ref[...]
+    beta = beta_ref[...]
+    eta = eta_ref[...]
+    hb = hb_ref[...]  # (t_blk, m_blk)
+    sb = sb_ref[...]  # (m_blk,)
+    mu_b = mb_ref[...]  # (m_blk,)
+    z = jnp.sum(h * beta[None, :, :], axis=-1) + eta[None, :]
+    z = z + hb * sb[None, :] + mu_b[None, :]
+    if relu:
+        z = jnp.maximum(z, 0.0)
+    out_ref[...] = z
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relu", "t_block", "m_block")
+)
+def dm_forward_bias(
+    h,
+    beta,
+    eta,
+    hb,
+    sigma_b,
+    mu_b,
+    *,
+    relu: bool = False,
+    t_block: int | None = None,
+    m_block: int | None = None,
+):
+    """DM feed-forward with sampled bias: the production variant.
+
+    The paper's complexity analysis drops the bias (its cost is O(MT) next
+    to O(MNT)), but a real deployment samples it: ``y_k = <H_k, beta>_L +
+    eta + hb_k o sigma_b + mu_b``.  This is the kernel the AOT artifacts
+    and the rust hot path use.
+    """
+    t, m, n = h.shape
+    assert beta.shape == (m, n) and eta.shape == (m,)
+    assert hb.shape == (t, m) and sigma_b.shape == (m,) and mu_b.shape == (m,)
+    tb = t_block or pick_block(t, T_BLOCK_CAP)
+    mblk = m_block or pick_block(m, M_BLOCK_CAP)
+    assert t % tb == 0 and m % mblk == 0
+    grid = (t // tb, m // mblk)
+    kernel = functools.partial(_dm_forward_bias_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, mblk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((mblk, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((mblk,), lambda i, j: (j,)),
+            pl.BlockSpec((tb, mblk), lambda i, j: (i, j)),
+            pl.BlockSpec((mblk,), lambda i, j: (j,)),
+            pl.BlockSpec((mblk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tb, mblk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, m), h.dtype),
+        interpret=True,
+    )(h, beta, eta, hb, sigma_b, mu_b)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: the pytest suite asserts each
+Pallas kernel (run under ``interpret=True``) matches its oracle to float32
+tolerance, and the multi-layer model graphs are asserted against chained
+oracle calls.  Nothing here is ever lowered into the AOT artifacts -- the
+artifacts call the Pallas kernels, the tests call both.
+
+Notation follows the paper (Table I/II):
+
+    x      input vector                       (N,)
+    sigma  posterior scale matrix             (M, N)
+    mu     posterior location matrix          (M, N)
+    H      uncertainty tensor, one per voter  (T, M, N)
+    beta   memorized feature  sigma o x       (M, N)   [o = row-wise mult]
+    eta    memorized feature  mu . x          (M,)
+    z_k    <H_k, beta>_L  line-wise inner product  ->  y_k = z_k + eta
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def precompute(x, sigma, mu):
+    """Oracle for the DM pre-compute stage (Algorithm 2, lines 1-2).
+
+    Returns ``(beta, eta)`` with ``beta = sigma o x`` (each row of sigma
+    multiplied element-wise by x) and ``eta = mu . x`` (mat-vec).
+    """
+    beta = sigma * x[None, :]
+    eta = mu @ x
+    return beta, eta
+
+
+def dm_forward(h, beta, eta, *, relu=False):
+    """Oracle for the DM feed-forward stage (Algorithm 2, lines 4-6).
+
+    ``h`` is a (T, M, N) stack of uncertainty matrices; the result is the
+    (T, M) voter output stack ``y_k = <H_k, beta>_L + eta``.
+    """
+    z = jnp.sum(h * beta[None, :, :], axis=-1) + eta[None, :]
+    return jnp.maximum(z, 0.0) if relu else z
+
+
+def dm_forward_bias(h, beta, eta, hb, sigma_b, mu_b, *, relu=False):
+    """DM forward including the bias term the paper's analysis neglects.
+
+    With bias ``b_k = hb_k o sigma_b + mu_b`` the voter output becomes
+    ``y_k = <H_k, beta>_L + eta + hb_k o sigma_b + mu_b``.
+    ``hb`` is (T, M): one uncertainty vector per voter.
+    """
+    z = dm_forward(h, beta, eta, relu=False)
+    z = z + hb * sigma_b[None, :] + mu_b[None, :]
+    return jnp.maximum(z, 0.0) if relu else z
+
+
+def standard_forward(h, sigma, mu, x, *, relu=False):
+    """Oracle for the standard BNN voter stack (Algorithm 1).
+
+    Materializes ``W_k = H_k o sigma + mu`` then computes ``y_k = W_k . x``
+    for every voter -- the 2MNT-multiplication baseline dataflow.
+    """
+    w = h * sigma[None, :, :] + mu[None, :, :]
+    y = jnp.einsum("tmn,n->tm", w, x)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def standard_forward_bias(h, sigma, mu, x, hb, sigma_b, mu_b, *, relu=False):
+    """Standard voter stack with sampled bias."""
+    y = standard_forward(h, sigma, mu, x, relu=False)
+    y = y + hb * sigma_b[None, :] + mu_b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def vote(ys):
+    """Average-voting over a (T, M) stack (Algorithm 1 line 7)."""
+    return jnp.mean(ys, axis=0)
+
+
+def im2col(x, kh, kw, stride=1):
+    """Convolution unfolding (paper §III-C3, ref [30]).
+
+    ``x`` is (C, H, W).  Returns the (C*kh*kw, P) matrix whose columns are
+    flattened receptive fields, P = out_h * out_w, so that a conv with
+    kernel (F, C, kh, kw) becomes ``W_mat @ im2col(x)`` with W_mat of shape
+    (F, C*kh*kw) -- which is exactly the shape DM applies to.
+    """
+    c, h, w = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = []
+    for i in range(0, oh * stride, stride):
+        for j in range(0, ow * stride, stride):
+            cols.append(x[:, i : i + kh, j : j + kw].reshape(-1))
+    return jnp.stack(cols, axis=1)

@@ -1,0 +1,145 @@
+"""Pallas kernel for the *standard* BNN voter dataflow (the baseline).
+
+Implements Algorithm 1 of the paper for a block of voters: each voter k
+materializes a concrete weight matrix by the scale-location transformation
+``W_k = H_k o sigma + mu`` and evaluates ``y_k = W_k . x``.  This is the
+2MNT-multiplication dataflow (Table III) that DM halves; it exists here so
+the rust coordinator's Standard and Hybrid execution plans run through the
+same Pallas/AOT machinery as the DM plan, making Table IV/V comparisons
+apples-to-apples.
+
+The re-implementation mirrors VIBNN's dataflow (paper §V-B): GRNG costs
+and architecture tricks are excluded on both sides, only the arithmetic
+dataflow differs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .blocks import M_BLOCK_CAP, T_BLOCK_CAP, pick_block
+
+
+def _standard_kernel(h_ref, sigma_ref, mu_ref, x_ref, out_ref, *, relu: bool):
+    """One (T-block, M-block) tile of the standard dataflow.
+
+    Both the scale-location transformation and the mat-vec run per voter:
+    no computation is shared across the T grid dimension -- this is the
+    point of comparison with `dm.py` where sigma*x / mu.x are hoisted.
+    """
+    h = h_ref[...]  # (t_blk, m_blk, N)
+    sigma = sigma_ref[...]  # (m_blk, N)
+    mu = mu_ref[...]  # (m_blk, N)
+    x = x_ref[...]  # (N,)
+    w = h * sigma[None, :, :] + mu[None, :, :]  # scale-location (MUL+ADD each)
+    y = jnp.sum(w * x[None, None, :], axis=-1)  # mat-vec per voter
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    out_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "t_block", "m_block"))
+def standard_forward(
+    h,
+    sigma,
+    mu,
+    x,
+    *,
+    relu: bool = False,
+    t_block: int | None = None,
+    m_block: int | None = None,
+):
+    """Standard voter block: ``y_k = (H_k o sigma + mu) . x``.
+
+    Args:
+        h: (T, M, N) uncertainty stack.
+        sigma / mu: (M, N) posterior parameters.
+        x: (N,) layer input.
+        relu: fuse the hidden-layer activation.
+
+    Returns:
+        (T, M) voter outputs.
+    """
+    t, m, n = h.shape
+    assert sigma.shape == (m, n) and mu.shape == (m, n) and x.shape == (n,)
+    tb = t_block or pick_block(t, T_BLOCK_CAP)
+    mb = m_block or pick_block(m, M_BLOCK_CAP)
+    assert t % tb == 0 and m % mb == 0
+    grid = (t // tb, m // mb)
+    kernel = functools.partial(_standard_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, mb, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((mb, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((mb, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, mb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, m), h.dtype),
+        interpret=True,
+    )(h, sigma, mu, x)
+
+
+def _standard_bias_kernel(
+    h_ref, sigma_ref, mu_ref, x_ref, hb_ref, sb_ref, mb_ref, out_ref, *, relu: bool
+):
+    """Standard tile with per-voter sampled bias."""
+    h = h_ref[...]
+    sigma = sigma_ref[...]
+    mu = mu_ref[...]
+    x = x_ref[...]
+    hb = hb_ref[...]
+    sb = sb_ref[...]
+    mu_b = mb_ref[...]
+    w = h * sigma[None, :, :] + mu[None, :, :]
+    y = jnp.sum(w * x[None, None, :], axis=-1)
+    y = y + hb * sb[None, :] + mu_b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    out_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "t_block", "m_block"))
+def standard_forward_bias(
+    h,
+    sigma,
+    mu,
+    x,
+    hb,
+    sigma_b,
+    mu_b,
+    *,
+    relu: bool = False,
+    t_block: int | None = None,
+    m_block: int | None = None,
+):
+    """Standard voter block with sampled bias (production variant)."""
+    t, m, n = h.shape
+    assert hb.shape == (t, m) and sigma_b.shape == (m,) and mu_b.shape == (m,)
+    tb = t_block or pick_block(t, T_BLOCK_CAP)
+    mblk = m_block or pick_block(m, M_BLOCK_CAP)
+    assert t % tb == 0 and m % mblk == 0
+    grid = (t // tb, m // mblk)
+    kernel = functools.partial(_standard_bias_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, mblk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((mblk, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((mblk, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((tb, mblk), lambda i, j: (i, j)),
+            pl.BlockSpec((mblk,), lambda i, j: (j,)),
+            pl.BlockSpec((mblk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tb, mblk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, m), h.dtype),
+        interpret=True,
+    )(h, sigma, mu, x, hb, sigma_b, mu_b)

@@ -1,0 +1,293 @@
+"""Layer-2 JAX model: the paper's Bayesian MLP and its three dataflows.
+
+This module assembles the Pallas kernels (`kernels.dm`, `kernels.standard`)
+into the multi-layer voter graphs of Fig 2 / Fig 3 / Fig 4:
+
+* :func:`forward_standard`     -- Algorithm 1 across all layers (baseline).
+* :func:`forward_hybrid`       -- Fig 4(a): DM on layer 1, standard after.
+* :func:`forward_dm`           -- Fig 4(b): DM on every layer with the
+  fan-out tree (t_l samples per layer => prod(t_l) leaf voters).
+
+Parameters are a list of per-layer dicts ``{"mu": (M,N), "sigma": (M,N),
+"mu_b": (M,), "sigma_b": (M,)}`` -- the mean-field Gaussian posterior the
+paper assumes (w ~ N(mu, sigma^2)).  `train.py` produces them; `aot.py`
+freezes them into the binary weight artifact the rust runtime loads.
+
+The uncertainty inputs H are explicit function arguments everywhere (never
+sampled inside the graph): the rust coordinator owns the GRNG (its `grng`
+substrate mirrors the paper's hardware generators), so the AOT artifacts
+are pure deterministic dataflow.  That is also what makes the DM ==
+standard algebraic identity exactly testable: feed both dataflows the same
+H and the outputs must match to float tolerance.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dm as kdm
+from .kernels import ref as kref
+from .kernels import standard as kstd
+
+#: The paper's MNIST architecture (§V-B): 3-layer fully connected MLP.
+MNIST_ARCH = (784, 200, 200, 10)
+
+
+def layer_dims(arch: Sequence[int]) -> list[tuple[int, int]]:
+    """[(M, N)] per layer for an architecture tuple like (784,200,200,10)."""
+    return [(arch[i + 1], arch[i]) for i in range(len(arch) - 1)]
+
+
+def init_params(key, arch: Sequence[int] = MNIST_ARCH, init_sigma: float = 0.05):
+    """Random mean-field posterior init (useful for tests; train.py refines)."""
+    params = []
+    for m, n in layer_dims(arch):
+        key, k1 = jax.random.split(key)
+        scale = 1.0 / math.sqrt(n)
+        params.append(
+            {
+                "mu": jax.random.normal(k1, (m, n), jnp.float32) * scale,
+                "sigma": jnp.full((m, n), init_sigma * scale, jnp.float32),
+                "mu_b": jnp.zeros((m,), jnp.float32),
+                "sigma_b": jnp.full((m,), init_sigma, jnp.float32),
+            }
+        )
+    return params
+
+
+def _is_last(layer_idx: int, num_layers: int) -> bool:
+    return layer_idx == num_layers - 1
+
+
+# ---------------------------------------------------------------------------
+# Standard dataflow (Algorithm 1 / Fig 2) -- the VIBNN-style baseline.
+# ---------------------------------------------------------------------------
+
+
+def forward_standard(params, x, hs, hbs, *, use_kernels: bool = True):
+    """All-layers standard dataflow for T voters.
+
+    Args:
+        params: per-layer posterior dicts.
+        x: (N0,) input vector.
+        hs: list of (T, M_l, N_l) uncertainty stacks, one per layer.
+        hbs: list of (T, M_l) bias uncertainty stacks.
+        use_kernels: route through Pallas kernels (AOT path) or the jnp
+            oracle (test path).
+
+    Returns:
+        (T, M_last) logits per voter.
+    """
+    num_layers = len(params)
+    t = hs[0].shape[0]
+    fwd = kstd.standard_forward_bias if use_kernels else kref.standard_forward_bias
+    # Layer 1: one shared input for all voters.
+    acts = fwd(
+        hs[0], params[0]["sigma"], params[0]["mu"], x,
+        hbs[0], params[0]["sigma_b"], params[0]["mu_b"],
+        relu=not _is_last(0, num_layers),
+    )
+    # Layers >= 2: voter k feeds its own activation through its own W_k.
+    for l in range(1, num_layers):
+        p = params[l]
+        relu = not _is_last(l, num_layers)
+        outs = []
+        for k in range(t):
+            yk = fwd(
+                hs[l][k : k + 1], p["sigma"], p["mu"], acts[k],
+                hbs[l][k : k + 1], p["sigma_b"], p["mu_b"], relu=relu,
+            )
+            outs.append(yk[0])
+        acts = jnp.stack(outs)
+    return acts
+
+
+def forward_standard_fused(params, x, hs, hbs):
+    """Whole-net standard dataflow as one fused jnp graph (AOT single-shot).
+
+    Identical math to :func:`forward_standard` but vmapped over voters so
+    it lowers to a single HLO module -- the artifact the rust coordinator
+    dispatches per voter block.  (einsum over the voter axis instead of the
+    python loop; XLA fuses scale-location + matvec per layer.)
+    """
+    num_layers = len(params)
+
+    def one_voter(hs_k, hbs_k):
+        a = x
+        for l, p in enumerate(params):
+            w = hs_k[l] * p["sigma"] + p["mu"]
+            a = w @ a + hbs_k[l] * p["sigma_b"] + p["mu_b"]
+            if not _is_last(l, num_layers):
+                a = jnp.maximum(a, 0.0)
+        return a
+
+    return jax.vmap(one_voter)(hs, hbs)
+
+
+def forward_standard_tail_fused(params_tail, y1, hs, hbs):
+    """Layers >= 2 of the standard dataflow, vmapped over voters.
+
+    The Hybrid-BNN plan (Fig 4a) computes layer 1 with DM (per-block
+    artifact) and hands each voter's activation to this fused tail.
+    ``y1`` is (T, M1); ``params_tail`` / ``hs`` / ``hbs`` cover layers
+    2..L.  The last tail layer gets no activation (logits).
+    """
+    num_tail = len(params_tail)
+
+    def one_voter(a, hs_k, hbs_k):
+        for l, p in enumerate(params_tail):
+            w = hs_k[l] * p["sigma"] + p["mu"]
+            a = w @ a + hbs_k[l] * p["sigma_b"] + p["mu_b"]
+            if l != num_tail - 1:
+                a = jnp.maximum(a, 0.0)
+        return a
+
+    return jax.vmap(one_voter)(y1, hs, hbs)
+
+
+# ---------------------------------------------------------------------------
+# DM dataflow building blocks.
+# ---------------------------------------------------------------------------
+
+
+def dm_layer(p, x, h, hb, *, relu: bool, use_kernels: bool = True):
+    """One DM layer: precompute (beta, eta) for input x, then T voters.
+
+    This is the unit the rust coordinator schedules; the precompute result
+    is what the alpha-blocking memory framework slices (Fig 5).
+    """
+    if use_kernels:
+        beta, eta = kdm.precompute(x, p["sigma"], p["mu"])
+        return kdm.dm_forward_bias(
+            h, beta, eta, hb, p["sigma_b"], p["mu_b"], relu=relu
+        )
+    beta, eta = kref.precompute(x, p["sigma"], p["mu"])
+    return kref.dm_forward_bias(h, beta, eta, hb, p["sigma_b"], p["mu_b"], relu=relu)
+
+
+def forward_hybrid(params, x, hs, hbs, *, use_kernels: bool = True):
+    """Fig 4(a): DM on the first layer only, standard dataflow after.
+
+    The first layer dominates the op count (784x200 of 784x200 + 200x200 +
+    200x10 ~ 79%), so Hybrid already captures most of the DM win without
+    changing the voter-independence structure of deeper layers.
+    """
+    num_layers = len(params)
+    t = hs[0].shape[0]
+    acts = dm_layer(
+        params[0], x, hs[0], hbs[0],
+        relu=not _is_last(0, num_layers), use_kernels=use_kernels,
+    )
+    fwd = kstd.standard_forward_bias if use_kernels else kref.standard_forward_bias
+    for l in range(1, num_layers):
+        p = params[l]
+        relu = not _is_last(l, num_layers)
+        outs = []
+        for k in range(t):
+            yk = fwd(
+                hs[l][k : k + 1], p["sigma"], p["mu"], acts[k],
+                hbs[l][k : k + 1], p["sigma_b"], p["mu_b"], relu=relu,
+            )
+            outs.append(yk[0])
+        acts = jnp.stack(outs)
+    return acts
+
+
+def forward_dm(params, x, hs, hbs, *, use_kernels: bool = True):
+    """Fig 4(b): DM on every layer via the fan-out tree.
+
+    ``hs[l]`` has shape (t_l, M_l, N_l); every *distinct* activation
+    entering layer l is expanded by the same t_l uncertainty matrices, so
+    the leaf count is prod(t_l).  The paper's example: t = (10, 10, 10)
+    yields 1000 voting results from only 30 sampled matrices; voters that
+    share a prefix of the tree share uncertainty (§III-C2 notes the effect
+    on accuracy is negligible -- we measure it in the tests/benches).
+
+    Returns (prod(t_l), M_last) logits.
+    """
+    num_layers = len(params)
+    acts = [x]  # distinct inputs entering the current layer
+    for l, p in enumerate(params):
+        relu = not _is_last(l, num_layers)
+        nxt = []
+        for a in acts:
+            ys = dm_layer(p, a, hs[l], hbs[l], relu=relu, use_kernels=use_kernels)
+            nxt.extend([ys[k] for k in range(ys.shape[0])])
+        acts = nxt
+    return jnp.stack(acts)
+
+
+def fanout_schedule(total_t: int, num_layers: int) -> tuple[int, ...]:
+    """Per-layer sample counts (t_1..t_L) with prod ~= total_t.
+
+    The paper uses the L-th root (e.g. 1000 voters, 3 layers -> 10 each).
+    Rounds down to the nearest integer root; callers wanting exact totals
+    should pass explicit schedules.
+    """
+    t = max(1, round(total_t ** (1.0 / num_layers)))
+    while t**num_layers > total_t and t > 1:
+        t -= 1
+    return (t,) * num_layers
+
+
+def vote(logits):
+    """Average voting over the voter axis (Algorithm 1/2 final line)."""
+    return jnp.mean(logits, axis=0)
+
+
+def predict_class(logits):
+    """argmax of the vote -- the served prediction."""
+    return jnp.argmax(vote(logits))
+
+
+def predictive_entropy(logits):
+    """Entropy of the mean softmax -- the uncertainty signal BNNs exist for."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    mean = jnp.mean(probs, axis=0)
+    return -jnp.sum(mean * jnp.log(mean + 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Convolutional extension (paper §III-C3): DM via unfolding.
+# ---------------------------------------------------------------------------
+
+
+def conv_as_matmul_params(p_conv):
+    """Flatten conv posterior (F, C, kh, kw) params to the (F, C*kh*kw)
+    matrix form DM operates on (unfolding, ref [30])."""
+    f = p_conv["mu"].shape[0]
+    return {
+        "mu": p_conv["mu"].reshape(f, -1),
+        "sigma": p_conv["sigma"].reshape(f, -1),
+        "mu_b": p_conv["mu_b"],
+        "sigma_b": p_conv["sigma_b"],
+    }
+
+
+def dm_conv_layer(p_conv, img, h, hb, *, kh, kw, stride=1, relu=True,
+                  use_kernels: bool = True):
+    """Bayesian conv layer evaluated through unfold + DM.
+
+    img: (C, H, W).  h: (T, F, C*kh*kw) uncertainty.  Returns
+    (T, F, out_h, out_w) feature maps.  Each *column* of the unfolded
+    input is a distinct DM input (the 1-to-T relationship holds per
+    column), so precompute runs per column -- exactly the structure the
+    paper's §III-C3 claims carries over.
+    """
+    c, hh, ww = img.shape
+    oh = (hh - kh) // stride + 1
+    ow = (ww - kw) // stride + 1
+    cols = kref.im2col(img, kh, kw, stride)  # (C*kh*kw, P)
+    pmat = conv_as_matmul_params(p_conv)
+    t = h.shape[0]
+    outs = []
+    for pcol in range(cols.shape[1]):
+        ys = dm_layer(pmat, cols[:, pcol], h, hb, relu=relu,
+                      use_kernels=use_kernels)  # (T, F)
+        outs.append(ys)
+    out = jnp.stack(outs, axis=-1)  # (T, F, P)
+    return out.reshape(t, -1, oh, ow)

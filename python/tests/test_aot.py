@@ -1,0 +1,129 @@
+"""AOT builder: artifact spec enumeration, weight I/O, HLO lowering."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import MNIST_ARCH, layer_dims
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_alpha_blocks_divide():
+    for m in (200, 10, 100, 7):
+        for alpha, mb in aot._alpha_blocks(m).items():
+            assert m % mb == 0
+            assert 1 <= mb <= m
+
+
+def test_alpha_blocks_paper_values():
+    blocks = aot._alpha_blocks(200)
+    assert blocks[1.0] == 200
+    assert blocks[0.5] == 100
+    assert blocks[0.1] == 20
+
+
+def test_artifact_specs_cover_every_layer():
+    specs = aot.build_artifact_specs()
+    names = set(specs)
+    for m, n in layer_dims(MNIST_ARCH):
+        assert f"precompute_m{m}_n{n}" in names
+        rtag = "nr" if m == 10 else "r"
+        assert f"std_m{m}_n{n}_t10_{rtag}" in names
+        assert f"dm_m{m}_n{n}_t10_{rtag}" in names  # alpha = 1.0 variant
+    assert "std_full_t10" in names
+
+
+def test_artifact_specs_alpha_slices_present():
+    specs = aot.build_artifact_specs()
+    # alpha = 0.1 slices of the hidden layers (M=200 -> Mb=20)
+    assert "dm_m20_n784_t10_r" in specs
+    assert "dm_m20_n200_t10_r" in specs
+    assert "dm_m1_n200_t10_nr" in specs  # output layer, alpha = 0.1
+
+
+def test_artifact_param_shapes_consistent():
+    specs = aot.build_artifact_specs()
+    for s in specs.values():
+        if s["kind"] == "dm":
+            h = s["params"][0]
+            beta = s["params"][1]
+            assert h["name"] == "h" and beta["name"] == "beta"
+            assert h["shape"][1:] == beta["shape"]
+        if s["kind"] == "standard":
+            assert [p["name"] for p in s["params"]] == [
+                "h", "sigma", "mu", "x", "hb", "sigma_b", "mu_b"
+            ]
+
+
+def test_weights_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    params = []
+    for m, n in [(4, 3), (2, 4)]:
+        params.append(
+            {
+                "mu": rng.normal(size=(m, n)).astype(np.float32),
+                "sigma": rng.uniform(0.01, 0.1, (m, n)).astype(np.float32),
+                "mu_b": rng.normal(size=m).astype(np.float32),
+                "sigma_b": rng.uniform(0.01, 0.1, m).astype(np.float32),
+            }
+        )
+    p = str(tmp_path / "w.bin")
+    aot.write_weights_bin(p, params)
+    back = aot.read_weights_bin(p)
+    assert len(back) == 2
+    for a, b in zip(params, back):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_weights_header(tmp_path):
+    p = str(tmp_path / "w.bin")
+    aot.write_weights_bin(
+        p,
+        [{
+            "mu": np.zeros((2, 3), np.float32),
+            "sigma": np.ones((2, 3), np.float32),
+            "mu_b": np.zeros(2, np.float32),
+            "sigma_b": np.ones(2, np.float32),
+        }],
+    )
+    raw = open(p, "rb").read()
+    assert int.from_bytes(raw[:4], "little") == aot.MAGIC_WEIGHTS
+    assert int.from_bytes(raw[4:8], "little") == 1
+    assert len(raw) == 8 + 8 + 4 * (6 + 6 + 2 + 2)
+
+
+@pytest.mark.parametrize(
+    "name", ["precompute_m10_n200", "dm_m10_n200_t10_nr", "std_m10_n200_t10_nr"]
+)
+def test_lower_small_artifacts(tmp_path, name):
+    """The cheapest artifact of each kind lowers to parseable HLO text."""
+    specs = aot.build_artifact_specs()
+    size = aot.lower_artifact(specs[name], str(tmp_path))
+    assert size > 100
+    text = open(tmp_path / specs[name]["file"]).read()
+    assert "HloModule" in text
+    # ENTRY parameter count must match the manifest spec (nested pallas
+    # loop computations have their own parameters; only ENTRY matters)
+    entry = text[text.index("ENTRY "):]
+    assert entry.count("parameter(") == len(specs[name]["params"])
+
+
+def test_manifest_schema_matches_prebuilt():
+    """If `make artifacts` already ran, the manifest on disk must agree
+    with the current spec enumeration (stale-artifact detection)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built yet")
+    manifest = json.load(open(path))
+    specs = aot.build_artifact_specs()
+    built = {a["name"] for a in manifest["artifacts"]}
+    assert built == set(specs), (
+        "artifacts/ is stale: rerun `make artifacts`"
+    )

@@ -1,0 +1,82 @@
+"""Synthetic dataset generator: determinism, balance, shrink protocol, I/O."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+def test_prototypes_deterministic_and_distinct():
+    spec = D.DatasetSpec.mnist()
+    p1 = D.class_prototypes(spec)
+    p2 = D.class_prototypes(spec)
+    np.testing.assert_array_equal(p1, p2)
+    # pairwise distinct: no two class prototypes are near-identical
+    for a in range(10):
+        for b in range(a + 1, 10):
+            assert np.abs(p1[a] - p1[b]).mean() > 0.01
+
+
+def test_generate_shapes_and_range():
+    x, y = D.generate(D.DatasetSpec.mnist(), 200, "test")
+    assert x.shape == (200, 784) and y.shape == (200,)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)) <= set(range(10))
+
+
+def test_generate_balanced():
+    _, y = D.generate(D.DatasetSpec.mnist(), 500, "train")
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() == counts.max() == 50
+
+
+def test_train_test_disjoint_noise():
+    spec = D.DatasetSpec.mnist()
+    xtr, _ = D.generate(spec, 100, "train")
+    xte, _ = D.generate(spec, 100, "test")
+    assert not np.array_equal(xtr, xte)
+
+
+def test_generate_deterministic():
+    spec = D.DatasetSpec.fmnist()
+    x1, y1 = D.generate(spec, 50, "train")
+    x2, y2 = D.generate(spec, 50, "train")
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+@pytest.mark.parametrize("ratio,expected_per_class", [(1, 600), (4, 150), (256, 3)])
+def test_shrink_subset_protocol(ratio, expected_per_class):
+    """Paper §V-A: shrink ratio R keeps ceil(len/R/10) per class."""
+    x, y = D.generate(D.DatasetSpec.mnist(), 6000, "train")
+    sx, sy = D.shrink_subset(x, y, ratio)
+    counts = np.bincount(sy, minlength=10)
+    assert counts.max() == counts.min() == expected_per_class
+    assert len(sx) == len(sy)
+
+
+def test_shrink_subset_balanced_and_subset():
+    x, y = D.generate(D.DatasetSpec.mnist(), 1000, "train")
+    sx, sy = D.shrink_subset(x, y, 10)
+    # every selected row exists in the source set
+    src = {xx.tobytes() for xx in x}
+    assert all(r.tobytes() in src for r in sx)
+
+
+def test_images_bin_roundtrip(tmp_path):
+    x, y = D.generate(D.DatasetSpec.mnist(), 64, "test")
+    p = str(tmp_path / "imgs.bin")
+    D.write_images_bin(p, x, y)
+    rx, ry = D.read_images_bin(p)
+    np.testing.assert_array_equal(ry, y)
+    # u8 quantization: within half a level
+    assert np.abs(rx - x).max() <= (0.5 / 255.0) + 1e-6
+
+
+def test_images_bin_header(tmp_path):
+    x, y = D.generate(D.DatasetSpec.mnist(), 16, "test")
+    p = str(tmp_path / "imgs.bin")
+    D.write_images_bin(p, x, y)
+    raw = open(p, "rb").read()
+    assert len(raw) == 12 + 16 * 784 + 16
+    assert int.from_bytes(raw[:4], "little") == D.MAGIC_IMAGES

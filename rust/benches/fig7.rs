@@ -1,0 +1,57 @@
+//! Bench: Fig 7 — system area vs α (memory-friendly framework).
+//!
+//! Sweeps α over the DM-BNN organization, asserts monotonicity (the
+//! figure's claim) and prints the β-SRAM share so the mechanism is
+//! visible; also times the hwsim evaluation itself.
+
+use bayesdm::hwsim::arch::{AcceleratorConfig, Organization};
+use bayesdm::hwsim::report::{fig7_rows, render_fig7};
+use bayesdm::hwsim::sim::simulate;
+use bayesdm::util::bench::{bench, header};
+
+fn main() {
+    header("Fig 7 — system area vs alpha");
+    let alphas = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.2, 0.1, 0.05];
+    let rows = fig7_rows(&alphas);
+    println!("{}", render_fig7(&rows));
+
+    // Monotonicity assertion (the figure's core claim).
+    for w in rows.windows(2) {
+        assert!(
+            w[1].area_mm2 < w[0].area_mm2,
+            "area must decrease with alpha: {:?} -> {:?}",
+            w[0],
+            w[1]
+        );
+    }
+    println!("monotone: OK (area strictly decreases as alpha shrinks)");
+
+    // Mechanism breakdown: β-SRAM area share per alpha.
+    println!("\nβ-SRAM share of total area:");
+    for &alpha in &[1.0, 0.5, 0.2, 0.1] {
+        let mut cfg = AcceleratorConfig::paper_table5(Organization::DmBnn);
+        cfg.alpha = alpha;
+        let beta: f64 = cfg.beta_srams().iter().map(|b| b.area_mm2()).sum();
+        let total = cfg.area_mm2();
+        println!(
+            "  α={alpha:<5} β-SRAM {beta:>6.3} mm² / total {total:>6.3} mm² = {:>4.1}%",
+            100.0 * beta / total
+        );
+    }
+
+    // Compute-neutrality check (§IV): cycles identical across alpha.
+    let base = simulate(&AcceleratorConfig::paper_table5(Organization::DmBnn), false);
+    let mut cfg = AcceleratorConfig::paper_table5(Organization::DmBnn);
+    cfg.alpha = 1.0;
+    let full = simulate(&cfg, false);
+    assert_eq!(base.cycles, full.cycles);
+    println!("\ncompute-neutral: OK (cycles identical at α=0.1 and α=1.0)");
+
+    let m = bench("hwsim simulate (one design point)", 2, 50, || {
+        std::hint::black_box(simulate(
+            &AcceleratorConfig::paper_table5(Organization::DmBnn),
+            false,
+        ));
+    });
+    println!("\n{m}");
+}

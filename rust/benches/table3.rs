@@ -1,0 +1,81 @@
+//! Bench: Table III — single-layer computation cost, ±DM.
+//!
+//! Regenerates the paper's analytic table for the paper's layer shape
+//! (M=200, N=784) across T, verifies the instrumented dataflows match
+//! the closed forms exactly, and times the two single-layer dataflows to
+//! show the measured speedup tracks the 2-cycle-MUL model's prediction.
+
+use bayesdm::dataset::LayerPosterior;
+use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+use bayesdm::nn::linear;
+use bayesdm::opcount::model::{dm_mul_ratio, table3_dm, table3_standard};
+use bayesdm::opcount::report::render_table3;
+use bayesdm::opcount::OpCounter;
+use bayesdm::util::bench::{bench, header};
+
+fn random_layer(m: usize, n: usize, seed: u64) -> LayerPosterior {
+    let mut r = XorShift128Plus::new(seed);
+    LayerPosterior {
+        m,
+        n,
+        mu: (0..m * n).map(|_| r.next_f32() - 0.5).collect(),
+        sigma: (0..m * n).map(|_| 0.01 + 0.1 * r.next_f32()).collect(),
+        mu_b: (0..m).map(|_| r.next_f32() - 0.5).collect(),
+        sigma_b: (0..m).map(|_| 0.01 + 0.1 * r.next_f32()).collect(),
+    }
+}
+
+fn main() {
+    header("Table III — single-layer BNN computation cost");
+    let (m, n) = (200usize, 784usize);
+
+    // The analytic table at the paper's T plus the Eqn (3) asymptote.
+    for t in [10u64, 100, 1000] {
+        println!("{}", render_table3(m as u64, n as u64, t));
+    }
+    println!("Eqn (3) ratio vs T:");
+    for t in [3u64, 10, 100, 1000, 100000] {
+        println!("  T={t:>7}: MN(T+2)/2MNT = {:.4}", dm_mul_ratio(t));
+    }
+
+    // Measured single-layer wall-clock: standard vs DM for T voters.
+    let layer = random_layer(m, n, 1);
+    let t = 100usize;
+    let mut r = XorShift128Plus::new(2);
+    let x: Vec<f32> = (0..n).map(|_| r.next_f32()).collect();
+    let hs: Vec<Vec<f32>> =
+        (0..t).map(|_| (0..m * n).map(|_| r.next_f32() - 0.5).collect()).collect();
+    let hbs: Vec<Vec<f32>> =
+        (0..t).map(|_| (0..m).map(|_| r.next_f32() - 0.5).collect()).collect();
+
+    println!("\nmeasured single-layer dataflow (M={m}, N={n}, T={t}):");
+    let mut y = vec![0.0f32; m];
+    let m_std = bench("standard: T x (scale-loc + matvec)", 1, 10, || {
+        let mut ops = OpCounter::default();
+        for k in 0..t {
+            linear::standard_voter(&layer, &x, &hs[k], &hbs[k], false, &mut y, &mut ops);
+        }
+        std::hint::black_box(&y);
+    });
+    println!("  {m_std}");
+
+    let mut beta = vec![0.0f32; m * n];
+    let mut eta = vec![0.0f32; m];
+    let m_dm = bench("dm: precompute + T x linewise", 1, 10, || {
+        let mut ops = OpCounter::default();
+        linear::precompute(&layer, &x, &mut beta, &mut eta, &mut ops);
+        for k in 0..t {
+            linear::dm_voter(
+                &layer, &beta, &eta, &hs[k], &hbs[k], 0..m, false, &mut y, &mut ops,
+            );
+        }
+        std::hint::black_box(&y);
+    });
+    println!("  {m_dm}");
+    let speedup = m_std.mean.as_secs_f64() / m_dm.mean.as_secs_f64();
+    let predicted = table3_standard(m as u64, n as u64, t as u64).weighted_cycles() as f64
+        / table3_dm(m as u64, n as u64, t as u64).weighted_cycles() as f64;
+    println!(
+        "\n  measured speedup {speedup:.2}x (paper's weighted-cycle model predicts {predicted:.2}x)"
+    );
+}

@@ -1,0 +1,60 @@
+//! Bench: Table V — hardware implementation results.
+//!
+//! Simulates the three accelerator organizations on the 45 nm cost model
+//! (area / energy / runtime) and measures the 8-bit fixed-point accuracy
+//! with the quantized functional model — the full Table V row set, plus
+//! the ratio columns the paper's abstract quotes (−73 % energy, 4×
+//! speedup, +14 % area).
+
+use bayesdm::dataset::{load_images, load_weights};
+use bayesdm::grng::uniform::XorShift128Plus;
+use bayesdm::grng::Ziggurat;
+use bayesdm::hwsim::report::{render_table5, table5_rows};
+use bayesdm::nn::bnn::Method;
+use bayesdm::nn::fixed_infer::QBnnModel;
+use bayesdm::util::bench::header;
+
+fn main() {
+    header("Table V — hardware implementation results (45 nm model)");
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+
+    let mut accs: [Option<f64>; 3] = [None, None, None];
+    if have_artifacts {
+        let weights = load_weights("artifacts/weights_mnist_bnn.bin").unwrap();
+        let test = load_images("artifacts/data_mnist_test.bin").unwrap();
+        let n = std::env::args()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(60usize)
+            .min(test.len());
+        let q = QBnnModel::from_posterior(&weights);
+        let methods = [
+            Method::Standard { t: 100 },
+            Method::Hybrid { t: 100 },
+            Method::DmBnn { schedule: vec![10, 10, 10] },
+        ];
+        println!("quantized (8-bit) accuracy over {n} images:");
+        for (i, m) in methods.iter().enumerate() {
+            let mut g = Ziggurat::new(XorShift128Plus::new(13 + i as u64));
+            let t0 = std::time::Instant::now();
+            let acc =
+                q.accuracy(&test.images[..n * test.dim], &test.labels[..n], m, &mut g);
+            println!(
+                "  method {} -> {:.2}% ({:.1} ms/img)",
+                i,
+                100.0 * acc,
+                t0.elapsed().as_millis() as f64 / n as f64
+            );
+            accs[i] = Some(acc);
+        }
+    } else {
+        println!("(artifacts missing: accuracy columns skipped — run `make artifacts`)");
+    }
+
+    let rows = table5_rows(&accs);
+    println!("\n{}", render_table5(&rows));
+    println!("paper reference:");
+    println!("  Standard 95.42%  5.76 mm²  172 µJ  392 µs");
+    println!("  Hybrid   95.42%  7.33 mm²  122 µJ  259 µs  (−29% E, 1.5×)");
+    println!("  DM-BNN   95.35%  6.63 mm²   46 µJ   97 µs  (−73% E, 4.0×)");
+}

@@ -1,0 +1,364 @@
+//! The executor: plans → PJRT artifact dispatches → voter logits.
+//!
+//! Posterior parameters are uploaded to the device once at construction
+//! (they are the largest tensors and never change per request); each
+//! request only moves its input, freshly-sampled uncertainty blocks, and
+//! the memorized (β, η) features of the DM dataflows.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+use xla::PjRtBuffer;
+
+use crate::dataset::LayerPosterior;
+use crate::grng::pool::{HBlock, RefillWorker};
+use crate::grng::HPool;
+use crate::layer_dims;
+use crate::runtime::client::to_vec_f32;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::Engine;
+
+use super::plan::{alpha_block, InferenceMethod};
+
+/// Resident device copies of one layer's posterior.
+struct LayerBuffers {
+    mu: PjRtBuffer,
+    sigma: PjRtBuffer,
+    mu_b: PjRtBuffer,
+    sigma_b: PjRtBuffer,
+}
+
+/// The request-path executor.
+pub struct Executor {
+    pub engine: Engine,
+    pub layers: Vec<LayerPosterior>,
+    dev: Vec<LayerBuffers>,
+    pub t_block: usize,
+    /// Per-layer pre-generated uncertainty banks (shape (t_block, M, N)).
+    /// GRNG sampling is ~45 % of a standard request's wall-clock (§Perf);
+    /// background refill workers overlap it with PJRT compute — the
+    /// software analogue of VIBNN's GRNG/MAC pipeline.
+    pools: Vec<Arc<HPool>>,
+    _refill: Vec<RefillWorker>,
+}
+
+impl Executor {
+    /// Build from an engine + trained posterior; uploads weights.
+    pub fn new(engine: Engine, layers: Vec<LayerPosterior>, seed: u64) -> Result<Self> {
+        let arch = engine.manifest.arch.clone();
+        let dims = layer_dims(&arch);
+        ensure!(
+            dims.len() == layers.len()
+                && dims.iter().zip(&layers).all(|(&(m, n), l)| l.m == m && l.n == n),
+            "posterior shapes do not match the manifest architecture"
+        );
+        let mut dev = Vec::with_capacity(layers.len());
+        for l in &layers {
+            dev.push(LayerBuffers {
+                mu: engine.upload(&l.mu, &[l.m, l.n])?,
+                sigma: engine.upload(&l.sigma, &[l.m, l.n])?,
+                mu_b: engine.upload(&l.mu_b, &[l.m])?,
+                sigma_b: engine.upload(&l.sigma_b, &[l.m])?,
+            });
+        }
+        let t_block = *engine
+            .manifest
+            .t_blocks
+            .iter()
+            .min()
+            .ok_or_else(|| anyhow::anyhow!("manifest lists no t_blocks"))?;
+        // One pre-generated H bank per layer shape, each with a background
+        // refill worker.  Capacity 6 blocks ≈ two standard requests of
+        // headroom; block values are seed-deterministic (single generator
+        // per pool), so same-seed executors replay identical uncertainty —
+        // pop() falls back to inline generation from the same stream when
+        // the worker is behind, so results do not depend on timing.
+        //
+        // On a single-core box background refill cannot overlap anything
+        // and only adds contention, so the workers are skipped (pop()
+        // generates inline, which is exactly the pre-pool behaviour).
+        let spawn_workers = std::thread::available_parallelism()
+            .map(|p| p.get() > 1)
+            .unwrap_or(false);
+        let mut pools = Vec::with_capacity(layers.len());
+        let mut refill = Vec::with_capacity(layers.len());
+        for (li, l) in layers.iter().enumerate() {
+            let pool = Arc::new(HPool::new(
+                t_block,
+                l.m,
+                l.n,
+                6,
+                seed ^ (0x9E37_79B9 * (li as u64 + 1)),
+            ));
+            if spawn_workers {
+                refill.push(RefillWorker::spawn(pool.clone()));
+            }
+            pools.push(pool);
+        }
+        Ok(Self {
+            engine,
+            layers,
+            dev,
+            t_block,
+            pools,
+            _refill: refill,
+        })
+    }
+
+    /// Pop a pre-generated uncertainty block for layer `li` (generates
+    /// inline only if the refill worker is behind).
+    fn pop_block(&self, li: usize) -> HBlock {
+        self.pools[li].pop()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].n
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().m
+    }
+
+    /// Evaluate one input; returns per-voter logits.
+    pub fn evaluate(&self, x: &[f32], method: &InferenceMethod) -> Result<Vec<Vec<f32>>> {
+        ensure!(x.len() == self.input_dim(), "input dim mismatch");
+        match method {
+            InferenceMethod::Standard { t } => self.eval_standard(x, *t),
+            InferenceMethod::Hybrid { t } => self.eval_hybrid(x, *t),
+            InferenceMethod::DmBnn { schedule, alpha } => {
+                self.eval_dm(x, schedule, *alpha)
+            }
+        }
+    }
+
+    /// Predict the argmax class of the mean vote.
+    pub fn predict(&self, x: &[f32], method: &InferenceMethod) -> Result<usize> {
+        let logits = self.evaluate(x, method)?;
+        Ok(super::vote::argmax(&super::vote::mean_vote(&logits)))
+    }
+
+    // -- standard -----------------------------------------------------------
+
+    fn eval_standard(&self, x: &[f32], t: usize) -> Result<Vec<Vec<f32>>> {
+        let tb = self.t_block;
+        ensure!(t % tb == 0, "t={t} must be a multiple of t_block={tb}");
+        let art = self.engine.artifact(&format!("std_full_t{tb}"))?;
+        let xb = self.engine.upload(x, &[x.len()])?;
+        let mut logits = Vec::with_capacity(t);
+        for _ in 0..t / tb {
+            let mut args: Vec<&PjRtBuffer> = vec![&xb];
+            for lb in &self.dev {
+                args.extend([&lb.mu, &lb.sigma, &lb.mu_b, &lb.sigma_b]);
+            }
+            let blocks: Vec<HBlock> =
+                (0..self.layers.len()).map(|li| self.pop_block(li)).collect();
+            let hs: Vec<PjRtBuffer> = blocks
+                .iter()
+                .map(|b| self.engine.upload(&b.h, &[tb, b.m, b.n]))
+                .collect::<Result<_>>()?;
+            let hbs: Vec<PjRtBuffer> = blocks
+                .iter()
+                .map(|b| self.engine.upload(&b.hb, &[tb, b.m]))
+                .collect::<Result<_>>()?;
+            args.extend(hs.iter());
+            args.extend(hbs.iter());
+            let out = art.run_b(&args)?;
+            logits.extend(split_rows(&to_vec_f32(&out[0])?, tb));
+        }
+        Ok(logits)
+    }
+
+    // -- hybrid ---------------------------------------------------------------
+
+    fn eval_hybrid(&self, x: &[f32], t: usize) -> Result<Vec<Vec<f32>>> {
+        let tb = self.t_block;
+        ensure!(t % tb == 0, "t={t} must be a multiple of t_block={tb}");
+        let l0 = &self.layers[0];
+        // Pre-compute + memorize (β, η) for layer 1 — once per request.
+        let pre = self.engine.artifact(&Manifest::precompute_name(l0.m, l0.n))?;
+        let xb = self.engine.upload(x, &[x.len()])?;
+        let outs = pre.run_b(&[&xb, &self.dev[0].sigma, &self.dev[0].mu])?;
+        let beta = self.engine.upload(&to_vec_f32(&outs[0])?, &[l0.m, l0.n])?;
+        let eta = self.engine.upload(&to_vec_f32(&outs[1])?, &[l0.m])?;
+
+        let dm = self
+            .engine
+            .artifact(&Manifest::dm_name(l0.m, l0.n, tb, self.layers.len() > 1))?;
+        let tail = self.engine.artifact(&format!("std_tail_t{tb}"))?;
+        let mut logits = Vec::with_capacity(t);
+        for _ in 0..t / tb {
+            let b0 = self.pop_block(0);
+            let h = self.engine.upload(&b0.h, &[tb, l0.m, l0.n])?;
+            let hb = self.engine.upload(&b0.hb, &[tb, l0.m])?;
+            let y1 = dm.run_b(&[&h, &beta, &eta, &hb, &self.dev[0].sigma_b, &self.dev[0].mu_b])?;
+            let y1b = self.engine.upload(&to_vec_f32(&y1[0])?, &[tb, l0.m])?;
+
+            let mut args: Vec<&PjRtBuffer> = vec![&y1b];
+            for lb in &self.dev[1..] {
+                args.extend([&lb.mu, &lb.sigma, &lb.mu_b, &lb.sigma_b]);
+            }
+            let blocks: Vec<HBlock> =
+                (1..self.layers.len()).map(|li| self.pop_block(li)).collect();
+            let hs: Vec<PjRtBuffer> = blocks
+                .iter()
+                .map(|b| self.engine.upload(&b.h, &[tb, b.m, b.n]))
+                .collect::<Result<_>>()?;
+            let hbs: Vec<PjRtBuffer> = blocks
+                .iter()
+                .map(|b| self.engine.upload(&b.hb, &[tb, b.m]))
+                .collect::<Result<_>>()?;
+            args.extend(hs.iter());
+            args.extend(hbs.iter());
+            let out = tail.run_b(&args)?;
+            logits.extend(split_rows(&to_vec_f32(&out[0])?, tb));
+        }
+        Ok(logits)
+    }
+
+    // -- DM-BNN ---------------------------------------------------------------
+
+    fn eval_dm(&self, x: &[f32], schedule: &[usize], alpha: f64) -> Result<Vec<Vec<f32>>> {
+        let nl = self.layers.len();
+        ensure!(schedule.len() == nl, "schedule must cover every layer");
+        let tb = self.t_block;
+        for &tl in schedule {
+            ensure!(tl == tb, "schedule entries must equal t_block={tb}");
+        }
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        for (li, l) in self.layers.iter().enumerate() {
+            let relu = li != nl - 1;
+            let mb = alpha_block(l.m, alpha);
+            let pre = self.engine.artifact(&Manifest::precompute_name(l.m, l.n))?;
+            let dm = self.engine.artifact(&Manifest::dm_name(mb, l.n, tb, relu))?;
+            // Sample the layer's uncertainty ONCE; shared by every distinct
+            // input (the fan-out tree of Fig 4b — the reason only L√T
+            // matrices are needed).
+            let block = self.pop_block(li);
+            let (h, hb) = (block.h, block.hb);
+            // Pre-slice the α row blocks of h/hb (and bias params) so the
+            // per-input loop reuses the uploads.
+            let blocks = l.m / mb;
+            let mut h_bufs = Vec::with_capacity(blocks);
+            let mut hb_bufs = Vec::with_capacity(blocks);
+            let mut sb_bufs = Vec::with_capacity(blocks);
+            let mut mb_bufs = Vec::with_capacity(blocks);
+            for b in 0..blocks {
+                let rows = b * mb..(b + 1) * mb;
+                h_bufs.push(self.engine.upload(
+                    &slice_rows3(&h, tb, l.m, l.n, rows.clone()),
+                    &[tb, mb, l.n],
+                )?);
+                hb_bufs.push(self.engine.upload(
+                    &slice_rows2(&hb, tb, l.m, rows.clone()),
+                    &[tb, mb],
+                )?);
+                sb_bufs.push(self.engine.upload(&l.sigma_b[rows.clone()], &[mb])?);
+                mb_bufs.push(self.engine.upload(&l.mu_b[rows.clone()], &[mb])?);
+            }
+            let mut next: Vec<Vec<f32>> = Vec::with_capacity(acts.len() * tb);
+            for a in &acts {
+                let ab = self.engine.upload(a, &[l.n])?;
+                let outs = pre.run_b(&[&ab, &self.dev[li].sigma, &self.dev[li].mu])?;
+                let beta = to_vec_f32(&outs[0])?;
+                let eta = to_vec_f32(&outs[1])?;
+                // Assemble the tb voter outputs from the α row blocks.
+                let mut ys = vec![vec![0.0f32; l.m]; tb];
+                for b in 0..blocks {
+                    let rows = b * mb..(b + 1) * mb;
+                    let bb = self.engine.upload(
+                        &beta[rows.start * l.n..rows.end * l.n],
+                        &[mb, l.n],
+                    )?;
+                    let eb = self.engine.upload(&eta[rows.clone()], &[mb])?;
+                    let out = dm.run_b(&[
+                        &h_bufs[b], &bb, &eb, &hb_bufs[b], &sb_bufs[b], &mb_bufs[b],
+                    ])?;
+                    let part = to_vec_f32(&out[0])?; // (tb, mb)
+                    for (k, y) in ys.iter_mut().enumerate() {
+                        y[rows.clone()].copy_from_slice(&part[k * mb..(k + 1) * mb]);
+                    }
+                }
+                next.extend(ys);
+            }
+            acts = next;
+        }
+        Ok(acts)
+    }
+
+    /// Test-set accuracy over a flat image buffer.
+    pub fn accuracy(
+        &self,
+        images: &[f32],
+        labels: &[u8],
+        method: &InferenceMethod,
+    ) -> Result<f64> {
+        let dim = self.input_dim();
+        let mut correct = 0usize;
+        for (i, &label) in labels.iter().enumerate() {
+            let x = &images[i * dim..(i + 1) * dim];
+            if self.predict(x, method)? == label as usize {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / labels.len() as f64)
+    }
+}
+
+/// Split a (rows, cols) row-major buffer into row vectors.
+fn split_rows(flat: &[f32], rows: usize) -> Vec<Vec<f32>> {
+    let cols = flat.len() / rows;
+    (0..rows).map(|r| flat[r * cols..(r + 1) * cols].to_vec()).collect()
+}
+
+/// Slice rows out of a (t, m, n) tensor: result is (t, rows, n).
+fn slice_rows3(
+    flat: &[f32],
+    t: usize,
+    m: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(t * rows.len() * n);
+    for k in 0..t {
+        let base = k * m * n;
+        out.extend_from_slice(&flat[base + rows.start * n..base + rows.end * n]);
+    }
+    out
+}
+
+/// Slice rows out of a (t, m) tensor: result is (t, rows).
+fn slice_rows2(flat: &[f32], t: usize, m: usize, rows: std::ops::Range<usize>) -> Vec<f32> {
+    let mut out = Vec::with_capacity(t * rows.len());
+    for k in 0..t {
+        let base = k * m;
+        out.extend_from_slice(&flat[base + rows.start..base + rows.end]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_rows_roundtrip() {
+        let flat = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let rows = split_rows(&flat, 2);
+        assert_eq!(rows, vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+    }
+
+    #[test]
+    fn slice_rows3_extracts_blocks() {
+        // t=2, m=3, n=2
+        let flat: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let s = slice_rows3(&flat, 2, 3, 2, 1..3);
+        assert_eq!(s, vec![2.0, 3.0, 4.0, 5.0, 8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn slice_rows2_extracts_columnsets() {
+        let flat: Vec<f32> = (0..6).map(|i| i as f32).collect(); // t=2, m=3
+        let s = slice_rows2(&flat, 2, 3, 0..2);
+        assert_eq!(s, vec![0.0, 1.0, 3.0, 4.0]);
+    }
+}

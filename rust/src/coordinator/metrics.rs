@@ -1,0 +1,136 @@
+//! Serving metrics: request counters and latency distribution.
+//!
+//! Lock-free counters (atomics) on the hot path; the latency reservoir is
+//! a fixed-size ring guarded by a mutex that is only touched once per
+//! request (not per voter/dispatch).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+const RESERVOIR: usize = 4096;
+
+/// Shared serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub voters_evaluated: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request.
+    pub fn record(&self, latency: Duration, voters: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.voters_evaluated.fetch_add(voters as u64, Ordering::Relaxed);
+        let mut l = self.latencies_us.lock().unwrap();
+        if l.len() >= RESERVOIR {
+            // ring overwrite keeps the reservoir recent
+            let idx = (self.requests.load(Ordering::Relaxed) as usize) % RESERVOIR;
+            l[idx] = latency.as_micros() as u64;
+        } else {
+            l.push(latency.as_micros() as u64);
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latency percentile in µs (0.0..=1.0); None before any request.
+    pub fn latency_percentile_us(&self, q: f64) -> Option<u64> {
+        let mut l = self.latencies_us.lock().unwrap().clone();
+        if l.is_empty() {
+            return None;
+        }
+        l.sort_unstable();
+        let idx = ((l.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        Some(l[idx])
+    }
+
+    /// Snapshot for printing.
+    pub fn summary(&self) -> MetricsSummary {
+        MetricsSummary {
+            requests: self.requests.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            voters: self.voters_evaluated.load(Ordering::Relaxed),
+            p50_us: self.latency_percentile_us(0.50),
+            p99_us: self.latency_percentile_us(0.99),
+        }
+    }
+}
+
+/// Printable metrics snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MetricsSummary {
+    pub requests: u64,
+    pub errors: u64,
+    pub voters: u64,
+    pub p50_us: Option<u64>,
+    pub p99_us: Option<u64>,
+}
+
+impl std::fmt::Display for MetricsSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} errors={} voters={} p50={}µs p99={}µs",
+            self.requests,
+            self.errors,
+            self.voters,
+            self.p50_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            self.p99_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i * 10), 100);
+        }
+        let s = m.summary();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.voters, 10_000);
+        let p50 = s.p50_us.unwrap();
+        assert!((495..=515).contains(&p50), "p50 {p50}");
+        let p99 = s.p99_us.unwrap();
+        assert!(p99 >= 980, "p99 {p99}");
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(0.5), None);
+        assert_eq!(m.summary().requests, 0);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let m = Metrics::new();
+        for _ in 0..(RESERVOIR + 100) {
+            m.record(Duration::from_micros(1), 1);
+        }
+        assert!(m.latencies_us.lock().unwrap().len() <= RESERVOIR);
+        assert_eq!(m.summary().requests, (RESERVOIR + 100) as u64);
+    }
+
+    #[test]
+    fn display_format() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(42), 10);
+        let text = m.summary().to_string();
+        assert!(text.contains("requests=1"));
+        assert!(text.contains("p50=42µs"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Layer-3 coordinator — the paper's dataflow contribution as a serving
+//! system.
+//!
+//! The coordinator owns everything between a classification request and
+//! its voted answer:
+//!
+//! * [`plan`]    — execution plans: how Standard / Hybrid-BNN / DM-BNN
+//!   (Fig 2/3/4) decompose into AOT artifact dispatches, including the
+//!   `L√T` fan-out tree and the α-blocked row schedule of Fig 5.
+//! * [`exec`]    — the executor: resident posterior buffers on the PJRT
+//!   device, H sampling via [`crate::grng`], artifact dispatch, voter
+//!   assembly.  DM pre-compute results (β, η) are *memorized* per request
+//!   exactly as the paper prescribes.
+//! * [`vote`]    — aggregation: mean-logit vote, argmax, softmax-mean and
+//!   predictive entropy (the uncertainty signal).
+//! * [`server`]  — async request router + dynamic batcher (tokio): admits
+//!   requests, groups them per method, runs them on a worker, returns
+//!   predictions with latency metadata.
+//! * [`metrics`] — op/latency/throughput counters for the benches and
+//!   EXPERIMENTS.md.
+
+pub mod exec;
+pub mod metrics;
+pub mod plan;
+pub mod server;
+pub mod vote;
+
+pub use exec::Executor;
+pub use plan::{InferenceMethod, PlanSummary};
+pub use server::{serve, Response, ServerConfig, ServerHandle};

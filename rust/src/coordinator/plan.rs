@@ -1,0 +1,218 @@
+//! Execution plans: how each inference method decomposes into artifact
+//! dispatches.
+//!
+//! A plan is purely descriptive — [`super::exec::Executor`] interprets
+//! it.  Having it as data makes the dispatch schedule testable without a
+//! PJRT device and feeds the plan summary the CLI prints.
+
+use crate::runtime::manifest::Manifest;
+use crate::layer_dims;
+#[cfg(test)]
+use crate::MNIST_ARCH;
+
+/// The three inference methods of the paper, coordinator flavour.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InferenceMethod {
+    /// Fig 2: Algorithm 1 on every layer; `t` voters.
+    Standard { t: usize },
+    /// Fig 4(a): DM on layer 1, standard tail; `t` voters.
+    Hybrid { t: usize },
+    /// Fig 4(b): DM everywhere; `schedule[l]` samples at layer l, fan-out
+    /// tree, `Π schedule` leaf voters.  `alpha` selects the row-blocked
+    /// artifacts of the memory-friendly framework (Fig 5).
+    DmBnn { schedule: Vec<usize>, alpha: f64 },
+}
+
+impl InferenceMethod {
+    /// Paper defaults: Standard/Hybrid T = 100; DM-BNN 10×10×10 (§V-B).
+    pub fn paper_standard() -> Self {
+        InferenceMethod::Standard { t: 100 }
+    }
+
+    pub fn paper_hybrid() -> Self {
+        InferenceMethod::Hybrid { t: 100 }
+    }
+
+    pub fn paper_dm(alpha: f64) -> Self {
+        InferenceMethod::DmBnn { schedule: vec![10, 10, 10], alpha }
+    }
+
+    /// Leaf voter count.
+    pub fn voters(&self) -> usize {
+        match self {
+            InferenceMethod::Standard { t } | InferenceMethod::Hybrid { t } => *t,
+            InferenceMethod::DmBnn { schedule, .. } => schedule.iter().product(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InferenceMethod::Standard { .. } => "standard",
+            InferenceMethod::Hybrid { .. } => "hybrid",
+            InferenceMethod::DmBnn { .. } => "dm",
+        }
+    }
+
+    /// Parse "standard" | "hybrid" | "dm" with paper defaults.
+    pub fn parse(s: &str, alpha: f64) -> Option<Self> {
+        match s {
+            "standard" => Some(Self::paper_standard()),
+            "hybrid" => Some(Self::paper_hybrid()),
+            "dm" => Some(Self::paper_dm(alpha)),
+            _ => None,
+        }
+    }
+}
+
+/// Static summary of a plan: which artifacts it dispatches how often per
+/// request (drives the CLI `plan` output and the dispatch-count tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanSummary {
+    pub method: String,
+    pub voters: usize,
+    /// (artifact name, dispatches per request)
+    pub dispatches: Vec<(String, usize)>,
+}
+
+impl PlanSummary {
+    /// Compute the dispatch schedule for a method on an architecture.
+    ///
+    /// `t_block` is the voter-block quantum the artifacts were lowered at
+    /// (10 in this build).
+    pub fn build(arch: &[usize], method: &InferenceMethod, t_block: usize) -> Self {
+        let dims = layer_dims(arch);
+        let nl = dims.len();
+        let mut d: Vec<(String, usize)> = Vec::new();
+        let mut push = |name: String, count: usize| {
+            if let Some(e) = d.iter_mut().find(|(n, _)| *n == name) {
+                e.1 += count;
+            } else {
+                d.push((name, count));
+            }
+        };
+        match method {
+            InferenceMethod::Standard { t } => {
+                assert!(t % t_block == 0, "t must be a multiple of t_block");
+                push(format!("std_full_t{t_block}"), t / t_block);
+            }
+            InferenceMethod::Hybrid { t } => {
+                assert!(t % t_block == 0);
+                let (m1, n1) = dims[0];
+                push(Manifest::precompute_name(m1, n1), 1);
+                push(Manifest::dm_name(m1, n1, t_block, nl > 1), t / t_block);
+                push(format!("std_tail_t{t_block}"), t / t_block);
+            }
+            InferenceMethod::DmBnn { schedule, alpha } => {
+                assert_eq!(schedule.len(), nl);
+                let mut distinct = 1usize;
+                for (li, (&(m, n), &tl)) in dims.iter().zip(schedule).enumerate() {
+                    assert!(
+                        tl == t_block,
+                        "DM schedule entries must equal the lowered t_block"
+                    );
+                    let relu = li != nl - 1;
+                    let mb = alpha_block(m, *alpha);
+                    push(Manifest::precompute_name(m, n), distinct);
+                    push(Manifest::dm_name(mb, n, t_block, relu), distinct * (m / mb));
+                    distinct *= tl;
+                }
+            }
+        }
+        PlanSummary {
+            method: method.name().to_string(),
+            voters: method.voters(),
+            dispatches: d,
+        }
+    }
+
+    /// Total artifact dispatches per request.
+    pub fn total_dispatches(&self) -> usize {
+        self.dispatches.iter().map(|(_, c)| c).sum()
+    }
+}
+
+/// Row-block size for an α (mirrors `compile.aot._alpha_blocks`): the
+/// largest divisor of `m` not exceeding `round(m·α)`, min 1.
+pub fn alpha_block(m: usize, alpha: f64) -> usize {
+    assert!(alpha > 0.0 && alpha <= 1.0);
+    let mut mb = ((m as f64 * alpha).round() as usize).clamp(1, m);
+    while m % mb != 0 {
+        mb -= 1;
+    }
+    mb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_block_matches_python() {
+        assert_eq!(alpha_block(200, 1.0), 200);
+        assert_eq!(alpha_block(200, 0.5), 100);
+        assert_eq!(alpha_block(200, 0.2), 40);
+        assert_eq!(alpha_block(200, 0.1), 20);
+        assert_eq!(alpha_block(10, 0.1), 1);
+        assert_eq!(alpha_block(10, 0.5), 5);
+    }
+
+    #[test]
+    fn standard_plan_is_block_count() {
+        let p = PlanSummary::build(&MNIST_ARCH, &InferenceMethod::paper_standard(), 10);
+        assert_eq!(p.dispatches, vec![("std_full_t10".to_string(), 10)]);
+        assert_eq!(p.voters, 100);
+    }
+
+    #[test]
+    fn hybrid_plan_shape() {
+        let p = PlanSummary::build(&MNIST_ARCH, &InferenceMethod::paper_hybrid(), 10);
+        let names: Vec<&str> = p.dispatches.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["precompute_m200_n784", "dm_m200_n784_t10_r", "std_tail_t10"]
+        );
+        assert_eq!(p.dispatches[0].1, 1); // precompute memorized once
+        assert_eq!(p.dispatches[1].1, 10);
+        assert_eq!(p.dispatches[2].1, 10);
+    }
+
+    #[test]
+    fn dm_plan_fanout_counts() {
+        let p = PlanSummary::build(&MNIST_ARCH, &InferenceMethod::paper_dm(1.0), 10);
+        // distinct inputs per layer: 1, 10, 100
+        let get = |n: &str| p.dispatches.iter().find(|(x, _)| x == n).unwrap().1;
+        assert_eq!(get("precompute_m200_n784"), 1);
+        assert_eq!(get("precompute_m200_n200"), 10);
+        assert_eq!(get("precompute_m10_n200"), 100);
+        assert_eq!(get("dm_m200_n784_t10_r"), 1);
+        assert_eq!(get("dm_m200_n200_t10_r"), 10);
+        assert_eq!(get("dm_m10_n200_t10_nr"), 100);
+        assert_eq!(p.voters, 1000);
+    }
+
+    #[test]
+    fn dm_plan_alpha_multiplies_row_blocks() {
+        let p = PlanSummary::build(&MNIST_ARCH, &InferenceMethod::paper_dm(0.1), 10);
+        let get = |n: &str| p.dispatches.iter().find(|(x, _)| x == n).unwrap().1;
+        // alpha = 0.1: 200/20 = 10 row blocks per dm dispatch
+        assert_eq!(get("dm_m20_n784_t10_r"), 10);
+        assert_eq!(get("dm_m20_n200_t10_r"), 100);
+        assert_eq!(get("dm_m1_n200_t10_nr"), 1000);
+    }
+
+    #[test]
+    fn parse_methods() {
+        assert_eq!(
+            InferenceMethod::parse("standard", 1.0),
+            Some(InferenceMethod::Standard { t: 100 })
+        );
+        assert_eq!(InferenceMethod::parse("nope", 1.0), None);
+        assert_eq!(InferenceMethod::parse("dm", 0.5).unwrap().voters(), 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of t_block")]
+    fn standard_t_must_block() {
+        let _ = PlanSummary::build(&MNIST_ARCH, &InferenceMethod::Standard { t: 55 }, 10);
+    }
+}

@@ -1,0 +1,268 @@
+//! Request router + dynamic batcher (std threads — tokio is not vendored
+//! in the offline build, see Cargo.toml).
+//!
+//! Requests enter through an mpsc channel; the router thread groups
+//! consecutive requests that share an inference method into micro-batches
+//! (up to `max_batch` or `max_wait`), dispatches each batch to a worker
+//! pool, and resolves each request's response channel with prediction,
+//! uncertainty and latency.  This is the vLLM-router shape scaled to the
+//! paper's workload: admission → batching → engine dispatch → per-request
+//! completion, metrics on the side.
+//!
+//! PJRT handles are not `Send` (the `xla` crate wraps raw pointers with
+//! `Rc` internals), so executors cannot be shared across threads; instead
+//! the server takes an executor *factory* and each worker thread builds
+//! its own engine — the same per-worker-engine topology a multi-device
+//! deployment would use.  Weights upload and artifact compilation happen
+//! once per worker at startup.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::exec::Executor;
+use super::metrics::Metrics;
+use super::plan::InferenceMethod;
+use super::vote;
+
+/// One classification request (internal).
+struct Request {
+    image: Vec<f32>,
+    method: InferenceMethod,
+    respond: Sender<Result<Response, String>>,
+    enqueued: Instant,
+}
+
+/// The served answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub class: usize,
+    /// Softmax-mean probability of the predicted class.
+    pub confidence: f32,
+    /// Predictive entropy (nats) — the BNN uncertainty signal.
+    pub entropy: f32,
+    pub voters: usize,
+    pub latency: Duration,
+}
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max requests fused into one engine dispatch batch.
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Worker threads, each with its own PJRT engine.
+    pub workers: usize,
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// Handle for submitting requests.
+pub struct ServerHandle {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    router: Option<JoinHandle<()>>,
+}
+
+/// A pending response.
+pub struct Pending {
+    rx: Receiver<Result<Response, String>>,
+}
+
+impl Pending {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Response, String> {
+        self.rx.recv().map_err(|_| "request dropped".to_string())?
+    }
+}
+
+impl ServerHandle {
+    /// Submit one image; returns a blocking pending handle.
+    pub fn classify(
+        &self,
+        image: Vec<f32>,
+        method: InferenceMethod,
+    ) -> Result<Pending, String> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request { image, method, respond: tx, enqueued: Instant::now() };
+        self.tx.send(req).map_err(|_| "server shut down".to_string())?;
+        Ok(Pending { rx })
+    }
+
+    /// Stop the router and wait for it to drain.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let router = self.router.take();
+        drop(self); // closes the request channel
+        if let Some(h) = router {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Start the serving loop.  `factory` is called once per worker thread to
+/// build that worker's executor (PJRT handles are thread-local).
+pub fn serve<F>(factory: F, cfg: ServerConfig) -> ServerHandle
+where
+    F: Fn() -> anyhow::Result<Executor> + Send + Sync + 'static,
+{
+    let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+    let metrics = Arc::new(Metrics::new());
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let m = metrics.clone();
+    let sd = shutdown.clone();
+    let factory = Arc::new(factory);
+    let router = std::thread::Builder::new()
+        .name("bayesdm-router".into())
+        .spawn(move || router_loop(factory, rx, cfg, m, sd))
+        .expect("spawn router");
+    ServerHandle { tx, metrics, shutdown, router: Some(router) }
+}
+
+fn router_loop<F>(
+    factory: Arc<F>,
+    rx: Receiver<Request>,
+    cfg: ServerConfig,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+) where
+    F: Fn() -> anyhow::Result<Executor> + Send + Sync + 'static,
+{
+    let (btx, brx) = mpsc::channel::<Vec<Request>>();
+    let brx = Arc::new(std::sync::Mutex::new(brx));
+    let mut workers = Vec::new();
+    for wi in 0..cfg.workers.max(1) {
+        let brx = brx.clone();
+        let metrics = metrics.clone();
+        let factory = factory.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("bayesdm-worker-{wi}"))
+                .spawn(move || {
+                    let exec = match factory() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            eprintln!("worker {wi}: executor build failed: {e}");
+                            // Drain and fail requests routed to this worker.
+                            while let Ok(batch) = { brx.lock().unwrap().recv() } {
+                                for req in batch {
+                                    metrics.record_error();
+                                    let _ = req
+                                        .respond
+                                        .send(Err(format!("executor unavailable: {e}")));
+                                }
+                            }
+                            return;
+                        }
+                    };
+                    loop {
+                        let batch = { brx.lock().unwrap().recv() };
+                        match batch {
+                            Ok(batch) => run_batch(&exec, batch, &metrics),
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn worker"),
+        );
+    }
+
+    'outer: loop {
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break 'outer;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break 'outer,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) if req.method == batch[0].method => batch.push(req),
+                Ok(req) => {
+                    // Method boundary: flush the current batch first.
+                    let _ = btx.send(std::mem::replace(&mut batch, vec![req]));
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    let _ = btx.send(batch);
+                    break 'outer;
+                }
+            }
+        }
+        let _ = btx.send(batch);
+    }
+    drop(btx);
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+fn run_batch(executor: &Executor, batch: Vec<Request>, metrics: &Metrics) {
+    for req in batch {
+        let res = executor.evaluate(&req.image, &req.method);
+        let latency = req.enqueued.elapsed();
+        match res {
+            Ok(logits) => {
+                let probs = vote::softmax_mean(&logits);
+                let class = vote::argmax(&probs);
+                metrics.record(latency, logits.len());
+                let _ = req.respond.send(Ok(Response {
+                    class,
+                    confidence: probs[class],
+                    entropy: vote::predictive_entropy(&logits),
+                    voters: logits.len(),
+                    latency,
+                }));
+            }
+            Err(e) => {
+                metrics.record_error();
+                let _ = req.respond.send(Err(e.to_string()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = ServerConfig::default();
+        assert!(c.max_batch >= 1);
+        assert!(c.workers >= 1);
+        assert!(c.queue_depth >= c.max_batch);
+    }
+
+    // End-to-end server tests (require artifacts + PJRT) live in
+    // rust/tests/integration.rs.
+}

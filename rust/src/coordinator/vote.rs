@@ -1,0 +1,116 @@
+//! Voter aggregation (the ⊙ operator of Table II) and uncertainty
+//! summaries.
+
+/// Mean of the voter logit stack (Algorithm 1/2 final line).
+pub fn mean_vote(logits: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!logits.is_empty(), "vote over empty voter set");
+    let m = logits[0].len();
+    let mut out = vec![0.0f32; m];
+    for l in logits {
+        assert_eq!(l.len(), m);
+        for (o, v) in out.iter_mut().zip(l) {
+            *o += v;
+        }
+    }
+    let t = logits.len() as f32;
+    for o in out.iter_mut() {
+        *o /= t;
+    }
+    out
+}
+
+/// Mean of per-voter softmax distributions — the calibrated predictive.
+pub fn softmax_mean(logits: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!logits.is_empty());
+    let m = logits[0].len();
+    let mut out = vec![0.0f32; m];
+    for l in logits {
+        let s = softmax(l);
+        for (o, v) in out.iter_mut().zip(&s) {
+            *o += v;
+        }
+    }
+    let t = logits.len() as f32;
+    for o in out.iter_mut() {
+        *o /= t;
+    }
+    out
+}
+
+/// Predictive entropy of the softmax-mean (nats): the BNN's uncertainty
+/// signal, exposed per response by the server.
+pub fn predictive_entropy(logits: &[Vec<f32>]) -> f32 {
+    let p = softmax_mean(logits);
+    -p.iter().map(|&q| if q > 0.0 { q * (q + 1e-12).ln() } else { 0.0 }).sum::<f32>()
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_vote_averages() {
+        let v = mean_vote(&[vec![1.0, 0.0], vec![3.0, 2.0]]);
+        assert_eq!(v, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn mean_vote_permutation_invariant() {
+        let a = vec![vec![1.0, 2.0], vec![5.0, -1.0], vec![0.0, 0.5]];
+        let mut b = a.clone();
+        b.rotate_left(1);
+        assert_eq!(mean_vote(&a), mean_vote(&b));
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let s = softmax(&[1.0, 2.0, 3.0]);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let s = softmax(&[1000.0, 1000.0]);
+        assert!((s[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        // agreeing confident voters → ~0; uniform voters → ln(K)
+        let confident = vec![vec![100.0, 0.0, 0.0]; 5];
+        assert!(predictive_entropy(&confident) < 0.01);
+        let uniform = vec![vec![0.0, 0.0, 0.0]; 5];
+        assert!((predictive_entropy(&uniform) - 3.0f32.ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn disagreeing_voters_raise_entropy() {
+        let agree = vec![vec![10.0, 0.0], vec![10.0, 0.0]];
+        let disagree = vec![vec![10.0, 0.0], vec![0.0, 10.0]];
+        assert!(predictive_entropy(&disagree) > predictive_entropy(&agree));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_vote_panics() {
+        let _ = mean_vote(&[]);
+    }
+}

@@ -1,0 +1,235 @@
+//! Binary loaders for the compile-path artifacts.
+//!
+//! Formats (little-endian, defined in `python/compile/data.py` /
+//! `python/compile/aot.py`):
+//!
+//! * `BDM1` images: magic u32, count u32, dim u32, u8 pixels, u8 labels.
+//! * `BDMW` weights: magic u32, n_layers u32, then per layer M u32, N u32,
+//!   mu f32[M·N], sigma f32[M·N], mu_b f32[M], sigma_b f32[M].
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+pub const MAGIC_IMAGES: u32 = 0x314D_4442; // "BDM1"
+pub const MAGIC_WEIGHTS: u32 = 0x574D_4442; // "BDMW"
+
+/// A labelled image set; pixels are dequantized to f32 in [0, 1].
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// count × dim, row-major.
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub dim: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// The i-th image as a slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32_vec<R: Read>(r: &mut R, count: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; count * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Load a `BDM1` image file.
+pub fn load_images<P: AsRef<Path>>(path: P) -> Result<Dataset> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let magic = read_u32(&mut r)?;
+    ensure!(magic == MAGIC_IMAGES, "bad image magic {magic:#x} in {}", path.display());
+    let count = read_u32(&mut r)? as usize;
+    let dim = read_u32(&mut r)? as usize;
+    ensure!(count > 0 && dim > 0, "empty dataset {}", path.display());
+    let mut pixels = vec![0u8; count * dim];
+    r.read_exact(&mut pixels)?;
+    let mut labels = vec![0u8; count];
+    r.read_exact(&mut labels)?;
+    // Trailing garbage means a format mismatch — fail loudly.
+    let mut probe = [0u8; 1];
+    if r.read(&mut probe)? != 0 {
+        bail!("trailing bytes in {}", path.display());
+    }
+    let images = pixels.iter().map(|&p| p as f32 / 255.0).collect();
+    Ok(Dataset { images, labels, dim })
+}
+
+/// Mean-field Gaussian posterior for one layer: w ~ N(mu, sigma²).
+#[derive(Debug, Clone)]
+pub struct LayerPosterior {
+    pub m: usize,
+    pub n: usize,
+    /// M × N row-major.
+    pub mu: Vec<f32>,
+    /// M × N row-major, strictly positive.
+    pub sigma: Vec<f32>,
+    pub mu_b: Vec<f32>,
+    pub sigma_b: Vec<f32>,
+}
+
+impl LayerPosterior {
+    /// Row i of mu.
+    pub fn mu_row(&self, i: usize) -> &[f32] {
+        &self.mu[i * self.n..(i + 1) * self.n]
+    }
+
+    pub fn sigma_row(&self, i: usize) -> &[f32] {
+        &self.sigma[i * self.n..(i + 1) * self.n]
+    }
+}
+
+/// Load a `BDMW` posterior file.
+pub fn load_weights<P: AsRef<Path>>(path: P) -> Result<Vec<LayerPosterior>> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let magic = read_u32(&mut r)?;
+    ensure!(magic == MAGIC_WEIGHTS, "bad weight magic {magic:#x} in {}", path.display());
+    let n_layers = read_u32(&mut r)? as usize;
+    ensure!(n_layers > 0 && n_layers < 64, "implausible layer count {n_layers}");
+    let mut layers = Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
+        let m = read_u32(&mut r)? as usize;
+        let n = read_u32(&mut r)? as usize;
+        ensure!(m > 0 && n > 0, "layer {li} has zero dim");
+        let mu = read_f32_vec(&mut r, m * n)?;
+        let sigma = read_f32_vec(&mut r, m * n)?;
+        let mu_b = read_f32_vec(&mut r, m)?;
+        let sigma_b = read_f32_vec(&mut r, m)?;
+        ensure!(
+            sigma.iter().all(|&s| s > 0.0) && sigma_b.iter().all(|&s| s > 0.0),
+            "layer {li}: non-positive sigma — corrupt posterior"
+        );
+        layers.push(LayerPosterior { m, n, mu, sigma, mu_b, sigma_b });
+    }
+    Ok(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_images(path: &Path, count: u32, dim: u32) {
+        let mut f = File::create(path).unwrap();
+        f.write_all(&MAGIC_IMAGES.to_le_bytes()).unwrap();
+        f.write_all(&count.to_le_bytes()).unwrap();
+        f.write_all(&dim.to_le_bytes()).unwrap();
+        let px: Vec<u8> = (0..count * dim).map(|i| (i % 256) as u8).collect();
+        f.write_all(&px).unwrap();
+        let lbl: Vec<u8> = (0..count).map(|i| (i % 10) as u8).collect();
+        f.write_all(&lbl).unwrap();
+    }
+
+    #[test]
+    fn load_images_roundtrip() {
+        let dir = std::env::temp_dir().join("bayesdm_test_imgs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ok.bin");
+        write_images(&p, 5, 4);
+        let ds = load_images(&p).unwrap();
+        assert_eq!(ds.len(), 5);
+        assert_eq!(ds.dim, 4);
+        assert_eq!(ds.labels, vec![0, 1, 2, 3, 4]);
+        assert!((ds.image(1)[0] - 4.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn load_images_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("bayesdm_test_imgs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        let mut f = File::create(&p).unwrap();
+        f.write_all(&0xDEADBEEFu32.to_le_bytes()).unwrap();
+        f.write_all(&[0u8; 8]).unwrap();
+        assert!(load_images(&p).is_err());
+    }
+
+    #[test]
+    fn load_images_rejects_trailing_bytes() {
+        let dir = std::env::temp_dir().join("bayesdm_test_imgs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trail.bin");
+        write_images(&p, 2, 3);
+        let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+        f.write_all(&[9u8]).unwrap();
+        assert!(load_images(&p).is_err());
+    }
+
+    fn write_weights(path: &Path) {
+        let mut f = File::create(path).unwrap();
+        f.write_all(&MAGIC_WEIGHTS.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap(); // M
+        f.write_all(&3u32.to_le_bytes()).unwrap(); // N
+        for v in [0.1f32, 0.2, 0.3, 0.4, 0.5, 0.6] {
+            f.write_all(&v.to_le_bytes()).unwrap(); // mu
+        }
+        for _ in 0..6 {
+            f.write_all(&0.05f32.to_le_bytes()).unwrap(); // sigma
+        }
+        for v in [1.0f32, -1.0] {
+            f.write_all(&v.to_le_bytes()).unwrap(); // mu_b
+        }
+        for _ in 0..2 {
+            f.write_all(&0.02f32.to_le_bytes()).unwrap(); // sigma_b
+        }
+    }
+
+    #[test]
+    fn load_weights_roundtrip() {
+        let dir = std::env::temp_dir().join("bayesdm_test_w");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_weights(&p);
+        let layers = load_weights(&p).unwrap();
+        assert_eq!(layers.len(), 1);
+        let l = &layers[0];
+        assert_eq!((l.m, l.n), (2, 3));
+        assert_eq!(l.mu_row(1), &[0.4, 0.5, 0.6]);
+        assert_eq!(l.mu_b, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn load_weights_rejects_zero_sigma() {
+        let dir = std::env::temp_dir().join("bayesdm_test_w");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("wz.bin");
+        let mut f = File::create(&p).unwrap();
+        f.write_all(&MAGIC_WEIGHTS.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        for v in [0.5f32, 0.0, 0.1, 0.1] {
+            // sigma = 0.0 → invalid
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        assert!(load_weights(&p).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! Datasets: binary loaders for the python-generated artifacts plus a
+//! self-contained rust generator of the same synthetic family.
+//!
+//! The *served* test sets (`artifacts/data_*_test.bin`) are written by the
+//! compile path (`python/compile/data.py`) so they match the posteriors it
+//! trained; [`loader`] reads them.  [`synth`] re-implements the generator
+//! natively so unit tests, proptests and examples run with zero artifact
+//! dependencies; [`shrink`] implements the Fig 6 shrink-ratio protocol.
+
+pub mod loader;
+pub mod shrink;
+pub mod synth;
+
+pub use loader::{load_images, load_weights, Dataset, LayerPosterior};
+pub use shrink::shrink_subset;
+pub use synth::{SynthSpec, Synthesizer};
+
+/// Image geometry shared with the python side.
+pub const IMG_SIDE: usize = 28;
+pub const IMG_DIM: usize = IMG_SIDE * IMG_SIDE;
+pub const NUM_CLASSES: usize = 10;

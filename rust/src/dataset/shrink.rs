@@ -1,0 +1,126 @@
+//! Shrink-ratio subsets (paper §V-A / Fig 6).
+//!
+//! With shrink ratio R, each class keeps `ceil(total / R / classes)`
+//! randomly-selected images, class-balanced — "with the shrink ratio of
+//! 256, each class has about 24 images".
+
+use crate::grng::uniform::{UniformSource, XorShift128Plus};
+
+use super::{Dataset, NUM_CLASSES};
+
+/// Class-balanced random subset at the given shrink ratio.
+///
+/// `nominal_total` is the size the ratio is computed against (the paper
+/// uses 60000 regardless of the pool actually sampled from).
+pub fn shrink_subset(
+    ds: &Dataset,
+    ratio: usize,
+    nominal_total: usize,
+    seed: u64,
+) -> Dataset {
+    assert!(ratio >= 1, "shrink ratio must be >= 1");
+    let per_class = (nominal_total + ratio * NUM_CLASSES - 1) / (ratio * NUM_CLASSES);
+    let mut rng = XorShift128Plus::new(seed ^ ratio as u64);
+
+    // Indices by class.
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); NUM_CLASSES];
+    for (i, &l) in ds.labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+
+    let mut selected = Vec::new();
+    for cls in by_class.iter_mut() {
+        // Partial Fisher–Yates: pick min(per_class, len) without replacement.
+        let take = per_class.min(cls.len());
+        for k in 0..take {
+            let j = k + (rng.next_u64() as usize) % (cls.len() - k);
+            cls.swap(k, j);
+            selected.push(cls[k]);
+        }
+    }
+    // Deterministic shuffle of the merged selection.
+    for k in (1..selected.len()).rev() {
+        let j = (rng.next_u64() as usize) % (k + 1);
+        selected.swap(k, j);
+    }
+
+    let mut images = Vec::with_capacity(selected.len() * ds.dim);
+    let mut labels = Vec::with_capacity(selected.len());
+    for &i in &selected {
+        images.extend_from_slice(ds.image(i));
+        labels.push(ds.labels[i]);
+    }
+    Dataset { images, labels, dim: ds.dim }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synth::{SynthSpec, Synthesizer};
+    use super::*;
+
+    fn pool() -> Dataset {
+        Synthesizer::new(SynthSpec::mnist()).dataset(2000)
+    }
+
+    #[test]
+    fn paper_ratio_256_keeps_24_per_class() {
+        // ceil(60000 / 256 / 10) = 24 — the paper's worked example.
+        let ds = pool();
+        let sub = shrink_subset(&ds, 256, 60_000, 7);
+        let mut counts = [0usize; NUM_CLASSES];
+        for &l in &sub.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 24), "{counts:?}");
+    }
+
+    #[test]
+    fn balanced_at_every_ratio() {
+        let ds = pool();
+        for ratio in [4usize, 16, 64, 1024] {
+            let sub = shrink_subset(&ds, ratio, 60_000, 3);
+            let mut counts = [0usize; NUM_CLASSES];
+            for &l in &sub.labels {
+                counts[l as usize] += 1;
+            }
+            let expect = (60_000 + ratio * 10 - 1) / (ratio * 10);
+            let expect = expect.min(200); // pool has 200 per class
+            assert!(
+                counts.iter().all(|&c| c == expect),
+                "ratio {ratio}: {counts:?} expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn subset_rows_come_from_pool() {
+        let ds = pool();
+        let sub = shrink_subset(&ds, 1024, 60_000, 9);
+        for i in 0..sub.len() {
+            let row = sub.image(i);
+            let found = (0..ds.len()).any(|j| ds.image(j) == row);
+            assert!(found, "subset row {i} not found in pool");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = pool();
+        let a = shrink_subset(&ds, 64, 60_000, 11);
+        let b = shrink_subset(&ds, 64, 60_000, 11);
+        assert_eq!(a.images, b.images);
+        let c = shrink_subset(&ds, 64, 60_000, 12);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn no_duplicates_within_class_selection() {
+        let ds = pool();
+        let sub = shrink_subset(&ds, 64, 60_000, 5);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..sub.len() {
+            let key: Vec<u32> = sub.image(i).iter().map(|f| f.to_bits()).collect();
+            assert!(seen.insert(key), "duplicate row {i} selected");
+        }
+    }
+}

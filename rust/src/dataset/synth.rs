@@ -1,0 +1,262 @@
+//! Native synthetic dataset generator — the same prototype-bump family as
+//! `python/compile/data.py`.
+//!
+//! Not bit-identical to the python generator (different PRNG), but the same
+//! *distribution design*: per-class Gaussian-bump prototypes with partial
+//! inter-class sharing, per-sample shift / brightness / distractor /
+//! noise / occlusion.  Used by unit tests, proptests, the `small_data`
+//! example and the hwsim workload generator, so the rust test suite never
+//! depends on `make artifacts` having run.
+
+use crate::grng::uniform::{SplitMix64, UniformSource};
+use crate::grng::{BoxMuller, Grng, XorShift128Plus};
+
+use super::{Dataset, IMG_DIM, IMG_SIDE, NUM_CLASSES};
+
+/// Generator knobs (mirrors python's `DatasetSpec`).
+#[derive(Debug, Clone, Copy)]
+pub struct SynthSpec {
+    pub seed: u64,
+    pub bumps_per_class: usize,
+    pub noise_sigma: f32,
+    pub occlusion_prob: f32,
+    pub max_shift: i32,
+    pub distractor_bumps: usize,
+    pub shared_bumps: usize,
+}
+
+impl SynthSpec {
+    /// MNIST-surrogate difficulty (python `DatasetSpec.mnist`).
+    pub fn mnist() -> Self {
+        Self {
+            seed: 20_200_601,
+            bumps_per_class: 4,
+            noise_sigma: 0.18,
+            occlusion_prob: 0.08,
+            max_shift: 3,
+            distractor_bumps: 1,
+            shared_bumps: 1,
+        }
+    }
+
+    /// FMNIST-surrogate difficulty (harder).
+    pub fn fmnist() -> Self {
+        Self {
+            seed: 20_200_602,
+            bumps_per_class: 6,
+            noise_sigma: 0.28,
+            occlusion_prob: 0.15,
+            max_shift: 3,
+            distractor_bumps: 2,
+            shared_bumps: 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bump {
+    cy: f32,
+    cx: f32,
+    sy: f32,
+    sx: f32,
+    amp: f32,
+}
+
+impl Bump {
+    fn render_into(&self, img: &mut [f32], weight: f32) {
+        for y in 0..IMG_SIDE {
+            for x in 0..IMG_SIDE {
+                let dy = y as f32 - self.cy;
+                let dx = x as f32 - self.cx;
+                let e = -(dy * dy / (2.0 * self.sy * self.sy)
+                    + dx * dx / (2.0 * self.sx * self.sx));
+                img[y * IMG_SIDE + x] += weight * self.amp * e.exp();
+            }
+        }
+    }
+}
+
+/// Stateful synthesizer: prototypes fixed at construction, samples drawn
+/// on demand.
+pub struct Synthesizer {
+    spec: SynthSpec,
+    prototypes: Vec<[f32; IMG_DIM]>,
+    uni: XorShift128Plus,
+    gauss: BoxMuller<XorShift128Plus>,
+}
+
+impl Synthesizer {
+    pub fn new(spec: SynthSpec) -> Self {
+        let mut seeder = SplitMix64 { state: spec.seed };
+        let mut proto_rng = XorShift128Plus::new(seeder.next());
+        let bump = |rng: &mut XorShift128Plus| Bump {
+            cy: 5.0 + rng.next_f32() * (IMG_SIDE as f32 - 10.0),
+            cx: 5.0 + rng.next_f32() * (IMG_SIDE as f32 - 10.0),
+            sy: 1.5 + rng.next_f32() * 3.0,
+            sx: 1.5 + rng.next_f32() * 3.0,
+            amp: 0.6 + rng.next_f32() * 0.4,
+        };
+        // Private bump sets per class, then mix `shared_bumps` of the next
+        // class in at 0.7 weight — same overlap design as the python side.
+        let private: Vec<Vec<Bump>> = (0..NUM_CLASSES)
+            .map(|_| (0..spec.bumps_per_class).map(|_| bump(&mut proto_rng)).collect())
+            .collect();
+        let mut prototypes = Vec::with_capacity(NUM_CLASSES);
+        for c in 0..NUM_CLASSES {
+            let mut img = [0.0f32; IMG_DIM];
+            for b in &private[c] {
+                b.render_into(&mut img, 1.0);
+            }
+            for b in private[(c + 1) % NUM_CLASSES].iter().take(spec.shared_bumps) {
+                b.render_into(&mut img, 0.7);
+            }
+            let max = img.iter().cloned().fold(1e-6f32, f32::max);
+            for v in img.iter_mut() {
+                *v /= max;
+            }
+            prototypes.push(img);
+        }
+        Self {
+            spec,
+            prototypes,
+            uni: XorShift128Plus::new(seeder.next()),
+            gauss: BoxMuller::new(XorShift128Plus::new(seeder.next())),
+        }
+    }
+
+    /// Prototype for a class (for tests / visualization).
+    pub fn prototype(&self, class: usize) -> &[f32; IMG_DIM] {
+        &self.prototypes[class]
+    }
+
+    /// Render one sample of `class` into `out`.
+    pub fn render(&mut self, class: usize, out: &mut [f32; IMG_DIM]) {
+        let spec = self.spec;
+        let shift_range = (2 * spec.max_shift + 1) as u64;
+        let dy = (self.uni.next_u64() % shift_range) as i32 - spec.max_shift;
+        let dx = (self.uni.next_u64() % shift_range) as i32 - spec.max_shift;
+        let brightness = 0.5 + self.uni.next_f32() * 0.5;
+        let proto = &self.prototypes[class];
+        for y in 0..IMG_SIDE as i32 {
+            for x in 0..IMG_SIDE as i32 {
+                let sy = (y - dy).rem_euclid(IMG_SIDE as i32) as usize;
+                let sx = (x - dx).rem_euclid(IMG_SIDE as i32) as usize;
+                out[(y as usize) * IMG_SIDE + x as usize] =
+                    proto[sy * IMG_SIDE + sx] * brightness;
+            }
+        }
+        for _ in 0..spec.distractor_bumps {
+            let b = Bump {
+                cy: 3.0 + self.uni.next_f32() * (IMG_SIDE as f32 - 6.0),
+                cx: 3.0 + self.uni.next_f32() * (IMG_SIDE as f32 - 6.0),
+                sy: 1.5 + self.uni.next_f32() * 2.0,
+                sx: 1.5 + self.uni.next_f32() * 2.0,
+                amp: 0.3 + self.uni.next_f32() * 0.4,
+            };
+            b.render_into(out, 1.0);
+        }
+        for v in out.iter_mut() {
+            *v += spec.noise_sigma * self.gauss.next();
+        }
+        if self.uni.next_f32() < spec.occlusion_prob {
+            let oy = (self.uni.next_u64() % (IMG_SIDE as u64 - 8)) as usize;
+            let ox = (self.uni.next_u64() % (IMG_SIDE as u64 - 8)) as usize;
+            for y in oy..oy + 8 {
+                for x in ox..ox + 8 {
+                    out[y * IMG_SIDE + x] = 0.0;
+                }
+            }
+        }
+        for v in out.iter_mut() {
+            *v = v.clamp(0.0, 1.0);
+        }
+    }
+
+    /// Generate a class-balanced labelled dataset of `count` samples.
+    pub fn dataset(&mut self, count: usize) -> Dataset {
+        let mut images = Vec::with_capacity(count * IMG_DIM);
+        let mut labels = Vec::with_capacity(count);
+        let mut buf = [0.0f32; IMG_DIM];
+        for i in 0..count {
+            let class = i % NUM_CLASSES;
+            self.render(class, &mut buf);
+            images.extend_from_slice(&buf);
+            labels.push(class as u8);
+        }
+        Dataset { images, labels, dim: IMG_DIM }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prototypes_normalized_and_distinct() {
+        let s = Synthesizer::new(SynthSpec::mnist());
+        for c in 0..NUM_CLASSES {
+            let p = s.prototype(c);
+            let max = p.iter().cloned().fold(0.0f32, f32::max);
+            assert!((max - 1.0).abs() < 1e-5, "class {c} max {max}");
+        }
+        for a in 0..NUM_CLASSES {
+            for b in (a + 1)..NUM_CLASSES {
+                let d: f32 = s
+                    .prototype(a)
+                    .iter()
+                    .zip(s.prototype(b).iter())
+                    .map(|(x, y)| (x - y).abs())
+                    .sum::<f32>()
+                    / IMG_DIM as f32;
+                assert!(d > 0.005, "classes {a},{b} too similar ({d})");
+            }
+        }
+    }
+
+    #[test]
+    fn samples_in_unit_range() {
+        let mut s = Synthesizer::new(SynthSpec::mnist());
+        let ds = s.dataset(50);
+        assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn dataset_balanced_labels() {
+        let mut s = Synthesizer::new(SynthSpec::fmnist());
+        let ds = s.dataset(100);
+        let mut counts = [0usize; NUM_CLASSES];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn samples_noisy_but_class_correlated() {
+        // A sample must correlate better with its own prototype than with
+        // a random other class on average (classifiability smoke test).
+        let mut s = Synthesizer::new(SynthSpec::mnist());
+        let mut own = 0.0f64;
+        let mut other = 0.0f64;
+        let mut buf = [0.0f32; IMG_DIM];
+        for trial in 0..60 {
+            let c = trial % NUM_CLASSES;
+            s.render(c, &mut buf);
+            let dot = |p: &[f32; IMG_DIM], q: &[f32; IMG_DIM]| -> f64 {
+                p.iter().zip(q.iter()).map(|(a, b)| (a * b) as f64).sum()
+            };
+            let p_own = *s.prototype(c);
+            let p_oth = *s.prototype((c + 5) % NUM_CLASSES);
+            own += dot(&buf, &p_own);
+            other += dot(&buf, &p_oth);
+        }
+        assert!(own > other, "own {own} <= other {other}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Synthesizer::new(SynthSpec::mnist());
+        let mut b = Synthesizer::new(SynthSpec::mnist());
+        assert_eq!(a.dataset(20).images, b.dataset(20).images);
+    }
+}

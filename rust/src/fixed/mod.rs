@@ -1,0 +1,14 @@
+//! Fixed-point arithmetic — the hardware number format (paper §V-B2).
+//!
+//! The paper's Verilog designs use 8-bit fixed point; the accuracy drop
+//! from 95.42%→95.35% in Table V is entirely a quantization effect.  This
+//! module provides the generic `Qm.n` signed fixed-point type ([`q::Fx`]),
+//! tensor quantization helpers ([`quantize`]), and the quantized-inference
+//! error analysis used by the `hwsim` functional model and the Table V
+//! accuracy column.
+
+pub mod q;
+pub mod quantize;
+
+pub use q::{Fx, QFormat};
+pub use quantize::{dequantize_vec, quantize_vec, QuantStats};

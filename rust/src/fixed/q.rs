@@ -1,0 +1,201 @@
+//! Signed `Qm.n` fixed-point scalar with saturating arithmetic.
+//!
+//! The paper's accelerator uses 8-bit fixed point.  For the 784-200-200-10
+//! MLP with inputs in [0,1] and weights ~N(μ, σ²) with |μ| ≲ 1, the natural
+//! 8-bit split is Q2.5 (1 sign, 2 integer, 5 fraction bits): range ±4 with
+//! resolution 1/32.  Accumulators are widened to i32 (a real MAC datapath
+//! keeps a wide accumulator and saturates only on writeback), matching the
+//! paper's hardware where only stored activations are 8 bits.
+
+/// A `Qm.n` format descriptor: `int_bits` integer bits + `frac_bits`
+/// fractional bits + 1 sign bit must fit the backing width (8 here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    /// The paper's 8-bit configuration.
+    pub const Q2_5: QFormat = QFormat { int_bits: 2, frac_bits: 5 };
+    /// Wider-range variant for pre-activation accumulators stored at 8 bits.
+    pub const Q4_3: QFormat = QFormat { int_bits: 4, frac_bits: 3 };
+
+    pub const fn total_bits(&self) -> u32 {
+        self.int_bits + self.frac_bits + 1
+    }
+
+    /// Scale factor 2^frac_bits.
+    pub const fn scale(&self) -> i32 {
+        1 << self.frac_bits
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> f32 {
+        (i8::MAX as f32) / self.scale() as f32
+    }
+
+    /// Smallest (most negative) representable value.
+    pub fn min_value(&self) -> f32 {
+        (i8::MIN as f32) / self.scale() as f32
+    }
+
+    /// Quantization step.
+    pub fn resolution(&self) -> f32 {
+        1.0 / self.scale() as f32
+    }
+}
+
+/// An 8-bit fixed-point number in a given [`QFormat`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fx {
+    pub raw: i8,
+    pub fmt: QFormat,
+}
+
+impl Fx {
+    /// Quantize an f32 (round-to-nearest, saturate).
+    pub fn from_f32(v: f32, fmt: QFormat) -> Self {
+        let scaled = (v * fmt.scale() as f32).round();
+        let raw = scaled.clamp(i8::MIN as f32, i8::MAX as f32) as i8;
+        Self { raw, fmt }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.raw as f32 / self.fmt.scale() as f32
+    }
+
+    /// Saturating addition (same format).
+    pub fn sat_add(self, other: Fx) -> Fx {
+        assert_eq!(self.fmt, other.fmt);
+        Fx { raw: self.raw.saturating_add(other.raw), fmt: self.fmt }
+    }
+
+    /// Saturating multiplication: widen to i16, rescale, saturate back.
+    pub fn sat_mul(self, other: Fx) -> Fx {
+        assert_eq!(self.fmt, other.fmt);
+        let wide = (self.raw as i16) * (other.raw as i16);
+        let rescaled = wide >> self.fmt.frac_bits;
+        let raw = rescaled.clamp(i8::MIN as i16, i8::MAX as i16) as i8;
+        Fx { raw, fmt: self.fmt }
+    }
+
+    /// Multiply into a wide i32 accumulator (the MAC datapath primitive):
+    /// the product keeps 2·frac_bits fractional bits, no precision loss.
+    #[inline]
+    pub fn mac_wide(self, other: Fx, acc: i32) -> i32 {
+        acc + (self.raw as i32) * (other.raw as i32)
+    }
+
+    /// Write back a wide accumulator (2·frac_bits) to 8-bit, saturating.
+    pub fn from_accum(acc: i32, fmt: QFormat) -> Fx {
+        let rescaled = acc >> fmt.frac_bits;
+        Fx { raw: rescaled.clamp(i8::MIN as i32, i8::MAX as i32) as i8, fmt }
+    }
+
+    /// ReLU in the quantized domain.
+    pub fn relu(self) -> Fx {
+        Fx { raw: self.raw.max(0), fmt: self.fmt }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F: QFormat = QFormat::Q2_5;
+
+    #[test]
+    fn format_ranges() {
+        assert_eq!(F.total_bits(), 8);
+        assert_eq!(F.scale(), 32);
+        assert!((F.max_value() - 3.96875).abs() < 1e-6);
+        assert!((F.min_value() + 4.0).abs() < 1e-6);
+        assert!((F.resolution() - 0.03125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_within_half_ulp() {
+        for i in -100..=100 {
+            let v = i as f32 * 0.037;
+            let q = Fx::from_f32(v, F);
+            if v.abs() < F.max_value() {
+                assert!(
+                    (q.to_f32() - v).abs() <= F.resolution() / 2.0 + 1e-6,
+                    "v={v} q={}",
+                    q.to_f32()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_at_extremes() {
+        assert_eq!(Fx::from_f32(100.0, F).raw, i8::MAX);
+        assert_eq!(Fx::from_f32(-100.0, F).raw, i8::MIN);
+    }
+
+    #[test]
+    fn sat_add_saturates() {
+        let a = Fx::from_f32(3.9, F);
+        let s = a.sat_add(a);
+        assert_eq!(s.raw, i8::MAX);
+        let b = Fx::from_f32(-3.9, F);
+        assert_eq!(b.sat_add(b).raw, i8::MIN);
+    }
+
+    #[test]
+    fn sat_mul_matches_float_for_small_values() {
+        let a = Fx::from_f32(0.5, F);
+        let b = Fx::from_f32(0.25, F);
+        let p = a.sat_mul(b);
+        assert!((p.to_f32() - 0.125).abs() <= F.resolution());
+    }
+
+    #[test]
+    fn mac_wide_exact() {
+        // Wide accumulation must be exact: sum of raw products.
+        let xs = [0.5f32, -0.25, 1.5, 0.75];
+        let ws = [1.0f32, 0.5, -0.5, 2.0];
+        let mut acc = 0i32;
+        for (&x, &w) in xs.iter().zip(&ws) {
+            acc = Fx::from_f32(x, F).mac_wide(Fx::from_f32(w, F), acc);
+        }
+        let expect: f32 = xs
+            .iter()
+            .zip(&ws)
+            .map(|(&x, &w)| {
+                Fx::from_f32(x, F).to_f32() * Fx::from_f32(w, F).to_f32()
+            })
+            .sum();
+        let got = acc as f32 / (F.scale() * F.scale()) as f32;
+        assert!((got - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_accum_writeback() {
+        // 1.0 * 1.0 accumulated once writes back to 1.0.
+        let one = Fx::from_f32(1.0, F);
+        let acc = one.mac_wide(one, 0);
+        assert!((Fx::from_accum(acc, F).to_f32() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_quantized() {
+        assert_eq!(Fx::from_f32(-1.0, F).relu().raw, 0);
+        let p = Fx::from_f32(1.0, F);
+        assert_eq!(p.relu(), p);
+    }
+
+    #[test]
+    fn saturation_monotone() {
+        // Property: quantization is monotone (order-preserving).
+        let mut prev = i8::MIN;
+        for i in -500..=500 {
+            let v = i as f32 * 0.01;
+            let q = Fx::from_f32(v, F).raw;
+            assert!(q >= prev, "monotonicity broken at {v}");
+            prev = q;
+        }
+    }
+}

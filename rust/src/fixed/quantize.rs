@@ -1,0 +1,95 @@
+//! Tensor quantization helpers + error accounting.
+//!
+//! The hardware evaluation quantizes weights, inputs and activations to
+//! 8-bit fixed point once (offline), then runs the whole inference in the
+//! quantized domain.  `QuantStats` records the error introduced — surfaced
+//! in EXPERIMENTS.md next to the Table V accuracy column.
+
+use super::q::{Fx, QFormat};
+
+/// Quantize a slice into raw i8 values of the given format.
+pub fn quantize_vec(xs: &[f32], fmt: QFormat) -> Vec<i8> {
+    xs.iter().map(|&x| Fx::from_f32(x, fmt).raw).collect()
+}
+
+/// Dequantize raw i8 values back to f32.
+pub fn dequantize_vec(qs: &[i8], fmt: QFormat) -> Vec<f32> {
+    qs.iter().map(|&q| Fx { raw: q, fmt }.to_f32()).collect()
+}
+
+/// Quantization error summary for one tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantStats {
+    /// Mean absolute quantization error.
+    pub mae: f64,
+    /// Max absolute error.
+    pub max_err: f64,
+    /// Fraction of elements that saturated.
+    pub sat_frac: f64,
+}
+
+/// Quantize + measure in one pass.
+pub fn quantize_with_stats(xs: &[f32], fmt: QFormat) -> (Vec<i8>, QuantStats) {
+    let mut mae = 0.0f64;
+    let mut max_err = 0.0f64;
+    let mut sats = 0usize;
+    let qs: Vec<i8> = xs
+        .iter()
+        .map(|&x| {
+            let q = Fx::from_f32(x, fmt);
+            let err = (q.to_f32() - x).abs() as f64;
+            mae += err;
+            if err > max_err {
+                max_err = err;
+            }
+            if q.raw == i8::MAX || q.raw == i8::MIN {
+                sats += 1;
+            }
+            q.raw
+        })
+        .collect();
+    let n = xs.len().max(1) as f64;
+    (qs, QuantStats { mae: mae / n, max_err, sat_frac: sats as f64 / n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F: QFormat = QFormat::Q2_5;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let xs: Vec<f32> = (-60..60).map(|i| i as f32 * 0.05).collect();
+        let (qs, stats) = quantize_with_stats(&xs, F);
+        let back = dequantize_vec(&qs, F);
+        for (x, b) in xs.iter().zip(&back) {
+            assert!((x - b).abs() <= F.resolution() / 2.0 + 1e-6);
+        }
+        assert!(stats.mae <= (F.resolution() / 2.0) as f64);
+        assert_eq!(stats.sat_frac, 0.0);
+    }
+
+    #[test]
+    fn saturation_counted() {
+        let xs = [10.0f32, -10.0, 0.0, 1.0];
+        let (_, stats) = quantize_with_stats(&xs, F);
+        assert!((stats.sat_frac - 0.5).abs() < 1e-9);
+        assert!(stats.max_err > 5.0);
+    }
+
+    #[test]
+    fn quantize_dequantize_vec_consistent() {
+        let xs = [0.1f32, -0.2, 0.33];
+        let qs = quantize_vec(&xs, F);
+        let (qs2, _) = quantize_with_stats(&xs, F);
+        assert_eq!(qs, qs2);
+    }
+
+    #[test]
+    fn empty_slice_safe() {
+        let (qs, stats) = quantize_with_stats(&[], F);
+        assert!(qs.is_empty());
+        assert_eq!(stats.mae, 0.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! CLT (central-limit-theorem) Gaussian generator — the hardware method.
+//!
+//! Sum K independent uniforms; `(sum - K/2) / sqrt(K/12)` converges to
+//! N(0, 1).  The paper (§II) singles this transformation method out as the
+//! most widely used in hardware GRNGs (VIBNN builds exactly this from LFSR
+//! banks: K parallel uniform sources, an adder tree, one subtract/scale).
+//!
+//! K trades tail fidelity for area: K = 12 makes the scale factor exactly 1
+//! (variance of U[0,1) is 1/12) and bounds the output to ±6σ — the classic
+//! hardware choice, and the default here.
+
+use super::uniform::UniformSource;
+use super::Grng;
+
+/// CLT generator over any [`UniformSource`].
+#[derive(Debug, Clone)]
+pub struct CltGrng<U: UniformSource> {
+    src: U,
+    k: u32,
+    inv_sigma: f32,
+    half_k: f32,
+}
+
+impl<U: UniformSource> CltGrng<U> {
+    /// `k` uniforms per output; `k = 12` gives unit scale.
+    pub fn new(src: U, k: u32) -> Self {
+        assert!(k >= 2, "CLT needs at least 2 uniforms");
+        let sigma = ((k as f32) / 12.0).sqrt();
+        Self {
+            src,
+            k,
+            inv_sigma: 1.0 / sigma,
+            half_k: k as f32 / 2.0,
+        }
+    }
+
+    /// The classic 12-uniform configuration.
+    pub fn k12(src: U) -> Self {
+        Self::new(src, 12)
+    }
+
+    /// Hard output bound: the CLT sum cannot exceed ±(K/2)/σ.
+    pub fn max_abs(&self) -> f32 {
+        self.half_k * self.inv_sigma
+    }
+}
+
+impl<U: UniformSource> Grng for CltGrng<U> {
+    #[inline]
+    fn next(&mut self) -> f32 {
+        let mut acc = 0.0f32;
+        for _ in 0..self.k {
+            acc += self.src.next_f32();
+        }
+        (acc - self.half_k) * self.inv_sigma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::uniform::{Lfsr43, XorShift128Plus};
+    use super::super::{ks_statistic_normal, moments};
+    use super::*;
+
+    #[test]
+    fn k12_moments() {
+        let mut g = CltGrng::k12(XorShift128Plus::new(3));
+        let xs = g.sample_vec(200_000);
+        let m = moments(&xs);
+        assert!(m.mean.abs() < 0.01, "mean {:?}", m);
+        assert!((m.var - 1.0).abs() < 0.02, "var {:?}", m);
+        assert!(m.skew.abs() < 0.03, "skew {:?}", m);
+        // CLT k=12 has slightly light tails: kurtosis ≈ -0.1
+        assert!(m.kurtosis.abs() < 0.2, "kurtosis {:?}", m);
+    }
+
+    #[test]
+    fn k12_ks_close_to_normal() {
+        let mut g = CltGrng::k12(XorShift128Plus::new(5));
+        let xs = g.sample_vec(100_000);
+        let d = ks_statistic_normal(&xs);
+        assert!(d < 0.01, "KS statistic {d}");
+    }
+
+    #[test]
+    fn bounded_outputs() {
+        let mut g = CltGrng::new(XorShift128Plus::new(1), 4);
+        let bound = g.max_abs();
+        for _ in 0..100_000 {
+            assert!(g.next().abs() <= bound + 1e-6);
+        }
+    }
+
+    #[test]
+    fn works_over_lfsr_source() {
+        // The hardware-faithful configuration: CLT over the 43-bit LFSR.
+        let mut g = CltGrng::k12(Lfsr43::new(0xACE1));
+        let xs = g.sample_vec(20_000);
+        let m = moments(&xs);
+        assert!(m.mean.abs() < 0.05, "{m:?}");
+        assert!((m.var - 1.0).abs() < 0.1, "{m:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2")]
+    fn rejects_k1() {
+        let _ = CltGrng::new(XorShift128Plus::new(0), 1);
+    }
+}

@@ -1,0 +1,154 @@
+//! Gaussian random number generation — the sampling substrate (paper §II).
+//!
+//! BNN inference consumes standard-normal *uncertainty matrices* `H_k`; the
+//! paper (and VIBNN, its baseline) generates them in hardware with CLT-based
+//! generators over uniform bit sources.  This module provides:
+//!
+//! * [`uniform`] — raw uniform sources: `XorShift128Plus` (software-grade)
+//!   and `Lfsr43` (the hardware-faithful linear-feedback shift register the
+//!   `hwsim` cost model prices).
+//! * [`clt`] — central-limit-theorem generator (sum of K uniforms), the
+//!   "most widely used" transformation method per the paper.
+//! * [`box_muller`] — exact transformation method (reference quality).
+//! * [`ziggurat`] — rejection method, the fastest software path; used by the
+//!   coordinator's hot loop.
+//! * [`pool`] — pre-generated H banks so the serve path never blocks on
+//!   sampling (mirrors VIBNN's deep pipeline that overlaps GRNG with MAC).
+//!
+//! All generators implement [`Grng`] and are deterministic given a seed, so
+//! the DM == standard equivalence tests can pin uncertainty across dataflows.
+
+pub mod box_muller;
+pub mod clt;
+pub mod pool;
+pub mod uniform;
+pub mod ziggurat;
+
+pub use box_muller::BoxMuller;
+pub use clt::CltGrng;
+pub use pool::HPool;
+pub use uniform::{Lfsr43, UniformSource, XorShift128Plus};
+pub use ziggurat::Ziggurat;
+
+/// A standard-Gaussian stream: `next()` ~ N(0, 1).
+pub trait Grng {
+    /// Draw one standard-normal sample.
+    fn next(&mut self) -> f32;
+
+    /// Fill `out` with standard-normal samples.
+    fn fill(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next();
+        }
+    }
+
+    /// Draw an owned vector of `n` samples.
+    fn sample_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.fill(&mut v);
+        v
+    }
+}
+
+/// Statistical summary used by the moment tests (and exposed for the
+/// examples to print).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Moments {
+    pub mean: f64,
+    pub var: f64,
+    pub skew: f64,
+    pub kurtosis: f64,
+}
+
+/// Compute the first four standardized moments of a sample.
+pub fn moments(xs: &[f32]) -> Moments {
+    let n = xs.len() as f64;
+    assert!(n > 1.0, "need at least 2 samples");
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mut m2 = 0.0;
+    let mut m3 = 0.0;
+    let mut m4 = 0.0;
+    for &x in xs {
+        let d = x as f64 - mean;
+        m2 += d * d;
+        m3 += d * d * d;
+        m4 += d * d * d * d;
+    }
+    m2 /= n;
+    m3 /= n;
+    m4 /= n;
+    Moments {
+        mean,
+        var: m2,
+        skew: m3 / m2.powf(1.5),
+        kurtosis: m4 / (m2 * m2) - 3.0,
+    }
+}
+
+/// One-sample Kolmogorov–Smirnov statistic against the standard normal CDF.
+///
+/// Used by the statistical unit tests: for n = 100k samples, a correct
+/// N(0,1) generator yields D well below 0.01.
+pub fn ks_statistic_normal(xs: &[f32]) -> f64 {
+    let mut sorted: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in sorted.iter().enumerate() {
+        let cdf = normal_cdf(x);
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        d = d.max((cdf - lo).abs()).max((hi - cdf).abs());
+    }
+    d
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun erf approximation
+/// (|error| < 1.5e-7 — ample for test thresholds).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_of_constant_fail_variance() {
+        let m = moments(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(m.var, 0.0);
+        assert_eq!(m.mean, 1.0);
+    }
+
+    #[test]
+    fn normal_cdf_symmetry() {
+        for x in [0.0, 0.5, 1.0, 2.0, 3.0] {
+            let s = normal_cdf(x) + normal_cdf(-x);
+            // A&S 7.1.26 approximation: |erf error| < 1.5e-7
+            assert!((s - 1.0).abs() < 1e-6, "cdf symmetry broken at {x}");
+        }
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-6);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ks_statistic_detects_uniform() {
+        // Uniform[0,1) is very much not N(0,1): KS must be large.
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 / 1000.0).collect();
+        assert!(ks_statistic_normal(&xs) > 0.3);
+    }
+}

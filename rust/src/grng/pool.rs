@@ -1,0 +1,295 @@
+//! Pre-generated uncertainty banks (H pools).
+//!
+//! VIBNN hides GRNG latency behind a deep pipeline; the software analogue
+//! is a pool of pre-filled `H` blocks the serving loop pops without
+//! blocking on sampling.  The pool refills itself from a background
+//! producer thread; capacity bounds memory exactly as the paper's SRAM
+//! banks bound the hardware design.
+//!
+//! Determinism note: pooled blocks come from a seeded generator, so a
+//! single-threaded `fill_all + pop*` sequence is reproducible; concurrent
+//! refill interleavings are not (the serving path doesn't need them to be;
+//! the tests that require pinned H build their blocks directly).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::{Grng, Ziggurat};
+use crate::grng::uniform::XorShift128Plus;
+
+/// A fixed-shape block of standard-normal samples (one voter-block H plus
+/// its bias vector Hb, matching the AOT kernel signature).
+#[derive(Debug, Clone)]
+pub struct HBlock {
+    /// (t, m, n) row-major.
+    pub h: Vec<f32>,
+    /// (t, m) row-major.
+    pub hb: Vec<f32>,
+    pub t: usize,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl HBlock {
+    pub fn shape_len(t: usize, m: usize, n: usize) -> (usize, usize) {
+        (t * m * n, t * m)
+    }
+}
+
+/// Bounded pool of pre-generated [`HBlock`]s for one (t, m, n) shape.
+pub struct HPool {
+    t: usize,
+    m: usize,
+    n: usize,
+    inner: Arc<(Mutex<VecDeque<HBlock>>, Condvar)>,
+    capacity: usize,
+    gen: Mutex<Ziggurat<XorShift128Plus>>,
+}
+
+impl HPool {
+    /// New pool for voter blocks of shape (t, m, n) holding up to
+    /// `capacity` blocks, seeded deterministically.
+    pub fn new(t: usize, m: usize, n: usize, capacity: usize, seed: u64) -> Self {
+        assert!(capacity > 0);
+        Self {
+            t,
+            m,
+            n,
+            inner: Arc::new((Mutex::new(VecDeque::new()), Condvar::new())),
+            capacity,
+            gen: Mutex::new(Ziggurat::new(XorShift128Plus::new(seed))),
+        }
+    }
+
+    /// Shape this pool serves.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.t, self.m, self.n)
+    }
+
+    /// Blocks currently buffered.
+    pub fn len(&self) -> usize {
+        self.inner.0.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Generate one block synchronously from the pool's generator.
+    pub fn generate_block(&self) -> HBlock {
+        let (hl, hbl) = HBlock::shape_len(self.t, self.m, self.n);
+        let mut g = self.gen.lock().unwrap();
+        let mut h = vec![0.0f32; hl];
+        let mut hb = vec![0.0f32; hbl];
+        g.fill(&mut h);
+        g.fill(&mut hb);
+        HBlock { h, hb, t: self.t, m: self.m, n: self.n }
+    }
+
+    /// Fill the pool to capacity (call at startup or from a refill thread).
+    pub fn fill_all(&self) {
+        loop {
+            {
+                let q = self.inner.0.lock().unwrap();
+                if q.len() >= self.capacity {
+                    return;
+                }
+            }
+            let block = self.generate_block();
+            let (lock, cv) = &*self.inner;
+            let mut q = lock.lock().unwrap();
+            if q.len() < self.capacity {
+                q.push_back(block);
+                cv.notify_one();
+            }
+        }
+    }
+
+    /// Pop a block; if the pool is dry, generate inline (never blocks the
+    /// serving loop indefinitely).
+    pub fn pop(&self) -> HBlock {
+        {
+            let mut q = self.inner.0.lock().unwrap();
+            if let Some(b) = q.pop_front() {
+                return b;
+            }
+        }
+        self.generate_block()
+    }
+
+    /// Generate-and-push one block if below capacity; returns whether a
+    /// block was added (the refill worker's step function).
+    pub fn refill_one(&self) -> bool {
+        {
+            let q = self.inner.0.lock().unwrap();
+            if q.len() >= self.capacity {
+                return false;
+            }
+        }
+        let block = self.generate_block();
+        let (lock, cv) = &*self.inner;
+        let mut q = lock.lock().unwrap();
+        if q.len() < self.capacity {
+            q.push_back(block);
+            cv.notify_one();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Return a used block's buffers to the pool (refilled with fresh
+    /// samples) — lets the hot loop reuse allocations.
+    pub fn recycle(&self, mut block: HBlock) {
+        {
+            let q = self.inner.0.lock().unwrap();
+            if q.len() >= self.capacity {
+                return; // drop: pool already full
+            }
+        }
+        {
+            let mut g = self.gen.lock().unwrap();
+            g.fill(&mut block.h);
+            g.fill(&mut block.hb);
+        }
+        let (lock, cv) = &*self.inner;
+        let mut q = lock.lock().unwrap();
+        if q.len() < self.capacity {
+            q.push_back(block);
+            cv.notify_one();
+        }
+    }
+}
+
+/// Background refill thread for one pool.  Keeps the pool topped up so
+/// the serving loop's `pop()` almost never generates inline — the
+/// software analogue of VIBNN's GRNG/MAC pipeline overlap.  Stops (and
+/// joins) on drop.
+pub struct RefillWorker {
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RefillWorker {
+    /// Spawn a refill thread over a shared pool.
+    pub fn spawn(pool: Arc<HPool>) -> Self {
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let s = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("bayesdm-grng-refill".into())
+            .spawn(move || {
+                while !s.load(std::sync::atomic::Ordering::Relaxed) {
+                    if !pool.refill_one() {
+                        // full: nap until a consumer drains something
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                }
+            })
+            .expect("spawn grng refill");
+        Self { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for RefillWorker {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::moments;
+
+    #[test]
+    fn pool_fill_and_pop() {
+        let pool = HPool::new(10, 20, 30, 4, 1);
+        pool.fill_all();
+        assert_eq!(pool.len(), 4);
+        let b = pool.pop();
+        assert_eq!(b.h.len(), 10 * 20 * 30);
+        assert_eq!(b.hb.len(), 10 * 20);
+        assert_eq!(pool.len(), 3);
+    }
+
+    #[test]
+    fn pop_when_dry_generates_inline() {
+        let pool = HPool::new(2, 3, 4, 1, 2);
+        assert!(pool.is_empty());
+        let b = pool.pop(); // no fill_all: must not deadlock
+        assert_eq!(b.h.len(), 24);
+    }
+
+    #[test]
+    fn recycle_respects_capacity() {
+        let pool = HPool::new(2, 2, 2, 2, 3);
+        pool.fill_all();
+        let b1 = pool.pop();
+        pool.recycle(b1);
+        assert_eq!(pool.len(), 2);
+        let extra = pool.generate_block();
+        pool.recycle(extra); // already full: dropped
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn pooled_samples_are_standard_normal() {
+        let pool = HPool::new(10, 20, 50, 2, 5);
+        let b = pool.pop();
+        let m = moments(&b.h);
+        assert!(m.mean.abs() < 0.05, "{m:?}");
+        assert!((m.var - 1.0).abs() < 0.1, "{m:?}");
+    }
+
+    #[test]
+    fn blocks_are_distinct() {
+        let pool = HPool::new(2, 4, 4, 2, 6);
+        let a = pool.pop();
+        let b = pool.pop();
+        assert_ne!(a.h, b.h, "consecutive blocks must differ");
+    }
+
+    #[test]
+    fn refill_one_respects_capacity() {
+        let pool = HPool::new(2, 2, 2, 2, 8);
+        assert!(pool.refill_one());
+        assert!(pool.refill_one());
+        assert!(!pool.refill_one(), "must stop at capacity");
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn refill_worker_tops_up_and_stops() {
+        let pool = Arc::new(HPool::new(2, 8, 8, 4, 9));
+        let worker = RefillWorker::spawn(pool.clone());
+        // wait for the worker to fill the pool
+        for _ in 0..200 {
+            if pool.len() == 4 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(pool.len(), 4);
+        let _ = pool.pop();
+        drop(worker); // must join cleanly
+    }
+
+    #[test]
+    fn pop_order_deterministic_single_consumer() {
+        // Same seed => same block sequence, with or without refill races
+        // (a single generator feeds pushes sequentially).
+        let p1 = HPool::new(2, 3, 3, 2, 11);
+        let p2 = Arc::new(HPool::new(2, 3, 3, 2, 11));
+        let worker = RefillWorker::spawn(p2.clone());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        for _ in 0..4 {
+            let a = p1.pop();
+            let b = p2.pop();
+            assert_eq!(a.h, b.h, "pool pop order must be seed-deterministic");
+        }
+        drop(worker);
+    }
+}

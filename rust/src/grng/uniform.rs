@@ -1,0 +1,192 @@
+//! Uniform bit sources underlying the Gaussian generators.
+//!
+//! Two families, matching the two cost regimes in the paper's evaluation:
+//!
+//! * [`XorShift128Plus`] — fast software PRNG, used by the coordinator's
+//!   serving hot path (quality is ample for Monte-Carlo voting).
+//! * [`Lfsr43`] — a 43-bit Fibonacci linear-feedback shift register, the
+//!   canonical hardware uniform source (one XOR + shift per bit).  `hwsim`
+//!   prices the CLT generator as a bank of these, as VIBNN does.
+
+/// A source of uniformly-distributed bits / integers.
+pub trait UniformSource {
+    /// Next 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform f32 in [0, 1): top 24 bits scaled by 2^-24, so the value is
+    /// exactly representable and the mapping is language-portable.
+    fn next_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1): top 53 bits.
+    fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// xorshift128+ (Vigna 2016): 128-bit state, passes BigCrush except MatrixRank.
+#[derive(Debug, Clone)]
+pub struct XorShift128Plus {
+    s0: u64,
+    s1: u64,
+}
+
+impl XorShift128Plus {
+    /// Seed via splitmix64 so that nearby seeds yield uncorrelated states.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64 { state: seed };
+        let s0 = sm.next();
+        let mut s1 = sm.next();
+        if s0 == 0 && s1 == 0 {
+            s1 = 0x9E37_79B9_7F4A_7C15; // all-zero state is absorbing
+        }
+        Self { s0, s1 }
+    }
+}
+
+impl UniformSource for XorShift128Plus {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.s0;
+        let y = self.s1;
+        self.s0 = y;
+        x ^= x << 23;
+        self.s1 = x ^ y ^ (x >> 17) ^ (y >> 26);
+        self.s1.wrapping_add(y)
+    }
+}
+
+/// splitmix64 — seed expander (Steele et al.), also a fine PRNG by itself.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    pub state: u64,
+}
+
+impl SplitMix64 {
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+impl UniformSource for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        SplitMix64::next(self)
+    }
+}
+
+/// 43-bit Fibonacci LFSR with taps (43, 42, 38, 37) — maximal length
+/// (period 2^43 - 1).  This is the hardware-faithful uniform source: one
+/// flip-flop chain plus a 4-input XOR, the unit `hwsim::grng_hw` prices.
+#[derive(Debug, Clone)]
+pub struct Lfsr43 {
+    state: u64, // low 43 bits live
+}
+
+impl Lfsr43 {
+    const MASK: u64 = (1 << 43) - 1;
+
+    /// Seed must leave a nonzero 43-bit state (zero is absorbing).
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed & Self::MASK;
+        if s == 0 {
+            s = 1;
+        }
+        Self { state: s }
+    }
+
+    /// Advance one bit: output the LSB, feed back the XOR of the taps.
+    #[inline]
+    pub fn next_bit(&mut self) -> u64 {
+        let out = self.state & 1;
+        let fb = ((self.state >> 42) ^ (self.state >> 41) ^ (self.state >> 37)
+            ^ (self.state >> 36))
+            & 1;
+        self.state = ((self.state << 1) | fb) & Self::MASK;
+        out
+    }
+}
+
+impl UniformSource for Lfsr43 {
+    /// 64 serial LFSR steps per word — slow in software, but this type
+    /// exists for statistical fidelity tests of the hardware design, not
+    /// for the serving hot path.
+    fn next_u64(&mut self) -> u64 {
+        let mut w = 0u64;
+        for i in 0..64 {
+            w |= self.next_bit() << i;
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_deterministic_and_seed_sensitive() {
+        let mut a = XorShift128Plus::new(1);
+        let mut b = XorShift128Plus::new(1);
+        let mut c = XorShift128Plus::new(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn next_f32_in_unit_interval() {
+        let mut g = XorShift128Plus::new(42);
+        for _ in 0..10_000 {
+            let u = g.next_f32();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut g = XorShift128Plus::new(7);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| g.next_f64()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var {var}");
+    }
+
+    #[test]
+    fn lfsr_period_structure() {
+        // The LFSR must not revisit its seed state quickly and must not
+        // lock at zero.
+        let mut g = Lfsr43::new(0xDEADBEEF);
+        let start = g.state;
+        for _ in 0..10_000 {
+            g.next_bit();
+            assert_ne!(g.state, 0);
+        }
+        assert_ne!(g.state, start);
+    }
+
+    #[test]
+    fn lfsr_zero_seed_recovers() {
+        let mut g = Lfsr43::new(0);
+        assert_ne!(g.state, 0);
+        g.next_bit();
+        assert_ne!(g.state, 0);
+    }
+
+    #[test]
+    fn lfsr_bit_balance() {
+        let mut g = Lfsr43::new(12345);
+        let ones: u64 = (0..100_000).map(|_| g.next_bit()).sum();
+        let frac = ones as f64 / 100_000.0;
+        assert!((frac - 0.5).abs() < 0.01, "bit bias {frac}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Accelerator organizations: the three Table V designs.
+//!
+//! All three share a MAC lane array (each lane: one 8-bit multiplier, one
+//! 8-bit adder, one CLT GRNG), the weight SRAM (μ and σ at 8 bits each)
+//! and ping-pong activation buffers for the voters evaluated in parallel.
+//! They differ exactly where the paper says they do (§V-B2):
+//!
+//! * **Standard** — nothing else.  Best area: one mechanism, no extra
+//!   memory.
+//! * **Hybrid** — layer 1 needs a *different computing mechanism* from the
+//!   other layers, so it instantiates a second (DM) datapath next to the
+//!   standard one, plus the layer-1 β/η bank.  Worst area.
+//! * **DM-BNN** — one DM mechanism shared by all layers (a precompute
+//!   sequencer extends the array) plus per-layer β/η banks sized by α.
+
+use crate::layer_dims;
+
+use super::sram::SramBank;
+use super::units;
+
+/// Which Table V design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Organization {
+    Standard,
+    Hybrid,
+    DmBnn,
+}
+
+impl Organization {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Organization::Standard => "Standard BNN",
+            Organization::Hybrid => "Hybrid-BNN",
+            Organization::DmBnn => "DM-BNN",
+        }
+    }
+}
+
+/// A concrete accelerator instance.
+#[derive(Debug, Clone)]
+pub struct AcceleratorConfig {
+    pub org: Organization,
+    /// Network architecture, e.g. [784, 200, 200, 10].
+    pub arch: Vec<usize>,
+    /// Parallel MAC lanes.
+    pub lanes: usize,
+    /// Memory-friendly blocking factor α ∈ (0, 1] (Fig 5 / Fig 7).
+    pub alpha: f64,
+    /// Voters evaluated simultaneously (αT in the paper's framing).
+    pub voters_parallel: usize,
+}
+
+impl AcceleratorConfig {
+    /// The paper's Table V design point for a given organization:
+    /// 784-200-200-10, α = 0.1, T = 100 ⇒ 10 voters in flight.
+    pub fn paper_table5(org: Organization) -> Self {
+        Self {
+            org,
+            arch: crate::MNIST_ARCH.to_vec(),
+            lanes: 256,
+            alpha: 0.1,
+            voters_parallel: 10,
+        }
+    }
+
+    fn dims(&self) -> Vec<(usize, usize)> {
+        layer_dims(&self.arch)
+    }
+
+    /// Weight store: μ and σ at 1 byte each, plus biases.
+    pub fn weight_sram(&self) -> SramBank {
+        let words: usize = self.dims().iter().map(|(m, n)| m * n + m).sum();
+        SramBank::new(2 * words as u64)
+    }
+
+    /// β/η banks.  Hybrid: layer 1 only.  DM: one bank per layer.  The β
+    /// slice held at once is α·M·N (Fig 5); η is α-independent (M words).
+    pub fn beta_srams(&self) -> Vec<SramBank> {
+        let per_layer = |m: usize, n: usize| {
+            let beta = (self.alpha * (m * n) as f64).ceil() as u64;
+            SramBank::new(beta + m as u64)
+        };
+        match self.org {
+            Organization::Standard => vec![],
+            Organization::Hybrid => {
+                let (m, n) = self.dims()[0];
+                vec![per_layer(m, n)]
+            }
+            Organization::DmBnn => {
+                self.dims().iter().map(|&(m, n)| per_layer(m, n)).collect()
+            }
+        }
+    }
+
+    /// Activation ping-pong buffers: 2 × voters_parallel × max layer width.
+    pub fn activation_sram(&self) -> SramBank {
+        let max_m = self.dims().iter().map(|&(m, _)| m).max().unwrap_or(0);
+        SramBank::new((2 * self.voters_parallel * max_m) as u64)
+    }
+
+    /// MAC lane array area (mm²): multiplier + adder + GRNG per lane.
+    pub fn pe_array_area_mm2(&self) -> f64 {
+        self.lanes as f64
+            * (units::MUL8_AREA_UM2 + units::ADD8_AREA_UM2 + units::GRNG_AREA_UM2)
+            / 1e6
+    }
+
+    /// Extra datapath area beyond the shared lane array.
+    ///
+    /// * Hybrid: a full second lane array — the DM mechanism for layer 1
+    ///   cannot share hardware with the standard mechanism of layers ≥ 2
+    ///   (the paper's stated reason its area is worst).
+    /// * DM: a precompute sequencer + writeback path, ~25 % of the array —
+    ///   the mechanism is shared across layers, only the front-end grows.
+    pub fn datapath_overhead_mm2(&self) -> f64 {
+        match self.org {
+            Organization::Standard => 0.0,
+            Organization::Hybrid => self.pe_array_area_mm2(),
+            Organization::DmBnn => 0.25 * self.pe_array_area_mm2(),
+        }
+    }
+
+    /// Total die area (mm²) including control overhead.
+    pub fn area_mm2(&self) -> f64 {
+        let core = self.pe_array_area_mm2()
+            + self.datapath_overhead_mm2()
+            + self.weight_sram().area_mm2()
+            + self.activation_sram().area_mm2()
+            + self.beta_srams().iter().map(|b| b.area_mm2()).sum::<f64>();
+        core * (1.0 + units::CONTROL_AREA_OVERHEAD)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_area_ordering() {
+        // Paper Table V: Standard (5.76) < DM (6.63) < Hybrid (7.33).
+        let std = AcceleratorConfig::paper_table5(Organization::Standard).area_mm2();
+        let hyb = AcceleratorConfig::paper_table5(Organization::Hybrid).area_mm2();
+        let dm = AcceleratorConfig::paper_table5(Organization::DmBnn).area_mm2();
+        assert!(std < dm, "standard {std} !< dm {dm}");
+        assert!(dm < hyb, "dm {dm} !< hybrid {hyb}");
+    }
+
+    #[test]
+    fn dm_area_overhead_in_paper_band() {
+        // Paper: DM +14 %, Hybrid +27 % at α = 0.1.  Our calibration must
+        // land in the same regime (a few to a few-tens of percent, with
+        // Hybrid strictly worse).
+        let std = AcceleratorConfig::paper_table5(Organization::Standard).area_mm2();
+        let dm = AcceleratorConfig::paper_table5(Organization::DmBnn).area_mm2();
+        let hyb = AcceleratorConfig::paper_table5(Organization::Hybrid).area_mm2();
+        let dm_ovh = dm / std - 1.0;
+        let hyb_ovh = hyb / std - 1.0;
+        assert!(dm_ovh > 0.02 && dm_ovh < 0.30, "dm overhead {dm_ovh}");
+        assert!(hyb_ovh > dm_ovh && hyb_ovh < 0.60, "hybrid overhead {hyb_ovh}");
+    }
+
+    #[test]
+    fn area_monotone_in_alpha() {
+        // Fig 7: smaller α ⇒ smaller area.
+        let mut prev = f64::INFINITY;
+        for alpha in [1.0, 0.5, 0.2, 0.1, 0.05] {
+            let mut c = AcceleratorConfig::paper_table5(Organization::DmBnn);
+            c.alpha = alpha;
+            let a = c.area_mm2();
+            assert!(a < prev, "area not monotone at alpha={alpha}: {a} vs {prev}");
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn absolute_area_plausible_45nm() {
+        // The paper's designs are 5.76–7.33 mm²; our calibrated model
+        // should land within ~3× (same order of magnitude).
+        let a = AcceleratorConfig::paper_table5(Organization::Standard).area_mm2();
+        assert!(a > 1.0 && a < 20.0, "standard area {a} mm2");
+    }
+
+    #[test]
+    fn beta_banks_per_org() {
+        assert_eq!(
+            AcceleratorConfig::paper_table5(Organization::Standard).beta_srams().len(),
+            0
+        );
+        assert_eq!(
+            AcceleratorConfig::paper_table5(Organization::Hybrid).beta_srams().len(),
+            1
+        );
+        assert_eq!(
+            AcceleratorConfig::paper_table5(Organization::DmBnn).beta_srams().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn weight_sram_sized_by_network() {
+        let c = AcceleratorConfig::paper_table5(Organization::Standard);
+        // 2 bytes per (weight + bias) posterior parameter pair
+        let words = 784 * 200 + 200 + 200 * 200 + 200 + 200 * 10 + 10;
+        assert_eq!(c.weight_sram().bytes, 2 * words as u64);
+    }
+}

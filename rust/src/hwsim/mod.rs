@@ -1,0 +1,34 @@
+//! Hardware cost simulator — the substitution for the paper's Verilog +
+//! Synopsys DC + 45 nm FreePDK + CACTI toolchain (DESIGN.md §3).
+//!
+//! The paper evaluates three accelerator organizations (Standard,
+//! Hybrid-BNN, DM-BNN) for area (mm²), energy (µJ) and runtime (µs) on
+//! one MNIST inference (Table V), plus the area-vs-α sweep of the
+//! memory-friendly framework (Fig 7).  Those numbers decompose as
+//!
+//! ```text
+//!   runtime = weighted cycles / (lanes × f_clk)   (+ memory stalls)
+//!   energy  = Σ op_count × op_energy  +  Σ sram_accesses × access_energy
+//!             + leakage × runtime
+//!   area    = PE array + SRAM macros + GRNG bank + control overhead
+//! ```
+//!
+//! [`units`] holds the 45 nm-calibrated unit costs (Horowitz ISSCC'14 for
+//! arithmetic, a CACTI-style macro model in [`sram`]); [`arch`] composes
+//! them into the three organizations; [`sim`] runs a method's op/access
+//! trace through an organization; [`report`] renders Table V and Fig 7.
+//!
+//! Absolute values are *calibrated estimates* — the claims preserved are
+//! the paper's ratios: DM-BNN ≈ −73 % energy, ≈ 4× speedup, ≈ +14 % area
+//! at α = 0.1; Hybrid worst in area because its first layer needs a
+//! second datapath mechanism; area monotone decreasing with α.
+
+pub mod arch;
+pub mod report;
+pub mod sim;
+pub mod sram;
+pub mod units;
+
+pub use arch::{AcceleratorConfig, Organization};
+pub use report::{fig7_rows, table5_rows, Fig7Row, Table5Row};
+pub use sim::{simulate, HwReport};

@@ -1,0 +1,117 @@
+//! Table V and Fig 7 renderers.
+
+use super::arch::{AcceleratorConfig, Organization};
+use super::sim::{simulate, HwReport};
+
+/// One Table V row (accuracy is measured separately by the quantized
+/// functional model in `nn::fixed_infer` and passed in by the caller).
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    pub method: String,
+    pub accuracy: Option<f64>,
+    pub area_mm2: f64,
+    pub energy_uj: f64,
+    pub runtime_us: f64,
+}
+
+/// Simulate the three paper design points (α = 0.1).
+pub fn table5_rows(accuracy: &[Option<f64>; 3]) -> Vec<Table5Row> {
+    [Organization::Standard, Organization::Hybrid, Organization::DmBnn]
+        .iter()
+        .zip(accuracy)
+        .map(|(&org, &acc)| {
+            let r: HwReport = simulate(&AcceleratorConfig::paper_table5(org), false);
+            Table5Row {
+                method: org.name().to_string(),
+                accuracy: acc,
+                area_mm2: r.area_mm2,
+                energy_uj: r.energy_uj,
+                runtime_us: r.runtime_us,
+            }
+        })
+        .collect()
+}
+
+/// Render Table V with relative columns (the paper's claims are ratios).
+pub fn render_table5(rows: &[Table5Row]) -> String {
+    let mut s = String::new();
+    s.push_str("Table V — hardware implementation results (45 nm model, α = 0.1)\n");
+    s.push_str(&format!(
+        "  {:<14} {:>9} {:>11} {:>12} {:>12} {:>9} {:>9}\n",
+        "Method", "Accuracy", "Area (mm²)", "Energy (µJ)", "Runtime (µs)", "E-red.", "Speedup"
+    ));
+    let base = &rows[0];
+    for r in rows {
+        let acc = r
+            .accuracy
+            .map(|a| format!("{:.2}%", 100.0 * a))
+            .unwrap_or_else(|| "--".into());
+        s.push_str(&format!(
+            "  {:<14} {:>9} {:>11.2} {:>12.1} {:>12.1} {:>8.0}% {:>8.2}x\n",
+            r.method,
+            acc,
+            r.area_mm2,
+            r.energy_uj,
+            r.runtime_us,
+            100.0 * (1.0 - r.energy_uj / base.energy_uj),
+            base.runtime_us / r.runtime_us,
+        ));
+    }
+    s
+}
+
+/// One Fig 7 point: α vs system area.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig7Row {
+    pub alpha: f64,
+    pub area_mm2: f64,
+}
+
+/// Sweep α for the DM-BNN organization (Fig 7).
+pub fn fig7_rows(alphas: &[f64]) -> Vec<Fig7Row> {
+    alphas
+        .iter()
+        .map(|&alpha| {
+            let mut cfg = AcceleratorConfig::paper_table5(Organization::DmBnn);
+            cfg.alpha = alpha;
+            Fig7Row { alpha, area_mm2: cfg.area_mm2() }
+        })
+        .collect()
+}
+
+/// Render Fig 7 as an ASCII series (value column + bar).
+pub fn render_fig7(rows: &[Fig7Row]) -> String {
+    let mut s = String::new();
+    s.push_str("Fig 7 — system area vs α (DM-BNN organization)\n");
+    let max = rows.iter().map(|r| r.area_mm2).fold(0.0f64, f64::max);
+    for r in rows {
+        let bar = "#".repeat(((r.area_mm2 / max) * 40.0).round() as usize);
+        s.push_str(&format!("  α={:<5} {:>8.3} mm²  {}\n", r.alpha, r.area_mm2, bar));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_rows_complete() {
+        let rows = table5_rows(&[Some(0.9542), Some(0.9542), Some(0.9535)]);
+        assert_eq!(rows.len(), 3);
+        assert!(rows[2].energy_uj < rows[0].energy_uj);
+        let txt = render_table5(&rows);
+        assert!(txt.contains("DM-BNN"));
+        assert!(txt.contains("95.42%"));
+    }
+
+    #[test]
+    fn fig7_monotone_series() {
+        let rows = fig7_rows(&[1.0, 0.5, 0.2, 0.1, 0.05]);
+        for w in rows.windows(2) {
+            assert!(w[1].area_mm2 < w[0].area_mm2);
+        }
+        let txt = render_fig7(&rows);
+        assert!(txt.contains("α=1"));
+    }
+}

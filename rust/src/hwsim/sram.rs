@@ -1,0 +1,96 @@
+//! CACTI-style SRAM macro model (45 nm).
+//!
+//! The paper uses CACTI [46] for memory area/energy.  This is a compact
+//! analytic stand-in: bit-cell array + peripheral overhead that grows
+//! with capacity (sense amps, decoders), and access energy with a
+//! capacity-dependent wordline/bitline term.  Constants chosen to sit in
+//! the published CACTI 6.0 45 nm range for 8–512 KB scratchpads.
+
+/// 45 nm 6T bit-cell area (µm²/bit), including array efficiency.
+const BITCELL_UM2: f64 = 0.45;
+/// Fixed peripheral area per macro (µm²).
+const MACRO_FIXED_UM2: f64 = 15_000.0;
+/// Peripheral area fraction (decoders/sense amps) relative to the array.
+const PERIPHERAL_FRAC: f64 = 0.35;
+
+/// Base dynamic read energy per byte (pJ) for a small macro...
+const READ_PJ_PER_BYTE_BASE: f64 = 0.8;
+/// ...plus this much per log2(KB) of capacity (longer bitlines).
+const READ_PJ_PER_BYTE_LOG: f64 = 0.25;
+/// Writes cost slightly more than reads.
+const WRITE_FACTOR: f64 = 1.2;
+
+/// One SRAM bank of a given byte capacity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramBank {
+    pub bytes: u64,
+}
+
+impl SramBank {
+    pub fn new(bytes: u64) -> Self {
+        Self { bytes }
+    }
+
+    /// Macro area in mm².
+    pub fn area_mm2(&self) -> f64 {
+        if self.bytes == 0 {
+            return 0.0;
+        }
+        let array = self.bytes as f64 * 8.0 * BITCELL_UM2;
+        (array * (1.0 + PERIPHERAL_FRAC) + MACRO_FIXED_UM2) / 1e6
+    }
+
+    /// Dynamic read energy for one byte (pJ).
+    pub fn read_energy_pj_per_byte(&self) -> f64 {
+        let kb = (self.bytes as f64 / 1024.0).max(1.0);
+        READ_PJ_PER_BYTE_BASE + READ_PJ_PER_BYTE_LOG * kb.log2().max(0.0)
+    }
+
+    /// Dynamic write energy for one byte (pJ).
+    pub fn write_energy_pj_per_byte(&self) -> f64 {
+        self.read_energy_pj_per_byte() * WRITE_FACTOR
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_monotone_in_capacity() {
+        let a = SramBank::new(16 * 1024).area_mm2();
+        let b = SramBank::new(64 * 1024).area_mm2();
+        let c = SramBank::new(256 * 1024).area_mm2();
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn area_in_cacti_45nm_ballpark() {
+        // CACTI 6.0 45 nm: a 256 KB scratchpad is on the order of 1 mm².
+        let a = SramBank::new(256 * 1024).area_mm2();
+        assert!(a > 0.3 && a < 3.0, "256KB area {a} mm2");
+        // 400 KB (the paper's weight store) should be 1–5 mm².
+        let w = SramBank::new(400 * 1024).area_mm2();
+        assert!(w > 0.5 && w < 5.0, "400KB area {w} mm2");
+    }
+
+    #[test]
+    fn read_energy_grows_with_capacity() {
+        let small = SramBank::new(8 * 1024).read_energy_pj_per_byte();
+        let big = SramBank::new(512 * 1024).read_energy_pj_per_byte();
+        assert!(big > small);
+        assert!(small >= 0.8 && big < 5.0);
+    }
+
+    #[test]
+    fn zero_bank_is_free() {
+        let z = SramBank::new(0);
+        assert_eq!(z.area_mm2(), 0.0);
+    }
+
+    #[test]
+    fn writes_cost_more() {
+        let b = SramBank::new(32 * 1024);
+        assert!(b.write_energy_pj_per_byte() > b.read_energy_pj_per_byte());
+    }
+}

@@ -1,0 +1,55 @@
+//! 45 nm unit-cost constants.
+//!
+//! Arithmetic energies/areas follow Horowitz, "Computing's energy problem
+//! (and what we can do about it)", ISSCC 2014 (45 nm, 0.9 V): 8-bit add
+//! 0.03 pJ / 36 µm², 8-bit multiply 0.2 pJ / 282 µm².  The paper's cycle
+//! model (§III-C1) is kept verbatim: ADD = 1 cycle, MUL = 2 cycles.
+//! Clock and leakage are representative of 45 nm embedded accelerators.
+
+/// Energy of one 8-bit fixed-point addition (pJ).
+pub const ADD8_ENERGY_PJ: f64 = 0.03;
+/// Energy of one 8-bit fixed-point multiplication (pJ).
+pub const MUL8_ENERGY_PJ: f64 = 0.2;
+/// Area of one 8-bit adder (µm²).
+pub const ADD8_AREA_UM2: f64 = 36.0;
+/// Area of one 8-bit multiplier (µm²).
+pub const MUL8_AREA_UM2: f64 = 282.0;
+
+/// Paper cycle model: one addition per cycle...
+pub const ADD_CYCLES: u64 = 1;
+/// ...and one multiplication per two cycles.
+pub const MUL_CYCLES: u64 = 2;
+
+/// Accelerator clock (MHz) — representative 45 nm embedded design point.
+pub const CLOCK_MHZ: f64 = 200.0;
+
+/// Leakage power per mm² of logic+SRAM at 45 nm (mW/mm²).
+pub const LEAKAGE_MW_PER_MM2: f64 = 1.5;
+
+/// CLT-12 GRNG: 12 LFSR taps + adder tree folded into one sample cost.
+/// Energy per Gaussian sample (pJ) and area per generator (µm²).
+pub const GRNG_SAMPLE_ENERGY_PJ: f64 = 0.4;
+pub const GRNG_AREA_UM2: f64 = 1200.0;
+
+/// Control / NoC / pipeline-register overhead as a fraction of core area.
+pub const CONTROL_AREA_OVERHEAD: f64 = 0.20;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_costs_more_than_add() {
+        assert!(MUL8_ENERGY_PJ > ADD8_ENERGY_PJ);
+        assert!(MUL8_AREA_UM2 > ADD8_AREA_UM2);
+        assert_eq!(MUL_CYCLES, 2 * ADD_CYCLES);
+    }
+
+    #[test]
+    fn sane_magnitudes() {
+        // Guard against unit slips (pJ vs nJ, µm² vs mm²).
+        assert!(MUL8_ENERGY_PJ < 1.0);
+        assert!(MUL8_AREA_UM2 < 1e4);
+        assert!(CLOCK_MHZ >= 50.0 && CLOCK_MHZ <= 2000.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! # bayesdm — Feature Decomposition & Memorization for BNN inference
+//!
+//! Production-quality reproduction of *"Efficient Computation Reduction in
+//! Bayesian Neural Networks through Feature Decomposition and Memorization"*
+//! (Jia et al., 2020).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (DM pre-compute, line-wise voter feed-forward,
+//!   standard sampled-weight baseline), authored in `python/compile/kernels/`
+//!   and AOT-lowered to HLO text.
+//! * **L2** — the JAX BNN model graphs assembling those kernels
+//!   (`python/compile/model.py`), trained once by Bayes-by-backprop.
+//! * **L3** — this crate: loads the HLO artifacts through the PJRT C API
+//!   ([`runtime`]), owns the Gaussian uncertainty sampling ([`grng`]), and
+//!   schedules the paper's three inference dataflows — Standard, Hybrid-BNN
+//!   and DM-BNN, including the memory-friendly α-blocked execution of Fig 5 —
+//!   in [`coordinator`].  Python never runs on the request path.
+//!
+//! Besides the coordinator, the crate contains every substrate the paper's
+//! evaluation depends on:
+//!
+//! * [`grng`] — Gaussian random number generators (CLT sum-of-uniforms as in
+//!   the paper's hardware, Box-Muller, Ziggurat) over xorshift/LFSR sources.
+//! * [`fixed`] — 8-bit fixed-point arithmetic used by the hardware evaluation.
+//! * [`dataset`] — synthetic MNIST/FMNIST surrogates + the shrink-ratio
+//!   protocol of Fig 6 (loader for the python-generated binaries included).
+//! * [`nn`] — a pure-rust reference BNN (f32 and fixed-point) used as the
+//!   oracle for the PJRT path and as the functional model inside `hwsim`.
+//! * [`opcount`] — the analytic + instrumented operation-count model behind
+//!   Table III and Table IV.
+//! * [`hwsim`] — a cycle/energy/area model of the paper's 45 nm accelerator
+//!   (MAC datapath, CACTI-style SRAM, CLT GRNG cost) regenerating Table V
+//!   and Fig 7.
+//!
+//! See `DESIGN.md` for the full experiment index and `EXPERIMENTS.md` for the
+//! measured-vs-paper numbers.
+
+pub mod coordinator;
+pub mod dataset;
+pub mod util;
+pub mod fixed;
+pub mod grng;
+pub mod hwsim;
+pub mod nn;
+pub mod opcount;
+pub mod runtime;
+
+/// The paper's MNIST architecture (§V-B): 3-layer fully-connected MLP.
+pub const MNIST_ARCH: [usize; 4] = [784, 200, 200, 10];
+
+/// Per-layer (M, N) = (out, in) dimensions for an architecture slice.
+pub fn layer_dims(arch: &[usize]) -> Vec<(usize, usize)> {
+    arch.windows(2).map(|w| (w[1], w[0])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_dims_paper_arch() {
+        assert_eq!(
+            layer_dims(&MNIST_ARCH),
+            vec![(200, 784), (200, 200), (10, 200)]
+        );
+    }
+
+    #[test]
+    fn layer_dims_empty_and_single() {
+        assert!(layer_dims(&[5]).is_empty());
+        assert!(layer_dims(&[]).is_empty());
+    }
+}

@@ -1,0 +1,238 @@
+//! `bayesdm` CLI — the leader entrypoint of the L3 coordinator.
+//!
+//! Subcommands map 1:1 to the paper's experiments (see DESIGN.md §5):
+//!
+//! * `serve`   — run the router/batcher over the test set and report
+//!   latency/throughput (the end-to-end driver).
+//! * `eval`    — test-set accuracy of a method through the PJRT path.
+//! * `tables`  — print Table III / IV / V reproductions.
+//! * `fig6`    — render the accuracy-vs-shrink-ratio curves from
+//!   `artifacts/fig6.json` (built by `make fig6`).
+//! * `hwsweep` — Fig 7: area vs α.
+//! * `plan`    — show a method's artifact dispatch schedule.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use bayesdm::coordinator::plan::{InferenceMethod, PlanSummary};
+use bayesdm::coordinator::{serve, Executor, ServerConfig};
+use bayesdm::dataset::{load_images, load_weights};
+use bayesdm::grng::uniform::XorShift128Plus;
+use bayesdm::grng::Ziggurat;
+use bayesdm::hwsim::report::{fig7_rows, render_fig7, render_table5, table5_rows};
+use bayesdm::nn::bnn::{BnnModel, Method as NnMethod};
+use bayesdm::nn::fixed_infer::QBnnModel;
+use bayesdm::opcount::report::{render_table3, render_table4, table4_rows};
+use bayesdm::runtime::Engine;
+use bayesdm::util::cli::Args;
+use bayesdm::util::Json;
+use bayesdm::MNIST_ARCH;
+
+const USAGE: &str = "\
+bayesdm — DM-BNN inference coordinator (Jia et al. 2020 reproduction)
+
+USAGE: bayesdm [--artifacts DIR] <subcommand> [flags]
+
+SUBCOMMANDS:
+  serve    --method M --requests N --alpha A --max-batch B --workers W
+  eval     --method M --limit N --alpha A
+  tables   --table {3|4|5} [--limit N]
+  fig6
+  hwsweep
+  plan     --method M --alpha A
+
+methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)";
+
+fn parse_method(s: &str, alpha: f64) -> Result<InferenceMethod> {
+    InferenceMethod::parse(s, alpha)
+        .with_context(|| format!("unknown method `{s}` (standard|hybrid|dm)"))
+}
+
+fn build_executor(artifacts: &str) -> Result<Executor> {
+    let engine = Engine::new(artifacts)?;
+    let weights = load_weights(format!("{artifacts}/weights_mnist_bnn.bin"))
+        .context("loading posterior — run `make artifacts`")?;
+    Executor::new(engine, weights, 0xBA135)
+}
+
+fn main() -> Result<()> {
+    let mut args = Args::parse(std::env::args()).map_err(|e| anyhow::anyhow!(e))?;
+    let artifacts = args.get("artifacts", "artifacts");
+    let sub = match args.subcommand.clone() {
+        Some(s) => s,
+        None => {
+            println!("{USAGE}");
+            return Ok(());
+        }
+    };
+    match sub.as_str() {
+        "serve" => {
+            let method = args.get("method", "dm");
+            let requests: usize = args.get_parse("requests", 200).map_err(anyhow::Error::msg)?;
+            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(anyhow::Error::msg)?;
+            let max_batch: usize = args.get_parse("max-batch", 8).map_err(anyhow::Error::msg)?;
+            let workers: usize = args.get_parse("workers", 2).map_err(anyhow::Error::msg)?;
+            args.finish().map_err(anyhow::Error::msg)?;
+            let m = parse_method(&method, alpha)?;
+            let test = load_images(format!("{artifacts}/data_mnist_test.bin"))?;
+            let art_dir = artifacts.clone();
+            let handle = serve(
+                move || build_executor(&art_dir),
+                ServerConfig { max_batch, workers, ..ServerConfig::default() },
+            );
+            let n = requests.min(test.len());
+            let t0 = Instant::now();
+            let mut pending = Vec::with_capacity(n);
+            for i in 0..n {
+                pending.push((
+                    test.labels[i],
+                    handle
+                        .classify(test.image(i).to_vec(), m.clone())
+                        .map_err(anyhow::Error::msg)?,
+                ));
+            }
+            let mut correct = 0usize;
+            for (label, p) in pending {
+                match p.wait() {
+                    Ok(r) if r.class == label as usize => correct += 1,
+                    Ok(_) => {}
+                    Err(e) => eprintln!("request failed: {e}"),
+                }
+            }
+            let dt = t0.elapsed();
+            println!(
+                "served {n} requests in {:.2}s  ({:.1} req/s)  accuracy {:.2}%",
+                dt.as_secs_f64(),
+                n as f64 / dt.as_secs_f64(),
+                100.0 * correct as f64 / n as f64
+            );
+            println!("metrics: {}", handle.metrics.summary());
+            handle.shutdown();
+        }
+        "eval" => {
+            let method = args.get("method", "dm");
+            let limit: usize = args.get_parse("limit", 500).map_err(anyhow::Error::msg)?;
+            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(anyhow::Error::msg)?;
+            args.finish().map_err(anyhow::Error::msg)?;
+            let m = parse_method(&method, alpha)?;
+            let exec = build_executor(&artifacts)?;
+            let test = load_images(format!("{artifacts}/data_mnist_test.bin"))?;
+            let n = limit.min(test.len());
+            let t0 = Instant::now();
+            let acc = exec.accuracy(&test.images[..n * test.dim], &test.labels[..n], &m)?;
+            println!(
+                "method={method} voters={} n={n} accuracy={:.2}% ({:.2}s, {:.1} ms/img)",
+                m.voters(),
+                100.0 * acc,
+                t0.elapsed().as_secs_f64(),
+                t0.elapsed().as_millis() as f64 / n as f64
+            );
+        }
+        "tables" => {
+            let table: u8 = args.get_parse("table", 0).map_err(anyhow::Error::msg)?;
+            let limit: usize = args.get_parse("limit", 300).map_err(anyhow::Error::msg)?;
+            args.finish().map_err(anyhow::Error::msg)?;
+            match table {
+                3 => {
+                    println!("{}", render_table3(200, 784, 100));
+                    println!("{}", render_table3(200, 784, 1000));
+                }
+                4 => {
+                    let rows = table4_rows();
+                    let accs = measure_accuracies(&artifacts, limit, false)?;
+                    println!("{}", render_table4(&rows, &accs));
+                }
+                5 => {
+                    let accs = measure_accuracies(&artifacts, limit, true)?;
+                    let rows = table5_rows(&[accs[0], accs[1], accs[2]]);
+                    println!("{}", render_table5(&rows));
+                }
+                _ => bail!("tables 3, 4 and 5 are available (--table N)"),
+            }
+        }
+        "fig6" => {
+            args.finish().map_err(anyhow::Error::msg)?;
+            let path = format!("{artifacts}/fig6.json");
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("{path} missing — run `make fig6`"))?;
+            let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("Fig 6 — NN vs BNN accuracy vs shrink ratio");
+            let datasets = v
+                .get("datasets")
+                .and_then(Json::as_obj)
+                .context("fig6.json missing datasets")?;
+            for (ds, curve) in datasets {
+                println!("  dataset {ds}:");
+                let nn = curve.get("nn").and_then(Json::as_obj).context("nn curve")?;
+                let bnn = curve.get("bnn").and_then(Json::as_obj).context("bnn curve")?;
+                let mut ratios: Vec<usize> =
+                    nn.keys().filter_map(|k| k.parse().ok()).collect();
+                ratios.sort_unstable();
+                for r in ratios {
+                    let a = nn[&r.to_string()].as_f64().unwrap_or(0.0);
+                    let b = bnn[&r.to_string()].as_f64().unwrap_or(0.0);
+                    println!(
+                        "    ratio {r:>5}: NN {:6.2}%  BNN {:6.2}%  (Δ {:+.2})",
+                        100.0 * a,
+                        100.0 * b,
+                        100.0 * (b - a)
+                    );
+                }
+            }
+        }
+        "hwsweep" => {
+            args.finish().map_err(anyhow::Error::msg)?;
+            let rows = fig7_rows(&[1.0, 0.8, 0.6, 0.5, 0.4, 0.3, 0.2, 0.1, 0.05]);
+            println!("{}", render_fig7(&rows));
+        }
+        "plan" => {
+            let method = args.get("method", "dm");
+            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(anyhow::Error::msg)?;
+            args.finish().map_err(anyhow::Error::msg)?;
+            let m = parse_method(&method, alpha)?;
+            let p = PlanSummary::build(&MNIST_ARCH, &m, 10);
+            println!("plan for {} ({} voters):", p.method, p.voters);
+            for (name, count) in &p.dispatches {
+                println!("  {count:>5} × {name}");
+            }
+            println!("  total dispatches/request: {}", p.total_dispatches());
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+/// Measure the three methods' accuracies with the pure-rust reference
+/// models (f32 for Table IV, 8-bit fixed for Table V) over `limit` test
+/// images.
+fn measure_accuracies(
+    artifacts: &str,
+    limit: usize,
+    quantized: bool,
+) -> Result<[Option<f64>; 3]> {
+    let weights = load_weights(format!("{artifacts}/weights_mnist_bnn.bin"))?;
+    let test = load_images(format!("{artifacts}/data_mnist_test.bin"))?;
+    let n = limit.min(test.len());
+    let images = &test.images[..n * test.dim];
+    let labels = &test.labels[..n];
+    let methods = [
+        NnMethod::Standard { t: 100 },
+        NnMethod::Hybrid { t: 100 },
+        NnMethod::DmBnn { schedule: vec![10, 10, 10] },
+    ];
+    let mut out = [None, None, None];
+    for (i, m) in methods.iter().enumerate() {
+        let mut g = Ziggurat::new(XorShift128Plus::new(42 + i as u64));
+        let acc = if quantized {
+            QBnnModel::from_posterior(&weights).accuracy(images, labels, m, &mut g)
+        } else {
+            BnnModel::new(weights.clone()).accuracy(images, labels, m, &mut g)
+        };
+        out[i] = Some(acc);
+    }
+    Ok(out)
+}

@@ -1,0 +1,291 @@
+//! Multi-layer BNN reference model: the three inference methods of Fig 4.
+//!
+//! [`BnnModel`] owns the per-layer posteriors and evaluates a single input
+//! with any [`Method`], drawing uncertainty from a caller-supplied
+//! [`Grng`] (so tests can pin H) and reporting instrumented op counts
+//! (validated against `opcount::model` in the integration tests).
+
+use crate::dataset::LayerPosterior;
+use crate::grng::Grng;
+use crate::opcount::counter::OpCounter;
+
+use super::linear::{argmax, dm_voter, precompute, standard_voter, vote};
+
+/// Inference method selector (mirrors `opcount::model::Method`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Method {
+    Standard { t: usize },
+    Hybrid { t: usize },
+    DmBnn { schedule: Vec<usize> },
+}
+
+impl Method {
+    pub fn voters(&self) -> usize {
+        match self {
+            Method::Standard { t } | Method::Hybrid { t } => *t,
+            Method::DmBnn { schedule } => schedule.iter().product(),
+        }
+    }
+}
+
+/// The reference multi-layer Bayesian MLP.
+pub struct BnnModel {
+    pub layers: Vec<LayerPosterior>,
+}
+
+impl BnnModel {
+    pub fn new(layers: Vec<LayerPosterior>) -> Self {
+        assert!(!layers.is_empty());
+        for w in layers.windows(2) {
+            assert_eq!(w[1].n, w[0].m, "layer dims must chain");
+        }
+        Self { layers }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].n
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().m
+    }
+
+    fn sample_h(&self, li: usize, g: &mut dyn Grng) -> (Vec<f32>, Vec<f32>) {
+        let l = &self.layers[li];
+        let mut h = vec![0.0f32; l.m * l.n];
+        let mut hb = vec![0.0f32; l.m];
+        g.fill(&mut h);
+        g.fill(&mut hb);
+        (h, hb)
+    }
+
+    /// Evaluate one input with the given method; returns (voter logits,
+    /// op counter).
+    pub fn evaluate(
+        &self,
+        x: &[f32],
+        method: &Method,
+        g: &mut dyn Grng,
+    ) -> (Vec<Vec<f32>>, OpCounter) {
+        assert_eq!(x.len(), self.input_dim());
+        let mut ops = OpCounter::default();
+        let nl = self.num_layers();
+        match method {
+            Method::Standard { t } => {
+                let mut acts: Vec<Vec<f32>> = vec![x.to_vec(); *t];
+                for li in 0..nl {
+                    let l = &self.layers[li];
+                    let relu = li != nl - 1;
+                    for act in acts.iter_mut() {
+                        let (h, hb) = self.sample_h(li, g);
+                        let mut y = vec![0.0f32; l.m];
+                        standard_voter(l, act, &h, &hb, relu, &mut y, &mut ops);
+                        *act = y;
+                    }
+                }
+                (acts, ops)
+            }
+            Method::Hybrid { t } => {
+                let l0 = &self.layers[0];
+                let mut beta = vec![0.0f32; l0.m * l0.n];
+                let mut eta = vec![0.0f32; l0.m];
+                precompute(l0, x, &mut beta, &mut eta, &mut ops);
+                let mut acts: Vec<Vec<f32>> = Vec::with_capacity(*t);
+                let relu0 = nl > 1;
+                for _ in 0..*t {
+                    let (h, hb) = self.sample_h(0, g);
+                    let mut y = vec![0.0f32; l0.m];
+                    dm_voter(l0, &beta, &eta, &h, &hb, 0..l0.m, relu0, &mut y, &mut ops);
+                    acts.push(y);
+                }
+                for li in 1..nl {
+                    let l = &self.layers[li];
+                    let relu = li != nl - 1;
+                    for act in acts.iter_mut() {
+                        let (h, hb) = self.sample_h(li, g);
+                        let mut y = vec![0.0f32; l.m];
+                        standard_voter(l, act, &h, &hb, relu, &mut y, &mut ops);
+                        *act = y;
+                    }
+                }
+                (acts, ops)
+            }
+            Method::DmBnn { schedule } => {
+                assert_eq!(schedule.len(), nl);
+                let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+                for li in 0..nl {
+                    let l = &self.layers[li];
+                    let relu = li != nl - 1;
+                    let tl = schedule[li];
+                    // Sample the layer's t_l uncertainty matrices ONCE and
+                    // share them across all distinct inputs — the paper's
+                    // fan-out tree (Fig 4b) reuses uncertainty this way,
+                    // which is exactly why only L√T samples are needed.
+                    let hs: Vec<(Vec<f32>, Vec<f32>)> =
+                        (0..tl).map(|_| self.sample_h(li, g)).collect();
+                    let mut next = Vec::with_capacity(acts.len() * tl);
+                    let mut beta = vec![0.0f32; l.m * l.n];
+                    let mut eta = vec![0.0f32; l.m];
+                    for a in &acts {
+                        precompute(l, a, &mut beta, &mut eta, &mut ops);
+                        for (h, hb) in &hs {
+                            let mut y = vec![0.0f32; l.m];
+                            dm_voter(l, &beta, &eta, h, hb, 0..l.m, relu, &mut y, &mut ops);
+                            next.push(y);
+                        }
+                    }
+                    acts = next;
+                }
+                (acts, ops)
+            }
+        }
+    }
+
+    /// Predict the class of one input (vote + argmax).
+    pub fn predict(&self, x: &[f32], method: &Method, g: &mut dyn Grng) -> usize {
+        let (logits, _) = self.evaluate(x, method, g);
+        argmax(&vote(&logits))
+    }
+
+    /// Test-set accuracy.
+    pub fn accuracy(
+        &self,
+        images: &[f32],
+        labels: &[u8],
+        method: &Method,
+        g: &mut dyn Grng,
+    ) -> f64 {
+        let dim = self.input_dim();
+        let mut correct = 0usize;
+        for (i, &label) in labels.iter().enumerate() {
+            let x = &images[i * dim..(i + 1) * dim];
+            if self.predict(x, method, g) == label as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / labels.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::uniform::{UniformSource, XorShift128Plus};
+    use crate::grng::Ziggurat;
+    use crate::opcount::model::{CostModel, Method as CostMethod};
+
+    /// A Grng that always returns zero — pins every voter to the
+    /// posterior mean, making the three methods exactly equal.
+    struct ZeroG;
+    impl Grng for ZeroG {
+        fn next(&mut self) -> f32 {
+            0.0
+        }
+    }
+
+    fn tiny_model(seed: u64) -> BnnModel {
+        let mut r = XorShift128Plus::new(seed);
+        let mut layer = |m: usize, n: usize| LayerPosterior {
+            m,
+            n,
+            mu: (0..m * n).map(|_| r.next_f32() - 0.5).collect(),
+            sigma: (0..m * n).map(|_| 0.01 + 0.05 * r.next_f32()).collect(),
+            mu_b: (0..m).map(|_| r.next_f32() - 0.5).collect(),
+            sigma_b: (0..m).map(|_| 0.01 + 0.05 * r.next_f32()).collect(),
+        };
+        BnnModel::new(vec![layer(12, 16), layer(8, 12), layer(5, 8)])
+    }
+
+    #[test]
+    fn methods_agree_at_zero_uncertainty() {
+        let model = tiny_model(1);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
+        let (std, _) = model.evaluate(&x, &Method::Standard { t: 4 }, &mut ZeroG);
+        let (hyb, _) = model.evaluate(&x, &Method::Hybrid { t: 4 }, &mut ZeroG);
+        let (dm, _) =
+            model.evaluate(&x, &Method::DmBnn { schedule: vec![2, 2, 1] }, &mut ZeroG);
+        for k in 0..4 {
+            for j in 0..5 {
+                assert!((std[k][j] - hyb[k][j]).abs() < 1e-4);
+                assert!((std[k][j] - dm[k][j]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn voter_counts() {
+        let model = tiny_model(2);
+        let x = vec![0.5f32; 16];
+        let mut g = Ziggurat::new(XorShift128Plus::new(0));
+        let (ys, _) = model.evaluate(&x, &Method::Standard { t: 7 }, &mut g);
+        assert_eq!(ys.len(), 7);
+        let (ys, _) =
+            model.evaluate(&x, &Method::DmBnn { schedule: vec![3, 2, 2] }, &mut g);
+        assert_eq!(ys.len(), 12);
+    }
+
+    #[test]
+    fn instrumented_ops_match_analytic_model() {
+        // The instrumented counters must equal opcount's closed forms.
+        let model = tiny_model(3);
+        let arch = [16usize, 12, 8, 5];
+        let cm = CostModel::from_arch(&arch);
+        let x = vec![0.1f32; 16];
+        let mut g = Ziggurat::new(XorShift128Plus::new(1));
+
+        let (_, ops) = model.evaluate(&x, &Method::Standard { t: 6 }, &mut g);
+        let want = cm.cost(&CostMethod::Standard { t: 6 }, 1.0);
+        assert_eq!(ops, want.total);
+
+        let (_, ops) = model.evaluate(&x, &Method::Hybrid { t: 6 }, &mut g);
+        let want = cm.cost(&CostMethod::Hybrid { t: 6 }, 1.0);
+        assert_eq!(ops, want.total);
+
+        let (_, ops) =
+            model.evaluate(&x, &Method::DmBnn { schedule: vec![2, 3, 1] }, &mut g);
+        let want = cm.cost(&CostMethod::DmBnn { schedule: vec![2, 3, 1] }, 1.0);
+        assert_eq!(ops, want.total);
+    }
+
+    #[test]
+    fn dm_cheaper_than_standard_for_equal_voters() {
+        let model = tiny_model(4);
+        let x = vec![0.3f32; 16];
+        let mut g = Ziggurat::new(XorShift128Plus::new(2));
+        let (_, ops_std) = model.evaluate(&x, &Method::Standard { t: 8 }, &mut g);
+        let (_, ops_dm) =
+            model.evaluate(&x, &Method::DmBnn { schedule: vec![2, 2, 2] }, &mut g);
+        assert!(ops_dm.muls < ops_std.muls);
+        assert!(ops_dm.total() < ops_std.total());
+    }
+
+    #[test]
+    fn predict_in_range() {
+        let model = tiny_model(5);
+        let x = vec![0.2f32; 16];
+        let mut g = Ziggurat::new(XorShift128Plus::new(3));
+        let p = model.predict(&x, &Method::Standard { t: 3 }, &mut g);
+        assert!(p < 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "chain")]
+    fn mismatched_layers_rejected() {
+        let mut r = XorShift128Plus::new(9);
+        let mut mk = |m: usize, n: usize| LayerPosterior {
+            m,
+            n,
+            mu: (0..m * n).map(|_| r.next_f32()).collect(),
+            sigma: vec![0.1; m * n],
+            mu_b: vec![0.0; m],
+            sigma_b: vec![0.1; m],
+        };
+        let a = mk(4, 6);
+        let b = mk(3, 5); // 5 != 4: must panic
+        let _ = BnnModel::new(vec![a, b]);
+    }
+}

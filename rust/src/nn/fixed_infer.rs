@@ -1,0 +1,357 @@
+//! 8-bit fixed-point inference — the functional model of the hardware
+//! datapath (Table V accuracy column).
+//!
+//! Weights, inputs, memorized features and activations are quantized to
+//! the paper's 8-bit format; MAC accumulation is wide (i32) with a single
+//! saturating writeback per neuron, mirroring a real MAC array.  The
+//! uncertainty samples are quantized too (the hardware GRNG emits fixed
+//! point directly).
+//!
+//! Activations use the wider-range Q4.3 format while weights/features use
+//! Q2.5 — a standard per-tensor format split; `requantize` moves between
+//! them exactly as the datapath's barrel shifter would.
+
+use crate::dataset::LayerPosterior;
+use crate::fixed::q::{Fx, QFormat};
+use crate::grng::Grng;
+
+use super::bnn::Method;
+use super::linear::argmax;
+
+/// Quantized layer: raw i8 tensors plus their formats.
+#[derive(Debug, Clone)]
+pub struct QLayer {
+    pub m: usize,
+    pub n: usize,
+    pub mu: Vec<i8>,
+    pub sigma: Vec<i8>,
+    pub mu_b: Vec<i8>,
+    pub sigma_b: Vec<i8>,
+    pub wfmt: QFormat,
+}
+
+impl QLayer {
+    pub fn quantize(layer: &LayerPosterior, wfmt: QFormat) -> Self {
+        let q = |xs: &[f32]| xs.iter().map(|&x| Fx::from_f32(x, wfmt).raw).collect();
+        Self {
+            m: layer.m,
+            n: layer.n,
+            mu: q(&layer.mu),
+            sigma: q(&layer.sigma),
+            mu_b: q(&layer.mu_b),
+            sigma_b: q(&layer.sigma_b),
+            wfmt,
+        }
+    }
+}
+
+/// Fixed-point BNN evaluator.
+pub struct QBnnModel {
+    pub layers: Vec<QLayer>,
+    pub wfmt: QFormat,
+    pub afmt: QFormat,
+}
+
+/// Requantize a raw value from one format to another (arith shift).
+fn requantize(raw: i32, from: QFormat, to: QFormat) -> i8 {
+    let shifted = if from.frac_bits >= to.frac_bits {
+        raw >> (from.frac_bits - to.frac_bits)
+    } else {
+        raw << (to.frac_bits - from.frac_bits)
+    };
+    shifted.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+}
+
+impl QBnnModel {
+    /// Quantize a trained posterior with the paper's formats.
+    pub fn from_posterior(layers: &[LayerPosterior]) -> Self {
+        let wfmt = QFormat::Q2_5;
+        let afmt = QFormat::Q4_3;
+        Self {
+            layers: layers.iter().map(|l| QLayer::quantize(l, wfmt)).collect(),
+            wfmt,
+            afmt,
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].n
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().m
+    }
+
+    /// Quantize an f32 input vector to the activation format.
+    pub fn quantize_input(&self, x: &[f32]) -> Vec<i8> {
+        x.iter().map(|&v| Fx::from_f32(v, self.afmt).raw).collect()
+    }
+
+    /// One quantized voter layer: standard dataflow.
+    ///
+    /// `h`/`hb` are pre-quantized uncertainty samples in the weight format.
+    fn standard_layer(&self, li: usize, x: &[i8], h: &[i8], hb: &[i8], relu: bool) -> Vec<i8> {
+        let l = &self.layers[li];
+        let wf = self.wfmt.frac_bits;
+        let af = self.afmt.frac_bits;
+        let mut out = vec![0i8; l.m];
+        for i in 0..l.m {
+            let mut acc: i64 = 0; // fixed-point: 2·wf + af frac bits... see below
+            for j in 0..l.n {
+                // w = h∘σ + μ, accumulated wide: raw products carry 2·wf frac
+                // bits; re-align μ to 2·wf before the add.
+                let w2 = h[i * l.n + j] as i32 * l.sigma[i * l.n + j] as i32
+                    + ((l.mu[i * l.n + j] as i32) << wf);
+                // activation product: w2 (2·wf frac) × x (af frac)
+                acc += w2 as i64 * x[j] as i64;
+            }
+            // bias: re-align to 2·wf + af frac bits
+            let b2 = hb[i] as i32 * l.sigma_b[i] as i32 + ((l.mu_b[i] as i32) << wf);
+            acc += (b2 as i64) << af;
+            // writeback: from 2·wf+af frac bits to af frac bits
+            let shifted = (acc >> (2 * wf)) as i32;
+            let mut v = shifted.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+            if relu {
+                v = v.max(0);
+            }
+            out[i] = v;
+        }
+        out
+    }
+
+    /// DM dataflow in fixed point: precompute β (weight fmt × act fmt →
+    /// stored at weight fmt) and η (wide dot, stored at act fmt), then
+    /// per-voter line-wise inner product.
+    fn dm_precompute(&self, li: usize, x: &[i8]) -> (Vec<i8>, Vec<i8>) {
+        let l = &self.layers[li];
+        let wf = self.wfmt.frac_bits;
+        let af = self.afmt.frac_bits;
+        let mut beta = vec![0i8; l.m * l.n];
+        let mut eta = vec![0i8; l.m];
+        for i in 0..l.m {
+            let mut acc: i32 = 0;
+            for j in 0..l.n {
+                let p = l.sigma[i * l.n + j] as i32 * x[j] as i32; // wf+af frac
+                beta[i * l.n + j] = requantize(
+                    p,
+                    QFormat { int_bits: 0, frac_bits: wf + af },
+                    self.wfmt,
+                );
+                acc += l.mu[i * l.n + j] as i32 * x[j] as i32;
+            }
+            eta[i] = requantize(
+                acc,
+                QFormat { int_bits: 0, frac_bits: wf + af },
+                self.afmt,
+            );
+        }
+        (beta, eta)
+    }
+
+    fn dm_layer(&self, li: usize, beta: &[i8], eta: &[i8], h: &[i8], hb: &[i8], relu: bool) -> Vec<i8> {
+        let l = &self.layers[li];
+        let wf = self.wfmt.frac_bits;
+        let af = self.afmt.frac_bits;
+        let mut out = vec![0i8; l.m];
+        for i in 0..l.m {
+            let mut acc: i64 = 0; // 2·wf frac bits
+            for j in 0..l.n {
+                acc += h[i * l.n + j] as i64 * beta[i * l.n + j] as i64;
+            }
+            // η at af frac; align everything to af for the final sum
+            let z = (acc >> (2 * wf - af)) as i32;
+            let b2 = hb[i] as i32 * l.sigma_b[i] as i32 + ((l.mu_b[i] as i32) << wf);
+            let bias_af = b2 >> (2 * wf - af);
+            let v32 = z + eta[i] as i32 + bias_af;
+            let mut v = v32.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+            if relu {
+                v = v.max(0);
+            }
+            out[i] = v;
+        }
+        out
+    }
+
+    /// Full quantized evaluation; logits are dequantized for voting.
+    pub fn evaluate(&self, x: &[f32], method: &Method, g: &mut dyn Grng) -> Vec<Vec<f32>> {
+        let nl = self.layers.len();
+        let xq = self.quantize_input(x);
+        let sample = |li: usize, g: &mut dyn Grng| {
+            let l = &self.layers[li];
+            let h: Vec<i8> = (0..l.m * l.n)
+                .map(|_| Fx::from_f32(g.next(), self.wfmt).raw)
+                .collect();
+            let hb: Vec<i8> =
+                (0..l.m).map(|_| Fx::from_f32(g.next(), self.wfmt).raw).collect();
+            (h, hb)
+        };
+        let deq = |v: &[i8]| -> Vec<f32> {
+            v.iter().map(|&q| Fx { raw: q, fmt: self.afmt }.to_f32()).collect()
+        };
+        match method {
+            Method::Standard { t } => {
+                let mut outs = Vec::with_capacity(*t);
+                for _ in 0..*t {
+                    let mut a = xq.clone();
+                    for li in 0..nl {
+                        let (h, hb) = sample(li, g);
+                        a = self.standard_layer(li, &a, &h, &hb, li != nl - 1);
+                    }
+                    outs.push(deq(&a));
+                }
+                outs
+            }
+            Method::Hybrid { t } => {
+                let (beta, eta) = self.dm_precompute(0, &xq);
+                let mut acts = Vec::with_capacity(*t);
+                for _ in 0..*t {
+                    let (h, hb) = sample(0, g);
+                    acts.push(self.dm_layer(0, &beta, &eta, &h, &hb, nl > 1));
+                }
+                for li in 1..nl {
+                    for a in acts.iter_mut() {
+                        let (h, hb) = sample(li, g);
+                        *a = self.standard_layer(li, a, &h, &hb, li != nl - 1);
+                    }
+                }
+                acts.iter().map(|a| deq(a)).collect()
+            }
+            Method::DmBnn { schedule } => {
+                assert_eq!(schedule.len(), nl);
+                let mut acts = vec![xq];
+                for li in 0..nl {
+                    let tl = schedule[li];
+                    let hs: Vec<_> = (0..tl).map(|_| sample(li, g)).collect();
+                    let mut next = Vec::with_capacity(acts.len() * tl);
+                    for a in &acts {
+                        let (beta, eta) = self.dm_precompute(li, a);
+                        for (h, hb) in &hs {
+                            next.push(self.dm_layer(li, &beta, &eta, h, hb, li != nl - 1));
+                        }
+                    }
+                    acts = next;
+                }
+                acts.iter().map(|a| deq(a)).collect()
+            }
+        }
+    }
+
+    /// Quantized test-set accuracy.
+    pub fn accuracy(
+        &self,
+        images: &[f32],
+        labels: &[u8],
+        method: &Method,
+        g: &mut dyn Grng,
+    ) -> f64 {
+        let dim = self.input_dim();
+        let mut correct = 0usize;
+        for (i, &label) in labels.iter().enumerate() {
+            let x = &images[i * dim..(i + 1) * dim];
+            let logits = self.evaluate(x, method, g);
+            let mut mean = vec![0.0f32; self.output_dim()];
+            for l in &logits {
+                for (m, v) in mean.iter_mut().zip(l) {
+                    *m += v;
+                }
+            }
+            if argmax(&mean) == label as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / labels.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::uniform::{UniformSource, XorShift128Plus};
+    use crate::grng::Ziggurat;
+    use crate::nn::bnn::BnnModel;
+
+    struct ZeroG;
+    impl Grng for ZeroG {
+        fn next(&mut self) -> f32 {
+            0.0
+        }
+    }
+
+    fn small_posterior(seed: u64) -> Vec<LayerPosterior> {
+        let mut r = XorShift128Plus::new(seed);
+        let mut layer = |m: usize, n: usize| LayerPosterior {
+            m,
+            n,
+            mu: (0..m * n).map(|_| (r.next_f32() - 0.5) * 0.8).collect(),
+            sigma: (0..m * n).map(|_| 0.05 + 0.05 * r.next_f32()).collect(),
+            mu_b: (0..m).map(|_| (r.next_f32() - 0.5) * 0.5).collect(),
+            sigma_b: (0..m).map(|_| 0.05 + 0.05 * r.next_f32()).collect(),
+        };
+        vec![layer(10, 12), layer(6, 10)]
+    }
+
+    #[test]
+    fn quantized_tracks_float_at_zero_uncertainty() {
+        let post = small_posterior(1);
+        let fmodel = BnnModel::new(post.clone());
+        let qmodel = QBnnModel::from_posterior(&post);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32) / 12.0).collect();
+        let (fy, _) = fmodel.evaluate(&x, &crate::nn::bnn::Method::Standard { t: 1 }, &mut ZeroG);
+        let qy = qmodel.evaluate(&x, &Method::Standard { t: 1 }, &mut ZeroG);
+        for (a, b) in fy[0].iter().zip(&qy[0]) {
+            // 8-bit: expect coarse agreement (resolution 0.125 in Q4.3,
+            // accumulated over 12 terms)
+            assert!((a - b).abs() < 0.5, "float {a} vs quant {b}");
+        }
+    }
+
+    #[test]
+    fn dm_and_standard_agree_in_quantized_domain() {
+        // Quantized DM vs quantized standard: same H ⇒ close (not exact:
+        // β rounds once more than the standard path — that rounding is the
+        // 95.42% → 95.35% accuracy story of Table V).
+        let post = small_posterior(2);
+        let q = QBnnModel::from_posterior(&post);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32) / 15.0).collect();
+        let ys = q.evaluate(&x, &Method::Standard { t: 1 }, &mut ZeroG);
+        let yd = q.evaluate(&x, &Method::DmBnn { schedule: vec![1, 1] }, &mut ZeroG);
+        for (a, b) in ys[0].iter().zip(&yd[0]) {
+            assert!((a - b).abs() < 0.6, "std {a} vs dm {b}");
+        }
+    }
+
+    #[test]
+    fn voter_counts_quantized() {
+        let post = small_posterior(3);
+        let q = QBnnModel::from_posterior(&post);
+        let x = vec![0.4f32; 12];
+        let mut g = Ziggurat::new(XorShift128Plus::new(5));
+        assert_eq!(q.evaluate(&x, &Method::Standard { t: 4 }, &mut g).len(), 4);
+        assert_eq!(
+            q.evaluate(&x, &Method::DmBnn { schedule: vec![3, 2] }, &mut g).len(),
+            6
+        );
+        assert_eq!(q.evaluate(&x, &Method::Hybrid { t: 5 }, &mut g).len(), 5);
+    }
+
+    #[test]
+    fn requantize_shifts() {
+        let w = QFormat::Q2_5; // 5 frac
+        let a = QFormat::Q4_3; // 3 frac
+        // value 1.0 at 10 frac bits (1024) → Q2.5 raw 32
+        assert_eq!(
+            requantize(1024, QFormat { int_bits: 0, frac_bits: 10 }, w),
+            32
+        );
+        // → Q4.3 raw 8
+        assert_eq!(
+            requantize(1024, QFormat { int_bits: 0, frac_bits: 10 }, a),
+            8
+        );
+        // saturation
+        assert_eq!(
+            requantize(1 << 20, QFormat { int_bits: 0, frac_bits: 10 }, w),
+            i8::MAX
+        );
+    }
+}

@@ -1,0 +1,275 @@
+//! Single-layer dataflows over plain slices (the paper's Algorithms 1 & 2).
+//!
+//! Shapes follow the paper: weight matrices are M×N row-major, inputs are
+//! N-vectors, uncertainty matrices H are M×N row-major (one per voter).
+//! Optional instrumented op-counting feeds the Table III/IV validation —
+//! the *measured* MUL/ADD counts must match `opcount`'s analytic formulas
+//! exactly, which is asserted in the opcount tests.
+
+use crate::dataset::LayerPosterior;
+use crate::opcount::counter::OpCounter;
+
+/// Pre-compute stage (Algorithm 2 lines 1–2): `beta = sigma ∘ x` (row-wise
+/// element product), `eta = mu · x` (mat-vec).  Writes into caller-owned
+/// buffers so the alpha-blocked scheduler can reuse slices.
+pub fn precompute(
+    layer: &LayerPosterior,
+    x: &[f32],
+    beta: &mut [f32],
+    eta: &mut [f32],
+    ops: &mut OpCounter,
+) {
+    let (m, n) = (layer.m, layer.n);
+    assert_eq!(x.len(), n);
+    assert_eq!(beta.len(), m * n);
+    assert_eq!(eta.len(), m);
+    for i in 0..m {
+        let sig = layer.sigma_row(i);
+        let mu = layer.mu_row(i);
+        let brow = &mut beta[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            brow[j] = sig[j] * x[j];
+            acc += mu[j] * x[j];
+        }
+        eta[i] = acc;
+    }
+    // beta: MN mul; eta: MN mul + M(N-1) add — Table III rows 1–2.
+    ops.mul(2 * m * n);
+    ops.add(m * (n - 1));
+}
+
+/// DM feed-forward for one voter (Algorithm 2 lines 4–6 plus bias):
+/// `y_i = <H_i, beta_i> + eta_i + hb_i·sigma_b_i + mu_b_i`.
+///
+/// `h` is M×N row-major, `hb` is M.  `rows` restricts the computation to a
+/// row range (the alpha-blocking slice of Fig 5); pass `0..m` for full.
+#[allow(clippy::too_many_arguments)]
+pub fn dm_voter(
+    layer: &LayerPosterior,
+    beta: &[f32],
+    eta: &[f32],
+    h: &[f32],
+    hb: &[f32],
+    rows: std::ops::Range<usize>,
+    relu: bool,
+    y: &mut [f32],
+    ops: &mut OpCounter,
+) {
+    let n = layer.n;
+    let nrows = rows.len();
+    assert_eq!(beta.len(), nrows * n, "beta slice must match the row range");
+    assert_eq!(eta.len(), nrows);
+    assert_eq!(h.len(), nrows * n);
+    assert_eq!(hb.len(), nrows);
+    assert_eq!(y.len(), nrows);
+    for (out_i, _i) in rows.enumerate() {
+        let hrow = &h[out_i * n..(out_i + 1) * n];
+        let brow = &beta[out_i * n..(out_i + 1) * n];
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            acc += hrow[j] * brow[j];
+        }
+        let mut v = acc + eta[out_i] + hb[out_i] * layer.sigma_b[_i] + layer.mu_b[_i];
+        if relu {
+            v = v.max(0.0);
+        }
+        y[out_i] = v;
+    }
+    // <H, beta>_L: nrows·N mul + nrows·(N-1) add; + eta: nrows add;
+    // bias term: nrows mul + 2·nrows add — Table III rows 3–4 (+bias).
+    ops.mul(nrows * n + nrows);
+    ops.add(nrows * (n - 1) + 3 * nrows);
+}
+
+/// Standard feed-forward for one voter (Algorithm 1 lines 2–5 plus bias):
+/// materialize `W = H ∘ sigma + mu` and compute `y = W·x + (hb∘sigma_b + mu_b)`.
+#[allow(clippy::too_many_arguments)]
+pub fn standard_voter(
+    layer: &LayerPosterior,
+    x: &[f32],
+    h: &[f32],
+    hb: &[f32],
+    relu: bool,
+    y: &mut [f32],
+    ops: &mut OpCounter,
+) {
+    let (m, n) = (layer.m, layer.n);
+    assert_eq!(x.len(), n);
+    assert_eq!(h.len(), m * n);
+    assert_eq!(hb.len(), m);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        let sig = layer.sigma_row(i);
+        let mu = layer.mu_row(i);
+        let hrow = &h[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            let w = hrow[j] * sig[j] + mu[j]; // scale-location transform
+            acc += w * x[j];
+        }
+        let mut v = acc + hb[i] * layer.sigma_b[i] + layer.mu_b[i];
+        if relu {
+            v = v.max(0.0);
+        }
+        y[i] = v;
+    }
+    // Q = H∘σ: MN mul; W = Q+μ: MN add; y = W·x: MN mul + M(N-1) add;
+    // bias: M mul + 2M add — Table III upper block (+bias).
+    ops.mul(2 * m * n + m);
+    ops.add(m * n + m * (n - 1) + 2 * m);
+}
+
+/// Average voting (Algorithm 1/2 final line): mean over a (T, M) stack.
+pub fn vote(ys: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!ys.is_empty());
+    let m = ys[0].len();
+    let mut out = vec![0.0f32; m];
+    for y in ys {
+        assert_eq!(y.len(), m);
+        for (o, v) in out.iter_mut().zip(y) {
+            *o += v;
+        }
+    }
+    let t = ys.len() as f32;
+    for o in out.iter_mut() {
+        *o /= t;
+    }
+    out
+}
+
+/// Argmax of a logit vector.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::uniform::{UniformSource, XorShift128Plus};
+
+    fn layer(m: usize, n: usize, seed: u64) -> LayerPosterior {
+        let mut r = XorShift128Plus::new(seed);
+        LayerPosterior {
+            m,
+            n,
+            mu: (0..m * n).map(|_| r.next_f32() - 0.5).collect(),
+            sigma: (0..m * n).map(|_| 0.01 + 0.1 * r.next_f32()).collect(),
+            mu_b: (0..m).map(|_| r.next_f32() - 0.5).collect(),
+            sigma_b: (0..m).map(|_| 0.01 + 0.1 * r.next_f32()).collect(),
+        }
+    }
+
+    fn randv(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = XorShift128Plus::new(seed);
+        (0..len).map(|_| r.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn dm_equals_standard_same_h() {
+        // Eqn (2a) == Eqn (2b): the decomposition is exact.
+        let (m, n) = (20, 30);
+        let l = layer(m, n, 1);
+        let x = randv(n, 2);
+        let h = randv(m * n, 3);
+        let hb = randv(m, 4);
+        let mut ops = OpCounter::default();
+
+        let mut beta = vec![0.0; m * n];
+        let mut eta = vec![0.0; m];
+        precompute(&l, &x, &mut beta, &mut eta, &mut ops);
+
+        let mut y_dm = vec![0.0; m];
+        dm_voter(&l, &beta, &eta, &h, &hb, 0..m, false, &mut y_dm, &mut ops);
+
+        let mut y_std = vec![0.0; m];
+        standard_voter(&l, &x, &h, &hb, false, &mut y_std, &mut ops);
+
+        for (a, b) in y_dm.iter().zip(&y_std) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dm_row_slices_cover_full_output() {
+        // Fig 5 invariant: alpha-sliced evaluation == full evaluation.
+        let (m, n) = (20, 16);
+        let l = layer(m, n, 5);
+        let x = randv(n, 6);
+        let h = randv(m * n, 7);
+        let hb = randv(m, 8);
+        let mut ops = OpCounter::default();
+        let mut beta = vec![0.0; m * n];
+        let mut eta = vec![0.0; m];
+        precompute(&l, &x, &mut beta, &mut eta, &mut ops);
+
+        let mut full = vec![0.0; m];
+        dm_voter(&l, &beta, &eta, &h, &hb, 0..m, true, &mut full, &mut ops);
+
+        let mb = 5;
+        let mut sliced = vec![0.0; m];
+        for r0 in (0..m).step_by(mb) {
+            let rows = r0..r0 + mb;
+            let mut part = vec![0.0; mb];
+            dm_voter(
+                &l,
+                &beta[r0 * n..(r0 + mb) * n],
+                &eta[r0..r0 + mb],
+                &h[r0 * n..(r0 + mb) * n],
+                &hb[r0..r0 + mb],
+                rows,
+                true,
+                &mut part,
+                &mut ops,
+            );
+            sliced[r0..r0 + mb].copy_from_slice(&part);
+        }
+        assert_eq!(full, sliced);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let l = layer(4, 3, 9);
+        let x = vec![1.0, 1.0, 1.0];
+        let h = vec![0.0; 12];
+        let hb = vec![0.0; 4];
+        let mut ops = OpCounter::default();
+        let mut y = vec![0.0; 4];
+        standard_voter(&l, &x, &h, &hb, true, &mut y, &mut ops);
+        assert!(y.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn zero_uncertainty_is_posterior_mean() {
+        // H = 0 makes the voter the posterior-mean network.
+        let (m, n) = (6, 8);
+        let l = layer(m, n, 10);
+        let x = randv(n, 11);
+        let h = vec![0.0; m * n];
+        let hb = vec![0.0; m];
+        let mut ops = OpCounter::default();
+        let mut y = vec![0.0; m];
+        standard_voter(&l, &x, &h, &hb, false, &mut y, &mut ops);
+        for i in 0..m {
+            let want: f32 = l.mu_row(i).iter().zip(&x).map(|(w, xi)| w * xi).sum::<f32>()
+                + l.mu_b[i];
+            assert!((y[i] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn vote_averages() {
+        let ys = vec![vec![1.0, 3.0], vec![3.0, 5.0]];
+        assert_eq!(vote(&ys), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Pure-rust reference BNN — the oracle for the PJRT runtime and the
+//! functional model inside `hwsim`.
+//!
+//! [`linear`] implements the two single-layer dataflows of the paper
+//! (Algorithm 1 standard, Algorithm 2 DM) over plain slices; [`bnn`]
+//! chains them into the three multi-layer methods (Standard / Hybrid-BNN /
+//! DM-BNN, Fig 4) and full test-set evaluation; [`fixed_infer`] is the
+//! 8-bit fixed-point variant behind the Table V accuracy column.
+//!
+//! Everything here is deliberately simple, allocation-honest rust: it is
+//! the ground truth the AOT/PJRT path is validated against, so clarity
+//! beats speed (the optimized path is the PJRT one).
+
+pub mod bnn;
+pub mod fixed_infer;
+pub mod linear;
+
+pub use bnn::{BnnModel, Method};
+pub use linear::{dm_voter, precompute, standard_voter};

@@ -1,0 +1,87 @@
+//! Instrumented MUL/ADD counter threaded through the reference dataflows.
+
+/// Accumulates multiplication and addition counts.  The paper's cycle
+/// model ("one addition takes one cycle and one multiplication by 2
+/// cycles", §III-C1) is exposed as [`OpCounter::weighted_cycles`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OpCounter {
+    pub muls: u64,
+    pub adds: u64,
+}
+
+impl OpCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn mul(&mut self, count: usize) {
+        self.muls += count as u64;
+    }
+
+    #[inline]
+    pub fn add(&mut self, count: usize) {
+        self.adds += count as u64;
+    }
+
+    /// Merge another counter into this one.
+    pub fn merge(&mut self, other: &OpCounter) {
+        self.muls += other.muls;
+        self.adds += other.adds;
+    }
+
+    /// Total operations.
+    pub fn total(&self) -> u64 {
+        self.muls + self.adds
+    }
+
+    /// Equivalent cycles under the paper's 2-cycle-MUL / 1-cycle-ADD model.
+    pub fn weighted_cycles(&self) -> u64 {
+        2 * self.muls + self.adds
+    }
+
+    /// Reset to zero.
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+impl std::ops::Add for OpCounter {
+    type Output = OpCounter;
+    fn add(self, rhs: OpCounter) -> OpCounter {
+        OpCounter { muls: self.muls + rhs.muls, adds: self.adds + rhs.adds }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_and_merge() {
+        let mut a = OpCounter::new();
+        a.mul(3);
+        a.add(5);
+        let mut b = OpCounter::new();
+        b.mul(2);
+        b.merge(&a);
+        assert_eq!(b, OpCounter { muls: 5, adds: 5 });
+        assert_eq!(b.total(), 10);
+    }
+
+    #[test]
+    fn weighted_cycles_paper_model() {
+        let c = OpCounter { muls: 10, adds: 4 };
+        assert_eq!(c.weighted_cycles(), 24);
+    }
+
+    #[test]
+    fn add_operator_and_reset() {
+        let a = OpCounter { muls: 1, adds: 2 };
+        let b = OpCounter { muls: 3, adds: 4 };
+        let mut c = a + b;
+        assert_eq!(c, OpCounter { muls: 4, adds: 6 });
+        c.reset();
+        assert_eq!(c, OpCounter::default());
+    }
+}

@@ -1,0 +1,19 @@
+//! Operation counting — the analytic and instrumented models behind
+//! Table III (single-layer complexity) and Table IV (software #MUL/#ADD).
+//!
+//! * [`counter`] — a zero-cost-when-ignored instrumented counter threaded
+//!   through the pure-rust dataflows in [`crate::nn`].
+//! * [`model`] — closed-form formulas from the paper's Table III plus the
+//!   multi-layer compositions for Standard / Hybrid / DM-BNN, including
+//!   the `L√T` fan-out accounting of §III-C2.
+//! * [`report`] — renders the paper's tables from either source.
+//!
+//! The key cross-check (asserted in tests): the instrumented counts from
+//! running the real dataflows equal the analytic formulas *exactly*.
+
+pub mod counter;
+pub mod model;
+pub mod report;
+
+pub use counter::OpCounter;
+pub use model::{CostModel, LayerCost, MethodCost};

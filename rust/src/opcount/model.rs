@@ -1,0 +1,320 @@
+//! Analytic operation-count model (paper Table III + §III-C compositions).
+//!
+//! Two layers of formulas:
+//!
+//! * *paper-exact* (`table3_*`): bias-free single-layer counts exactly as
+//!   printed in Table III — `2MNT` vs `MN(T+2)` multiplications — used to
+//!   regenerate that table and the Eqn (3) limit.
+//! * *implementation-exact* (`LayerCost::*`): counts including the bias
+//!   term, matching the instrumented [`super::OpCounter`] of the rust
+//!   dataflows bit-for-bit (asserted in tests).  Table IV is produced
+//!   from these.
+
+use crate::layer_dims;
+
+use super::OpCounter;
+
+/// Paper Table III, standard dataflow, bias-free: one layer, T voters.
+pub fn table3_standard(m: u64, n: u64, t: u64) -> OpCounter {
+    OpCounter {
+        muls: 2 * m * n * t,                  // H∘σ and W·x
+        adds: m * n * t + m * (n - 1) * t,    // Q+μ and the dot-product adds
+    }
+}
+
+/// Paper Table III, DM dataflow, bias-free: one layer, T voters sharing x.
+pub fn table3_dm(m: u64, n: u64, t: u64) -> OpCounter {
+    OpCounter {
+        muls: m * n * (t + 2),                          // η, β, <H,β>_L
+        adds: m * (n - 1) + m * (n - 1) * t + m * t,    // β-dot, line-dot, +η
+    }
+}
+
+/// Eqn (3): the DM/standard multiplication ratio for a given T.
+pub fn dm_mul_ratio(t: u64) -> f64 {
+    (t as f64 + 2.0) / (2.0 * t as f64)
+}
+
+/// Implementation-exact per-layer costs (bias included, matching
+/// `nn::linear`'s instrumentation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerCost {
+    pub m: u64,
+    pub n: u64,
+}
+
+impl LayerCost {
+    pub fn new(m: usize, n: usize) -> Self {
+        Self { m: m as u64, n: n as u64 }
+    }
+
+    /// One `precompute` call (Algorithm 2 lines 1–2).
+    pub fn precompute(&self) -> OpCounter {
+        OpCounter { muls: 2 * self.m * self.n, adds: self.m * (self.n - 1) }
+    }
+
+    /// One DM voter evaluation (line-wise inner product + bias).
+    pub fn dm_voter(&self) -> OpCounter {
+        OpCounter {
+            muls: self.m * self.n + self.m,
+            adds: self.m * (self.n - 1) + 3 * self.m,
+        }
+    }
+
+    /// One standard voter evaluation (scale-location + mat-vec + bias).
+    pub fn standard_voter(&self) -> OpCounter {
+        OpCounter {
+            muls: 2 * self.m * self.n + self.m,
+            adds: self.m * self.n + self.m * (self.n - 1) + 2 * self.m,
+        }
+    }
+}
+
+/// Inference method, as evaluated in Table IV / Table V.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Method {
+    /// Algorithm 1 everywhere; `t` voters.
+    Standard { t: u64 },
+    /// DM on layer 1, standard after (Fig 4a); `t` voters.
+    Hybrid { t: u64 },
+    /// DM everywhere with a per-layer fan-out schedule (Fig 4b);
+    /// leaf voters = product of the schedule.
+    DmBnn { schedule: Vec<u64> },
+}
+
+impl Method {
+    /// Number of leaf voting results the method produces.
+    pub fn voters(&self) -> u64 {
+        match self {
+            Method::Standard { t } | Method::Hybrid { t } => *t,
+            Method::DmBnn { schedule } => schedule.iter().product(),
+        }
+    }
+
+    /// Uncertainty matrices sampled per layer (paper §III-C2: DM-BNN needs
+    /// only `L√T` per layer instead of `T`).
+    pub fn samples_per_layer(&self, num_layers: usize) -> Vec<u64> {
+        match self {
+            Method::Standard { t } | Method::Hybrid { t } => vec![*t; num_layers],
+            Method::DmBnn { schedule } => {
+                assert_eq!(schedule.len(), num_layers);
+                schedule.clone()
+            }
+        }
+    }
+}
+
+/// Whole-network analytic cost model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub layers: Vec<LayerCost>,
+}
+
+/// Cost breakdown for a method on a network.
+#[derive(Debug, Clone)]
+pub struct MethodCost {
+    pub per_layer: Vec<OpCounter>,
+    pub total: OpCounter,
+    /// Extra feature memory (f32 words) the method memorizes: Σ (MN + M)
+    /// over DM'd layers, scaled by alpha for the memory-friendly variant.
+    pub extra_memory_words: u64,
+    /// Leaf voter count.
+    pub voters: u64,
+}
+
+impl CostModel {
+    pub fn from_arch(arch: &[usize]) -> Self {
+        Self { layers: layer_dims(arch).into_iter().map(|(m, n)| LayerCost::new(m, n)).collect() }
+    }
+
+    /// Analytic cost of a method (alpha only affects memory, not ops —
+    /// the memory-friendly framework is compute-neutral, §IV).
+    pub fn cost(&self, method: &Method, alpha: f64) -> MethodCost {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0, 1]");
+        let nl = self.layers.len();
+        let mut per_layer = Vec::with_capacity(nl);
+        let mut extra_mem = 0u64;
+        match method {
+            Method::Standard { t } => {
+                for lc in &self.layers {
+                    let mut c = OpCounter::default();
+                    for _ in 0..*t {
+                        c.merge(&lc.standard_voter());
+                    }
+                    per_layer.push(c);
+                }
+            }
+            Method::Hybrid { t } => {
+                for (li, lc) in self.layers.iter().enumerate() {
+                    let mut c = OpCounter::default();
+                    if li == 0 {
+                        c.merge(&lc.precompute());
+                        for _ in 0..*t {
+                            c.merge(&lc.dm_voter());
+                        }
+                        extra_mem += ((lc.m * lc.n) as f64 * alpha) as u64 + lc.m;
+                    } else {
+                        for _ in 0..*t {
+                            c.merge(&lc.standard_voter());
+                        }
+                    }
+                    per_layer.push(c);
+                }
+            }
+            Method::DmBnn { schedule } => {
+                assert_eq!(schedule.len(), nl, "schedule must cover every layer");
+                let mut distinct_inputs = 1u64;
+                for (lc, &tl) in self.layers.iter().zip(schedule) {
+                    let mut c = OpCounter::default();
+                    for _ in 0..distinct_inputs {
+                        c.merge(&lc.precompute());
+                        for _ in 0..tl {
+                            c.merge(&lc.dm_voter());
+                        }
+                    }
+                    // One beta/eta buffer live at a time per layer
+                    // (precompute results are consumed before the next
+                    // distinct input) — memory does not scale with
+                    // distinct_inputs.
+                    extra_mem += ((lc.m * lc.n) as f64 * alpha) as u64 + lc.m;
+                    per_layer.push(c);
+                    distinct_inputs *= tl;
+                }
+            }
+        }
+        let mut total = OpCounter::default();
+        for c in &per_layer {
+            total.merge(c);
+        }
+        MethodCost {
+            per_layer,
+            total,
+            extra_memory_words: extra_mem,
+            voters: method.voters(),
+        }
+    }
+
+    /// Posterior parameter memory (f32 words): Σ 2(MN + M).
+    pub fn weight_memory_words(&self) -> u64 {
+        self.layers.iter().map(|l| 2 * (l.m * l.n + l.m)).sum()
+    }
+
+    /// Fraction of standard-method ops attributable to the first layer
+    /// (the paper's "first layer accounts for more than 80%" claim for
+    /// 784-200-200-10 — actually 79%, which the paper also quotes in §V-B).
+    pub fn first_layer_fraction(&self) -> f64 {
+        let t = Method::Standard { t: 1 };
+        let c = self.cost(&t, 1.0);
+        c.per_layer[0].total() as f64 / c.total.total() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::MNIST_ARCH;
+
+    #[test]
+    fn table3_paper_formulas() {
+        let (m, n, t) = (200, 784, 100);
+        let std = table3_standard(m, n, t);
+        assert_eq!(std.muls, 2 * m * n * t);
+        let dm = table3_dm(m, n, t);
+        assert_eq!(dm.muls, m * n * (t + 2));
+        assert!(dm.muls < std.muls);
+    }
+
+    #[test]
+    fn eqn3_limit_is_half() {
+        // lim T→∞ MN(T+2) / 2MNT = 1/2
+        assert!((dm_mul_ratio(1_000_000) - 0.5).abs() < 1e-5);
+        // T must exceed 2 for DM to win
+        assert!(dm_mul_ratio(2) >= 1.0);
+        assert!(dm_mul_ratio(3) < 1.0);
+        assert!((dm_mul_ratio(100) - 0.51).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_layer_dominates_mnist_arch() {
+        let cm = CostModel::from_arch(&MNIST_ARCH);
+        let frac = cm.first_layer_fraction();
+        // paper §V-B: "the first layer ... covers about 79% of total"
+        assert!((frac - 0.79).abs() < 0.02, "first layer fraction {frac}");
+    }
+
+    #[test]
+    fn hybrid_reduces_about_39_percent() {
+        let cm = CostModel::from_arch(&MNIST_ARCH);
+        let std = cm.cost(&Method::Standard { t: 100 }, 1.0);
+        let hyb = cm.cost(&Method::Hybrid { t: 100 }, 1.0);
+        let reduction = 1.0 - hyb.total.muls as f64 / std.total.muls as f64;
+        // paper Table IV: 24.2e6 vs 39.8e6 ≈ 39% fewer MULs
+        assert!((reduction - 0.39).abs() < 0.03, "hybrid reduction {reduction}");
+    }
+
+    #[test]
+    fn dm_bnn_reduces_about_82_percent() {
+        let cm = CostModel::from_arch(&MNIST_ARCH);
+        let std = cm.cost(&Method::Standard { t: 100 }, 1.0);
+        let dm = cm.cost(&Method::DmBnn { schedule: vec![10, 10, 10] }, 1.0);
+        assert_eq!(dm.voters, 1000);
+        let reduction = 1.0 - dm.total.muls as f64 / std.total.muls as f64;
+        // paper §V-B1 claims 82.5%; the honest fan-out accounting (layer 3
+        // sees 100 distinct inputs, each needing its own precompute) gives
+        // ≈77% — the paper appears to count only 10 distinct layer-3
+        // inputs.  Assert our exact figure with a band that covers both
+        // readings (documented in EXPERIMENTS.md).
+        assert!(
+            reduction > 0.72 && reduction < 0.88,
+            "dm reduction {reduction}"
+        );
+    }
+
+    #[test]
+    fn paper_table4_absolute_magnitudes() {
+        // Table IV reports ~39.8e6 MULs for standard T=100 on 784-200-200-10.
+        let cm = CostModel::from_arch(&MNIST_ARCH);
+        let std = cm.cost(&Method::Standard { t: 100 }, 1.0);
+        let muls_m = std.total.muls as f64 / 1e6;
+        assert!((muls_m - 39.8).abs() < 1.0, "standard MULs {muls_m}e6");
+        let dm = cm.cost(&Method::DmBnn { schedule: vec![10, 10, 10] }, 1.0);
+        let dm_m = dm.total.muls as f64 / 1e6;
+        // paper Table IV prints 6.9e6; exact fan-out accounting (see the
+        // reduction test above) lands at ≈9.1e6 — same order, same story.
+        assert!(dm_m > 6.0 && dm_m < 10.5, "dm MULs {dm_m}e6");
+    }
+
+    #[test]
+    fn alpha_scales_memory_not_ops() {
+        let cm = CostModel::from_arch(&MNIST_ARCH);
+        let full = cm.cost(&Method::DmBnn { schedule: vec![10, 10, 10] }, 1.0);
+        let tenth = cm.cost(&Method::DmBnn { schedule: vec![10, 10, 10] }, 0.1);
+        assert_eq!(full.total, tenth.total);
+        assert!(tenth.extra_memory_words < full.extra_memory_words);
+        // beta memory scales ~10x down (eta is alpha-independent)
+        let beta_full: u64 = cm.layers.iter().map(|l| l.m * l.n).sum();
+        let eta: u64 = cm.layers.iter().map(|l| l.m).sum();
+        assert_eq!(full.extra_memory_words, beta_full + eta);
+        assert!(
+            (tenth.extra_memory_words - (beta_full / 10 + eta)) < 10,
+            "alpha=0.1 memory {}",
+            tenth.extra_memory_words
+        );
+    }
+
+    #[test]
+    fn samples_per_layer_fanout() {
+        let m = Method::DmBnn { schedule: vec![10, 10, 10] };
+        assert_eq!(m.samples_per_layer(3), vec![10, 10, 10]);
+        assert_eq!(m.voters(), 1000);
+        let s = Method::Standard { t: 100 };
+        assert_eq!(s.samples_per_layer(3), vec![100, 100, 100]);
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule must cover")]
+    fn dm_schedule_length_checked() {
+        let cm = CostModel::from_arch(&MNIST_ARCH);
+        let _ = cm.cost(&Method::DmBnn { schedule: vec![10] }, 1.0);
+    }
+}

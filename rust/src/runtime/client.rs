@@ -1,0 +1,153 @@
+//! PJRT CPU engine: compile-once executable cache + resident buffers.
+//!
+//! The pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Everything compiled is cached by
+//! artifact name; posterior parameters are uploaded once as device
+//! buffers (`execute_b` path) so the request loop only moves H blocks
+//! and activations.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// A compiled artifact plus its spec (for shape checking).
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    pub exe: PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with literal (host) arguments; returns the output literals
+    /// (the AOT modules always return a tuple — it is flattened here).
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        self.check_arity(args.len())?;
+        let result = self.exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(
+            outs.len() == self.spec.outputs.len(),
+            "artifact {} returned {} outputs, manifest says {}",
+            self.spec.name,
+            outs.len(),
+            self.spec.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Execute with device-buffer arguments (resident weights path).
+    pub fn run_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        self.check_arity(args.len())?;
+        let result = self.exe.execute_b::<&PjRtBuffer>(args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == self.spec.outputs.len(), "output arity mismatch");
+        Ok(outs)
+    }
+
+    fn check_arity(&self, got: usize) -> Result<()> {
+        ensure!(
+            got == self.spec.params.len(),
+            "artifact {} expects {} args, got {got}",
+            self.spec.name,
+            self.spec.params.len()
+        );
+        Ok(())
+    }
+}
+
+/// The PJRT engine: client + manifest + executable cache.
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedArtifact>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Fetch (compiling and caching on first use) an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<std::sync::Arc<LoadedArtifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        let loaded = std::sync::Arc::new(LoadedArtifact { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Eagerly compile every artifact in the manifest (startup warmup).
+    pub fn warmup(&self) -> Result<usize> {
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in &names {
+            self.artifact(n).with_context(|| format!("warming {n}"))?;
+        }
+        Ok(names.len())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Upload an f32 tensor as a resident device buffer.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        ensure!(
+            data.len() == dims.iter().product::<usize>(),
+            "upload: {} elements vs dims {:?}",
+            data.len(),
+            dims
+        );
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload: {e}"))
+    }
+}
+
+/// Build an f32 literal of the given shape (host-side argument).
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let lit = Literal::vec1(data);
+    lit.reshape(dims).map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e}"))
+}
+
+/// Extract an f32 literal into a Vec.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/ (they
+    // require `make artifacts`); here only the literal helpers.
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_rejects_bad_shape() {
+        let data = vec![1.0f32; 5];
+        assert!(literal_f32(&data, &[2, 3]).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! Typed view of `artifacts/manifest.json` (written by `compile.aot`).
+//!
+//! Parsed with the in-repo JSON parser (`util::json`) — serde is not
+//! available in the offline build environment.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::Json;
+
+/// One parameter (or output) of an artifact: name + static shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ParamSpec {
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .context("param missing name")?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("param missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("non-integer shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string();
+        Ok(Self { name, shape, dtype })
+    }
+}
+
+/// One lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+    pub meta: Json,
+}
+
+/// Training metadata recorded by the compile path.
+#[derive(Debug, Clone, Default)]
+pub struct TrainingInfo {
+    pub train_size: usize,
+    pub epochs: usize,
+    pub test_accuracy_posterior_mean: f64,
+    pub test_accuracy_vote20_first2k: f64,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub arch: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub t_blocks: Vec<usize>,
+    pub alphas: Vec<f64>,
+    pub training: Option<TrainingInfo>,
+    pub dir: PathBuf,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load and index `dir/manifest.json`; verifies every referenced HLO
+    /// file exists.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        let root = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+
+        let arch = root
+            .get("arch")
+            .and_then(Json::as_arr)
+            .context("manifest missing arch")?
+            .iter()
+            .map(|d| d.as_usize().context("bad arch entry"))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = Vec::new();
+        for a in root.get("artifacts").and_then(Json::as_arr).context("missing artifacts")? {
+            let spec = ArtifactSpec {
+                name: a.get("name").and_then(Json::as_str).context("artifact name")?.into(),
+                kind: a.get("kind").and_then(Json::as_str).context("artifact kind")?.into(),
+                file: a.get("file").and_then(Json::as_str).context("artifact file")?.into(),
+                params: a
+                    .get("params")
+                    .and_then(Json::as_arr)
+                    .context("artifact params")?
+                    .iter()
+                    .map(ParamSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(ParamSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                meta: a.get("meta").cloned().unwrap_or(Json::Null),
+            };
+            artifacts.push(spec);
+        }
+        ensure!(!artifacts.is_empty(), "manifest lists no artifacts");
+
+        let t_blocks = root
+            .get("t_blocks")
+            .and_then(Json::as_arr)
+            .map(|v| v.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        let alphas = root
+            .get("alphas")
+            .and_then(Json::as_arr)
+            .map(|v| v.iter().filter_map(Json::as_f64).collect())
+            .unwrap_or_default();
+        let training = root.get("training").and_then(|t| {
+            Some(TrainingInfo {
+                train_size: t.get("train_size")?.as_usize()?,
+                epochs: t.get("epochs")?.as_usize()?,
+                test_accuracy_posterior_mean: t
+                    .get("test_accuracy_posterior_mean")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                test_accuracy_vote20_first2k: t
+                    .get("test_accuracy_vote20_first2k")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+            })
+        });
+
+        let mut by_name = HashMap::new();
+        for (i, a) in artifacts.iter().enumerate() {
+            let f = dir.join(&a.file);
+            ensure!(f.exists(), "artifact file missing: {}", f.display());
+            ensure!(!a.params.is_empty(), "artifact {} has no params", a.name);
+            if by_name.insert(a.name.clone(), i).is_some() {
+                bail!("duplicate artifact name {}", a.name);
+            }
+        }
+        Ok(Self { arch, artifacts, t_blocks, alphas, training, dir, by_name })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.artifacts[i])
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// The DM artifact name for (m_block, n, t_block, relu).
+    pub fn dm_name(mb: usize, n: usize, tb: usize, relu: bool) -> String {
+        format!("dm_m{mb}_n{n}_t{tb}_{}", if relu { "r" } else { "nr" })
+    }
+
+    /// The standard artifact name for (m, n, t_block, relu).
+    pub fn std_name(m: usize, n: usize, tb: usize, relu: bool) -> String {
+        format!("std_m{m}_n{n}_t{tb}_{}", if relu { "r" } else { "nr" })
+    }
+
+    /// The precompute artifact name for (m, n).
+    pub fn precompute_name(m: usize, n: usize) -> String {
+        format!("precompute_m{m}_n{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_builders() {
+        assert_eq!(Manifest::dm_name(20, 784, 10, true), "dm_m20_n784_t10_r");
+        assert_eq!(Manifest::std_name(10, 200, 10, false), "std_m10_n200_t10_nr");
+        assert_eq!(Manifest::precompute_name(200, 784), "precompute_m200_n784");
+    }
+
+    #[test]
+    fn param_spec_len() {
+        let p = ParamSpec { name: "h".into(), shape: vec![10, 20, 30], dtype: "f32".into() };
+        assert_eq!(p.len(), 6000);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn load_rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join("bayesdm_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "arch": [4, 2],
+              "t_blocks": [10],
+              "artifacts": [{
+                "name": "x", "kind": "dm", "file": "x.hlo.txt",
+                "params": [{"name": "h", "shape": [1, 2, 4], "dtype": "f32"}],
+                "outputs": [{"name": "y", "shape": [1, 2], "dtype": "f32"}],
+                "meta": {"relu": true}
+              }]
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.arch, vec![4, 2]);
+        assert_eq!(m.t_blocks, vec![10]);
+        assert!(m.get("x").is_ok());
+        assert!(m.get("y").is_err());
+        assert!(m.hlo_path(m.get("x").unwrap()).exists());
+        assert_eq!(
+            m.get("x").unwrap().meta.get("relu").and_then(Json::as_bool),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn load_rejects_missing_hlo_file() {
+        let dir = std::env::temp_dir().join("bayesdm_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"arch": [2], "artifacts": [{
+                "name": "gone", "kind": "dm", "file": "gone.hlo.txt",
+                "params": [{"name": "h", "shape": [1], "dtype": "f32"}],
+                "outputs": []
+            }]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

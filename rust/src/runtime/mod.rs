@@ -1,0 +1,21 @@
+//! PJRT runtime — loads and executes the AOT artifacts (request path).
+//!
+//! The compile path (`python/compile/aot.py`) lowers every kernel variant
+//! to HLO *text* (the interchange format that survives the jax ≥ 0.5 /
+//! xla_extension 0.5.1 proto-id mismatch) and writes `manifest.json`
+//! describing parameter order, shapes and semantic metadata.  This module:
+//!
+//! * [`manifest`] — typed manifest parsing + integrity checks.
+//! * [`client`]   — the PJRT CPU client wrapper: HLO text → compiled
+//!   executable, with a name-keyed executable cache and resident device
+//!   buffers for the posterior parameters (uploaded once, reused by every
+//!   request — weights never travel per call).
+//!
+//! Python is never on this path: the rust binary is self-contained given
+//! `artifacts/`.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Engine, LoadedArtifact};
+pub use manifest::{ArtifactSpec, Manifest, ParamSpec};

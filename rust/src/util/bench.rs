@@ -1,0 +1,114 @@
+//! Measurement harness for the cargo benches (criterion is not vendored
+//! offline).
+//!
+//! Warmup + repeated timed runs with mean / stddev / min, printed in a
+//! stable plain-text format the bench targets and EXPERIMENTS.md share.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<38} {:>10.3} ms/iter  (± {:>7.3} ms, min {:>8.3} ms, n={})",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.stddev.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` measured iterations after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &samples)
+}
+
+/// Adaptive variant: run until `budget` wall time is spent (min 3 iters).
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Measurement {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 3 || start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    summarize(name, &samples)
+}
+
+fn summarize(name: &str, samples: &[Duration]) -> Measurement {
+    let n = samples.len() as f64;
+    let mean_s = samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / n;
+    let var = samples
+        .iter()
+        .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n;
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: Duration::from_secs_f64(mean_s),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: *samples.iter().min().unwrap(),
+    }
+}
+
+/// Standard bench header so every bench target's output looks the same.
+pub fn header(title: &str) {
+    println!("=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let m = bench("sleep", 0, 3, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(m.mean >= Duration::from_millis(2));
+        assert_eq!(m.iters, 3);
+    }
+
+    #[test]
+    fn bench_for_respects_min_iters() {
+        let m = bench_for("fast", Duration::from_millis(1), || {});
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn display_contains_name() {
+        let m = bench("named", 0, 1, || {});
+        assert!(m.to_string().contains("named"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag value`, `--flag=value` and bare `--flag` booleans,
+//! plus one positional subcommand.  Unknown flags are an error — typos
+//! should not silently fall back to defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator (first element = argv[0], skipped).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().skip(1).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(raw) = tok.strip_prefix("--") {
+                if let Some((k, v)) = raw.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(raw.to_string(), v);
+                } else {
+                    out.flags.insert(raw.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                return Err(format!("unexpected positional argument `{tok}`"));
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag with default; records the flag as known.
+    pub fn get(&mut self, key: &str, default: &str) -> String {
+        self.known.push(key.to_string());
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T, String> {
+        self.known.push(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag --{key}: cannot parse `{v}`")),
+        }
+    }
+
+    /// Boolean presence flag.
+    pub fn has(&mut self, key: &str) -> bool {
+        self.known.push(key.to_string());
+        self.flags.contains_key(key)
+    }
+
+    /// Call after all `get*` calls: errors on unknown flags.
+    pub fn finish(&self) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !self.known.contains(k) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let mut a = parse(&["prog", "eval", "--method", "dm", "--limit=50", "--fast"]);
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.get("method", "standard"), "dm");
+        assert_eq!(a.get_parse("limit", 10usize).unwrap(), 50);
+        assert!(a.has("fast"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse(&["prog", "eval"]);
+        assert_eq!(a.get("method", "standard"), "standard");
+        assert_eq!(a.get_parse("alpha", 1.0f64).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let mut a = parse(&["prog", "eval", "--tpyo", "1"]);
+        let _ = a.get("method", "x");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_parse_reported() {
+        let mut a = parse(&["prog", "eval", "--limit", "abc"]);
+        assert!(a.get_parse("limit", 1usize).is_err());
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(
+            ["prog", "a", "b"].iter().map(|s| s.to_string())
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! In-repo replacements for crates unavailable in the offline build
+//! environment (see the note in Cargo.toml).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+
+pub use json::Json;
