@@ -1,71 +1,84 @@
-//! Bench: end-to-end PJRT serving latency per method.
+//! Bench: end-to-end serving latency/throughput through the router +
+//! batched reference engine.
 //!
-//! This is the software analogue of Table V's runtime column: one full
-//! inference (all layers, all voters) through the AOT artifacts on the
-//! PJRT CPU client, per method.  The paper's shape to reproduce: DM-BNN
-//! beats Standard substantially at equal-or-more voters; Hybrid sits in
-//! between.  Also benches the dispatch-granularity ablation (t_block
-//! batching) used in the §Perf iteration log.
-//!
-//! Requires `make artifacts`.
+//! The full request path — admission, micro-batching, engine dispatch,
+//! voting, response — on the self-contained synthetic model and dataset,
+//! so it runs with zero artifact dependencies.  Reports req/s and the
+//! p50/p99 latency split per method, and the effect of the router's
+//! micro-batch size (the dynamic-batching win).
 
+use std::sync::Arc;
+use std::time::Instant;
+
+use bayesdm::coordinator::engine::default_workers;
 use bayesdm::coordinator::plan::InferenceMethod;
-use bayesdm::coordinator::Executor;
-use bayesdm::dataset::{load_images, load_weights};
-use bayesdm::runtime::Engine;
-use bayesdm::util::bench::{bench_for, header};
-use std::time::Duration;
+use bayesdm::coordinator::{serve_engine, Engine, EngineConfig, ServerConfig};
+use bayesdm::dataset::{SynthSpec, Synthesizer};
+use bayesdm::nn::bnn::BnnModel;
+use bayesdm::util::bench::header;
+use bayesdm::MNIST_ARCH;
 
-fn executor(seed: u64) -> Executor {
-    let weights = load_weights("artifacts/weights_mnist_bnn.bin").unwrap();
-    Executor::new(Engine::new("artifacts").unwrap(), weights, seed).unwrap()
+fn engine() -> Arc<Engine> {
+    let model = BnnModel::synthetic(&MNIST_ARCH, 0xE2E);
+    Arc::new(Engine::new(model, EngineConfig { workers: default_workers(), seed: 0xE2E }))
+}
+
+/// Serve `requests` images through a fresh server; returns (req/s, p50 µs,
+/// p99 µs).
+fn round(images: &[Vec<f32>], method: &InferenceMethod, max_batch: usize) -> (f64, u64, u64) {
+    // One dispatch worker: the shared engine's pool is the parallelism.
+    let cfg = ServerConfig { max_batch, workers: 1, ..ServerConfig::default() };
+    let handle = serve_engine(engine(), cfg);
+    let t0 = Instant::now();
+    let pending: Vec<_> = images
+        .iter()
+        .map(|x| handle.classify(x.clone(), method.clone()).expect("submit"))
+        .collect();
+    for p in pending {
+        p.wait().expect("response");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let p50 = handle.metrics.latency_percentile_us(0.50).unwrap_or(0);
+    let p99 = handle.metrics.latency_percentile_us(0.99).unwrap_or(0);
+    handle.shutdown();
+    (images.len() as f64 / dt, p50, p99)
 }
 
 fn main() {
-    header("E2E — per-request latency through the PJRT artifacts");
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP: run `make artifacts` first");
-        return;
-    }
-    let test = load_images("artifacts/data_mnist_test.bin").unwrap();
-    let x = test.image(0).to_vec();
-    let ex = executor(0xE2E);
-    let budget = Duration::from_secs(2);
+    header("E2E — serving latency/throughput (batched reference engine)");
+    println!("engine pool: {} threads\n", default_workers());
+    let data = Synthesizer::new(SynthSpec::mnist()).dataset(96);
+    let images: Vec<Vec<f32>> = (0..data.len()).map(|i| data.image(i).to_vec()).collect();
 
     let cases = [
-        ("standard T=100 (100 voters)", InferenceMethod::Standard { t: 100 }),
-        ("hybrid   T=100 (100 voters)", InferenceMethod::Hybrid { t: 100 }),
-        ("dm 10x10x10  (1000 voters)", InferenceMethod::paper_dm(1.0)),
-        ("dm 10x10x10 a=0.1 (1000 v)", InferenceMethod::paper_dm(0.1)),
+        ("standard T=8  ( 8 voters)", InferenceMethod::Standard { t: 8 }),
+        ("hybrid   T=8  ( 8 voters)", InferenceMethod::Hybrid { t: 8 }),
+        (
+            "dm 2x2x2      ( 8 voters)",
+            InferenceMethod::DmBnn { schedule: vec![2, 2, 2], alpha: 1.0 },
+        ),
     ];
-    let mut results = Vec::new();
     for (name, method) in &cases {
-        let m = bench_for(name, budget, || {
-            std::hint::black_box(ex.evaluate(&x, method).unwrap());
-        });
-        println!("{m}");
-        results.push((name.to_string(), m));
+        let (rps, p50, p99) = round(&images, method, 8);
+        println!("{name}: {rps:8.1} req/s  p50 {p50:>6} µs  p99 {p99:>6} µs");
     }
 
-    let std_ms = results[0].1.mean_ms();
-    let dm_ms = results[2].1.mean_ms();
+    println!("\nmicro-batch size sweep (dm 2x2x2):");
+    let dm = InferenceMethod::DmBnn { schedule: vec![2, 2, 2], alpha: 1.0 };
+    let mut first = 0.0f64;
+    for &mb in &[1usize, 4, 16, 32] {
+        let (rps, p50, p99) = round(&images, &dm, mb);
+        if mb == 1 {
+            first = rps;
+        }
+        println!(
+            "  max_batch={mb:<3} {rps:8.1} req/s  ({:4.2}x vs unbatched)  \
+             p50 {p50:>6} µs  p99 {p99:>6} µs",
+            rps / first
+        );
+    }
     println!(
-        "\nDM vs standard wall-clock: {:.2}x at 10x the voters \
-         ({:.2}x per voter)",
-        std_ms / dm_ms,
-        10.0 * std_ms / dm_ms
+        "\nbigger micro-batches amortize the per-batch Θ sampling across \
+         more requests (the engine-level memoization win)."
     );
-    println!("paper Table V runtime shape: DM-BNN 4x faster at 10x the voters");
-
-    // Per-voter-equal comparison: 100 voters each.
-    // (DM with schedule 10,10,10 yields 1000; per-voter cost is the fair
-    // unit — printed above.)
-
-    // Voting/aggregation overhead (pure CPU):
-    let logits = ex.evaluate(&x, &InferenceMethod::paper_dm(1.0)).unwrap();
-    let m = bench_for("vote+entropy over 1000 voters", Duration::from_millis(500), || {
-        std::hint::black_box(bayesdm::coordinator::vote::softmax_mean(&logits));
-        std::hint::black_box(bayesdm::coordinator::vote::predictive_entropy(&logits));
-    });
-    println!("\n{m}");
 }

@@ -85,5 +85,5 @@ fn main() {
     println!("\nanalytic table (accuracy columns = measured above):");
     println!("{}", render_table4(&table4_rows(), &accs));
     println!("paper reference: 96.73% / 96.73% / 96.7%, 39.8 / 24.2 / 6.9 Mmul");
-    println!("(DM-BNN MULs land at ~9.1e6 under exact fan-out accounting — see EXPERIMENTS.md)");
+    println!("(DM-BNN MULs land at ~9.1e6 under exact fan-out accounting — see DESIGN.md §6)");
 }

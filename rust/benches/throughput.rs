@@ -1,0 +1,93 @@
+//! Bench: batched engine throughput — serial vs single-thread-batched vs
+//! pooled inputs/sec for all three methods.
+//!
+//! Three rungs per (method, batch size):
+//!
+//! * `serial`     — the seed repo's shape: one input at a time, each
+//!   paying its own Θ/uncertainty sampling (`BnnModel::evaluate`).
+//! * `engine w=1` — batched with shared per-batch banks on one thread:
+//!   isolates the memoization win (sampling paid once per batch).
+//! * `engine w=N` — the full pooled engine: memoization + one scoped
+//!   worker per core.
+//!
+//! Acceptance shape (checked when ≥ 2 cores are available): the pooled
+//! engine beats serial inputs/sec on DM-BNN for every batch ≥ 16.
+
+use std::time::Duration;
+
+use bayesdm::coordinator::engine::default_workers;
+use bayesdm::dataset::{SynthSpec, Synthesizer};
+use bayesdm::grng::default_grng;
+use bayesdm::nn::batch::evaluate_batch;
+use bayesdm::nn::bnn::{BnnModel, Method};
+use bayesdm::util::bench::{bench_for, header, Measurement};
+use bayesdm::MNIST_ARCH;
+
+fn inputs_per_sec(batch: usize, m: &Measurement) -> f64 {
+    batch as f64 / m.mean.as_secs_f64()
+}
+
+fn main() {
+    header("Throughput — batched multi-threaded engine vs serial");
+    let pool = default_workers();
+    println!("worker pool: {pool} threads  (arch {MNIST_ARCH:?})\n");
+
+    let model = BnnModel::synthetic(&MNIST_ARCH, 0x7777);
+    let data = Synthesizer::new(SynthSpec::mnist()).dataset(32);
+    let all: Vec<Vec<f32>> = (0..data.len()).map(|i| data.image(i).to_vec()).collect();
+
+    let methods = [
+        ("standard T=8", Method::Standard { t: 8 }),
+        ("hybrid   T=8", Method::Hybrid { t: 8 }),
+        ("dm 2x2x2 (8v)", Method::DmBnn { schedule: vec![2, 2, 2] }),
+    ];
+    let budget = Duration::from_millis(400);
+    let mut dm_pooled_vs_serial: Vec<(usize, f64, f64)> = Vec::new();
+
+    for (name, method) in &methods {
+        println!("{name}:");
+        for &bs in &[1usize, 8, 16, 32] {
+            let xs = &all[..bs];
+            let m_serial = bench_for(&format!("serial       b={bs}"), budget, || {
+                for x in xs {
+                    let mut g = default_grng(42);
+                    std::hint::black_box(model.evaluate(x, method, &mut g));
+                }
+            });
+            let m_one = bench_for(&format!("engine w=1   b={bs}"), budget, || {
+                std::hint::black_box(evaluate_batch(&model, xs, method, 42, 1));
+            });
+            let m_pool = bench_for(&format!("engine w={pool}   b={bs}"), budget, || {
+                std::hint::black_box(evaluate_batch(&model, xs, method, 42, pool));
+            });
+            let s = inputs_per_sec(bs, &m_serial);
+            let o = inputs_per_sec(bs, &m_one);
+            let p = inputs_per_sec(bs, &m_pool);
+            println!(
+                "  b={bs:<3} serial {s:>9.1} in/s | engine w=1 {o:>9.1} in/s \
+                 ({:4.2}x) | engine w={pool} {p:>9.1} in/s ({:4.2}x)",
+                o / s,
+                p / s
+            );
+            if matches!(method, Method::DmBnn { .. }) {
+                dm_pooled_vs_serial.push((bs, s, p));
+            }
+        }
+        println!();
+    }
+
+    if pool >= 2 {
+        for &(bs, serial, pooled) in &dm_pooled_vs_serial {
+            if bs >= 16 {
+                assert!(
+                    pooled > serial,
+                    "pooled engine must beat serial on DM-BNN at batch {bs}: \
+                     {pooled:.1} vs {serial:.1} inputs/sec"
+                );
+            }
+        }
+        println!("OK: pooled engine beats serial on DM-BNN for every batch >= 16");
+    } else {
+        println!("(single core: pooled-vs-serial acceptance check skipped)");
+    }
+}

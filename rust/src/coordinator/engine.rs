@@ -1,0 +1,270 @@
+//! The batched inference engine: the default request-path backend.
+//!
+//! [`Engine`] owns the reference [`BnnModel`] and a scoped worker pool
+//! (`nn::batch`), and is what the server's micro-batches are fed into:
+//! one `evaluate_batch` call pays the Θ/uncertainty sampling once for the
+//! whole batch and fans the per-input dataflow out across the pool.  The
+//! engine is `Sync` — one instance is shared by every server worker — and
+//! deterministic: batch `i` since construction always draws seed
+//! `split_seed(cfg.seed, i)`, so a fixed config and call sequence replays
+//! identical logits regardless of thread scheduling.
+//!
+//! The (feature-gated) PJRT executor plugs into the same serving slot via
+//! [`super::server::InferenceBackend`]; this engine is the backend that
+//! works everywhere, with zero artifact dependencies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::dataset::LayerPosterior;
+use crate::grng::split_seed;
+use crate::nn::batch::{evaluate_batch, BatchResult};
+use crate::nn::bnn::{BnnModel, Method};
+
+use super::metrics::Metrics;
+use super::plan::InferenceMethod;
+use super::server::InferenceBackend;
+use super::vote;
+
+/// Worker-pool width default: one thread per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Scoped worker threads per batch (≥ 1).
+    pub workers: usize,
+    /// Master seed; batch `i` uses `split_seed(seed, i)`.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { workers: default_workers(), seed: 0xBA7E_5D00 }
+    }
+}
+
+/// The batched reference-model engine.
+pub struct Engine {
+    model: BnnModel,
+    workers: usize,
+    seed: u64,
+    batches: AtomicU64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Engine {
+    pub fn new(model: BnnModel, cfg: EngineConfig) -> Self {
+        Self {
+            model,
+            workers: cfg.workers.max(1),
+            seed: cfg.seed,
+            batches: AtomicU64::new(0),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    /// Build from a loaded posterior (`dataset::load_weights` output).
+    pub fn from_posterior(layers: Vec<LayerPosterior>, cfg: EngineConfig) -> Self {
+        Self::new(BnnModel::new(layers), cfg)
+    }
+
+    pub fn model(&self) -> &BnnModel {
+        &self.model
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.model.input_dim()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.model.output_dim()
+    }
+
+    /// Evaluate a batch with an explicit seed — fully deterministic and
+    /// independent of engine call history (the parity-tested entry point).
+    pub fn evaluate_batch_seeded(
+        &self,
+        inputs: &[Vec<f32>],
+        method: &Method,
+        seed: u64,
+    ) -> BatchResult {
+        evaluate_batch(&self.model, inputs, method, seed, self.workers)
+    }
+
+    /// Evaluate a batch on the engine's seed schedule: call `i` since
+    /// construction draws `split_seed(cfg.seed, i)`.
+    pub fn evaluate_batch(&self, inputs: &[Vec<f32>], method: &Method) -> BatchResult {
+        let idx = self.batches.fetch_add(1, Ordering::Relaxed);
+        self.evaluate_batch_seeded(inputs, method, split_seed(self.seed, idx))
+    }
+
+    /// Predicted class per input (mean-logit vote + argmax).
+    pub fn predict_batch(&self, inputs: &[Vec<f32>], method: &Method) -> Vec<usize> {
+        self.evaluate_batch(inputs, method)
+            .logits
+            .iter()
+            .map(|voters| vote::argmax(&vote::mean_vote(voters)))
+            .collect()
+    }
+
+    /// Batched test-set accuracy over a flat row-major image buffer,
+    /// evaluated `batch` inputs at a time.
+    pub fn accuracy(&self, images: &[f32], labels: &[u8], method: &Method, batch: usize) -> f64 {
+        assert!(batch > 0, "batch size must be positive");
+        let dim = self.input_dim();
+        assert_eq!(images.len(), labels.len() * dim, "image buffer size mismatch");
+        let mut correct = 0usize;
+        for (chunk_idx, chunk) in labels.chunks(batch).enumerate() {
+            let base = chunk_idx * batch;
+            let inputs: Vec<Vec<f32>> = (0..chunk.len())
+                .map(|j| images[(base + j) * dim..(base + j + 1) * dim].to_vec())
+                .collect();
+            let preds = self.predict_batch(&inputs, method);
+            for (&p, &l) in preds.iter().zip(chunk) {
+                if p == l as usize {
+                    correct += 1;
+                }
+            }
+        }
+        correct as f64 / labels.len().max(1) as f64
+    }
+}
+
+impl InferenceBackend for Engine {
+    fn run_batch(
+        &self,
+        inputs: &[Vec<f32>],
+        method: &InferenceMethod,
+    ) -> Result<Vec<Vec<Vec<f32>>>, String> {
+        // Reject malformed requests with an error instead of letting the
+        // reference model's asserts panic (and kill) a server worker.
+        let m = method.to_reference();
+        if let Method::DmBnn { schedule } = &m {
+            if schedule.len() != self.model.num_layers() {
+                return Err(format!(
+                    "schedule covers {} layers, model has {}",
+                    schedule.len(),
+                    self.model.num_layers()
+                ));
+            }
+        }
+        if m.voters() == 0 {
+            return Err("method has zero voters".to_string());
+        }
+        let dim = self.input_dim();
+        for (i, x) in inputs.iter().enumerate() {
+            if x.len() != dim {
+                return Err(format!("input {i}: dim {} != model dim {dim}", x.len()));
+            }
+        }
+        Ok(self.evaluate_batch(inputs, &m).logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::uniform::{UniformSource, XorShift128Plus};
+
+    fn engine(workers: usize) -> Engine {
+        let model = BnnModel::synthetic(&[16, 12, 8, 5], 11);
+        Engine::new(model, EngineConfig { workers, seed: 0xFEED })
+    }
+
+    fn inputs(count: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = XorShift128Plus::new(seed);
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push((0..dim).map(|_| r.next_f32()).collect());
+        }
+        out
+    }
+
+    #[test]
+    fn call_sequence_is_reproducible() {
+        let a = engine(4);
+        let b = engine(2); // worker count must not affect results
+        let xs = inputs(6, 16, 1);
+        let m = Method::Standard { t: 3 };
+        for round in 0..3 {
+            let ra = a.evaluate_batch(&xs, &m);
+            let rb = b.evaluate_batch(&xs, &m);
+            assert_eq!(ra.logits, rb.logits, "round {round}");
+            assert_eq!(ra.ops, rb.ops, "round {round}");
+        }
+    }
+
+    #[test]
+    fn consecutive_batches_draw_fresh_uncertainty() {
+        let e = engine(2);
+        let xs = inputs(2, 16, 2);
+        let m = Method::Standard { t: 2 };
+        let r1 = e.evaluate_batch(&xs, &m);
+        let r2 = e.evaluate_batch(&xs, &m);
+        assert_ne!(r1.logits, r2.logits, "batch seeds must advance");
+    }
+
+    #[test]
+    fn seeded_entry_point_matches_free_function() {
+        let e = engine(3);
+        let xs = inputs(5, 16, 3);
+        let m = Method::DmBnn { schedule: vec![2, 2, 1] };
+        let a = e.evaluate_batch_seeded(&xs, &m, 77);
+        let b = evaluate_batch(e.model(), &xs, &m, 77, 3);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.ops, b.ops);
+    }
+
+    #[test]
+    fn predictions_in_output_range() {
+        let e = engine(2);
+        let xs = inputs(8, 16, 4);
+        let preds = e.predict_batch(&xs, &Method::Hybrid { t: 3 });
+        assert_eq!(preds.len(), 8);
+        assert!(preds.iter().all(|&p| p < 5));
+    }
+
+    #[test]
+    fn accuracy_runs_batched_and_is_bounded() {
+        let e = engine(2);
+        let dim = e.input_dim();
+        let n = 10usize;
+        let mut r = XorShift128Plus::new(5);
+        let images: Vec<f32> = (0..n * dim).map(|_| r.next_f32()).collect();
+        let labels: Vec<u8> = (0..n).map(|i| (i % 5) as u8).collect();
+        for batch in [1usize, 3, 16] {
+            let acc = e.accuracy(&images, &labels, &Method::Standard { t: 2 }, batch);
+            assert!((0.0..=1.0).contains(&acc), "batch {batch}: {acc}");
+        }
+    }
+
+    #[test]
+    fn backend_rejects_bad_dims() {
+        let e = engine(1);
+        let bad = vec![vec![0.0f32; 3]];
+        let m = InferenceMethod::Standard { t: 2 };
+        let err = e.run_batch(&bad, &m).unwrap_err();
+        assert!(err.contains("dim"), "{err}");
+    }
+
+    #[test]
+    fn backend_rejects_malformed_methods_without_panicking() {
+        // These would assert (and kill a server worker) if they reached
+        // the reference model; the backend must turn them into errors.
+        let e = engine(1);
+        let xs = inputs(1, 16, 6);
+        let short = InferenceMethod::DmBnn { schedule: vec![2, 2], alpha: 1.0 };
+        let err = e.run_batch(&xs, &short).unwrap_err();
+        assert!(err.contains("layers"), "{err}");
+        let empty = InferenceMethod::Standard { t: 0 };
+        let err = e.run_batch(&xs, &empty).unwrap_err();
+        assert!(err.contains("zero voters"), "{err}");
+    }
+}

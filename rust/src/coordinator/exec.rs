@@ -7,8 +7,10 @@
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
 use xla::PjRtBuffer;
+
+use crate::util::error::Result;
+use crate::{ensure, err};
 
 use crate::dataset::LayerPosterior;
 use crate::grng::pool::{HBlock, RefillWorker};
@@ -66,7 +68,7 @@ impl Executor {
             .t_blocks
             .iter()
             .min()
-            .ok_or_else(|| anyhow::anyhow!("manifest lists no t_blocks"))?;
+            .ok_or_else(|| err!("manifest lists no t_blocks"))?;
         // One pre-generated H bank per layer shape, each with a background
         // refill worker.  Capacity 6 blocks ≈ two standard requests of
         // headroom; block values are seed-deterministic (single generator
@@ -301,6 +303,23 @@ impl Executor {
             }
         }
         Ok(correct as f64 / labels.len() as f64)
+    }
+}
+
+impl super::server::InferenceBackend for Executor {
+    /// Micro-batch dispatch: inputs are evaluated request-by-request (the
+    /// AOT artifacts are lowered per input), but the executor's memorized
+    /// (β, η) features and pre-generated H pools are shared across the
+    /// batch exactly as across consecutive requests.
+    fn run_batch(
+        &self,
+        inputs: &[Vec<f32>],
+        method: &super::plan::InferenceMethod,
+    ) -> std::result::Result<Vec<Vec<Vec<f32>>>, String> {
+        inputs
+            .iter()
+            .map(|x| self.evaluate(x, method).map_err(|e| e.to_string()))
+            .collect()
     }
 }
 

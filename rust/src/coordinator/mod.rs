@@ -7,24 +7,31 @@
 //! * [`plan`]    — execution plans: how Standard / Hybrid-BNN / DM-BNN
 //!   (Fig 2/3/4) decompose into AOT artifact dispatches, including the
 //!   `L√T` fan-out tree and the α-blocked row schedule of Fig 5.
-//! * [`exec`]    — the executor: resident posterior buffers on the PJRT
-//!   device, H sampling via [`crate::grng`], artifact dispatch, voter
-//!   assembly.  DM pre-compute results (β, η) are *memorized* per request
-//!   exactly as the paper prescribes.
+//! * [`engine`]  — the batched inference engine: the reference BNN plus a
+//!   scoped worker pool; one dispatch per micro-batch pays the
+//!   Θ/uncertainty sampling once and shares it across every input and
+//!   voter.  Always available (zero artifact dependencies) and the
+//!   server's default backend.
+//! * [`exec`]    — the PJRT executor (`pjrt` feature): resident posterior
+//!   buffers on the device, artifact dispatch, voter assembly, DM (β, η)
+//!   memorized per request exactly as the paper prescribes.
 //! * [`vote`]    — aggregation: mean-logit vote, argmax, softmax-mean and
 //!   predictive entropy (the uncertainty signal).
-//! * [`server`]  — async request router + dynamic batcher (tokio): admits
-//!   requests, groups them per method, runs them on a worker, returns
-//!   predictions with latency metadata.
-//! * [`metrics`] — op/latency/throughput counters for the benches and
-//!   EXPERIMENTS.md.
+//! * [`server`]  — request router + micro-batcher (std threads): admits
+//!   requests, groups them per method, runs them on a worker's backend,
+//!   returns predictions with latency metadata.
+//! * [`metrics`] — op/latency/throughput counters for the benches.
 
+pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod exec;
 pub mod metrics;
 pub mod plan;
 pub mod server;
 pub mod vote;
 
+pub use engine::{Engine, EngineConfig};
+#[cfg(feature = "pjrt")]
 pub use exec::Executor;
 pub use plan::{InferenceMethod, PlanSummary};
-pub use server::{serve, Response, ServerConfig, ServerHandle};
+pub use server::{serve, serve_engine, InferenceBackend, Response, ServerConfig, ServerHandle};

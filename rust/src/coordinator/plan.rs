@@ -1,9 +1,9 @@
 //! Execution plans: how each inference method decomposes into artifact
 //! dispatches.
 //!
-//! A plan is purely descriptive — [`super::exec::Executor`] interprets
-//! it.  Having it as data makes the dispatch schedule testable without a
-//! PJRT device and feeds the plan summary the CLI prints.
+//! A plan is purely descriptive — the PJRT executor (`pjrt` feature)
+//! interprets it.  Having it as data makes the dispatch schedule testable
+//! without a PJRT device and feeds the plan summary the CLI prints.
 
 use crate::runtime::manifest::Manifest;
 use crate::layer_dims;
@@ -60,6 +60,20 @@ impl InferenceMethod {
             "hybrid" => Some(Self::paper_hybrid()),
             "dm" => Some(Self::paper_dm(alpha)),
             _ => None,
+        }
+    }
+
+    /// The reference-model (`crate::nn`) equivalent of this method.  The
+    /// α row-blocking knob only shapes artifact dispatch (Fig 5) — the
+    /// reference dataflow always computes full rows, with identical
+    /// results — so it is dropped here.
+    pub fn to_reference(&self) -> crate::nn::Method {
+        match self {
+            InferenceMethod::Standard { t } => crate::nn::Method::Standard { t: *t },
+            InferenceMethod::Hybrid { t } => crate::nn::Method::Hybrid { t: *t },
+            InferenceMethod::DmBnn { schedule, .. } => {
+                crate::nn::Method::DmBnn { schedule: schedule.clone() }
+            }
         }
     }
 }
@@ -198,6 +212,23 @@ mod tests {
         assert_eq!(get("dm_m20_n784_t10_r"), 10);
         assert_eq!(get("dm_m20_n200_t10_r"), 100);
         assert_eq!(get("dm_m1_n200_t10_nr"), 1000);
+    }
+
+    #[test]
+    fn to_reference_preserves_voters() {
+        use crate::nn::Method as NnMethod;
+        assert_eq!(
+            InferenceMethod::Standard { t: 20 }.to_reference(),
+            NnMethod::Standard { t: 20 }
+        );
+        assert_eq!(
+            InferenceMethod::Hybrid { t: 7 }.to_reference(),
+            NnMethod::Hybrid { t: 7 }
+        );
+        // alpha is a dispatch-shaping knob only: dropped, voters preserved.
+        let dm = InferenceMethod::DmBnn { schedule: vec![3, 2, 1], alpha: 0.1 };
+        assert_eq!(dm.to_reference(), NnMethod::DmBnn { schedule: vec![3, 2, 1] });
+        assert_eq!(dm.to_reference().voters(), dm.voters());
     }
 
     #[test]

@@ -1,20 +1,25 @@
-//! Request router + dynamic batcher (std threads — tokio is not vendored
+//! Request router + micro-batcher (std threads — tokio is not vendored
 //! in the offline build, see Cargo.toml).
 //!
 //! Requests enter through an mpsc channel; the router thread groups
 //! consecutive requests that share an inference method into micro-batches
-//! (up to `max_batch` or `max_wait`), dispatches each batch to a worker
-//! pool, and resolves each request's response channel with prediction,
+//! (up to `max_batch` or `max_wait`), dispatches each batch to a worker,
+//! and resolves each request's response channel with prediction,
 //! uncertainty and latency.  This is the vLLM-router shape scaled to the
 //! paper's workload: admission → batching → engine dispatch → per-request
 //! completion, metrics on the side.
 //!
-//! PJRT handles are not `Send` (the `xla` crate wraps raw pointers with
-//! `Rc` internals), so executors cannot be shared across threads; instead
-//! the server takes an executor *factory* and each worker thread builds
-//! its own engine — the same per-worker-engine topology a multi-device
-//! deployment would use.  Weights upload and artifact compilation happen
-//! once per worker at startup.
+//! Workers run an [`InferenceBackend`], which evaluates a whole
+//! micro-batch at once.  Two deployment shapes:
+//!
+//! * **Shared engine** ([`serve_engine`]): the batched reference engine
+//!   is `Sync`, so every worker shares one `Arc<Engine>` and each batch
+//!   pays the Θ sampling once before fanning out over the engine's own
+//!   scoped worker pool.
+//! * **Per-worker backends** ([`serve`] with a factory): PJRT handles are
+//!   not `Send` (the `xla` crate wraps raw pointers), so the feature-gated
+//!   executor path builds one backend per worker thread — the same
+//!   topology a multi-device deployment would use.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
@@ -22,10 +27,30 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::exec::Executor;
 use super::metrics::Metrics;
 use super::plan::InferenceMethod;
 use super::vote;
+
+/// A serving backend: evaluates one micro-batch of inputs, returning one
+/// voter-logit stack per input.  Implemented by the batched reference
+/// engine (always) and the PJRT executor (`pjrt` feature).
+pub trait InferenceBackend {
+    fn run_batch(
+        &self,
+        inputs: &[Vec<f32>],
+        method: &InferenceMethod,
+    ) -> Result<Vec<Vec<Vec<f32>>>, String>;
+}
+
+impl<B: InferenceBackend + ?Sized> InferenceBackend for Arc<B> {
+    fn run_batch(
+        &self,
+        inputs: &[Vec<f32>],
+        method: &InferenceMethod,
+    ) -> Result<Vec<Vec<Vec<f32>>>, String> {
+        (**self).run_batch(inputs, method)
+    }
+}
 
 /// One classification request (internal).
 struct Request {
@@ -50,11 +75,11 @@ pub struct Response {
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Max requests fused into one engine dispatch batch.
+    /// Max requests fused into one backend dispatch batch.
     pub max_batch: usize,
     /// Max time the batcher waits to fill a batch.
     pub max_wait: Duration,
-    /// Worker threads, each with its own PJRT engine.
+    /// Worker threads (batches in flight at once).
     pub workers: usize,
     pub queue_depth: usize,
 }
@@ -121,10 +146,12 @@ impl Drop for ServerHandle {
 }
 
 /// Start the serving loop.  `factory` is called once per worker thread to
-/// build that worker's executor (PJRT handles are thread-local).
-pub fn serve<F>(factory: F, cfg: ServerConfig) -> ServerHandle
+/// build that worker's backend (so non-`Send` backends like the PJRT
+/// executor stay thread-local).
+pub fn serve<B, F>(factory: F, cfg: ServerConfig) -> ServerHandle
 where
-    F: Fn() -> anyhow::Result<Executor> + Send + Sync + 'static,
+    B: InferenceBackend + 'static,
+    F: Fn() -> Result<B, String> + Send + Sync + 'static,
 {
     let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
     let metrics = Arc::new(Metrics::new());
@@ -139,14 +166,27 @@ where
     ServerHandle { tx, metrics, shutdown, router: Some(router) }
 }
 
-fn router_loop<F>(
+/// Serve the shared batched reference engine: every worker dispatches
+/// micro-batches into the same `Arc<Engine>`.
+///
+/// Sizing note: the engine's scoped pool already spans its configured
+/// cores per batch, so `cfg.workers` here is batches *in flight*, not
+/// parallelism — with an all-core engine, `workers: 1` avoids
+/// oversubscribing the CPU (the `ServerConfig::default()` of 2 fits the
+/// per-worker-backend topology instead).
+pub fn serve_engine(engine: Arc<super::engine::Engine>, cfg: ServerConfig) -> ServerHandle {
+    serve(move || Ok(engine.clone()), cfg)
+}
+
+fn router_loop<B, F>(
     factory: Arc<F>,
     rx: Receiver<Request>,
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
 ) where
-    F: Fn() -> anyhow::Result<Executor> + Send + Sync + 'static,
+    B: InferenceBackend + 'static,
+    F: Fn() -> Result<B, String> + Send + Sync + 'static,
 {
     let (btx, brx) = mpsc::channel::<Vec<Request>>();
     let brx = Arc::new(std::sync::Mutex::new(brx));
@@ -159,17 +199,17 @@ fn router_loop<F>(
             std::thread::Builder::new()
                 .name(format!("bayesdm-worker-{wi}"))
                 .spawn(move || {
-                    let exec = match factory() {
-                        Ok(e) => e,
+                    let backend = match factory() {
+                        Ok(b) => b,
                         Err(e) => {
-                            eprintln!("worker {wi}: executor build failed: {e}");
+                            eprintln!("worker {wi}: backend build failed: {e}");
                             // Drain and fail requests routed to this worker.
                             while let Ok(batch) = { brx.lock().unwrap().recv() } {
                                 for req in batch {
                                     metrics.record_error();
                                     let _ = req
                                         .respond
-                                        .send(Err(format!("executor unavailable: {e}")));
+                                        .send(Err(format!("backend unavailable: {e}")));
                                 }
                             }
                             return;
@@ -178,7 +218,7 @@ fn router_loop<F>(
                     loop {
                         let batch = { brx.lock().unwrap().recv() };
                         match batch {
-                            Ok(batch) => run_batch(&exec, batch, &metrics),
+                            Ok(batch) => run_batch(&backend, batch, &metrics),
                             Err(_) => break,
                         }
                     }
@@ -199,7 +239,7 @@ fn router_loop<F>(
             Err(RecvTimeoutError::Disconnected) => break 'outer,
         };
         let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
+        let mut deadline = Instant::now() + cfg.max_wait;
         while batch.len() < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
@@ -208,8 +248,10 @@ fn router_loop<F>(
             match rx.recv_timeout(deadline - now) {
                 Ok(req) if req.method == batch[0].method => batch.push(req),
                 Ok(req) => {
-                    // Method boundary: flush the current batch first.
+                    // Method boundary: flush the current batch and give the
+                    // replacement batch a fresh fill window of its own.
                     let _ = btx.send(std::mem::replace(&mut batch, vec![req]));
+                    deadline = Instant::now() + cfg.max_wait;
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
@@ -226,12 +268,21 @@ fn router_loop<F>(
     }
 }
 
-fn run_batch(executor: &Executor, batch: Vec<Request>, metrics: &Metrics) {
-    for req in batch {
-        let res = executor.evaluate(&req.image, &req.method);
-        let latency = req.enqueued.elapsed();
-        match res {
-            Ok(logits) => {
+fn run_batch<B: InferenceBackend>(backend: &B, mut batch: Vec<Request>, metrics: &Metrics) {
+    if batch.is_empty() {
+        return;
+    }
+    let method = batch[0].method.clone();
+    let inputs: Vec<Vec<f32>> = batch.iter_mut().map(|r| std::mem::take(&mut r.image)).collect();
+    match backend.run_batch(&inputs, &method) {
+        Ok(all) if all.len() == batch.len() => {
+            for (req, logits) in batch.into_iter().zip(all) {
+                let latency = req.enqueued.elapsed();
+                if logits.is_empty() {
+                    metrics.record_error();
+                    let _ = req.respond.send(Err("backend returned no voters".to_string()));
+                    continue;
+                }
                 let probs = vote::softmax_mean(&logits);
                 let class = vote::argmax(&probs);
                 metrics.record(latency, logits.len());
@@ -243,9 +294,30 @@ fn run_batch(executor: &Executor, batch: Vec<Request>, metrics: &Metrics) {
                     latency,
                 }));
             }
-            Err(e) => {
+        }
+        Ok(all) => {
+            let msg = format!(
+                "backend returned {} results for a batch of {}",
+                all.len(),
+                batch.len()
+            );
+            for req in batch {
                 metrics.record_error();
-                let _ = req.respond.send(Err(e.to_string()));
+                let _ = req.respond.send(Err(msg.clone()));
+            }
+        }
+        Err(_) if batch.len() > 1 => {
+            // Isolate the failure: re-run each request alone so one
+            // malformed input cannot fail its co-batched neighbors.
+            for (req, image) in batch.into_iter().zip(inputs) {
+                let solo = Request { image, ..req };
+                run_batch(backend, vec![solo], metrics);
+            }
+        }
+        Err(e) => {
+            for req in batch {
+                metrics.record_error();
+                let _ = req.respond.send(Err(e.clone()));
             }
         }
     }
@@ -254,6 +326,8 @@ fn run_batch(executor: &Executor, batch: Vec<Request>, metrics: &Metrics) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::{Engine, EngineConfig};
+    use crate::nn::bnn::BnnModel;
 
     #[test]
     fn default_config_sane() {
@@ -263,6 +337,84 @@ mod tests {
         assert!(c.queue_depth >= c.max_batch);
     }
 
-    // End-to-end server tests (require artifacts + PJRT) live in
-    // rust/tests/integration.rs.
+    fn test_engine() -> Arc<Engine> {
+        let model = BnnModel::synthetic(&[16, 10, 5], 21);
+        Arc::new(Engine::new(model, EngineConfig { workers: 2, seed: 9 }))
+    }
+
+    #[test]
+    fn serves_reference_engine_end_to_end() {
+        let handle = serve_engine(
+            test_engine(),
+            ServerConfig { max_batch: 4, workers: 2, ..ServerConfig::default() },
+        );
+        let n = 12;
+        let method = InferenceMethod::Standard { t: 4 };
+        let mut pending = Vec::new();
+        for i in 0..n {
+            let image = vec![i as f32 / n as f32; 16];
+            pending.push(handle.classify(image, method.clone()).unwrap());
+        }
+        for p in pending {
+            let r = p.wait().expect("response");
+            assert!(r.class < 5);
+            assert_eq!(r.voters, 4);
+            assert!(r.confidence > 0.0 && r.confidence <= 1.0);
+            assert!(r.entropy >= 0.0);
+        }
+        let s = handle.metrics.summary();
+        assert_eq!(s.requests, n as u64);
+        assert_eq!(s.errors, 0);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn bad_input_dim_is_an_error_not_a_crash() {
+        let handle = serve_engine(test_engine(), ServerConfig::default());
+        let m = InferenceMethod::Standard { t: 2 };
+        let p = handle.classify(vec![0.0; 3], m.clone()).unwrap();
+        assert!(p.wait().is_err());
+        // Server must still answer well-formed requests afterwards.
+        let p = handle.classify(vec![0.5; 16], m).unwrap();
+        assert!(p.wait().is_ok());
+        assert_eq!(handle.metrics.summary().errors, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_only_fails_itself_in_a_shared_batch() {
+        // Submit a bad-dim request and a valid one back-to-back (they may
+        // or may not fuse into one micro-batch); the valid request must
+        // succeed either way, and the server must keep serving.
+        let handle = serve_engine(
+            test_engine(),
+            ServerConfig { max_batch: 8, workers: 1, ..ServerConfig::default() },
+        );
+        let m = InferenceMethod::Standard { t: 2 };
+        let bad = handle.classify(vec![0.0; 3], m.clone()).unwrap();
+        let good = handle.classify(vec![0.5; 16], m.clone()).unwrap();
+        assert!(bad.wait().is_err());
+        assert!(good.wait().is_ok());
+        // A method the model cannot run is an error response, not a
+        // worker panic: the server still answers afterwards.
+        let broken = InferenceMethod::DmBnn { schedule: vec![9], alpha: 1.0 };
+        let p = handle.classify(vec![0.5; 16], broken).unwrap();
+        assert!(p.wait().is_err());
+        let p = handle.classify(vec![0.5; 16], m).unwrap();
+        assert!(p.wait().is_ok());
+        handle.shutdown();
+    }
+
+    #[test]
+    fn failing_factory_fails_requests_gracefully() {
+        let handle = serve(
+            || -> Result<Arc<Engine>, String> { Err("no backend here".into()) },
+            ServerConfig { workers: 1, ..ServerConfig::default() },
+        );
+        let m = InferenceMethod::Standard { t: 2 };
+        let p = handle.classify(vec![0.0; 16], m).unwrap();
+        let e = p.wait().unwrap_err();
+        assert!(e.contains("backend unavailable"), "{e}");
+        handle.shutdown();
+    }
 }

@@ -11,7 +11,8 @@ use std::fs::File;
 use std::io::{BufReader, Read};
 use std::path::Path;
 
-use anyhow::{bail, ensure, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
 
 pub const MAGIC_IMAGES: u32 = 0x314D_4442; // "BDM1"
 pub const MAGIC_WEIGHTS: u32 = 0x574D_4442; // "BDMW"

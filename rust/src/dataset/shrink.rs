@@ -19,7 +19,7 @@ pub fn shrink_subset(
     seed: u64,
 ) -> Dataset {
     assert!(ratio >= 1, "shrink ratio must be >= 1");
-    let per_class = (nominal_total + ratio * NUM_CLASSES - 1) / (ratio * NUM_CLASSES);
+    let per_class = nominal_total.div_ceil(ratio * NUM_CLASSES);
     let mut rng = XorShift128Plus::new(seed ^ ratio as u64);
 
     // Indices by class.
@@ -83,7 +83,7 @@ mod tests {
             for &l in &sub.labels {
                 counts[l as usize] += 1;
             }
-            let expect = (60_000 + ratio * 10 - 1) / (ratio * 10);
+            let expect = 60_000usize.div_ceil(ratio * 10);
             let expect = expect.min(200); // pool has 200 per class
             assert!(
                 counts.iter().all(|&c| c == expect),

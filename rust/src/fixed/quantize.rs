@@ -3,7 +3,7 @@
 //! The hardware evaluation quantizes weights, inputs and activations to
 //! 8-bit fixed point once (offline), then runs the whole inference in the
 //! quantized domain.  `QuantStats` records the error introduced — surfaced
-//! in EXPERIMENTS.md next to the Table V accuracy column.
+//! next to the Table V accuracy column (see DESIGN.md §6).
 
 use super::q::{Fx, QFormat};
 

@@ -21,7 +21,7 @@ impl<U: UniformSource> BoxMuller<U> {
     }
 }
 
-impl<U: UniformSource> Grng for BoxMuller<U> {
+impl<U: UniformSource + Send> Grng for BoxMuller<U> {
     fn next(&mut self) -> f32 {
         if let Some(v) = self.spare.take() {
             return v;

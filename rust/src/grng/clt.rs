@@ -45,7 +45,7 @@ impl<U: UniformSource> CltGrng<U> {
     }
 }
 
-impl<U: UniformSource> Grng for CltGrng<U> {
+impl<U: UniformSource + Send> Grng for CltGrng<U> {
     #[inline]
     fn next(&mut self) -> f32 {
         let mut acc = 0.0f32;

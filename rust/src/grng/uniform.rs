@@ -64,6 +64,9 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    // Named after the algorithm's step function; the struct also feeds
+    // `UniformSource`, which is the trait callers iterate through.
+    #[allow(clippy::should_implement_trait)]
     pub fn next(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;

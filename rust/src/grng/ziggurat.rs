@@ -60,7 +60,7 @@ impl<U: UniformSource> Ziggurat<U> {
     }
 }
 
-impl<U: UniformSource> Grng for Ziggurat<U> {
+impl<U: UniformSource + Send> Grng for Ziggurat<U> {
     fn next(&mut self) -> f32 {
         loop {
             let bits = self.src.next_u64();
@@ -74,9 +74,8 @@ impl<U: UniformSource> Grng for Ziggurat<U> {
             if cand < self.x[layer.max(1)] && layer > 0 {
                 return if sign_neg { -cand as f32 } else { cand as f32 };
             }
-            if layer == LAYERS - 1 || layer == 0 && cand >= self.x[1] {
-                // 0th layer wedge beyond x[1] merges into the tail region
-            }
+            // (The 0th layer's wedge beyond x[1] falls through to the
+            // pdf-test below; only the last layer reaches the true tail.)
             if layer == LAYERS - 1 && cand >= R {
                 return self.tail(sign_neg);
             }

@@ -50,6 +50,6 @@ mod tests {
         // Guard against unit slips (pJ vs nJ, µm² vs mm²).
         assert!(MUL8_ENERGY_PJ < 1.0);
         assert!(MUL8_AREA_UM2 < 1e4);
-        assert!(CLOCK_MHZ >= 50.0 && CLOCK_MHZ <= 2000.0);
+        assert!((50.0..=2000.0).contains(&CLOCK_MHZ));
     }
 }

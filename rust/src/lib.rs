@@ -11,11 +11,15 @@
 //!   and AOT-lowered to HLO text.
 //! * **L2** — the JAX BNN model graphs assembling those kernels
 //!   (`python/compile/model.py`), trained once by Bayes-by-backprop.
-//! * **L3** — this crate: loads the HLO artifacts through the PJRT C API
-//!   ([`runtime`]), owns the Gaussian uncertainty sampling ([`grng`]), and
-//!   schedules the paper's three inference dataflows — Standard, Hybrid-BNN
-//!   and DM-BNN, including the memory-friendly α-blocked execution of Fig 5 —
-//!   in [`coordinator`].  Python never runs on the request path.
+//! * **L3** — this crate: owns the Gaussian uncertainty sampling
+//!   ([`grng`]) and schedules the paper's three inference dataflows —
+//!   Standard, Hybrid-BNN and DM-BNN, including the memory-friendly
+//!   α-blocked execution of Fig 5 — in [`coordinator`].  The default
+//!   request path is the batched multi-threaded reference engine
+//!   (`coordinator::engine` over `nn::batch`); the PJRT artifact path
+//!   ([`runtime`]) is gated behind the `pjrt` cargo feature because the
+//!   offline build environment cannot vendor the `xla` crate.  Python
+//!   never runs on the request path.
 //!
 //! Besides the coordinator, the crate contains every substrate the paper's
 //! evaluation depends on:
@@ -33,8 +37,14 @@
 //!   (MAC datapath, CACTI-style SRAM, CLT GRNG cost) regenerating Table V
 //!   and Fig 7.
 //!
-//! See `DESIGN.md` for the full experiment index and `EXPERIMENTS.md` for the
-//! measured-vs-paper numbers.
+//! See `DESIGN.md` (repo root) for the architecture, the batched engine's
+//! threading/memoization model, the experiment index, and how to run the
+//! benches — the bench targets print the measured-vs-paper numbers.
+
+// Kernel-style index loops over several parallel slices are the idiom
+// throughout nn/, fixed/ and hwsim; iterator rewrites obscure the paper's
+// algorithm listings.
+#![allow(clippy::needless_range_loop)]
 
 pub mod coordinator;
 pub mod dataset;

@@ -1,31 +1,36 @@
 //! `bayesdm` CLI — the leader entrypoint of the L3 coordinator.
 //!
-//! Subcommands map 1:1 to the paper's experiments (see DESIGN.md §5):
+//! Subcommands map 1:1 to the paper's experiments (see DESIGN.md):
 //!
-//! * `serve`   — run the router/batcher over the test set and report
-//!   latency/throughput (the end-to-end driver).
-//! * `eval`    — test-set accuracy of a method through the PJRT path.
+//! * `serve`   — run the router/batcher over the batched reference engine
+//!   and report latency/throughput (the end-to-end driver).
+//! * `eval`    — batched multi-threaded test-set accuracy of a method.
 //! * `tables`  — print Table III / IV / V reproductions.
 //! * `fig6`    — render the accuracy-vs-shrink-ratio curves from
 //!   `artifacts/fig6.json` (built by `make fig6`).
 //! * `hwsweep` — Fig 7: area vs α.
 //! * `plan`    — show a method's artifact dispatch schedule.
+//!
+//! `serve` and `eval` read the trained posterior + test set from the
+//! artifact directory, or run on the self-contained synthetic model and
+//! dataset with `--synthetic` (no `make artifacts` needed).
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-
+use bayesdm::bail;
+use bayesdm::coordinator::engine::default_workers;
 use bayesdm::coordinator::plan::{InferenceMethod, PlanSummary};
-use bayesdm::coordinator::{serve, Executor, ServerConfig};
-use bayesdm::dataset::{load_images, load_weights};
+use bayesdm::coordinator::{serve_engine, Engine, EngineConfig, ServerConfig};
+use bayesdm::dataset::{load_images, load_weights, Dataset, SynthSpec, Synthesizer};
 use bayesdm::grng::uniform::XorShift128Plus;
 use bayesdm::grng::Ziggurat;
 use bayesdm::hwsim::report::{fig7_rows, render_fig7, render_table5, table5_rows};
 use bayesdm::nn::bnn::{BnnModel, Method as NnMethod};
 use bayesdm::nn::fixed_infer::QBnnModel;
 use bayesdm::opcount::report::{render_table3, render_table4, table4_rows};
-use bayesdm::runtime::Engine;
 use bayesdm::util::cli::Args;
+use bayesdm::util::error::{Context, Error, Result};
 use bayesdm::util::Json;
 use bayesdm::MNIST_ARCH;
 
@@ -35,29 +40,37 @@ bayesdm — DM-BNN inference coordinator (Jia et al. 2020 reproduction)
 USAGE: bayesdm [--artifacts DIR] <subcommand> [flags]
 
 SUBCOMMANDS:
-  serve    --method M --requests N --alpha A --max-batch B --workers W
-  eval     --method M --limit N --alpha A
+  serve    --method M --requests N --max-batch B --workers W [--synthetic]
+  eval     --method M --limit N --batch B --workers W [--synthetic]
   tables   --table {3|4|5} [--limit N]
   fig6
   hwsweep
   plan     --method M --alpha A
 
-methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)";
+methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
+--workers: engine pool threads (default: one per core)";
 
 fn parse_method(s: &str, alpha: f64) -> Result<InferenceMethod> {
     InferenceMethod::parse(s, alpha)
         .with_context(|| format!("unknown method `{s}` (standard|hybrid|dm)"))
 }
 
-fn build_executor(artifacts: &str) -> Result<Executor> {
-    let engine = Engine::new(artifacts)?;
+/// Load the trained posterior + served test set, or the self-contained
+/// synthetic pair.
+fn load_model_and_data(artifacts: &str, synthetic: bool) -> Result<(BnnModel, Dataset)> {
+    if synthetic {
+        let model = BnnModel::synthetic(&MNIST_ARCH, 0xBA13_5EED);
+        let data = Synthesizer::new(SynthSpec::mnist()).dataset(1024);
+        return Ok((model, data));
+    }
     let weights = load_weights(format!("{artifacts}/weights_mnist_bnn.bin"))
-        .context("loading posterior — run `make artifacts`")?;
-    Executor::new(engine, weights, 0xBA135)
+        .context("loading posterior — run `make artifacts` or pass --synthetic")?;
+    let test = load_images(format!("{artifacts}/data_mnist_test.bin"))?;
+    Ok((BnnModel::new(weights), test))
 }
 
 fn main() -> Result<()> {
-    let mut args = Args::parse(std::env::args()).map_err(|e| anyhow::anyhow!(e))?;
+    let mut args = Args::parse(std::env::args()).map_err(Error::msg)?;
     let artifacts = args.get("artifacts", "artifacts");
     let sub = match args.subcommand.clone() {
         Some(s) => s,
@@ -69,18 +82,19 @@ fn main() -> Result<()> {
     match sub.as_str() {
         "serve" => {
             let method = args.get("method", "dm");
-            let requests: usize = args.get_parse("requests", 200).map_err(anyhow::Error::msg)?;
-            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(anyhow::Error::msg)?;
-            let max_batch: usize = args.get_parse("max-batch", 8).map_err(anyhow::Error::msg)?;
-            let workers: usize = args.get_parse("workers", 2).map_err(anyhow::Error::msg)?;
-            args.finish().map_err(anyhow::Error::msg)?;
+            let requests: usize = args.get_parse("requests", 200).map_err(Error::msg)?;
+            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(Error::msg)?;
+            let max_batch: usize = args.get_parse("max-batch", 8).map_err(Error::msg)?;
+            let pool = default_workers();
+            let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
+            let synthetic = args.has("synthetic");
+            args.finish().map_err(Error::msg)?;
             let m = parse_method(&method, alpha)?;
-            let test = load_images(format!("{artifacts}/data_mnist_test.bin"))?;
-            let art_dir = artifacts.clone();
-            let handle = serve(
-                move || build_executor(&art_dir),
-                ServerConfig { max_batch, workers, ..ServerConfig::default() },
-            );
+            let (model, test) = load_model_and_data(&artifacts, synthetic)?;
+            let engine = Arc::new(Engine::new(model, EngineConfig { workers, seed: 0xBA135 }));
+            // One dispatch worker: the engine pool is the parallelism.
+            let cfg = ServerConfig { max_batch, workers: 1, ..ServerConfig::default() };
+            let handle = serve_engine(engine, cfg);
             let n = requests.min(test.len());
             let t0 = Instant::now();
             let mut pending = Vec::with_capacity(n);
@@ -89,7 +103,7 @@ fn main() -> Result<()> {
                     test.labels[i],
                     handle
                         .classify(test.image(i).to_vec(), m.clone())
-                        .map_err(anyhow::Error::msg)?,
+                        .map_err(Error::msg)?,
                 ));
             }
             let mut correct = 0usize;
@@ -112,15 +126,24 @@ fn main() -> Result<()> {
         }
         "eval" => {
             let method = args.get("method", "dm");
-            let limit: usize = args.get_parse("limit", 500).map_err(anyhow::Error::msg)?;
-            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(anyhow::Error::msg)?;
-            args.finish().map_err(anyhow::Error::msg)?;
+            let limit: usize = args.get_parse("limit", 500).map_err(Error::msg)?;
+            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(Error::msg)?;
+            let batch: usize = args.get_parse("batch", 32).map_err(Error::msg)?;
+            let pool = default_workers();
+            let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
+            let synthetic = args.has("synthetic");
+            args.finish().map_err(Error::msg)?;
             let m = parse_method(&method, alpha)?;
-            let exec = build_executor(&artifacts)?;
-            let test = load_images(format!("{artifacts}/data_mnist_test.bin"))?;
+            let (model, test) = load_model_and_data(&artifacts, synthetic)?;
+            let engine = Engine::new(model, EngineConfig { workers, seed: 0xE7A1 });
             let n = limit.min(test.len());
             let t0 = Instant::now();
-            let acc = exec.accuracy(&test.images[..n * test.dim], &test.labels[..n], &m)?;
+            let acc = engine.accuracy(
+                &test.images[..n * test.dim],
+                &test.labels[..n],
+                &m.to_reference(),
+                batch,
+            );
             println!(
                 "method={method} voters={} n={n} accuracy={:.2}% ({:.2}s, {:.1} ms/img)",
                 m.voters(),
@@ -130,9 +153,9 @@ fn main() -> Result<()> {
             );
         }
         "tables" => {
-            let table: u8 = args.get_parse("table", 0).map_err(anyhow::Error::msg)?;
-            let limit: usize = args.get_parse("limit", 300).map_err(anyhow::Error::msg)?;
-            args.finish().map_err(anyhow::Error::msg)?;
+            let table: u8 = args.get_parse("table", 0).map_err(Error::msg)?;
+            let limit: usize = args.get_parse("limit", 300).map_err(Error::msg)?;
+            args.finish().map_err(Error::msg)?;
             match table {
                 3 => {
                     println!("{}", render_table3(200, 784, 100));
@@ -152,11 +175,11 @@ fn main() -> Result<()> {
             }
         }
         "fig6" => {
-            args.finish().map_err(anyhow::Error::msg)?;
+            args.finish().map_err(Error::msg)?;
             let path = format!("{artifacts}/fig6.json");
             let text = std::fs::read_to_string(&path)
                 .with_context(|| format!("{path} missing — run `make fig6`"))?;
-            let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let v = Json::parse(&text).map_err(Error::msg)?;
             println!("Fig 6 — NN vs BNN accuracy vs shrink ratio");
             let datasets = v
                 .get("datasets")
@@ -182,14 +205,14 @@ fn main() -> Result<()> {
             }
         }
         "hwsweep" => {
-            args.finish().map_err(anyhow::Error::msg)?;
+            args.finish().map_err(Error::msg)?;
             let rows = fig7_rows(&[1.0, 0.8, 0.6, 0.5, 0.4, 0.3, 0.2, 0.1, 0.05]);
             println!("{}", render_fig7(&rows));
         }
         "plan" => {
             let method = args.get("method", "dm");
-            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(anyhow::Error::msg)?;
-            args.finish().map_err(anyhow::Error::msg)?;
+            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(Error::msg)?;
+            args.finish().map_err(Error::msg)?;
             let m = parse_method(&method, alpha)?;
             let p = PlanSummary::build(&MNIST_ARCH, &m, 10);
             println!("plan for {} ({} voters):", p.method, p.voters);
@@ -230,7 +253,11 @@ fn measure_accuracies(
         let acc = if quantized {
             QBnnModel::from_posterior(&weights).accuracy(images, labels, m, &mut g)
         } else {
-            BnnModel::new(weights.clone()).accuracy(images, labels, m, &mut g)
+            let engine = Engine::new(
+                BnnModel::new(weights.clone()),
+                EngineConfig { workers: default_workers(), seed: 42 + i as u64 },
+            );
+            engine.accuracy(images, labels, m, 32)
         };
         out[i] = Some(acc);
     }

@@ -1,0 +1,176 @@
+//! Batched, multi-threaded evaluation over the reference BNN.
+//!
+//! This is the request-serving shape of the paper's memoization idea,
+//! lifted one level: where DM-BNN memoizes the feature decomposition
+//! across *voters* (Θ = μ + σ∘H is never re-materialized per voter), the
+//! batch path memoizes the sampled uncertainty across *inputs* as well.
+//! [`evaluate_batch`] draws the per-layer (H, Hb) banks ONCE per batch
+//! and shares them, read-only, across every input and every voter — the
+//! Θ sampling is paid once per batch instead of once per (input, voter).
+//!
+//! # Parity contract
+//!
+//! `evaluate_batch(model, xs, m, seed, w).logits[i]` is **bit-identical**
+//! (logits *and* op counts) to the serial
+//! `model.evaluate(&xs[i], m, &mut default_grng(seed))`, for every worker
+//! count `w`.  This holds by construction: serial evaluation is
+//! `sample_banks` + `evaluate_with_banks`, every serial call on a fresh
+//! `default_grng(seed)` draws the same banks the batch draws once, and
+//! f32 arithmetic inside `evaluate_with_banks` is identical per input.
+//! The integration test `tests/batch_parity.rs` pins this for batches of
+//! 1, 7 and 64 across all three methods.
+//!
+//! # Threading
+//!
+//! Inputs are partitioned into contiguous chunks across `std::thread`
+//! scoped workers (no async runtime); each worker owns a private
+//! [`OpCounter`] and its chunk of the output, so the hot loop takes no
+//! locks.  Chunks are reassembled in input order, making results
+//! independent of thread scheduling.
+
+use crate::grng::{default_grng, Grng};
+use crate::opcount::counter::OpCounter;
+
+use super::bnn::{BnnModel, Method};
+
+/// Result of one batch evaluation.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    /// Per-input voter logit stacks (`logits[i][k]` = voter k of input i).
+    pub logits: Vec<Vec<Vec<f32>>>,
+    /// Instrumented MUL/ADD counts aggregated over all inputs/workers.
+    pub ops: OpCounter,
+}
+
+/// Evaluate a batch of inputs with shared uncertainty banks drawn from
+/// the default generator seeded with `seed` (see the module docs for the
+/// exact semantics), on up to `workers` scoped threads.
+pub fn evaluate_batch(
+    model: &BnnModel,
+    inputs: &[Vec<f32>],
+    method: &Method,
+    seed: u64,
+    workers: usize,
+) -> BatchResult {
+    let mut g = default_grng(seed);
+    evaluate_batch_with(model, inputs, method, &mut g, workers)
+}
+
+/// Like [`evaluate_batch`], drawing the shared banks from a caller-owned
+/// generator (the banks consume exactly one evaluation's worth of draws).
+pub fn evaluate_batch_with(
+    model: &BnnModel,
+    inputs: &[Vec<f32>],
+    method: &Method,
+    g: &mut dyn Grng,
+    workers: usize,
+) -> BatchResult {
+    let n = inputs.len();
+    if n == 0 {
+        return BatchResult { logits: Vec::new(), ops: OpCounter::default() };
+    }
+    // Θ sampling, once per batch: this is the memoization.
+    let banks = model.sample_banks(method, g);
+
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        let mut ops = OpCounter::default();
+        let logits = inputs
+            .iter()
+            .map(|x| model.evaluate_with_banks(x, method, &banks, &mut ops))
+            .collect();
+        return BatchResult { logits, ops };
+    }
+
+    let chunk = n.div_ceil(workers);
+    let mut per_chunk = Vec::with_capacity(workers);
+    std::thread::scope(|s| {
+        let banks = &banks;
+        let mut handles = Vec::with_capacity(workers);
+        for chunk_inputs in inputs.chunks(chunk) {
+            handles.push(s.spawn(move || {
+                let mut ops = OpCounter::default();
+                let logits = chunk_inputs
+                    .iter()
+                    .map(|x| model.evaluate_with_banks(x, method, banks, &mut ops))
+                    .collect::<Vec<_>>();
+                (logits, ops)
+            }));
+        }
+        for h in handles {
+            per_chunk.push(h.join().expect("batch worker panicked"));
+        }
+    });
+
+    let mut logits = Vec::with_capacity(n);
+    let mut ops = OpCounter::default();
+    for (chunk_logits, chunk_ops) in per_chunk {
+        logits.extend(chunk_logits);
+        ops += chunk_ops;
+    }
+    BatchResult { logits, ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::uniform::{UniformSource, XorShift128Plus};
+
+    fn inputs(count: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = XorShift128Plus::new(seed);
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push((0..dim).map(|_| r.next_f32()).collect());
+        }
+        out
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let model = BnnModel::synthetic(&[6, 4], 1);
+        let r = evaluate_batch(&model, &[], &Method::Standard { t: 3 }, 0, 4);
+        assert!(r.logits.is_empty());
+        assert_eq!(r.ops, OpCounter::default());
+    }
+
+    #[test]
+    fn batch_matches_serial_per_input() {
+        let model = BnnModel::synthetic(&[10, 8, 4], 2);
+        let xs = inputs(5, 10, 3);
+        let method = Method::DmBnn { schedule: vec![2, 2, 1] };
+        let batch = evaluate_batch(&model, &xs, &method, 42, 3);
+        let mut serial_ops = OpCounter::default();
+        for (i, x) in xs.iter().enumerate() {
+            let mut g = default_grng(42);
+            let (logits, ops) = model.evaluate(x, &method, &mut g);
+            assert_eq!(batch.logits[i], logits, "input {i}");
+            serial_ops += ops;
+        }
+        assert_eq!(batch.ops, serial_ops);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let model = BnnModel::synthetic(&[12, 6, 5], 4);
+        let xs = inputs(9, 12, 5);
+        let method = Method::Hybrid { t: 4 };
+        let one = evaluate_batch(&model, &xs, &method, 7, 1);
+        for w in [2usize, 3, 8, 64] {
+            let many = evaluate_batch(&model, &xs, &method, 7, w);
+            assert_eq!(many.logits, one.logits, "workers={w}");
+            assert_eq!(many.ops, one.ops, "workers={w}");
+        }
+    }
+
+    #[test]
+    fn voter_counts_per_input() {
+        let model = BnnModel::synthetic(&[8, 6, 4], 6);
+        let xs = inputs(4, 8, 7);
+        let r = evaluate_batch(&model, &xs, &Method::DmBnn { schedule: vec![3, 2, 1] }, 0, 2);
+        assert_eq!(r.logits.len(), 4);
+        for l in &r.logits {
+            assert_eq!(l.len(), 6);
+            assert_eq!(l[0].len(), 4);
+        }
+    }
+}

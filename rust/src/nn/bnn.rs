@@ -4,9 +4,23 @@
 //! with any [`Method`], drawing uncertainty from a caller-supplied
 //! [`Grng`] (so tests can pin H) and reporting instrumented op counts
 //! (validated against `opcount::model` in the integration tests).
+//!
+//! Evaluation is factored into two stages so the batched engine
+//! (`nn::batch`) can share work across a whole batch:
+//!
+//! 1. [`BnnModel::sample_banks`] draws every (H, Hb) pair the method
+//!    consumes, in the exact stream order single-input evaluation uses;
+//! 2. [`BnnModel::evaluate_with_banks`] runs the pure dataflow against
+//!    those pre-sampled banks.
+//!
+//! [`BnnModel::evaluate`] is literally stage 1 followed by stage 2, which
+//! is what makes the batch-vs-serial parity contract exact (see
+//! `nn::batch`).
 
 use crate::dataset::LayerPosterior;
+use crate::grng::uniform::{UniformSource, XorShift128Plus};
 use crate::grng::Grng;
+use crate::layer_dims;
 use crate::opcount::counter::OpCounter;
 
 use super::linear::{argmax, dm_voter, precompute, standard_voter, vote};
@@ -26,7 +40,22 @@ impl Method {
             Method::DmBnn { schedule } => schedule.iter().product(),
         }
     }
+
+    /// How many (H, Hb) pairs each of `nl` layers consumes per evaluation.
+    pub fn layer_draws(&self, nl: usize) -> Vec<usize> {
+        match self {
+            Method::Standard { t } | Method::Hybrid { t } => vec![*t; nl],
+            Method::DmBnn { schedule } => {
+                assert_eq!(schedule.len(), nl, "schedule must cover every layer");
+                schedule.clone()
+            }
+        }
+    }
 }
+
+/// Pre-sampled uncertainty: `banks[li]` holds the (H, Hb) pairs layer `li`
+/// consumes, in draw order (H is M×N row-major, Hb is M).
+pub type UncertaintyBanks = Vec<Vec<(Vec<f32>, Vec<f32>)>>;
 
 /// The reference multi-layer Bayesian MLP.
 pub struct BnnModel {
@@ -40,6 +69,25 @@ impl BnnModel {
             assert_eq!(w[1].n, w[0].m, "layer dims must chain");
         }
         Self { layers }
+    }
+
+    /// A deterministic random (untrained) posterior over `arch` — the
+    /// shared fixture for benches and tests that must run with zero
+    /// artifact dependencies.
+    pub fn synthetic(arch: &[usize], seed: u64) -> Self {
+        let mut r = XorShift128Plus::new(seed);
+        let layers = layer_dims(arch)
+            .into_iter()
+            .map(|(m, n)| LayerPosterior {
+                m,
+                n,
+                mu: (0..m * n).map(|_| r.next_f32() - 0.5).collect(),
+                sigma: (0..m * n).map(|_| 0.01 + 0.05 * r.next_f32()).collect(),
+                mu_b: (0..m).map(|_| r.next_f32() - 0.5).collect(),
+                sigma_b: (0..m).map(|_| 0.01 + 0.05 * r.next_f32()).collect(),
+            })
+            .collect();
+        Self::new(layers)
     }
 
     pub fn num_layers(&self) -> usize {
@@ -63,6 +111,102 @@ impl BnnModel {
         (h, hb)
     }
 
+    /// Sample every (H, Hb) pair `method` consumes, layer-major and
+    /// voter-minor — the exact order single-input [`BnnModel::evaluate`]
+    /// drains the stream, so
+    /// `evaluate(x, m, g) == evaluate_with_banks(x, m, &sample_banks(m, g))`
+    /// bit-for-bit.
+    ///
+    /// For DM-BNN the banks ARE the paper's memoized uncertainty: the
+    /// fan-out tree (Fig 4b) shares the layer's `t_l` matrices across every
+    /// distinct input, which is why only `L·√T` samples are needed — and
+    /// why a whole batch can share one set of banks (`nn::batch`).
+    pub fn sample_banks(&self, method: &Method, g: &mut dyn Grng) -> UncertaintyBanks {
+        let draws = method.layer_draws(self.num_layers());
+        draws
+            .iter()
+            .enumerate()
+            .map(|(li, &tl)| (0..tl).map(|_| self.sample_h(li, g)).collect())
+            .collect()
+    }
+
+    /// Evaluate one input against pre-sampled uncertainty banks; returns
+    /// the voter logits and accumulates instrumented op counts into `ops`.
+    pub fn evaluate_with_banks(
+        &self,
+        x: &[f32],
+        method: &Method,
+        banks: &UncertaintyBanks,
+        ops: &mut OpCounter,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(x.len(), self.input_dim());
+        let nl = self.num_layers();
+        let draws = method.layer_draws(nl);
+        assert_eq!(banks.len(), nl, "banks must cover every layer");
+        for (li, bank) in banks.iter().enumerate() {
+            assert_eq!(bank.len(), draws[li], "bank {li} has the wrong voter count");
+        }
+        match method {
+            Method::Standard { t } => {
+                let mut acts: Vec<Vec<f32>> = vec![x.to_vec(); *t];
+                for li in 0..nl {
+                    let l = &self.layers[li];
+                    let relu = li != nl - 1;
+                    for (act, (h, hb)) in acts.iter_mut().zip(&banks[li]) {
+                        let mut y = vec![0.0f32; l.m];
+                        standard_voter(l, act, h, hb, relu, &mut y, ops);
+                        *act = y;
+                    }
+                }
+                acts
+            }
+            Method::Hybrid { t } => {
+                let l0 = &self.layers[0];
+                let mut beta = vec![0.0f32; l0.m * l0.n];
+                let mut eta = vec![0.0f32; l0.m];
+                precompute(l0, x, &mut beta, &mut eta, ops);
+                let mut acts: Vec<Vec<f32>> = Vec::with_capacity(*t);
+                let relu0 = nl > 1;
+                for (h, hb) in &banks[0] {
+                    let mut y = vec![0.0f32; l0.m];
+                    dm_voter(l0, &beta, &eta, h, hb, 0..l0.m, relu0, &mut y, ops);
+                    acts.push(y);
+                }
+                for li in 1..nl {
+                    let l = &self.layers[li];
+                    let relu = li != nl - 1;
+                    for (act, (h, hb)) in acts.iter_mut().zip(&banks[li]) {
+                        let mut y = vec![0.0f32; l.m];
+                        standard_voter(l, act, h, hb, relu, &mut y, ops);
+                        *act = y;
+                    }
+                }
+                acts
+            }
+            Method::DmBnn { schedule } => {
+                let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+                for li in 0..nl {
+                    let l = &self.layers[li];
+                    let relu = li != nl - 1;
+                    let hs = &banks[li];
+                    let mut next = Vec::with_capacity(acts.len() * schedule[li]);
+                    let mut beta = vec![0.0f32; l.m * l.n];
+                    let mut eta = vec![0.0f32; l.m];
+                    for a in &acts {
+                        precompute(l, a, &mut beta, &mut eta, ops);
+                        for (h, hb) in hs {
+                            let mut y = vec![0.0f32; l.m];
+                            dm_voter(l, &beta, &eta, h, hb, 0..l.m, relu, &mut y, ops);
+                            next.push(y);
+                        }
+                    }
+                    acts = next;
+                }
+                acts
+            }
+        }
+    }
+
     /// Evaluate one input with the given method; returns (voter logits,
     /// op counter).
     pub fn evaluate(
@@ -71,78 +215,10 @@ impl BnnModel {
         method: &Method,
         g: &mut dyn Grng,
     ) -> (Vec<Vec<f32>>, OpCounter) {
-        assert_eq!(x.len(), self.input_dim());
+        let banks = self.sample_banks(method, g);
         let mut ops = OpCounter::default();
-        let nl = self.num_layers();
-        match method {
-            Method::Standard { t } => {
-                let mut acts: Vec<Vec<f32>> = vec![x.to_vec(); *t];
-                for li in 0..nl {
-                    let l = &self.layers[li];
-                    let relu = li != nl - 1;
-                    for act in acts.iter_mut() {
-                        let (h, hb) = self.sample_h(li, g);
-                        let mut y = vec![0.0f32; l.m];
-                        standard_voter(l, act, &h, &hb, relu, &mut y, &mut ops);
-                        *act = y;
-                    }
-                }
-                (acts, ops)
-            }
-            Method::Hybrid { t } => {
-                let l0 = &self.layers[0];
-                let mut beta = vec![0.0f32; l0.m * l0.n];
-                let mut eta = vec![0.0f32; l0.m];
-                precompute(l0, x, &mut beta, &mut eta, &mut ops);
-                let mut acts: Vec<Vec<f32>> = Vec::with_capacity(*t);
-                let relu0 = nl > 1;
-                for _ in 0..*t {
-                    let (h, hb) = self.sample_h(0, g);
-                    let mut y = vec![0.0f32; l0.m];
-                    dm_voter(l0, &beta, &eta, &h, &hb, 0..l0.m, relu0, &mut y, &mut ops);
-                    acts.push(y);
-                }
-                for li in 1..nl {
-                    let l = &self.layers[li];
-                    let relu = li != nl - 1;
-                    for act in acts.iter_mut() {
-                        let (h, hb) = self.sample_h(li, g);
-                        let mut y = vec![0.0f32; l.m];
-                        standard_voter(l, act, &h, &hb, relu, &mut y, &mut ops);
-                        *act = y;
-                    }
-                }
-                (acts, ops)
-            }
-            Method::DmBnn { schedule } => {
-                assert_eq!(schedule.len(), nl);
-                let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
-                for li in 0..nl {
-                    let l = &self.layers[li];
-                    let relu = li != nl - 1;
-                    let tl = schedule[li];
-                    // Sample the layer's t_l uncertainty matrices ONCE and
-                    // share them across all distinct inputs — the paper's
-                    // fan-out tree (Fig 4b) reuses uncertainty this way,
-                    // which is exactly why only L√T samples are needed.
-                    let hs: Vec<(Vec<f32>, Vec<f32>)> =
-                        (0..tl).map(|_| self.sample_h(li, g)).collect();
-                    let mut next = Vec::with_capacity(acts.len() * tl);
-                    let mut beta = vec![0.0f32; l.m * l.n];
-                    let mut eta = vec![0.0f32; l.m];
-                    for a in &acts {
-                        precompute(l, a, &mut beta, &mut eta, &mut ops);
-                        for (h, hb) in &hs {
-                            let mut y = vec![0.0f32; l.m];
-                            dm_voter(l, &beta, &eta, h, hb, 0..l.m, relu, &mut y, &mut ops);
-                            next.push(y);
-                        }
-                    }
-                    acts = next;
-                }
-                (acts, ops)
-            }
-        }
+        let logits = self.evaluate_with_banks(x, method, &banks, &mut ops);
+        (logits, ops)
     }
 
     /// Predict the class of one input (vote + argmax).
@@ -270,6 +346,44 @@ mod tests {
         let mut g = Ziggurat::new(XorShift128Plus::new(3));
         let p = model.predict(&x, &Method::Standard { t: 3 }, &mut g);
         assert!(p < 5);
+    }
+
+    #[test]
+    fn evaluate_is_sample_banks_then_banked_eval() {
+        // The two-stage split must be exact: same stream, same logits,
+        // same ops — this is the contract the batched engine builds on.
+        let model = tiny_model(6);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        for method in [
+            Method::Standard { t: 4 },
+            Method::Hybrid { t: 4 },
+            Method::DmBnn { schedule: vec![2, 2, 1] },
+        ] {
+            let mut g1 = Ziggurat::new(XorShift128Plus::new(99));
+            let (want, want_ops) = model.evaluate(&x, &method, &mut g1);
+
+            let mut g2 = Ziggurat::new(XorShift128Plus::new(99));
+            let banks = model.sample_banks(&method, &mut g2);
+            let mut ops = OpCounter::default();
+            let got = model.evaluate_with_banks(&x, &method, &banks, &mut ops);
+            assert_eq!(got, want, "{method:?}");
+            assert_eq!(ops, want_ops, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn synthetic_model_matches_arch() {
+        let m = BnnModel::synthetic(&[16, 12, 8, 5], 3);
+        assert_eq!(m.input_dim(), 16);
+        assert_eq!(m.output_dim(), 5);
+        assert_eq!(m.num_layers(), 3);
+        assert!(m.layers.iter().all(|l| l.sigma.iter().all(|&s| s > 0.0)));
+        // deterministic per seed, distinct across seeds
+        let a = BnnModel::synthetic(&[8, 4], 1);
+        let b = BnnModel::synthetic(&[8, 4], 1);
+        let c = BnnModel::synthetic(&[8, 4], 2);
+        assert_eq!(a.layers[0].mu, b.layers[0].mu);
+        assert_ne!(a.layers[0].mu, c.layers[0].mu);
     }
 
     #[test]

@@ -4,16 +4,20 @@
 //! [`linear`] implements the two single-layer dataflows of the paper
 //! (Algorithm 1 standard, Algorithm 2 DM) over plain slices; [`bnn`]
 //! chains them into the three multi-layer methods (Standard / Hybrid-BNN /
-//! DM-BNN, Fig 4) and full test-set evaluation; [`fixed_infer`] is the
-//! 8-bit fixed-point variant behind the Table V accuracy column.
+//! DM-BNN, Fig 4) and full test-set evaluation; [`batch`] lifts them to
+//! batched multi-threaded evaluation with per-batch uncertainty
+//! memoization (the serving hot path); [`fixed_infer`] is the 8-bit
+//! fixed-point variant behind the Table V accuracy column.
 //!
-//! Everything here is deliberately simple, allocation-honest rust: it is
-//! the ground truth the AOT/PJRT path is validated against, so clarity
-//! beats speed (the optimized path is the PJRT one).
+//! The single-input code is deliberately simple, allocation-honest rust:
+//! it is the ground truth the batched engine and the (feature-gated)
+//! AOT/PJRT path are validated against.
 
+pub mod batch;
 pub mod bnn;
 pub mod fixed_infer;
 pub mod linear;
 
-pub use bnn::{BnnModel, Method};
+pub use batch::{evaluate_batch, BatchResult};
+pub use bnn::{BnnModel, Method, UncertaintyBanks};
 pub use linear::{dm_voter, precompute, standard_voter};

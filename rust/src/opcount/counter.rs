@@ -53,6 +53,20 @@ impl std::ops::Add for OpCounter {
     }
 }
 
+impl std::ops::AddAssign for OpCounter {
+    fn add_assign(&mut self, rhs: OpCounter) {
+        self.muls += rhs.muls;
+        self.adds += rhs.adds;
+    }
+}
+
+/// Aggregate per-worker counters: `workers.map(|w| w.ops).sum()`.
+impl std::iter::Sum for OpCounter {
+    fn sum<I: Iterator<Item = OpCounter>>(iter: I) -> OpCounter {
+        iter.fold(OpCounter::default(), |acc, c| acc + c)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +97,20 @@ mod tests {
         assert_eq!(c, OpCounter { muls: 4, adds: 6 });
         c.reset();
         assert_eq!(c, OpCounter::default());
+    }
+
+    #[test]
+    fn add_assign_and_sum_aggregate_workers() {
+        let mut acc = OpCounter { muls: 1, adds: 1 };
+        acc += OpCounter { muls: 2, adds: 3 };
+        assert_eq!(acc, OpCounter { muls: 3, adds: 4 });
+
+        let per_worker = vec![
+            OpCounter { muls: 10, adds: 20 },
+            OpCounter { muls: 1, adds: 2 },
+            OpCounter::default(),
+        ];
+        let total: OpCounter = per_worker.into_iter().sum();
+        assert_eq!(total, OpCounter { muls: 11, adds: 22 });
     }
 }

@@ -263,7 +263,7 @@ mod tests {
         // sees 100 distinct inputs, each needing its own precompute) gives
         // ≈77% — the paper appears to count only 10 distinct layer-3
         // inputs.  Assert our exact figure with a band that covers both
-        // readings (documented in EXPERIMENTS.md).
+        // readings (see DESIGN.md §6).
         assert!(
             reduction > 0.72 && reduction < 0.88,
             "dm reduction {reduction}"

@@ -10,8 +10,10 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use anyhow::{ensure, Context, Result};
 use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::util::error::{Context, Error, Result};
+use crate::{ensure, err};
 
 use super::manifest::{ArtifactSpec, Manifest};
 
@@ -26,8 +28,10 @@ impl LoadedArtifact {
     /// (the AOT modules always return a tuple — it is flattened here).
     pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
         self.check_arity(args.len())?;
-        let result = self.exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
+        let result = self.exe.execute::<Literal>(args).map_err(Error::msg)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::msg)?;
+        let outs = result.to_tuple().map_err(Error::msg)?;
         ensure!(
             outs.len() == self.spec.outputs.len(),
             "artifact {} returned {} outputs, manifest says {}",
@@ -41,8 +45,10 @@ impl LoadedArtifact {
     /// Execute with device-buffer arguments (resident weights path).
     pub fn run_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
         self.check_arity(args.len())?;
-        let result = self.exe.execute_b::<&PjRtBuffer>(args)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
+        let result = self.exe.execute_b::<&PjRtBuffer>(args).map_err(Error::msg)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::msg)?;
+        let outs = result.to_tuple().map_err(Error::msg)?;
         ensure!(outs.len() == self.spec.outputs.len(), "output arity mismatch");
         Ok(outs)
     }
@@ -69,7 +75,7 @@ impl Engine {
     /// Create a CPU engine over an artifact directory.
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let client = PjRtClient::cpu().map_err(|e| err!("PJRT cpu client: {e}"))?;
         Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
@@ -81,12 +87,12 @@ impl Engine {
         let spec = self.manifest.get(name)?.clone();
         let path = self.manifest.hlo_path(&spec);
         let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            .map_err(|e| err!("parsing {}: {e}", path.display()))?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            .map_err(|e| err!("compiling {name}: {e}"))?;
         let loaded = std::sync::Arc::new(LoadedArtifact { spec, exe });
         self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
         Ok(loaded)
@@ -117,19 +123,19 @@ impl Engine {
         );
         self.client
             .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow::anyhow!("upload: {e}"))
+            .map_err(|e| err!("upload: {e}"))
     }
 }
 
 /// Build an f32 literal of the given shape (host-side argument).
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
     let lit = Literal::vec1(data);
-    lit.reshape(dims).map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e}"))
+    lit.reshape(dims).map_err(|e| err!("reshape {dims:?}: {e}"))
 }
 
 /// Extract an f32 literal into a Vec.
 pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    lit.to_vec::<f32>().map_err(|e| err!("to_vec: {e}"))
 }
 
 #[cfg(test)]

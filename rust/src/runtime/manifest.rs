@@ -6,9 +6,9 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, ensure, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::Json;
+use crate::{bail, ensure, err};
 
 /// One parameter (or output) of an artifact: name + static shape.
 #[derive(Debug, Clone, PartialEq)]
@@ -92,7 +92,7 @@ impl Manifest {
             format!("reading {} — run `make artifacts` first", path.display())
         })?;
         let root = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            .map_err(|e| err!("parsing {}: {e}", path.display()))?;
 
         let arch = root
             .get("arch")

@@ -13,9 +13,16 @@
 //!
 //! Python is never on this path: the rust binary is self-contained given
 //! `artifacts/`.
+//!
+//! [`client`] needs the `xla` crate and is gated behind the `pjrt`
+//! feature (the offline build environment cannot vendor it); [`manifest`]
+//! is plain parsing and always available — the plan layer and tests use
+//! it without a device.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use client::{Engine, LoadedArtifact};
 pub use manifest::{ArtifactSpec, Manifest, ParamSpec};

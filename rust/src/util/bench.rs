@@ -2,7 +2,7 @@
 //! offline).
 //!
 //! Warmup + repeated timed runs with mean / stddev / min, printed in a
-//! stable plain-text format the bench targets and EXPERIMENTS.md share.
+//! stable plain-text format the bench targets share (see DESIGN.md §6).
 
 use std::time::{Duration, Instant};
 

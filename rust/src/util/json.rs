@@ -41,7 +41,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err<T>(&self, msg: impl Into<String>) -> Result<T, JsonError> {
         Err(JsonError { msg: msg.into(), offset: self.pos })
     }
@@ -277,13 +277,6 @@ impl Json {
         }
     }
 
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -335,6 +328,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (so `json.to_string()` round-trips via `parse`).
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -3,6 +3,8 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 
+pub use error::{Context, Error, Result};
 pub use json::Json;

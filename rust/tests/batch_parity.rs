@@ -1,0 +1,149 @@
+//! Batch-vs-serial parity and serving integration for the batched engine.
+//!
+//! Zero artifact dependencies: everything runs on the synthetic posterior.
+//! The headline contract: `evaluate_batch` with a fixed seed produces
+//! **bit-identical logits and op counts** to serial `evaluate` (each input
+//! on a fresh generator with the same seed), across all three `Method`s,
+//! on batches of size 1, 7 and 64, for any worker count.
+
+use std::sync::Arc;
+
+use bayesdm::coordinator::plan::InferenceMethod;
+use bayesdm::coordinator::{serve_engine, Engine, EngineConfig, ServerConfig};
+use bayesdm::grng::default_grng;
+use bayesdm::nn::batch::evaluate_batch;
+use bayesdm::nn::bnn::{BnnModel, Method};
+use bayesdm::opcount::OpCounter;
+
+const SEED: u64 = 0x00DE_C0DE;
+const ARCH: [usize; 4] = [20, 16, 10, 6];
+
+fn model() -> BnnModel {
+    BnnModel::synthetic(&ARCH, 0xAB)
+}
+
+fn inputs(count: usize, seed: u64) -> Vec<Vec<f32>> {
+    use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+    let mut r = XorShift128Plus::new(seed);
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push((0..ARCH[0]).map(|_| r.next_f32()).collect());
+    }
+    out
+}
+
+fn methods() -> [Method; 3] {
+    [
+        Method::Standard { t: 5 },
+        Method::Hybrid { t: 5 },
+        Method::DmBnn { schedule: vec![2, 3, 2] },
+    ]
+}
+
+#[test]
+fn batch_is_bit_identical_to_serial_across_methods_and_sizes() {
+    let model = model();
+    for method in &methods() {
+        for &bs in &[1usize, 7, 64] {
+            let xs = inputs(bs, 1000 + bs as u64);
+            let batch = evaluate_batch(&model, &xs, method, SEED, 4);
+            assert_eq!(batch.logits.len(), bs);
+
+            let mut serial_ops = OpCounter::default();
+            for (i, x) in xs.iter().enumerate() {
+                let mut g = default_grng(SEED);
+                let (logits, ops) = model.evaluate(x, method, &mut g);
+                assert_eq!(batch.logits[i], logits, "{method:?} b={bs} input {i}");
+                serial_ops += ops;
+            }
+            assert_eq!(batch.ops, serial_ops, "{method:?} b={bs} op counts");
+        }
+    }
+}
+
+#[test]
+fn worker_count_never_changes_results() {
+    let model = model();
+    let xs = inputs(13, 3);
+    for method in &methods() {
+        let one = evaluate_batch(&model, &xs, method, SEED, 1);
+        for workers in [2usize, 4, 7, 32] {
+            let many = evaluate_batch(&model, &xs, method, SEED, workers);
+            assert_eq!(many.logits, one.logits, "{method:?} workers={workers}");
+            assert_eq!(many.ops, one.ops, "{method:?} workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn dm_batch_is_cheaper_than_standard_batch_at_equal_voters() {
+    // The paper's Table III claim survives batching: aggregated op counts
+    // for DM-BNN stay below Standard at the same voter count.
+    let model = model();
+    let xs = inputs(16, 5);
+    let std = evaluate_batch(&model, &xs, &Method::Standard { t: 8 }, SEED, 4);
+    let dm = evaluate_batch(&model, &xs, &Method::DmBnn { schedule: vec![2, 2, 2] }, SEED, 4);
+    assert!(dm.ops.muls < std.ops.muls);
+    assert!(dm.ops.total() < std.ops.total());
+}
+
+#[test]
+fn engine_seeded_matches_free_function_and_is_deterministic() {
+    let xs = inputs(9, 7);
+    let m = Method::DmBnn { schedule: vec![2, 2, 1] };
+    let e1 = Engine::new(model(), EngineConfig { workers: 3, seed: 42 });
+    let e2 = Engine::new(model(), EngineConfig { workers: 8, seed: 42 });
+
+    let a = e1.evaluate_batch_seeded(&xs, &m, SEED);
+    let b = evaluate_batch(e2.model(), &xs, &m, SEED, 8);
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.ops, b.ops);
+
+    // Engine call sequences replay identically under a fixed config seed.
+    for round in 0..3 {
+        let ra = e1.evaluate_batch(&xs, &m);
+        let rb = e2.evaluate_batch(&xs, &m);
+        assert_eq!(ra.logits, rb.logits, "round {round}");
+    }
+}
+
+#[test]
+fn server_over_batched_engine_answers_every_request() {
+    let engine = Arc::new(Engine::new(model(), EngineConfig { workers: 2, seed: 11 }));
+    let handle = serve_engine(
+        engine,
+        ServerConfig { max_batch: 8, workers: 2, ..ServerConfig::default() },
+    );
+    let xs = inputs(24, 9);
+    let dm = InferenceMethod::DmBnn { schedule: vec![2, 3, 2], alpha: 1.0 };
+    let pending: Vec<_> = xs
+        .iter()
+        .map(|x| handle.classify(x.clone(), dm.clone()).expect("submit"))
+        .collect();
+    for p in pending {
+        let r = p.wait().expect("response");
+        assert!(r.class < ARCH[3]);
+        assert_eq!(r.voters, 12);
+        assert!(r.confidence > 0.0 && r.confidence <= 1.0);
+        assert!(r.entropy >= 0.0);
+    }
+    let s = handle.metrics.summary();
+    assert_eq!(s.requests, 24);
+    assert_eq!(s.errors, 0);
+    assert_eq!(s.voters, 24 * 12);
+    handle.shutdown();
+}
+
+#[test]
+fn predict_and_accuracy_run_batched() {
+    let e = Engine::new(model(), EngineConfig { workers: 4, seed: 5 });
+    let xs = inputs(10, 11);
+    let preds = e.predict_batch(&xs, &Method::Standard { t: 3 });
+    assert_eq!(preds.len(), 10);
+    assert!(preds.iter().all(|&p| p < ARCH[3]));
+
+    let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+    let labels: Vec<u8> = (0..10).map(|i| (i % ARCH[3]) as u8).collect();
+    let acc = e.accuracy(&flat, &labels, &Method::Standard { t: 3 }, 4);
+    assert!((0.0..=1.0).contains(&acc));
+}

@@ -1,8 +1,11 @@
 //! Integration tests over the real AOT artifacts + PJRT runtime.
 //!
-//! These require `make artifacts` to have run (they are skipped with a
-//! message otherwise, so `cargo test` stays green on a fresh checkout).
-//! They validate the full L3→L1 contract:
+//! Compiled only with `--features pjrt` (the default offline build has no
+//! `xla` crate); the artifact-free batch/serving tests live in
+//! `batch_parity.rs`.  These additionally require `make artifacts` to
+//! have run (they are skipped with a message otherwise, so `cargo test`
+//! stays green on a fresh checkout).  They validate the full L3→L1
+//! contract:
 //!
 //! * every artifact in the manifest compiles and executes;
 //! * the PJRT kernels agree with the pure-rust `nn` oracle;
@@ -10,6 +13,8 @@
 //! * the α-blocked memory-friendly execution is bit-identical to the
 //!   unblocked one;
 //! * the serving layer routes/batches/answers.
+
+#![cfg(feature = "pjrt")]
 
 use bayesdm::coordinator::plan::InferenceMethod;
 use bayesdm::coordinator::{serve, Executor, ServerConfig};
@@ -289,9 +294,11 @@ fn server_routes_batches_and_answers() {
         return;
     }
     let handle = serve(
-        || {
-            let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin"))?;
-            Executor::new(Engine::new(ARTIFACTS)?, weights, 7)
+        || -> Result<Executor, String> {
+            let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin"))
+                .map_err(|e| e.to_string())?;
+            let engine = Engine::new(ARTIFACTS).map_err(|e| e.to_string())?;
+            Executor::new(engine, weights, 7).map_err(|e| e.to_string())
         },
         ServerConfig { max_batch: 4, workers: 1, ..ServerConfig::default() },
     );
