@@ -20,7 +20,10 @@ use bayesdm::MNIST_ARCH;
 
 fn engine() -> Arc<Engine> {
     let model = BnnModel::synthetic(&MNIST_ARCH, 0xE2E);
-    Arc::new(Engine::new(model, EngineConfig { workers: default_workers(), seed: 0xE2E }))
+    Arc::new(Engine::new(
+        model,
+        EngineConfig { workers: default_workers(), seed: 0xE2E, ..EngineConfig::default() },
+    ))
 }
 
 /// Serve `requests` images through a fresh server; returns (req/s, p50 µs,

@@ -9,6 +9,13 @@
 //! `split_seed(cfg.seed, i)`, so a fixed config and call sequence replays
 //! identical logits regardless of thread scheduling.
 //!
+//! The engine optionally owns a cross-request feature-decomposition cache
+//! (`nn::dmcache`, enabled via [`EngineConfig::cache`] / `--cache-mb`):
+//! repeated inputs in the serving stream skip the deterministic μ-path
+//! GEMVs while logits and logical op counts stay bit-identical; hit /
+//! miss / eviction counters surface through [`Engine::cache_stats`] and
+//! [`Engine::metrics_summary`].
+//!
 //! The (feature-gated) PJRT executor plugs into the same serving slot via
 //! [`super::server::InferenceBackend`]; this engine is the backend that
 //! works everywhere, with zero artifact dependencies.
@@ -18,10 +25,12 @@ use std::sync::Arc;
 
 use crate::dataset::LayerPosterior;
 use crate::grng::split_seed;
-use crate::nn::batch::{evaluate_batch, BatchResult};
+use crate::nn::batch::{evaluate_batch, evaluate_batch_cached, BatchResult};
 use crate::nn::bnn::{BnnModel, Method};
+use crate::nn::dmcache::{CacheConfig, CacheStats, CacheView, DmCache};
+use crate::util::hash::hash_f32_matrix;
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, MetricsSummary};
 use super::plan::InferenceMethod;
 use super::server::InferenceBackend;
 use super::vote;
@@ -31,18 +40,49 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
 }
 
+/// How the engine derives each batch's bank seed from the master seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SeedSchedule {
+    /// Batch `i` since construction draws `split_seed(seed, i)` — fresh
+    /// uncertainty every batch (the default; matches pre-cache behavior).
+    #[default]
+    Sequence,
+    /// Batch seed derives from the batch *content*: identical batches
+    /// draw identical banks, making each batch's answer a pure function
+    /// of its inputs, independent of engine call history.  Note the
+    /// guarantee is per *batch*, not per request — a request co-batched
+    /// with different neighbors hashes differently and draws different
+    /// banks, so per-request determinism additionally requires
+    /// single-request batches (`ServerConfig { max_batch: 1, .. }`), as
+    /// the server-level parity test does.  This is what makes
+    /// cache-on/cache-off responses comparable under concurrency, and it
+    /// pairs naturally with duplicate-heavy traffic.  Distinct batches
+    /// still get uncorrelated streams via `split_seed`.
+    ContentHash,
+}
+
 /// Engine tuning knobs.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Scoped worker threads per batch (≥ 1).
     pub workers: usize,
-    /// Master seed; batch `i` uses `split_seed(seed, i)`.
+    /// Master seed; see [`SeedSchedule`] for how per-batch seeds derive.
     pub seed: u64,
+    /// Cross-request feature-decomposition cache (off by default; the
+    /// `BAYESDM_CACHE_MB` env toggle flips the default for CI).
+    pub cache: CacheConfig,
+    /// Per-batch seed derivation.
+    pub seed_schedule: SeedSchedule,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { workers: default_workers(), seed: 0xBA7E_5D00 }
+        Self {
+            workers: default_workers(),
+            seed: 0xBA7E_5D00,
+            cache: CacheConfig::from_env(),
+            seed_schedule: SeedSchedule::Sequence,
+        }
     }
 }
 
@@ -51,16 +91,21 @@ pub struct Engine {
     model: BnnModel,
     workers: usize,
     seed: u64,
+    seed_schedule: SeedSchedule,
+    cache: Option<DmCache>,
     batches: AtomicU64,
     pub metrics: Arc<Metrics>,
 }
 
 impl Engine {
     pub fn new(model: BnnModel, cfg: EngineConfig) -> Self {
+        let cache = cfg.cache.enabled().then(|| DmCache::new(&cfg.cache));
         Self {
             model,
             workers: cfg.workers.max(1),
             seed: cfg.seed,
+            seed_schedule: cfg.seed_schedule,
+            cache,
             batches: AtomicU64::new(0),
             metrics: Arc::new(Metrics::new()),
         }
@@ -87,22 +132,56 @@ impl Engine {
         self.model.output_dim()
     }
 
-    /// Evaluate a batch with an explicit seed — fully deterministic and
-    /// independent of engine call history (the parity-tested entry point).
+    /// The engine's decomposition cache bound to its model, if enabled.
+    fn cache_view(&self) -> Option<CacheView<'_>> {
+        self.cache
+            .as_ref()
+            .map(|c| CacheView::new(c, self.model.fingerprint()))
+    }
+
+    /// Cache counters, `None` when the cache is disabled.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Serving metrics with the cache counters folded in.
+    pub fn metrics_summary(&self) -> MetricsSummary {
+        let mut s = self.metrics.summary();
+        s.cache = self.cache_stats();
+        s
+    }
+
+    /// Evaluate a batch with an explicit seed — logits and logical op
+    /// counts are fully deterministic and independent of engine call
+    /// history *and* cache state (the parity-tested entry point).
     pub fn evaluate_batch_seeded(
         &self,
         inputs: &[Vec<f32>],
         method: &Method,
         seed: u64,
     ) -> BatchResult {
-        evaluate_batch(&self.model, inputs, method, seed, self.workers)
+        match self.cache_view() {
+            Some(view) => evaluate_batch_cached(
+                &self.model,
+                inputs,
+                method,
+                seed,
+                self.workers,
+                Some(view),
+            ),
+            None => evaluate_batch(&self.model, inputs, method, seed, self.workers),
+        }
     }
 
-    /// Evaluate a batch on the engine's seed schedule: call `i` since
-    /// construction draws `split_seed(cfg.seed, i)`.
+    /// Evaluate a batch on the engine's seed schedule (see
+    /// [`SeedSchedule`]).
     pub fn evaluate_batch(&self, inputs: &[Vec<f32>], method: &Method) -> BatchResult {
         let idx = self.batches.fetch_add(1, Ordering::Relaxed);
-        self.evaluate_batch_seeded(inputs, method, split_seed(self.seed, idx))
+        let stream = match self.seed_schedule {
+            SeedSchedule::Sequence => idx,
+            SeedSchedule::ContentHash => hash_f32_matrix(inputs),
+        };
+        self.evaluate_batch_seeded(inputs, method, split_seed(self.seed, stream))
     }
 
     /// Predicted class per input (mean-logit vote + argmax).
@@ -175,7 +254,7 @@ mod tests {
 
     fn engine(workers: usize) -> Engine {
         let model = BnnModel::synthetic(&[16, 12, 8, 5], 11);
-        Engine::new(model, EngineConfig { workers, seed: 0xFEED })
+        Engine::new(model, EngineConfig { workers, seed: 0xFEED, ..EngineConfig::default() })
     }
 
     fn inputs(count: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -219,7 +298,10 @@ mod tests {
         let a = e.evaluate_batch_seeded(&xs, &m, 77);
         let b = evaluate_batch(e.model(), &xs, &m, 77, 3);
         assert_eq!(a.logits, b.logits);
-        assert_eq!(a.ops, b.ops);
+        // logical counts only: under the cache-default-on CI leg the
+        // engine may book avoided ops the cache-free function cannot
+        assert_eq!(a.ops.muls, b.ops.muls);
+        assert_eq!(a.ops.adds, b.ops.adds);
     }
 
     #[test]
@@ -243,6 +325,72 @@ mod tests {
             let acc = e.accuracy(&images, &labels, &Method::Standard { t: 2 }, batch);
             assert!((0.0..=1.0).contains(&acc), "batch {batch}: {acc}");
         }
+    }
+
+    #[test]
+    fn cached_engine_matches_uncached_engine() {
+        let model = || BnnModel::synthetic(&[16, 12, 8, 5], 11);
+        let plain = Engine::new(
+            model(),
+            EngineConfig {
+                workers: 2,
+                seed: 0xFEED,
+                cache: CacheConfig::disabled(),
+                seed_schedule: SeedSchedule::Sequence,
+            },
+        );
+        let cached = Engine::new(
+            model(),
+            EngineConfig {
+                workers: 2,
+                seed: 0xFEED,
+                cache: CacheConfig::with_mb(8),
+                seed_schedule: SeedSchedule::Sequence,
+            },
+        );
+        assert!(plain.cache_stats().is_none());
+        let xs = inputs(4, 16, 8);
+        let m = Method::DmBnn { schedule: vec![2, 2, 1] };
+        for round in 0..3 {
+            let a = plain.evaluate_batch_seeded(&xs, &m, 1234);
+            let b = cached.evaluate_batch_seeded(&xs, &m, 1234);
+            assert_eq!(a.logits, b.logits, "round {round}");
+            assert_eq!(a.ops.muls, b.ops.muls, "round {round}");
+            assert_eq!(a.ops.adds, b.ops.adds, "round {round}");
+        }
+        let stats = cached.cache_stats().expect("cache enabled");
+        // same seed every round ⇒ same banks ⇒ warm rounds hit everywhere
+        assert!(stats.hits > 0, "{stats}");
+        assert!(stats.muls_avoided > 0, "{stats}");
+        assert_eq!(cached.metrics_summary().cache, Some(cached.cache_stats().unwrap()));
+    }
+
+    #[test]
+    fn content_hash_schedule_is_history_independent() {
+        let mk = || {
+            Engine::new(
+                BnnModel::synthetic(&[16, 12, 8, 5], 11),
+                EngineConfig {
+                    workers: 2,
+                    seed: 0xFEED,
+                    cache: CacheConfig::disabled(),
+                    seed_schedule: SeedSchedule::ContentHash,
+                },
+            )
+        };
+        let a = mk();
+        let b = mk();
+        let xs = inputs(3, 16, 9);
+        let ys = inputs(3, 16, 10);
+        // interleave differently: content-derived seeds make each batch's
+        // answer a pure function of its inputs
+        let a_xs = a.evaluate_batch(&xs, &Method::Standard { t: 3 });
+        let _ = b.evaluate_batch(&ys, &Method::Standard { t: 3 });
+        let b_xs = b.evaluate_batch(&xs, &Method::Standard { t: 3 });
+        assert_eq!(a_xs.logits, b_xs.logits);
+        // while distinct content still draws distinct banks
+        let a_ys = a.evaluate_batch(&ys, &Method::Standard { t: 3 });
+        assert_ne!(a_xs.logits, a_ys.logits);
     }
 
     #[test]

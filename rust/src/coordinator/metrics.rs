@@ -8,6 +8,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::nn::dmcache::CacheStats;
+
 const RESERVOIR: usize = 4096;
 
 /// Shared serving metrics.
@@ -53,7 +55,9 @@ impl Metrics {
         Some(l[idx])
     }
 
-    /// Snapshot for printing.
+    /// Snapshot for printing.  The decomposition-cache counters are not
+    /// tracked here (they live in the cache itself) — the engine's
+    /// `metrics_summary()` fills [`MetricsSummary::cache`] in.
     pub fn summary(&self) -> MetricsSummary {
         MetricsSummary {
             requests: self.requests.load(Ordering::Relaxed),
@@ -61,6 +65,7 @@ impl Metrics {
             voters: self.voters_evaluated.load(Ordering::Relaxed),
             p50_us: self.latency_percentile_us(0.50),
             p99_us: self.latency_percentile_us(0.99),
+            cache: None,
         }
     }
 }
@@ -73,6 +78,10 @@ pub struct MetricsSummary {
     pub voters: u64,
     pub p50_us: Option<u64>,
     pub p99_us: Option<u64>,
+    /// Feature-decomposition cache counters (hit/miss/eviction and the
+    /// MULs/ADDs avoided), when a cache-enabled engine produced this
+    /// summary.
+    pub cache: Option<CacheStats>,
 }
 
 impl std::fmt::Display for MetricsSummary {
@@ -85,7 +94,11 @@ impl std::fmt::Display for MetricsSummary {
             self.voters,
             self.p50_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
             self.p99_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
-        )
+        )?;
+        if let Some(c) = &self.cache {
+            write!(f, "  cache[{c}]")?;
+        }
+        Ok(())
     }
 }
 
@@ -132,5 +145,22 @@ mod tests {
         let text = m.summary().to_string();
         assert!(text.contains("requests=1"));
         assert!(text.contains("p50=42µs"));
+        assert!(!text.contains("cache["), "no cache line when None");
+    }
+
+    #[test]
+    fn display_includes_cache_counters_when_present() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(7), 2);
+        let mut s = m.summary();
+        s.cache = Some(CacheStats {
+            hits: 3,
+            misses: 1,
+            muls_avoided: 99,
+            ..CacheStats::default()
+        });
+        let text = s.to_string();
+        assert!(text.contains("cache[hits=3"), "{text}");
+        assert!(text.contains("muls_avoided=99"), "{text}");
     }
 }

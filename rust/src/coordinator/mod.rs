@@ -20,7 +20,9 @@
 //! * [`server`]  — request router + micro-batcher (std threads): admits
 //!   requests, groups them per method, runs them on a worker's backend,
 //!   returns predictions with latency metadata.
-//! * [`metrics`] — op/latency/throughput counters for the benches.
+//! * [`metrics`] — op/latency/throughput counters for the benches, plus
+//!   the decomposition-cache hit/miss/eviction and MULs-avoided counters
+//!   surfaced by cache-enabled engines (`nn::dmcache`, `--cache-mb`).
 
 pub mod engine;
 #[cfg(feature = "pjrt")]
@@ -30,7 +32,8 @@ pub mod plan;
 pub mod server;
 pub mod vote;
 
-pub use engine::{Engine, EngineConfig};
+pub use crate::nn::dmcache::{CacheConfig, CacheStats};
+pub use engine::{Engine, EngineConfig, SeedSchedule};
 #[cfg(feature = "pjrt")]
 pub use exec::Executor;
 pub use plan::{InferenceMethod, PlanSummary};

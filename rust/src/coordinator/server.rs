@@ -339,7 +339,10 @@ mod tests {
 
     fn test_engine() -> Arc<Engine> {
         let model = BnnModel::synthetic(&[16, 10, 5], 21);
-        Arc::new(Engine::new(model, EngineConfig { workers: 2, seed: 9 }))
+        Arc::new(Engine::new(
+            model,
+            EngineConfig { workers: 2, seed: 9, ..EngineConfig::default() },
+        ))
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::time::Instant;
 use bayesdm::bail;
 use bayesdm::coordinator::engine::default_workers;
 use bayesdm::coordinator::plan::{InferenceMethod, PlanSummary};
-use bayesdm::coordinator::{serve_engine, Engine, EngineConfig, ServerConfig};
+use bayesdm::coordinator::{serve_engine, CacheConfig, Engine, EngineConfig, ServerConfig};
 use bayesdm::dataset::{load_images, load_weights, Dataset, SynthSpec, Synthesizer};
 use bayesdm::grng::uniform::XorShift128Plus;
 use bayesdm::grng::Ziggurat;
@@ -41,18 +41,34 @@ USAGE: bayesdm [--artifacts DIR] <subcommand> [flags]
 
 SUBCOMMANDS:
   serve    --method M --requests N --max-batch B --workers W [--synthetic]
+           [--cache-mb MB]
   eval     --method M --limit N --batch B --workers W [--synthetic]
+           [--cache-mb MB]
   tables   --table {3|4|5} [--limit N]
   fig6
   hwsweep
   plan     --method M --alpha A
 
 methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
---workers: engine pool threads (default: one per core)";
+--workers: engine pool threads (default: one per core)
+--cache-mb: cross-request feature-decomposition cache budget in MiB
+            (0 = off; default honors the BAYESDM_CACHE_MB env toggle).
+            Repeated inputs skip the deterministic mu-path GEMVs; results
+            are bit-identical either way, hit/miss/eviction and
+            MULs-avoided counters are reported after the run.";
 
 fn parse_method(s: &str, alpha: f64) -> Result<InferenceMethod> {
     InferenceMethod::parse(s, alpha)
         .with_context(|| format!("unknown method `{s}` (standard|hybrid|dm)"))
+}
+
+/// `--cache-mb MB` → cache config; an explicit 0 disables, absence falls
+/// back to the `BAYESDM_CACHE_MB` environment default.
+fn cache_config(args: &mut Args) -> Result<CacheConfig> {
+    let env_default = CacheConfig::from_env();
+    let env_mb = env_default.capacity_bytes >> 20;
+    let mb: usize = args.get_parse("cache-mb", env_mb).map_err(Error::msg)?;
+    Ok(if mb > 0 { CacheConfig::with_mb(mb) } else { CacheConfig::disabled() })
 }
 
 /// Load the trained posterior + served test set, or the self-contained
@@ -88,13 +104,17 @@ fn main() -> Result<()> {
             let pool = default_workers();
             let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
             let synthetic = args.has("synthetic");
+            let cache = cache_config(&mut args)?;
             args.finish().map_err(Error::msg)?;
             let m = parse_method(&method, alpha)?;
             let (model, test) = load_model_and_data(&artifacts, synthetic)?;
-            let engine = Arc::new(Engine::new(model, EngineConfig { workers, seed: 0xBA135 }));
+            let engine = Arc::new(Engine::new(
+                model,
+                EngineConfig { workers, seed: 0xBA135, cache, ..EngineConfig::default() },
+            ));
             // One dispatch worker: the engine pool is the parallelism.
             let cfg = ServerConfig { max_batch, workers: 1, ..ServerConfig::default() };
-            let handle = serve_engine(engine, cfg);
+            let handle = serve_engine(engine.clone(), cfg);
             let n = requests.min(test.len());
             let t0 = Instant::now();
             let mut pending = Vec::with_capacity(n);
@@ -121,7 +141,10 @@ fn main() -> Result<()> {
                 n as f64 / dt.as_secs_f64(),
                 100.0 * correct as f64 / n as f64
             );
-            println!("metrics: {}", handle.metrics.summary());
+            // fold the engine's cache counters into the server summary
+            let mut summary = handle.metrics.summary();
+            summary.cache = engine.cache_stats();
+            println!("metrics: {summary}");
             handle.shutdown();
         }
         "eval" => {
@@ -132,10 +155,14 @@ fn main() -> Result<()> {
             let pool = default_workers();
             let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
             let synthetic = args.has("synthetic");
+            let cache = cache_config(&mut args)?;
             args.finish().map_err(Error::msg)?;
             let m = parse_method(&method, alpha)?;
             let (model, test) = load_model_and_data(&artifacts, synthetic)?;
-            let engine = Engine::new(model, EngineConfig { workers, seed: 0xE7A1 });
+            let engine = Engine::new(
+                model,
+                EngineConfig { workers, seed: 0xE7A1, cache, ..EngineConfig::default() },
+            );
             let n = limit.min(test.len());
             let t0 = Instant::now();
             let acc = engine.accuracy(
@@ -151,6 +178,9 @@ fn main() -> Result<()> {
                 t0.elapsed().as_secs_f64(),
                 t0.elapsed().as_millis() as f64 / n as f64
             );
+            if let Some(stats) = engine.cache_stats() {
+                println!("cache: {stats}");
+            }
         }
         "tables" => {
             let table: u8 = args.get_parse("table", 0).map_err(Error::msg)?;
@@ -255,7 +285,11 @@ fn measure_accuracies(
         } else {
             let engine = Engine::new(
                 BnnModel::new(weights.clone()),
-                EngineConfig { workers: default_workers(), seed: 42 + i as u64 },
+                EngineConfig {
+                    workers: default_workers(),
+                    seed: 42 + i as u64,
+                    ..EngineConfig::default()
+                },
             );
             engine.accuracy(images, labels, m, 32)
         };

@@ -32,6 +32,7 @@ use crate::grng::{default_grng, Grng};
 use crate::opcount::counter::OpCounter;
 
 use super::bnn::{BnnModel, Method};
+use super::dmcache::CacheView;
 
 /// Result of one batch evaluation.
 #[derive(Debug, Clone)]
@@ -52,8 +53,25 @@ pub fn evaluate_batch(
     seed: u64,
     workers: usize,
 ) -> BatchResult {
+    evaluate_batch_cached(model, inputs, method, seed, workers, None)
+}
+
+/// [`evaluate_batch`] with an optional cross-request feature-decomposition
+/// cache (`nn::dmcache`): repeated inputs — within the batch or from
+/// earlier batches — skip the deterministic precompute GEMVs.  Logits and
+/// logical op counts are bit-identical to the uncached call for any cache
+/// state and worker count; only the `*_avoided` bookkeeping (and wall
+/// time) changes.
+pub fn evaluate_batch_cached(
+    model: &BnnModel,
+    inputs: &[Vec<f32>],
+    method: &Method,
+    seed: u64,
+    workers: usize,
+    cache: Option<CacheView<'_>>,
+) -> BatchResult {
     let mut g = default_grng(seed);
-    evaluate_batch_with(model, inputs, method, &mut g, workers)
+    evaluate_batch_with_cached(model, inputs, method, &mut g, workers, cache)
 }
 
 /// Like [`evaluate_batch`], drawing the shared banks from a caller-owned
@@ -64,6 +82,19 @@ pub fn evaluate_batch_with(
     method: &Method,
     g: &mut dyn Grng,
     workers: usize,
+) -> BatchResult {
+    evaluate_batch_with_cached(model, inputs, method, g, workers, None)
+}
+
+/// The fully general batched entry point: caller-owned generator plus an
+/// optional decomposition cache.
+pub fn evaluate_batch_with_cached(
+    model: &BnnModel,
+    inputs: &[Vec<f32>],
+    method: &Method,
+    g: &mut dyn Grng,
+    workers: usize,
+    cache: Option<CacheView<'_>>,
 ) -> BatchResult {
     let n = inputs.len();
     if n == 0 {
@@ -77,7 +108,7 @@ pub fn evaluate_batch_with(
         let mut ops = OpCounter::default();
         let logits = inputs
             .iter()
-            .map(|x| model.evaluate_with_banks(x, method, &banks, &mut ops))
+            .map(|x| model.evaluate_with_banks_cached(x, method, &banks, cache, &mut ops))
             .collect();
         return BatchResult { logits, ops };
     }
@@ -92,7 +123,9 @@ pub fn evaluate_batch_with(
                 let mut ops = OpCounter::default();
                 let logits = chunk_inputs
                     .iter()
-                    .map(|x| model.evaluate_with_banks(x, method, banks, &mut ops))
+                    .map(|x| {
+                        model.evaluate_with_banks_cached(x, method, banks, cache, &mut ops)
+                    })
                     .collect::<Vec<_>>();
                 (logits, ops)
             }));
@@ -160,6 +193,29 @@ mod tests {
             assert_eq!(many.logits, one.logits, "workers={w}");
             assert_eq!(many.ops, one.ops, "workers={w}");
         }
+    }
+
+    #[test]
+    fn cached_batch_matches_uncached_batch() {
+        use crate::nn::dmcache::{CacheConfig, CacheView, DmCache};
+        let model = BnnModel::synthetic(&[10, 8, 4], 9);
+        // duplicate-heavy batch: 3 distinct inputs, 9 slots
+        let pool = inputs(3, 10, 13);
+        let xs: Vec<Vec<f32>> = (0..9).map(|i| pool[i % 3].clone()).collect();
+        let method = Method::DmBnn { schedule: vec![2, 2, 1] };
+        let plain = evaluate_batch(&model, &xs, &method, 17, 2);
+
+        let cache = DmCache::new(&CacheConfig::with_mb(4));
+        let view = CacheView::new(&cache, model.fingerprint());
+        for round in 0..2 {
+            let cached = evaluate_batch_cached(&model, &xs, &method, 17, 2, Some(view));
+            assert_eq!(cached.logits, plain.logits, "round {round}");
+            assert_eq!(cached.ops.muls, plain.ops.muls, "round {round}");
+            assert_eq!(cached.ops.adds, plain.ops.adds, "round {round}");
+        }
+        let s = cache.stats();
+        assert!(s.hits > 0, "duplicates must hit: {s}");
+        assert!(s.muls_avoided > 0);
     }
 
     #[test]

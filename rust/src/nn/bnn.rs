@@ -17,12 +17,17 @@
 //! is what makes the batch-vs-serial parity contract exact (see
 //! `nn::batch`).
 
+use std::sync::{Arc, OnceLock};
+
 use crate::dataset::LayerPosterior;
 use crate::grng::uniform::{UniformSource, XorShift128Plus};
 use crate::grng::Grng;
 use crate::layer_dims;
 use crate::opcount::counter::OpCounter;
+use crate::opcount::model::LayerCost;
+use crate::util::hash::{fnv1a_f32s, fnv1a_u64, FNV_OFFSET};
 
+use super::dmcache::{CacheView, Decomp};
 use super::linear::{argmax, dm_voter, precompute, standard_voter, vote};
 
 /// Inference method selector (mirrors `opcount::model::Method`).
@@ -60,6 +65,8 @@ pub type UncertaintyBanks = Vec<Vec<(Vec<f32>, Vec<f32>)>>;
 /// The reference multi-layer Bayesian MLP.
 pub struct BnnModel {
     pub layers: Vec<LayerPosterior>,
+    /// Lazily computed posterior fingerprint (see [`BnnModel::fingerprint`]).
+    fp: OnceLock<u64>,
 }
 
 impl BnnModel {
@@ -68,7 +75,7 @@ impl BnnModel {
         for w in layers.windows(2) {
             assert_eq!(w[1].n, w[0].m, "layer dims must chain");
         }
-        Self { layers }
+        Self { layers, fp: OnceLock::new() }
     }
 
     /// A deterministic random (untrained) posterior over `arch` — the
@@ -88,6 +95,26 @@ impl BnnModel {
             })
             .collect();
         Self::new(layers)
+    }
+
+    /// Posterior fingerprint: a 64-bit hash over every layer's dimensions
+    /// and parameter bit patterns, mixed into the decomposition-cache key
+    /// so entries from one model can never serve another.  Computed once
+    /// and memoized — mutating `layers` after the first call is not
+    /// supported on the cached path.
+    pub fn fingerprint(&self) -> u64 {
+        *self.fp.get_or_init(|| {
+            let mut state = fnv1a_u64(FNV_OFFSET, self.layers.len() as u64);
+            for l in &self.layers {
+                state = fnv1a_u64(state, l.m as u64);
+                state = fnv1a_u64(state, l.n as u64);
+                state = fnv1a_f32s(state, &l.mu);
+                state = fnv1a_f32s(state, &l.sigma);
+                state = fnv1a_f32s(state, &l.mu_b);
+                state = fnv1a_f32s(state, &l.sigma_b);
+            }
+            crate::util::hash::mix64(state)
+        })
     }
 
     pub fn num_layers(&self) -> usize {
@@ -130,6 +157,35 @@ impl BnnModel {
             .collect()
     }
 
+    /// Produce layer `li`'s feature decomposition for input `x`: serve it
+    /// from the cross-request cache when a bit-exact entry exists (booking
+    /// the skipped precompute into the counter's `*_avoided` fields, so
+    /// logical op counts never under-count), otherwise run `precompute`
+    /// and publish the result.
+    fn decompose(
+        &self,
+        li: usize,
+        x: &[f32],
+        cache: Option<CacheView<'_>>,
+        ops: &mut OpCounter,
+    ) -> Arc<Decomp> {
+        let l = &self.layers[li];
+        if let Some(view) = cache {
+            if let Some(d) = view.lookup(li, x) {
+                ops.avoided(&LayerCost::new(l.m, l.n).precompute());
+                return d;
+            }
+        }
+        let mut beta = vec![0.0f32; l.m * l.n];
+        let mut eta = vec![0.0f32; l.m];
+        precompute(l, x, &mut beta, &mut eta, ops);
+        let d = Arc::new(Decomp { beta, eta });
+        if let Some(view) = cache {
+            view.insert(li, x, &d);
+        }
+        d
+    }
+
     /// Evaluate one input against pre-sampled uncertainty banks; returns
     /// the voter logits and accumulates instrumented op counts into `ops`.
     pub fn evaluate_with_banks(
@@ -137,6 +193,25 @@ impl BnnModel {
         x: &[f32],
         method: &Method,
         banks: &UncertaintyBanks,
+        ops: &mut OpCounter,
+    ) -> Vec<Vec<f32>> {
+        self.evaluate_with_banks_cached(x, method, banks, None, ops)
+    }
+
+    /// [`BnnModel::evaluate_with_banks`] with an optional cross-request
+    /// feature-decomposition cache (see `nn::dmcache`).
+    ///
+    /// Parity contract: for any cache state, the returned logits and the
+    /// logical `ops.muls`/`ops.adds` are **bit-identical** to the uncached
+    /// call — a hit returns the exact floats `precompute` would produce
+    /// (bit-verified key compare) and books the skipped work into
+    /// `ops.muls_avoided`/`ops.adds_avoided`.
+    pub fn evaluate_with_banks_cached(
+        &self,
+        x: &[f32],
+        method: &Method,
+        banks: &UncertaintyBanks,
+        cache: Option<CacheView<'_>>,
         ops: &mut OpCounter,
     ) -> Vec<Vec<f32>> {
         assert_eq!(x.len(), self.input_dim());
@@ -162,14 +237,12 @@ impl BnnModel {
             }
             Method::Hybrid { t } => {
                 let l0 = &self.layers[0];
-                let mut beta = vec![0.0f32; l0.m * l0.n];
-                let mut eta = vec![0.0f32; l0.m];
-                precompute(l0, x, &mut beta, &mut eta, ops);
+                let d = self.decompose(0, x, cache, ops);
                 let mut acts: Vec<Vec<f32>> = Vec::with_capacity(*t);
                 let relu0 = nl > 1;
                 for (h, hb) in &banks[0] {
                     let mut y = vec![0.0f32; l0.m];
-                    dm_voter(l0, &beta, &eta, h, hb, 0..l0.m, relu0, &mut y, ops);
+                    dm_voter(l0, &d.beta, &d.eta, h, hb, 0..l0.m, relu0, &mut y, ops);
                     acts.push(y);
                 }
                 for li in 1..nl {
@@ -190,13 +263,14 @@ impl BnnModel {
                     let relu = li != nl - 1;
                     let hs = &banks[li];
                     let mut next = Vec::with_capacity(acts.len() * schedule[li]);
-                    let mut beta = vec![0.0f32; l.m * l.n];
-                    let mut eta = vec![0.0f32; l.m];
                     for a in &acts {
-                        precompute(l, a, &mut beta, &mut eta, ops);
+                        // Deeper keys are activations: identical inputs
+                        // sharing identical banks reach identical
+                        // activations, so duplicates hit at every layer.
+                        let d = self.decompose(li, a, cache, ops);
                         for (h, hb) in hs {
                             let mut y = vec![0.0f32; l.m];
-                            dm_voter(l, &beta, &eta, h, hb, 0..l.m, relu, &mut y, ops);
+                            dm_voter(l, &d.beta, &d.eta, h, hb, 0..l.m, relu, &mut y, ops);
                             next.push(y);
                         }
                     }
@@ -368,6 +442,56 @@ mod tests {
             let got = model.evaluate_with_banks(&x, &method, &banks, &mut ops);
             assert_eq!(got, want, "{method:?}");
             assert_eq!(ops, want_ops, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_parameter_sensitive() {
+        let a = BnnModel::synthetic(&[8, 6, 4], 1);
+        let b = BnnModel::synthetic(&[8, 6, 4], 1);
+        let c = BnnModel::synthetic(&[8, 6, 4], 2);
+        assert_eq!(a.fingerprint(), a.fingerprint(), "memoized value must hold");
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same posterior, same fp");
+        assert_ne!(a.fingerprint(), c.fingerprint(), "different posterior");
+        let d = BnnModel::synthetic(&[8, 4], 1);
+        assert_ne!(a.fingerprint(), d.fingerprint(), "different arch");
+    }
+
+    #[test]
+    fn cached_eval_is_bit_identical_hit_and_miss() {
+        use crate::nn::dmcache::{CacheConfig, CacheView, DmCache};
+        let model = tiny_model(7);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32).cos()).collect();
+        for method in [
+            Method::Standard { t: 3 },
+            Method::Hybrid { t: 3 },
+            Method::DmBnn { schedule: vec![2, 2, 1] },
+        ] {
+            // fresh cache per method so layer-0 entries from one method
+            // cannot pre-warm the next (they share the key space)
+            let cache = DmCache::new(&CacheConfig::with_mb(4));
+            let view = CacheView::new(&cache, model.fingerprint());
+            let mut g = Ziggurat::new(XorShift128Plus::new(5));
+            let banks = model.sample_banks(&method, &mut g);
+            let mut plain_ops = OpCounter::default();
+            let plain = model.evaluate_with_banks(&x, &method, &banks, &mut plain_ops);
+
+            // miss path (cold cache), then hit path (warm cache)
+            for round in 0..2 {
+                let mut ops = OpCounter::default();
+                let got = model
+                    .evaluate_with_banks_cached(&x, &method, &banks, Some(view), &mut ops);
+                assert_eq!(got, plain, "{method:?} round {round}");
+                assert_eq!(ops.muls, plain_ops.muls, "{method:?} round {round}");
+                assert_eq!(ops.adds, plain_ops.adds, "{method:?} round {round}");
+                if round == 0 {
+                    assert_eq!(ops.muls_avoided, 0, "{method:?} cold");
+                } else if matches!(method, Method::Standard { .. }) {
+                    assert_eq!(ops.muls_avoided, 0, "{method:?} has no decomposition");
+                } else {
+                    assert!(ops.muls_avoided > 0, "{method:?} warm must report hits");
+                }
+            }
         }
     }
 

@@ -1,0 +1,556 @@
+//! Cross-request feature-decomposition cache (bounded memory).
+//!
+//! The paper's DM dataflow splits every layer into a deterministic half —
+//! the `precompute` products `β = σ ∘ x`, `η = μ · x` — and a stochastic
+//! residual (`⟨H, β⟩ + η` per voter).  Within one evaluation that split is
+//! what makes DM cheap; across *requests* it opens a second memoization
+//! level: the deterministic half depends only on `(layer weights, input)`,
+//! so a repeated input in the serving stream can skip the entire μ-path
+//! GEMV and pay only the stochastic residual.  This module is that cache —
+//! the serving-time analogue of VIBNN-style on-chip reuse, with the memory
+//! bounded the way the paper's memory-friendly framework bounds β.
+//!
+//! # Key scheme
+//!
+//! Entries are keyed by `(model fingerprint, layer index, input bits)`,
+//! folded into a 64-bit hash for bucketing.  The full key (fingerprint,
+//! layer, and the input vector itself) is stored in the entry and compared
+//! on lookup, so a hash collision degrades to a miss — it can never
+//! return the wrong decomposition.  Since layer-0 keys are raw request
+//! inputs and deeper keys are activations (which encode the sampled banks
+//! implicitly), a hit is *always* bit-exact to recomputation.
+//!
+//! # Eviction
+//!
+//! The byte budget is split evenly across shards (the shard count shrinks
+//! at small budgets so one shard can always hold a full layer-0
+//! decomposition — see [`SHARD_FLOOR_BYTES`]); each shard runs the
+//! CLOCK (second-chance) policy over its insertion ring: a hit sets the
+//! entry's referenced bit, the sweep clears it, and only unreferenced
+//! entries are evicted.  An entry larger than a shard's budget is simply
+//! not cached.  Memory accounting covers the stored key and both product
+//! vectors plus a fixed per-entry overhead estimate.
+//!
+//! # Concurrency
+//!
+//! One mutex per shard (up to 16), held only for the map probe /
+//! insert — the GEMV itself always runs outside the lock, and the decomp
+//! payloads are shared read-only via `Arc`, so the scoped worker pool
+//! contends only on bucket metadata.  `DmCache` is `Sync` like `Engine`.
+//!
+//! # Parity contract
+//!
+//! `evaluate_with_banks_cached` (see `nn::bnn`) produces bit-identical
+//! logits with the cache enabled or disabled, on both hit and miss paths,
+//! and identical *logical* op counts — hits book the skipped MULs/ADDs
+//! into [`OpCounter::muls_avoided`]/[`adds_avoided`] instead of silently
+//! under-counting (see `opcount::counter`).  `tests/cache_parity.rs` pins
+//! all of this.
+//!
+//! [`OpCounter::muls_avoided`]: crate::opcount::counter::OpCounter
+//! [`adds_avoided`]: crate::opcount::counter::OpCounter
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::opcount::model::LayerCost;
+use crate::util::hash::{fnv1a_f32s, fnv1a_u64, mix64, FNV_OFFSET};
+
+/// Estimated fixed overhead per entry (map slot, ring slot, `Arc` header,
+/// vec headers) — counted against the byte budget so tiny entries cannot
+/// make the cache unbounded in entry count.
+const ENTRY_OVERHEAD: usize = 128;
+
+/// Cache sizing knobs.  `capacity_bytes == 0` disables the cache — the
+/// default, preserving pre-cache behavior exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Total byte budget across all shards (0 = disabled).
+    pub capacity_bytes: usize,
+    /// Upper bound on lock shards; more shards, less contention.  The
+    /// cache uses fewer shards at small budgets so every shard can still
+    /// hold a large layer decomposition (see [`SHARD_FLOOR_BYTES`]).
+    pub shards: usize,
+}
+
+impl CacheConfig {
+    /// Cache off (the default).
+    pub fn disabled() -> Self {
+        Self { capacity_bytes: 0, shards: DEFAULT_SHARDS }
+    }
+
+    /// Cache on with a budget in MiB.
+    pub fn with_mb(mb: usize) -> Self {
+        Self { capacity_bytes: mb << 20, shards: DEFAULT_SHARDS }
+    }
+
+    /// Honor the `BAYESDM_CACHE_MB` environment toggle (used by the CI
+    /// leg that runs the whole suite cache-default-on); disabled when the
+    /// variable is unset or unparsable.
+    pub fn from_env() -> Self {
+        match std::env::var(CACHE_MB_ENV) {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(mb) if mb > 0 => Self::with_mb(mb),
+                _ => Self::disabled(),
+            },
+            Err(_) => Self::disabled(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_bytes > 0
+    }
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// Environment variable read by [`CacheConfig::from_env`].
+pub const CACHE_MB_ENV: &str = "BAYESDM_CACHE_MB";
+
+const DEFAULT_SHARDS: usize = 16;
+
+/// Minimum per-shard budget the cache aims for when deciding how many of
+/// the configured shards to actually use.  Without this floor, a small
+/// total budget split 16 ways would make any entry larger than
+/// `capacity/16` silently uncachable — e.g. an 8 MiB budget could never
+/// hold a single MNIST layer-0 decomposition (~631 KiB) even though 13 of
+/// them fit in the total.  2 MiB comfortably exceeds the largest layer
+/// decomposition of the paper's architectures.
+pub const SHARD_FLOOR_BYTES: usize = 2 << 20;
+
+/// One memoized feature decomposition: the deterministic products of
+/// `nn::linear::precompute` for a `(layer, input)` pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decomp {
+    /// `β = σ ∘ x`, M×N row-major.
+    pub beta: Vec<f32>,
+    /// `η = μ · x` (plus nothing — bias stays in the voter), length M.
+    pub eta: Vec<f32>,
+}
+
+struct Entry {
+    fp: u64,
+    layer: u32,
+    x: Vec<f32>,
+    decomp: Arc<Decomp>,
+    referenced: bool,
+    bytes: usize,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<u64, Entry>,
+    /// CLOCK ring of insertion-ordered keys (may contain stale keys after
+    /// an overwrite; the sweep skips keys absent from the map).
+    ring: VecDeque<u64>,
+    bytes: usize,
+}
+
+impl Shard {
+    /// Evict one unreferenced entry (second-chance sweep).  Returns false
+    /// when the shard is empty.
+    fn clock_evict(&mut self) -> bool {
+        // Bounded: after one full sweep every referenced bit is clear, so
+        // the second sweep must evict.  Stale ring keys only shrink it.
+        enum Sweep {
+            Stale,
+            SecondChance,
+            Evict,
+        }
+        let mut budget = 2 * self.ring.len() + 1;
+        while budget > 0 {
+            budget -= 1;
+            let key = match self.ring.pop_front() {
+                Some(k) => k,
+                None => return false,
+            };
+            let action = match self.map.get_mut(&key) {
+                None => Sweep::Stale, // stale (overwritten) ring slot
+                Some(e) if e.referenced => {
+                    e.referenced = false;
+                    Sweep::SecondChance
+                }
+                Some(_) => Sweep::Evict,
+            };
+            match action {
+                Sweep::Stale => {}
+                Sweep::SecondChance => self.ring.push_back(key),
+                Sweep::Evict => {
+                    if let Some(e) = self.map.remove(&key) {
+                        self.bytes -= e.bytes;
+                    }
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+/// Aggregate cache counters (reported through `coordinator::metrics` and
+/// the `bayesdm serve`/`eval` CLI).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Live entries across all shards.
+    pub entries: u64,
+    /// Accounted bytes across all shards.
+    pub bytes: u64,
+    /// Multiplications skipped by hits (the μ-path GEMVs not re-run).
+    pub muls_avoided: u64,
+    /// Additions skipped by hits.
+    pub adds_avoided: u64,
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} evictions={} entries={} bytes={} muls_avoided={} adds_avoided={}",
+            self.hits,
+            self.misses,
+            self.evictions,
+            self.entries,
+            self.bytes,
+            self.muls_avoided,
+            self.adds_avoided,
+        )
+    }
+}
+
+/// The sharded, bounded-memory decomposition cache.
+pub struct DmCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    muls_avoided: AtomicU64,
+    adds_avoided: AtomicU64,
+}
+
+impl DmCache {
+    pub fn new(cfg: &CacheConfig) -> Self {
+        // Use fewer shards than configured when the budget is small, so
+        // one shard's slice of it still fits a large layer decomposition.
+        let nshards = cfg
+            .shards
+            .min(cfg.capacity_bytes / SHARD_FLOOR_BYTES)
+            .max(1);
+        Self {
+            shards: (0..nshards).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: cfg.capacity_bytes / nshards,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            muls_avoided: AtomicU64::new(0),
+            adds_avoided: AtomicU64::new(0),
+        }
+    }
+
+    fn key(fp: u64, layer: usize, x: &[f32]) -> u64 {
+        let state = fnv1a_u64(fnv1a_u64(FNV_OFFSET, fp), layer as u64);
+        mix64(fnv1a_f32s(state, x))
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    fn entry_bytes(x_len: usize, beta_len: usize, eta_len: usize) -> usize {
+        (x_len + beta_len + eta_len) * std::mem::size_of::<f32>() + ENTRY_OVERHEAD
+    }
+
+    /// Probe for the decomposition of `(fp, layer, x)`.  A hit bumps the
+    /// entry's referenced bit and books the avoided precompute cost into
+    /// the cache-level counters (the per-evaluation `OpCounter` books its
+    /// own copy — see `nn::bnn`).
+    pub fn lookup(&self, fp: u64, layer: usize, x: &[f32]) -> Option<Arc<Decomp>> {
+        let key = Self::key(fp, layer, x);
+        let found = {
+            let mut shard = self.shard(key).lock().unwrap();
+            match shard.map.get_mut(&key) {
+                Some(e)
+                    if e.fp == fp
+                        && e.layer == layer as u32
+                        && slices_bit_equal(&e.x, x) =>
+                {
+                    e.referenced = true;
+                    Some(e.decomp.clone())
+                }
+                _ => None,
+            }
+        };
+        match found {
+            Some(d) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                // One skipped `precompute` — the same closed form the
+                // per-evaluation OpCounter books (single source of truth).
+                let skipped = LayerCost::new(d.eta.len(), x.len()).precompute();
+                self.muls_avoided.fetch_add(skipped.muls, Ordering::Relaxed);
+                self.adds_avoided.fetch_add(skipped.adds, Ordering::Relaxed);
+                Some(d)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly computed decomposition, evicting under pressure.
+    /// Entries larger than one shard's budget are not cached.
+    pub fn insert(&self, fp: u64, layer: usize, x: &[f32], decomp: &Arc<Decomp>) {
+        let bytes = Self::entry_bytes(x.len(), decomp.beta.len(), decomp.eta.len());
+        if bytes > self.shard_budget {
+            return;
+        }
+        let key = Self::key(fp, layer, x);
+        let mut evicted = 0u64;
+        {
+            let mut shard = self.shard(key).lock().unwrap();
+            while shard.bytes + bytes > self.shard_budget {
+                if !shard.clock_evict() {
+                    break;
+                }
+                evicted += 1;
+            }
+            if shard.bytes + bytes > self.shard_budget {
+                // nothing evictable (empty shard with budget < bytes is
+                // already excluded above) — give up rather than overrun
+                self.evictions.fetch_add(evicted, Ordering::Relaxed);
+                return;
+            }
+            let entry = Entry {
+                fp,
+                layer: layer as u32,
+                x: x.to_vec(),
+                decomp: decomp.clone(),
+                referenced: false,
+                bytes,
+            };
+            if let Some(old) = shard.map.insert(key, entry) {
+                shard.bytes -= old.bytes;
+            }
+            shard.bytes += bytes;
+            shard.ring.push_back(key);
+        }
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    /// Counter snapshot (entry/byte totals take each shard lock briefly).
+    pub fn stats(&self) -> CacheStats {
+        let (mut entries, mut bytes) = (0u64, 0u64);
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            entries += s.map.len() as u64;
+            bytes += s.bytes as u64;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+            bytes,
+            muls_avoided: self.muls_avoided.load(Ordering::Relaxed),
+            adds_avoided: self.adds_avoided.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Debug for DmCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DmCache")
+            .field("shards", &self.shards.len())
+            .field("shard_budget", &self.shard_budget)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+/// Bit-pattern equality, matching the hash's key scheme (`0.0 != -0.0`,
+/// `NaN == NaN` for identical payloads) so lookup verification agrees
+/// with hashing and a cached entry round-trips exactly.
+fn slices_bit_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(p, q)| p.to_bits() == q.to_bits())
+}
+
+/// A cache bound to one model's fingerprint — the handle the evaluation
+/// paths thread down (copyable, lock-free by itself).
+#[derive(Clone, Copy)]
+pub struct CacheView<'a> {
+    cache: &'a DmCache,
+    fp: u64,
+}
+
+impl<'a> CacheView<'a> {
+    pub fn new(cache: &'a DmCache, fingerprint: u64) -> Self {
+        Self { cache, fp: fingerprint }
+    }
+
+    pub fn lookup(&self, layer: usize, x: &[f32]) -> Option<Arc<Decomp>> {
+        self.cache.lookup(self.fp, layer, x)
+    }
+
+    pub fn insert(&self, layer: usize, x: &[f32], decomp: &Arc<Decomp>) {
+        self.cache.insert(self.fp, layer, x, decomp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decomp(m: usize, n: usize, fill: f32) -> Arc<Decomp> {
+        Arc::new(Decomp { beta: vec![fill; m * n], eta: vec![fill; m] })
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let c = DmCache::new(&CacheConfig::with_mb(1));
+        let x = vec![1.0f32, 2.0, 3.0];
+        assert!(c.lookup(7, 0, &x).is_none());
+        let d = decomp(4, 3, 0.5);
+        c.insert(7, 0, &x, &d);
+        let got = c.lookup(7, 0, &x).expect("hit");
+        assert_eq!(*got, *d);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+        assert_eq!(s.entries, 1);
+        assert!(s.bytes > 0);
+        // avoided = one precompute: 2·4·3 muls, 4·2 adds
+        assert_eq!(s.muls_avoided, 24);
+        assert_eq!(s.adds_avoided, 8);
+    }
+
+    #[test]
+    fn key_separates_fingerprint_layer_and_input() {
+        let c = DmCache::new(&CacheConfig::with_mb(1));
+        let x = vec![1.0f32, 2.0];
+        c.insert(1, 0, &x, &decomp(2, 2, 0.1));
+        assert!(c.lookup(2, 0, &x).is_none(), "other model must miss");
+        assert!(c.lookup(1, 1, &x).is_none(), "other layer must miss");
+        assert!(c.lookup(1, 0, &[1.0, 2.5]).is_none(), "other input must miss");
+        assert!(c.lookup(1, 0, &x).is_some());
+    }
+
+    #[test]
+    fn eviction_keeps_memory_bounded() {
+        // Budget for about 3 entries per shard on one shard: inserting
+        // many distinct keys must evict and never overrun the budget.
+        let entry = DmCache::entry_bytes(8, 64, 8);
+        let cfg = CacheConfig { capacity_bytes: 3 * entry, shards: 1 };
+        let c = DmCache::new(&cfg);
+        for i in 0..32 {
+            let x: Vec<f32> = (0..8).map(|j| (i * 8 + j) as f32).collect();
+            c.insert(0, 0, &x, &decomp(8, 8, 1.0));
+            assert!(c.stats().bytes <= cfg.capacity_bytes as u64, "budget overrun");
+        }
+        let s = c.stats();
+        assert!(s.evictions > 0);
+        assert!(s.entries <= 3);
+    }
+
+    #[test]
+    fn clock_second_chance_protects_hot_entries() {
+        let entry = DmCache::entry_bytes(4, 16, 4);
+        let cfg = CacheConfig { capacity_bytes: 3 * entry, shards: 1 };
+        let c = DmCache::new(&cfg);
+        let hot = vec![9.0f32; 4];
+        c.insert(0, 0, &hot, &decomp(4, 4, 2.0));
+        for i in 0..24 {
+            // keep the hot entry referenced while cold entries churn
+            assert!(c.lookup(0, 0, &hot).is_some(), "hot entry evicted at {i}");
+            let x: Vec<f32> = (0..4).map(|j| (i * 4 + j) as f32).collect();
+            c.insert(0, 0, &x, &decomp(4, 4, 1.0));
+        }
+        assert!(c.lookup(0, 0, &hot).is_some());
+        assert!(c.stats().evictions > 0);
+    }
+
+    #[test]
+    fn small_budgets_still_cache_large_layer_entries() {
+        // 8 MiB split 16 ways could never hold a ~631 KiB MNIST layer-0
+        // decomposition; the shard floor must reduce the shard count so
+        // the dominant cross-request saving stays cacheable.
+        let c = DmCache::new(&CacheConfig::with_mb(8));
+        let x = vec![0.5f32; 784];
+        c.insert(0, 0, &x, &decomp(200, 784, 1.0));
+        assert!(c.lookup(0, 0, &x).is_some(), "layer-0-sized entry must fit");
+    }
+
+    #[test]
+    fn oversized_entries_are_not_cached() {
+        let cfg = CacheConfig { capacity_bytes: 256, shards: 1 };
+        let c = DmCache::new(&cfg);
+        let x = vec![0.5f32; 4];
+        c.insert(0, 0, &x, &decomp(64, 64, 1.0)); // ≫ 256 bytes
+        assert_eq!(c.stats().entries, 0);
+        assert!(c.lookup(0, 0, &x).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_caches_nothing() {
+        let c = DmCache::new(&CacheConfig::disabled());
+        let x = vec![1.0f32; 4];
+        c.insert(0, 0, &x, &decomp(2, 4, 1.0));
+        assert!(c.lookup(0, 0, &x).is_none());
+        assert_eq!(c.stats().entries, 0);
+    }
+
+    #[test]
+    fn signed_zero_is_a_distinct_key_but_never_wrong() {
+        let c = DmCache::new(&CacheConfig::with_mb(1));
+        c.insert(0, 0, &[0.0f32], &decomp(1, 1, 1.0));
+        // -0.0 == 0.0 as floats, but the bit-keyed cache treats it as a
+        // different input: spurious miss, never a wrong hit.
+        assert!(c.lookup(0, 0, &[-0.0f32]).is_none());
+        assert!(c.lookup(0, 0, &[0.0f32]).is_some());
+    }
+
+    #[test]
+    fn cache_is_send_and_sync() {
+        fn assert_sync<T: Send + Sync>() {}
+        assert_sync::<DmCache>();
+    }
+
+    #[test]
+    fn config_env_parsing() {
+        assert!(!CacheConfig::disabled().enabled());
+        assert!(CacheConfig::with_mb(8).enabled());
+        assert_eq!(CacheConfig::with_mb(2).capacity_bytes, 2 << 20);
+        assert_eq!(CacheConfig::default(), CacheConfig::disabled());
+    }
+
+    #[test]
+    fn concurrent_mixed_traffic_is_safe() {
+        let c = DmCache::new(&CacheConfig { capacity_bytes: 64 << 10, shards: 4 });
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for i in 0..200u32 {
+                        let x: Vec<f32> = vec![(i % 16) as f32, t as f32 % 2.0];
+                        if c.lookup(0, 0, &x).is_none() {
+                            c.insert(0, 0, &x, &decomp(4, 2, x[0]));
+                        }
+                    }
+                });
+            }
+        });
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 4 * 200);
+    }
+}

@@ -12,12 +12,19 @@
 //! The single-input code is deliberately simple, allocation-honest rust:
 //! it is the ground truth the batched engine and the (feature-gated)
 //! AOT/PJRT path are validated against.
+//!
+//! [`dmcache`] adds the serving-time memoization level on top: a bounded,
+//! sharded cross-request cache of the deterministic (β, η) feature
+//! decompositions, so repeated inputs skip the μ-path GEMVs entirely
+//! while preserving bit-identical logits and logical op counts.
 
 pub mod batch;
 pub mod bnn;
+pub mod dmcache;
 pub mod fixed_infer;
 pub mod linear;
 
-pub use batch::{evaluate_batch, BatchResult};
+pub use batch::{evaluate_batch, evaluate_batch_cached, BatchResult};
 pub use bnn::{BnnModel, Method, UncertaintyBanks};
+pub use dmcache::{CacheConfig, CacheStats, CacheView, Decomp, DmCache};
 pub use linear::{dm_voter, precompute, standard_voter};

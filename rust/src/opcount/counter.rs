@@ -3,15 +3,46 @@
 /// Accumulates multiplication and addition counts.  The paper's cycle
 /// model ("one addition takes one cycle and one multiplication by 2
 /// cycles", §III-C1) is exposed as [`OpCounter::weighted_cycles`].
+///
+/// # Logical vs performed counts
+///
+/// `muls`/`adds` are the *logical* operation counts of the dataflow — what
+/// the computation costs with no cross-request cache, always equal to
+/// `opcount::model`'s closed forms.  When the feature-decomposition cache
+/// (`nn::dmcache`) serves a hit, the skipped precompute is still booked
+/// into `muls`/`adds` (so cache-enabled and cache-disabled runs report
+/// bit-identical logical counts instead of silently under-counting) and
+/// *additionally* into `muls_avoided`/`adds_avoided`.  The ops actually
+/// executed are [`OpCounter::performed_muls`]/[`performed_adds`] =
+/// logical − avoided.
+///
+/// Note: logical counts are deterministic for a fixed workload, but the
+/// avoided split can vary run-to-run when concurrent workers race on the
+/// same cold cache key (both miss and both compute) — compare logical
+/// fields, not avoided ones, in worker-count-invariance tests.
+///
+/// [`performed_adds`]: OpCounter::performed_adds
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct OpCounter {
     pub muls: u64,
     pub adds: u64,
+    /// Of `muls`, how many were skipped via a decomposition-cache hit
+    /// (invariant: `muls_avoided <= muls`).
+    pub muls_avoided: u64,
+    /// Of `adds`, how many were skipped via a decomposition-cache hit
+    /// (invariant: `adds_avoided <= adds`).
+    pub adds_avoided: u64,
 }
 
 impl OpCounter {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A counter with the given logical counts and nothing avoided — the
+    /// shape every analytic formula produces.
+    pub const fn of(muls: u64, adds: u64) -> Self {
+        Self { muls, adds, muls_avoided: 0, adds_avoided: 0 }
     }
 
     #[inline]
@@ -24,20 +55,53 @@ impl OpCounter {
         self.adds += count as u64;
     }
 
+    /// Book `skipped` as logically performed but avoided via a cache hit:
+    /// the logical totals advance exactly as if the work had run, and the
+    /// avoided counters record the saving.
+    pub fn avoided(&mut self, skipped: &OpCounter) {
+        self.muls += skipped.muls;
+        self.adds += skipped.adds;
+        self.muls_avoided += skipped.muls;
+        self.adds_avoided += skipped.adds;
+    }
+
     /// Merge another counter into this one.
     pub fn merge(&mut self, other: &OpCounter) {
         self.muls += other.muls;
         self.adds += other.adds;
+        self.muls_avoided += other.muls_avoided;
+        self.adds_avoided += other.adds_avoided;
     }
 
-    /// Total operations.
+    /// Total logical operations.
     pub fn total(&self) -> u64 {
         self.muls + self.adds
     }
 
-    /// Equivalent cycles under the paper's 2-cycle-MUL / 1-cycle-ADD model.
+    /// Multiplications actually executed (logical − avoided).
+    pub fn performed_muls(&self) -> u64 {
+        self.muls - self.muls_avoided
+    }
+
+    /// Additions actually executed (logical − avoided).
+    pub fn performed_adds(&self) -> u64 {
+        self.adds - self.adds_avoided
+    }
+
+    /// Total operations actually executed.
+    pub fn performed_total(&self) -> u64 {
+        self.performed_muls() + self.performed_adds()
+    }
+
+    /// Equivalent cycles under the paper's 2-cycle-MUL / 1-cycle-ADD model
+    /// (logical work — the cache-free cost).
     pub fn weighted_cycles(&self) -> u64 {
         2 * self.muls + self.adds
+    }
+
+    /// Equivalent cycles for the ops actually executed.
+    pub fn performed_weighted_cycles(&self) -> u64 {
+        2 * self.performed_muls() + self.performed_adds()
     }
 
     /// Reset to zero.
@@ -49,14 +113,15 @@ impl OpCounter {
 impl std::ops::Add for OpCounter {
     type Output = OpCounter;
     fn add(self, rhs: OpCounter) -> OpCounter {
-        OpCounter { muls: self.muls + rhs.muls, adds: self.adds + rhs.adds }
+        let mut out = self;
+        out.merge(&rhs);
+        out
     }
 }
 
 impl std::ops::AddAssign for OpCounter {
     fn add_assign(&mut self, rhs: OpCounter) {
-        self.muls += rhs.muls;
-        self.adds += rhs.adds;
+        self.merge(&rhs);
     }
 }
 
@@ -79,38 +144,70 @@ mod tests {
         let mut b = OpCounter::new();
         b.mul(2);
         b.merge(&a);
-        assert_eq!(b, OpCounter { muls: 5, adds: 5 });
+        assert_eq!(b, OpCounter::of(5, 5));
         assert_eq!(b.total(), 10);
     }
 
     #[test]
     fn weighted_cycles_paper_model() {
-        let c = OpCounter { muls: 10, adds: 4 };
+        let c = OpCounter::of(10, 4);
         assert_eq!(c.weighted_cycles(), 24);
     }
 
     #[test]
     fn add_operator_and_reset() {
-        let a = OpCounter { muls: 1, adds: 2 };
-        let b = OpCounter { muls: 3, adds: 4 };
+        let a = OpCounter::of(1, 2);
+        let b = OpCounter::of(3, 4);
         let mut c = a + b;
-        assert_eq!(c, OpCounter { muls: 4, adds: 6 });
+        assert_eq!(c, OpCounter::of(4, 6));
         c.reset();
         assert_eq!(c, OpCounter::default());
     }
 
     #[test]
     fn add_assign_and_sum_aggregate_workers() {
-        let mut acc = OpCounter { muls: 1, adds: 1 };
-        acc += OpCounter { muls: 2, adds: 3 };
-        assert_eq!(acc, OpCounter { muls: 3, adds: 4 });
+        let mut acc = OpCounter::of(1, 1);
+        acc += OpCounter::of(2, 3);
+        assert_eq!(acc, OpCounter::of(3, 4));
 
-        let per_worker = vec![
-            OpCounter { muls: 10, adds: 20 },
-            OpCounter { muls: 1, adds: 2 },
-            OpCounter::default(),
-        ];
+        let per_worker = vec![OpCounter::of(10, 20), OpCounter::of(1, 2), OpCounter::default()];
         let total: OpCounter = per_worker.into_iter().sum();
-        assert_eq!(total, OpCounter { muls: 11, adds: 22 });
+        assert_eq!(total, OpCounter::of(11, 22));
+    }
+
+    #[test]
+    fn avoided_advances_logical_and_avoided_counts() {
+        let mut c = OpCounter::new();
+        c.mul(10);
+        c.add(6);
+        c.avoided(&OpCounter::of(4, 2));
+        // logical counts include the skipped work — no under-counting
+        assert_eq!((c.muls, c.adds), (14, 8));
+        assert_eq!((c.muls_avoided, c.adds_avoided), (4, 2));
+        assert_eq!(c.performed_muls(), 10);
+        assert_eq!(c.performed_adds(), 6);
+        assert_eq!(c.performed_total(), 16);
+        assert_eq!(c.total(), 22);
+        assert_eq!(c.weighted_cycles(), 2 * 14 + 8);
+        assert_eq!(c.performed_weighted_cycles(), 2 * 10 + 6);
+    }
+
+    #[test]
+    fn avoided_aggregates_through_merge_add_and_sum() {
+        let mut a = OpCounter::of(8, 8);
+        a.avoided(&OpCounter::of(2, 1));
+        let mut b = OpCounter::of(4, 4);
+        b.avoided(&OpCounter::of(1, 3));
+
+        let merged = a + b;
+        assert_eq!((merged.muls, merged.adds), (15, 16));
+        assert_eq!((merged.muls_avoided, merged.adds_avoided), (3, 4));
+
+        let summed: OpCounter = vec![a, b].into_iter().sum();
+        assert_eq!(summed, merged);
+
+        let mut assigned = a;
+        assigned += b;
+        assert_eq!(assigned, merged);
     }
 }

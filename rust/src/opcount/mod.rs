@@ -9,7 +9,10 @@
 //! * [`report`] — renders the paper's tables from either source.
 //!
 //! The key cross-check (asserted in tests): the instrumented counts from
-//! running the real dataflows equal the analytic formulas *exactly*.
+//! running the real dataflows equal the analytic formulas *exactly* —
+//! including under the cross-request decomposition cache, whose hits book
+//! the skipped precompute into the logical counts and report the saving
+//! separately as `muls_avoided`/`adds_avoided` (never under-counting).
 
 pub mod counter;
 pub mod model;

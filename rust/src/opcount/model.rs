@@ -16,18 +16,18 @@ use super::OpCounter;
 
 /// Paper Table III, standard dataflow, bias-free: one layer, T voters.
 pub fn table3_standard(m: u64, n: u64, t: u64) -> OpCounter {
-    OpCounter {
-        muls: 2 * m * n * t,                  // H∘σ and W·x
-        adds: m * n * t + m * (n - 1) * t,    // Q+μ and the dot-product adds
-    }
+    OpCounter::of(
+        2 * m * n * t,               // H∘σ and W·x
+        m * n * t + m * (n - 1) * t, // Q+μ and the dot-product adds
+    )
 }
 
 /// Paper Table III, DM dataflow, bias-free: one layer, T voters sharing x.
 pub fn table3_dm(m: u64, n: u64, t: u64) -> OpCounter {
-    OpCounter {
-        muls: m * n * (t + 2),                          // η, β, <H,β>_L
-        adds: m * (n - 1) + m * (n - 1) * t + m * t,    // β-dot, line-dot, +η
-    }
+    OpCounter::of(
+        m * n * (t + 2),                       // η, β, <H,β>_L
+        m * (n - 1) + m * (n - 1) * t + m * t, // β-dot, line-dot, +η
+    )
 }
 
 /// Eqn (3): the DM/standard multiplication ratio for a given T.
@@ -48,25 +48,23 @@ impl LayerCost {
         Self { m: m as u64, n: n as u64 }
     }
 
-    /// One `precompute` call (Algorithm 2 lines 1–2).
+    /// One `precompute` call (Algorithm 2 lines 1–2) — also the per-hit
+    /// saving of the cross-request decomposition cache (`nn::dmcache`).
     pub fn precompute(&self) -> OpCounter {
-        OpCounter { muls: 2 * self.m * self.n, adds: self.m * (self.n - 1) }
+        OpCounter::of(2 * self.m * self.n, self.m * (self.n - 1))
     }
 
     /// One DM voter evaluation (line-wise inner product + bias).
     pub fn dm_voter(&self) -> OpCounter {
-        OpCounter {
-            muls: self.m * self.n + self.m,
-            adds: self.m * (self.n - 1) + 3 * self.m,
-        }
+        OpCounter::of(self.m * self.n + self.m, self.m * (self.n - 1) + 3 * self.m)
     }
 
     /// One standard voter evaluation (scale-location + mat-vec + bias).
     pub fn standard_voter(&self) -> OpCounter {
-        OpCounter {
-            muls: 2 * self.m * self.n + self.m,
-            adds: self.m * self.n + self.m * (self.n - 1) + 2 * self.m,
-        }
+        OpCounter::of(
+            2 * self.m * self.n + self.m,
+            self.m * self.n + self.m * (self.n - 1) + 2 * self.m,
+        )
     }
 }
 
@@ -194,6 +192,30 @@ impl CostModel {
         }
     }
 
+    /// The decomposition ops a fully-warm cross-request cache skips for
+    /// ONE evaluation of `method`: every `precompute` the dataflow issues
+    /// (Standard issues none; DM-BNN issues one per distinct fan-out
+    /// input per layer).  This is the analytic pin for the instrumented
+    /// `muls_avoided`/`adds_avoided` counters on the all-hits path.
+    pub fn cacheable_precompute(&self, method: &Method) -> OpCounter {
+        let mut out = OpCounter::default();
+        match method {
+            Method::Standard { .. } => {}
+            Method::Hybrid { .. } => out.merge(&self.layers[0].precompute()),
+            Method::DmBnn { schedule } => {
+                assert_eq!(schedule.len(), self.layers.len());
+                let mut distinct = 1u64;
+                for (lc, &tl) in self.layers.iter().zip(schedule) {
+                    for _ in 0..distinct {
+                        out.merge(&lc.precompute());
+                    }
+                    distinct *= tl;
+                }
+            }
+        }
+        out
+    }
+
     /// Posterior parameter memory (f32 words): Σ 2(MN + M).
     pub fn weight_memory_words(&self) -> u64 {
         self.layers.iter().map(|l| 2 * (l.m * l.n + l.m)).sum()
@@ -309,6 +331,32 @@ mod tests {
         assert_eq!(m.voters(), 1000);
         let s = Method::Standard { t: 100 };
         assert_eq!(s.samples_per_layer(3), vec![100, 100, 100]);
+    }
+
+    #[test]
+    fn cacheable_precompute_per_method() {
+        let cm = CostModel::from_arch(&[16, 12, 8, 5]);
+        assert_eq!(
+            cm.cacheable_precompute(&Method::Standard { t: 9 }),
+            OpCounter::default()
+        );
+        assert_eq!(
+            cm.cacheable_precompute(&Method::Hybrid { t: 9 }),
+            cm.layers[0].precompute()
+        );
+        // DmBnn [2,3,1]: 1 precompute at L0, 2 at L1, 6 at L2.
+        let mut want = OpCounter::default();
+        want.merge(&cm.layers[0].precompute());
+        for _ in 0..2 {
+            want.merge(&cm.layers[1].precompute());
+        }
+        for _ in 0..6 {
+            want.merge(&cm.layers[2].precompute());
+        }
+        assert_eq!(
+            cm.cacheable_precompute(&Method::DmBnn { schedule: vec![2, 3, 1] }),
+            want
+        );
     }
 
     #[test]

@@ -1,0 +1,97 @@
+//! Tiny hashing helpers shared by the feature-decomposition cache and the
+//! engine's content-derived seed schedule (no external hash crates in the
+//! offline build).
+//!
+//! FNV-1a over the *bit patterns* of `f32` values: two inputs hash equal
+//! iff they are bit-identical, which is exactly the equality the cache's
+//! bit-parity contract is stated in (`-0.0` and `0.0` hash differently —
+//! the verifying compare in `nn::dmcache` treats them the same way, so a
+//! lookup is never wrong, at worst a spurious miss).
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Continue an FNV-1a stream over raw bytes.
+pub fn fnv1a_bytes(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(FNV_PRIME);
+    }
+    state
+}
+
+/// Continue an FNV-1a stream over a `u64`.
+pub fn fnv1a_u64(state: u64, v: u64) -> u64 {
+    fnv1a_bytes(state, &v.to_le_bytes())
+}
+
+/// Continue an FNV-1a stream over the bit patterns of an `f32` slice.
+pub fn fnv1a_f32s(mut state: u64, xs: &[f32]) -> u64 {
+    for &x in xs {
+        state = fnv1a_bytes(state, &x.to_bits().to_le_bytes());
+    }
+    state
+}
+
+/// SplitMix64-style finalizer: spreads FNV's weak high bits so the result
+/// can be used directly for shard selection and seed derivation.
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash a whole batch of input vectors (finalized) — the engine's
+/// content-derived seed schedule: identical batches map to identical
+/// seeds, so identical uncertainty banks.
+pub fn hash_f32_matrix(rows: &[Vec<f32>]) -> u64 {
+    let mut state = fnv1a_u64(FNV_OFFSET, rows.len() as u64);
+    for row in rows {
+        state = fnv1a_u64(state, row.len() as u64);
+        state = fnv1a_f32s(state, row);
+    }
+    mix64(state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(xs: &[f32]) -> u64 {
+        mix64(fnv1a_f32s(FNV_OFFSET, xs))
+    }
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let a = h(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, h(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, h(&[1.0, 2.0, 3.0001]));
+        assert_ne!(a, h(&[1.0, 2.0]));
+    }
+
+    #[test]
+    fn bit_pattern_equality() {
+        // -0.0 and 0.0 compare equal as floats but are distinct bit
+        // patterns: the hash keys on bits, and documents doing so.
+        assert_ne!(h(&[0.0]), h(&[-0.0]));
+    }
+
+    #[test]
+    fn matrix_hash_separates_row_boundaries() {
+        let a = hash_f32_matrix(&[vec![1.0, 2.0], vec![3.0]]);
+        let b = hash_f32_matrix(&[vec![1.0], vec![2.0, 3.0]]);
+        assert_ne!(a, b);
+        assert_eq!(a, hash_f32_matrix(&[vec![1.0, 2.0], vec![3.0]]));
+    }
+
+    #[test]
+    fn mix64_spreads_small_inputs() {
+        // Shard selection uses the hash directly, so consecutive small
+        // inputs must land on many distinct high bytes, not a few.
+        let distinct: std::collections::HashSet<u64> =
+            (0..1024u64).map(|i| mix64(i) >> 56).collect();
+        assert!(distinct.len() >= 200, "only {} distinct high bytes", distinct.len());
+    }
+}

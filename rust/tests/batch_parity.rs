@@ -9,7 +9,9 @@
 use std::sync::Arc;
 
 use bayesdm::coordinator::plan::InferenceMethod;
-use bayesdm::coordinator::{serve_engine, Engine, EngineConfig, ServerConfig};
+use bayesdm::coordinator::{
+    serve_engine, CacheConfig, Engine, EngineConfig, SeedSchedule, ServerConfig,
+};
 use bayesdm::grng::default_grng;
 use bayesdm::nn::batch::evaluate_batch;
 use bayesdm::nn::bnn::{BnnModel, Method};
@@ -91,13 +93,17 @@ fn dm_batch_is_cheaper_than_standard_batch_at_equal_voters() {
 fn engine_seeded_matches_free_function_and_is_deterministic() {
     let xs = inputs(9, 7);
     let m = Method::DmBnn { schedule: vec![2, 2, 1] };
-    let e1 = Engine::new(model(), EngineConfig { workers: 3, seed: 42 });
-    let e2 = Engine::new(model(), EngineConfig { workers: 8, seed: 42 });
+    let cfg = |workers| EngineConfig { workers, seed: 42, ..EngineConfig::default() };
+    let e1 = Engine::new(model(), cfg(3));
+    let e2 = Engine::new(model(), cfg(8));
 
     let a = e1.evaluate_batch_seeded(&xs, &m, SEED);
     let b = evaluate_batch(e2.model(), &xs, &m, SEED, 8);
     assert_eq!(a.logits, b.logits);
-    assert_eq!(a.ops, b.ops);
+    // logical counts only: under the cache-default-on CI leg the engine
+    // may book avoided ops the cache-free function cannot
+    assert_eq!(a.ops.muls, b.ops.muls);
+    assert_eq!(a.ops.adds, b.ops.adds);
 
     // Engine call sequences replay identically under a fixed config seed.
     for round in 0..3 {
@@ -109,7 +115,10 @@ fn engine_seeded_matches_free_function_and_is_deterministic() {
 
 #[test]
 fn server_over_batched_engine_answers_every_request() {
-    let engine = Arc::new(Engine::new(model(), EngineConfig { workers: 2, seed: 11 }));
+    let engine = Arc::new(Engine::new(
+        model(),
+        EngineConfig { workers: 2, seed: 11, ..EngineConfig::default() },
+    ));
     let handle = serve_engine(
         engine,
         ServerConfig { max_batch: 8, workers: 2, ..ServerConfig::default() },
@@ -134,9 +143,96 @@ fn server_over_batched_engine_answers_every_request() {
     handle.shutdown();
 }
 
+/// Server-level concurrency coverage for the decomposition cache: many
+/// client threads push overlapping duplicate inputs through `serve_engine`
+/// and every response must be identical with the cache on vs. off.
+///
+/// Determinism across the two runs needs per-request results to be a pure
+/// function of the input, independent of arrival order and batch index —
+/// that is exactly `SeedSchedule::ContentHash` with `max_batch: 1` (each
+/// request is its own batch, so its banks derive from its own bytes).
+#[test]
+fn server_duplicate_stream_is_identical_with_cache_on_and_off() {
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 15;
+    let pool = inputs(3, 99); // 3 distinct images shared by all clients
+
+    // (class, confidence bits, entropy bits, voters) per request — bitwise
+    // comparable; latency is excluded (it is never deterministic).
+    let run = |cache: CacheConfig| -> (Vec<Vec<(usize, u32, u32, usize)>>, Option<u64>) {
+        let engine = Arc::new(Engine::new(
+            model(),
+            EngineConfig {
+                workers: 2,
+                seed: 0x5EED,
+                cache,
+                seed_schedule: SeedSchedule::ContentHash,
+            },
+        ));
+        let handle = serve_engine(
+            engine.clone(),
+            ServerConfig { max_batch: 1, workers: 4, ..ServerConfig::default() },
+        );
+        let method = InferenceMethod::DmBnn { schedule: vec![2, 3, 2], alpha: 1.0 };
+        let mut per_client = Vec::new();
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for c in 0..CLIENTS {
+                let handle = &handle;
+                let pool = &pool;
+                let method = method.clone();
+                joins.push(s.spawn(move || {
+                    let mut got = Vec::with_capacity(PER_CLIENT);
+                    for i in 0..PER_CLIENT {
+                        // overlapping duplicates: every client walks the
+                        // pool from a different phase
+                        let x = pool[(c + i) % pool.len()].clone();
+                        let r = handle
+                            .classify(x, method.clone())
+                            .expect("submit")
+                            .wait()
+                            .expect("response");
+                        got.push((
+                            r.class,
+                            r.confidence.to_bits(),
+                            r.entropy.to_bits(),
+                            r.voters,
+                        ));
+                    }
+                    got
+                }));
+            }
+            for j in joins {
+                per_client.push(j.join().expect("client thread"));
+            }
+        });
+        let hits = engine.cache_stats().map(|s| s.hits);
+        handle.shutdown();
+        (per_client, hits)
+    };
+
+    let (off, off_hits) = run(CacheConfig::disabled());
+    let (on, on_hits) = run(CacheConfig::with_mb(16));
+    assert_eq!(off_hits, None, "cache-off engine must report no cache");
+    assert!(on_hits.unwrap() > 0, "duplicate stream must produce cache hits");
+    assert_eq!(off, on, "responses must be bit-identical with the cache on");
+
+    // and within a run, duplicates of the same image answered identically
+    let mut by_input: Vec<Option<(usize, u32, u32, usize)>> = vec![None; pool.len()];
+    for (c, client) in on.iter().enumerate() {
+        for (i, resp) in client.iter().enumerate() {
+            let slot = (c + i) % pool.len();
+            match by_input[slot] {
+                None => by_input[slot] = Some(*resp),
+                Some(first) => assert_eq!(first, *resp, "client {c} req {i}"),
+            }
+        }
+    }
+}
+
 #[test]
 fn predict_and_accuracy_run_batched() {
-    let e = Engine::new(model(), EngineConfig { workers: 4, seed: 5 });
+    let e = Engine::new(model(), EngineConfig { workers: 4, seed: 5, ..EngineConfig::default() });
     let xs = inputs(10, 11);
     let preds = e.predict_batch(&xs, &Method::Standard { t: 3 });
     assert_eq!(preds.len(), 10);

@@ -1,0 +1,178 @@
+//! Parity contract of the cross-request feature-decomposition cache
+//! (`nn::dmcache`): for every method, on hit and miss paths, under
+//! eviction pressure and any worker count, cache-enabled evaluation
+//! produces **bit-identical logits and logical op counts** to
+//! cache-disabled evaluation.  The only observable differences are the
+//! `*_avoided` bookkeeping, the cache counters, and wall time.
+//!
+//! Zero artifact dependencies: everything runs on the synthetic posterior.
+
+use bayesdm::grng::default_grng;
+use bayesdm::nn::batch::{evaluate_batch, evaluate_batch_cached};
+use bayesdm::nn::bnn::{BnnModel, Method};
+use bayesdm::nn::dmcache::{CacheConfig, CacheView, DmCache};
+use bayesdm::opcount::OpCounter;
+
+const SEED: u64 = 0xCAC4E;
+const ARCH: [usize; 4] = [20, 16, 10, 6];
+
+fn model() -> BnnModel {
+    BnnModel::synthetic(&ARCH, 0xAB)
+}
+
+/// `count` slots drawn from `distinct` underlying images (round-robin), so
+/// every batch carries duplicates when `distinct < count`.
+fn dup_inputs(count: usize, distinct: usize, seed: u64) -> Vec<Vec<f32>> {
+    use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+    let mut r = XorShift128Plus::new(seed);
+    let pool: Vec<Vec<f32>> = (0..distinct)
+        .map(|_| (0..ARCH[0]).map(|_| r.next_f32()).collect())
+        .collect();
+    (0..count).map(|i| pool[i % distinct].clone()).collect()
+}
+
+fn methods() -> [Method; 3] {
+    [
+        Method::Standard { t: 5 },
+        Method::Hybrid { t: 5 },
+        Method::DmBnn { schedule: vec![2, 3, 2] },
+    ]
+}
+
+/// Hit and miss paths: a cold cache (first call: all misses) and a warm
+/// cache (second call, same seed: hits wherever the method decomposes)
+/// both reproduce the uncached logits and logical op counts exactly.
+#[test]
+fn cache_on_equals_cache_off_for_all_methods_cold_and_warm() {
+    let model = model();
+    let xs = dup_inputs(12, 4, 7);
+    for method in &methods() {
+        let plain = evaluate_batch(&model, &xs, method, SEED, 1);
+
+        let cache = DmCache::new(&CacheConfig::with_mb(16));
+        let view = CacheView::new(&cache, model.fingerprint());
+        for round in 0..3 {
+            let cached = evaluate_batch_cached(&model, &xs, method, SEED, 1, Some(view));
+            assert_eq!(cached.logits, plain.logits, "{method:?} round {round}");
+            assert_eq!(cached.ops.muls, plain.ops.muls, "{method:?} round {round}");
+            assert_eq!(cached.ops.adds, plain.ops.adds, "{method:?} round {round}");
+            assert_eq!(
+                cached.ops.performed_muls() + cached.ops.muls_avoided,
+                plain.ops.muls,
+                "{method:?} round {round}: avoided must partition logical muls"
+            );
+        }
+        let stats = cache.stats();
+        match method {
+            Method::Standard { .. } => {
+                assert_eq!(stats.hits, 0, "standard has no decomposition to cache");
+                assert_eq!(stats.muls_avoided, 0);
+            }
+            _ => {
+                assert!(stats.hits > 0, "{method:?}: duplicates must hit ({stats})");
+                assert!(stats.muls_avoided > 0, "{method:?}: {stats}");
+            }
+        }
+    }
+}
+
+/// Per-input serial parity: cached single-input evaluation (hit or miss)
+/// reproduces `BnnModel::evaluate` bit-for-bit.
+#[test]
+fn serial_hit_and_miss_paths_match_plain_evaluate() {
+    let model = model();
+    let xs = dup_inputs(6, 2, 11);
+    for method in &methods() {
+        let cache = DmCache::new(&CacheConfig::with_mb(16));
+        let view = CacheView::new(&cache, model.fingerprint());
+        for (i, x) in xs.iter().enumerate() {
+            let mut g = default_grng(SEED);
+            let (want, want_ops) = model.evaluate(x, method, &mut g);
+
+            let mut g = default_grng(SEED);
+            let banks = model.sample_banks(method, &mut g);
+            let mut ops = OpCounter::default();
+            let got = model.evaluate_with_banks_cached(x, method, &banks, Some(view), &mut ops);
+            assert_eq!(got, want, "{method:?} input {i}");
+            assert_eq!(ops.muls, want_ops.muls, "{method:?} input {i}");
+            assert_eq!(ops.adds, want_ops.adds, "{method:?} input {i}");
+        }
+    }
+}
+
+/// Under heavy eviction pressure (a budget far below the working set) the
+/// cache still never changes results — only its own hit rate suffers.
+#[test]
+fn eviction_under_pressure_preserves_parity() {
+    let model = model();
+    let xs = dup_inputs(24, 24, 13); // all distinct: maximal churn
+    let method = Method::DmBnn { schedule: vec![2, 3, 2] };
+    let plain = evaluate_batch(&model, &xs, &method, SEED, 1);
+
+    // Roughly two layer-0 entries of this arch fit; everything else churns.
+    let cache = DmCache::new(&CacheConfig { capacity_bytes: 8 << 10, shards: 2 });
+    let view = CacheView::new(&cache, model.fingerprint());
+    for round in 0..2 {
+        let cached = evaluate_batch_cached(&model, &xs, &method, SEED, 1, Some(view));
+        assert_eq!(cached.logits, plain.logits, "round {round}");
+        assert_eq!(cached.ops.muls, plain.ops.muls, "round {round}");
+        assert_eq!(cached.ops.adds, plain.ops.adds, "round {round}");
+    }
+    let stats = cache.stats();
+    assert!(stats.evictions > 0, "pressure must evict: {stats}");
+    assert!(stats.bytes <= 8u64 << 10, "budget must hold under churn: {stats}");
+}
+
+/// Worker-count invariance with the cache enabled: logits and logical op
+/// counts never depend on the pool width.  The avoided split is NOT
+/// compared — concurrent workers racing on a cold key may legitimately
+/// both compute it (same logical ops, different bookkeeping).
+#[test]
+fn worker_count_invariance_with_cache() {
+    let model = model();
+    let xs = dup_inputs(16, 3, 17);
+    for method in &methods() {
+        let cache1 = DmCache::new(&CacheConfig::with_mb(16));
+        let one = evaluate_batch_cached(
+            &model,
+            &xs,
+            method,
+            SEED,
+            1,
+            Some(CacheView::new(&cache1, model.fingerprint())),
+        );
+        for workers in [2usize, 4, 7, 32] {
+            let cache = DmCache::new(&CacheConfig::with_mb(16));
+            let view = CacheView::new(&cache, model.fingerprint());
+            for round in 0..2 {
+                let many = evaluate_batch_cached(&model, &xs, method, SEED, workers, Some(view));
+                assert_eq!(many.logits, one.logits, "{method:?} w={workers} r{round}");
+                assert_eq!(many.ops.muls, one.ops.muls, "{method:?} w={workers} r{round}");
+                assert_eq!(many.ops.adds, one.ops.adds, "{method:?} w={workers} r{round}");
+            }
+        }
+    }
+}
+
+/// A cold cache keyed by one model's fingerprint never serves another
+/// model, even for identical inputs.
+#[test]
+fn fingerprint_isolates_models_sharing_one_cache() {
+    let a = BnnModel::synthetic(&ARCH, 1);
+    let b = BnnModel::synthetic(&ARCH, 2);
+    let xs = dup_inputs(4, 2, 19);
+    let method = Method::Hybrid { t: 4 };
+
+    let cache = DmCache::new(&CacheConfig::with_mb(16));
+    let va = CacheView::new(&cache, a.fingerprint());
+    let vb = CacheView::new(&cache, b.fingerprint());
+
+    let plain_a = evaluate_batch(&a, &xs, &method, SEED, 1);
+    let plain_b = evaluate_batch(&b, &xs, &method, SEED, 1);
+    // warm the cache with model a, then run model b through it
+    let _ = evaluate_batch_cached(&a, &xs, &method, SEED, 1, Some(va));
+    let got_b = evaluate_batch_cached(&b, &xs, &method, SEED, 1, Some(vb));
+    assert_eq!(got_b.logits, plain_b.logits);
+    let got_a = evaluate_batch_cached(&a, &xs, &method, SEED, 1, Some(va));
+    assert_eq!(got_a.logits, plain_a.logits);
+}

@@ -1,0 +1,105 @@
+//! Property-style tests for the `split_seed` stream derivation — the
+//! foundation under both memoization levels: per-batch banks (seeded by
+//! batch index or content hash) and per-worker generators must be
+//! independent streams, never shares of one sequence.
+//!
+//! Two properties are pinned:
+//!
+//! 1. **No collisions**: `split_seed(master, i)` is injective over a
+//!    large index range for a fixed master (a collision would make two
+//!    batches draw identical uncertainty).
+//! 2. **Interleaving invariance**: `default_grng(split_seed(s, i))`
+//!    draws depend only on `(s, i)` — never on how many draws other
+//!    streams have made or in what order evaluation touches them.  This
+//!    is what makes batched results independent of thread scheduling.
+
+use std::collections::HashSet;
+
+use bayesdm::grng::{default_grng, ks_statistic_normal, moments, split_seed, Grng};
+
+#[test]
+fn split_seed_streams_pairwise_distinct_over_large_range() {
+    const STREAMS: u64 = 1 << 19; // half a million indices
+    let master = 0xDEAD_BEEF_0BAD_CAFE;
+    let mut seen = HashSet::with_capacity(STREAMS as usize);
+    for i in 0..STREAMS {
+        assert!(
+            seen.insert(split_seed(master, i)),
+            "streams collided at index {i}"
+        );
+    }
+}
+
+#[test]
+fn split_seed_distinct_across_several_masters() {
+    // Smaller per-master range, several masters, one global set: streams
+    // from different masters must not replay each other either.
+    const STREAMS: u64 = 1 << 15;
+    let mut seen = HashSet::new();
+    for master in [0u64, 1, 2, 0xBA7E_5D00, u64::MAX] {
+        for i in 0..STREAMS {
+            assert!(
+                seen.insert(split_seed(master, i)),
+                "collision at master {master:#x}, index {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn draws_are_independent_of_evaluation_interleaving() {
+    const K: usize = 8;
+    const DRAWS: usize = 512;
+    let master = 42u64;
+
+    // drain each stream sequentially
+    let sequential: Vec<Vec<f32>> = (0..K as u64)
+        .map(|i| default_grng(split_seed(master, i)).sample_vec(DRAWS))
+        .collect();
+
+    // round-robin interleave the same streams
+    let mut gens: Vec<_> = (0..K as u64)
+        .map(|i| default_grng(split_seed(master, i)))
+        .collect();
+    let mut interleaved = vec![Vec::with_capacity(DRAWS); K];
+    for _ in 0..DRAWS {
+        for (k, g) in gens.iter_mut().enumerate() {
+            interleaved[k].push(g.next());
+        }
+    }
+    assert_eq!(sequential, interleaved, "round-robin must not change streams");
+
+    // reverse construction/drain order
+    let mut reversed = vec![Vec::new(); K];
+    for i in (0..K as u64).rev() {
+        reversed[i as usize] = default_grng(split_seed(master, i)).sample_vec(DRAWS);
+    }
+    assert_eq!(sequential, reversed, "construction order must not matter");
+
+    // and adjacent streams must not be shifted copies of each other
+    for (k, stream) in sequential.iter().enumerate().skip(1) {
+        assert_ne!(sequential[0][..64], stream[..64], "stream {k} replays stream 0");
+    }
+}
+
+#[test]
+fn split_streams_are_individually_and_jointly_gaussian() {
+    // Each split stream is N(0,1), and so is their concatenation — a
+    // coarse cross-stream correlation check: systematic bias shared
+    // across streams would show up in the pooled moments/KS.
+    const K: u64 = 64;
+    const DRAWS: usize = 2_000;
+    let mut pooled = Vec::with_capacity(K as usize * DRAWS);
+    for i in 0..K {
+        let xs = default_grng(split_seed(7, i)).sample_vec(DRAWS);
+        let m = moments(&xs);
+        assert!(m.mean.abs() < 0.1, "stream {i} mean {}", m.mean);
+        assert!((m.var - 1.0).abs() < 0.15, "stream {i} var {}", m.var);
+        pooled.extend(xs);
+    }
+    let d = ks_statistic_normal(&pooled);
+    assert!(d < 0.01, "pooled KS statistic {d}");
+    let m = moments(&pooled);
+    assert!(m.mean.abs() < 0.01, "pooled mean {}", m.mean);
+    assert!((m.var - 1.0).abs() < 0.02, "pooled var {}", m.var);
+}

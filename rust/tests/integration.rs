@@ -1,369 +1,457 @@
-//! Integration tests over the real AOT artifacts + PJRT runtime.
+//! Integration pins that tie the instrumented dataflows to `opcount`'s
+//! analytic model — including the decomposition-cache accounting — plus
+//! (feature-gated) the AOT artifact + PJRT runtime suite.
 //!
-//! Compiled only with `--features pjrt` (the default offline build has no
-//! `xla` crate); the artifact-free batch/serving tests live in
-//! `batch_parity.rs`.  These additionally require `make artifacts` to
-//! have run (they are skipped with a message otherwise, so `cargo test`
-//! stays green on a fresh checkout).  They validate the full L3→L1
-//! contract:
+//! The non-gated tests run everywhere with zero artifact dependencies:
+//! they prove that cache hits report the MULs/ADDs *avoided* as a
+//! distinct counter while the logical counts still equal
+//! `opcount::model`'s closed forms — no silent under-counting.
 //!
-//! * every artifact in the manifest compiles and executes;
-//! * the PJRT kernels agree with the pure-rust `nn` oracle;
-//! * the three coordinator plans produce correct, consistent predictions;
-//! * the α-blocked memory-friendly execution is bit-identical to the
-//!   unblocked one;
-//! * the serving layer routes/batches/answers.
+//! The `pjrt` module below compiles only with `--features pjrt` (the
+//! default offline build has no `xla` crate) and additionally requires
+//! `make artifacts` (tests skip with a message otherwise).
 
-#![cfg(feature = "pjrt")]
-
-use bayesdm::coordinator::plan::InferenceMethod;
-use bayesdm::coordinator::{serve, Executor, ServerConfig};
-use bayesdm::dataset::{load_images, load_weights, LayerPosterior};
-use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
-use bayesdm::nn::linear;
+use bayesdm::grng::default_grng;
+use bayesdm::nn::bnn::{BnnModel, Method};
+use bayesdm::nn::dmcache::{CacheConfig, CacheView, DmCache};
+use bayesdm::opcount::model::{CostModel, Method as CostMethod};
 use bayesdm::opcount::OpCounter;
-use bayesdm::runtime::Engine;
 
-const ARTIFACTS: &str = "artifacts";
+const ARCH: [usize; 4] = [16, 12, 8, 5];
 
-fn artifacts_ready() -> bool {
-    let ok = std::path::Path::new(ARTIFACTS).join("manifest.json").exists();
-    if !ok {
-        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+fn cost_method(m: &Method) -> CostMethod {
+    match m {
+        Method::Standard { t } => CostMethod::Standard { t: *t as u64 },
+        Method::Hybrid { t } => CostMethod::Hybrid { t: *t as u64 },
+        Method::DmBnn { schedule } => CostMethod::DmBnn {
+            schedule: schedule.iter().map(|&t| t as u64).collect(),
+        },
     }
-    ok
 }
 
-fn engine() -> Engine {
-    Engine::new(ARTIFACTS).expect("engine")
-}
-
-fn executor(seed: u64) -> Executor {
-    let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
-    Executor::new(engine(), weights, seed).unwrap()
-}
-
-fn randv(len: usize, seed: u64) -> Vec<f32> {
-    let mut r = XorShift128Plus::new(seed);
-    (0..len).map(|_| r.next_f32() * 2.0 - 1.0).collect()
-}
-
+/// Cold (all-miss) and warm (all-hit) cached evaluation both report
+/// logical op counts equal to the analytic model, and the warm pass
+/// reports exactly the analytic precompute cost as avoided.
 #[test]
-fn every_artifact_compiles_and_is_shape_consistent() {
-    if !artifacts_ready() {
-        return;
-    }
-    let e = engine();
-    let n = e.warmup().expect("warmup compiles every artifact");
-    assert!(n >= 20, "expected a full artifact set, got {n}");
-    assert_eq!(e.cached(), n);
-    // manifest metadata sanity
-    assert_eq!(e.manifest.arch, vec![784, 200, 200, 10]);
-    assert!(e.manifest.t_blocks.contains(&10));
-}
+fn cache_hits_pin_avoided_ops_against_analytic_model() {
+    let model = BnnModel::synthetic(&ARCH, 0x0C);
+    let cm = CostModel::from_arch(&ARCH);
+    let x: Vec<f32> = (0..ARCH[0]).map(|i| (i as f32).sin()).collect();
+    for method in [
+        Method::Standard { t: 6 },
+        Method::Hybrid { t: 6 },
+        Method::DmBnn { schedule: vec![2, 3, 1] },
+    ] {
+        let want = cm.cost(&cost_method(&method), 1.0).total;
+        let want_avoided = cm.cacheable_precompute(&cost_method(&method));
 
-#[test]
-fn precompute_artifact_matches_rust_oracle() {
-    if !artifacts_ready() {
-        return;
-    }
-    let e = engine();
-    let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
-    let l = &weights[2]; // (10, 200): cheapest layer
-    let x = randv(l.n, 1);
-    let art = e.artifact("precompute_m10_n200").unwrap();
-    let xb = e.upload(&x, &[l.n]).unwrap();
-    let sb = e.upload(&l.sigma, &[l.m, l.n]).unwrap();
-    let mb = e.upload(&l.mu, &[l.m, l.n]).unwrap();
-    let outs = art.run_b(&[&xb, &sb, &mb]).unwrap();
-    let beta = outs[0].to_vec::<f32>().unwrap();
-    let eta = outs[1].to_vec::<f32>().unwrap();
+        let cache = DmCache::new(&CacheConfig::with_mb(8));
+        let view = CacheView::new(&cache, model.fingerprint());
+        let mut g = default_grng(99);
+        let banks = model.sample_banks(&method, &mut g);
 
-    let mut rbeta = vec![0.0; l.m * l.n];
-    let mut reta = vec![0.0; l.m];
-    let mut ops = OpCounter::default();
-    linear::precompute(l, &x, &mut rbeta, &mut reta, &mut ops);
-    for (a, b) in beta.iter().zip(&rbeta) {
-        assert!((a - b).abs() < 1e-5, "beta mismatch {a} vs {b}");
-    }
-    for (a, b) in eta.iter().zip(&reta) {
-        assert!((a - b).abs() < 1e-3, "eta mismatch {a} vs {b}");
-    }
-}
+        let mut cold = OpCounter::default();
+        let _ = model.evaluate_with_banks_cached(&x, &method, &banks, Some(view), &mut cold);
+        assert_eq!(cold.muls, want.muls, "{method:?} cold logical muls");
+        assert_eq!(cold.adds, want.adds, "{method:?} cold logical adds");
+        assert_eq!(cold.muls_avoided, 0, "{method:?} cold has nothing cached");
 
-#[test]
-fn dm_artifact_matches_rust_oracle() {
-    if !artifacts_ready() {
-        return;
-    }
-    let e = engine();
-    let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
-    let l = &weights[2]; // (10, 200), output layer => no relu
-    let tb = 10;
-    let x = randv(l.n, 2);
-    let h = randv(tb * l.m * l.n, 3);
-    let hb = randv(tb * l.m, 4);
-
-    let mut beta = vec![0.0; l.m * l.n];
-    let mut eta = vec![0.0; l.m];
-    let mut ops = OpCounter::default();
-    linear::precompute(l, &x, &mut beta, &mut eta, &mut ops);
-
-    let art = e.artifact("dm_m10_n200_t10_nr").unwrap();
-    let args = [
-        e.upload(&h, &[tb, l.m, l.n]).unwrap(),
-        e.upload(&beta, &[l.m, l.n]).unwrap(),
-        e.upload(&eta, &[l.m]).unwrap(),
-        e.upload(&hb, &[tb, l.m]).unwrap(),
-        e.upload(&l.sigma_b, &[l.m]).unwrap(),
-        e.upload(&l.mu_b, &[l.m]).unwrap(),
-    ];
-    let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
-    let out = art.run_b(&refs).unwrap();
-    let y = out[0].to_vec::<f32>().unwrap();
-
-    for k in 0..tb {
-        let mut want = vec![0.0; l.m];
-        linear::dm_voter(
-            l,
-            &beta,
-            &eta,
-            &h[k * l.m * l.n..(k + 1) * l.m * l.n],
-            &hb[k * l.m..(k + 1) * l.m],
-            0..l.m,
-            false,
-            &mut want,
-            &mut ops,
+        let mut warm = OpCounter::default();
+        let _ = model.evaluate_with_banks_cached(&x, &method, &banks, Some(view), &mut warm);
+        assert_eq!(warm.muls, want.muls, "{method:?} warm must not under-count");
+        assert_eq!(warm.adds, want.adds, "{method:?} warm must not under-count");
+        assert_eq!(warm.muls_avoided, want_avoided.muls, "{method:?} avoided muls");
+        assert_eq!(warm.adds_avoided, want_avoided.adds, "{method:?} avoided adds");
+        assert_eq!(
+            warm.performed_muls(),
+            want.muls - want_avoided.muls,
+            "{method:?} performed muls"
         );
-        for (a, b) in y[k * l.m..(k + 1) * l.m].iter().zip(&want) {
-            assert!((a - b).abs() < 1e-3, "voter {k}: {a} vs {b}");
+        assert_eq!(
+            warm.performed_total(),
+            want.total() - want_avoided.total(),
+            "{method:?} performed total"
+        );
+    }
+}
+
+/// The cache's own aggregate counters agree with the per-evaluation
+/// `OpCounter` bookkeeping on the deterministic single-thread path.
+#[test]
+fn cache_counters_agree_with_opcounter_bookkeeping() {
+    let model = BnnModel::synthetic(&ARCH, 0x0D);
+    let cm = CostModel::from_arch(&ARCH);
+    let method = Method::DmBnn { schedule: vec![2, 2, 2] };
+    let x: Vec<f32> = (0..ARCH[0]).map(|i| (i as f32).cos()).collect();
+
+    let cache = DmCache::new(&CacheConfig::with_mb(8));
+    let view = CacheView::new(&cache, model.fingerprint());
+    let mut g = default_grng(3);
+    let banks = model.sample_banks(&method, &mut g);
+    let mut ops = OpCounter::default();
+    for _ in 0..3 {
+        let _ = model.evaluate_with_banks_cached(&x, &method, &banks, Some(view), &mut ops);
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.muls_avoided, ops.muls_avoided);
+    assert_eq!(stats.adds_avoided, ops.adds_avoided);
+    // two warm rounds of an all-hit evaluation
+    let per_round = cm.cacheable_precompute(&cost_method(&method));
+    assert_eq!(ops.muls_avoided, 2 * per_round.muls);
+    assert_eq!(stats.misses, stats.insertions);
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use bayesdm::coordinator::plan::InferenceMethod;
+    use bayesdm::coordinator::{serve, Executor, ServerConfig};
+    use bayesdm::dataset::{load_images, load_weights, LayerPosterior};
+    use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+    use bayesdm::nn::linear;
+    use bayesdm::opcount::OpCounter;
+    use bayesdm::runtime::Engine;
+
+    const ARTIFACTS: &str = "artifacts";
+
+    fn artifacts_ready() -> bool {
+        let ok = std::path::Path::new(ARTIFACTS).join("manifest.json").exists();
+        if !ok {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        }
+        ok
+    }
+
+    fn engine() -> Engine {
+        Engine::new(ARTIFACTS).expect("engine")
+    }
+
+    fn executor(seed: u64) -> Executor {
+        let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
+        Executor::new(engine(), weights, seed).unwrap()
+    }
+
+    fn randv(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = XorShift128Plus::new(seed);
+        (0..len).map(|_| r.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn every_artifact_compiles_and_is_shape_consistent() {
+        if !artifacts_ready() {
+            return;
+        }
+        let e = engine();
+        let n = e.warmup().expect("warmup compiles every artifact");
+        assert!(n >= 20, "expected a full artifact set, got {n}");
+        assert_eq!(e.cached(), n);
+        // manifest metadata sanity
+        assert_eq!(e.manifest.arch, vec![784, 200, 200, 10]);
+        assert!(e.manifest.t_blocks.contains(&10));
+    }
+
+    #[test]
+    fn precompute_artifact_matches_rust_oracle() {
+        if !artifacts_ready() {
+            return;
+        }
+        let e = engine();
+        let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
+        let l = &weights[2]; // (10, 200): cheapest layer
+        let x = randv(l.n, 1);
+        let art = e.artifact("precompute_m10_n200").unwrap();
+        let xb = e.upload(&x, &[l.n]).unwrap();
+        let sb = e.upload(&l.sigma, &[l.m, l.n]).unwrap();
+        let mb = e.upload(&l.mu, &[l.m, l.n]).unwrap();
+        let outs = art.run_b(&[&xb, &sb, &mb]).unwrap();
+        let beta = outs[0].to_vec::<f32>().unwrap();
+        let eta = outs[1].to_vec::<f32>().unwrap();
+
+        let mut rbeta = vec![0.0; l.m * l.n];
+        let mut reta = vec![0.0; l.m];
+        let mut ops = OpCounter::default();
+        linear::precompute(l, &x, &mut rbeta, &mut reta, &mut ops);
+        for (a, b) in beta.iter().zip(&rbeta) {
+            assert!((a - b).abs() < 1e-5, "beta mismatch {a} vs {b}");
+        }
+        for (a, b) in eta.iter().zip(&reta) {
+            assert!((a - b).abs() < 1e-3, "eta mismatch {a} vs {b}");
         }
     }
-}
 
-#[test]
-fn std_artifact_equals_dm_artifact_given_same_h() {
-    // The paper's core identity (Eqn 2a == 2b), across the PJRT boundary.
-    if !artifacts_ready() {
-        return;
-    }
-    let e = engine();
-    let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
-    let l = &weights[2];
-    let tb = 10;
-    let x = randv(l.n, 5);
-    let h = randv(tb * l.m * l.n, 6);
-    let hb = randv(tb * l.m, 7);
+    #[test]
+    fn dm_artifact_matches_rust_oracle() {
+        if !artifacts_ready() {
+            return;
+        }
+        let e = engine();
+        let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
+        let l = &weights[2]; // (10, 200), output layer => no relu
+        let tb = 10;
+        let x = randv(l.n, 2);
+        let h = randv(tb * l.m * l.n, 3);
+        let hb = randv(tb * l.m, 4);
 
-    // standard path
-    let std_art = e.artifact("std_m10_n200_t10_nr").unwrap();
-    let args = [
-        e.upload(&h, &[tb, l.m, l.n]).unwrap(),
-        e.upload(&l.sigma, &[l.m, l.n]).unwrap(),
-        e.upload(&l.mu, &[l.m, l.n]).unwrap(),
-        e.upload(&x, &[l.n]).unwrap(),
-        e.upload(&hb, &[tb, l.m]).unwrap(),
-        e.upload(&l.sigma_b, &[l.m]).unwrap(),
-        e.upload(&l.mu_b, &[l.m]).unwrap(),
-    ];
-    let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
-    let y_std = std_art.run_b(&refs).unwrap()[0].to_vec::<f32>().unwrap();
+        let mut beta = vec![0.0; l.m * l.n];
+        let mut eta = vec![0.0; l.m];
+        let mut ops = OpCounter::default();
+        linear::precompute(l, &x, &mut beta, &mut eta, &mut ops);
 
-    // DM path with the same uncertainty
-    let mut beta = vec![0.0; l.m * l.n];
-    let mut eta = vec![0.0; l.m];
-    linear::precompute(l, &x, &mut beta, &mut eta, &mut OpCounter::default());
-    let dm_art = e.artifact("dm_m10_n200_t10_nr").unwrap();
-    let args = [
-        e.upload(&h, &[tb, l.m, l.n]).unwrap(),
-        e.upload(&beta, &[l.m, l.n]).unwrap(),
-        e.upload(&eta, &[l.m]).unwrap(),
-        e.upload(&hb, &[tb, l.m]).unwrap(),
-        e.upload(&l.sigma_b, &[l.m]).unwrap(),
-        e.upload(&l.mu_b, &[l.m]).unwrap(),
-    ];
-    let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
-    let y_dm = dm_art.run_b(&refs).unwrap()[0].to_vec::<f32>().unwrap();
+        let art = e.artifact("dm_m10_n200_t10_nr").unwrap();
+        let args = [
+            e.upload(&h, &[tb, l.m, l.n]).unwrap(),
+            e.upload(&beta, &[l.m, l.n]).unwrap(),
+            e.upload(&eta, &[l.m]).unwrap(),
+            e.upload(&hb, &[tb, l.m]).unwrap(),
+            e.upload(&l.sigma_b, &[l.m]).unwrap(),
+            e.upload(&l.mu_b, &[l.m]).unwrap(),
+        ];
+        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        let out = art.run_b(&refs).unwrap();
+        let y = out[0].to_vec::<f32>().unwrap();
 
-    for (a, b) in y_std.iter().zip(&y_dm) {
-        assert!((a - b).abs() < 2e-3, "std {a} vs dm {b}");
-    }
-}
-
-#[test]
-fn executor_methods_produce_expected_voter_counts() {
-    if !artifacts_ready() {
-        return;
-    }
-    let ex = executor(11);
-    let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
-    let x = test.image(0);
-    let l_std = ex.evaluate(x, &InferenceMethod::Standard { t: 10 }).unwrap();
-    assert_eq!(l_std.len(), 10);
-    assert_eq!(l_std[0].len(), 10);
-    let l_hyb = ex.evaluate(x, &InferenceMethod::Hybrid { t: 10 }).unwrap();
-    assert_eq!(l_hyb.len(), 10);
-    let l_dm = ex.evaluate(x, &InferenceMethod::paper_dm(1.0)).unwrap();
-    assert_eq!(l_dm.len(), 1000);
-}
-
-#[test]
-fn alpha_blocked_dm_is_bit_identical_to_unblocked() {
-    // Fig 5's invariant across the PJRT boundary: same seed ⇒ the α = 0.1
-    // row-blocked execution produces the same voter logits as α = 1.0.
-    if !artifacts_ready() {
-        return;
-    }
-    let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
-    let x = test.image(3);
-    let full = executor(99).evaluate(x, &InferenceMethod::paper_dm(1.0)).unwrap();
-    for alpha in [0.5, 0.2, 0.1] {
-        let blocked = executor(99)
-            .evaluate(x, &InferenceMethod::paper_dm(alpha))
-            .unwrap();
-        assert_eq!(full.len(), blocked.len());
-        for (a, b) in full.iter().zip(&blocked) {
-            for (p, q) in a.iter().zip(b) {
-                assert!(
-                    (p - q).abs() < 1e-4,
-                    "alpha={alpha}: {p} vs {q} — blocking changed results"
-                );
+        for k in 0..tb {
+            let mut want = vec![0.0; l.m];
+            linear::dm_voter(
+                l,
+                &beta,
+                &eta,
+                &h[k * l.m * l.n..(k + 1) * l.m * l.n],
+                &hb[k * l.m..(k + 1) * l.m],
+                0..l.m,
+                false,
+                &mut want,
+                &mut ops,
+            );
+            for (a, b) in y[k * l.m..(k + 1) * l.m].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3, "voter {k}: {a} vs {b}");
             }
         }
     }
-}
 
-#[test]
-fn pjrt_accuracy_tracks_reference_model() {
-    // The PJRT path and the pure-rust reference must agree on test-set
-    // accuracy (both sample different H, so compare statistically).
-    if !artifacts_ready() {
-        return;
+    #[test]
+    fn std_artifact_equals_dm_artifact_given_same_h() {
+        // The paper's core identity (Eqn 2a == 2b), across the PJRT boundary.
+        if !artifacts_ready() {
+            return;
+        }
+        let e = engine();
+        let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
+        let l = &weights[2];
+        let tb = 10;
+        let x = randv(l.n, 5);
+        let h = randv(tb * l.m * l.n, 6);
+        let hb = randv(tb * l.m, 7);
+
+        // standard path
+        let std_art = e.artifact("std_m10_n200_t10_nr").unwrap();
+        let args = [
+            e.upload(&h, &[tb, l.m, l.n]).unwrap(),
+            e.upload(&l.sigma, &[l.m, l.n]).unwrap(),
+            e.upload(&l.mu, &[l.m, l.n]).unwrap(),
+            e.upload(&x, &[l.n]).unwrap(),
+            e.upload(&hb, &[tb, l.m]).unwrap(),
+            e.upload(&l.sigma_b, &[l.m]).unwrap(),
+            e.upload(&l.mu_b, &[l.m]).unwrap(),
+        ];
+        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        let y_std = std_art.run_b(&refs).unwrap()[0].to_vec::<f32>().unwrap();
+
+        // DM path with the same uncertainty
+        let mut beta = vec![0.0; l.m * l.n];
+        let mut eta = vec![0.0; l.m];
+        linear::precompute(l, &x, &mut beta, &mut eta, &mut OpCounter::default());
+        let dm_art = e.artifact("dm_m10_n200_t10_nr").unwrap();
+        let args = [
+            e.upload(&h, &[tb, l.m, l.n]).unwrap(),
+            e.upload(&beta, &[l.m, l.n]).unwrap(),
+            e.upload(&eta, &[l.m]).unwrap(),
+            e.upload(&hb, &[tb, l.m]).unwrap(),
+            e.upload(&l.sigma_b, &[l.m]).unwrap(),
+            e.upload(&l.mu_b, &[l.m]).unwrap(),
+        ];
+        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        let y_dm = dm_art.run_b(&refs).unwrap()[0].to_vec::<f32>().unwrap();
+
+        for (a, b) in y_std.iter().zip(&y_dm) {
+            assert!((a - b).abs() < 2e-3, "std {a} vs dm {b}");
+        }
     }
-    let ex = executor(21);
-    let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
-    let n = 100;
-    let acc_pjrt = ex
-        .accuracy(
+
+    #[test]
+    fn executor_methods_produce_expected_voter_counts() {
+        if !artifacts_ready() {
+            return;
+        }
+        let ex = executor(11);
+        let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
+        let x = test.image(0);
+        let l_std = ex.evaluate(x, &InferenceMethod::Standard { t: 10 }).unwrap();
+        assert_eq!(l_std.len(), 10);
+        assert_eq!(l_std[0].len(), 10);
+        let l_hyb = ex.evaluate(x, &InferenceMethod::Hybrid { t: 10 }).unwrap();
+        assert_eq!(l_hyb.len(), 10);
+        let l_dm = ex.evaluate(x, &InferenceMethod::paper_dm(1.0)).unwrap();
+        assert_eq!(l_dm.len(), 1000);
+    }
+
+    #[test]
+    fn alpha_blocked_dm_is_bit_identical_to_unblocked() {
+        // Fig 5's invariant across the PJRT boundary: same seed ⇒ the α = 0.1
+        // row-blocked execution produces the same voter logits as α = 1.0.
+        if !artifacts_ready() {
+            return;
+        }
+        let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
+        let x = test.image(3);
+        let full = executor(99).evaluate(x, &InferenceMethod::paper_dm(1.0)).unwrap();
+        for alpha in [0.5, 0.2, 0.1] {
+            let blocked = executor(99)
+                .evaluate(x, &InferenceMethod::paper_dm(alpha))
+                .unwrap();
+            assert_eq!(full.len(), blocked.len());
+            for (a, b) in full.iter().zip(&blocked) {
+                for (p, q) in a.iter().zip(b) {
+                    assert!(
+                        (p - q).abs() < 1e-4,
+                        "alpha={alpha}: {p} vs {q} — blocking changed results"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_accuracy_tracks_reference_model() {
+        // The PJRT path and the pure-rust reference must agree on test-set
+        // accuracy (both sample different H, so compare statistically).
+        if !artifacts_ready() {
+            return;
+        }
+        let ex = executor(21);
+        let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
+        let n = 100;
+        let acc_pjrt = ex
+            .accuracy(
+                &test.images[..n * test.dim],
+                &test.labels[..n],
+                &InferenceMethod::Standard { t: 20 },
+            )
+            .unwrap();
+        assert!(acc_pjrt > 0.85, "PJRT accuracy {acc_pjrt} implausibly low");
+
+        let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
+        let model = bayesdm::nn::bnn::BnnModel::new(weights);
+        let mut g = bayesdm::grng::Ziggurat::new(XorShift128Plus::new(33));
+        let acc_ref = model.accuracy(
             &test.images[..n * test.dim],
             &test.labels[..n],
-            &InferenceMethod::Standard { t: 20 },
-        )
-        .unwrap();
-    assert!(acc_pjrt > 0.85, "PJRT accuracy {acc_pjrt} implausibly low");
-
-    let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin")).unwrap();
-    let model = bayesdm::nn::bnn::BnnModel::new(weights);
-    let mut g = bayesdm::grng::Ziggurat::new(XorShift128Plus::new(33));
-    let acc_ref = model.accuracy(
-        &test.images[..n * test.dim],
-        &test.labels[..n],
-        &bayesdm::nn::bnn::Method::Standard { t: 20 },
-        &mut g,
-    );
-    assert!(
-        (acc_pjrt - acc_ref).abs() < 0.08,
-        "PJRT {acc_pjrt} vs reference {acc_ref}"
-    );
-}
-
-#[test]
-fn dm_and_standard_agree_on_predictions() {
-    // Different dataflows, same posterior: per-image predictions should
-    // agree on the overwhelming majority of (easy) test images.
-    if !artifacts_ready() {
-        return;
+            &bayesdm::nn::bnn::Method::Standard { t: 20 },
+            &mut g,
+        );
+        assert!(
+            (acc_pjrt - acc_ref).abs() < 0.08,
+            "PJRT {acc_pjrt} vs reference {acc_ref}"
+        );
     }
-    let ex = executor(42);
-    let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
-    let n = 60;
-    let mut agree = 0;
-    for i in 0..n {
-        let a = ex.predict(test.image(i), &InferenceMethod::Standard { t: 20 }).unwrap();
-        let b = ex.predict(test.image(i), &InferenceMethod::paper_dm(1.0)).unwrap();
-        if a == b {
-            agree += 1;
+
+    #[test]
+    fn dm_and_standard_agree_on_predictions() {
+        // Different dataflows, same posterior: per-image predictions should
+        // agree on the overwhelming majority of (easy) test images.
+        if !artifacts_ready() {
+            return;
         }
-    }
-    assert!(agree as f64 / n as f64 > 0.9, "only {agree}/{n} agreements");
-}
-
-#[test]
-fn server_routes_batches_and_answers() {
-    if !artifacts_ready() {
-        return;
-    }
-    let handle = serve(
-        || -> Result<Executor, String> {
-            let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin"))
-                .map_err(|e| e.to_string())?;
-            let engine = Engine::new(ARTIFACTS).map_err(|e| e.to_string())?;
-            Executor::new(engine, weights, 7).map_err(|e| e.to_string())
-        },
-        ServerConfig { max_batch: 4, workers: 1, ..ServerConfig::default() },
-    );
-    let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
-    let n = 12;
-    let mut pending = Vec::new();
-    for i in 0..n {
-        pending.push((
-            test.labels[i],
-            handle
-                .classify(test.image(i).to_vec(), InferenceMethod::Standard { t: 10 })
-                .unwrap(),
-        ));
-    }
-    let mut correct = 0;
-    for (label, p) in pending {
-        let r = p.wait().expect("response");
-        assert_eq!(r.voters, 10);
-        assert!(r.confidence > 0.0 && r.confidence <= 1.0);
-        assert!(r.entropy >= 0.0);
-        if r.class == label as usize {
-            correct += 1;
+        let ex = executor(42);
+        let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
+        let n = 60;
+        let mut agree = 0;
+        for i in 0..n {
+            let a = ex.predict(test.image(i), &InferenceMethod::Standard { t: 20 }).unwrap();
+            let b = ex.predict(test.image(i), &InferenceMethod::paper_dm(1.0)).unwrap();
+            if a == b {
+                agree += 1;
+            }
         }
+        assert!(agree as f64 / n as f64 > 0.9, "only {agree}/{n} agreements");
     }
-    assert!(correct >= n / 2, "server accuracy implausible: {correct}/{n}");
-    let s = handle.metrics.summary();
-    assert_eq!(s.requests, n as u64);
-    assert_eq!(s.errors, 0);
-    handle.shutdown();
-}
 
-#[test]
-fn executor_rejects_bad_inputs() {
-    if !artifacts_ready() {
-        return;
+    #[test]
+    fn server_routes_batches_and_answers() {
+        if !artifacts_ready() {
+            return;
+        }
+        let handle = serve(
+            || -> Result<Executor, String> {
+                let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin"))
+                    .map_err(|e| e.to_string())?;
+                let engine = Engine::new(ARTIFACTS).map_err(|e| e.to_string())?;
+                Executor::new(engine, weights, 7).map_err(|e| e.to_string())
+            },
+            ServerConfig { max_batch: 4, workers: 1, ..ServerConfig::default() },
+        );
+        let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
+        let n = 12;
+        let mut pending = Vec::new();
+        for i in 0..n {
+            pending.push((
+                test.labels[i],
+                handle
+                    .classify(test.image(i).to_vec(), InferenceMethod::Standard { t: 10 })
+                    .unwrap(),
+            ));
+        }
+        let mut correct = 0;
+        for (label, p) in pending {
+            let r = p.wait().expect("response");
+            assert_eq!(r.voters, 10);
+            assert!(r.confidence > 0.0 && r.confidence <= 1.0);
+            assert!(r.entropy >= 0.0);
+            if r.class == label as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct >= n / 2, "server accuracy implausible: {correct}/{n}");
+        let s = handle.metrics.summary();
+        assert_eq!(s.requests, n as u64);
+        assert_eq!(s.errors, 0);
+        handle.shutdown();
     }
-    let ex = executor(5);
-    // wrong input dim
-    assert!(ex.evaluate(&[0.0; 10], &InferenceMethod::Standard { t: 10 }).is_err());
-    // t not a multiple of the block
-    let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
-    assert!(ex
-        .evaluate(test.image(0), &InferenceMethod::Standard { t: 7 })
-        .is_err());
-    // schedule mismatch
-    assert!(ex
-        .evaluate(
-            test.image(0),
-            &InferenceMethod::DmBnn { schedule: vec![10, 10], alpha: 1.0 }
-        )
-        .is_err());
-}
 
-#[test]
-fn executor_shape_mismatch_weights_rejected() {
-    if !artifacts_ready() {
-        return;
+    #[test]
+    fn executor_rejects_bad_inputs() {
+        if !artifacts_ready() {
+            return;
+        }
+        let ex = executor(5);
+        // wrong input dim
+        assert!(ex.evaluate(&[0.0; 10], &InferenceMethod::Standard { t: 10 }).is_err());
+        // t not a multiple of the block
+        let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin")).unwrap();
+        assert!(ex
+            .evaluate(test.image(0), &InferenceMethod::Standard { t: 7 })
+            .is_err());
+        // schedule mismatch
+        assert!(ex
+            .evaluate(
+                test.image(0),
+                &InferenceMethod::DmBnn { schedule: vec![10, 10], alpha: 1.0 }
+            )
+            .is_err());
     }
-    let bad = vec![LayerPosterior {
-        m: 3,
-        n: 4,
-        mu: vec![0.0; 12],
-        sigma: vec![0.1; 12],
-        mu_b: vec![0.0; 3],
-        sigma_b: vec![0.1; 3],
-    }];
-    assert!(Executor::new(engine(), bad, 0).is_err());
+
+    #[test]
+    fn executor_shape_mismatch_weights_rejected() {
+        if !artifacts_ready() {
+            return;
+        }
+        let bad = vec![LayerPosterior {
+            m: 3,
+            n: 4,
+            mu: vec![0.0; 12],
+            sigma: vec![0.1; 12],
+            mu_b: vec![0.0; 3],
+            sigma_b: vec![0.1; 3],
+        }];
+        assert!(Executor::new(engine(), bad, 0).is_err());
+    }
 }
