@@ -1,0 +1,188 @@
+//! Bench: the α-blocked, allocation-free multi-voter kernel core vs the
+//! seed's per-voter dataflow.
+//!
+//! Two rungs per batch size on dm 2×2×2 (plus an α sweep):
+//!
+//! * `per-voter` — the pre-kernel-core shape: shared banks, but every
+//!   voter allocates its own activation/β/η vectors and sweeps full rows
+//!   (a faithful reconstruction of the old `evaluate_with_banks` loop).
+//! * `fused α=…` — the plan-compiled executor: one scratch arena reused
+//!   across the whole stream, flat logit output, and each β/H row block
+//!   feeding every voter while resident.
+//!
+//! Both paths are asserted bit-identical before timing.  Acceptance
+//! shape: the fused blocked sweep beats the per-voter baseline on dm
+//! 2×2×2 for every batch ≥ 16 (single-threaded, so the win is the kernel
+//! core, not the worker pool).
+//!
+//! Emits `BENCH_kernels.json` next to the working directory for the perf
+//! trajectory (machine-readable mirror of the printed table).
+
+use std::time::Duration;
+
+use bayesdm::dataset::{SynthSpec, Synthesizer};
+use bayesdm::grng::default_grng;
+use bayesdm::nn::batch::evaluate_batch_planned;
+use bayesdm::nn::bnn::{BnnModel, Method, UncertaintyBanks};
+use bayesdm::nn::linear::{dm_voter, precompute};
+use bayesdm::nn::plan::{DataflowPlan, ScratchPool};
+use bayesdm::opcount::OpCounter;
+use bayesdm::util::bench::{bench_for, header, Measurement};
+use bayesdm::MNIST_ARCH;
+
+/// The seed-shaped per-voter DM evaluation: full-row sweeps, fresh heap
+/// vectors for every activation, β, η and voter output.
+fn per_voter_dm(
+    model: &BnnModel,
+    x: &[f32],
+    banks: &UncertaintyBanks,
+    ops: &mut OpCounter,
+) -> Vec<Vec<f32>> {
+    let nl = model.layers.len();
+    let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+    for li in 0..nl {
+        let l = &model.layers[li];
+        let relu = li != nl - 1;
+        let mut next = Vec::with_capacity(acts.len() * banks[li].len());
+        for a in &acts {
+            let mut beta = vec![0.0f32; l.m * l.n];
+            let mut eta = vec![0.0f32; l.m];
+            precompute(l, a, &mut beta, &mut eta, ops);
+            for (h, hb) in &banks[li] {
+                let mut y = vec![0.0f32; l.m];
+                dm_voter(l, &beta, &eta, h, hb, 0, relu, &mut y, ops);
+                next.push(y);
+            }
+        }
+        acts = next;
+    }
+    acts
+}
+
+struct Row {
+    case: String,
+    batch: usize,
+    alpha: f64,
+    inputs_per_sec: f64,
+    mean_ms: f64,
+}
+
+fn to_json(rows: &[Row]) -> String {
+    // Hand-rolled JSON (no serde offline); all strings here are
+    // identifier-safe, so no escaping is needed.
+    let mut s = String::from("{\n  \"bench\": \"kernels\",\n  \"method\": \"dm_2x2x2\",\n");
+    s.push_str(&format!(
+        "  \"arch\": [{}],\n  \"rows\": [\n",
+        MNIST_ARCH.map(|d| d.to_string()).join(",")
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"case\": \"{}\", \"batch\": {}, \"alpha\": {}, \
+             \"inputs_per_sec\": {:.2}, \"mean_ms\": {:.4}}}{}\n",
+            r.case,
+            r.batch,
+            r.alpha,
+            r.inputs_per_sec,
+            r.mean_ms,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn inputs_per_sec(batch: usize, m: &Measurement) -> f64 {
+    batch as f64 / m.mean.as_secs_f64()
+}
+
+fn main() {
+    header("Kernels — α-blocked fused multi-voter core vs per-voter baseline");
+    let model = BnnModel::synthetic(&MNIST_ARCH, 0x5EED5);
+    let method = Method::DmBnn { schedule: vec![2, 2, 2] };
+    let data = Synthesizer::new(SynthSpec::mnist()).dataset(32);
+    let all: Vec<Vec<f32>> = (0..data.len()).map(|i| data.image(i).to_vec()).collect();
+
+    // Parity before timing: the fused blocked executor reproduces the
+    // per-voter baseline bit-for-bit at every α.
+    {
+        let mut g = default_grng(42);
+        let banks = model.sample_banks(&method, &mut g);
+        let mut ops = OpCounter::default();
+        let want = per_voter_dm(&model, &all[0], &banks, &mut ops);
+        for alpha in [1.0, 0.5, 0.1] {
+            let plan = DataflowPlan::with_alpha(&model, &method, alpha);
+            let mut g = default_grng(42);
+            let got = evaluate_batch_planned(&model, &plan, &all[..1], &mut g, 1, None, None);
+            assert_eq!(got.logits.input(0).to_vecs(), want, "alpha={alpha}");
+        }
+        println!("parity: fused blocked executor == per-voter baseline (all α)\n");
+    }
+
+    let budget = Duration::from_millis(400);
+    let pool = ScratchPool::new();
+    let mut rows: Vec<Row> = Vec::new();
+    let mut headline: Vec<(usize, f64, f64)> = Vec::new();
+
+    for &bs in &[1usize, 8, 16, 32] {
+        let xs = &all[..bs];
+        let m_base = bench_for(&format!("per-voter    b={bs}"), budget, || {
+            let mut g = default_grng(42);
+            let banks = model.sample_banks(&method, &mut g);
+            let mut ops = OpCounter::default();
+            for x in xs {
+                std::hint::black_box(per_voter_dm(&model, x, &banks, &mut ops));
+            }
+        });
+        let base_ips = inputs_per_sec(bs, &m_base);
+        rows.push(Row {
+            case: "per_voter_baseline".into(),
+            batch: bs,
+            alpha: 1.0,
+            inputs_per_sec: base_ips,
+            mean_ms: m_base.mean_ms(),
+        });
+
+        let mut fused_full = 0.0f64;
+        for &alpha in &[1.0f64, 0.5, 0.1] {
+            let plan = DataflowPlan::with_alpha(&model, &method, alpha);
+            let m_fused = bench_for(&format!("fused α={alpha:<4} b={bs}"), budget, || {
+                let mut g = default_grng(42);
+                let r = evaluate_batch_planned(&model, &plan, xs, &mut g, 1, None, Some(&pool));
+                std::hint::black_box(r);
+            });
+            let ips = inputs_per_sec(bs, &m_fused);
+            if alpha == 1.0 {
+                fused_full = ips;
+            }
+            rows.push(Row {
+                case: "fused_blocked".into(),
+                batch: bs,
+                alpha,
+                inputs_per_sec: ips,
+                mean_ms: m_fused.mean_ms(),
+            });
+            println!(
+                "  b={bs:<3} α={alpha:<4} fused {ips:>9.1} in/s | per-voter {base_ips:>9.1} \
+                 in/s ({:4.2}x)",
+                ips / base_ips
+            );
+        }
+        headline.push((bs, base_ips, fused_full));
+        println!();
+    }
+
+    let json = to_json(&rows);
+    std::fs::write("BENCH_kernels.json", &json).expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json ({} rows)", rows.len());
+
+    for &(bs, base, fused) in &headline {
+        if bs >= 16 {
+            assert!(
+                fused > base,
+                "acceptance: fused multi-voter sweep must beat the per-voter \
+                 baseline on dm 2x2x2 at batch {bs}: {fused:.1} vs {base:.1} inputs/sec"
+            );
+        }
+    }
+    println!("OK: fused blocked sweep beats per-voter baseline for every batch >= 16");
+}

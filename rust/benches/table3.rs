@@ -65,9 +65,7 @@ fn main() {
         let mut ops = OpCounter::default();
         linear::precompute(&layer, &x, &mut beta, &mut eta, &mut ops);
         for k in 0..t {
-            linear::dm_voter(
-                &layer, &beta, &eta, &hs[k], &hbs[k], 0..m, false, &mut y, &mut ops,
-            );
+            linear::dm_voter(&layer, &beta, &eta, &hs[k], &hbs[k], 0, false, &mut y, &mut ops);
         }
         std::hint::black_box(&y);
     });

@@ -4,7 +4,8 @@
 //! (three accelerator organizations at α = 0.1), Fig 7 (area vs α), and
 //! a traffic breakdown showing *where* the DM energy win comes from
 //! (weight-SRAM reads collapse into cheaper β reads + 10× fewer GRNG
-//! samples).
+//! samples).  The α swept here is the same parameter the inference
+//! engine's blocked kernels take (`EngineConfig::alpha` / `--alpha`).
 //!
 //! ```bash
 //! cargo run --release --offline --example hardware_sweep

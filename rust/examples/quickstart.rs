@@ -1,0 +1,78 @@
+//! Quickstart: bring up the batched reference engine, classify one image
+//! with each of the paper's three methods, and show the α-blocked DM
+//! dispatch plan plus the uncertainty signal.
+//!
+//! Runs with **zero artifacts** on the synthetic posterior/dataset; pass
+//! an artifact directory (built by `make artifacts`) to use the trained
+//! model instead.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart [-- ARTIFACTS_DIR]
+//! ```
+
+use std::time::Instant;
+
+use bayesdm::coordinator::plan::{InferenceMethod, PlanSummary};
+use bayesdm::coordinator::{vote, Engine, EngineConfig};
+use bayesdm::dataset::{load_images, load_weights, Dataset, SynthSpec, Synthesizer};
+use bayesdm::nn::bnn::BnnModel;
+use bayesdm::util::error::Result;
+use bayesdm::MNIST_ARCH;
+
+const ALPHA: f64 = 0.1;
+
+/// Trained artifacts when available, the self-contained synthetic pair
+/// otherwise.
+fn load(artifacts: &str) -> (BnnModel, Dataset, &'static str) {
+    let weights = load_weights(format!("{artifacts}/weights_mnist_bnn.bin"));
+    let test = load_images(format!("{artifacts}/data_mnist_test.bin"));
+    match (weights, test) {
+        (Ok(w), Ok(t)) => (BnnModel::new(w), t, "trained artifacts"),
+        _ => (
+            BnnModel::synthetic(&MNIST_ARCH, 0xBA13_5EED),
+            Synthesizer::new(SynthSpec::mnist()).dataset(64),
+            "synthetic (pass an artifacts dir for the trained posterior)",
+        ),
+    }
+}
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let (model, test, source) = load(&artifacts);
+
+    // The engine compiles one α-blocked DataflowPlan per method and keeps
+    // per-worker scratch arenas across batches (Fig 5's bounded-buffer
+    // schedule — results are bit-identical for every α).
+    let engine = Engine::new(model, EngineConfig { alpha: ALPHA, ..EngineConfig::default() });
+    println!("engine up: {source}, α = {ALPHA}\n");
+
+    let (x, label) = (test.image(0).to_vec(), test.labels[0]);
+    println!("classifying test image 0 (true label {label})\n");
+    for method in [
+        InferenceMethod::Standard { t: 100 },
+        InferenceMethod::Hybrid { t: 100 },
+        InferenceMethod::paper_dm(ALPHA),
+    ] {
+        let t0 = Instant::now();
+        let r = engine.evaluate_batch_seeded(&[x.clone()], &method.to_reference(), 0xC0FFEE);
+        let stack = r.logits.input(0);
+        let probs = vote::softmax_mean_flat(stack.flat(), stack.classes());
+        let class = vote::argmax(&probs);
+        println!(
+            "{:<9} voters={:<5} -> class {} (p={:.3}, entropy={:.3} nats) in {:>6.1} ms",
+            method.name(),
+            stack.voters(),
+            class,
+            probs[class],
+            vote::predictive_entropy_flat(stack.flat(), stack.classes()),
+            t0.elapsed().as_secs_f64() * 1e3,
+        );
+    }
+
+    println!("\nDM-BNN dispatch plan at α = {ALPHA} (same blocks the engine runs):");
+    let plan = PlanSummary::build(&MNIST_ARCH, &InferenceMethod::paper_dm(ALPHA), 10);
+    for (name, count) in &plan.dispatches {
+        println!("  {count:>5} × {name}");
+    }
+    Ok(())
+}

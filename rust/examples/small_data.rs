@@ -1,6 +1,6 @@
 //! Small-data & uncertainty: the BNN behaviours Fig 6 and §V-A motivate.
 //!
-//! Three demonstrations on the served posterior:
+//! Three demonstrations, all artifact-free on the reference engine:
 //!
 //! 1. the shrink-ratio protocol (paper §V-A) on the native synthetic
 //!    dataset — how many images survive each ratio;
@@ -14,13 +14,14 @@
 //! cargo run --release --offline --example small_data
 //! ```
 
-use anyhow::{Context, Result};
-
 use bayesdm::coordinator::plan::InferenceMethod;
-use bayesdm::coordinator::{vote, Executor};
-use bayesdm::dataset::{load_images, load_weights, shrink_subset, SynthSpec, Synthesizer};
-use bayesdm::runtime::Engine;
+use bayesdm::coordinator::{vote, Engine, EngineConfig};
+use bayesdm::dataset::{shrink_subset, SynthSpec, Synthesizer};
+use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+use bayesdm::nn::bnn::BnnModel;
+use bayesdm::util::error::Result;
 use bayesdm::util::Json;
+use bayesdm::MNIST_ARCH;
 
 const ARTIFACTS: &str = "artifacts";
 
@@ -31,26 +32,34 @@ fn main() -> Result<()> {
     let pool = synth.dataset(3000);
     for ratio in [16usize, 64, 256, 1024] {
         let sub = shrink_subset(&pool, ratio, 60_000, 7);
-        println!("  ratio {ratio:>5} -> {:>4} images ({} per class)", sub.len(), sub.len() / 10);
+        println!(
+            "  ratio {ratio:>5} -> {:>4} images ({} per class)",
+            sub.len(),
+            sub.len() / 10
+        );
     }
 
     // --- 2. uncertainty under corruption ---------------------------------
-    let engine = Engine::new(ARTIFACTS).context("run `make artifacts` first")?;
-    let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin"))?;
-    let exec = Executor::new(engine, weights, 0x5EED)?;
-    let test = load_images(format!("{ARTIFACTS}/data_mnist_test.bin"))?;
+    let engine = Engine::new(
+        BnnModel::synthetic(&MNIST_ARCH, 0x5EED),
+        EngineConfig { seed: 0x5EED, ..EngineConfig::default() },
+    );
     let method = InferenceMethod::Standard { t: 50 };
+    let entropy_of = |x: Vec<f32>, seed: u64| -> (usize, f32) {
+        let r = engine.evaluate_batch_seeded(&[x], &method.to_reference(), seed);
+        let stack = r.logits.input(0);
+        let probs = vote::softmax_mean_flat(stack.flat(), stack.classes());
+        (
+            vote::argmax(&probs),
+            vote::predictive_entropy_flat(stack.flat(), stack.classes()),
+        )
+    };
 
     println!("\npredictive entropy under input corruption (50 voters):");
     println!("  {:<22} {:>8} {:>10}", "input", "class", "entropy");
-    let x = test.image(1).to_vec();
-    let logits = exec.evaluate(&x, &method)?;
-    println!(
-        "  {:<22} {:>8} {:>10.3}",
-        "clean",
-        vote::argmax(&vote::mean_vote(&logits)),
-        vote::predictive_entropy(&logits)
-    );
+    let x = pool.image(1).to_vec();
+    let (class, ent) = entropy_of(x.clone(), 1);
+    println!("  {:<22} {class:>8} {ent:>10.3}", "clean");
     // occlude the centre 12x12 patch
     let mut occluded = x.clone();
     for r in 8..20 {
@@ -58,36 +67,26 @@ fn main() -> Result<()> {
             occluded[r * 28 + c] = 0.0;
         }
     }
-    let logits_o = exec.evaluate(&occluded, &method)?;
-    println!(
-        "  {:<22} {:>8} {:>10.3}",
-        "centre occluded",
-        vote::argmax(&vote::mean_vote(&logits_o)),
-        vote::predictive_entropy(&logits_o)
-    );
+    let (class, ent) = entropy_of(occluded, 1);
+    println!("  {:<22} {class:>8} {ent:>10.3}", "centre occluded");
     // pure noise
-    let mut g = bayesdm::grng::uniform::XorShift128Plus::new(17);
-    use bayesdm::grng::uniform::UniformSource;
+    let mut g = XorShift128Plus::new(17);
     let noise: Vec<f32> = (0..784).map(|_| g.next_f32()).collect();
-    let logits_n = exec.evaluate(&noise, &method)?;
-    println!(
-        "  {:<22} {:>8} {:>10.3}",
-        "uniform noise",
-        vote::argmax(&vote::mean_vote(&logits_n)),
-        vote::predictive_entropy(&logits_n)
-    );
+    let (class, ent) = entropy_of(noise, 1);
+    println!("  {:<22} {class:>8} {ent:>10.3}", "uniform noise");
     println!("  (entropy should increase top to bottom)");
 
-    // --- 3. Fig 6 curves ---------------------------------------------------
+    // --- 3. Fig 6 curves -------------------------------------------------
     match std::fs::read_to_string(format!("{ARTIFACTS}/fig6.json")) {
         Ok(text) => {
-            let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let v = Json::parse(&text).map_err(bayesdm::util::error::Error::msg)?;
             println!("\nFig 6 (from artifacts/fig6.json):");
             for (ds, curve) in v.get("datasets").and_then(Json::as_obj).unwrap() {
                 println!("  {ds}:");
                 let nn = curve.get("nn").and_then(Json::as_obj).unwrap();
                 let bnn = curve.get("bnn").and_then(Json::as_obj).unwrap();
-                let mut ratios: Vec<usize> = nn.keys().filter_map(|k| k.parse().ok()).collect();
+                let mut ratios: Vec<usize> =
+                    nn.keys().filter_map(|k| k.parse().ok()).collect();
                 ratios.sort_unstable();
                 for r in ratios {
                     let a = nn[&r.to_string()].as_f64().unwrap_or(0.0);
@@ -98,7 +97,9 @@ fn main() -> Result<()> {
                 }
             }
         }
-        Err(_) => println!("\n(fig6.json not built — run `make fig6` for the accuracy curves)"),
+        Err(_) => {
+            println!("\n(fig6.json not built — run `make fig6` for the accuracy curves)")
+        }
     }
     Ok(())
 }

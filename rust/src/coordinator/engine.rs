@@ -9,6 +9,12 @@
 //! `split_seed(cfg.seed, i)`, so a fixed config and call sequence replays
 //! identical logits regardless of thread scheduling.
 //!
+//! Execution is plan-compiled: the engine memoizes one α-blocked
+//! `DataflowPlan` per method (`EngineConfig::alpha`, the Fig 5
+//! memory-friendly sweep — bit-identical results for every α) and keeps a
+//! `ScratchPool` of worker arenas that survive across batches, so the
+//! steady-state hot path performs zero per-voter heap allocations.
+//!
 //! The engine optionally owns a cross-request feature-decomposition cache
 //! (`nn::dmcache`, enabled via [`EngineConfig::cache`] / `--cache-mb`):
 //! repeated inputs in the serving stream skip the deterministic μ-path
@@ -20,14 +26,16 @@
 //! [`super::server::InferenceBackend`]; this engine is the backend that
 //! works everywhere, with zero artifact dependencies.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::dataset::LayerPosterior;
-use crate::grng::split_seed;
-use crate::nn::batch::{evaluate_batch, evaluate_batch_cached, BatchResult};
+use crate::grng::{default_grng, split_seed};
+use crate::nn::batch::{evaluate_batch_planned, BatchResult};
 use crate::nn::bnn::{BnnModel, Method};
 use crate::nn::dmcache::{CacheConfig, CacheStats, CacheView, DmCache};
+use crate::nn::plan::{DataflowPlan, LogitBatch, ScratchPool};
 use crate::util::hash::hash_f32_matrix;
 
 use super::metrics::{Metrics, MetricsSummary};
@@ -39,6 +47,12 @@ use super::vote;
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
 }
+
+/// Upper bound on compiled plans an engine memoizes (see
+/// [`Engine::plan_for`]): far above any legitimate method mix, small
+/// enough that a client cycling through distinct methods cannot grow
+/// engine memory without bound.
+pub const MAX_MEMOIZED_PLANS: usize = 64;
 
 /// How the engine derives each batch's bank seed from the master seed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -73,6 +87,11 @@ pub struct EngineConfig {
     pub cache: CacheConfig,
     /// Per-batch seed derivation.
     pub seed_schedule: SeedSchedule,
+    /// Fractional α of the memory-friendly sweep (Fig 5): every compiled
+    /// plan blocks layer `l` in `alpha_block(m_l, alpha)` rows — the same
+    /// parameter `hwsim` and the AOT dispatch planner use.  Results are
+    /// bit-identical for every α; it shapes working-set size, not math.
+    pub alpha: f64,
 }
 
 impl Default for EngineConfig {
@@ -82,6 +101,7 @@ impl Default for EngineConfig {
             seed: 0xBA7E_5D00,
             cache: CacheConfig::from_env(),
             seed_schedule: SeedSchedule::Sequence,
+            alpha: 1.0,
         }
     }
 }
@@ -92,20 +112,32 @@ pub struct Engine {
     workers: usize,
     seed: u64,
     seed_schedule: SeedSchedule,
+    alpha: f64,
     cache: Option<DmCache>,
+    /// One compiled `DataflowPlan` per method seen (α baked in at compile
+    /// time) — the "compiled once per (model, method)" contract.
+    plans: Mutex<HashMap<Method, Arc<DataflowPlan>>>,
+    /// Worker arenas, reused across batches: a batch's scoped workers
+    /// check arenas out and park them back, so steady-state serving does
+    /// zero per-voter allocation.
+    scratch: ScratchPool,
     batches: AtomicU64,
     pub metrics: Arc<Metrics>,
 }
 
 impl Engine {
     pub fn new(model: BnnModel, cfg: EngineConfig) -> Self {
+        assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha must be in (0, 1]");
         let cache = cfg.cache.enabled().then(|| DmCache::new(&cfg.cache));
         Self {
             model,
             workers: cfg.workers.max(1),
             seed: cfg.seed,
             seed_schedule: cfg.seed_schedule,
+            alpha: cfg.alpha,
             cache,
+            plans: Mutex::new(HashMap::new()),
+            scratch: ScratchPool::new(),
             batches: AtomicU64::new(0),
             metrics: Arc::new(Metrics::new()),
         }
@@ -151,26 +183,47 @@ impl Engine {
         s
     }
 
+    /// The engine's compiled plan for `method` (α baked in), built on
+    /// first use and memoized for the engine's lifetime.
+    ///
+    /// The memo is bounded: `Method` is client-controlled through the
+    /// serving path (arbitrary `t` / schedules pass validation), so past
+    /// [`MAX_MEMOIZED_PLANS`] distinct methods a long-lived server
+    /// compiles fresh plans per call instead of growing the map without
+    /// bound — odd methods get slower, never a leak.
+    pub fn plan_for(&self, method: &Method) -> Arc<DataflowPlan> {
+        let mut plans = self.plans.lock().unwrap();
+        if let Some(p) = plans.get(method) {
+            return p.clone();
+        }
+        let p = Arc::new(DataflowPlan::with_alpha(&self.model, method, self.alpha));
+        if plans.len() < MAX_MEMOIZED_PLANS {
+            plans.insert(method.clone(), p.clone());
+        }
+        p
+    }
+
     /// Evaluate a batch with an explicit seed — logits and logical op
     /// counts are fully deterministic and independent of engine call
-    /// history *and* cache state (the parity-tested entry point).
+    /// history, cache state, α, and worker count (the parity-tested
+    /// entry point).
     pub fn evaluate_batch_seeded(
         &self,
         inputs: &[Vec<f32>],
         method: &Method,
         seed: u64,
     ) -> BatchResult {
-        match self.cache_view() {
-            Some(view) => evaluate_batch_cached(
-                &self.model,
-                inputs,
-                method,
-                seed,
-                self.workers,
-                Some(view),
-            ),
-            None => evaluate_batch(&self.model, inputs, method, seed, self.workers),
-        }
+        let plan = self.plan_for(method);
+        let mut g = default_grng(seed);
+        evaluate_batch_planned(
+            &self.model,
+            &plan,
+            inputs,
+            &mut g,
+            self.workers,
+            self.cache_view(),
+            Some(&self.scratch),
+        )
     }
 
     /// Evaluate a batch on the engine's seed schedule (see
@@ -189,7 +242,7 @@ impl Engine {
         self.evaluate_batch(inputs, method)
             .logits
             .iter()
-            .map(|voters| vote::argmax(&vote::mean_vote(voters)))
+            .map(|stack| vote::argmax(&vote::mean_vote_flat(stack.flat(), stack.classes())))
             .collect()
     }
 
@@ -221,7 +274,7 @@ impl InferenceBackend for Engine {
         &self,
         inputs: &[Vec<f32>],
         method: &InferenceMethod,
-    ) -> Result<Vec<Vec<Vec<f32>>>, String> {
+    ) -> Result<LogitBatch, String> {
         // Reject malformed requests with an error instead of letting the
         // reference model's asserts panic (and kill) a server worker.
         let m = method.to_reference();
@@ -251,6 +304,7 @@ impl InferenceBackend for Engine {
 mod tests {
     use super::*;
     use crate::grng::uniform::{UniformSource, XorShift128Plus};
+    use crate::nn::batch::evaluate_batch;
 
     fn engine(workers: usize) -> Engine {
         let model = BnnModel::synthetic(&[16, 12, 8, 5], 11);
@@ -305,6 +359,62 @@ mod tests {
     }
 
     #[test]
+    fn alpha_blocked_engine_is_bit_identical_and_memoizes_plans() {
+        let mk = |alpha| {
+            Engine::new(
+                BnnModel::synthetic(&[16, 12, 8, 5], 11),
+                EngineConfig { workers: 2, seed: 0xFEED, alpha, ..EngineConfig::default() },
+            )
+        };
+        let full = mk(1.0);
+        let xs = inputs(6, 16, 12);
+        let methods = [
+            Method::Standard { t: 3 },
+            Method::Hybrid { t: 3 },
+            Method::DmBnn { schedule: vec![2, 2, 1] },
+        ];
+        for alpha in [0.5, 0.25, 0.1] {
+            let blocked = mk(alpha);
+            for m in &methods {
+                let a = full.evaluate_batch_seeded(&xs, m, 555);
+                let b = blocked.evaluate_batch_seeded(&xs, m, 555);
+                assert_eq!(a.logits, b.logits, "alpha={alpha} {m:?}");
+                assert_eq!(a.ops.muls, b.ops.muls, "alpha={alpha} {m:?}");
+                assert_eq!(a.ops.adds, b.ops.adds, "alpha={alpha} {m:?}");
+            }
+            // one compiled plan per method, reused across calls
+            let p1 = blocked.plan_for(&methods[0]);
+            let p2 = blocked.plan_for(&methods[0]);
+            assert!(Arc::ptr_eq(&p1, &p2), "plan must be memoized");
+        }
+    }
+
+    #[test]
+    fn scratch_arenas_survive_across_batches() {
+        // Exact counts are scheduling-dependent (a fast worker's arena can
+        // be reused by a slower sibling within one batch), so pin only the
+        // invariants: arenas are parked, and the pool never grows past the
+        // worker count no matter how many batches run.
+        let e = engine(3);
+        let xs = inputs(6, 16, 13);
+        let m = Method::DmBnn { schedule: vec![2, 2, 1] };
+        for seed in 1..=4 {
+            let _ = e.evaluate_batch_seeded(&xs, &m, seed);
+            let idle = e.scratch.idle();
+            assert!((1..=3).contains(&idle), "seed {seed}: idle arenas {idle}");
+        }
+    }
+
+    #[test]
+    fn plan_memo_is_bounded_against_method_churn() {
+        let e = engine(1);
+        for t in 1..=(MAX_MEMOIZED_PLANS + 8) {
+            let _ = e.plan_for(&Method::Standard { t });
+        }
+        assert!(e.plans.lock().unwrap().len() <= MAX_MEMOIZED_PLANS);
+    }
+
+    #[test]
     fn predictions_in_output_range() {
         let e = engine(2);
         let xs = inputs(8, 16, 4);
@@ -337,6 +447,7 @@ mod tests {
                 seed: 0xFEED,
                 cache: CacheConfig::disabled(),
                 seed_schedule: SeedSchedule::Sequence,
+                ..EngineConfig::default()
             },
         );
         let cached = Engine::new(
@@ -346,6 +457,7 @@ mod tests {
                 seed: 0xFEED,
                 cache: CacheConfig::with_mb(8),
                 seed_schedule: SeedSchedule::Sequence,
+                ..EngineConfig::default()
             },
         );
         assert!(plain.cache_stats().is_none());
@@ -375,6 +487,7 @@ mod tests {
                     seed: 0xFEED,
                     cache: CacheConfig::disabled(),
                     seed_schedule: SeedSchedule::ContentHash,
+                    ..EngineConfig::default()
                 },
             )
         };

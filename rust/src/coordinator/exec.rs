@@ -315,11 +315,12 @@ impl super::server::InferenceBackend for Executor {
         &self,
         inputs: &[Vec<f32>],
         method: &super::plan::InferenceMethod,
-    ) -> std::result::Result<Vec<Vec<Vec<f32>>>, String> {
-        inputs
+    ) -> std::result::Result<crate::nn::plan::LogitBatch, String> {
+        let stacks = inputs
             .iter()
             .map(|x| self.evaluate(x, method).map_err(|e| e.to_string()))
-            .collect()
+            .collect::<std::result::Result<Vec<_>, String>>()?;
+        Ok(crate::nn::plan::LogitBatch::from_stacks(&stacks))
     }
 }
 

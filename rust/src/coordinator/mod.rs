@@ -33,6 +33,7 @@ pub mod server;
 pub mod vote;
 
 pub use crate::nn::dmcache::{CacheConfig, CacheStats};
+pub use crate::nn::plan::{DataflowPlan, LogitBatch, LogitStack};
 pub use engine::{Engine, EngineConfig, SeedSchedule};
 #[cfg(feature = "pjrt")]
 pub use exec::Executor;

@@ -64,9 +64,10 @@ impl InferenceMethod {
     }
 
     /// The reference-model (`crate::nn`) equivalent of this method.  The
-    /// α row-blocking knob only shapes artifact dispatch (Fig 5) — the
-    /// reference dataflow always computes full rows, with identical
-    /// results — so it is dropped here.
+    /// α row-blocking knob shapes the *schedule*, not the math — blocked
+    /// and unblocked execution are bit-identical — so it is dropped here;
+    /// the engine applies its own `EngineConfig::alpha` when compiling
+    /// `DataflowPlan`s for the software kernels.
     pub fn to_reference(&self) -> crate::nn::Method {
         match self {
             InferenceMethod::Standard { t } => crate::nn::Method::Standard { t: *t },
@@ -145,16 +146,11 @@ impl PlanSummary {
     }
 }
 
-/// Row-block size for an α (mirrors `compile.aot._alpha_blocks`): the
-/// largest divisor of `m` not exceeding `round(m·α)`, min 1.
-pub fn alpha_block(m: usize, alpha: f64) -> usize {
-    assert!(alpha > 0.0 && alpha <= 1.0);
-    let mut mb = ((m as f64 * alpha).round() as usize).clamp(1, m);
-    while m % mb != 0 {
-        mb -= 1;
-    }
-    mb
-}
+/// Row-block size for an α (mirrors `compile.aot._alpha_blocks`): shared
+/// with the software execution plans (`nn::plan`), so the artifact
+/// dispatch schedule, the engine's blocked kernels and `hwsim`'s α all
+/// describe the same sweep.
+pub use crate::nn::plan::alpha_block;
 
 #[cfg(test)]
 mod tests {

@@ -27,19 +27,22 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::nn::plan::LogitBatch;
+
 use super::metrics::Metrics;
 use super::plan::InferenceMethod;
 use super::vote;
 
-/// A serving backend: evaluates one micro-batch of inputs, returning one
-/// voter-logit stack per input.  Implemented by the batched reference
-/// engine (always) and the PJRT executor (`pjrt` feature).
+/// A serving backend: evaluates one micro-batch of inputs, returning the
+/// batch's flat voter-logit stacks (`nn::plan::LogitBatch` — one
+/// contiguous buffer, one view per input).  Implemented by the batched
+/// reference engine (always) and the PJRT executor (`pjrt` feature).
 pub trait InferenceBackend {
     fn run_batch(
         &self,
         inputs: &[Vec<f32>],
         method: &InferenceMethod,
-    ) -> Result<Vec<Vec<Vec<f32>>>, String>;
+    ) -> Result<LogitBatch, String>;
 }
 
 impl<B: InferenceBackend + ?Sized> InferenceBackend for Arc<B> {
@@ -47,7 +50,7 @@ impl<B: InferenceBackend + ?Sized> InferenceBackend for Arc<B> {
         &self,
         inputs: &[Vec<f32>],
         method: &InferenceMethod,
-    ) -> Result<Vec<Vec<Vec<f32>>>, String> {
+    ) -> Result<LogitBatch, String> {
         (**self).run_batch(inputs, method)
     }
 }
@@ -276,21 +279,23 @@ fn run_batch<B: InferenceBackend>(backend: &B, mut batch: Vec<Request>, metrics:
     let inputs: Vec<Vec<f32>> = batch.iter_mut().map(|r| std::mem::take(&mut r.image)).collect();
     match backend.run_batch(&inputs, &method) {
         Ok(all) if all.len() == batch.len() => {
-            for (req, logits) in batch.into_iter().zip(all) {
+            // `LogitBatch::iter` always yields `len()` views, so the zip
+            // answers every request even for degenerate voter shapes.
+            for (req, logits) in batch.into_iter().zip(all.iter()) {
                 let latency = req.enqueued.elapsed();
-                if logits.is_empty() {
+                if logits.voters() == 0 {
                     metrics.record_error();
                     let _ = req.respond.send(Err("backend returned no voters".to_string()));
                     continue;
                 }
-                let probs = vote::softmax_mean(&logits);
+                let probs = vote::softmax_mean_flat(logits.flat(), logits.classes());
                 let class = vote::argmax(&probs);
-                metrics.record(latency, logits.len());
+                metrics.record(latency, logits.voters());
                 let _ = req.respond.send(Ok(Response {
                     class,
                     confidence: probs[class],
-                    entropy: vote::predictive_entropy(&logits),
-                    voters: logits.len(),
+                    entropy: vote::predictive_entropy_flat(logits.flat(), logits.classes()),
+                    voters: logits.voters(),
                     latency,
                 }));
             }

@@ -1,5 +1,12 @@
 //! Voter aggregation (the ⊙ operator of Table II) and uncertainty
 //! summaries.
+//!
+//! Each aggregate comes in two shapes: the `&[Vec<f32>]` stack the
+//! single-input reference API produces, and a `_flat` variant over a
+//! contiguous voter-major `(T × classes)` buffer — the
+//! `nn::plan::LogitBatch` layout the serving path uses, so responses are
+//! computed without re-nesting the batch output.  Both shapes run the
+//! same per-row arithmetic in the same order, so they agree bitwise.
 
 /// Mean of the voter logit stack (Algorithm 1/2 final line).
 pub fn mean_vote(logits: &[Vec<f32>]) -> Vec<f32> {
@@ -13,6 +20,23 @@ pub fn mean_vote(logits: &[Vec<f32>]) -> Vec<f32> {
         }
     }
     let t = logits.len() as f32;
+    for o in out.iter_mut() {
+        *o /= t;
+    }
+    out
+}
+
+/// [`mean_vote`] over a flat voter-major `(T × classes)` buffer.
+pub fn mean_vote_flat(logits: &[f32], classes: usize) -> Vec<f32> {
+    assert!(classes > 0 && !logits.is_empty(), "vote over empty voter set");
+    assert_eq!(logits.len() % classes, 0, "flat stack must be T x classes");
+    let mut out = vec![0.0f32; classes];
+    for row in logits.chunks_exact(classes) {
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    let t = (logits.len() / classes) as f32;
     for o in out.iter_mut() {
         *o /= t;
     }
@@ -37,10 +61,36 @@ pub fn softmax_mean(logits: &[Vec<f32>]) -> Vec<f32> {
     out
 }
 
+/// [`softmax_mean`] over a flat voter-major `(T × classes)` buffer.
+pub fn softmax_mean_flat(logits: &[f32], classes: usize) -> Vec<f32> {
+    assert!(classes > 0 && !logits.is_empty(), "vote over empty voter set");
+    assert_eq!(logits.len() % classes, 0, "flat stack must be T x classes");
+    let mut out = vec![0.0f32; classes];
+    for row in logits.chunks_exact(classes) {
+        let s = softmax(row);
+        for (o, v) in out.iter_mut().zip(&s) {
+            *o += v;
+        }
+    }
+    let t = (logits.len() / classes) as f32;
+    for o in out.iter_mut() {
+        *o /= t;
+    }
+    out
+}
+
 /// Predictive entropy of the softmax-mean (nats): the BNN's uncertainty
 /// signal, exposed per response by the server.
 pub fn predictive_entropy(logits: &[Vec<f32>]) -> f32 {
-    let p = softmax_mean(logits);
+    entropy(&softmax_mean(logits))
+}
+
+/// [`predictive_entropy`] over a flat voter-major buffer.
+pub fn predictive_entropy_flat(logits: &[f32], classes: usize) -> f32 {
+    entropy(&softmax_mean_flat(logits, classes))
+}
+
+fn entropy(p: &[f32]) -> f32 {
     -p.iter().map(|&q| if q > 0.0 { q * (q + 1e-12).ln() } else { 0.0 }).sum::<f32>()
 }
 
@@ -52,14 +102,11 @@ pub fn softmax(xs: &[f32]) -> Vec<f32> {
     exps.into_iter().map(|e| e / sum).collect()
 }
 
-/// Index of the maximum element (first on ties).
-pub fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap()
-}
+/// Index of the maximum element (last on ties), shared with the
+/// reference dataflow: one implementation, total over all f32 bit
+/// patterns, so NaN logits pick a deterministic winner instead of
+/// panicking inside a serving worker (see `nn::linear::argmax`).
+pub use crate::nn::linear::argmax;
 
 #[cfg(test)]
 mod tests {
@@ -112,5 +159,33 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn empty_vote_panics() {
         let _ = mean_vote(&[]);
+    }
+
+    #[test]
+    fn flat_variants_agree_bitwise_with_nested() {
+        let stack = vec![vec![1.0f32, -2.0, 0.5], vec![0.25, 3.0, -1.5], vec![2.0, 0.0, 0.125]];
+        let flat: Vec<f32> = stack.iter().flatten().copied().collect();
+        assert_eq!(mean_vote(&stack), mean_vote_flat(&flat, 3));
+        assert_eq!(softmax_mean(&stack), softmax_mean_flat(&flat, 3));
+        assert_eq!(
+            predictive_entropy(&stack).to_bits(),
+            predictive_entropy_flat(&flat, 3).to_bits()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_flat_vote_panics() {
+        let _ = mean_vote_flat(&[], 3);
+    }
+
+    #[test]
+    fn argmax_survives_nan_logits_deterministically() {
+        // Regression: a NaN logit panicked the serving worker.  Under the
+        // total order NaN sorts above +∞ — deterministic, never a panic.
+        assert_eq!(argmax(&[0.0, f32::NAN, 5.0]), 1);
+        assert_eq!(argmax(&[f32::INFINITY, f32::NAN]), 1);
+        let probs = softmax_mean_flat(&[f32::NAN, 0.0, 1.0, 0.0], 2);
+        let _ = argmax(&probs); // must not panic whatever softmax yields
     }
 }

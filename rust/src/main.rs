@@ -41,9 +41,9 @@ USAGE: bayesdm [--artifacts DIR] <subcommand> [flags]
 
 SUBCOMMANDS:
   serve    --method M --requests N --max-batch B --workers W [--synthetic]
-           [--cache-mb MB]
+           [--cache-mb MB] [--alpha A]
   eval     --method M --limit N --batch B --workers W [--synthetic]
-           [--cache-mb MB]
+           [--cache-mb MB] [--alpha A]
   tables   --table {3|4|5} [--limit N]
   fig6
   hwsweep
@@ -51,6 +51,10 @@ SUBCOMMANDS:
 
 methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
 --workers: engine pool threads (default: one per core)
+--alpha: fractional row-block size of the memory-friendly sweep (Fig 5),
+         in (0, 1].  Shapes the engine's blocked kernel schedule and the
+         dm dispatch plan; results are bit-identical for every alpha —
+         the same parameter hwsweep sweeps for the hardware model.
 --cache-mb: cross-request feature-decomposition cache budget in MiB
             (0 = off; default honors the BAYESDM_CACHE_MB env toggle).
             Repeated inputs skip the deterministic mu-path GEMVs; results
@@ -60,6 +64,15 @@ methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
 fn parse_method(s: &str, alpha: f64) -> Result<InferenceMethod> {
     InferenceMethod::parse(s, alpha)
         .with_context(|| format!("unknown method `{s}` (standard|hybrid|dm)"))
+}
+
+/// Validate the CLI `--alpha` before it reaches an engine assert.
+fn check_alpha(alpha: f64) -> Result<f64> {
+    if alpha > 0.0 && alpha <= 1.0 {
+        Ok(alpha)
+    } else {
+        Err(Error::msg(format!("--alpha must be in (0, 1], got {alpha}")))
+    }
 }
 
 /// `--cache-mb MB` → cache config; an explicit 0 disables, absence falls
@@ -99,7 +112,7 @@ fn main() -> Result<()> {
         "serve" => {
             let method = args.get("method", "dm");
             let requests: usize = args.get_parse("requests", 200).map_err(Error::msg)?;
-            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(Error::msg)?;
+            let alpha: f64 = check_alpha(args.get_parse("alpha", 1.0).map_err(Error::msg)?)?;
             let max_batch: usize = args.get_parse("max-batch", 8).map_err(Error::msg)?;
             let pool = default_workers();
             let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
@@ -110,7 +123,7 @@ fn main() -> Result<()> {
             let (model, test) = load_model_and_data(&artifacts, synthetic)?;
             let engine = Arc::new(Engine::new(
                 model,
-                EngineConfig { workers, seed: 0xBA135, cache, ..EngineConfig::default() },
+                EngineConfig { workers, seed: 0xBA135, cache, alpha, ..EngineConfig::default() },
             ));
             // One dispatch worker: the engine pool is the parallelism.
             let cfg = ServerConfig { max_batch, workers: 1, ..ServerConfig::default() };
@@ -150,7 +163,7 @@ fn main() -> Result<()> {
         "eval" => {
             let method = args.get("method", "dm");
             let limit: usize = args.get_parse("limit", 500).map_err(Error::msg)?;
-            let alpha: f64 = args.get_parse("alpha", 1.0).map_err(Error::msg)?;
+            let alpha: f64 = check_alpha(args.get_parse("alpha", 1.0).map_err(Error::msg)?)?;
             let batch: usize = args.get_parse("batch", 32).map_err(Error::msg)?;
             let pool = default_workers();
             let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
@@ -161,7 +174,7 @@ fn main() -> Result<()> {
             let (model, test) = load_model_and_data(&artifacts, synthetic)?;
             let engine = Engine::new(
                 model,
-                EngineConfig { workers, seed: 0xE7A1, cache, ..EngineConfig::default() },
+                EngineConfig { workers, seed: 0xE7A1, cache, alpha, ..EngineConfig::default() },
             );
             let n = limit.min(test.len());
             let t0 = Instant::now();

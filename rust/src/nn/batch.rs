@@ -10,35 +10,41 @@
 //!
 //! # Parity contract
 //!
-//! `evaluate_batch(model, xs, m, seed, w).logits[i]` is **bit-identical**
-//! (logits *and* op counts) to the serial
+//! `evaluate_batch(model, xs, m, seed, w).logits.input(i)` is
+//! **bit-identical** (logits *and* op counts) to the serial
 //! `model.evaluate(&xs[i], m, &mut default_grng(seed))`, for every worker
-//! count `w`.  This holds by construction: serial evaluation is
-//! `sample_banks` + `evaluate_with_banks`, every serial call on a fresh
-//! `default_grng(seed)` draws the same banks the batch draws once, and
-//! f32 arithmetic inside `evaluate_with_banks` is identical per input.
-//! The integration test `tests/batch_parity.rs` pins this for batches of
-//! 1, 7 and 64 across all three methods.
+//! count `w` and every α block size.  This holds by construction: serial
+//! evaluation is `sample_banks` + `evaluate_with_banks`, every serial
+//! call on a fresh `default_grng(seed)` draws the same banks the batch
+//! draws once, and both run the same `nn::kernels` executor per input.
+//! `tests/batch_parity.rs` pins this for batches of 1, 7 and 64;
+//! `tests/blocked_parity.rs` adds the α sweep.
 //!
-//! # Threading
+//! # Threading and allocation
 //!
 //! Inputs are partitioned into contiguous chunks across `std::thread`
 //! scoped workers (no async runtime); each worker owns a private
-//! [`OpCounter`] and its chunk of the output, so the hot loop takes no
-//! locks.  Chunks are reassembled in input order, making results
-//! independent of thread scheduling.
+//! [`OpCounter`], an `EvalScratch` arena checked out of a
+//! [`ScratchPool`], and a disjoint window of the batch's flat
+//! [`LogitBatch`] buffer, so the hot loop takes no locks and performs
+//! zero per-voter heap allocations — with a caller-owned pool (the
+//! engine's), arenas survive across batches too.  Chunk windows are laid
+//! out in input order, making results independent of thread scheduling.
 
 use crate::grng::{default_grng, Grng};
 use crate::opcount::counter::OpCounter;
 
 use super::bnn::{BnnModel, Method};
 use super::dmcache::CacheView;
+use super::kernels::execute_plan;
+use super::plan::{DataflowPlan, LogitBatch, ScratchPool};
 
 /// Result of one batch evaluation.
 #[derive(Debug, Clone)]
 pub struct BatchResult {
-    /// Per-input voter logit stacks (`logits[i][k]` = voter k of input i).
-    pub logits: Vec<Vec<Vec<f32>>>,
+    /// Flat per-input voter logit stacks (`logits.input(i).voter(k)` =
+    /// voter k of input i).
+    pub logits: LogitBatch,
     /// Instrumented MUL/ADD counts aggregated over all inputs/workers.
     pub ops: OpCounter,
 }
@@ -86,8 +92,10 @@ pub fn evaluate_batch_with(
     evaluate_batch_with_cached(model, inputs, method, g, workers, None)
 }
 
-/// The fully general batched entry point: caller-owned generator plus an
-/// optional decomposition cache.
+/// Caller-owned generator plus an optional decomposition cache; compiles
+/// a fresh full-row plan per call.  The engine's hot path uses
+/// [`evaluate_batch_planned`] with a memoized plan and a persistent
+/// scratch pool instead.
 pub fn evaluate_batch_with_cached(
     model: &BnnModel,
     inputs: &[Vec<f32>],
@@ -96,20 +104,63 @@ pub fn evaluate_batch_with_cached(
     workers: usize,
     cache: Option<CacheView<'_>>,
 ) -> BatchResult {
+    let plan = DataflowPlan::new(model, method);
+    evaluate_batch_planned(model, &plan, inputs, g, workers, cache, None)
+}
+
+/// The fully general batched entry point: a pre-compiled (possibly
+/// α-blocked) plan, a caller-owned generator, an optional decomposition
+/// cache, and an optional scratch pool whose arenas are reused across
+/// calls.  Logits and logical op counts are invariant to the plan's block
+/// sizes, the worker count, the cache state, and whether a pool is
+/// supplied.
+pub fn evaluate_batch_planned(
+    model: &BnnModel,
+    plan: &DataflowPlan,
+    inputs: &[Vec<f32>],
+    g: &mut dyn Grng,
+    workers: usize,
+    cache: Option<CacheView<'_>>,
+    pool: Option<&ScratchPool>,
+) -> BatchResult {
     let n = inputs.len();
     if n == 0 {
-        return BatchResult { logits: Vec::new(), ops: OpCounter::default() };
+        return BatchResult {
+            logits: LogitBatch::zeros(0, plan.voters, plan.classes),
+            ops: OpCounter::default(),
+        };
     }
     // Θ sampling, once per batch: this is the memoization.
-    let banks = model.sample_banks(method, g);
+    let banks = model.sample_banks(&plan.method, g);
 
+    let local_pool;
+    let pool = match pool {
+        Some(p) => p,
+        None => {
+            local_pool = ScratchPool::new();
+            &local_pool
+        }
+    };
+
+    let stride = plan.logit_floats();
+    let mut logits = LogitBatch::zeros(n, plan.voters, plan.classes);
     let workers = workers.clamp(1, n);
-    if workers == 1 {
+
+    if workers == 1 || stride == 0 {
         let mut ops = OpCounter::default();
-        let logits = inputs
-            .iter()
-            .map(|x| model.evaluate_with_banks_cached(x, method, &banks, cache, &mut ops))
-            .collect();
+        let mut scratch = pool.checkout();
+        if stride == 0 {
+            // Degenerate zero-voter methods still replay the dataflow's
+            // decompositions for op-count parity with the serial path.
+            for x in inputs {
+                execute_plan(model, plan, x, &banks, cache, &mut scratch, &mut [], &mut ops);
+            }
+        } else {
+            for (x, out) in inputs.iter().zip(logits.data_mut().chunks_mut(stride)) {
+                execute_plan(model, plan, x, &banks, cache, &mut scratch, out, &mut ops);
+            }
+        }
+        pool.give_back(scratch);
         return BatchResult { logits, ops };
     }
 
@@ -118,16 +169,16 @@ pub fn evaluate_batch_with_cached(
     std::thread::scope(|s| {
         let banks = &banks;
         let mut handles = Vec::with_capacity(workers);
-        for chunk_inputs in inputs.chunks(chunk) {
+        let windows = logits.data_mut().chunks_mut(chunk * stride);
+        for (chunk_inputs, window) in inputs.chunks(chunk).zip(windows) {
             handles.push(s.spawn(move || {
                 let mut ops = OpCounter::default();
-                let logits = chunk_inputs
-                    .iter()
-                    .map(|x| {
-                        model.evaluate_with_banks_cached(x, method, banks, cache, &mut ops)
-                    })
-                    .collect::<Vec<_>>();
-                (logits, ops)
+                let mut scratch = pool.checkout();
+                for (x, out) in chunk_inputs.iter().zip(window.chunks_mut(stride)) {
+                    execute_plan(model, plan, x, banks, cache, &mut scratch, out, &mut ops);
+                }
+                pool.give_back(scratch);
+                ops
             }));
         }
         for h in handles {
@@ -135,12 +186,7 @@ pub fn evaluate_batch_with_cached(
         }
     });
 
-    let mut logits = Vec::with_capacity(n);
-    let mut ops = OpCounter::default();
-    for (chunk_logits, chunk_ops) in per_chunk {
-        logits.extend(chunk_logits);
-        ops += chunk_ops;
-    }
+    let ops = per_chunk.into_iter().sum();
     BatchResult { logits, ops }
 }
 
@@ -176,7 +222,7 @@ mod tests {
         for (i, x) in xs.iter().enumerate() {
             let mut g = default_grng(42);
             let (logits, ops) = model.evaluate(x, &method, &mut g);
-            assert_eq!(batch.logits[i], logits, "input {i}");
+            assert_eq!(batch.logits.input(i).to_vecs(), logits, "input {i}");
             serial_ops += ops;
         }
         assert_eq!(batch.ops, serial_ops);
@@ -193,6 +239,26 @@ mod tests {
             assert_eq!(many.logits, one.logits, "workers={w}");
             assert_eq!(many.ops, one.ops, "workers={w}");
         }
+    }
+
+    #[test]
+    fn planned_blocked_path_with_pool_matches_default() {
+        let model = BnnModel::synthetic(&[12, 9, 5], 8);
+        let xs = inputs(11, 12, 21);
+        let method = Method::DmBnn { schedule: vec![3, 2, 1] };
+        let want = evaluate_batch(&model, &xs, &method, 23, 2);
+        let pool = ScratchPool::new();
+        for rows in [1usize, 2, 4, 5, 9] {
+            let plan = DataflowPlan::with_block_rows(&model, &method, rows);
+            for round in 0..2 {
+                let mut g = default_grng(23);
+                let got = evaluate_batch_planned(&model, &plan, &xs, &mut g, 3, None, Some(&pool));
+                assert_eq!(got.logits, want.logits, "rows={rows} round={round}");
+                assert_eq!(got.ops, want.ops, "rows={rows} round={round}");
+            }
+        }
+        // arenas were parked back for reuse across batches
+        assert!(pool.idle() > 0);
     }
 
     #[test]
@@ -224,9 +290,11 @@ mod tests {
         let xs = inputs(4, 8, 7);
         let r = evaluate_batch(&model, &xs, &Method::DmBnn { schedule: vec![3, 2, 1] }, 0, 2);
         assert_eq!(r.logits.len(), 4);
-        for l in &r.logits {
-            assert_eq!(l.len(), 6);
-            assert_eq!(l[0].len(), 4);
+        assert_eq!(r.logits.voters(), 6);
+        assert_eq!(r.logits.classes(), 4);
+        for stack in r.logits.iter() {
+            assert_eq!(stack.voters(), 6);
+            assert_eq!(stack.voter(0).len(), 4);
         }
     }
 }

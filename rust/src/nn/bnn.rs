@@ -16,6 +16,11 @@
 //! [`BnnModel::evaluate`] is literally stage 1 followed by stage 2, which
 //! is what makes the batch-vs-serial parity contract exact (see
 //! `nn::batch`).
+//!
+//! Stage 2 itself executes through the α-blocked kernel core
+//! (`nn::plan` + `nn::kernels`): a compiled [`DataflowPlan`] plus a
+//! scratch arena, the same machinery the batched engine reuses across
+//! inputs and batches — so the oracle and the hot path cannot drift.
 
 use std::sync::{Arc, OnceLock};
 
@@ -28,10 +33,13 @@ use crate::opcount::model::LayerCost;
 use crate::util::hash::{fnv1a_f32s, fnv1a_u64, FNV_OFFSET};
 
 use super::dmcache::{CacheView, Decomp};
-use super::linear::{argmax, dm_voter, precompute, standard_voter, vote};
+use super::kernels::execute_plan;
+use super::linear::{argmax, precompute, vote};
+use super::plan::{DataflowPlan, EvalScratch};
 
 /// Inference method selector (mirrors `opcount::model::Method`).
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// `Hash` lets the engine memoize one compiled `DataflowPlan` per method.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum Method {
     Standard { t: usize },
     Hybrid { t: usize },
@@ -161,8 +169,10 @@ impl BnnModel {
     /// from the cross-request cache when a bit-exact entry exists (booking
     /// the skipped precompute into the counter's `*_avoided` fields, so
     /// logical op counts never under-count), otherwise run `precompute`
-    /// and publish the result.
-    fn decompose(
+    /// and publish the result.  The kernel executor (`nn::kernels`) calls
+    /// this on the cached path; the uncached path computes into resident
+    /// scratch instead and never allocates.
+    pub(crate) fn decompose(
         &self,
         li: usize,
         x: &[f32],
@@ -206,6 +216,13 @@ impl BnnModel {
     /// call — a hit returns the exact floats `precompute` would produce
     /// (bit-verified key compare) and books the skipped work into
     /// `ops.muls_avoided`/`ops.adds_avoided`.
+    ///
+    /// Execution goes through the α-blocked kernel core: this method is
+    /// literally "compile a full-row [`DataflowPlan`], run
+    /// [`execute_plan`] against a fresh scratch arena, split the flat
+    /// logits" — the convenient single-input oracle shape.  The batched
+    /// hot path (`nn::batch`, `coordinator::engine`) runs the same
+    /// executor with memoized plans and pooled arenas instead.
     pub fn evaluate_with_banks_cached(
         &self,
         x: &[f32],
@@ -214,71 +231,11 @@ impl BnnModel {
         cache: Option<CacheView<'_>>,
         ops: &mut OpCounter,
     ) -> Vec<Vec<f32>> {
-        assert_eq!(x.len(), self.input_dim());
-        let nl = self.num_layers();
-        let draws = method.layer_draws(nl);
-        assert_eq!(banks.len(), nl, "banks must cover every layer");
-        for (li, bank) in banks.iter().enumerate() {
-            assert_eq!(bank.len(), draws[li], "bank {li} has the wrong voter count");
-        }
-        match method {
-            Method::Standard { t } => {
-                let mut acts: Vec<Vec<f32>> = vec![x.to_vec(); *t];
-                for li in 0..nl {
-                    let l = &self.layers[li];
-                    let relu = li != nl - 1;
-                    for (act, (h, hb)) in acts.iter_mut().zip(&banks[li]) {
-                        let mut y = vec![0.0f32; l.m];
-                        standard_voter(l, act, h, hb, relu, &mut y, ops);
-                        *act = y;
-                    }
-                }
-                acts
-            }
-            Method::Hybrid { t } => {
-                let l0 = &self.layers[0];
-                let d = self.decompose(0, x, cache, ops);
-                let mut acts: Vec<Vec<f32>> = Vec::with_capacity(*t);
-                let relu0 = nl > 1;
-                for (h, hb) in &banks[0] {
-                    let mut y = vec![0.0f32; l0.m];
-                    dm_voter(l0, &d.beta, &d.eta, h, hb, 0..l0.m, relu0, &mut y, ops);
-                    acts.push(y);
-                }
-                for li in 1..nl {
-                    let l = &self.layers[li];
-                    let relu = li != nl - 1;
-                    for (act, (h, hb)) in acts.iter_mut().zip(&banks[li]) {
-                        let mut y = vec![0.0f32; l.m];
-                        standard_voter(l, act, h, hb, relu, &mut y, ops);
-                        *act = y;
-                    }
-                }
-                acts
-            }
-            Method::DmBnn { schedule } => {
-                let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
-                for li in 0..nl {
-                    let l = &self.layers[li];
-                    let relu = li != nl - 1;
-                    let hs = &banks[li];
-                    let mut next = Vec::with_capacity(acts.len() * schedule[li]);
-                    for a in &acts {
-                        // Deeper keys are activations: identical inputs
-                        // sharing identical banks reach identical
-                        // activations, so duplicates hit at every layer.
-                        let d = self.decompose(li, a, cache, ops);
-                        for (h, hb) in hs {
-                            let mut y = vec![0.0f32; l.m];
-                            dm_voter(l, &d.beta, &d.eta, h, hb, 0..l.m, relu, &mut y, ops);
-                            next.push(y);
-                        }
-                    }
-                    acts = next;
-                }
-                acts
-            }
-        }
+        let plan = DataflowPlan::new(self, method);
+        let mut scratch = EvalScratch::for_plan(&plan);
+        let mut out = vec![0.0f32; plan.logit_floats()];
+        execute_plan(self, &plan, x, banks, cache, &mut scratch, &mut out, ops);
+        plan.split_logits(&out)
     }
 
     /// Evaluate one input with the given method; returns (voter logits,

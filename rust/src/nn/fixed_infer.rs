@@ -8,15 +8,26 @@
 //! point directly).
 //!
 //! Activations use the wider-range Q4.3 format while weights/features use
-//! Q2.5 — a standard per-tensor format split; `requantize` moves between
-//! them exactly as the datapath's barrel shifter would.
+//! Q2.5 — a standard per-tensor format split; `nn::kernels::requantize`
+//! moves between them exactly as the datapath's barrel shifter would.
+//!
+//! The layer loops themselves live in `nn::kernels` (`q_precompute`,
+//! `q_standard_layer`, `q_dm_layer_banked`): the DM layers run the same
+//! fused, α-row-blocked banked sweep as the f32 path — each β block
+//! feeds every voter while resident — so the software schedule and the
+//! simulated accelerator's α parameter (`hwsim`, Fig 5) describe one
+//! thing.  Row blocking is bit-exact here for the same reason as in
+//! f32 — per-row accumulation order never changes — pinned by a test
+//! below.
 
 use crate::dataset::LayerPosterior;
 use crate::fixed::q::{Fx, QFormat};
 use crate::grng::Grng;
 
 use super::bnn::Method;
+use super::kernels::{q_dm_layer_banked, q_precompute, q_standard_layer};
 use super::linear::argmax;
+use super::plan::alpha_block;
 
 /// Quantized layer: raw i8 tensors plus their formats.
 #[derive(Debug, Clone)]
@@ -50,16 +61,14 @@ pub struct QBnnModel {
     pub layers: Vec<QLayer>,
     pub wfmt: QFormat,
     pub afmt: QFormat,
-}
-
-/// Requantize a raw value from one format to another (arith shift).
-fn requantize(raw: i32, from: QFormat, to: QFormat) -> i8 {
-    let shifted = if from.frac_bits >= to.frac_bits {
-        raw >> (from.frac_bits - to.frac_bits)
-    } else {
-        raw << (to.frac_bits - from.frac_bits)
-    };
-    shifted.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+    /// Fractional α of the memory-friendly schedule, applied to the DM
+    /// (memorized-β) layers: their banked sweeps stream β in
+    /// `alpha_block(m_l, alpha)`-row blocks, every voter consuming the
+    /// resident block before the next load — the bounded-buffer hardware
+    /// sweep.  1.0 = full rows.  Any value produces bit-identical
+    /// results (blocking is by output row).  The standard fixed path is
+    /// voter-major with no resident bank, so α does not apply there.
+    pub alpha: f64,
 }
 
 impl QBnnModel {
@@ -71,7 +80,19 @@ impl QBnnModel {
             layers: layers.iter().map(|l| QLayer::quantize(l, wfmt)).collect(),
             wfmt,
             afmt,
+            alpha: 1.0,
         }
+    }
+
+    /// The same model with the paper's α-blocked sweep schedule.
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        self.alpha = alpha;
+        self
+    }
+
+    fn block(&self, li: usize) -> usize {
+        alpha_block(self.layers[li].m, self.alpha)
     }
 
     pub fn input_dim(&self) -> usize {
@@ -85,91 +106,6 @@ impl QBnnModel {
     /// Quantize an f32 input vector to the activation format.
     pub fn quantize_input(&self, x: &[f32]) -> Vec<i8> {
         x.iter().map(|&v| Fx::from_f32(v, self.afmt).raw).collect()
-    }
-
-    /// One quantized voter layer: standard dataflow.
-    ///
-    /// `h`/`hb` are pre-quantized uncertainty samples in the weight format.
-    fn standard_layer(&self, li: usize, x: &[i8], h: &[i8], hb: &[i8], relu: bool) -> Vec<i8> {
-        let l = &self.layers[li];
-        let wf = self.wfmt.frac_bits;
-        let af = self.afmt.frac_bits;
-        let mut out = vec![0i8; l.m];
-        for i in 0..l.m {
-            let mut acc: i64 = 0; // fixed-point: 2·wf + af frac bits... see below
-            for j in 0..l.n {
-                // w = h∘σ + μ, accumulated wide: raw products carry 2·wf frac
-                // bits; re-align μ to 2·wf before the add.
-                let w2 = h[i * l.n + j] as i32 * l.sigma[i * l.n + j] as i32
-                    + ((l.mu[i * l.n + j] as i32) << wf);
-                // activation product: w2 (2·wf frac) × x (af frac)
-                acc += w2 as i64 * x[j] as i64;
-            }
-            // bias: re-align to 2·wf + af frac bits
-            let b2 = hb[i] as i32 * l.sigma_b[i] as i32 + ((l.mu_b[i] as i32) << wf);
-            acc += (b2 as i64) << af;
-            // writeback: from 2·wf+af frac bits to af frac bits
-            let shifted = (acc >> (2 * wf)) as i32;
-            let mut v = shifted.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
-            if relu {
-                v = v.max(0);
-            }
-            out[i] = v;
-        }
-        out
-    }
-
-    /// DM dataflow in fixed point: precompute β (weight fmt × act fmt →
-    /// stored at weight fmt) and η (wide dot, stored at act fmt), then
-    /// per-voter line-wise inner product.
-    fn dm_precompute(&self, li: usize, x: &[i8]) -> (Vec<i8>, Vec<i8>) {
-        let l = &self.layers[li];
-        let wf = self.wfmt.frac_bits;
-        let af = self.afmt.frac_bits;
-        let mut beta = vec![0i8; l.m * l.n];
-        let mut eta = vec![0i8; l.m];
-        for i in 0..l.m {
-            let mut acc: i32 = 0;
-            for j in 0..l.n {
-                let p = l.sigma[i * l.n + j] as i32 * x[j] as i32; // wf+af frac
-                beta[i * l.n + j] = requantize(
-                    p,
-                    QFormat { int_bits: 0, frac_bits: wf + af },
-                    self.wfmt,
-                );
-                acc += l.mu[i * l.n + j] as i32 * x[j] as i32;
-            }
-            eta[i] = requantize(
-                acc,
-                QFormat { int_bits: 0, frac_bits: wf + af },
-                self.afmt,
-            );
-        }
-        (beta, eta)
-    }
-
-    fn dm_layer(&self, li: usize, beta: &[i8], eta: &[i8], h: &[i8], hb: &[i8], relu: bool) -> Vec<i8> {
-        let l = &self.layers[li];
-        let wf = self.wfmt.frac_bits;
-        let af = self.afmt.frac_bits;
-        let mut out = vec![0i8; l.m];
-        for i in 0..l.m {
-            let mut acc: i64 = 0; // 2·wf frac bits
-            for j in 0..l.n {
-                acc += h[i * l.n + j] as i64 * beta[i * l.n + j] as i64;
-            }
-            // η at af frac; align everything to af for the final sum
-            let z = (acc >> (2 * wf - af)) as i32;
-            let b2 = hb[i] as i32 * l.sigma_b[i] as i32 + ((l.mu_b[i] as i32) << wf);
-            let bias_af = b2 >> (2 * wf - af);
-            let v32 = z + eta[i] as i32 + bias_af;
-            let mut v = v32.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
-            if relu {
-                v = v.max(0);
-            }
-            out[i] = v;
-        }
-        out
     }
 
     /// Full quantized evaluation; logits are dequantized for voting.
@@ -194,24 +130,38 @@ impl QBnnModel {
                 for _ in 0..*t {
                     let mut a = xq.clone();
                     for li in 0..nl {
+                        let l = &self.layers[li];
                         let (h, hb) = sample(li, g);
-                        a = self.standard_layer(li, &a, &h, &hb, li != nl - 1);
+                        let mut y = vec![0i8; l.m];
+                        let relu = li != nl - 1;
+                        q_standard_layer(l, self.afmt, &a, &h, &hb, relu, &mut y);
+                        a = y;
                     }
                     outs.push(deq(&a));
                 }
                 outs
             }
             Method::Hybrid { t } => {
-                let (beta, eta) = self.dm_precompute(0, &xq);
-                let mut acts = Vec::with_capacity(*t);
-                for _ in 0..*t {
-                    let (h, hb) = sample(0, g);
-                    acts.push(self.dm_layer(0, &beta, &eta, &h, &hb, nl > 1));
-                }
+                let l0 = &self.layers[0];
+                let mut beta = vec![0i8; l0.m * l0.n];
+                let mut eta = vec![0i8; l0.m];
+                q_precompute(l0, self.afmt, &xq, &mut beta, &mut eta);
+                // draw order matches the per-voter loop it replaces: t
+                // layer-0 pairs, then the tail's (layer, voter) pairs
+                let bank: Vec<_> = (0..*t).map(|_| sample(0, g)).collect();
+                let mut ys = vec![0i8; *t * l0.m];
+                let blk = self.block(0);
+                q_dm_layer_banked(l0, self.afmt, &beta, &eta, &bank, blk, nl > 1, &mut ys);
+                let mut acts: Vec<Vec<i8>> =
+                    ys.chunks_exact(l0.m).map(|c| c.to_vec()).collect();
                 for li in 1..nl {
+                    let l = &self.layers[li];
+                    let relu = li != nl - 1;
                     for a in acts.iter_mut() {
                         let (h, hb) = sample(li, g);
-                        *a = self.standard_layer(li, a, &h, &hb, li != nl - 1);
+                        let mut y = vec![0i8; l.m];
+                        q_standard_layer(l, self.afmt, a, &h, &hb, relu, &mut y);
+                        *a = y;
                     }
                 }
                 acts.iter().map(|a| deq(a)).collect()
@@ -220,14 +170,19 @@ impl QBnnModel {
                 assert_eq!(schedule.len(), nl);
                 let mut acts = vec![xq];
                 for li in 0..nl {
+                    let l = &self.layers[li];
                     let tl = schedule[li];
+                    let relu = li != nl - 1;
                     let hs: Vec<_> = (0..tl).map(|_| sample(li, g)).collect();
+                    let blk = self.block(li);
                     let mut next = Vec::with_capacity(acts.len() * tl);
                     for a in &acts {
-                        let (beta, eta) = self.dm_precompute(li, a);
-                        for (h, hb) in &hs {
-                            next.push(self.dm_layer(li, &beta, &eta, h, hb, li != nl - 1));
-                        }
+                        let mut beta = vec![0i8; l.m * l.n];
+                        let mut eta = vec![0i8; l.m];
+                        q_precompute(l, self.afmt, a, &mut beta, &mut eta);
+                        let mut ys = vec![0i8; tl * l.m];
+                        q_dm_layer_banked(l, self.afmt, &beta, &eta, &hs, blk, relu, &mut ys);
+                        next.extend(ys.chunks_exact(l.m).map(|c| c.to_vec()));
                     }
                     acts = next;
                 }
@@ -269,6 +224,7 @@ mod tests {
     use crate::grng::uniform::{UniformSource, XorShift128Plus};
     use crate::grng::Ziggurat;
     use crate::nn::bnn::BnnModel;
+    use crate::nn::kernels::requantize;
 
     struct ZeroG;
     impl Grng for ZeroG {
@@ -317,6 +273,28 @@ mod tests {
         let yd = q.evaluate(&x, &Method::DmBnn { schedule: vec![1, 1] }, &mut ZeroG);
         for (a, b) in ys[0].iter().zip(&yd[0]) {
             assert!((a - b).abs() < 0.6, "std {a} vs dm {b}");
+        }
+    }
+
+    #[test]
+    fn alpha_blocked_quantized_is_bit_identical() {
+        // Same generator stream (the per-voter draw order is untouched by
+        // α), so every block size must reproduce the α = 1 logits exactly.
+        let post = small_posterior(4);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32) / 9.0 - 0.5).collect();
+        for method in [
+            Method::Standard { t: 3 },
+            Method::Hybrid { t: 3 },
+            Method::DmBnn { schedule: vec![2, 2] },
+        ] {
+            let full = QBnnModel::from_posterior(&post)
+                .evaluate(&x, &method, &mut Ziggurat::new(XorShift128Plus::new(9)));
+            for alpha in [0.1, 0.3, 0.5] {
+                let got = QBnnModel::from_posterior(&post)
+                    .with_alpha(alpha)
+                    .evaluate(&x, &method, &mut Ziggurat::new(XorShift128Plus::new(9)));
+                assert_eq!(got, full, "{method:?} alpha={alpha}");
+            }
         }
     }
 

@@ -1,0 +1,589 @@
+//! Fused, α-row-blocked multi-voter layer kernels — the execution core
+//! behind every inference path (reference f32, batched engine, and the
+//! 8-bit fixed-point functional model).
+//!
+//! # The schedule (paper Fig 5, generalized)
+//!
+//! The seed implementation ran voter-major: each voter swept the full
+//! β/H matrices top to bottom, so a layer touched β `T` times.  The
+//! paper's memory-friendly computing framework streams instead in α-row
+//! blocks: load one block of β (and each voter's matching H rows), feed
+//! **all** of the layer's voters from the resident block, then move on.
+//! `dm_layer_blocked` / `standard_layer_blocked` implement exactly that,
+//! for the multi-layer fan-out tree (every parent activation of a DM-BNN
+//! layer) as well as the Standard/Hybrid paths.
+//!
+//! # Bit-parity argument
+//!
+//! Blocking is by *output row*: each `y[i]` is still one dot product
+//! accumulated over `j = 0..N` in unchanged order, on unchanged inputs.
+//! Re-ordering (block, voter) iteration permutes only *which output
+//! element is computed when*, never how any element is computed — so the
+//! results are bit-identical for every block size, divisor of M or not,
+//! and for the fused vs per-voter order.  `tests/blocked_parity.rs` pins
+//! this across methods × block sizes × worker counts × cache states.
+//!
+//! # Allocation discipline
+//!
+//! [`execute_plan`] runs one input end-to-end against a compiled
+//! [`DataflowPlan`] using only the caller's [`EvalScratch`] arena: the
+//! activation fan-out tree ping-pongs between two resident buffers and
+//! (β, η) land in resident scratch — zero heap allocation per voter, per
+//! layer, or per input.  The only allocating path is a decomposition-
+//! cache **miss** (the entry must own its floats to outlive the call);
+//! hits are `Arc` clones.
+
+use crate::dataset::LayerPosterior;
+use crate::fixed::q::QFormat;
+use crate::opcount::counter::OpCounter;
+
+use super::bnn::{BnnModel, Method, UncertaintyBanks};
+use super::dmcache::CacheView;
+use super::fixed_infer::QLayer;
+use super::linear::{dm_voter, precompute, standard_voter_rows};
+use super::plan::{DataflowPlan, EvalScratch};
+
+/// One full layer of DM voters, α-blocked: for each row block, the β/H
+/// block is swept once while resident, feeding every voter in `bank`
+/// before the next block is touched.  `ys` is `bank.len() × M`
+/// voter-major; results are bit-identical to per-voter full sweeps.
+#[allow(clippy::too_many_arguments)]
+pub fn dm_layer_blocked(
+    layer: &LayerPosterior,
+    beta: &[f32],
+    eta: &[f32],
+    bank: &[(Vec<f32>, Vec<f32>)],
+    block_rows: usize,
+    relu: bool,
+    ys: &mut [f32],
+    ops: &mut OpCounter,
+) {
+    let (m, n) = (layer.m, layer.n);
+    assert!(block_rows >= 1, "block_rows must be positive");
+    assert_eq!(beta.len(), m * n);
+    assert_eq!(eta.len(), m);
+    assert_eq!(ys.len(), bank.len() * m);
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + block_rows).min(m);
+        let bblock = &beta[r0 * n..r1 * n];
+        let eblock = &eta[r0..r1];
+        for (k, (h, hb)) in bank.iter().enumerate() {
+            dm_voter(
+                layer,
+                bblock,
+                eblock,
+                &h[r0 * n..r1 * n],
+                &hb[r0..r1],
+                r0,
+                relu,
+                &mut ys[k * m + r0..k * m + r1],
+                ops,
+            );
+        }
+        r0 = r1;
+    }
+}
+
+/// One full layer of standard voters, α-blocked.  Voter `k` transforms
+/// its own activation `xs[k·N..]` with its own `(H, Hb)`; the resident
+/// block here is the layer's σ/μ rows, shared by every voter.
+pub fn standard_layer_blocked(
+    layer: &LayerPosterior,
+    xs: &[f32],
+    bank: &[(Vec<f32>, Vec<f32>)],
+    block_rows: usize,
+    relu: bool,
+    ys: &mut [f32],
+    ops: &mut OpCounter,
+) {
+    let (m, n) = (layer.m, layer.n);
+    assert!(block_rows >= 1, "block_rows must be positive");
+    assert_eq!(xs.len(), bank.len() * n);
+    assert_eq!(ys.len(), bank.len() * m);
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + block_rows).min(m);
+        for (k, (h, hb)) in bank.iter().enumerate() {
+            standard_voter_rows(
+                layer,
+                &xs[k * n..(k + 1) * n],
+                &h[r0 * n..r1 * n],
+                &hb[r0..r1],
+                r0,
+                relu,
+                &mut ys[k * m + r0..k * m + r1],
+                ops,
+            );
+        }
+        r0 = r1;
+    }
+}
+
+/// Sweep layers `first..nl` with the fused standard kernel, ping-ponging
+/// the activation buffers (shared by the Standard path and the Hybrid
+/// tail so the two cannot drift); returns the final activation width.
+#[allow(clippy::too_many_arguments)]
+fn standard_tail<'s>(
+    model: &BnnModel,
+    plan: &DataflowPlan,
+    banks: &UncertaintyBanks,
+    first: usize,
+    t: usize,
+    mut dim: usize,
+    cur: &mut &'s mut [f32],
+    nxt: &mut &'s mut [f32],
+    ops: &mut OpCounter,
+) -> usize {
+    let nl = plan.num_layers();
+    for li in first..nl {
+        let l = &model.layers[li];
+        let relu = li != nl - 1;
+        standard_layer_blocked(
+            l,
+            &cur[..t * dim],
+            &banks[li],
+            plan.block_rows[li],
+            relu,
+            &mut nxt[..t * l.m],
+            ops,
+        );
+        std::mem::swap(cur, nxt);
+        dim = l.m;
+    }
+    dim
+}
+
+/// Execute one input against a compiled plan, writing the voter logits
+/// into `out` (`plan.voters × plan.classes`, voter-major) and the
+/// instrumented op counts into `ops`.  All intermediate state lives in
+/// `scratch`; see the module docs for the allocation and parity
+/// contracts.  Logits and logical op counts are bit-identical to the
+/// unblocked per-voter reference for every plan of the same method.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_plan(
+    model: &BnnModel,
+    plan: &DataflowPlan,
+    x: &[f32],
+    banks: &UncertaintyBanks,
+    cache: Option<CacheView<'_>>,
+    scratch: &mut EvalScratch,
+    out: &mut [f32],
+    ops: &mut OpCounter,
+) {
+    assert_eq!(
+        plan.model_fingerprint(),
+        model.fingerprint(),
+        "plan was compiled for a different model"
+    );
+    assert_eq!(x.len(), model.input_dim());
+    assert_eq!(out.len(), plan.logit_floats());
+    let nl = plan.num_layers();
+    assert_eq!(banks.len(), nl, "banks must cover every layer");
+    for (li, bank) in banks.iter().enumerate() {
+        assert_eq!(bank.len(), plan.draws[li], "bank {li} has the wrong voter count");
+    }
+    scratch.ensure(plan);
+    let EvalScratch { acts_a, acts_b, beta, eta } = scratch;
+    let (mut cur, mut nxt) = (acts_a.as_mut_slice(), acts_b.as_mut_slice());
+
+    match &plan.method {
+        Method::Standard { t } => {
+            let t = *t;
+            let n0 = plan.dims[0].1;
+            for k in 0..t {
+                cur[k * n0..(k + 1) * n0].copy_from_slice(x);
+            }
+            let dim = standard_tail(model, plan, banks, 0, t, n0, &mut cur, &mut nxt, ops);
+            out.copy_from_slice(&cur[..t * dim]);
+        }
+        Method::Hybrid { t } => {
+            let t = *t;
+            let l0 = &model.layers[0];
+            let relu0 = nl > 1;
+            let d_arc;
+            let (db, de): (&[f32], &[f32]) = if let Some(view) = cache {
+                d_arc = model.decompose(0, x, Some(view), ops);
+                (&d_arc.beta, &d_arc.eta)
+            } else {
+                precompute(l0, x, &mut beta[..l0.m * l0.n], &mut eta[..l0.m], ops);
+                (&beta[..l0.m * l0.n], &eta[..l0.m])
+            };
+            dm_layer_blocked(
+                l0,
+                db,
+                de,
+                &banks[0],
+                plan.block_rows[0],
+                relu0,
+                &mut nxt[..t * l0.m],
+                ops,
+            );
+            std::mem::swap(&mut cur, &mut nxt);
+            let dim = standard_tail(model, plan, banks, 1, t, l0.m, &mut cur, &mut nxt, ops);
+            out.copy_from_slice(&cur[..t * dim]);
+        }
+        Method::DmBnn { .. } => {
+            let n0 = plan.dims[0].1;
+            cur[..n0].copy_from_slice(x);
+            let mut count = 1usize;
+            let mut dim = n0;
+            for li in 0..nl {
+                let l = &model.layers[li];
+                let tl = plan.draws[li];
+                let relu = li != nl - 1;
+                for p in 0..count {
+                    // Deeper cache keys are activations: identical inputs
+                    // sharing identical banks reach identical activations,
+                    // so duplicates hit at every layer.
+                    let a = &cur[p * dim..(p + 1) * dim];
+                    let d_arc;
+                    let (db, de): (&[f32], &[f32]) = if let Some(view) = cache {
+                        d_arc = model.decompose(li, a, Some(view), ops);
+                        (&d_arc.beta, &d_arc.eta)
+                    } else {
+                        precompute(l, a, &mut beta[..l.m * l.n], &mut eta[..l.m], ops);
+                        (&beta[..l.m * l.n], &eta[..l.m])
+                    };
+                    dm_layer_blocked(
+                        l,
+                        db,
+                        de,
+                        &banks[li],
+                        plan.block_rows[li],
+                        relu,
+                        &mut nxt[p * tl * l.m..(p + 1) * tl * l.m],
+                        ops,
+                    );
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+                count *= tl;
+                dim = l.m;
+            }
+            out.copy_from_slice(&cur[..count * dim]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 8-bit fixed-point kernels (the hardware datapath's functional model).
+// The DM kernel is banked and α-blocked exactly like `dm_layer_blocked`
+// (row-wise accumulation order untouched ⇒ bit-exact for every block);
+// the standard kernel is a plain per-voter sweep — that path is
+// voter-major with no resident bank to fuse.
+// ---------------------------------------------------------------------------
+
+/// Requantize a raw value from one format to another (arith shift +
+/// saturation), as the datapath's barrel shifter would.
+pub(crate) fn requantize(raw: i32, from: QFormat, to: QFormat) -> i8 {
+    let shifted = if from.frac_bits >= to.frac_bits {
+        raw >> (from.frac_bits - to.frac_bits)
+    } else {
+        raw << (to.frac_bits - from.frac_bits)
+    };
+    shifted.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+}
+
+/// Fixed-point DM precompute: β = σ∘x (weight fmt), η = μ·x (activation
+/// fmt), both via wide i32 accumulation.
+pub fn q_precompute(layer: &QLayer, afmt: QFormat, x: &[i8], beta: &mut [i8], eta: &mut [i8]) {
+    let (m, n) = (layer.m, layer.n);
+    let wf = layer.wfmt.frac_bits;
+    let af = afmt.frac_bits;
+    assert_eq!(x.len(), n);
+    assert_eq!(beta.len(), m * n);
+    assert_eq!(eta.len(), m);
+    for i in 0..m {
+        let mut acc: i32 = 0;
+        for j in 0..n {
+            let p = layer.sigma[i * n + j] as i32 * x[j] as i32; // wf+af frac
+            beta[i * n + j] =
+                requantize(p, QFormat { int_bits: 0, frac_bits: wf + af }, layer.wfmt);
+            acc += layer.mu[i * n + j] as i32 * x[j] as i32;
+        }
+        eta[i] = requantize(acc, QFormat { int_bits: 0, frac_bits: wf + af }, afmt);
+    }
+}
+
+/// Fixed-point standard voter layer: materialize `w = h∘σ + μ` row by
+/// row with wide accumulation and a single saturating writeback per
+/// neuron.  Deliberately *not* α-blocked: the fixed standard path is
+/// voter-major (each voter draws its own H lazily), so there is no
+/// resident bank to fuse a block sweep over — only the DM kernels below
+/// carry the Fig 5 schedule.
+pub fn q_standard_layer(
+    layer: &QLayer,
+    afmt: QFormat,
+    x: &[i8],
+    h: &[i8],
+    hb: &[i8],
+    relu: bool,
+    y: &mut [i8],
+) {
+    let (m, n) = (layer.m, layer.n);
+    let wf = layer.wfmt.frac_bits;
+    let af = afmt.frac_bits;
+    assert_eq!(x.len(), n);
+    assert_eq!(h.len(), m * n);
+    assert_eq!(hb.len(), m);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        let mut acc: i64 = 0; // 2·wf + af frac bits
+        for j in 0..n {
+            // w = h∘σ + μ, raw products carry 2·wf frac bits; re-align
+            // μ to 2·wf before the add.
+            let w2 = h[i * n + j] as i32 * layer.sigma[i * n + j] as i32
+                + ((layer.mu[i * n + j] as i32) << wf);
+            acc += w2 as i64 * x[j] as i64;
+        }
+        let b2 = hb[i] as i32 * layer.sigma_b[i] as i32 + ((layer.mu_b[i] as i32) << wf);
+        acc += (b2 as i64) << af;
+        let shifted = (acc >> (2 * wf)) as i32;
+        let mut v = shifted.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+        if relu {
+            v = v.max(0);
+        }
+        y[i] = v;
+    }
+}
+
+/// Fixed-point DM voter layer, fused and α-blocked exactly like
+/// [`dm_layer_blocked`]: each β row block feeds **every** voter in
+/// `bank` while resident before the next block is loaded (line-wise
+/// ⟨H, β⟩ plus η and bias, aligned to the activation format on
+/// writeback).  `ys` is `bank.len() × M` voter-major.  Per-row
+/// accumulation order is unchanged, so results are bit-identical for
+/// every block size.
+#[allow(clippy::too_many_arguments)]
+pub fn q_dm_layer_banked(
+    layer: &QLayer,
+    afmt: QFormat,
+    beta: &[i8],
+    eta: &[i8],
+    bank: &[(Vec<i8>, Vec<i8>)],
+    block_rows: usize,
+    relu: bool,
+    ys: &mut [i8],
+) {
+    let (m, n) = (layer.m, layer.n);
+    let wf = layer.wfmt.frac_bits;
+    let af = afmt.frac_bits;
+    assert!(block_rows >= 1);
+    assert_eq!(beta.len(), m * n);
+    assert_eq!(eta.len(), m);
+    assert_eq!(ys.len(), bank.len() * m);
+    for (h, hb) in bank {
+        assert_eq!(h.len(), m * n);
+        assert_eq!(hb.len(), m);
+    }
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + block_rows).min(m);
+        for (k, (h, hb)) in bank.iter().enumerate() {
+            for i in r0..r1 {
+                let mut acc: i64 = 0; // 2·wf frac bits
+                for j in 0..n {
+                    acc += h[i * n + j] as i64 * beta[i * n + j] as i64;
+                }
+                // η is at af frac; align everything to af for the sum
+                let z = (acc >> (2 * wf - af)) as i32;
+                let b2 =
+                    hb[i] as i32 * layer.sigma_b[i] as i32 + ((layer.mu_b[i] as i32) << wf);
+                let bias_af = b2 >> (2 * wf - af);
+                let v32 = z + eta[i] as i32 + bias_af;
+                let mut v = v32.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+                if relu {
+                    v = v.max(0);
+                }
+                ys[k * m + i] = v;
+            }
+        }
+        r0 = r1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::uniform::{UniformSource, XorShift128Plus};
+
+    fn layer(m: usize, n: usize, seed: u64) -> LayerPosterior {
+        let mut r = XorShift128Plus::new(seed);
+        LayerPosterior {
+            m,
+            n,
+            mu: (0..m * n).map(|_| r.next_f32() - 0.5).collect(),
+            sigma: (0..m * n).map(|_| 0.01 + 0.1 * r.next_f32()).collect(),
+            mu_b: (0..m).map(|_| r.next_f32() - 0.5).collect(),
+            sigma_b: (0..m).map(|_| 0.01 + 0.1 * r.next_f32()).collect(),
+        }
+    }
+
+    fn bank(t: usize, m: usize, n: usize, seed: u64) -> Vec<(Vec<f32>, Vec<f32>)> {
+        let mut r = XorShift128Plus::new(seed);
+        (0..t)
+            .map(|_| {
+                (
+                    (0..m * n).map(|_| r.next_f32() * 2.0 - 1.0).collect(),
+                    (0..m).map(|_| r.next_f32() * 2.0 - 1.0).collect(),
+                )
+            })
+            .collect()
+    }
+
+    /// The fused, blocked sweep is bit-identical to per-voter full-row
+    /// calls for every block size — including non-divisors of M.
+    #[test]
+    fn dm_layer_blocked_matches_per_voter_for_all_blocks() {
+        let (m, n, t) = (10, 8, 4);
+        let l = layer(m, n, 1);
+        let mut r = XorShift128Plus::new(2);
+        let x: Vec<f32> = (0..n).map(|_| r.next_f32()).collect();
+        let bank = bank(t, m, n, 3);
+        let mut ops = OpCounter::default();
+        let mut beta = vec![0.0; m * n];
+        let mut eta = vec![0.0; m];
+        precompute(&l, &x, &mut beta, &mut eta, &mut ops);
+
+        let mut want = vec![0.0; t * m];
+        let mut want_ops = OpCounter::default();
+        for (k, (h, hb)) in bank.iter().enumerate() {
+            let y = &mut want[k * m..(k + 1) * m];
+            dm_voter(&l, &beta, &eta, h, hb, 0, true, y, &mut want_ops);
+        }
+        for block in [1usize, 2, 3, 5, 7, 10] {
+            let mut got = vec![0.0; t * m];
+            let mut got_ops = OpCounter::default();
+            dm_layer_blocked(&l, &beta, &eta, &bank, block, true, &mut got, &mut got_ops);
+            assert_eq!(got, want, "block={block}");
+            assert_eq!(got_ops, want_ops, "block={block} ops");
+        }
+    }
+
+    #[test]
+    fn standard_layer_blocked_matches_per_voter_for_all_blocks() {
+        let (m, n, t) = (9, 6, 3);
+        let l = layer(m, n, 4);
+        let mut r = XorShift128Plus::new(5);
+        let xs: Vec<f32> = (0..t * n).map(|_| r.next_f32()).collect();
+        let bank = bank(t, m, n, 6);
+
+        let mut want = vec![0.0; t * m];
+        let mut want_ops = OpCounter::default();
+        for (k, (h, hb)) in bank.iter().enumerate() {
+            standard_voter_rows(
+                &l,
+                &xs[k * n..(k + 1) * n],
+                h,
+                hb,
+                0,
+                true,
+                &mut want[k * m..(k + 1) * m],
+                &mut want_ops,
+            );
+        }
+        for block in [1usize, 2, 4, 9] {
+            let mut got = vec![0.0; t * m];
+            let mut got_ops = OpCounter::default();
+            standard_layer_blocked(&l, &xs, &bank, block, true, &mut got, &mut got_ops);
+            assert_eq!(got, want, "block={block}");
+            assert_eq!(got_ops, want_ops, "block={block} ops");
+        }
+    }
+
+    /// `execute_plan` against scratch reproduces the banked reference
+    /// evaluation bit-for-bit, for every method and block size, and a
+    /// reused arena changes nothing.
+    #[test]
+    fn execute_plan_matches_reference_and_reuses_scratch() {
+        let model = BnnModel::synthetic(&[14, 11, 7, 4], 9);
+        let mut r = XorShift128Plus::new(10);
+        let x: Vec<f32> = (0..14).map(|_| r.next_f32()).collect();
+        let mut scratch = EvalScratch::new();
+        for method in [
+            Method::Standard { t: 3 },
+            Method::Hybrid { t: 3 },
+            Method::DmBnn { schedule: vec![2, 3, 1] },
+        ] {
+            let mut g = crate::grng::default_grng(77);
+            let banks = model.sample_banks(&method, &mut g);
+            let mut want_ops = OpCounter::default();
+            let want = model.evaluate_with_banks(&x, &method, &banks, &mut want_ops);
+            for rows in [1usize, 2, 3, 5, 100] {
+                let plan = DataflowPlan::with_block_rows(&model, &method, rows);
+                let mut out = vec![0.0; plan.logit_floats()];
+                let mut ops = OpCounter::default();
+                execute_plan(&model, &plan, &x, &banks, None, &mut scratch, &mut out, &mut ops);
+                assert_eq!(plan.split_logits(&out), want, "{method:?} rows={rows}");
+                assert_eq!(ops, want_ops, "{method:?} rows={rows} ops");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different model")]
+    fn plan_is_pinned_to_its_model() {
+        let a = BnnModel::synthetic(&[6, 4], 1);
+        let b = BnnModel::synthetic(&[6, 4], 2);
+        let method = Method::Standard { t: 1 };
+        let plan = DataflowPlan::new(&a, &method);
+        let mut g = crate::grng::default_grng(0);
+        let banks = b.sample_banks(&method, &mut g);
+        let mut out = vec![0.0; plan.logit_floats()];
+        execute_plan(
+            &b,
+            &plan,
+            &[0.0; 6],
+            &banks,
+            None,
+            &mut EvalScratch::new(),
+            &mut out,
+            &mut OpCounter::default(),
+        );
+    }
+
+    #[test]
+    fn q_dm_banked_blocked_matches_full_rows_for_every_voter() {
+        use crate::nn::fixed_infer::QBnnModel;
+        let mut r = XorShift128Plus::new(11);
+        let (m, n, t) = (9usize, 7usize, 3usize);
+        let post = vec![LayerPosterior {
+            m,
+            n,
+            mu: (0..m * n).map(|_| (r.next_f32() - 0.5) * 0.8).collect(),
+            sigma: (0..m * n).map(|_| 0.05 + 0.05 * r.next_f32()).collect(),
+            mu_b: (0..m).map(|_| (r.next_f32() - 0.5) * 0.5).collect(),
+            sigma_b: (0..m).map(|_| 0.05 + 0.05 * r.next_f32()).collect(),
+        }];
+        let q = QBnnModel::from_posterior(&post);
+        let l = &q.layers[0];
+        let x: Vec<i8> = (0..n).map(|j| (j as i8) - 3).collect();
+        let qbank: Vec<(Vec<i8>, Vec<i8>)> = (0..t)
+            .map(|k| {
+                (
+                    (0..m * n).map(|j| ((j * 5 + k * 3) % 17) as i8 - 8).collect(),
+                    (0..m).map(|j| ((j + k) % 9) as i8 - 4).collect(),
+                )
+            })
+            .collect();
+
+        let mut beta = vec![0i8; m * n];
+        let mut eta = vec![0i8; m];
+        q_precompute(l, q.afmt, &x, &mut beta, &mut eta);
+
+        // the fused banked sweep at full rows is the reference…
+        let mut want = vec![0i8; t * m];
+        q_dm_layer_banked(l, q.afmt, &beta, &eta, &qbank, m, true, &mut want);
+        // …every block size (incl. non-divisors of M = 9) must match it
+        for block in [1usize, 2, 4, 5, 9] {
+            let mut ys = vec![0i8; t * m];
+            q_dm_layer_banked(l, q.afmt, &beta, &eta, &qbank, block, true, &mut ys);
+            assert_eq!(ys, want, "dm block={block}");
+        }
+        // and the standard q kernel still runs the plain full sweep
+        let (h, hb) = &qbank[0];
+        let mut y = vec![0i8; m];
+        q_standard_layer(l, q.afmt, &x, h, hb, true, &mut y);
+        assert_eq!(y.len(), m);
+    }
+}

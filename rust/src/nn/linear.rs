@@ -39,11 +39,18 @@ pub fn precompute(
     ops.add(m * (n - 1));
 }
 
-/// DM feed-forward for one voter (Algorithm 2 lines 4–6 plus bias):
-/// `y_i = <H_i, beta_i> + eta_i + hb_i·sigma_b_i + mu_b_i`.
+/// DM feed-forward for one voter over one α-row block (Algorithm 2
+/// lines 4–6 plus bias): `y_i = <H_i, beta_i> + eta_i + hb_i·sigma_b_i +
+/// mu_b_i`.
 ///
-/// `h` is M×N row-major, `hb` is M.  `rows` restricts the computation to a
-/// row range (the alpha-blocking slice of Fig 5); pass `0..m` for full.
+/// Every slice argument is the *block's* view — `beta`/`h` are
+/// `nrows × N` row-major, `eta`/`hb`/`y` are `nrows`, with
+/// `nrows = y.len()` — and `row_offset` is the block's first output row.
+/// Bias terms index `layer.sigma_b[row_offset + i]`, so the slice views
+/// and the layer-parameter indexing can never silently desync (the old
+/// `rows: Range` shape indexed blocks with one variable and biases with
+/// another).  Pass full-matrix slices and `row_offset = 0` for an
+/// unblocked sweep.
 #[allow(clippy::too_many_arguments)]
 pub fn dm_voter(
     layer: &LayerPosterior,
@@ -51,30 +58,31 @@ pub fn dm_voter(
     eta: &[f32],
     h: &[f32],
     hb: &[f32],
-    rows: std::ops::Range<usize>,
+    row_offset: usize,
     relu: bool,
     y: &mut [f32],
     ops: &mut OpCounter,
 ) {
     let n = layer.n;
-    let nrows = rows.len();
-    assert_eq!(beta.len(), nrows * n, "beta slice must match the row range");
+    let nrows = y.len();
+    assert!(row_offset + nrows <= layer.m, "block overruns the layer's rows");
+    assert_eq!(beta.len(), nrows * n, "beta slice must match the block");
     assert_eq!(eta.len(), nrows);
     assert_eq!(h.len(), nrows * n);
     assert_eq!(hb.len(), nrows);
-    assert_eq!(y.len(), nrows);
-    for (out_i, _i) in rows.enumerate() {
-        let hrow = &h[out_i * n..(out_i + 1) * n];
-        let brow = &beta[out_i * n..(out_i + 1) * n];
+    for i in 0..nrows {
+        let hrow = &h[i * n..(i + 1) * n];
+        let brow = &beta[i * n..(i + 1) * n];
         let mut acc = 0.0f32;
         for j in 0..n {
             acc += hrow[j] * brow[j];
         }
-        let mut v = acc + eta[out_i] + hb[out_i] * layer.sigma_b[_i] + layer.mu_b[_i];
+        let gi = row_offset + i;
+        let mut v = acc + eta[i] + hb[i] * layer.sigma_b[gi] + layer.mu_b[gi];
         if relu {
             v = v.max(0.0);
         }
-        y[out_i] = v;
+        y[i] = v;
     }
     // <H, beta>_L: nrows·N mul + nrows·(N-1) add; + eta: nrows add;
     // bias term: nrows mul + 2·nrows add — Table III rows 3–4 (+bias).
@@ -82,9 +90,55 @@ pub fn dm_voter(
     ops.add(nrows * (n - 1) + 3 * nrows);
 }
 
-/// Standard feed-forward for one voter (Algorithm 1 lines 2–5 plus bias):
-/// materialize `W = H ∘ sigma + mu` and compute `y = W·x + (hb∘sigma_b + mu_b)`.
+/// Standard feed-forward for one voter over one α-row block (Algorithm 1
+/// lines 2–5 plus bias): materialize `W = H ∘ sigma + mu` row by row and
+/// compute `y = W·x + (hb∘sigma_b + mu_b)` for the block's rows.
+///
+/// `h` is the block's `nrows × N` view of the voter's H, `hb`/`y` are
+/// `nrows`, and `row_offset` is the block's first output row (σ/μ rows
+/// and biases are indexed at `row_offset + i`, same discipline as
+/// [`dm_voter`]).
 #[allow(clippy::too_many_arguments)]
+pub fn standard_voter_rows(
+    layer: &LayerPosterior,
+    x: &[f32],
+    h: &[f32],
+    hb: &[f32],
+    row_offset: usize,
+    relu: bool,
+    y: &mut [f32],
+    ops: &mut OpCounter,
+) {
+    let n = layer.n;
+    let nrows = y.len();
+    assert!(row_offset + nrows <= layer.m, "block overruns the layer's rows");
+    assert_eq!(x.len(), n);
+    assert_eq!(h.len(), nrows * n);
+    assert_eq!(hb.len(), nrows);
+    for i in 0..nrows {
+        let gi = row_offset + i;
+        let sig = layer.sigma_row(gi);
+        let mu = layer.mu_row(gi);
+        let hrow = &h[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            let w = hrow[j] * sig[j] + mu[j]; // scale-location transform
+            acc += w * x[j];
+        }
+        let mut v = acc + hb[i] * layer.sigma_b[gi] + layer.mu_b[gi];
+        if relu {
+            v = v.max(0.0);
+        }
+        y[i] = v;
+    }
+    // Q = H∘σ: MN mul; W = Q+μ: MN add; y = W·x: MN mul + M(N-1) add;
+    // bias: M mul + 2M add — Table III upper block (+bias), scaled to the
+    // block's rows (Σ over a layer's blocks recovers the closed form).
+    ops.mul(2 * nrows * n + nrows);
+    ops.add(nrows * n + nrows * (n - 1) + 2 * nrows);
+}
+
+/// Full-matrix standard voter: [`standard_voter_rows`] over `0..M`.
 pub fn standard_voter(
     layer: &LayerPosterior,
     x: &[f32],
@@ -94,30 +148,8 @@ pub fn standard_voter(
     y: &mut [f32],
     ops: &mut OpCounter,
 ) {
-    let (m, n) = (layer.m, layer.n);
-    assert_eq!(x.len(), n);
-    assert_eq!(h.len(), m * n);
-    assert_eq!(hb.len(), m);
-    assert_eq!(y.len(), m);
-    for i in 0..m {
-        let sig = layer.sigma_row(i);
-        let mu = layer.mu_row(i);
-        let hrow = &h[i * n..(i + 1) * n];
-        let mut acc = 0.0f32;
-        for j in 0..n {
-            let w = hrow[j] * sig[j] + mu[j]; // scale-location transform
-            acc += w * x[j];
-        }
-        let mut v = acc + hb[i] * layer.sigma_b[i] + layer.mu_b[i];
-        if relu {
-            v = v.max(0.0);
-        }
-        y[i] = v;
-    }
-    // Q = H∘σ: MN mul; W = Q+μ: MN add; y = W·x: MN mul + M(N-1) add;
-    // bias: M mul + 2M add — Table III upper block (+bias).
-    ops.mul(2 * m * n + m);
-    ops.add(m * n + m * (n - 1) + 2 * m);
+    assert_eq!(y.len(), layer.m);
+    standard_voter_rows(layer, x, h, hb, 0, relu, y, ops);
 }
 
 /// Average voting (Algorithm 1/2 final line): mean over a (T, M) stack.
@@ -138,13 +170,16 @@ pub fn vote(ys: &[Vec<f32>]) -> Vec<f32> {
     out
 }
 
-/// Argmax of a logit vector.
+/// Argmax of a logit vector, total over all f32 bit patterns: NaN logits
+/// (which `partial_cmp().unwrap()` would turn into a panic inside a
+/// serving worker) order above +∞ under [`f32::total_cmp`], so a poisoned
+/// voter yields a deterministic winner instead of killing the thread.
 pub fn argmax(xs: &[f32]) -> usize {
     xs.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
-        .unwrap()
+        .expect("argmax of an empty slice")
 }
 
 #[cfg(test)]
@@ -184,7 +219,7 @@ mod tests {
         precompute(&l, &x, &mut beta, &mut eta, &mut ops);
 
         let mut y_dm = vec![0.0; m];
-        dm_voter(&l, &beta, &eta, &h, &hb, 0..m, false, &mut y_dm, &mut ops);
+        dm_voter(&l, &beta, &eta, &h, &hb, 0, false, &mut y_dm, &mut ops);
 
         let mut y_std = vec![0.0; m];
         standard_voter(&l, &x, &h, &hb, false, &mut y_std, &mut ops);
@@ -208,12 +243,11 @@ mod tests {
         precompute(&l, &x, &mut beta, &mut eta, &mut ops);
 
         let mut full = vec![0.0; m];
-        dm_voter(&l, &beta, &eta, &h, &hb, 0..m, true, &mut full, &mut ops);
+        dm_voter(&l, &beta, &eta, &h, &hb, 0, true, &mut full, &mut ops);
 
         let mb = 5;
         let mut sliced = vec![0.0; m];
         for r0 in (0..m).step_by(mb) {
-            let rows = r0..r0 + mb;
             let mut part = vec![0.0; mb];
             dm_voter(
                 &l,
@@ -221,7 +255,7 @@ mod tests {
                 &eta[r0..r0 + mb],
                 &h[r0 * n..(r0 + mb) * n],
                 &hb[r0..r0 + mb],
-                rows,
+                r0,
                 true,
                 &mut part,
                 &mut ops,
@@ -229,6 +263,41 @@ mod tests {
             sliced[r0..r0 + mb].copy_from_slice(&part);
         }
         assert_eq!(full, sliced);
+    }
+
+    #[test]
+    fn standard_voter_rows_cover_full_output() {
+        let (m, n) = (11, 9); // 11 rows: the 4-row blocks leave a short tail
+        let l = layer(m, n, 12);
+        let x = randv(n, 13);
+        let h = randv(m * n, 14);
+        let hb = randv(m, 15);
+        let mut full_ops = OpCounter::default();
+        let mut full = vec![0.0; m];
+        standard_voter(&l, &x, &h, &hb, true, &mut full, &mut full_ops);
+
+        let mb = 4;
+        let mut sliced = vec![0.0; m];
+        let mut sliced_ops = OpCounter::default();
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + mb).min(m);
+            let mut part = vec![0.0; r1 - r0];
+            standard_voter_rows(
+                &l,
+                &x,
+                &h[r0 * n..r1 * n],
+                &hb[r0..r1],
+                r0,
+                true,
+                &mut part,
+                &mut sliced_ops,
+            );
+            sliced[r0..r1].copy_from_slice(&part);
+            r0 = r1;
+        }
+        assert_eq!(full, sliced);
+        assert_eq!(full_ops, sliced_ops, "blocked op totals must match");
     }
 
     #[test]
@@ -271,5 +340,16 @@ mod tests {
     fn argmax_first_max() {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn argmax_is_deterministic_on_nan_logits() {
+        // Regression: `partial_cmp().unwrap()` panicked here.  Under
+        // total order a NaN sorts above +∞, so a poisoned voter picks a
+        // deterministic class instead of killing a serving worker.
+        assert_eq!(argmax(&[0.1, f32::NAN, 0.3]), 1);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 1, "last of equal maxima");
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax(&[f32::INFINITY, f32::NAN]), 1, "NaN above +inf");
     }
 }

@@ -4,10 +4,15 @@
 //! [`linear`] implements the two single-layer dataflows of the paper
 //! (Algorithm 1 standard, Algorithm 2 DM) over plain slices; [`bnn`]
 //! chains them into the three multi-layer methods (Standard / Hybrid-BNN /
-//! DM-BNN, Fig 4) and full test-set evaluation; [`batch`] lifts them to
-//! batched multi-threaded evaluation with per-batch uncertainty
-//! memoization (the serving hot path); [`fixed_infer`] is the 8-bit
-//! fixed-point variant behind the Table V accuracy column.
+//! DM-BNN, Fig 4) and full test-set evaluation; [`plan`] + [`kernels`]
+//! are the execution core underneath: a `DataflowPlan` compiled once per
+//! (model, method) drives fused, α-row-blocked multi-voter kernels over a
+//! reusable `EvalScratch` arena (the paper's Fig 5 memory-friendly
+//! schedule, bit-identical for every block size); [`batch`] lifts the
+//! executor to batched multi-threaded evaluation with per-batch
+//! uncertainty memoization and pooled arenas (the serving hot path);
+//! [`fixed_infer`] is the 8-bit fixed-point variant behind the Table V
+//! accuracy column, running the same blocked kernels in integer form.
 //!
 //! The single-input code is deliberately simple, allocation-honest rust:
 //! it is the ground truth the batched engine and the (feature-gated)
@@ -22,9 +27,13 @@ pub mod batch;
 pub mod bnn;
 pub mod dmcache;
 pub mod fixed_infer;
+pub mod kernels;
 pub mod linear;
+pub mod plan;
 
-pub use batch::{evaluate_batch, evaluate_batch_cached, BatchResult};
+pub use batch::{evaluate_batch, evaluate_batch_cached, evaluate_batch_planned, BatchResult};
 pub use bnn::{BnnModel, Method, UncertaintyBanks};
 pub use dmcache::{CacheConfig, CacheStats, CacheView, Decomp, DmCache};
-pub use linear::{dm_voter, precompute, standard_voter};
+pub use kernels::{dm_layer_blocked, execute_plan, standard_layer_blocked};
+pub use linear::{dm_voter, precompute, standard_voter, standard_voter_rows};
+pub use plan::{alpha_block, DataflowPlan, EvalScratch, LogitBatch, LogitStack, ScratchPool};

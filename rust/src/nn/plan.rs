@@ -1,0 +1,536 @@
+//! Execution plans, scratch arenas and flat logit storage for the
+//! α-blocked kernel core (`nn::kernels`).
+//!
+//! A [`DataflowPlan`] is compiled once per `(model, method)` pair: it
+//! freezes the per-layer dimensions, fan-out tree shape and α row-block
+//! sizes, and pre-computes how much scratch a single evaluation needs so
+//! an [`EvalScratch`] arena can be sized up-front and reused across
+//! inputs and batches — the steady-state hot path performs **zero
+//! per-voter heap allocations** (see the module docs of `nn::kernels`
+//! for the parity argument).
+//!
+//! α semantics follow the paper's memory-friendly computing framework
+//! (Fig 5): β/H are streamed in blocks of α·M output rows, every voter of
+//! a layer consumes the resident block before the next block is loaded,
+//! and — because blocking is by *output row* and each row's accumulation
+//! order is untouched — the results are bit-identical for every block
+//! size.  [`alpha_block`] is the same fraction→rows mapping the hardware
+//! model (`hwsim`) and the AOT dispatch planner (`coordinator::plan`)
+//! use, so the software schedule and the simulated accelerator finally
+//! describe the same thing.
+
+use std::sync::Mutex;
+
+use super::bnn::{BnnModel, Method};
+
+/// Row-block size for a fractional α (mirrors the Python AOT lowering's
+/// `_alpha_blocks`): the largest divisor of `m` not exceeding
+/// `round(m·α)`, min 1.
+pub fn alpha_block(m: usize, alpha: f64) -> usize {
+    assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1], got {alpha}");
+    let mut mb = ((m as f64 * alpha).round() as usize).clamp(1, m);
+    while m % mb != 0 {
+        mb -= 1;
+    }
+    mb
+}
+
+/// A compiled execution plan: everything `nn::kernels::execute_plan`
+/// needs to run one input through `method` on a fixed model, decided
+/// once instead of per evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataflowPlan {
+    /// The method this plan executes.
+    pub method: Method,
+    /// Per-layer (M, N) dimensions.
+    pub dims: Vec<(usize, usize)>,
+    /// Per-layer voter draws (bank sizes), from [`Method::layer_draws`].
+    pub draws: Vec<usize>,
+    /// Per-layer count of activation vectors entering the layer (the
+    /// fan-out tree of Fig 4b; constant `t` for Standard/Hybrid tails).
+    pub fan_in: Vec<usize>,
+    /// Per-layer α row-block size, each in `1..=M` (non-divisors of M are
+    /// allowed: the last block of a sweep is simply short).
+    pub block_rows: Vec<usize>,
+    /// Leaf voter count.
+    pub voters: usize,
+    /// Output dimension of the last layer.
+    pub classes: usize,
+    /// Floats each activation ping-pong buffer must hold.
+    act_capacity: usize,
+    /// Floats the β scratch must hold (0 when the method never
+    /// decomposes).
+    beta_capacity: usize,
+    /// Floats the η scratch must hold.
+    eta_capacity: usize,
+    /// Fingerprint of the model the plan was compiled for — executing a
+    /// plan against a different model is a hard error.
+    model_fp: u64,
+}
+
+impl DataflowPlan {
+    /// Compile for full-row sweeps (α = 1): the blocked kernels degenerate
+    /// to one block per layer.
+    pub fn new(model: &BnnModel, method: &Method) -> Self {
+        Self::with_alpha(model, method, 1.0)
+    }
+
+    /// Compile with the paper's fractional α: layer `l` uses
+    /// `alpha_block(m_l, alpha)` rows per block.
+    pub fn with_alpha(model: &BnnModel, method: &Method, alpha: f64) -> Self {
+        let blocks = model.layers.iter().map(|l| alpha_block(l.m, alpha)).collect();
+        Self::build(model, method, blocks)
+    }
+
+    /// Compile with an explicit per-layer row count (clamped to
+    /// `1..=m_l`).  Non-divisors of `m` are fine — the final block of a
+    /// sweep is short — which is what the blocked-parity property tests
+    /// sweep.
+    pub fn with_block_rows(model: &BnnModel, method: &Method, rows: usize) -> Self {
+        let blocks = model.layers.iter().map(|l| rows.clamp(1, l.m)).collect();
+        Self::build(model, method, blocks)
+    }
+
+    fn build(model: &BnnModel, method: &Method, block_rows: Vec<usize>) -> Self {
+        let nl = model.num_layers();
+        let draws = method.layer_draws(nl);
+        let dims: Vec<(usize, usize)> = model.layers.iter().map(|l| (l.m, l.n)).collect();
+        assert_eq!(block_rows.len(), nl);
+        for (li, &b) in block_rows.iter().enumerate() {
+            assert!(
+                b >= 1 && b <= dims[li].0,
+                "layer {li}: block_rows {b} outside 1..={}",
+                dims[li].0
+            );
+        }
+
+        let fan_in: Vec<usize> = match method {
+            Method::Standard { t } => vec![*t; nl],
+            Method::Hybrid { t } => {
+                // one shared decomposition of x feeds all t layer-0 voters
+                let mut f = vec![*t; nl];
+                f[0] = 1;
+                f
+            }
+            Method::DmBnn { schedule } => {
+                let mut fan = 1usize;
+                schedule
+                    .iter()
+                    .map(|&tl| {
+                        let f = fan;
+                        fan *= tl;
+                        f
+                    })
+                    .collect()
+            }
+        };
+        // activation vectors alive after layer li
+        let fan_out = |li: usize| match method {
+            Method::Standard { t } | Method::Hybrid { t } => *t,
+            Method::DmBnn { .. } => fan_in[li] * draws[li],
+        };
+
+        // Each ping-pong buffer must hold the widest activation stage: the
+        // initial input replicas plus every layer's output fan.
+        let init_floats = match method {
+            Method::Standard { t } => t * dims[0].1,
+            Method::Hybrid { .. } | Method::DmBnn { .. } => dims[0].1,
+        };
+        let mut act_capacity = init_floats;
+        for li in 0..nl {
+            act_capacity = act_capacity.max(fan_out(li) * dims[li].0);
+        }
+
+        let (beta_capacity, eta_capacity) = match method {
+            Method::Standard { .. } => (0, 0),
+            Method::Hybrid { .. } => (dims[0].0 * dims[0].1, dims[0].0),
+            Method::DmBnn { .. } => (
+                dims.iter().map(|&(m, n)| m * n).max().unwrap_or(0),
+                dims.iter().map(|&(m, _)| m).max().unwrap_or(0),
+            ),
+        };
+
+        Self {
+            method: method.clone(),
+            voters: method.voters(),
+            classes: dims[nl - 1].0,
+            dims,
+            draws,
+            fan_in,
+            block_rows,
+            act_capacity,
+            beta_capacity,
+            eta_capacity,
+            model_fp: model.fingerprint(),
+        }
+    }
+
+    /// Number of layers the plan spans.
+    pub fn num_layers(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Floats one input's logit stack occupies (`voters × classes`).
+    pub fn logit_floats(&self) -> usize {
+        self.voters * self.classes
+    }
+
+    /// The fingerprint of the model this plan was compiled for.
+    pub fn model_fingerprint(&self) -> u64 {
+        self.model_fp
+    }
+
+    pub(crate) fn act_capacity(&self) -> usize {
+        self.act_capacity
+    }
+
+    pub(crate) fn beta_capacity(&self) -> usize {
+        self.beta_capacity
+    }
+
+    pub(crate) fn eta_capacity(&self) -> usize {
+        self.eta_capacity
+    }
+
+    /// Split one input's flat logits back into per-voter vectors (the
+    /// single-input reference API shape).
+    pub fn split_logits(&self, flat: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(flat.len(), self.logit_floats());
+        flat.chunks_exact(self.classes.max(1)).map(|c| c.to_vec()).collect()
+    }
+}
+
+/// Reusable per-worker evaluation arena: activation ping-pong buffers and
+/// (β, η) decomposition scratch.  Sized lazily by [`EvalScratch::ensure`]
+/// so one arena can serve plans of different shapes — growth is amortized
+/// to zero on a steady stream.
+#[derive(Debug, Default)]
+pub struct EvalScratch {
+    pub(crate) acts_a: Vec<f32>,
+    pub(crate) acts_b: Vec<f32>,
+    pub(crate) beta: Vec<f32>,
+    pub(crate) eta: Vec<f32>,
+}
+
+fn grow(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+impl EvalScratch {
+    /// An empty arena; the first `ensure` sizes it.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An arena pre-sized for `plan`.
+    pub fn for_plan(plan: &DataflowPlan) -> Self {
+        let mut s = Self::default();
+        s.ensure(plan);
+        s
+    }
+
+    /// Grow (never shrink) every buffer to `plan`'s requirements.
+    pub fn ensure(&mut self, plan: &DataflowPlan) {
+        grow(&mut self.acts_a, plan.act_capacity());
+        grow(&mut self.acts_b, plan.act_capacity());
+        grow(&mut self.beta, plan.beta_capacity());
+        grow(&mut self.eta, plan.eta_capacity());
+    }
+
+    /// Total floats currently resident (capacity telemetry for tests).
+    pub fn resident_floats(&self) -> usize {
+        self.acts_a.len() + self.acts_b.len() + self.beta.len() + self.eta.len()
+    }
+}
+
+/// A shared pool of [`EvalScratch`] arenas: batch workers check one out,
+/// run their chunk allocation-free, and return it, so arenas survive
+/// across batches even though the scoped worker threads do not.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    free: Mutex<Vec<EvalScratch>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take an arena (a fresh empty one if the pool is dry — its buffers
+    /// get sized by the first `ensure`).
+    pub fn checkout(&self) -> EvalScratch {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return an arena for the next batch to reuse.
+    pub fn give_back(&self, scratch: EvalScratch) {
+        self.free.lock().unwrap().push(scratch);
+    }
+
+    /// Arenas currently parked in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// Flat batched voter logits: one contiguous `inputs × voters × classes`
+/// buffer instead of `Vec<Vec<Vec<f32>>>`, so the batch path allocates
+/// once per batch rather than once per voter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogitBatch {
+    data: Vec<f32>,
+    inputs: usize,
+    voters: usize,
+    classes: usize,
+}
+
+impl LogitBatch {
+    /// A zero-filled batch the kernels write into.
+    pub fn zeros(inputs: usize, voters: usize, classes: usize) -> Self {
+        Self { data: vec![0.0; inputs * voters * classes], inputs, voters, classes }
+    }
+
+    /// Wrap nested per-input voter stacks (compat shim for backends that
+    /// produce vectors, e.g. the PJRT executor).  All inputs must share
+    /// one (voters, classes) shape.
+    pub fn from_stacks(stacks: &[Vec<Vec<f32>>]) -> Self {
+        let inputs = stacks.len();
+        let voters = stacks.first().map_or(0, |s| s.len());
+        let classes = stacks.first().and_then(|s| s.first()).map_or(0, |v| v.len());
+        let mut data = Vec::with_capacity(inputs * voters * classes);
+        for stack in stacks {
+            assert_eq!(stack.len(), voters, "ragged voter counts");
+            for v in stack {
+                assert_eq!(v.len(), classes, "ragged class counts");
+                data.extend_from_slice(v);
+            }
+        }
+        Self { data, inputs, voters, classes }
+    }
+
+    /// Number of inputs.
+    pub fn len(&self) -> usize {
+        self.inputs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs == 0
+    }
+
+    /// Voters per input.
+    pub fn voters(&self) -> usize {
+        self.voters
+    }
+
+    /// Classes per voter.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Floats per input (`voters × classes`).
+    pub fn input_floats(&self) -> usize {
+        self.voters * self.classes
+    }
+
+    /// One input's voter stack, as a view.
+    pub fn input(&self, i: usize) -> LogitStack<'_> {
+        assert!(i < self.inputs, "input {i} out of {}", self.inputs);
+        let w = self.input_floats();
+        LogitStack { data: &self.data[i * w..(i + 1) * w], classes: self.classes }
+    }
+
+    /// Iterate per-input views in input order.  Always yields exactly
+    /// [`LogitBatch::len`] views — a degenerate zero-voter shape yields
+    /// empty stacks, so downstream voting fails loudly per input instead
+    /// of silently producing fewer results than inputs.
+    pub fn iter(&self) -> impl Iterator<Item = LogitStack<'_>> {
+        (0..self.inputs).map(move |i| self.input(i))
+    }
+
+    /// The whole buffer, mutable — the batch path hands disjoint
+    /// per-worker windows of this to its scoped threads.
+    pub(crate) fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Expand to the nested shape (tests / compat; allocates per voter).
+    pub fn to_vecs(&self) -> Vec<Vec<Vec<f32>>> {
+        (0..self.inputs).map(|i| self.input(i).to_vecs()).collect()
+    }
+}
+
+/// A borrowed (voters × classes) logit stack for one input.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogitStack<'a> {
+    data: &'a [f32],
+    classes: usize,
+}
+
+impl<'a> LogitStack<'a> {
+    pub fn voters(&self) -> usize {
+        if self.classes == 0 {
+            0
+        } else {
+            self.data.len() / self.classes
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// The stack's contiguous floats, voter-major.
+    pub fn flat(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Voter `k`'s logits.
+    pub fn voter(&self, k: usize) -> &'a [f32] {
+        &self.data[k * self.classes..(k + 1) * self.classes]
+    }
+
+    /// Iterate voter rows.
+    pub fn rows(&self) -> impl Iterator<Item = &'a [f32]> {
+        self.data.chunks_exact(self.classes.max(1))
+    }
+
+    /// Expand to per-voter vectors (tests / compat).
+    pub fn to_vecs(&self) -> Vec<Vec<f32>> {
+        self.rows().map(|r| r.to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_block_matches_dispatch_planner() {
+        assert_eq!(alpha_block(200, 1.0), 200);
+        assert_eq!(alpha_block(200, 0.5), 100);
+        assert_eq!(alpha_block(200, 0.2), 40);
+        assert_eq!(alpha_block(200, 0.1), 20);
+        assert_eq!(alpha_block(10, 0.1), 1);
+        assert_eq!(alpha_block(10, 0.5), 5);
+    }
+
+    fn model() -> BnnModel {
+        BnnModel::synthetic(&[16, 12, 8, 5], 7)
+    }
+
+    #[test]
+    fn plan_shapes_per_method() {
+        let m = model();
+        let p = DataflowPlan::new(&m, &Method::Standard { t: 4 });
+        assert_eq!(p.voters, 4);
+        assert_eq!(p.classes, 5);
+        assert_eq!(p.fan_in, vec![4, 4, 4]);
+        assert_eq!(p.block_rows, vec![12, 8, 5]);
+        // widest stage: 4 input replicas of dim 16
+        assert_eq!(p.act_capacity(), 4 * 16);
+        assert_eq!(p.beta_capacity(), 0);
+
+        let p = DataflowPlan::new(&m, &Method::Hybrid { t: 4 });
+        assert_eq!(p.fan_in, vec![1, 4, 4]);
+        assert_eq!(p.beta_capacity(), 12 * 16);
+        assert_eq!(p.eta_capacity(), 12);
+
+        let p = DataflowPlan::new(&m, &Method::DmBnn { schedule: vec![2, 3, 2] });
+        assert_eq!(p.voters, 12);
+        assert_eq!(p.fan_in, vec![1, 2, 6]);
+        // widest stage: after layer 2, 12 activations of dim 5 = 60 <
+        // after layer 1, 6 × 8 = 48 < after layer 0, 2 × 12 = 24 — max is
+        // 60 vs the input 16: 60
+        assert_eq!(p.act_capacity(), 60);
+        assert_eq!(p.beta_capacity(), 12 * 16);
+    }
+
+    #[test]
+    fn alpha_and_explicit_rows_shape_blocks() {
+        let m = model();
+        let p = DataflowPlan::with_alpha(&m, &Method::DmBnn { schedule: vec![2, 2, 2] }, 0.25);
+        assert_eq!(p.block_rows, vec![3, 2, 1]);
+        // explicit rows clamp to each layer's M and keep non-divisors
+        let p = DataflowPlan::with_block_rows(&m, &Method::Standard { t: 2 }, 7);
+        assert_eq!(p.block_rows, vec![7, 7, 5]);
+        let p = DataflowPlan::with_block_rows(&m, &Method::Standard { t: 2 }, 0);
+        assert_eq!(p.block_rows, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn scratch_grows_and_reuses() {
+        let m = model();
+        let small = DataflowPlan::new(&m, &Method::Standard { t: 1 });
+        let big = DataflowPlan::new(&m, &Method::Standard { t: 8 });
+        let mut s = EvalScratch::for_plan(&small);
+        let before = s.resident_floats();
+        s.ensure(&small);
+        assert_eq!(s.resident_floats(), before, "same plan must not grow");
+        s.ensure(&big);
+        assert!(s.resident_floats() > before);
+        let after = s.resident_floats();
+        s.ensure(&small);
+        assert_eq!(s.resident_floats(), after, "never shrinks");
+    }
+
+    #[test]
+    fn scratch_pool_roundtrip() {
+        let pool = ScratchPool::new();
+        assert_eq!(pool.idle(), 0);
+        let a = pool.checkout();
+        pool.give_back(a);
+        assert_eq!(pool.idle(), 1);
+        let _ = pool.checkout();
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn logit_batch_views_and_vecs() {
+        let mut b = LogitBatch::zeros(2, 3, 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.input_floats(), 6);
+        b.data_mut().copy_from_slice(&[
+            0.0, 1.0, 2.0, 3.0, 4.0, 5.0, // input 0
+            6.0, 7.0, 8.0, 9.0, 10.0, 11.0, // input 1
+        ]);
+        assert_eq!(b.input(0).voter(1), &[2.0, 3.0]);
+        assert_eq!(b.input(1).voter(2), &[10.0, 11.0]);
+        assert_eq!(b.iter().count(), 2);
+        let vecs = b.to_vecs();
+        assert_eq!(vecs[1][0], vec![6.0, 7.0]);
+        let rebuilt = LogitBatch::from_stacks(&vecs);
+        assert_eq!(rebuilt, b);
+    }
+
+    #[test]
+    fn empty_logit_batch() {
+        let b = LogitBatch::zeros(0, 4, 3);
+        assert!(b.is_empty());
+        assert_eq!(b.iter().count(), 0);
+        assert!(b.to_vecs().is_empty());
+        let b = LogitBatch::from_stacks(&[]);
+        assert!(b.is_empty());
+        assert_eq!(b.voters(), 0);
+    }
+
+    #[test]
+    fn zero_voter_shape_still_yields_one_view_per_input() {
+        // Degenerate (voters × classes) = 0: iter() must not silently
+        // yield fewer views than inputs — downstream voting fails loudly.
+        let b = LogitBatch::zeros(2, 0, 3);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.iter().count(), 2);
+        for stack in b.iter() {
+            assert_eq!(stack.voters(), 0);
+            assert!(stack.flat().is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn zero_alpha_rejected() {
+        let _ = alpha_block(10, 0.0);
+    }
+}

@@ -55,7 +55,11 @@ fn batch_is_bit_identical_to_serial_across_methods_and_sizes() {
             for (i, x) in xs.iter().enumerate() {
                 let mut g = default_grng(SEED);
                 let (logits, ops) = model.evaluate(x, method, &mut g);
-                assert_eq!(batch.logits[i], logits, "{method:?} b={bs} input {i}");
+                assert_eq!(
+                    batch.logits.input(i).to_vecs(),
+                    logits,
+                    "{method:?} b={bs} input {i}"
+                );
                 serial_ops += ops;
             }
             assert_eq!(batch.ops, serial_ops, "{method:?} b={bs} op counts");
@@ -167,6 +171,7 @@ fn server_duplicate_stream_is_identical_with_cache_on_and_off() {
                 seed: 0x5EED,
                 cache,
                 seed_schedule: SeedSchedule::ContentHash,
+                ..EngineConfig::default()
             },
         ));
         let handle = serve_engine(

@@ -217,7 +217,7 @@ mod pjrt {
                 &eta,
                 &h[k * l.m * l.n..(k + 1) * l.m * l.n],
                 &hb[k * l.m..(k + 1) * l.m],
-                0..l.m,
+                0,
                 false,
                 &mut want,
                 &mut ops,
