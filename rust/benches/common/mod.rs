@@ -1,0 +1,56 @@
+//! Shared helpers for the bench targets (each `harness = false` bench is
+//! its own binary; this module is compiled into each via `mod common;`).
+//!
+//! The one job here is consistent artifact placement: every bench emits a
+//! machine-readable `BENCH_<name>.json` **at the repository root**, so
+//! the perf trajectory always finds them in one canonical place no
+//! matter whether the bench was invoked from the root, from `rust/`, or
+//! from a CI working directory.
+#![allow(dead_code)]
+
+use std::path::{Path, PathBuf};
+
+/// Locate the repository root: the nearest ancestor of the current
+/// working directory containing `.git` or the `CHANGES.md` marker.
+/// Falls back to the working directory itself (bench output is still
+/// written, just not hoisted).
+pub fn repo_root() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir: &Path = &cwd;
+    loop {
+        if dir.join(".git").exists() || dir.join("CHANGES.md").exists() {
+            return dir.to_path_buf();
+        }
+        match dir.parent() {
+            Some(parent) => dir = parent,
+            None => return cwd.clone(),
+        }
+    }
+}
+
+/// Assemble a `BENCH_*.json` document: `fields` are extra top-level
+/// `"key": value` pairs (values pre-rendered as JSON — no serde
+/// offline; all bench strings are identifier-safe, so no escaping),
+/// `rows` are pre-rendered row objects placed under `"rows"`.  Keeps
+/// the emitters' scaffolding (indentation, trailing commas) in one
+/// place; only the per-bench row shape lives with each bench.
+pub fn json_doc(bench: &str, fields: &[(&str, String)], rows: &[String]) -> String {
+    let mut s = format!("{{\n  \"bench\": \"{bench}\"");
+    for (k, v) in fields {
+        s.push_str(&format!(",\n  \"{k}\": {v}"));
+    }
+    s.push_str(",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!("    {r}{}\n", if i + 1 == rows.len() { "" } else { "," }));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write `BENCH_<name>.json` at the repo root and report where it went.
+pub fn emit_bench_json(name: &str, json: &str) -> PathBuf {
+    let path = repo_root().join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, json).unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+    path
+}

@@ -15,8 +15,10 @@
 //! 2×2×2 for every batch ≥ 16 (single-threaded, so the win is the kernel
 //! core, not the worker pool).
 //!
-//! Emits `BENCH_kernels.json` next to the working directory for the perf
-//! trajectory (machine-readable mirror of the printed table).
+//! Emits `BENCH_kernels.json` at the repo root for the perf trajectory
+//! (machine-readable mirror of the printed table).
+
+mod common;
 
 use std::time::Duration;
 
@@ -68,27 +70,21 @@ struct Row {
 }
 
 fn to_json(rows: &[Row]) -> String {
-    // Hand-rolled JSON (no serde offline); all strings here are
-    // identifier-safe, so no escaping is needed.
-    let mut s = String::from("{\n  \"bench\": \"kernels\",\n  \"method\": \"dm_2x2x2\",\n");
-    s.push_str(&format!(
-        "  \"arch\": [{}],\n  \"rows\": [\n",
-        MNIST_ARCH.map(|d| d.to_string()).join(",")
-    ));
-    for (i, r) in rows.iter().enumerate() {
-        s.push_str(&format!(
-            "    {{\"case\": \"{}\", \"batch\": {}, \"alpha\": {}, \
-             \"inputs_per_sec\": {:.2}, \"mean_ms\": {:.4}}}{}\n",
-            r.case,
-            r.batch,
-            r.alpha,
-            r.inputs_per_sec,
-            r.mean_ms,
-            if i + 1 == rows.len() { "" } else { "," }
-        ));
-    }
-    s.push_str("  ]\n}\n");
-    s
+    let fields = [
+        ("method", "\"dm_2x2x2\"".to_string()),
+        ("arch", format!("[{}]", MNIST_ARCH.map(|d| d.to_string()).join(","))),
+    ];
+    let rendered: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"case\": \"{}\", \"batch\": {}, \"alpha\": {}, \"inputs_per_sec\": {:.2}, \
+                 \"mean_ms\": {:.4}}}",
+                r.case, r.batch, r.alpha, r.inputs_per_sec, r.mean_ms
+            )
+        })
+        .collect();
+    common::json_doc("kernels", &fields, &rendered)
 }
 
 fn inputs_per_sec(batch: usize, m: &Measurement) -> f64 {
@@ -172,8 +168,8 @@ fn main() {
     }
 
     let json = to_json(&rows);
-    std::fs::write("BENCH_kernels.json", &json).expect("write BENCH_kernels.json");
-    println!("wrote BENCH_kernels.json ({} rows)", rows.len());
+    common::emit_bench_json("kernels", &json);
+    println!("({} rows)", rows.len());
 
     for &(bs, base, fused) in &headline {
         if bs >= 16 {

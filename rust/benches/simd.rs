@@ -1,0 +1,182 @@
+//! Bench: runtime-dispatched SIMD vs forced-scalar kernel core on the
+//! fused f32 DM layer sweep.
+//!
+//! Sweeps the paper's MNIST-MLP layer shapes plus tall/skinny edge
+//! shapes.  For every shape the two paths are first asserted
+//! **bit-identical** (the lane-stable reduction contract), then timed
+//! single-threaded over the same α-blocked, micro-kernel-tiled sweep —
+//! so the measured gap is pure ISA, not schedule.
+//!
+//! Acceptance shape: when a vector ISA is available at runtime, the
+//! dispatched path is ≥ 2× the forced-scalar path on the f32 DM layer
+//! for every shape with N ≥ 256.  (On scalar-only hardware both rungs
+//! run the same code and the check is skipped.)
+//!
+//! Emits `BENCH_simd.json` at the repo root (shared `common` emitter).
+
+mod common;
+
+use std::time::Duration;
+
+use bayesdm::dataset::LayerPosterior;
+use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+use bayesdm::nn::kernels::dm_layer_blocked;
+use bayesdm::nn::linear::precompute;
+use bayesdm::nn::plan::TileGeometry;
+use bayesdm::nn::simd::{self, Isa};
+use bayesdm::opcount::OpCounter;
+use bayesdm::util::bench::{bench_for, header};
+
+const VOTERS: usize = 8;
+
+struct Shape {
+    name: &'static str,
+    m: usize,
+    n: usize,
+}
+
+const SHAPES: [Shape; 7] = [
+    Shape { name: "mnist_l0", m: 200, n: 784 },
+    Shape { name: "mnist_l1", m: 200, n: 200 },
+    Shape { name: "mnist_l2", m: 10, n: 200 },
+    Shape { name: "square_256", m: 256, n: 256 },
+    Shape { name: "tall_skinny", m: 512, n: 8 },
+    Shape { name: "short_wide", m: 8, n: 512 },
+    Shape { name: "wide_4096", m: 64, n: 4096 },
+];
+
+struct Row {
+    shape: &'static str,
+    m: usize,
+    n: usize,
+    scalar_ms: f64,
+    simd_ms: f64,
+    speedup: f64,
+}
+
+fn to_json(isa: &str, rows: &[Row]) -> String {
+    let fields = [("isa", format!("\"{isa}\"")), ("voters", VOTERS.to_string())];
+    let rendered: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"shape\": \"{}\", \"m\": {}, \"n\": {}, \"scalar_ms\": {:.4}, \
+                 \"simd_ms\": {:.4}, \"speedup\": {:.3}}}",
+                r.shape, r.m, r.n, r.scalar_ms, r.simd_ms, r.speedup
+            )
+        })
+        .collect();
+    common::json_doc("simd", &fields, &rendered)
+}
+
+fn layer(m: usize, n: usize, seed: u64) -> LayerPosterior {
+    let mut r = XorShift128Plus::new(seed);
+    LayerPosterior {
+        m,
+        n,
+        mu: (0..m * n).map(|_| r.next_f32() - 0.5).collect(),
+        sigma: (0..m * n).map(|_| 0.01 + 0.05 * r.next_f32()).collect(),
+        mu_b: (0..m).map(|_| r.next_f32() - 0.5).collect(),
+        sigma_b: (0..m).map(|_| 0.01 + 0.05 * r.next_f32()).collect(),
+    }
+}
+
+fn main() {
+    header("SIMD — dispatched vector kernels vs forced-scalar, f32 DM layer");
+    let vector_isa = simd::detect();
+    println!(
+        "detected: {}  (dispatch cached as: {})\n",
+        vector_isa.name(),
+        simd::isa_label()
+    );
+
+    let budget = Duration::from_millis(300);
+    let mut rows: Vec<Row> = Vec::new();
+
+    for shape in &SHAPES {
+        let (m, n) = (shape.m, shape.n);
+        let l = layer(m, n, 0x51D0 + m as u64);
+        let mut r = XorShift128Plus::new(7);
+        let x: Vec<f32> = (0..n).map(|_| r.next_f32()).collect();
+        let bank: Vec<(Vec<f32>, Vec<f32>)> = (0..VOTERS)
+            .map(|_| {
+                (
+                    (0..m * n).map(|_| r.next_f32() * 2.0 - 1.0).collect(),
+                    (0..m).map(|_| r.next_f32() * 2.0 - 1.0).collect(),
+                )
+            })
+            .collect();
+        let mut ops = OpCounter::default();
+        let mut beta = vec![0.0f32; m * n];
+        let mut eta = vec![0.0f32; m];
+        precompute(&l, &x, &mut beta, &mut eta, &mut ops);
+        let block_rows = m.min(64); // one resident α block of ≤ 64 rows
+        let tiles = TileGeometry::default();
+
+        let sweep = |ys: &mut [f32]| {
+            let mut ops = OpCounter::default();
+            dm_layer_blocked(&l, &beta, &eta, &bank, block_rows, tiles, true, ys, &mut ops);
+        };
+
+        // parity gate before timing: both paths must agree bit-for-bit
+        let mut want = vec![0.0f32; VOTERS * m];
+        simd::set_active(Isa::Scalar);
+        sweep(&mut want);
+        let mut got = vec![0.0f32; VOTERS * m];
+        simd::set_active(vector_isa);
+        sweep(&mut got);
+        assert_eq!(got, want, "{}: SIMD and forced-scalar logits must match", shape.name);
+
+        simd::set_active(Isa::Scalar);
+        let mut ys = vec![0.0f32; VOTERS * m];
+        let m_scalar = bench_for(&format!("scalar {:<12} {m}x{n}", shape.name), budget, || {
+            sweep(&mut ys);
+            std::hint::black_box(&mut ys);
+        });
+        simd::set_active(vector_isa);
+        let m_simd = bench_for(
+            &format!("{:<6} {:<12} {m}x{n}", vector_isa.name(), shape.name),
+            budget,
+            || {
+                sweep(&mut ys);
+                std::hint::black_box(&mut ys);
+            },
+        );
+        let speedup = m_scalar.mean.as_secs_f64() / m_simd.mean.as_secs_f64();
+        println!(
+            "  {:<12} {m:>4}x{n:<4}  scalar {:>8.3} ms | {} {:>8.3} ms  ({speedup:4.2}x)\n",
+            shape.name,
+            m_scalar.mean_ms(),
+            vector_isa.name(),
+            m_simd.mean_ms()
+        );
+        rows.push(Row {
+            shape: shape.name,
+            m,
+            n,
+            scalar_ms: m_scalar.mean_ms(),
+            simd_ms: m_simd.mean_ms(),
+            speedup,
+        });
+    }
+
+    common::emit_bench_json("simd", &to_json(vector_isa.name(), &rows));
+
+    if vector_isa == Isa::Scalar {
+        println!("(no vector ISA at runtime: speedup acceptance check skipped)");
+        return;
+    }
+    for r in &rows {
+        if r.n >= 256 {
+            assert!(
+                r.speedup >= 2.0,
+                "acceptance: {} ({}x{}) must run ≥2x over forced scalar, got {:.2}x",
+                r.shape,
+                r.m,
+                r.n,
+                r.speedup
+            );
+        }
+    }
+    println!("OK: >=2x over forced scalar on every f32 DM shape with N >= 256");
+}

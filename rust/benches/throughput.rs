@@ -12,6 +12,11 @@
 //!
 //! Acceptance shape (checked when ≥ 2 cores are available): the pooled
 //! engine beats serial inputs/sec on DM-BNN for every batch ≥ 16.
+//!
+//! Emits `BENCH_throughput.json` at the repo root (shared `common`
+//! emitter) — the machine-readable mirror of the printed table.
+
+mod common;
 
 use std::time::Duration;
 
@@ -27,6 +32,32 @@ fn inputs_per_sec(batch: usize, m: &Measurement) -> f64 {
     batch as f64 / m.mean.as_secs_f64()
 }
 
+struct Row {
+    method: &'static str,
+    case: &'static str,
+    batch: usize,
+    inputs_per_sec: f64,
+    mean_ms: f64,
+}
+
+fn to_json(pool: usize, rows: &[Row]) -> String {
+    let fields = [
+        ("workers", pool.to_string()),
+        ("arch", format!("[{}]", MNIST_ARCH.map(|d| d.to_string()).join(","))),
+    ];
+    let rendered: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"method\": \"{}\", \"case\": \"{}\", \"batch\": {}, \
+                 \"inputs_per_sec\": {:.2}, \"mean_ms\": {:.4}}}",
+                r.method, r.case, r.batch, r.inputs_per_sec, r.mean_ms
+            )
+        })
+        .collect();
+    common::json_doc("throughput", &fields, &rendered)
+}
+
 fn main() {
     header("Throughput — batched multi-threaded engine vs serial");
     let pool = default_workers();
@@ -37,14 +68,15 @@ fn main() {
     let all: Vec<Vec<f32>> = (0..data.len()).map(|i| data.image(i).to_vec()).collect();
 
     let methods = [
-        ("standard T=8", Method::Standard { t: 8 }),
-        ("hybrid   T=8", Method::Hybrid { t: 8 }),
-        ("dm 2x2x2 (8v)", Method::DmBnn { schedule: vec![2, 2, 2] }),
+        ("standard T=8", "standard_t8", Method::Standard { t: 8 }),
+        ("hybrid   T=8", "hybrid_t8", Method::Hybrid { t: 8 }),
+        ("dm 2x2x2 (8v)", "dm_2x2x2", Method::DmBnn { schedule: vec![2, 2, 2] }),
     ];
     let budget = Duration::from_millis(400);
     let mut dm_pooled_vs_serial: Vec<(usize, f64, f64)> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
 
-    for (name, method) in &methods {
+    for (name, id, method) in &methods {
         println!("{name}:");
         for &bs in &[1usize, 8, 16, 32] {
             let xs = &all[..bs];
@@ -63,6 +95,19 @@ fn main() {
             let s = inputs_per_sec(bs, &m_serial);
             let o = inputs_per_sec(bs, &m_one);
             let p = inputs_per_sec(bs, &m_pool);
+            for (case, ips, meas) in [
+                ("serial", s, &m_serial),
+                ("engine_w1", o, &m_one),
+                ("engine_pool", p, &m_pool),
+            ] {
+                rows.push(Row {
+                    method: *id,
+                    case,
+                    batch: bs,
+                    inputs_per_sec: ips,
+                    mean_ms: meas.mean_ms(),
+                });
+            }
             println!(
                 "  b={bs:<3} serial {s:>9.1} in/s | engine w=1 {o:>9.1} in/s \
                  ({:4.2}x) | engine w={pool} {p:>9.1} in/s ({:4.2}x)",
@@ -75,6 +120,8 @@ fn main() {
         }
         println!();
     }
+
+    common::emit_bench_json("throughput", &to_json(pool, &rows));
 
     if pool >= 2 {
         for &(bs, serial, pooled) in &dm_pooled_vs_serial {

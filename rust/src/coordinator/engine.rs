@@ -176,6 +176,15 @@ impl Engine {
         self.cache.as_ref().map(|c| c.stats())
     }
 
+    /// The SIMD kernel path this engine's batches execute with —
+    /// `"avx2"`, `"neon"`, `"scalar"`, or `"scalar(forced)"` when the
+    /// `BAYESDM_FORCE_SCALAR`/`--force-scalar` escape hatch pinned the
+    /// portable path.  Also folded into [`Engine::metrics_summary`] so a
+    /// deployment can verify which kernel actually served its traffic.
+    pub fn kernel_isa(&self) -> &'static str {
+        crate::nn::simd::isa_label()
+    }
+
     /// Serving metrics with the cache counters folded in.
     pub fn metrics_summary(&self) -> MetricsSummary {
         let mut s = self.metrics.summary();
@@ -412,6 +421,17 @@ mod tests {
             let _ = e.plan_for(&Method::Standard { t });
         }
         assert!(e.plans.lock().unwrap().len() <= MAX_MEMOIZED_PLANS);
+    }
+
+    #[test]
+    fn kernel_isa_is_surfaced_in_metrics() {
+        // Membership only (no strict equality between two reads):
+        // sibling tests may legitimately flip the dispatch mid-flight —
+        // results never change, but the label can.
+        let e = engine(1);
+        let known = ["avx2", "neon", "scalar", "scalar(forced)"];
+        assert!(known.contains(&e.kernel_isa()), "unexpected isa {}", e.kernel_isa());
+        assert!(known.contains(&e.metrics_summary().isa));
     }
 
     #[test]

@@ -57,7 +57,11 @@ impl Metrics {
 
     /// Snapshot for printing.  The decomposition-cache counters are not
     /// tracked here (they live in the cache itself) — the engine's
-    /// `metrics_summary()` fills [`MetricsSummary::cache`] in.
+    /// `metrics_summary()` fills [`MetricsSummary::cache`] in.  The
+    /// kernel ISA comes straight from the dispatch module, so a
+    /// deployment can verify which path its traffic actually ran
+    /// (`"scalar(forced)"` when `--force-scalar`/`BAYESDM_FORCE_SCALAR`
+    /// pinned it).
     pub fn summary(&self) -> MetricsSummary {
         MetricsSummary {
             requests: self.requests.load(Ordering::Relaxed),
@@ -65,6 +69,7 @@ impl Metrics {
             voters: self.voters_evaluated.load(Ordering::Relaxed),
             p50_us: self.latency_percentile_us(0.50),
             p99_us: self.latency_percentile_us(0.99),
+            isa: crate::nn::simd::isa_label(),
             cache: None,
         }
     }
@@ -78,6 +83,9 @@ pub struct MetricsSummary {
     pub voters: u64,
     pub p50_us: Option<u64>,
     pub p99_us: Option<u64>,
+    /// The SIMD kernel path requests were served with (`nn::simd`
+    /// dispatch): `"avx2"`, `"neon"`, `"scalar"` or `"scalar(forced)"`.
+    pub isa: &'static str,
     /// Feature-decomposition cache counters (hit/miss/eviction and the
     /// MULs/ADDs avoided), when a cache-enabled engine produced this
     /// summary.
@@ -88,12 +96,13 @@ impl std::fmt::Display for MetricsSummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "requests={} errors={} voters={} p50={}µs p99={}µs",
+            "requests={} errors={} voters={} p50={}µs p99={}µs kernel={}",
             self.requests,
             self.errors,
             self.voters,
             self.p50_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
             self.p99_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            self.isa,
         )?;
         if let Some(c) = &self.cache {
             write!(f, "  cache[{c}]")?;
@@ -145,7 +154,18 @@ mod tests {
         let text = m.summary().to_string();
         assert!(text.contains("requests=1"));
         assert!(text.contains("p50=42µs"));
+        assert!(text.contains("kernel="), "{text}");
         assert!(!text.contains("cache["), "no cache line when None");
+    }
+
+    #[test]
+    fn summary_reports_a_known_kernel_isa() {
+        let s = Metrics::new().summary();
+        assert!(
+            ["avx2", "neon", "scalar", "scalar(forced)"].contains(&s.isa),
+            "unexpected isa label {}",
+            s.isa
+        );
     }
 
     #[test]

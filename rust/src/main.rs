@@ -41,9 +41,9 @@ USAGE: bayesdm [--artifacts DIR] <subcommand> [flags]
 
 SUBCOMMANDS:
   serve    --method M --requests N --max-batch B --workers W [--synthetic]
-           [--cache-mb MB] [--alpha A]
+           [--cache-mb MB] [--alpha A] [--force-scalar]
   eval     --method M --limit N --batch B --workers W [--synthetic]
-           [--cache-mb MB] [--alpha A]
+           [--cache-mb MB] [--alpha A] [--force-scalar]
   tables   --table {3|4|5} [--limit N]
   fig6
   hwsweep
@@ -59,7 +59,11 @@ methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
             (0 = off; default honors the BAYESDM_CACHE_MB env toggle).
             Repeated inputs skip the deterministic mu-path GEMVs; results
             are bit-identical either way, hit/miss/eviction and
-            MULs-avoided counters are reported after the run.";
+            MULs-avoided counters are reported after the run.
+--force-scalar: pin the portable lane-blocked scalar kernels instead of
+            the runtime-detected AVX2/NEON path (BAYESDM_FORCE_SCALAR=1
+            does the same).  Results are bit-identical either way; the
+            selected kernel is reported in the run's metrics line.";
 
 fn parse_method(s: &str, alpha: f64) -> Result<InferenceMethod> {
     InferenceMethod::parse(s, alpha)
@@ -117,6 +121,9 @@ fn main() -> Result<()> {
             let pool = default_workers();
             let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
             let synthetic = args.has("synthetic");
+            if args.has("force-scalar") {
+                bayesdm::nn::simd::force_scalar();
+            }
             let cache = cache_config(&mut args)?;
             args.finish().map_err(Error::msg)?;
             let m = parse_method(&method, alpha)?;
@@ -168,6 +175,9 @@ fn main() -> Result<()> {
             let pool = default_workers();
             let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
             let synthetic = args.has("synthetic");
+            if args.has("force-scalar") {
+                bayesdm::nn::simd::force_scalar();
+            }
             let cache = cache_config(&mut args)?;
             args.finish().map_err(Error::msg)?;
             let m = parse_method(&method, alpha)?;
@@ -191,6 +201,7 @@ fn main() -> Result<()> {
                 t0.elapsed().as_secs_f64(),
                 t0.elapsed().as_millis() as f64 / n as f64
             );
+            println!("kernel: {}", engine.kernel_isa());
             if let Some(stats) = engine.cache_stats() {
                 println!("cache: {stats}");
             }

@@ -16,9 +16,11 @@
 //! fused, α-row-blocked banked sweep as the f32 path — each β block
 //! feeds every voter while resident — so the software schedule and the
 //! simulated accelerator's α parameter (`hwsim`, Fig 5) describe one
-//! thing.  Row blocking is bit-exact here for the same reason as in
-//! f32 — per-row accumulation order never changes — pinned by a test
-//! below.
+//! thing.  Their inner MAC sweeps run on the `nn::simd` integer
+//! primitives (AVX2 when detected, portable otherwise): integer
+//! accumulation is associative, so the vectorized kernels are **exact**
+//! — this module's logits never depend on ISA, block size or
+//! `BAYESDM_FORCE_SCALAR`, pinned by the tests below.
 
 use crate::dataset::LayerPosterior;
 use crate::fixed::q::{Fx, QFormat};
@@ -296,6 +298,32 @@ mod tests {
                 assert_eq!(got, full, "{method:?} alpha={alpha}");
             }
         }
+    }
+
+    #[test]
+    fn quantized_inference_is_isa_invariant() {
+        // Integer accumulation is associative, so the vectorized i8
+        // kernels must reproduce the scalar functional model *exactly*
+        // for every method — the fixed-point analogue of lane parity.
+        use crate::nn::simd::{self, Isa};
+        let post = small_posterior(6);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32) / 7.0 - 0.8).collect();
+        let _g = simd::TEST_ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = simd::active();
+        for method in [
+            Method::Standard { t: 2 },
+            Method::Hybrid { t: 2 },
+            Method::DmBnn { schedule: vec![2, 2] },
+        ] {
+            simd::set_active(Isa::Scalar);
+            let scalar = QBnnModel::from_posterior(&post)
+                .evaluate(&x, &method, &mut Ziggurat::new(XorShift128Plus::new(3)));
+            simd::set_active(simd::detect());
+            let vector = QBnnModel::from_posterior(&post)
+                .evaluate(&x, &method, &mut Ziggurat::new(XorShift128Plus::new(3)));
+            assert_eq!(scalar, vector, "{method:?}");
+        }
+        simd::set_active(prev);
     }
 
     #[test]

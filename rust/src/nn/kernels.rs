@@ -13,15 +13,29 @@
 //! for the multi-layer fan-out tree (every parent activation of a DM-BNN
 //! layer) as well as the Standard/Hybrid paths.
 //!
+//! # The micro-kernel (N×M register tiling)
+//!
+//! Inside each α block the sweeps run a register micro-kernel
+//! ([`TileGeometry`]): a β/σμ tile of `row_tile` rows × `col_tile`
+//! columns is held resident and feeds `voter_tile` voters before the
+//! next tile is touched, with the in-flight `(voter, row)` partial sums
+//! living in a stack array of [`Lanes`].  The shared operand of each
+//! method (β for DM, σ/μ for Standard) is thus read once per voter
+//! *group* instead of once per voter — L1/register-level reuse on top of
+//! the α block's L2-level reuse.
+//!
 //! # Bit-parity argument
 //!
-//! Blocking is by *output row*: each `y[i]` is still one dot product
-//! accumulated over `j = 0..N` in unchanged order, on unchanged inputs.
-//! Re-ordering (block, voter) iteration permutes only *which output
-//! element is computed when*, never how any element is computed — so the
-//! results are bit-identical for every block size, divisor of M or not,
-//! and for the fused vs per-voter order.  `tests/blocked_parity.rs` pins
-//! this across methods × block sizes × worker counts × cache states.
+//! Blocking is by *output row*: each `y[i]` is still one lane-stable dot
+//! product over `j = 0..N` — element `j` into lane `j % LANES` in
+//! increasing-`j` order, lanes collapsed by one fixed reduction tree
+//! (`nn::simd`).  Column tiles start at lane multiples and carry their
+//! lane sums, so tiling never changes which lane an element lands in or
+//! the order of any lane's adds; row/voter tiling permutes only *which
+//! output element is computed when*.  The same schedule is executed by
+//! the scalar, AVX2 and NEON backends, so results are bit-identical for
+//! every block size, tile geometry, worker count **and ISA**.
+//! `tests/blocked_parity.rs` pins all of it.
 //!
 //! # Allocation discipline
 //!
@@ -40,13 +54,76 @@ use crate::opcount::counter::OpCounter;
 use super::bnn::{BnnModel, Method, UncertaintyBanks};
 use super::dmcache::CacheView;
 use super::fixed_infer::QLayer;
-use super::linear::{dm_voter, precompute, standard_voter_rows};
-use super::plan::{DataflowPlan, EvalScratch};
+use super::linear::precompute;
+use super::plan::{DataflowPlan, EvalScratch, TileGeometry, MAX_ROW_TILE, MAX_VOTER_TILE};
+use super::simd::{self, Lanes};
 
-/// One full layer of DM voters, α-blocked: for each row block, the β/H
-/// block is swept once while resident, feeding every voter in `bank`
-/// before the next block is touched.  `ys` is `bank.len() × M`
-/// voter-major; results are bit-identical to per-voter full sweeps.
+/// The shared N×M×voter micro-kernel schedule both fused sweeps run.
+/// For every α row block, a register tile of `row_tile` rows feeds
+/// `voter_tile` voters before eviction; `accumulate` is called per
+/// `(voter, row, column tile)` with that pair's in-flight lane sums
+/// (column tiles always start at lane multiples — see [`TileGeometry`] —
+/// so lane assignment and per-lane add order match a whole-row sweep),
+/// and `finish` receives each `(voter, row)`'s reduced dot product
+/// exactly once.  Monomorphized per caller: the closures inline, so the
+/// shared schedule costs nothing over the hand-fused form.
+#[allow(clippy::too_many_arguments)]
+fn tile_sweep<A: FnMut(usize, usize, usize, usize, &mut Lanes), F: FnMut(usize, usize, f32)>(
+    m: usize,
+    n: usize,
+    voters: usize,
+    block_rows: usize,
+    tiles: TileGeometry,
+    mut accumulate: A,
+    mut finish: F,
+) {
+    let tiles = tiles.clamped();
+    let (ct, rt, vt) = (tiles.col_tile, tiles.row_tile, tiles.voter_tile);
+    // in-flight (voter, row) lane sums — stack resident, no allocation
+    let mut acc = [[Lanes::default(); MAX_ROW_TILE]; MAX_VOTER_TILE];
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + block_rows).min(m);
+        let mut k0 = 0;
+        while k0 < voters {
+            let k1 = (k0 + vt).min(voters);
+            let mut i0 = r0;
+            while i0 < r1 {
+                let i1 = (i0 + rt).min(r1);
+                for voter_acc in acc.iter_mut().take(k1 - k0) {
+                    for lanes in voter_acc.iter_mut().take(i1 - i0) {
+                        *lanes = Lanes::default();
+                    }
+                }
+                let mut j0 = 0;
+                while j0 < n {
+                    let j1 = (j0 + ct).min(n);
+                    for kk in 0..k1 - k0 {
+                        for i in i0..i1 {
+                            accumulate(k0 + kk, i, j0, j1, &mut acc[kk][i - i0]);
+                        }
+                    }
+                    j0 = j1;
+                }
+                for kk in 0..k1 - k0 {
+                    for i in i0..i1 {
+                        finish(k0 + kk, i, acc[kk][i - i0].reduce());
+                    }
+                }
+                i0 = i1;
+            }
+            k0 = k1;
+        }
+        r0 = r1;
+    }
+}
+
+/// One full layer of DM voters, α-blocked with the register
+/// micro-kernel: inside each row block, a β tile of `tiles.row_tile`
+/// rows × `tiles.col_tile` columns feeds `tiles.voter_tile` voters
+/// while resident.  `ys` is `bank.len() × M` voter-major; results are
+/// bit-identical to per-voter [`super::linear::dm_voter`] full sweeps
+/// for every block size and tile geometry (see the module docs).
 #[allow(clippy::too_many_arguments)]
 pub fn dm_layer_blocked(
     layer: &LayerPosterior,
@@ -54,6 +131,7 @@ pub fn dm_layer_blocked(
     eta: &[f32],
     bank: &[(Vec<f32>, Vec<f32>)],
     block_rows: usize,
+    tiles: TileGeometry,
     relu: bool,
     ys: &mut [f32],
     ops: &mut OpCounter,
@@ -63,36 +141,48 @@ pub fn dm_layer_blocked(
     assert_eq!(beta.len(), m * n);
     assert_eq!(eta.len(), m);
     assert_eq!(ys.len(), bank.len() * m);
-    let mut r0 = 0;
-    while r0 < m {
-        let r1 = (r0 + block_rows).min(m);
-        let bblock = &beta[r0 * n..r1 * n];
-        let eblock = &eta[r0..r1];
-        for (k, (h, hb)) in bank.iter().enumerate() {
-            dm_voter(
-                layer,
-                bblock,
-                eblock,
-                &h[r0 * n..r1 * n],
-                &hb[r0..r1],
-                r0,
-                relu,
-                &mut ys[k * m + r0..k * m + r1],
-                ops,
-            );
-        }
-        r0 = r1;
+    for (h, hb) in bank {
+        assert_eq!(h.len(), m * n);
+        assert_eq!(hb.len(), m);
     }
+    tile_sweep(
+        m,
+        n,
+        bank.len(),
+        block_rows,
+        tiles,
+        |k, i, j0, j1, lanes| {
+            let (h, _) = &bank[k];
+            simd::dot_acc(lanes, &h[i * n + j0..i * n + j1], &beta[i * n + j0..i * n + j1]);
+        },
+        |k, i, acc| {
+            let (_, hb) = &bank[k];
+            // identical combine order to `dm_voter`
+            let mut v = acc + eta[i] + hb[i] * layer.sigma_b[i] + layer.mu_b[i];
+            if relu {
+                v = v.max(0.0);
+            }
+            ys[k * m + i] = v;
+        },
+    );
+    // Totals of `bank.len()` per-voter full sweeps — Table III rows 3–4
+    // (+bias): MN+M mul and M(N-1)+3M add per voter.
+    ops.mul(bank.len() * (m * n + m));
+    ops.add(bank.len() * (m * (n - 1) + 3 * m));
 }
 
-/// One full layer of standard voters, α-blocked.  Voter `k` transforms
-/// its own activation `xs[k·N..]` with its own `(H, Hb)`; the resident
-/// block here is the layer's σ/μ rows, shared by every voter.
+/// One full layer of standard voters, α-blocked with the register
+/// micro-kernel.  Voter `k` transforms its own activation `xs[k·N..]`
+/// with its own `(H, Hb)`; the resident tile is the layer's σ/μ rows,
+/// shared by every voter in the group.  Bit-identical to per-voter
+/// [`super::linear::standard_voter_rows`] sweeps for every geometry.
+#[allow(clippy::too_many_arguments)]
 pub fn standard_layer_blocked(
     layer: &LayerPosterior,
     xs: &[f32],
     bank: &[(Vec<f32>, Vec<f32>)],
     block_rows: usize,
+    tiles: TileGeometry,
     relu: bool,
     ys: &mut [f32],
     ops: &mut OpCounter,
@@ -101,23 +191,40 @@ pub fn standard_layer_blocked(
     assert!(block_rows >= 1, "block_rows must be positive");
     assert_eq!(xs.len(), bank.len() * n);
     assert_eq!(ys.len(), bank.len() * m);
-    let mut r0 = 0;
-    while r0 < m {
-        let r1 = (r0 + block_rows).min(m);
-        for (k, (h, hb)) in bank.iter().enumerate() {
-            standard_voter_rows(
-                layer,
-                &xs[k * n..(k + 1) * n],
-                &h[r0 * n..r1 * n],
-                &hb[r0..r1],
-                r0,
-                relu,
-                &mut ys[k * m + r0..k * m + r1],
-                ops,
-            );
-        }
-        r0 = r1;
+    for (h, hb) in bank {
+        assert_eq!(h.len(), m * n);
+        assert_eq!(hb.len(), m);
     }
+    tile_sweep(
+        m,
+        n,
+        bank.len(),
+        block_rows,
+        tiles,
+        |k, i, j0, j1, lanes| {
+            let (h, _) = &bank[k];
+            simd::std_dot_acc(
+                lanes,
+                &h[i * n + j0..i * n + j1],
+                &layer.sigma[i * n + j0..i * n + j1],
+                &layer.mu[i * n + j0..i * n + j1],
+                &xs[k * n + j0..k * n + j1],
+            );
+        },
+        |k, i, acc| {
+            let (_, hb) = &bank[k];
+            // identical combine order to `standard_voter_rows`
+            let mut v = acc + hb[i] * layer.sigma_b[i] + layer.mu_b[i];
+            if relu {
+                v = v.max(0.0);
+            }
+            ys[k * m + i] = v;
+        },
+    );
+    // Totals of `bank.len()` per-voter full sweeps — Table III upper
+    // block (+bias): 2MN+M mul and MN+M(N-1)+2M add per voter.
+    ops.mul(bank.len() * (2 * m * n + m));
+    ops.add(bank.len() * (m * n + m * (n - 1) + 2 * m));
 }
 
 /// Sweep layers `first..nl` with the fused standard kernel, ping-ponging
@@ -144,6 +251,7 @@ fn standard_tail<'s>(
             &cur[..t * dim],
             &banks[li],
             plan.block_rows[li],
+            plan.tiles,
             relu,
             &mut nxt[..t * l.m],
             ops,
@@ -186,6 +294,7 @@ pub fn execute_plan(
     scratch.ensure(plan);
     let EvalScratch { acts_a, acts_b, beta, eta } = scratch;
     let (mut cur, mut nxt) = (acts_a.as_mut_slice(), acts_b.as_mut_slice());
+    let (beta, eta) = (beta.as_mut_slice(), eta.as_mut_slice());
 
     match &plan.method {
         Method::Standard { t } => {
@@ -215,6 +324,7 @@ pub fn execute_plan(
                 de,
                 &banks[0],
                 plan.block_rows[0],
+                plan.tiles,
                 relu0,
                 &mut nxt[..t * l0.m],
                 ops,
@@ -251,6 +361,7 @@ pub fn execute_plan(
                         de,
                         &banks[li],
                         plan.block_rows[li],
+                        plan.tiles,
                         relu,
                         &mut nxt[p * tl * l.m..(p + 1) * tl * l.m],
                         ops,
@@ -267,10 +378,13 @@ pub fn execute_plan(
 
 // ---------------------------------------------------------------------------
 // 8-bit fixed-point kernels (the hardware datapath's functional model).
-// The DM kernel is banked and α-blocked exactly like `dm_layer_blocked`
-// (row-wise accumulation order untouched ⇒ bit-exact for every block);
+// The DM kernel is banked and α-blocked exactly like `dm_layer_blocked`;
 // the standard kernel is a plain per-voter sweep — that path is
-// voter-major with no resident bank to fuse.
+// voter-major with no resident bank to fuse.  All three run their inner
+// loops on the `nn::simd` integer primitives: integer accumulation is
+// associative, so the vectorized sweeps are *exact* (not merely
+// lane-stable) and `fixed_infer` stays bit-exact against the functional
+// model on every ISA.
 // ---------------------------------------------------------------------------
 
 /// Requantize a raw value from one format to another (arith shift +
@@ -294,13 +408,16 @@ pub fn q_precompute(layer: &QLayer, afmt: QFormat, x: &[i8], beta: &mut [i8], et
     assert_eq!(beta.len(), m * n);
     assert_eq!(eta.len(), m);
     for i in 0..m {
-        let mut acc: i32 = 0;
-        for j in 0..n {
-            let p = layer.sigma[i * n + j] as i32 * x[j] as i32; // wf+af frac
-            beta[i * n + j] =
-                requantize(p, QFormat { int_bits: 0, frac_bits: wf + af }, layer.wfmt);
-            acc += layer.mu[i * n + j] as i32 * x[j] as i32;
-        }
+        // β row: σ∘x products carry wf+af frac bits; realigning to the
+        // weight format is an arithmetic shift right by af plus the i8
+        // clamp — exactly `requantize`, vectorized.
+        simd::q_scale_store(
+            &layer.sigma[i * n..(i + 1) * n],
+            x,
+            af,
+            &mut beta[i * n..(i + 1) * n],
+        );
+        let acc = simd::q_dot(&layer.mu[i * n..(i + 1) * n], x);
         eta[i] = requantize(acc, QFormat { int_bits: 0, frac_bits: wf + af }, afmt);
     }
 }
@@ -328,14 +445,15 @@ pub fn q_standard_layer(
     assert_eq!(hb.len(), m);
     assert_eq!(y.len(), m);
     for i in 0..m {
-        let mut acc: i64 = 0; // 2·wf + af frac bits
-        for j in 0..n {
-            // w = h∘σ + μ, raw products carry 2·wf frac bits; re-align
-            // μ to 2·wf before the add.
-            let w2 = h[i * n + j] as i32 * layer.sigma[i * n + j] as i32
-                + ((layer.mu[i * n + j] as i32) << wf);
-            acc += w2 as i64 * x[j] as i64;
-        }
+        // w = h∘σ + μ with raw products at 2·wf frac bits (μ re-aligned
+        // before the add), row-swept against x with wide accumulation.
+        let mut acc: i64 = simd::q_std_dot(
+            &h[i * n..(i + 1) * n],
+            &layer.sigma[i * n..(i + 1) * n],
+            &layer.mu[i * n..(i + 1) * n],
+            x,
+            wf,
+        ); // 2·wf + af frac bits
         let b2 = hb[i] as i32 * layer.sigma_b[i] as i32 + ((layer.mu_b[i] as i32) << wf);
         acc += (b2 as i64) << af;
         let shifted = (acc >> (2 * wf)) as i32;
@@ -381,10 +499,9 @@ pub fn q_dm_layer_banked(
         let r1 = (r0 + block_rows).min(m);
         for (k, (h, hb)) in bank.iter().enumerate() {
             for i in r0..r1 {
-                let mut acc: i64 = 0; // 2·wf frac bits
-                for j in 0..n {
-                    acc += h[i * n + j] as i64 * beta[i * n + j] as i64;
-                }
+                // ⟨H, β⟩ at 2·wf frac bits: i8×i8 sums fit i32 exactly
+                // for every realistic width (q_dot asserts the bound)
+                let acc = simd::q_dot(&h[i * n..(i + 1) * n], &beta[i * n..(i + 1) * n]) as i64;
                 // η is at af frac; align everything to af for the sum
                 let z = (acc >> (2 * wf - af)) as i32;
                 let b2 =
@@ -406,6 +523,19 @@ pub fn q_dm_layer_banked(
 mod tests {
     use super::*;
     use crate::grng::uniform::{UniformSource, XorShift128Plus};
+    use crate::nn::linear::{dm_voter, standard_voter_rows};
+
+    /// Geometries the micro-kernel sweeps must be invariant to: the
+    /// default, single-element register tiles, lane-width columns and
+    /// deliberately over-large tiles (clamped by the kernel).
+    fn geometries() -> [TileGeometry; 4] {
+        [
+            TileGeometry::default(),
+            TileGeometry { col_tile: 8, row_tile: 1, voter_tile: 1 },
+            TileGeometry { col_tile: 16, row_tile: 2, voter_tile: 3 },
+            TileGeometry { col_tile: 4096, row_tile: 64, voter_tile: 64 },
+        ]
+    }
 
     fn layer(m: usize, n: usize, seed: u64) -> LayerPosterior {
         let mut r = XorShift128Plus::new(seed);
@@ -452,11 +582,23 @@ mod tests {
             dm_voter(&l, &beta, &eta, h, hb, 0, true, y, &mut want_ops);
         }
         for block in [1usize, 2, 3, 5, 7, 10] {
-            let mut got = vec![0.0; t * m];
-            let mut got_ops = OpCounter::default();
-            dm_layer_blocked(&l, &beta, &eta, &bank, block, true, &mut got, &mut got_ops);
-            assert_eq!(got, want, "block={block}");
-            assert_eq!(got_ops, want_ops, "block={block} ops");
+            for tiles in geometries() {
+                let mut got = vec![0.0; t * m];
+                let mut got_ops = OpCounter::default();
+                dm_layer_blocked(
+                    &l,
+                    &beta,
+                    &eta,
+                    &bank,
+                    block,
+                    tiles,
+                    true,
+                    &mut got,
+                    &mut got_ops,
+                );
+                assert_eq!(got, want, "block={block} {tiles:?}");
+                assert_eq!(got_ops, want_ops, "block={block} {tiles:?} ops");
+            }
         }
     }
 
@@ -483,11 +625,13 @@ mod tests {
             );
         }
         for block in [1usize, 2, 4, 9] {
-            let mut got = vec![0.0; t * m];
-            let mut got_ops = OpCounter::default();
-            standard_layer_blocked(&l, &xs, &bank, block, true, &mut got, &mut got_ops);
-            assert_eq!(got, want, "block={block}");
-            assert_eq!(got_ops, want_ops, "block={block} ops");
+            for tiles in geometries() {
+                let mut got = vec![0.0; t * m];
+                let mut got_ops = OpCounter::default();
+                standard_layer_blocked(&l, &xs, &bank, block, tiles, true, &mut got, &mut got_ops);
+                assert_eq!(got, want, "block={block} {tiles:?}");
+                assert_eq!(got_ops, want_ops, "block={block} {tiles:?} ops");
+            }
         }
     }
 
@@ -509,8 +653,11 @@ mod tests {
             let banks = model.sample_banks(&method, &mut g);
             let mut want_ops = OpCounter::default();
             let want = model.evaluate_with_banks(&x, &method, &banks, &mut want_ops);
-            for rows in [1usize, 2, 3, 5, 100] {
-                let plan = DataflowPlan::with_block_rows(&model, &method, rows);
+            for (gi, rows) in [1usize, 2, 3, 5, 100].into_iter().enumerate() {
+                // pair each row count with a different micro-kernel
+                // geometry — results must be invariant to both
+                let plan = DataflowPlan::with_block_rows(&model, &method, rows)
+                    .with_tiles(geometries()[gi % geometries().len()]);
                 let mut out = vec![0.0; plan.logit_floats()];
                 let mut ops = OpCounter::default();
                 execute_plan(&model, &plan, &x, &banks, None, &mut scratch, &mut out, &mut ops);

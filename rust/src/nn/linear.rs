@@ -5,9 +5,18 @@
 //! Optional instrumented op-counting feeds the Table III/IV validation —
 //! the *measured* MUL/ADD counts must match `opcount`'s analytic formulas
 //! exactly, which is asserted in the opcount tests.
+//!
+//! Inner dot products run on the lane-stable SIMD primitives of
+//! [`super::simd`]: element `j` accumulates into lane `j % LANES` and the
+//! lanes collapse through one fixed reduction tree, on every ISA — so the
+//! AVX2/NEON fast paths, the portable scalar fallback, *and* the
+//! column-tiled micro-kernel sweeps in `nn::kernels` all produce
+//! bit-identical results by construction.
 
 use crate::dataset::LayerPosterior;
 use crate::opcount::counter::OpCounter;
+
+use super::simd::{self, Lanes};
 
 /// Pre-compute stage (Algorithm 2 lines 1–2): `beta = sigma ∘ x` (row-wise
 /// element product), `eta = mu · x` (mat-vec).  Writes into caller-owned
@@ -27,12 +36,9 @@ pub fn precompute(
         let sig = layer.sigma_row(i);
         let mu = layer.mu_row(i);
         let brow = &mut beta[i * n..(i + 1) * n];
-        let mut acc = 0.0f32;
-        for j in 0..n {
-            brow[j] = sig[j] * x[j];
-            acc += mu[j] * x[j];
-        }
-        eta[i] = acc;
+        let mut lanes = Lanes::default();
+        simd::decomp_acc(&mut lanes, sig, mu, x, brow);
+        eta[i] = lanes.reduce();
     }
     // beta: MN mul; eta: MN mul + M(N-1) add — Table III rows 1–2.
     ops.mul(2 * m * n);
@@ -73,10 +79,7 @@ pub fn dm_voter(
     for i in 0..nrows {
         let hrow = &h[i * n..(i + 1) * n];
         let brow = &beta[i * n..(i + 1) * n];
-        let mut acc = 0.0f32;
-        for j in 0..n {
-            acc += hrow[j] * brow[j];
-        }
+        let acc = simd::dot(hrow, brow);
         let gi = row_offset + i;
         let mut v = acc + eta[i] + hb[i] * layer.sigma_b[gi] + layer.mu_b[gi];
         if relu {
@@ -120,11 +123,10 @@ pub fn standard_voter_rows(
         let sig = layer.sigma_row(gi);
         let mu = layer.mu_row(gi);
         let hrow = &h[i * n..(i + 1) * n];
-        let mut acc = 0.0f32;
-        for j in 0..n {
-            let w = hrow[j] * sig[j] + mu[j]; // scale-location transform
-            acc += w * x[j];
-        }
+        // w = H∘σ + μ fused into the mat-vec step, lane-stable
+        let mut lanes = Lanes::default();
+        simd::std_dot_acc(&mut lanes, hrow, sig, mu, x);
+        let acc = lanes.reduce();
         let mut v = acc + hb[i] * layer.sigma_b[gi] + layer.mu_b[gi];
         if relu {
             v = v.max(0.0);

@@ -22,6 +22,11 @@
 //! sharded cross-request cache of the deterministic (β, η) feature
 //! decompositions, so repeated inputs skip the μ-path GEMVs entirely
 //! while preserving bit-identical logits and logical op counts.
+//!
+//! [`simd`] is the vector substrate under all of it: lane-stable f32
+//! primitives (and exact integer ones) with one-time runtime dispatch to
+//! AVX2/NEON and a portable scalar fallback that is bit-identical by
+//! construction — `BAYESDM_FORCE_SCALAR=1` / `--force-scalar` pins it.
 
 pub mod batch;
 pub mod bnn;
@@ -30,10 +35,14 @@ pub mod fixed_infer;
 pub mod kernels;
 pub mod linear;
 pub mod plan;
+pub mod simd;
 
 pub use batch::{evaluate_batch, evaluate_batch_cached, evaluate_batch_planned, BatchResult};
 pub use bnn::{BnnModel, Method, UncertaintyBanks};
 pub use dmcache::{CacheConfig, CacheStats, CacheView, Decomp, DmCache};
 pub use kernels::{dm_layer_blocked, execute_plan, standard_layer_blocked};
 pub use linear::{dm_voter, precompute, standard_voter, standard_voter_rows};
-pub use plan::{alpha_block, DataflowPlan, EvalScratch, LogitBatch, LogitStack, ScratchPool};
+pub use plan::{
+    alpha_block, DataflowPlan, EvalScratch, LogitBatch, LogitStack, ScratchPool, TileGeometry,
+};
+pub use simd::{Isa, Lanes, LANES};

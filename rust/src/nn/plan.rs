@@ -22,6 +22,56 @@
 use std::sync::Mutex;
 
 use super::bnn::{BnnModel, Method};
+use super::simd::LANES;
+
+/// Hard cap on output rows in flight per voter in the register
+/// micro-kernel — bounds the stack-resident accumulator tile.
+pub const MAX_ROW_TILE: usize = 8;
+/// Hard cap on voters in flight per resident tile (same reason).
+pub const MAX_VOTER_TILE: usize = 8;
+
+/// Tile geometry of the SIMD micro-kernel (`nn::kernels`): how much of a
+/// layer is in flight per register tile.
+///
+/// * `col_tile` — N-dimension tile width in floats.  Always a multiple
+///   of [`LANES`], so a tile start never shifts the `j % LANES` lane
+///   assignment: column tiling is bit-identical to a whole-row sweep by
+///   construction (the lane sums carry across tiles).
+/// * `row_tile` — output rows accumulated together per voter, sharing
+///   the resident input/β tile.
+/// * `voter_tile` — voters fed together from one resident tile, the
+///   register-level analogue of the α block's voter fusion.
+///
+/// Geometry shapes locality only, never results — the blocked-parity
+/// suite sweeps it alongside α.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGeometry {
+    pub col_tile: usize,
+    pub row_tile: usize,
+    pub voter_tile: usize,
+}
+
+impl Default for TileGeometry {
+    fn default() -> Self {
+        // 512-float column tiles keep a 4-row β/H tile (~8 KiB) plus the
+        // in-flight H rows comfortably inside a 32 KiB L1.
+        Self { col_tile: 512, row_tile: 4, voter_tile: 4 }
+    }
+}
+
+impl TileGeometry {
+    /// The geometry with every field forced into its legal range:
+    /// `col_tile` a multiple of [`LANES`] (min one vector), the register
+    /// tiles within the stack-accumulator caps.  The kernels clamp
+    /// defensively too, so a hand-built plan cannot corrupt a sweep.
+    pub fn clamped(self) -> Self {
+        Self {
+            col_tile: (self.col_tile / LANES).max(1) * LANES,
+            row_tile: self.row_tile.clamp(1, MAX_ROW_TILE),
+            voter_tile: self.voter_tile.clamp(1, MAX_VOTER_TILE),
+        }
+    }
+}
 
 /// Row-block size for a fractional α (mirrors the Python AOT lowering's
 /// `_alpha_blocks`): the largest divisor of `m` not exceeding
@@ -52,6 +102,9 @@ pub struct DataflowPlan {
     /// Per-layer α row-block size, each in `1..=M` (non-divisors of M are
     /// allowed: the last block of a sweep is simply short).
     pub block_rows: Vec<usize>,
+    /// Micro-kernel tile geometry inside each α block (see
+    /// [`TileGeometry`]); results are identical for every geometry.
+    pub tiles: TileGeometry,
     /// Leaf voter count.
     pub voters: usize,
     /// Output dimension of the last layer.
@@ -158,11 +211,20 @@ impl DataflowPlan {
             draws,
             fan_in,
             block_rows,
+            tiles: TileGeometry::default().clamped(),
             act_capacity,
             beta_capacity,
             eta_capacity,
             model_fp: model.fingerprint(),
         }
+    }
+
+    /// The same plan with an explicit micro-kernel tile geometry
+    /// (clamped to its legal range) — a locality knob, never a results
+    /// knob.
+    pub fn with_tiles(mut self, tiles: TileGeometry) -> Self {
+        self.tiles = tiles.clamped();
+        self
     }
 
     /// Number of layers the plan spans.
@@ -200,22 +262,64 @@ impl DataflowPlan {
     }
 }
 
-/// Reusable per-worker evaluation arena: activation ping-pong buffers and
-/// (β, η) decomposition scratch.  Sized lazily by [`EvalScratch::ensure`]
-/// so one arena can serve plans of different shapes — growth is amortized
-/// to zero on a steady stream.
+/// One cache line of f32 storage — the allocation unit that gives
+/// [`AlignedF32`] its 64-byte base alignment without unstable allocator
+/// APIs.
+#[repr(C, align(64))]
+#[derive(Debug, Clone, Copy)]
+struct CacheLine([f32; 16]);
+
+/// A grow-only f32 buffer whose base address is 64-byte aligned, so the
+/// SIMD kernels' vector loads on scratch start on cache-line boundaries
+/// (row slices inside the buffer use unaligned loads — correctness never
+/// depends on N's divisibility; alignment is purely a fast path).
 #[derive(Debug, Default)]
-pub struct EvalScratch {
-    pub(crate) acts_a: Vec<f32>,
-    pub(crate) acts_b: Vec<f32>,
-    pub(crate) beta: Vec<f32>,
-    pub(crate) eta: Vec<f32>,
+pub struct AlignedF32 {
+    lines: Vec<CacheLine>,
+    len: usize,
 }
 
-fn grow(v: &mut Vec<f32>, len: usize) {
-    if v.len() < len {
-        v.resize(len, 0.0);
+impl AlignedF32 {
+    /// Floats currently addressable through the slice views.
+    pub fn len(&self) -> usize {
+        self.len
     }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Grow (never shrink) to at least `len` floats, zero-filling.
+    fn grow(&mut self, len: usize) {
+        if self.len < len {
+            self.lines.resize(len.div_ceil(16), CacheLine([0.0; 16]));
+            self.len = len;
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // Safety: `lines` owns ≥ ceil(len/16) CacheLines = ≥ `len`
+        // contiguous, initialized f32s; CacheLine is repr(C) over [f32; 16].
+        unsafe { std::slice::from_raw_parts(self.lines.as_ptr() as *const f32, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // Safety: as above, and `&mut self` guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr() as *mut f32, self.len) }
+    }
+}
+
+/// Reusable per-worker evaluation arena: activation ping-pong buffers and
+/// (β, η) decomposition scratch, all 64-byte aligned for the SIMD
+/// kernels.  Sized lazily by [`EvalScratch::ensure`] so one arena can
+/// serve plans of different shapes — growth is amortized to zero on a
+/// steady stream.
+#[derive(Debug, Default)]
+pub struct EvalScratch {
+    pub(crate) acts_a: AlignedF32,
+    pub(crate) acts_b: AlignedF32,
+    pub(crate) beta: AlignedF32,
+    pub(crate) eta: AlignedF32,
 }
 
 impl EvalScratch {
@@ -233,10 +337,10 @@ impl EvalScratch {
 
     /// Grow (never shrink) every buffer to `plan`'s requirements.
     pub fn ensure(&mut self, plan: &DataflowPlan) {
-        grow(&mut self.acts_a, plan.act_capacity());
-        grow(&mut self.acts_b, plan.act_capacity());
-        grow(&mut self.beta, plan.beta_capacity());
-        grow(&mut self.eta, plan.eta_capacity());
+        self.acts_a.grow(plan.act_capacity());
+        self.acts_b.grow(plan.act_capacity());
+        self.beta.grow(plan.beta_capacity());
+        self.eta.grow(plan.eta_capacity());
     }
 
     /// Total floats currently resident (capacity telemetry for tests).
@@ -457,6 +561,55 @@ mod tests {
         assert_eq!(p.block_rows, vec![7, 7, 5]);
         let p = DataflowPlan::with_block_rows(&m, &Method::Standard { t: 2 }, 0);
         assert_eq!(p.block_rows, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn tile_geometry_clamps_to_legal_ranges() {
+        let g = TileGeometry { col_tile: 13, row_tile: 0, voter_tile: 99 }.clamped();
+        assert_eq!(g.col_tile, LANES, "col_tile rounds down to a lane multiple");
+        assert_eq!(g.row_tile, 1);
+        assert_eq!(g.voter_tile, MAX_VOTER_TILE);
+        let d = TileGeometry::default().clamped();
+        assert_eq!(d, TileGeometry::default(), "the default is already legal");
+
+        let m = model();
+        let p = DataflowPlan::new(&m, &Method::Standard { t: 2 })
+            .with_tiles(TileGeometry { col_tile: 100, row_tile: 3, voter_tile: 2 });
+        assert_eq!(p.tiles, TileGeometry { col_tile: 96, row_tile: 3, voter_tile: 2 });
+    }
+
+    #[test]
+    fn scratch_buffers_are_cache_line_aligned() {
+        let m = model();
+        let plan = DataflowPlan::new(&m, &Method::DmBnn { schedule: vec![2, 2, 2] });
+        let s = EvalScratch::for_plan(&plan);
+        for (name, buf) in [
+            ("acts_a", s.acts_a.as_slice()),
+            ("acts_b", s.acts_b.as_slice()),
+            ("beta", s.beta.as_slice()),
+            ("eta", s.eta.as_slice()),
+        ] {
+            assert!(
+                buf.is_empty() || buf.as_ptr() as usize % 64 == 0,
+                "{name} must start on a cache line"
+            );
+        }
+    }
+
+    #[test]
+    fn aligned_buffer_grows_and_keeps_contents() {
+        let mut b = AlignedF32::default();
+        assert!(b.is_empty());
+        b.grow(5);
+        assert_eq!(b.len(), 5);
+        b.as_mut_slice().copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        b.grow(3); // never shrinks
+        assert_eq!(b.len(), 5);
+        b.grow(100); // reallocation keeps old floats, zero-fills the rest
+        assert_eq!(b.len(), 100);
+        assert_eq!(&b.as_slice()[..5], &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(b.as_slice()[5..].iter().all(|&v| v == 0.0));
+        assert_eq!(b.as_slice().as_ptr() as usize % 64, 0);
     }
 
     #[test]

@@ -1,0 +1,861 @@
+//! SIMD kernel primitives with **lane-stable reduction** and one-time
+//! runtime ISA dispatch — the vector substrate under `nn::linear` and
+//! `nn::kernels`.
+//!
+//! # The lane-stable schedule
+//!
+//! Every f32 accumulation in the kernel core runs over a fixed number of
+//! independent partial sums — [`LANES`] = 8 lanes, element `j` always
+//! landing in lane `j % LANES`, lanes reduced by the fixed tree in
+//! [`Lanes::reduce`] — *regardless of which ISA executes it*.  The
+//! portable scalar fallback, the AVX2 path and the NEON path all perform
+//! bit-for-bit the same sequence of IEEE mul/add operations per lane
+//! (vector backends load the carried lane sums into their accumulator
+//! registers first, so tiled calls chain exactly like scalar ones), so
+//! the three backends are **bit-identical by construction**, not by
+//! tolerance.  `FMA` is deliberately *not* used: a fused multiply-add
+//! rounds once where mul-then-add rounds twice, which would break parity
+//! with the portable path.
+//!
+//! Because lane assignment is `j % LANES`, splitting a sweep into column
+//! tiles preserves the schedule as long as every tile starts at a
+//! multiple of [`LANES`] — which `nn::plan::TileGeometry` guarantees.
+//! The integer (i8) primitives need no lane discipline at all: integer
+//! addition is associative, so any accumulation order is exact as long as
+//! intermediates cannot overflow (bounds are asserted below).
+//!
+//! # Dispatch
+//!
+//! The active ISA is detected once (`is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!`) and cached; `BAYESDM_FORCE_SCALAR=1`
+//! (or [`force_scalar`], the `--force-scalar` CLI flag) pins the portable
+//! path so a deployment can verify both paths agree on its own traffic.
+//! [`isa_label`] is surfaced through `coordinator::metrics` so the
+//! selected kernel is visible in serving metrics.  Flipping the ISA at
+//! runtime can never change results — only speed — which is also what
+//! lets the parity tests exercise both paths inside one process.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+/// Number of independent f32 partial sums every accumulation runs over.
+pub const LANES: usize = 8;
+
+/// Environment variable pinning the portable scalar path.
+pub const FORCE_SCALAR_ENV: &str = "BAYESDM_FORCE_SCALAR";
+
+/// The 8 lane partial sums of one in-flight dot product.  32-byte
+/// aligned so vector backends can spill/reload it without straddling.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[repr(C, align(32))]
+pub struct Lanes(pub [f32; LANES]);
+
+impl Lanes {
+    /// Collapse the lanes with the fixed reduction tree
+    /// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — the same tree on every
+    /// ISA, so the final rounding sequence never depends on dispatch.
+    #[inline]
+    pub fn reduce(&self) -> f32 {
+        let l = &self.0;
+        let s04 = l[0] + l[4];
+        let s15 = l[1] + l[5];
+        let s26 = l[2] + l[6];
+        let s37 = l[3] + l[7];
+        (s04 + s26) + (s15 + s37)
+    }
+}
+
+/// Instruction set the kernel primitives execute with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable lane-blocked scalar code — correct on every target.
+    Scalar,
+    /// 8-wide AVX2 (x86_64), selected by runtime feature detection.
+    Avx2,
+    /// 2×4-wide NEON (aarch64).
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+const ISA_UNINIT: u8 = 0;
+const ISA_SCALAR: u8 = 1;
+const ISA_AVX2: u8 = 2;
+const ISA_NEON: u8 = 3;
+
+/// Cached dispatch decision; 0 = not yet detected.
+static ACTIVE: AtomicU8 = AtomicU8::new(ISA_UNINIT);
+/// Whether scalar was *pinned* (env or CLI) rather than merely detected.
+static FORCED: AtomicBool = AtomicBool::new(false);
+
+fn encode(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => ISA_SCALAR,
+        Isa::Avx2 => ISA_AVX2,
+        Isa::Neon => ISA_NEON,
+    }
+}
+
+fn decode(v: u8) -> Isa {
+    match v {
+        ISA_AVX2 => Isa::Avx2,
+        ISA_NEON => Isa::Neon,
+        _ => Isa::Scalar,
+    }
+}
+
+/// Pure runtime capability probe (ignores the env/CLI override).
+pub fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Scalar
+}
+
+fn force_scalar_env() -> bool {
+    match std::env::var(FORCE_SCALAR_ENV) {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0"
+        }
+        Err(_) => false,
+    }
+}
+
+/// The ISA the primitives currently dispatch to.  Detected (and the
+/// `BAYESDM_FORCE_SCALAR` override applied) on first call, then cached.
+#[inline]
+pub fn active() -> Isa {
+    match ACTIVE.load(Ordering::Relaxed) {
+        ISA_UNINIT => {
+            let isa = if force_scalar_env() {
+                FORCED.store(true, Ordering::Relaxed);
+                Isa::Scalar
+            } else {
+                detect()
+            };
+            // A racing first call computes the same value: env + CPUID
+            // are stable, so last-writer-wins is benign.
+            ACTIVE.store(encode(isa), Ordering::Relaxed);
+            isa
+        }
+        v => decode(v),
+    }
+}
+
+/// Pin the portable scalar path for the rest of the process (the
+/// `--force-scalar` escape hatch).  Safe at any time: every backend is
+/// bit-identical, so flipping mid-flight can only change speed.
+pub fn force_scalar() {
+    FORCED.store(true, Ordering::Relaxed);
+    ACTIVE.store(ISA_SCALAR, Ordering::Relaxed);
+}
+
+/// Whether scalar was pinned by the env/CLI override (as opposed to
+/// being all the hardware offers).
+pub fn scalar_is_forced() -> bool {
+    FORCED.load(Ordering::Relaxed) && active() == Isa::Scalar
+}
+
+/// Select the dispatch target explicitly — `Isa::Scalar` or whatever
+/// [`detect`] reports; anything else would execute unsupported
+/// instructions and is rejected.  Meant for the parity tests and benches
+/// that compare both paths in one process; results are bit-identical
+/// either way, so concurrent callers are unaffected beyond speed.
+pub fn set_active(isa: Isa) {
+    assert!(
+        isa == Isa::Scalar || isa == detect(),
+        "cannot select {isa:?}: hardware supports {:?}",
+        detect()
+    );
+    if isa != Isa::Scalar {
+        FORCED.store(false, Ordering::Relaxed);
+    }
+    ACTIVE.store(encode(isa), Ordering::Relaxed);
+}
+
+/// Human-readable label of the active kernel path for metrics:
+/// `"avx2"`, `"neon"`, `"scalar"`, or `"scalar(forced)"` when the env or
+/// CLI override pinned it.
+pub fn isa_label() -> &'static str {
+    if scalar_is_forced() {
+        "scalar(forced)"
+    } else {
+        active().name()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 primitives.  Contract shared by every backend: element j of the
+// slice adds into lane (j % LANES), lanes are processed in increasing-j
+// order, the carried-in lane values seed the accumulation, and products
+// are rounded before the add (no FMA).
+// ---------------------------------------------------------------------------
+
+/// `lanes[j % LANES] += a[j] * b[j]` over the whole slice.
+#[inline]
+pub fn dot_acc(lanes: &mut Lanes, a: &[f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() == Isa::Avx2 {
+            return unsafe { avx2::dot_acc(lanes, a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if active() == Isa::Neon {
+            return unsafe { neon::dot_acc(lanes, a, b) };
+        }
+    }
+    scalar::dot_acc(lanes, a, b)
+}
+
+/// `lanes[j % LANES] += (h[j] * sig[j] + mu[j]) * x[j]` — the standard
+/// voter's fused scale-location transform and mat-vec step.
+#[inline]
+pub fn std_dot_acc(lanes: &mut Lanes, h: &[f32], sig: &[f32], mu: &[f32], x: &[f32]) {
+    debug_assert_eq!(h.len(), sig.len());
+    debug_assert_eq!(h.len(), mu.len());
+    debug_assert_eq!(h.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() == Isa::Avx2 {
+            return unsafe { avx2::std_dot_acc(lanes, h, sig, mu, x) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if active() == Isa::Neon {
+            return unsafe { neon::std_dot_acc(lanes, h, sig, mu, x) };
+        }
+    }
+    scalar::std_dot_acc(lanes, h, sig, mu, x)
+}
+
+/// DM precompute row step: `beta[j] = sig[j] * x[j]` (stored) and
+/// `lanes[j % LANES] += mu[j] * x[j]`.
+#[inline]
+pub fn decomp_acc(lanes: &mut Lanes, sig: &[f32], mu: &[f32], x: &[f32], beta: &mut [f32]) {
+    debug_assert_eq!(sig.len(), x.len());
+    debug_assert_eq!(mu.len(), x.len());
+    debug_assert_eq!(beta.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() == Isa::Avx2 {
+            return unsafe { avx2::decomp_acc(lanes, sig, mu, x, beta) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if active() == Isa::Neon {
+            return unsafe { neon::decomp_acc(lanes, sig, mu, x, beta) };
+        }
+    }
+    scalar::decomp_acc(lanes, sig, mu, x, beta)
+}
+
+/// Whole-row dot product: fresh lanes, accumulate, reduce.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = Lanes::default();
+    dot_acc(&mut lanes, a, b);
+    lanes.reduce()
+}
+
+// ---------------------------------------------------------------------------
+// i8 primitives (the fixed-point datapath).  Integer accumulation is
+// associative, so these are exact on every backend with no ordering
+// contract — only overflow bounds, which the asserts pin.
+// ---------------------------------------------------------------------------
+
+/// Exact `Σ a[j]·b[j]` of two i8 slices in i32.  Requires
+/// `len < 65536` so the mathematical sum (≤ len·127²) fits i32.
+#[inline]
+pub fn q_dot(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    assert!(a.len() < 1 << 16, "q_dot: width {} would overflow i32", a.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() == Isa::Avx2 {
+            return unsafe { avx2::q_dot(a, b) };
+        }
+    }
+    scalar::q_dot(a, b)
+}
+
+/// Exact `Σ (h[j]·sig[j] + (mu[j] << wf)) · x[j]` in i64 — the standard
+/// fixed-point voter's row sweep (`wf` ≤ 7, the weight fraction bits).
+#[inline]
+pub fn q_std_dot(h: &[i8], sig: &[i8], mu: &[i8], x: &[i8], wf: u32) -> i64 {
+    debug_assert_eq!(h.len(), sig.len());
+    debug_assert_eq!(h.len(), mu.len());
+    debug_assert_eq!(h.len(), x.len());
+    debug_assert!(wf <= 7);
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Per-lane i32 pair-sums stay clear of overflow only while
+        // (len/16) · 2 · 32640 · 128 < 2³¹ — cap the vector path inside
+        // that bound and fall back to the (equally exact) scalar sweep.
+        if active() == Isa::Avx2 && h.len() <= 4096 {
+            return unsafe { avx2::q_std_dot(h, sig, mu, x, wf) };
+        }
+    }
+    scalar::q_std_dot(h, sig, mu, x, wf)
+}
+
+/// Fixed-point β store: `beta[j] = sat_i8((sig[j]·x[j]) >> shift)` — the
+/// product is exact in i16, the arithmetic shift realigns `wf+af` →
+/// `wf` fraction bits and the write saturates, exactly as the datapath's
+/// barrel shifter + clamp would.
+#[inline]
+pub fn q_scale_store(sig: &[i8], x: &[i8], shift: u32, beta: &mut [i8]) {
+    debug_assert_eq!(sig.len(), x.len());
+    debug_assert_eq!(beta.len(), x.len());
+    debug_assert!(shift <= 15);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() == Isa::Avx2 {
+            return unsafe { avx2::q_scale_store(sig, x, shift, beta) };
+        }
+    }
+    scalar::q_scale_store(sig, x, shift, beta)
+}
+
+// ---------------------------------------------------------------------------
+// Portable scalar backend — the reference schedule every vector backend
+// must reproduce bit-for-bit.
+// ---------------------------------------------------------------------------
+
+pub(crate) mod scalar {
+    use super::{Lanes, LANES};
+
+    pub fn dot_acc(lanes: &mut Lanes, a: &[f32], b: &[f32]) {
+        let n = a.len();
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            let o = c * LANES;
+            for l in 0..LANES {
+                lanes.0[l] += a[o + l] * b[o + l];
+            }
+        }
+        for j in chunks * LANES..n {
+            lanes.0[j % LANES] += a[j] * b[j];
+        }
+    }
+
+    pub fn std_dot_acc(lanes: &mut Lanes, h: &[f32], sig: &[f32], mu: &[f32], x: &[f32]) {
+        let n = h.len();
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            let o = c * LANES;
+            for l in 0..LANES {
+                let w = h[o + l] * sig[o + l] + mu[o + l];
+                lanes.0[l] += w * x[o + l];
+            }
+        }
+        for j in chunks * LANES..n {
+            let w = h[j] * sig[j] + mu[j];
+            lanes.0[j % LANES] += w * x[j];
+        }
+    }
+
+    pub fn decomp_acc(lanes: &mut Lanes, sig: &[f32], mu: &[f32], x: &[f32], beta: &mut [f32]) {
+        let n = x.len();
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            let o = c * LANES;
+            for l in 0..LANES {
+                beta[o + l] = sig[o + l] * x[o + l];
+                lanes.0[l] += mu[o + l] * x[o + l];
+            }
+        }
+        for j in chunks * LANES..n {
+            beta[j] = sig[j] * x[j];
+            lanes.0[j % LANES] += mu[j] * x[j];
+        }
+    }
+
+    pub fn q_dot(a: &[i8], b: &[i8]) -> i32 {
+        let mut acc: i32 = 0;
+        for j in 0..a.len() {
+            acc += a[j] as i32 * b[j] as i32;
+        }
+        acc
+    }
+
+    pub fn q_std_dot(h: &[i8], sig: &[i8], mu: &[i8], x: &[i8], wf: u32) -> i64 {
+        let mut acc: i64 = 0;
+        for j in 0..h.len() {
+            let w2 = h[j] as i32 * sig[j] as i32 + ((mu[j] as i32) << wf);
+            acc += w2 as i64 * x[j] as i64;
+        }
+        acc
+    }
+
+    pub fn q_scale_store(sig: &[i8], x: &[i8], shift: u32, beta: &mut [i8]) {
+        for j in 0..x.len() {
+            let p = sig[j] as i32 * x[j] as i32;
+            beta[j] = (p >> shift).clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend (x86_64).  Lane l of the 8-wide register IS lane l of the
+// schedule: the carried lane sums are loaded into the accumulator before
+// the sweep and stored back after, so per-lane add order matches scalar
+// exactly.  mul-then-add only — no FMA (see module docs).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{Lanes, LANES};
+    use std::arch::x86_64::*;
+
+    /// Safety: caller guarantees AVX2 (dispatch checks CPUID) and equal
+    /// slice lengths (checked by the public wrappers).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_acc(lanes: &mut Lanes, a: &[f32], b: &[f32]) {
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut acc = _mm256_loadu_ps(lanes.0.as_ptr());
+        for c in 0..chunks {
+            let o = c * LANES;
+            let av = _mm256_loadu_ps(a.as_ptr().add(o));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(o));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+        }
+        _mm256_storeu_ps(lanes.0.as_mut_ptr(), acc);
+        for j in chunks * LANES..n {
+            lanes.0[j % LANES] += a[j] * b[j];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn std_dot_acc(
+        lanes: &mut Lanes,
+        h: &[f32],
+        sig: &[f32],
+        mu: &[f32],
+        x: &[f32],
+    ) {
+        let n = h.len();
+        let chunks = n / LANES;
+        let mut acc = _mm256_loadu_ps(lanes.0.as_ptr());
+        for c in 0..chunks {
+            let o = c * LANES;
+            let hv = _mm256_loadu_ps(h.as_ptr().add(o));
+            let sv = _mm256_loadu_ps(sig.as_ptr().add(o));
+            let mv = _mm256_loadu_ps(mu.as_ptr().add(o));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(o));
+            let wv = _mm256_add_ps(_mm256_mul_ps(hv, sv), mv);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+        }
+        _mm256_storeu_ps(lanes.0.as_mut_ptr(), acc);
+        for j in chunks * LANES..n {
+            let w = h[j] * sig[j] + mu[j];
+            lanes.0[j % LANES] += w * x[j];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn decomp_acc(
+        lanes: &mut Lanes,
+        sig: &[f32],
+        mu: &[f32],
+        x: &[f32],
+        beta: &mut [f32],
+    ) {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc = _mm256_loadu_ps(lanes.0.as_ptr());
+        for c in 0..chunks {
+            let o = c * LANES;
+            let sv = _mm256_loadu_ps(sig.as_ptr().add(o));
+            let mv = _mm256_loadu_ps(mu.as_ptr().add(o));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(o));
+            _mm256_storeu_ps(beta.as_mut_ptr().add(o), _mm256_mul_ps(sv, xv));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(mv, xv));
+        }
+        _mm256_storeu_ps(lanes.0.as_mut_ptr(), acc);
+        for j in chunks * LANES..n {
+            beta[j] = sig[j] * x[j];
+            lanes.0[j % LANES] += mu[j] * x[j];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn q_dot(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let chunks = n / 16;
+        // 8 i32 pair-sums; per lane ≤ (n/16)·2·127² < 2³¹ for n < 2¹⁶.
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let o = 16 * c;
+            let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(o) as *const __m128i));
+            let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(o) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        // n·127² < 2³⁰ so even the full i32 total cannot overflow here.
+        let mut total: i32 = lanes.iter().sum();
+        for j in chunks * 16..n {
+            total += a[j] as i32 * b[j] as i32;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn q_std_dot(h: &[i8], sig: &[i8], mu: &[i8], x: &[i8], wf: u32) -> i64 {
+        let n = h.len();
+        let chunks = n / 16;
+        let count = _mm_cvtsi32_si128(wf as i32);
+        let mut acc = _mm256_setzero_si256(); // 8 × i32 pair-sums
+        for c in 0..chunks {
+            let o = 16 * c;
+            let hv = _mm256_cvtepi8_epi16(_mm_loadu_si128(h.as_ptr().add(o) as *const __m128i));
+            let sv = _mm256_cvtepi8_epi16(_mm_loadu_si128(sig.as_ptr().add(o) as *const __m128i));
+            let mv = _mm256_cvtepi8_epi16(_mm_loadu_si128(mu.as_ptr().add(o) as *const __m128i));
+            let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(x.as_ptr().add(o) as *const __m128i));
+            // w2 = h·sig + (mu << wf): |h·sig| ≤ 127·128 and
+            // |mu << wf| ≤ 128·2⁷, so w2 fits i16 exactly for wf ≤ 7.
+            let wv = _mm256_add_epi16(_mm256_mullo_epi16(hv, sv), _mm256_sll_epi16(mv, count));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wv, xv));
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut total: i64 = lanes.iter().map(|&v| v as i64).sum();
+        for j in chunks * 16..n {
+            let w2 = h[j] as i32 * sig[j] as i32 + ((mu[j] as i32) << wf);
+            total += w2 as i64 * x[j] as i64;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn q_scale_store(sig: &[i8], x: &[i8], shift: u32, beta: &mut [i8]) {
+        let n = x.len();
+        let chunks = n / 16;
+        let count = _mm_cvtsi32_si128(shift as i32);
+        for c in 0..chunks {
+            let o = 16 * c;
+            let sv = _mm256_cvtepi8_epi16(_mm_loadu_si128(sig.as_ptr().add(o) as *const __m128i));
+            let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(x.as_ptr().add(o) as *const __m128i));
+            // exact i16 product, arithmetic shift, saturating pack to i8
+            let shifted = _mm256_sra_epi16(_mm256_mullo_epi16(sv, xv), count);
+            let lo = _mm256_castsi256_si128(shifted);
+            let hi = _mm256_extracti128_si256::<1>(shifted);
+            _mm_storeu_si128(beta.as_mut_ptr().add(o) as *mut __m128i, _mm_packs_epi16(lo, hi));
+        }
+        for j in chunks * 16..n {
+            let p = sig[j] as i32 * x[j] as i32;
+            beta[j] = (p >> shift).clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON backend (aarch64), f32 only: two 4-wide registers carry lanes
+// 0..3 and 4..7 of the schedule.  The i8 primitives use the scalar
+// backend on aarch64 — integer accumulation is exact there anyway.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{Lanes, LANES};
+    use std::arch::aarch64::*;
+
+    /// Safety: caller guarantees NEON (dispatch checks the feature) and
+    /// equal slice lengths (checked by the public wrappers).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_acc(lanes: &mut Lanes, a: &[f32], b: &[f32]) {
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut acc0 = vld1q_f32(lanes.0.as_ptr());
+        let mut acc1 = vld1q_f32(lanes.0.as_ptr().add(4));
+        for c in 0..chunks {
+            let o = c * LANES;
+            let a0 = vld1q_f32(a.as_ptr().add(o));
+            let a1 = vld1q_f32(a.as_ptr().add(o + 4));
+            let b0 = vld1q_f32(b.as_ptr().add(o));
+            let b1 = vld1q_f32(b.as_ptr().add(o + 4));
+            acc0 = vaddq_f32(acc0, vmulq_f32(a0, b0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(a1, b1));
+        }
+        vst1q_f32(lanes.0.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.0.as_mut_ptr().add(4), acc1);
+        for j in chunks * LANES..n {
+            lanes.0[j % LANES] += a[j] * b[j];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn std_dot_acc(
+        lanes: &mut Lanes,
+        h: &[f32],
+        sig: &[f32],
+        mu: &[f32],
+        x: &[f32],
+    ) {
+        let n = h.len();
+        let chunks = n / LANES;
+        let mut acc0 = vld1q_f32(lanes.0.as_ptr());
+        let mut acc1 = vld1q_f32(lanes.0.as_ptr().add(4));
+        for c in 0..chunks {
+            let o = c * LANES;
+            let w0 = vaddq_f32(
+                vmulq_f32(vld1q_f32(h.as_ptr().add(o)), vld1q_f32(sig.as_ptr().add(o))),
+                vld1q_f32(mu.as_ptr().add(o)),
+            );
+            let w1 = vaddq_f32(
+                vmulq_f32(vld1q_f32(h.as_ptr().add(o + 4)), vld1q_f32(sig.as_ptr().add(o + 4))),
+                vld1q_f32(mu.as_ptr().add(o + 4)),
+            );
+            acc0 = vaddq_f32(acc0, vmulq_f32(w0, vld1q_f32(x.as_ptr().add(o))));
+            acc1 = vaddq_f32(acc1, vmulq_f32(w1, vld1q_f32(x.as_ptr().add(o + 4))));
+        }
+        vst1q_f32(lanes.0.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.0.as_mut_ptr().add(4), acc1);
+        for j in chunks * LANES..n {
+            let w = h[j] * sig[j] + mu[j];
+            lanes.0[j % LANES] += w * x[j];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn decomp_acc(
+        lanes: &mut Lanes,
+        sig: &[f32],
+        mu: &[f32],
+        x: &[f32],
+        beta: &mut [f32],
+    ) {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc0 = vld1q_f32(lanes.0.as_ptr());
+        let mut acc1 = vld1q_f32(lanes.0.as_ptr().add(4));
+        for c in 0..chunks {
+            let o = c * LANES;
+            let x0 = vld1q_f32(x.as_ptr().add(o));
+            let x1 = vld1q_f32(x.as_ptr().add(o + 4));
+            vst1q_f32(beta.as_mut_ptr().add(o), vmulq_f32(vld1q_f32(sig.as_ptr().add(o)), x0));
+            vst1q_f32(
+                beta.as_mut_ptr().add(o + 4),
+                vmulq_f32(vld1q_f32(sig.as_ptr().add(o + 4)), x1),
+            );
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(mu.as_ptr().add(o)), x0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(mu.as_ptr().add(o + 4)), x1));
+        }
+        vst1q_f32(lanes.0.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.0.as_mut_ptr().add(4), acc1);
+        for j in chunks * LANES..n {
+            beta[j] = sig[j] * x[j];
+            lanes.0[j % LANES] += mu[j] * x[j];
+        }
+    }
+}
+
+/// Serializes tests that flip the dispatch via [`set_active`].  Flipping
+/// can never change *results* (the whole point of lane stability), but
+/// tests that assert on the active-ISA *state itself* need the flippers
+/// serialized.  Shared with `fixed_infer`'s ISA-invariance test.
+#[cfg(test)]
+pub(crate) static TEST_ISA_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::uniform::{UniformSource, XorShift128Plus};
+
+    fn isa_guard() -> std::sync::MutexGuard<'static, ()> {
+        // a panicking sibling must not cascade: recover from poisoning
+        TEST_ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn randv(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = XorShift128Plus::new(seed);
+        (0..len).map(|_| r.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    fn randq(len: usize, seed: u64) -> Vec<i8> {
+        let mut r = XorShift128Plus::new(seed);
+        (0..len).map(|_| (r.next_u64() % 256) as u8 as i8).collect()
+    }
+
+    /// Sweep widths around every chunk boundary the backends care about.
+    const WIDTHS: [usize; 12] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 63, 64, 65];
+
+    #[test]
+    fn dispatched_f32_primitives_match_scalar_bitwise() {
+        let _g = isa_guard();
+        let prev = active();
+        set_active(detect()); // the widest path the hardware offers
+        for &n in &WIDTHS {
+            let (a, b, c, d) = (randv(n, 1), randv(n, 2), randv(n, 3), randv(n, 4));
+
+            let mut want = Lanes::default();
+            scalar::dot_acc(&mut want, &a, &b);
+            let mut got = Lanes::default();
+            dot_acc(&mut got, &a, &b);
+            assert_eq!(got, want, "dot n={n}");
+
+            let mut want = Lanes::default();
+            scalar::std_dot_acc(&mut want, &a, &b, &c, &d);
+            let mut got = Lanes::default();
+            std_dot_acc(&mut got, &a, &b, &c, &d);
+            assert_eq!(got, want, "std_dot n={n}");
+
+            let mut want = Lanes::default();
+            let mut beta_want = vec![0.0f32; n];
+            scalar::decomp_acc(&mut want, &a, &b, &c, &mut beta_want);
+            let mut got = Lanes::default();
+            let mut beta_got = vec![0.0f32; n];
+            decomp_acc(&mut got, &a, &b, &c, &mut beta_got);
+            assert_eq!(got, want, "decomp n={n}");
+            assert_eq!(beta_got, beta_want, "decomp beta n={n}");
+        }
+        set_active(prev);
+    }
+
+    /// The load-bearing property for N tiling: accumulating a row in
+    /// LANES-aligned tiles is bit-identical to one whole-row call, with
+    /// carried lane sums chaining across tiles on every backend.
+    #[test]
+    fn tiled_accumulation_matches_whole_row_bitwise() {
+        let _g = isa_guard();
+        let prev = active();
+        for isa in [Isa::Scalar, detect()] {
+            set_active(isa);
+            for &n in &[5usize, 8, 24, 65, 200] {
+                let (a, b) = (randv(n, 10), randv(n, 11));
+                let mut whole = Lanes::default();
+                dot_acc(&mut whole, &a, &b);
+                for tile in [8usize, 16, 64] {
+                    let mut lanes = Lanes::default();
+                    let mut j0 = 0;
+                    while j0 < n {
+                        let j1 = (j0 + tile).min(n);
+                        dot_acc(&mut lanes, &a[j0..j1], &b[j0..j1]);
+                        j0 = j1;
+                    }
+                    assert_eq!(lanes, whole, "{isa:?} n={n} tile={tile}");
+                    assert_eq!(lanes.reduce().to_bits(), whole.reduce().to_bits());
+                }
+            }
+        }
+        set_active(prev);
+    }
+
+    #[test]
+    fn reduce_tree_is_the_documented_fixed_shape() {
+        let l = Lanes([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let want = ((1.0f32 + 5.0) + (3.0 + 7.0)) + ((2.0 + 6.0) + (4.0 + 8.0));
+        assert_eq!(l.reduce().to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn integer_primitives_match_scalar_exactly() {
+        let _g = isa_guard();
+        let prev = active();
+        set_active(detect());
+        for &n in &WIDTHS {
+            let (a, b, c, d) = (randq(n, 5), randq(n, 6), randq(n, 7), randq(n, 8));
+            assert_eq!(q_dot(&a, &b), scalar::q_dot(&a, &b), "q_dot n={n}");
+            for wf in [3u32, 5, 7] {
+                assert_eq!(
+                    q_std_dot(&a, &b, &c, &d, wf),
+                    scalar::q_std_dot(&a, &b, &c, &d, wf),
+                    "q_std_dot n={n} wf={wf}"
+                );
+            }
+            for shift in [0u32, 3, 5] {
+                let mut want = vec![0i8; n];
+                scalar::q_scale_store(&a, &b, shift, &mut want);
+                let mut got = vec![0i8; n];
+                q_scale_store(&a, &b, shift, &mut got);
+                assert_eq!(got, want, "q_scale_store n={n} shift={shift}");
+            }
+        }
+        set_active(prev);
+    }
+
+    #[test]
+    fn q_scale_store_saturates_like_requantize() {
+        // -128 · -128 = 16384; >> 0 saturates to 127, >> 7 = 128 → 127.
+        let sig = vec![-128i8; 4];
+        let x = vec![-128i8; 4];
+        let mut beta = vec![0i8; 4];
+        q_scale_store(&sig, &x, 0, &mut beta);
+        assert_eq!(beta, vec![127i8; 4]);
+        q_scale_store(&sig, &x, 7, &mut beta);
+        assert_eq!(beta, vec![127i8; 4]);
+        // and the negative rail: -128·127 = -16256 >> 5 = -508 → -128
+        let x = vec![127i8; 4];
+        q_scale_store(&sig, &x, 5, &mut beta);
+        assert_eq!(beta, vec![-128i8; 4]);
+    }
+
+    #[test]
+    fn nan_inputs_propagate_identically_across_backends() {
+        let _g = isa_guard();
+        let prev = active();
+        let mut a = randv(33, 20);
+        let b = randv(33, 21);
+        a[5] = f32::NAN;
+        a[32] = f32::NAN;
+        set_active(Isa::Scalar);
+        let scalar_bits = dot(&a, &b).to_bits();
+        set_active(detect());
+        let vec_bits = dot(&a, &b).to_bits();
+        assert_eq!(scalar_bits, vec_bits, "NaN payloads must match bit-for-bit");
+        set_active(prev);
+    }
+
+    #[test]
+    fn detection_and_labels_are_consistent() {
+        let _g = isa_guard();
+        let isa = active();
+        assert!(matches!(isa, Isa::Scalar | Isa::Avx2 | Isa::Neon));
+        // detect() never reports an ISA foreign to the build target
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_ne!(detect(), Isa::Avx2);
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_ne!(detect(), Isa::Neon);
+        // set_active round-trips between scalar and the detected ISA
+        let prev = active();
+        set_active(Isa::Scalar);
+        assert_eq!(active(), Isa::Scalar);
+        set_active(detect());
+        assert_eq!(active(), detect());
+        set_active(prev);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot select")]
+    fn unsupported_isa_is_rejected() {
+        // at most one of these is supported on any one target
+        if detect() == Isa::Avx2 {
+            set_active(Isa::Neon);
+        } else {
+            set_active(Isa::Avx2);
+        }
+    }
+}

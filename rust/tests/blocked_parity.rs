@@ -8,6 +8,14 @@
 //! semantics.
 //!
 //! Zero artifact dependencies: everything runs on the synthetic posterior.
+//!
+//! The SIMD section extends the same contract across the dispatch axis:
+//! the runtime-detected vector path and the forced-scalar path must be
+//! bit-identical — logits *and* logical op counts — over widths that are
+//! not lane multiples, all three methods, cache on/off, and NaN logits
+//! flowing through the `total_cmp` argmax.  Flipping the dispatch at
+//! runtime is safe by the same contract, which is what lets these tests
+//! exercise both paths in one process.
 
 use bayesdm::grng::default_grng;
 use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
@@ -15,11 +23,26 @@ use bayesdm::nn::batch::{evaluate_batch, evaluate_batch_planned};
 use bayesdm::nn::bnn::{BnnModel, Method};
 use bayesdm::nn::dmcache::{CacheConfig, CacheView, DmCache};
 use bayesdm::nn::kernels::execute_plan;
-use bayesdm::nn::plan::{DataflowPlan, EvalScratch, ScratchPool};
+use bayesdm::nn::linear::argmax;
+use bayesdm::nn::plan::{DataflowPlan, EvalScratch, ScratchPool, TileGeometry};
+use bayesdm::nn::simd::{self, Isa};
 use bayesdm::opcount::OpCounter;
 
 const SEED: u64 = 0xB10C_CADE;
 const ARCH: [usize; 4] = [20, 16, 10, 6];
+
+/// Serializes the tests that flip the process-global SIMD dispatch:
+/// without it, a concurrent sibling's `set_active(detect())` could land
+/// between a test's `set_active(Isa::Scalar)` and its evaluation,
+/// silently turning the scalar-vs-vector comparison into vector-vs-
+/// vector.  (Results would still be identical — that's the contract —
+/// but the comparison would be vacuous.)
+static ISA_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn isa_guard() -> std::sync::MutexGuard<'static, ()> {
+    // a panicking sibling must not cascade: recover from poisoning
+    ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn model() -> BnnModel {
     BnnModel::synthetic(&ARCH, 0xAB)
@@ -181,6 +204,93 @@ fn blocked_op_counts_equal_analytic_model() {
             assert_eq!(ops.adds, want.adds, "{method:?} rows={rows}");
         }
     }
+}
+
+/// SIMD vs forced-scalar bit parity over layer widths that straddle the
+/// lane count (N ∈ {1, 7, 8, 9, 63, 64, 65}), all three methods, cache
+/// on and off.  On scalar-only hardware both rungs run the same code and
+/// the test degenerates to a (still valid) self-comparison.
+#[test]
+fn simd_and_forced_scalar_are_bit_identical_across_widths() {
+    let _g = isa_guard();
+    let prev = simd::active();
+    for n in [1usize, 7, 8, 9, 63, 64, 65] {
+        let arch = [n, 9, 6];
+        let model = BnnModel::synthetic(&arch, 0x51AD + n as u64);
+        let mut r = XorShift128Plus::new(n as u64 + 1);
+        let xs: Vec<Vec<f32>> = (0..6).map(|_| (0..n).map(|_| r.next_f32()).collect()).collect();
+        for method in [
+            Method::Standard { t: 4 },
+            Method::Hybrid { t: 4 },
+            Method::DmBnn { schedule: vec![3, 2] },
+        ] {
+            // small α blocks + a deliberately odd micro-geometry, so the
+            // tiled code paths (not just full rows) are what's compared
+            let plan = DataflowPlan::with_block_rows(&model, &method, 4)
+                .with_tiles(TileGeometry { col_tile: 8, row_tile: 2, voter_tile: 3 });
+            for cached in [false, true] {
+                let cache = DmCache::new(&CacheConfig::with_mb(8));
+                let run = |isa: Isa| {
+                    simd::set_active(isa);
+                    let view = cached.then(|| CacheView::new(&cache, model.fingerprint()));
+                    let mut g = default_grng(SEED);
+                    evaluate_batch_planned(&model, &plan, &xs, &mut g, 2, view, None)
+                };
+                let scalar = run(Isa::Scalar);
+                let vector = run(simd::detect());
+                let tag = format!("n={n} {method:?} cached={cached}");
+                assert_eq!(scalar.logits, vector.logits, "{tag}");
+                // logical counts only: the vector round re-reads the
+                // cache the scalar round warmed, so `*_avoided` differs
+                assert_eq!(scalar.ops.muls, vector.ops.muls, "{tag}");
+                assert_eq!(scalar.ops.adds, vector.ops.adds, "{tag}");
+            }
+        }
+    }
+    simd::set_active(prev);
+}
+
+/// NaN logits cross the ISA boundary bit-for-bit and the `total_cmp`
+/// argmax picks the same deterministic winner on both paths.  A
+/// single-layer model keeps the NaN alive to the logits (hidden-layer
+/// ReLU — `max(NaN, 0) = 0` — would scrub it).
+#[test]
+fn nan_logits_are_isa_invariant_through_total_cmp_argmax() {
+    let _g = isa_guard();
+    let prev = simd::active();
+    let model = BnnModel::synthetic(&[20, 6], 0x4A4);
+    let mut xs = inputs(3, 99); // ARCH[0] == the single layer's N == 20
+    xs[0][3] = f32::NAN;
+    xs[2][0] = f32::NAN;
+    for method in [
+        Method::Standard { t: 3 },
+        Method::Hybrid { t: 3 },
+        Method::DmBnn { schedule: vec![3] },
+    ] {
+        let plan = DataflowPlan::with_block_rows(&model, &method, 4);
+        let mut outcomes = Vec::new();
+        for isa in [Isa::Scalar, simd::detect()] {
+            simd::set_active(isa);
+            let mut g = default_grng(SEED);
+            let got = evaluate_batch_planned(&model, &plan, &xs, &mut g, 1, None, None);
+            let bits: Vec<u32> = (0..got.logits.len())
+                .flat_map(|i| {
+                    got.logits.input(i).flat().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                })
+                .collect();
+            let winners: Vec<usize> =
+                (0..got.logits.len()).map(|i| argmax(got.logits.input(i).flat())).collect();
+            outcomes.push((bits, winners));
+        }
+        let tag = format!("{method:?}");
+        assert_eq!(outcomes[0].0, outcomes[1].0, "{tag}: logit bit patterns");
+        assert_eq!(outcomes[0].1, outcomes[1].1, "{tag}: argmax winners");
+        assert!(
+            outcomes[0].0.iter().any(|&b| f32::from_bits(b).is_nan()),
+            "{tag}: a NaN must actually reach the logits for this test to bite"
+        );
+    }
+    simd::set_active(prev);
 }
 
 /// Steady-state arena discipline: a pooled batch run parks its arenas
