@@ -1,0 +1,207 @@
+//! Bench: cluster serving — shard-count × duplicate-rate × memoization
+//! sweep over a synthetic request stream, through `ClusterRouter`.
+//!
+//! Two acceptance shapes (guarded by the host's core count where the win
+//! *is* the cores):
+//!
+//! * at 0% duplicates, 4 shards sustain ≥ 1.5× the aggregate throughput
+//!   of 1 shard (shard workers run requests concurrently; asserted when
+//!   the host has ≥ 4 cores);
+//! * at 90% duplicates with response memoization on, the warm 4-shard
+//!   deployment sustains ≥ 3× the memo-less 1-shard baseline (memo hits
+//!   skip the entire voter sweep, so this does not depend on core count).
+//!
+//! Every measured configuration is asserted bit-identical to the 1-shard
+//! memo-less baseline first, then timed.  Emits `BENCH_cluster.json`.
+
+mod common;
+
+use std::time::Duration;
+
+use bayesdm::cluster::{ClusterRouter, MemoConfig};
+use bayesdm::coordinator::{CacheConfig, EngineConfig, SeedSchedule};
+use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+use bayesdm::nn::bnn::{BnnModel, Method};
+use bayesdm::util::bench::{bench_for, header, Measurement};
+use bayesdm::MNIST_ARCH;
+
+const POOL: usize = 4; // hot images
+const REQS: usize = 64; // requests per iteration
+const SEED: u64 = 0xC1057E8;
+
+struct Stream {
+    pool: Vec<Vec<f32>>,
+    rng: XorShift128Plus,
+    rate_pct: usize,
+}
+
+impl Stream {
+    fn new(rate_pct: usize) -> Self {
+        let mut rng = XorShift128Plus::new(0xF00D);
+        let dim = MNIST_ARCH[0];
+        let pool = (0..POOL)
+            .map(|_| (0..dim).map(|_| rng.next_f32()).collect())
+            .collect();
+        Self { pool, rng, rate_pct }
+    }
+
+    /// Next request set: `rate_pct`% of slots cycle the hot pool, the
+    /// rest are fresh never-seen images (honest churn against the memo).
+    fn next_requests(&mut self) -> Vec<Vec<f32>> {
+        let dim = MNIST_ARCH[0];
+        (0..REQS)
+            .map(|slot| {
+                if slot * 100 < self.rate_pct * REQS {
+                    self.pool[slot % POOL].clone()
+                } else {
+                    (0..dim).map(|_| self.rng.next_f32()).collect()
+                }
+            })
+            .collect()
+    }
+}
+
+fn router(shards: usize, memo: MemoConfig) -> ClusterRouter {
+    ClusterRouter::new(
+        BnnModel::synthetic(&MNIST_ARCH, 0x7A57E),
+        EngineConfig {
+            workers: 1,
+            seed: SEED,
+            cache: CacheConfig::disabled(),
+            seed_schedule: SeedSchedule::ContentHash,
+            alpha: 1.0,
+            shards,
+            memo,
+            snapshot: None,
+        },
+    )
+}
+
+fn run_stream(r: &ClusterRouter, method: &Method, stream: &mut Stream) {
+    let xs = stream.next_requests();
+    std::hint::black_box(r.evaluate(&xs, method).expect("cluster evaluate"));
+}
+
+fn inputs_per_sec(m: &Measurement) -> f64 {
+    REQS as f64 / m.mean.as_secs_f64()
+}
+
+fn main() {
+    header("Cluster serving — shard-count × duplicate-rate × memo sweep");
+    let method = Method::DmBnn { schedule: vec![2, 2, 2] };
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!(
+        "arch {MNIST_ARCH:?}, dm 2x2x2, {REQS} requests/iter, hot pool {POOL}, {cores} cores\n"
+    );
+
+    // Parity spot-check before timing anything: shard count and memo are
+    // invisible in the results.
+    {
+        let base = router(1, MemoConfig::disabled());
+        let wide = router(4, MemoConfig::with_mb(32));
+        let mut sa = Stream::new(90);
+        let mut sb = Stream::new(90);
+        for round in 0..2 {
+            let xs = sa.next_requests();
+            let ys = sb.next_requests();
+            let a = base.evaluate(&xs, &method).unwrap();
+            let b = wide.evaluate(&ys, &method).unwrap();
+            assert_eq!(a.logits, b.logits, "round {round}: sharding/memo changed results");
+            assert_eq!(a.ops.muls, b.ops.muls, "round {round}: logical muls moved");
+            assert_eq!(a.ops.adds, b.ops.adds, "round {round}: logical adds moved");
+        }
+        println!("parity: 4-shard memoized logits and logical op counts bit-identical\n");
+    }
+
+    let budget = Duration::from_millis(600);
+    let mut rows: Vec<String> = Vec::new();
+    let row = |shards: usize, memo_mb: usize, rate: usize, ips: f64, speedup: f64| {
+        format!(
+            "{{\"shards\": {shards}, \"memo_mb\": {memo_mb}, \"duplicate_rate_pct\": {rate}, \
+             \"inputs_per_sec\": {ips:.1}, \"speedup_vs_1shard\": {speedup:.3}}}"
+        )
+    };
+
+    // Leg 1 — 0% duplicates: the win is shard parallelism.
+    println!("duplicate rate 0% (shard scaling):");
+    let r1 = router(1, MemoConfig::disabled());
+    let mut s = Stream::new(0);
+    let m1 = bench_for("1 shard          rate=0%", budget, || run_stream(&r1, &method, &mut s));
+    let base_ips = inputs_per_sec(&m1);
+    rows.push(row(1, 0, 0, base_ips, 1.0));
+    let mut scale_speedup = None;
+    for shards in [2usize, 4] {
+        let r = router(shards, MemoConfig::disabled());
+        let mut s = Stream::new(0);
+        let m = bench_for(&format!("{shards} shards         rate=0%"), budget, || {
+            run_stream(&r, &method, &mut s)
+        });
+        let ips = inputs_per_sec(&m);
+        let speedup = ips / base_ips;
+        println!(
+            "  {shards} shards: {ips:>9.1} in/s | 1 shard {base_ips:>9.1} in/s | {speedup:>5.2}x"
+        );
+        rows.push(row(shards, 0, 0, ips, speedup));
+        if shards == 4 {
+            scale_speedup = Some(speedup);
+        }
+    }
+    println!();
+
+    // Leg 2 — 90% duplicates, memo on: the win is the skipped sweep.
+    println!("duplicate rate 90% (memoization):");
+    let r1 = router(1, MemoConfig::disabled());
+    let mut s = Stream::new(90);
+    let m1 = bench_for("1 shard  no memo rate=90%", budget, || run_stream(&r1, &method, &mut s));
+    let dup_base_ips = inputs_per_sec(&m1);
+    rows.push(row(1, 0, 90, dup_base_ips, 1.0));
+    let memo_mb = 32usize;
+    let rm = router(4, MemoConfig::with_mb(memo_mb));
+    let mut s = Stream::new(90);
+    run_stream(&rm, &method, &mut s); // warm the hot-pool responses
+    let mm = bench_for("4 shards 32 MiB  rate=90%", budget, || run_stream(&rm, &method, &mut s));
+    let memo_ips = inputs_per_sec(&mm);
+    let memo_speedup = memo_ips / dup_base_ips;
+    let stats = rm.metrics_summary().memo.expect("memo enabled");
+    println!(
+        "  4 shards + memo: {memo_ips:>9.1} in/s | baseline {dup_base_ips:>9.1} in/s | \
+         {memo_speedup:>5.2}x | memo[{stats}]"
+    );
+    rows.push(row(4, memo_mb, 90, memo_ips, memo_speedup));
+    println!();
+
+    let scale_speedup = scale_speedup.expect("4-shard leg measured");
+    common::emit_bench_json(
+        "cluster",
+        &common::json_doc(
+            "cluster",
+            &[
+                ("requests_per_iter", REQS.to_string()),
+                ("cores", cores.to_string()),
+                ("shard_speedup_4x_rate0", format!("{scale_speedup:.3}")),
+                ("memo_speedup_4x_rate90", format!("{memo_speedup:.3}")),
+            ],
+            &rows,
+        ),
+    );
+
+    if cores >= 4 {
+        assert!(
+            scale_speedup >= 1.5,
+            "acceptance: 4 shards must be >= 1.5x 1 shard at 0% duplicates on a \
+             {cores}-core host, measured {scale_speedup:.2}x"
+        );
+        println!("OK: >= 1.5x aggregate throughput for 4 shards at 0% duplicates");
+    } else {
+        println!(
+            "note: {cores} cores < 4 — shard-scaling assertion skipped \
+             (measured {scale_speedup:.2}x)"
+        );
+    }
+    assert!(
+        memo_speedup >= 3.0,
+        "acceptance: warm memo on the 90%-duplicate stream must be >= 3x the \
+         memo-less 1-shard baseline, measured {memo_speedup:.2}x"
+    );
+    println!("OK: >= 3x on the 90%-duplicate stream with memoization on");
+}

@@ -1,0 +1,146 @@
+//! The decomposition cache as a first-class shared service.
+//!
+//! A single-engine deployment owns a private `DmCache`; N engines each
+//! owning one would duplicate every hot (β, η) entry N times and split the
+//! operator's byte budget into N fixed silos.  [`CacheService`] instead
+//! builds **one** `DmCache` — one byte budget, one set of mutex shards —
+//! and hands each engine a [`CacheLease`] over it.
+//!
+//! # Why sharing beats partitioning
+//!
+//! The cache's internal mutex shards are selected by key hash, not by
+//! engine, so N engines probing one shared cache contend exactly as much
+//! as N request threads probing a private cache did — the 16-way shard
+//! partition is *re-partitioned across engines* rather than duplicated
+//! per engine.  Capacity-wise, a shared budget B behaves like the best
+//! case of per-engine budgets B/N: a hot entry occupies one slot total
+//! instead of one per engine that sees it, and skewed traffic (all hot
+//! inputs routed to few engines) cannot strand budget in idle silos.
+//!
+//! # Attribution
+//!
+//! The shared cache's counters are the aggregate.  Each lease carries its
+//! own [`ClientCounters`], so hit/miss/avoided traffic is additionally
+//! attributed per engine and surfaces as the per-shard breakdown in
+//! `MetricsSummary` (see [`ShardBreakdown`]).
+
+use std::sync::Arc;
+
+use crate::nn::dmcache::{
+    AttributionStats, CacheConfig, CacheLease, CacheStats, ClientCounters, DmCache,
+};
+
+/// One shared decomposition cache plus per-engine attribution slots.
+pub struct CacheService {
+    cache: Arc<DmCache>,
+    leases: Vec<CacheLease>,
+}
+
+impl CacheService {
+    /// One cache with the **whole** `cfg` budget, leased to `engines`
+    /// clients (at least one).
+    pub fn new(cfg: &CacheConfig, engines: usize) -> Self {
+        let cache = Arc::new(DmCache::new(cfg));
+        let mut leases = Vec::with_capacity(engines.max(1));
+        for _ in 0..engines.max(1) {
+            let attribution = Arc::new(ClientCounters::new());
+            leases.push(CacheLease { cache: cache.clone(), attribution });
+        }
+        Self { cache, leases }
+    }
+
+    pub fn engines(&self) -> usize {
+        self.leases.len()
+    }
+
+    /// Engine `i`'s lease: the shared cache + that engine's counters.
+    pub fn lease(&self, engine: usize) -> CacheLease {
+        self.leases[engine].clone()
+    }
+
+    /// The shared cache itself (snapshot save/load operates on this).
+    pub fn cache(&self) -> &DmCache {
+        &self.cache
+    }
+
+    /// Aggregate counters of the shared cache.
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Per-engine attribution snapshots, indexed by engine.
+    pub fn per_engine(&self) -> Vec<AttributionStats> {
+        self.leases.iter().map(|l| l.attribution.snapshot()).collect()
+    }
+}
+
+impl std::fmt::Debug for CacheService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CacheService")
+            .field("engines", &self.leases.len())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+/// One shard's slice of a cluster's serving traffic: requests dispatched
+/// to it plus its attributed share of the shared cache's counters
+/// (zeroed when the deployment runs cache-less).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardBreakdown {
+    pub shard: usize,
+    pub requests: u64,
+    pub cache: AttributionStats,
+}
+
+impl std::fmt::Display for ShardBreakdown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard{}[requests={} {}]", self.shard, self.requests, self.cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::dmcache::{CacheView, Decomp};
+
+    fn decomp(m: usize, n: usize, fill: f32) -> Arc<Decomp> {
+        Arc::new(Decomp { beta: vec![fill; m * n], eta: vec![fill; m] })
+    }
+
+    #[test]
+    fn one_budget_shared_across_leases() {
+        let svc = CacheService::new(&CacheConfig::with_mb(1), 3);
+        assert_eq!(svc.engines(), 3);
+        let x = vec![1.0f32, 2.0];
+        let a = svc.lease(0);
+        let b = svc.lease(1);
+        // engine 0 inserts, engine 1 hits the SAME entry — no duplication
+        let va = CacheView::attributed(&a.cache, 7, &a.attribution);
+        let vb = CacheView::attributed(&b.cache, 7, &b.attribution);
+        assert!(va.lookup(0, &x).is_none());
+        va.insert(0, &x, &decomp(2, 2, 0.5));
+        assert!(vb.lookup(0, &x).is_some(), "cross-engine reuse");
+        assert_eq!(svc.stats().entries, 1, "one entry total, not one per engine");
+        let per = svc.per_engine();
+        assert_eq!((per[0].hits, per[0].misses), (0, 1));
+        assert_eq!((per[1].hits, per[1].misses), (1, 0));
+        assert_eq!(per[2], AttributionStats::default());
+        // aggregate = sum of attributions
+        let total = svc.stats();
+        assert_eq!(total.hits, per.iter().map(|p| p.hits).sum::<u64>());
+        assert_eq!(total.misses, per.iter().map(|p| p.misses).sum::<u64>());
+    }
+
+    #[test]
+    fn breakdown_renders_compactly() {
+        let b = ShardBreakdown {
+            shard: 2,
+            requests: 9,
+            cache: AttributionStats { hits: 3, misses: 1, muls_avoided: 24, adds_avoided: 8 },
+        };
+        let s = b.to_string();
+        assert!(s.starts_with("shard2[requests=9"), "{s}");
+        assert!(s.contains("hits=3"), "{s}");
+    }
+}

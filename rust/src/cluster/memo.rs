@@ -1,0 +1,454 @@
+//! Response-level memoization: whole-request answers above the (β, η)
+//! cache.
+//!
+//! Under `SeedSchedule::ContentHash` with single-request evaluation units
+//! (the cluster router's shape), a request's answer is a **pure function**
+//! of `(input bits, method)`: the uncertainty banks derive from the
+//! content hash, the dataflow is deterministic, and no engine call history
+//! leaks in.  A fully-identical repeat can therefore skip the entire voter
+//! sweep — not just the deterministic precompute the `nn::dmcache` level
+//! memoizes — and replay the stored logits bit-exactly.
+//!
+//! # Key scheme and verification
+//!
+//! Entries are keyed by [`request_key`] — FNV-1a over the method's
+//! discriminant/parameters and the input's f32 bit patterns, finalized
+//! with `mix64` (the same scheme `nn::dmcache` uses, and the same hash the
+//! cluster router shards requests by).  The full key (method + input
+//! vector) is stored in the entry and compared on lookup, so a hash
+//! collision degrades to a miss, never a wrong response.
+//!
+//! # Bounding and eviction
+//!
+//! Same discipline as `nn::dmcache`: a byte budget split over mutex
+//! shards, each running CLOCK second-chance eviction over its insertion
+//! ring, entries larger than one shard's budget simply not cached.
+//!
+//! # Op accounting
+//!
+//! A stored response carries the *logical* MUL/ADD counts of computing it.
+//! On a hit the caller books those counts as logical-but-avoided
+//! ([`OpCounter::avoided`] semantics): logical totals stay bit-identical
+//! to memo-off runs while `muls_avoided`/`adds_avoided` — and the memo's
+//! own [`MemoStats`] — report the skipped voter sweep distinctly.
+//!
+//! [`OpCounter::avoided`]: crate::opcount::counter::OpCounter::avoided
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::nn::bnn::Method;
+use crate::util::hash::{fnv1a_f32s, fnv1a_u64, mix64, FNV_OFFSET};
+
+/// Environment variable read by [`MemoConfig::from_env`].
+pub const MEMO_MB_ENV: &str = "BAYESDM_MEMO_MB";
+
+const DEFAULT_SHARDS: usize = 8;
+
+/// Estimated fixed overhead per entry (map slot, ring slot, `Arc` and vec
+/// headers, stored method) — counted against the byte budget.
+const ENTRY_OVERHEAD: usize = 160;
+
+/// Response-memo sizing knobs.  `capacity_bytes == 0` disables the memo —
+/// the default, preserving pre-memo behavior exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoConfig {
+    /// Total byte budget across all shards (0 = disabled).
+    pub capacity_bytes: usize,
+    /// Lock shards; responses are small, so no shard floor is needed.
+    pub shards: usize,
+}
+
+impl MemoConfig {
+    /// Memo off (the default).
+    pub fn disabled() -> Self {
+        Self { capacity_bytes: 0, shards: DEFAULT_SHARDS }
+    }
+
+    /// Memo on with a budget in MiB.
+    pub fn with_mb(mb: usize) -> Self {
+        Self { capacity_bytes: mb << 20, shards: DEFAULT_SHARDS }
+    }
+
+    /// Honor the `BAYESDM_MEMO_MB` environment toggle (the CI cluster leg
+    /// runs the suite memo-default-on); disabled when unset or unparsable.
+    pub fn from_env() -> Self {
+        match std::env::var(MEMO_MB_ENV) {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(mb) if mb > 0 => Self::with_mb(mb),
+                _ => Self::disabled(),
+            },
+            Err(_) => Self::disabled(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_bytes > 0
+    }
+}
+
+impl Default for MemoConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// The routing/memo key of one request: FNV-1a over the method identity
+/// and the input's f32 bit patterns, finalized with `mix64`.  Two requests
+/// collide iff method and input bits are identical — exactly the equality
+/// under which a `ContentHash` response is reusable.  The cluster router
+/// shards by the same key, so repeats always land on the same shard.
+pub fn request_key(method: &Method, x: &[f32]) -> u64 {
+    let mut state = match method {
+        Method::Standard { t } => fnv1a_u64(fnv1a_u64(FNV_OFFSET, 1), *t as u64),
+        Method::Hybrid { t } => fnv1a_u64(fnv1a_u64(FNV_OFFSET, 2), *t as u64),
+        Method::DmBnn { schedule } => {
+            let mut s = fnv1a_u64(FNV_OFFSET, 3);
+            s = fnv1a_u64(s, schedule.len() as u64);
+            for &k in schedule {
+                s = fnv1a_u64(s, k as u64);
+            }
+            s
+        }
+    };
+    state = fnv1a_u64(state, x.len() as u64);
+    mix64(fnv1a_f32s(state, x))
+}
+
+/// One memoized response: the request's flat voter-logit stack plus the
+/// logical op counts of computing it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoResponse {
+    /// Flat `voters × classes` logits (one `LogitBatch` input window).
+    pub flat: Vec<f32>,
+    pub voters: usize,
+    pub classes: usize,
+    /// Logical MULs of the full (un-memoized) evaluation.
+    pub muls: u64,
+    /// Logical ADDs of the full (un-memoized) evaluation.
+    pub adds: u64,
+}
+
+struct Entry {
+    method: Method,
+    x: Vec<f32>,
+    response: Arc<MemoResponse>,
+    referenced: bool,
+    bytes: usize,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<u64, Entry>,
+    /// CLOCK ring of insertion-ordered keys (stale keys skipped on sweep).
+    ring: VecDeque<u64>,
+    bytes: usize,
+}
+
+impl Shard {
+    /// Evict one unreferenced entry (second-chance sweep); false when the
+    /// shard has nothing evictable.  Bounded exactly like the dmcache
+    /// sweep: after one full pass every referenced bit is clear.
+    fn clock_evict(&mut self) -> bool {
+        enum Sweep {
+            Stale,
+            SecondChance,
+            Evict,
+        }
+        let mut budget = 2 * self.ring.len() + 1;
+        while budget > 0 {
+            budget -= 1;
+            let key = match self.ring.pop_front() {
+                Some(k) => k,
+                None => return false,
+            };
+            let action = match self.map.get_mut(&key) {
+                None => Sweep::Stale, // stale (overwritten) ring slot
+                Some(e) if e.referenced => {
+                    e.referenced = false;
+                    Sweep::SecondChance
+                }
+                Some(_) => Sweep::Evict,
+            };
+            match action {
+                Sweep::Stale => {}
+                Sweep::SecondChance => self.ring.push_back(key),
+                Sweep::Evict => {
+                    if let Some(e) = self.map.remove(&key) {
+                        self.bytes -= e.bytes;
+                    }
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+/// Aggregate memo counters, reported through `MetricsSummary::memo` and
+/// the serve/eval CLI.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Live entries across all shards.
+    pub entries: u64,
+    /// Accounted bytes across all shards.
+    pub bytes: u64,
+    /// Logical MULs skipped by hits — whole voter sweeps, not just the
+    /// precompute the decomposition cache saves.
+    pub muls_avoided: u64,
+    /// Logical ADDs skipped by hits.
+    pub adds_avoided: u64,
+}
+
+impl std::fmt::Display for MemoStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} evictions={} entries={} bytes={} muls_avoided={} adds_avoided={}",
+            self.hits,
+            self.misses,
+            self.evictions,
+            self.entries,
+            self.bytes,
+            self.muls_avoided,
+            self.adds_avoided,
+        )
+    }
+}
+
+/// The sharded, bounded-memory response memo.
+pub struct ResponseMemo {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    muls_avoided: AtomicU64,
+    adds_avoided: AtomicU64,
+}
+
+impl ResponseMemo {
+    pub fn new(cfg: &MemoConfig) -> Self {
+        let nshards = cfg.shards.max(1);
+        Self {
+            shards: (0..nshards).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: cfg.capacity_bytes / nshards,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            muls_avoided: AtomicU64::new(0),
+            adds_avoided: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    fn entry_bytes(x_len: usize, flat_len: usize) -> usize {
+        (x_len + flat_len) * std::mem::size_of::<f32>() + ENTRY_OVERHEAD
+    }
+
+    /// Probe for the memoized response of `(method, x)`.  A hit bumps the
+    /// referenced bit and books the whole stored evaluation as avoided.
+    pub fn lookup(&self, method: &Method, x: &[f32]) -> Option<Arc<MemoResponse>> {
+        let key = request_key(method, x);
+        let found = {
+            let mut shard = self.shard(key).lock().unwrap();
+            match shard.map.get_mut(&key) {
+                Some(e) if e.method == *method && slices_bit_equal(&e.x, x) => {
+                    e.referenced = true;
+                    Some(e.response.clone())
+                }
+                _ => None,
+            }
+        };
+        match found {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.muls_avoided.fetch_add(r.muls, Ordering::Relaxed);
+                self.adds_avoided.fetch_add(r.adds, Ordering::Relaxed);
+                Some(r)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly computed response, evicting under pressure.
+    /// Responses larger than one shard's budget are not cached.
+    pub fn insert(&self, method: &Method, x: &[f32], response: MemoResponse) {
+        let bytes = Self::entry_bytes(x.len(), response.flat.len());
+        if bytes > self.shard_budget {
+            return;
+        }
+        let key = request_key(method, x);
+        let mut evicted = 0u64;
+        {
+            let mut shard = self.shard(key).lock().unwrap();
+            while shard.bytes + bytes > self.shard_budget {
+                if !shard.clock_evict() {
+                    break;
+                }
+                evicted += 1;
+            }
+            if shard.bytes + bytes > self.shard_budget {
+                self.evictions.fetch_add(evicted, Ordering::Relaxed);
+                return;
+            }
+            let entry = Entry {
+                method: method.clone(),
+                x: x.to_vec(),
+                response: Arc::new(response),
+                referenced: false,
+                bytes,
+            };
+            if let Some(old) = shard.map.insert(key, entry) {
+                shard.bytes -= old.bytes;
+            }
+            shard.bytes += bytes;
+            shard.ring.push_back(key);
+        }
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    /// Counter snapshot (entry/byte totals take each shard lock briefly).
+    pub fn stats(&self) -> MemoStats {
+        let (mut entries, mut bytes) = (0u64, 0u64);
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            entries += s.map.len() as u64;
+            bytes += s.bytes as u64;
+        }
+        MemoStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+            bytes,
+            muls_avoided: self.muls_avoided.load(Ordering::Relaxed),
+            adds_avoided: self.adds_avoided.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Debug for ResponseMemo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResponseMemo")
+            .field("shards", &self.shards.len())
+            .field("shard_budget", &self.shard_budget)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+/// Bit-pattern equality, matching [`request_key`]'s hashing (`0.0 !=
+/// -0.0`, `NaN == NaN` for identical payloads) — also the router's
+/// intra-batch duplicate test, so grouping agrees with memo keying.
+pub(crate) fn slices_bit_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(p, q)| p.to_bits() == q.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn response(flat: &[f32]) -> MemoResponse {
+        MemoResponse { flat: flat.to_vec(), voters: 2, classes: flat.len() / 2, muls: 10, adds: 6 }
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrip_with_avoided_ops() {
+        let m = ResponseMemo::new(&MemoConfig::with_mb(1));
+        let method = Method::Standard { t: 2 };
+        let x = vec![1.0f32, 2.0];
+        assert!(m.lookup(&method, &x).is_none());
+        m.insert(&method, &x, response(&[0.5, 0.25, 0.125, 0.0625]));
+        let got = m.lookup(&method, &x).expect("hit");
+        assert_eq!(got.flat, vec![0.5, 0.25, 0.125, 0.0625]);
+        let s = m.stats();
+        assert_eq!((s.hits, s.misses, s.insertions, s.entries), (1, 1, 1, 1));
+        assert_eq!((s.muls_avoided, s.adds_avoided), (10, 6));
+        assert!(s.bytes > 0);
+    }
+
+    #[test]
+    fn key_separates_method_and_input() {
+        let m = ResponseMemo::new(&MemoConfig::with_mb(1));
+        let x = vec![1.0f32, 2.0];
+        m.insert(&Method::Standard { t: 2 }, &x, response(&[1.0, 2.0]));
+        assert!(m.lookup(&Method::Standard { t: 3 }, &x).is_none(), "other t");
+        assert!(m.lookup(&Method::Hybrid { t: 2 }, &x).is_none(), "other method");
+        assert!(m.lookup(&Method::Standard { t: 2 }, &[1.0, 2.5]).is_none(), "other input");
+        assert!(m.lookup(&Method::Standard { t: 2 }, &x).is_some());
+    }
+
+    #[test]
+    fn request_key_separates_dm_schedules_and_matches_itself() {
+        let x = vec![0.5f32; 4];
+        let a = request_key(&Method::DmBnn { schedule: vec![2, 3] }, &x);
+        let b = request_key(&Method::DmBnn { schedule: vec![3, 2] }, &x);
+        assert_ne!(a, b);
+        assert_eq!(a, request_key(&Method::DmBnn { schedule: vec![2, 3] }, &x));
+        // standard t=6 and dm [6] must not collide even with equal voters
+        assert_ne!(
+            request_key(&Method::Standard { t: 6 }, &x),
+            request_key(&Method::DmBnn { schedule: vec![6] }, &x)
+        );
+    }
+
+    #[test]
+    fn eviction_keeps_memory_bounded_and_protects_hot_entries() {
+        let entry = ResponseMemo::entry_bytes(4, 8);
+        let cfg = MemoConfig { capacity_bytes: 3 * entry, shards: 1 };
+        let m = ResponseMemo::new(&cfg);
+        let method = Method::Standard { t: 2 };
+        let hot = vec![9.0f32; 4];
+        m.insert(&method, &hot, response(&[1.0; 8]));
+        for i in 0..24 {
+            assert!(m.lookup(&method, &hot).is_some(), "hot entry evicted at {i}");
+            let x: Vec<f32> = (0..4).map(|j| (i * 4 + j) as f32).collect();
+            m.insert(&method, &x, response(&[1.0; 8]));
+            assert!(m.stats().bytes <= cfg.capacity_bytes as u64, "budget overrun");
+        }
+        let s = m.stats();
+        assert!(s.evictions > 0);
+        assert!(s.entries <= 3);
+        assert!(m.lookup(&method, &hot).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_memoizes_nothing() {
+        let m = ResponseMemo::new(&MemoConfig::disabled());
+        let method = Method::Hybrid { t: 2 };
+        let x = vec![1.0f32; 3];
+        m.insert(&method, &x, response(&[1.0, 2.0]));
+        assert!(m.lookup(&method, &x).is_none());
+        assert_eq!(m.stats().entries, 0);
+    }
+
+    #[test]
+    fn config_env_and_defaults() {
+        assert!(!MemoConfig::disabled().enabled());
+        assert!(MemoConfig::with_mb(4).enabled());
+        assert_eq!(MemoConfig::with_mb(2).capacity_bytes, 2 << 20);
+        assert_eq!(MemoConfig::default(), MemoConfig::disabled());
+    }
+
+    #[test]
+    fn memo_is_send_and_sync() {
+        fn assert_sync<T: Send + Sync>() {}
+        assert_sync::<ResponseMemo>();
+    }
+}

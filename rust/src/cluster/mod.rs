@@ -1,0 +1,39 @@
+//! Cluster subsystem — sharded multi-engine serving over shared caching
+//! services.
+//!
+//! The paper's DM strategy wins by memoizing the deterministic half of
+//! every Gaussian-weight multiply; this module lifts that principle to
+//! the serving tier, the way VIBNN/Bayes2IMC-style accelerators share
+//! weight/feature reuse across compute units instead of duplicating it:
+//!
+//! * [`router`]       — [`ClusterRouter`]: hash-routes each request over N
+//!   `Engine` shards behind bounded per-shard queues with aggregate
+//!   backpressure; implements `InferenceBackend`, so the server and CLI
+//!   run unchanged on top.  Results are bit-identical for every shard
+//!   count (shard engines run per-request `ContentHash` evaluation).
+//! * [`cacheservice`] — [`CacheService`]: the (β, η) decomposition cache
+//!   as a first-class shared service — ONE byte budget and one set of
+//!   mutex shards re-partitioned across engines instead of duplicated per
+//!   engine, with per-engine hit/miss attribution.
+//! * [`memo`]         — [`ResponseMemo`]: response-level memoization above
+//!   the (β, η) cache; a fully-identical `(input, method)` request is a
+//!   pure function under `ContentHash`, so exact repeats skip the entire
+//!   voter sweep and replay stored logits bit-exactly.
+//! * [`snapshot`]     — cache warm-up/persistence across restarts:
+//!   versioned, checksummed, model-fingerprint-gated snapshot files that
+//!   degrade to cold misses, never wrong results.
+//!
+//! Deployment shape is one knob set on `EngineConfig` (`shards`, `memo`,
+//! `snapshot` — CLI `--shards`/`--memo-mb`/`--cache-snapshot`, env
+//! `BAYESDM_SHARDS`/`BAYESDM_MEMO_MB`), all off/1 by default so existing
+//! single-engine invocations are byte-identical.
+
+pub mod cacheservice;
+pub mod memo;
+pub mod router;
+pub mod snapshot;
+
+pub use cacheservice::{CacheService, ShardBreakdown};
+pub use memo::{MemoConfig, MemoStats, ResponseMemo};
+pub use router::ClusterRouter;
+pub use snapshot::SnapshotReport;

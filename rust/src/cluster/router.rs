@@ -1,0 +1,566 @@
+//! `ClusterRouter` — shard-aware multi-engine serving behind the same
+//! [`InferenceBackend`] slot a single `Engine` plugs into, so the
+//! router/batcher (`coordinator::server`) and the CLI run unchanged on
+//! top of an N-engine deployment.
+//!
+//! # Topology
+//!
+//! One `Engine` per shard, each fed by a dedicated worker thread behind a
+//! **bounded** `sync_channel` queue.  A request is routed by
+//! `request_key(method, input) % shards` — the same content hash the
+//! response memo keys on — so identical requests always land on the same
+//! shard and hot (β, η) entries cluster there even before the shared
+//! cache smooths it out.  When a shard's queue fills, `evaluate` blocks on
+//! the send: callers (the server's dispatch workers) slow down together,
+//! which is the aggregate backpressure — the cluster can never buffer
+//! unboundedly ahead of its slowest shard.
+//!
+//! # Determinism: why shard count is invisible in the results
+//!
+//! Every shard engine is forced onto [`SeedSchedule::ContentHash`] and
+//! evaluates **one request per batch**: request `x`'s banks derive from
+//! `split_seed(seed, hash([x]))`, a pure function of `(seed, x)` shared
+//! by all shards.  Routing therefore only chooses *where* a request runs,
+//! never *what* it computes — N-shard logits and logical op counts are
+//! bit-identical to the 1-shard deployment (`tests/cluster_parity.rs`),
+//! which is also exactly the purity that makes response memoization sound.
+//!
+//! # Shared services
+//!
+//! All shards lease one [`CacheService`] (one decomposition-cache budget,
+//! per-shard attribution) and sit under one optional [`ResponseMemo`]:
+//! an exact `(input, method)` repeat skips the entire voter sweep and
+//! replays the memoized logits, booking the skipped work as
+//! logical-but-avoided ops.  `EngineConfig::snapshot` persists the shared
+//! cache across restarts (`cluster::snapshot`): loaded at construction,
+//! saved on [`ClusterRouter::save_snapshot`] and on drop.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::engine::{
+    accuracy_over, validate_request, Engine, EngineConfig, SeedSchedule,
+};
+use crate::coordinator::metrics::{Metrics, MetricsSummary};
+use crate::coordinator::plan::InferenceMethod;
+use crate::coordinator::server::InferenceBackend;
+use crate::coordinator::vote;
+use crate::nn::batch::BatchResult;
+use crate::nn::bnn::{BnnModel, Method};
+use crate::nn::dmcache::CacheConfig;
+use crate::nn::plan::LogitBatch;
+use crate::opcount::counter::OpCounter;
+
+use super::cacheservice::{CacheService, ShardBreakdown};
+use super::memo::{request_key, slices_bit_equal, MemoConfig, MemoResponse, ResponseMemo};
+use super::snapshot::{self, SnapshotReport};
+
+/// Environment variable read by [`shards_from_env`] (the CI cluster leg
+/// sets it so default-config deployments exercise multi-shard routing).
+pub const SHARDS_ENV: &str = "BAYESDM_SHARDS";
+
+/// `BAYESDM_SHARDS` default for `EngineConfig::shards`: 1 (single engine,
+/// byte-identical to pre-cluster behavior) when unset or unparsable.
+pub fn shards_from_env() -> usize {
+    match std::env::var(SHARDS_ENV) {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => 1,
+        },
+        Err(_) => 1,
+    }
+}
+
+/// Per-shard request queue depth.  Small enough that backpressure reaches
+/// the server's admission queue quickly, large enough to keep a shard fed
+/// across scheduling hiccups.
+pub const SHARD_QUEUE_DEPTH: usize = 256;
+
+struct ShardJob {
+    slot: usize,
+    input: Vec<f32>,
+    method: Method,
+    respond: mpsc::Sender<ShardReply>,
+}
+
+struct ShardReply {
+    slot: usize,
+    flat: Vec<f32>,
+    ops: OpCounter,
+}
+
+/// The shard-aware multi-engine backend.
+pub struct ClusterRouter {
+    engines: Vec<Arc<Engine>>,
+    txs: Vec<SyncSender<ShardJob>>,
+    workers: Vec<JoinHandle<()>>,
+    /// Jobs actually dispatched to each shard for computation (memo hits
+    /// and intra-batch duplicate replays are not counted — their saving
+    /// shows up in the memo stats and the `*_avoided` op counters).
+    dispatched: Vec<AtomicU64>,
+    memo: Option<ResponseMemo>,
+    service: Option<CacheService>,
+    snapshot_path: Option<String>,
+    load_report: Option<SnapshotReport>,
+    /// Total dispatched count at the last successful snapshot save
+    /// (`u64::MAX` = never saved) — lets drop skip a second identical
+    /// write right after an explicit `save_snapshot`.
+    saved_version: AtomicU64,
+    fingerprint: u64,
+    input_dim: usize,
+    classes: usize,
+    num_layers: usize,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ClusterRouter {
+    /// Build an N-shard deployment from one model and one config.
+    /// `cfg.shards` engines are spawned (each with its own copy of the
+    /// posterior), `cfg.cache` becomes ONE shared [`CacheService`] budget,
+    /// `cfg.memo` the response memo, `cfg.snapshot` the persistence path
+    /// (loaded here, fingerprint-gated).  Shard engines always run
+    /// [`SeedSchedule::ContentHash`] — see the module docs for why that is
+    /// required, not a preference.
+    ///
+    /// Sizing note: shard engines evaluate one request per batch, which
+    /// clamps their scoped pool to a single thread — `cfg.workers` is
+    /// inherited but inert on the cluster path, so an N-shard deployment
+    /// runs ~N compute threads (one per shard worker), not N × workers.
+    pub fn new(model: BnnModel, cfg: EngineConfig) -> Self {
+        let shards = cfg.shards.max(1);
+        let fingerprint = model.fingerprint();
+        let input_dim = model.input_dim();
+        let classes = model.output_dim();
+        let num_layers = model.num_layers();
+
+        let service = cfg.cache.enabled().then(|| CacheService::new(&cfg.cache, shards));
+        let memo = cfg.memo.enabled().then(|| ResponseMemo::new(&cfg.memo));
+        let snapshot_path = cfg.snapshot.clone();
+        let load_report = match (&service, &snapshot_path) {
+            (Some(svc), Some(path)) => {
+                Some(snapshot::load(svc.cache(), fingerprint, Path::new(path)))
+            }
+            _ => None,
+        };
+
+        let mut engines = Vec::with_capacity(shards);
+        let mut txs = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let shard_cfg = EngineConfig {
+                // the shard leases the shared cache below; a private one
+                // would re-introduce exactly the duplication this solves
+                cache: CacheConfig::disabled(),
+                seed_schedule: SeedSchedule::ContentHash,
+                shards: 1,
+                memo: MemoConfig::disabled(),
+                snapshot: None,
+                ..cfg.clone()
+            };
+            let lease = service.as_ref().map(|s| s.lease(i));
+            let engine = Arc::new(Engine::with_cache_lease(model.clone(), shard_cfg, lease));
+            let (tx, rx) = mpsc::sync_channel::<ShardJob>(SHARD_QUEUE_DEPTH);
+            let worker_engine = engine.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bayesdm-shard-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            let ShardJob { slot, input, method, respond } = job;
+                            let res = worker_engine
+                                .evaluate_batch(std::slice::from_ref(&input), &method);
+                            let flat = res.logits.input(0).flat().to_vec();
+                            let _ = respond.send(ShardReply { slot, flat, ops: res.ops });
+                        }
+                    })
+                    .expect("spawn shard worker"),
+            );
+            engines.push(engine);
+            txs.push(tx);
+        }
+
+        Self {
+            engines,
+            txs,
+            workers,
+            dispatched: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            memo,
+            service,
+            snapshot_path,
+            load_report,
+            saved_version: AtomicU64::new(u64::MAX),
+            fingerprint,
+            input_dim,
+            classes,
+            num_layers,
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.classes
+    }
+
+    /// What `--cache-snapshot` loading found at construction (`None` when
+    /// no snapshot was configured or the cache is disabled).
+    pub fn snapshot_load_report(&self) -> Option<&SnapshotReport> {
+        self.load_report.as_ref()
+    }
+
+    /// Total jobs dispatched so far — the dirty marker for snapshot
+    /// saves (cache entries only appear through dispatched computation).
+    fn traffic_version(&self) -> u64 {
+        self.dispatched.iter().map(|d| d.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Persist the shared cache to the configured snapshot path now.
+    /// `None` when no path or no cache is configured.  Drop saves too,
+    /// but only if traffic arrived after the last successful save, so a
+    /// clean CLI shutdown does not write the same snapshot twice.
+    pub fn save_snapshot(&self) -> Option<Result<SnapshotReport, String>> {
+        let (svc, path) = match (&self.service, &self.snapshot_path) {
+            (Some(svc), Some(path)) => (svc, path),
+            _ => return None,
+        };
+        let version = self.traffic_version();
+        let result = snapshot::save(svc.cache(), self.fingerprint, Path::new(path));
+        if result.is_ok() {
+            self.saved_version.store(version, Ordering::Relaxed);
+        }
+        Some(result)
+    }
+
+    /// Evaluate a set of requests across the cluster: memo probe, hash
+    /// route, per-shard evaluation, reassembly in request order.  Logits
+    /// and logical op counts are bit-identical for every shard count and
+    /// every cache/memo state; memo hits additionally book their whole
+    /// evaluation into the `*_avoided` counters.
+    ///
+    /// With the memo enabled, bit-identical requests inside ONE call are
+    /// also single-flighted: the first occurrence is dispatched, the
+    /// duplicates replay its response (sound for exactly the reason memo
+    /// hits are — the answer is a pure function of `(input, method)`),
+    /// booked as logical-but-avoided work like any other replay.
+    pub fn evaluate(&self, inputs: &[Vec<f32>], method: &Method) -> Result<BatchResult, String> {
+        validate_request(self.num_layers, self.input_dim, inputs, method)?;
+        let voters = method.voters();
+        let stride = voters * self.classes;
+        let n = inputs.len();
+        let mut logits = LogitBatch::zeros(n, voters, self.classes);
+        let mut ops = OpCounter::default();
+
+        let (rtx, rrx) = mpsc::channel::<ShardReply>();
+        // representative slot -> duplicate slots awaiting its reply
+        let mut dup_slots: HashMap<usize, Vec<usize>> = HashMap::new();
+        // memo key -> representative slots (collisions verified by bits)
+        let mut reps_by_key: HashMap<u64, Vec<usize>> = HashMap::new();
+        for (slot, x) in inputs.iter().enumerate() {
+            if let Some(hit) = self.memo.as_ref().and_then(|m| m.lookup(method, x)) {
+                logits.data_mut()[slot * stride..(slot + 1) * stride].copy_from_slice(&hit.flat);
+                ops += replay_ops(hit.muls, hit.adds);
+                continue;
+            }
+            let key = request_key(method, x);
+            if self.memo.is_some() {
+                // single-flight within the call: only the memo makes
+                // replays observable policy, so dedup rides its switch
+                let reps = reps_by_key.entry(key).or_default();
+                let dup_of = reps.iter().copied().find(|&r| slices_bit_equal(&inputs[r], x));
+                if let Some(rep) = dup_of {
+                    dup_slots.get_mut(&rep).expect("group exists").push(slot);
+                    continue;
+                }
+                reps.push(slot);
+            }
+            dup_slots.insert(slot, Vec::new());
+            let shard = (key % self.txs.len() as u64) as usize;
+            let job =
+                ShardJob { slot, input: x.clone(), method: method.clone(), respond: rtx.clone() };
+            // bounded queue: a full shard blocks the caller — backpressure
+            self.txs[shard].send(job).map_err(|_| "shard worker shut down".to_string())?;
+            self.dispatched[shard].fetch_add(1, Ordering::Relaxed);
+        }
+        drop(rtx);
+
+        for _ in 0..dup_slots.len() {
+            let reply = rrx.recv().map_err(|_| "shard worker died".to_string())?;
+            logits.data_mut()[reply.slot * stride..(reply.slot + 1) * stride]
+                .copy_from_slice(&reply.flat);
+            ops += reply.ops;
+            for &dup in &dup_slots[&reply.slot] {
+                logits.data_mut()[dup * stride..(dup + 1) * stride].copy_from_slice(&reply.flat);
+                ops += replay_ops(reply.ops.muls, reply.ops.adds);
+            }
+            if let Some(m) = &self.memo {
+                m.insert(
+                    method,
+                    &inputs[reply.slot],
+                    MemoResponse {
+                        flat: reply.flat,
+                        voters,
+                        classes: self.classes,
+                        muls: reply.ops.muls,
+                        adds: reply.ops.adds,
+                    },
+                );
+            }
+        }
+        Ok(BatchResult { logits, ops })
+    }
+
+    /// Predicted class per input (mean-logit vote + argmax), mirroring
+    /// `Engine::predict_batch`.
+    pub fn predict_batch(&self, inputs: &[Vec<f32>], method: &Method) -> Vec<usize> {
+        self.evaluate(inputs, method)
+            .expect("cluster predict: request validation failed")
+            .logits
+            .iter()
+            .map(|stack| vote::argmax(&vote::mean_vote_flat(stack.flat(), stack.classes())))
+            .collect()
+    }
+
+    /// Batched test-set accuracy over a flat row-major image buffer,
+    /// mirroring `Engine::accuracy` (same shared driver).
+    pub fn accuracy(&self, images: &[f32], labels: &[u8], method: &Method, batch: usize) -> f64 {
+        accuracy_over(images, labels, self.input_dim, batch, |xs| {
+            self.predict_batch(xs, method)
+        })
+    }
+
+    /// Per-shard serving + cache-attribution breakdown.
+    pub fn shard_breakdown(&self) -> Vec<ShardBreakdown> {
+        let attr = self.service.as_ref().map(|s| s.per_engine());
+        (0..self.engines.len())
+            .map(|i| ShardBreakdown {
+                shard: i,
+                requests: self.dispatched[i].load(Ordering::Relaxed),
+                cache: attr.as_ref().map(|a| a[i]).unwrap_or_default(),
+            })
+            .collect()
+    }
+
+    /// Serving metrics with the shared-cache aggregate, the memo counters
+    /// and the per-shard breakdown folded in — the cluster analogue of
+    /// `Engine::metrics_summary`.
+    pub fn metrics_summary(&self) -> MetricsSummary {
+        let mut s = self.metrics.summary();
+        s.cache = self.service.as_ref().map(|svc| svc.stats());
+        s.memo = self.memo.as_ref().map(|m| m.stats());
+        s.shards = self.shard_breakdown();
+        s
+    }
+}
+
+impl InferenceBackend for ClusterRouter {
+    fn run_batch(
+        &self,
+        inputs: &[Vec<f32>],
+        method: &InferenceMethod,
+    ) -> Result<LogitBatch, String> {
+        self.evaluate(inputs, &method.to_reference()).map(|r| r.logits)
+    }
+}
+
+/// Op bookkeeping for a replayed response (memo hit or intra-batch
+/// duplicate): logical counts advance exactly as if the work had run,
+/// and all of it is marked avoided.
+fn replay_ops(muls: u64, adds: u64) -> OpCounter {
+    OpCounter { muls, adds, muls_avoided: muls, adds_avoided: adds }
+}
+
+impl Drop for ClusterRouter {
+    fn drop(&mut self) {
+        // persist first (workers are still parked, cache is quiescent
+        // once txs close) unless an explicit save already captured the
+        // final traffic; then close the queues and reap the shards
+        if self.saved_version.load(Ordering::Relaxed) != self.traffic_version() {
+            if let Some(Err(e)) = self.save_snapshot() {
+                eprintln!("cluster: cache snapshot save failed: {e}");
+            }
+        }
+        self.txs.clear();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ClusterRouter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClusterRouter")
+            .field("shards", &self.engines.len())
+            .field("memo", &self.memo.as_ref().map(|m| m.stats()))
+            .field("cache", &self.service.as_ref().map(|s| s.stats()))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::uniform::{UniformSource, XorShift128Plus};
+
+    const ARCH: [usize; 4] = [16, 12, 8, 5];
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            workers: 2,
+            seed: 0xC1A5,
+            cache: CacheConfig::disabled(),
+            seed_schedule: SeedSchedule::ContentHash,
+            alpha: 1.0,
+            shards: 1,
+            memo: MemoConfig::disabled(),
+            snapshot: None,
+        }
+    }
+
+    fn router(shards: usize) -> ClusterRouter {
+        ClusterRouter::new(BnnModel::synthetic(&ARCH, 11), EngineConfig { shards, ..cfg() })
+    }
+
+    fn inputs(count: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut r = XorShift128Plus::new(seed);
+        (0..count).map(|_| (0..ARCH[0]).map(|_| r.next_f32()).collect()).collect()
+    }
+
+    #[test]
+    fn routes_and_reassembles_in_request_order() {
+        let r = router(3);
+        assert_eq!(r.shards(), 3);
+        let xs = inputs(9, 1);
+        let m = Method::Standard { t: 3 };
+        let got = r.evaluate(&xs, &m).expect("evaluate");
+        assert_eq!(got.logits.len(), 9);
+        // every request matches its own single-request evaluation
+        let solo = router(1);
+        for (i, x) in xs.iter().enumerate() {
+            let one = solo.evaluate(std::slice::from_ref(x), &m).unwrap();
+            assert_eq!(got.logits.input(i).flat(), one.logits.input(0).flat(), "slot {i}");
+        }
+        let total: u64 = r.shard_breakdown().iter().map(|b| b.requests).sum();
+        assert_eq!(total, 9, "every request attributed to a shard");
+    }
+
+    #[test]
+    fn rejects_malformed_requests_like_the_engine_backend() {
+        let r = router(2);
+        let m = Method::Standard { t: 2 };
+        let err = r.evaluate(&[vec![0.0; 3]], &m).unwrap_err();
+        assert!(err.contains("dim"), "{err}");
+        let err = r.evaluate(&inputs(1, 2), &Method::DmBnn { schedule: vec![2, 2] }).unwrap_err();
+        assert!(err.contains("layers"), "{err}");
+        let err = r.evaluate(&inputs(1, 2), &Method::Standard { t: 0 }).unwrap_err();
+        assert!(err.contains("zero voters"), "{err}");
+    }
+
+    #[test]
+    fn memo_skips_the_voter_sweep_on_exact_repeats() {
+        let r = ClusterRouter::new(
+            BnnModel::synthetic(&ARCH, 11),
+            EngineConfig { shards: 2, memo: MemoConfig::with_mb(4), ..cfg() },
+        );
+        let xs = inputs(4, 3);
+        let m = Method::DmBnn { schedule: vec![2, 2, 1] };
+        let cold = r.evaluate(&xs, &m).unwrap();
+        assert_eq!(cold.ops.muls_avoided, 0, "cold run computes everything");
+        let warm = r.evaluate(&xs, &m).unwrap();
+        assert_eq!(warm.logits, cold.logits, "memo must replay bit-exactly");
+        assert_eq!(warm.ops.muls, cold.ops.muls, "logical counts invariant");
+        assert_eq!(warm.ops.adds, cold.ops.adds);
+        assert_eq!(warm.ops.performed_muls(), 0, "warm run avoids every mul");
+        assert_eq!(warm.ops.performed_adds(), 0);
+        let stats = r.metrics_summary().memo.expect("memo enabled");
+        assert_eq!(stats.hits, 4);
+        assert_eq!(stats.misses, 4);
+        assert_eq!(stats.muls_avoided, warm.ops.muls_avoided);
+    }
+
+    #[test]
+    fn intra_batch_duplicates_single_flight_with_memo() {
+        let memo_on = ClusterRouter::new(
+            BnnModel::synthetic(&ARCH, 11),
+            EngineConfig { shards: 2, memo: MemoConfig::with_mb(4), ..cfg() },
+        );
+        let base = inputs(2, 9);
+        let xs: Vec<Vec<f32>> = (0..8).map(|i| base[i % 2].clone()).collect();
+        let m = Method::Standard { t: 3 };
+        let got = memo_on.evaluate(&xs, &m).unwrap();
+        // reference: the two unique requests, computed without any memo
+        let reference = router(1).evaluate(&base, &m).unwrap();
+        for (i, x) in xs.iter().enumerate() {
+            let j = base.iter().position(|b| b == x).unwrap();
+            assert_eq!(got.logits.input(i).flat(), reference.logits.input(j).flat(), "slot {i}");
+        }
+        // logical counts advance per request (4 copies of each unique)...
+        assert_eq!(got.ops.muls, 4 * reference.ops.muls);
+        assert_eq!(got.ops.adds, 4 * reference.ops.adds);
+        // ...but only the two representatives were actually computed
+        assert_eq!(got.ops.performed_muls(), reference.ops.muls);
+        assert_eq!(got.ops.performed_adds(), reference.ops.adds);
+        let total: u64 = memo_on.shard_breakdown().iter().map(|b| b.requests).sum();
+        assert_eq!(total, 2, "duplicates must not dispatch");
+        // without the memo, dedup is off: every slot is computed
+        let memo_off = router(2);
+        let plain = memo_off.evaluate(&xs, &m).unwrap();
+        assert_eq!(plain.logits, got.logits);
+        assert_eq!(plain.ops.muls, got.ops.muls);
+        assert_eq!(plain.ops.muls_avoided, 0);
+        let total: u64 = memo_off.shard_breakdown().iter().map(|b| b.requests).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn shared_cache_attribution_lands_in_the_summary() {
+        let r = ClusterRouter::new(
+            BnnModel::synthetic(&ARCH, 11),
+            EngineConfig { shards: 2, cache: CacheConfig::with_mb(8), ..cfg() },
+        );
+        let xs = inputs(6, 5);
+        let m = Method::DmBnn { schedule: vec![2, 2, 1] };
+        let _ = r.evaluate(&xs, &m).unwrap();
+        let _ = r.evaluate(&xs, &m).unwrap(); // repeats hit layer-0 entries
+        let s = r.metrics_summary();
+        let cache = s.cache.expect("shared cache enabled");
+        assert!(cache.hits > 0, "{cache}");
+        assert_eq!(s.shards.len(), 2);
+        let attr_hits: u64 = s.shards.iter().map(|b| b.cache.hits).sum();
+        let attr_misses: u64 = s.shards.iter().map(|b| b.cache.misses).sum();
+        assert_eq!(attr_hits, cache.hits, "attribution partitions the aggregate");
+        assert_eq!(attr_misses, cache.misses);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let r = router(2);
+        let got = r.evaluate(&[], &Method::Standard { t: 2 }).unwrap();
+        assert!(got.logits.is_empty());
+        assert_eq!(got.ops, OpCounter::default());
+    }
+
+    #[test]
+    fn router_is_send_and_sync() {
+        // the generic server shares one backend across worker threads
+        fn assert_sync<T: Send + Sync>() {}
+        assert_sync::<ClusterRouter>();
+    }
+
+    #[test]
+    fn env_shards_default_parses_defensively() {
+        // unset in the default environment of this test run ⇒ 1; the CI
+        // cluster leg sets it and tests/cluster_parity.rs covers that path
+        assert!(shards_from_env() >= 1);
+    }
+}

@@ -1,0 +1,305 @@
+//! Cache warm-up / persistence: serialize hot decomposition-cache entries
+//! at shutdown, reload them at start, so a restarted deployment serves
+//! its first repeated request warm instead of re-running the μ-path
+//! GEMVs.
+//!
+//! # Format (version 1, little-endian throughout)
+//!
+//! ```text
+//! magic    8 bytes   b"BDMSNAP\x01"
+//! version  u32       SNAPSHOT_VERSION
+//! fp       u64       model fingerprint the entries belong to
+//! count    u64       number of entries
+//! checksum u64       mix64(fnv1a(payload bytes))
+//! payload  per entry: layer u32, x_len u32, m u32,
+//!          then x (x_len f32 bits), eta (m f32 bits),
+//!          beta (m·x_len f32 bits)
+//! ```
+//!
+//! `beta`'s length is derived (`m × x_len`), so a corrupt length field
+//! cannot desynchronize silently — every read is bounds-checked against
+//! the checksummed payload.
+//!
+//! # Safety argument: stale snapshots degrade, never lie
+//!
+//! Three independent gates keep a snapshot from producing wrong results:
+//!
+//! 1. **Header fingerprint** — a snapshot written for another model (or
+//!    another version of this format) is rejected wholesale at load; the
+//!    deployment starts cold, exactly as if the file did not exist.
+//! 2. **Checksum** — torn/corrupt files are rejected wholesale.
+//! 3. **Stored-key bit-verification** — loaded entries re-enter the cache
+//!    through `DmCache::insert`, which stores the full key (fingerprint,
+//!    layer, input bits); every subsequent `lookup` bit-compares the
+//!    stored key, so even an adversarially crafted payload can at worst
+//!    produce misses or wrong-valued *entries that never verify*, not
+//!    wrong responses.
+//!
+//! Loading therefore never errors a deployment: every failure mode is
+//! reported via [`SnapshotReport::rejected`] and serving proceeds cold.
+//! Only *writing* can hard-fail (disk errors on save).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::nn::dmcache::{Decomp, DmCache};
+use crate::util::hash::{fnv1a_bytes, mix64, FNV_OFFSET};
+
+/// Snapshot file magic (8 bytes).
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"BDMSNAP\x01";
+
+/// Bumped whenever the entry layout changes; old files degrade to cold.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+const HEADER_BYTES: usize = 8 + 4 + 8 + 8 + 8;
+
+/// Outcome of a snapshot save or load.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SnapshotReport {
+    /// Entries written (save) or handed to the cache (load — the cache's
+    /// own budget may still decline or evict some).
+    pub entries: usize,
+    /// Payload bytes written/read.
+    pub payload_bytes: usize,
+    /// Why the snapshot was rejected and the deployment started cold
+    /// (load only); `None` on success.
+    pub rejected: Option<String>,
+}
+
+impl std::fmt::Display for SnapshotReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.rejected {
+            Some(why) => write!(f, "cold start ({why})"),
+            None => write!(f, "entries={} payload_bytes={}", self.entries, self.payload_bytes),
+        }
+    }
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Serialize every live entry of model `fp` to `path` (written to a
+/// `.tmp` sibling first, then renamed, so a crash mid-save cannot leave a
+/// torn file where the next start expects a snapshot).
+pub fn save(cache: &DmCache, fp: u64, path: &Path) -> Result<SnapshotReport, String> {
+    let entries = cache.export_for(fp);
+    let mut payload = Vec::new();
+    for e in &entries {
+        let m = e.decomp.eta.len();
+        payload.extend_from_slice(&e.layer.to_le_bytes());
+        payload.extend_from_slice(&(e.x.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&(m as u32).to_le_bytes());
+        push_f32s(&mut payload, &e.x);
+        push_f32s(&mut payload, &e.decomp.eta);
+        push_f32s(&mut payload, &e.decomp.beta);
+    }
+    let mut file = Vec::with_capacity(HEADER_BYTES + payload.len());
+    file.extend_from_slice(&SNAPSHOT_MAGIC);
+    file.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+    file.extend_from_slice(&fp.to_le_bytes());
+    file.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+    file.extend_from_slice(&mix64(fnv1a_bytes(FNV_OFFSET, &payload)).to_le_bytes());
+    file.extend_from_slice(&payload);
+
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &file).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+    Ok(SnapshotReport { entries: entries.len(), payload_bytes: payload.len(), rejected: None })
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        let s = self.buf.get(self.pos..end)?;
+        self.pos = end;
+        Some(s)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Option<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4)?)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())));
+        }
+        Some(out)
+    }
+}
+
+fn cold(why: impl Into<String>) -> SnapshotReport {
+    SnapshotReport { entries: 0, payload_bytes: 0, rejected: Some(why.into()) }
+}
+
+/// Load a snapshot into `cache`, gated on model fingerprint `fp`.  Never
+/// fails the deployment: a missing, stale, corrupt or truncated snapshot
+/// returns a report with [`SnapshotReport::rejected`] set and the cache
+/// untouched (cold start).
+pub fn load(cache: &DmCache, fp: u64, path: &Path) -> SnapshotReport {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) => return cold(format!("unreadable snapshot {}: {e}", path.display())),
+    };
+    if bytes.len() < HEADER_BYTES {
+        return cold("truncated header");
+    }
+    let mut r = Reader { buf: &bytes, pos: 0 };
+    if r.take(8) != Some(&SNAPSHOT_MAGIC) {
+        return cold("bad magic");
+    }
+    let version = r.u32().unwrap();
+    if version != SNAPSHOT_VERSION {
+        return cold(format!("version {version} != {SNAPSHOT_VERSION}"));
+    }
+    let file_fp = r.u64().unwrap();
+    if file_fp != fp {
+        return cold(format!("model fingerprint mismatch ({file_fp:#x} != {fp:#x})"));
+    }
+    let count = r.u64().unwrap();
+    let checksum = r.u64().unwrap();
+    let payload = &bytes[HEADER_BYTES..];
+    if mix64(fnv1a_bytes(FNV_OFFSET, payload)) != checksum {
+        return cold("payload checksum mismatch");
+    }
+
+    // Parse fully before touching the cache: a snapshot is all-or-nothing.
+    let mut parsed = Vec::new();
+    for i in 0..count {
+        let (layer, x, decomp) = match parse_entry(&mut r) {
+            Some(e) => e,
+            None => return cold(format!("truncated entry {i}/{count}")),
+        };
+        parsed.push((layer, x, decomp));
+    }
+    if r.pos != bytes.len() {
+        return cold("trailing bytes after last entry");
+    }
+
+    let payload_bytes = payload.len();
+    let entries = parsed.len();
+    for (layer, x, decomp) in parsed {
+        cache.insert(fp, layer as usize, &x, &decomp);
+    }
+    SnapshotReport { entries, payload_bytes, rejected: None }
+}
+
+fn parse_entry(r: &mut Reader<'_>) -> Option<(u32, Vec<f32>, Arc<Decomp>)> {
+    let layer = r.u32()?;
+    let x_len = r.u32()? as usize;
+    let m = r.u32()? as usize;
+    let x = r.f32s(x_len)?;
+    let eta = r.f32s(m)?;
+    let beta = r.f32s(m.checked_mul(x_len)?)?;
+    Some((layer, x, Arc::new(Decomp { beta, eta })))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::dmcache::CacheConfig;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bayesdm_snapshot_{}_{name}.bin", std::process::id()))
+    }
+
+    fn warm_cache(fp: u64) -> DmCache {
+        let c = DmCache::new(&CacheConfig::with_mb(2));
+        for i in 0..5u32 {
+            let x: Vec<f32> = (0..4).map(|j| (i * 4 + j) as f32).collect();
+            let m = 3usize;
+            let decomp = Arc::new(Decomp {
+                beta: (0..m * 4).map(|k| k as f32 * 0.5).collect(),
+                eta: (0..m).map(|k| k as f32 - 1.0).collect(),
+            });
+            c.insert(fp, (i % 2) as usize, &x, &decomp);
+        }
+        c
+    }
+
+    #[test]
+    fn save_load_roundtrip_restores_warm_hits() {
+        let path = tmp("roundtrip");
+        let warm = warm_cache(0xF1);
+        let report = save(&warm, 0xF1, &path).expect("save");
+        assert_eq!(report.entries, 5);
+        assert!(report.rejected.is_none());
+
+        let fresh = DmCache::new(&CacheConfig::with_mb(2));
+        let loaded = load(&fresh, 0xF1, &path);
+        assert_eq!(loaded.rejected, None, "{loaded}");
+        assert_eq!(loaded.entries, 5);
+        // every original entry now hits, bit-exactly
+        for i in 0..5u32 {
+            let x: Vec<f32> = (0..4).map(|j| (i * 4 + j) as f32).collect();
+            let layer = (i % 2) as usize;
+            let got = fresh.lookup(0xF1, layer, &x).expect("warm hit");
+            let want = warm.lookup(0xF1, layer, &x).unwrap();
+            assert_eq!(*got, *want, "entry {i}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_fingerprint_degrades_to_cold() {
+        let path = tmp("stale");
+        save(&warm_cache(0xA1), 0xA1, &path).expect("save");
+        let fresh = DmCache::new(&CacheConfig::with_mb(2));
+        let report = load(&fresh, 0xB2, &path);
+        assert!(report.rejected.as_deref().unwrap_or("").contains("fingerprint"), "{report:?}");
+        assert_eq!(report.entries, 0);
+        assert_eq!(fresh.stats().entries, 0, "stale snapshot must not warm the cache");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_corrupt_and_truncated_files_degrade_to_cold() {
+        let fresh = DmCache::new(&CacheConfig::with_mb(2));
+        let missing = load(&fresh, 1, &tmp("never_written"));
+        assert!(missing.rejected.is_some());
+
+        let garbage = tmp("garbage");
+        std::fs::write(&garbage, b"definitely not a snapshot").unwrap();
+        assert!(load(&fresh, 1, &garbage).rejected.is_some());
+
+        // valid file with one flipped payload byte: checksum rejects it
+        let warm = warm_cache(0xC3);
+        let path = tmp("bitflip");
+        save(&warm, 0xC3, &path).expect("save");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let report = load(&fresh, 0xC3, &path);
+        assert!(report.rejected.as_deref().unwrap_or("").contains("checksum"), "{report:?}");
+        assert_eq!(fresh.stats().entries, 0);
+        let _ = std::fs::remove_file(&garbage);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_filters_to_the_requested_fingerprint() {
+        let path = tmp("filter");
+        let c = warm_cache(0xD4);
+        let other = Arc::new(Decomp { beta: vec![1.0; 4], eta: vec![1.0; 2] });
+        c.insert(0xEE, 0, &[9.0, 9.0], &other);
+        let report = save(&c, 0xD4, &path).expect("save");
+        assert_eq!(report.entries, 5, "other model's entry excluded");
+        let _ = std::fs::remove_file(&path);
+    }
+}

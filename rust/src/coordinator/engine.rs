@@ -30,11 +30,13 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::cluster::memo::MemoConfig;
+use crate::cluster::router::shards_from_env;
 use crate::dataset::LayerPosterior;
 use crate::grng::{default_grng, split_seed};
 use crate::nn::batch::{evaluate_batch_planned, BatchResult};
 use crate::nn::bnn::{BnnModel, Method};
-use crate::nn::dmcache::{CacheConfig, CacheStats, CacheView, DmCache};
+use crate::nn::dmcache::{CacheConfig, CacheLease, CacheStats, CacheView, DmCache};
 use crate::nn::plan::{DataflowPlan, LogitBatch, ScratchPool};
 use crate::util::hash::hash_f32_matrix;
 
@@ -46,6 +48,60 @@ use super::vote;
 /// Worker-pool width default: one thread per available core.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Validate a request batch against a model's shape before evaluation.
+/// Shared by every backend (`Engine::run_batch`, `cluster::ClusterRouter`)
+/// so malformed methods and dims become error responses with identical
+/// wording everywhere instead of panicking a serving worker.
+pub fn validate_request(
+    num_layers: usize,
+    input_dim: usize,
+    inputs: &[Vec<f32>],
+    method: &Method,
+) -> Result<(), String> {
+    if let Method::DmBnn { schedule } = method {
+        if schedule.len() != num_layers {
+            return Err(format!(
+                "schedule covers {} layers, model has {num_layers}",
+                schedule.len()
+            ));
+        }
+    }
+    if method.voters() == 0 {
+        return Err("method has zero voters".to_string());
+    }
+    for (i, x) in inputs.iter().enumerate() {
+        if x.len() != input_dim {
+            return Err(format!("input {i}: dim {} != model dim {input_dim}", x.len()));
+        }
+    }
+    Ok(())
+}
+
+/// Chunked test-set accuracy driver shared by [`Engine::accuracy`] and
+/// the cluster router: evaluates `batch` inputs at a time through
+/// `predict` and scores the predicted classes against `labels`.
+pub fn accuracy_over<F>(images: &[f32], labels: &[u8], dim: usize, batch: usize, predict: F) -> f64
+where
+    F: Fn(&[Vec<f32>]) -> Vec<usize>,
+{
+    assert!(batch > 0, "batch size must be positive");
+    assert_eq!(images.len(), labels.len() * dim, "image buffer size mismatch");
+    let mut correct = 0usize;
+    for (chunk_idx, chunk) in labels.chunks(batch).enumerate() {
+        let base = chunk_idx * batch;
+        let inputs: Vec<Vec<f32>> = (0..chunk.len())
+            .map(|j| images[(base + j) * dim..(base + j + 1) * dim].to_vec())
+            .collect();
+        let preds = predict(&inputs);
+        for (&p, &l) in preds.iter().zip(chunk) {
+            if p == l as usize {
+                correct += 1;
+            }
+        }
+    }
+    correct as f64 / labels.len().max(1) as f64
 }
 
 /// Upper bound on compiled plans an engine memoizes (see
@@ -92,6 +148,20 @@ pub struct EngineConfig {
     /// parameter `hwsim` and the AOT dispatch planner use.  Results are
     /// bit-identical for every α; it shapes working-set size, not math.
     pub alpha: f64,
+    /// Cluster shard count — how many engines `cluster::ClusterRouter`
+    /// spawns from this config.  `Engine::new` itself is always one shard
+    /// and ignores this; 1 (the default, `BAYESDM_SHARDS` env toggle)
+    /// keeps the single-engine deployment shape.
+    pub shards: usize,
+    /// Response-level memoization budget for cluster deployments
+    /// (`cluster::memo`, off by default; `BAYESDM_MEMO_MB` env toggle).
+    /// Like `shards`, consumed by the cluster router, not by a bare
+    /// engine.
+    pub memo: MemoConfig,
+    /// Decomposition-cache snapshot path (`--cache-snapshot`): loaded at
+    /// deployment start, written at shutdown (`cluster::snapshot`).
+    /// `None` (the default) disables persistence.
+    pub snapshot: Option<String>,
 }
 
 impl Default for EngineConfig {
@@ -102,6 +172,9 @@ impl Default for EngineConfig {
             cache: CacheConfig::from_env(),
             seed_schedule: SeedSchedule::Sequence,
             alpha: 1.0,
+            shards: shards_from_env(),
+            memo: MemoConfig::from_env(),
+            snapshot: None,
         }
     }
 }
@@ -113,7 +186,10 @@ pub struct Engine {
     seed: u64,
     seed_schedule: SeedSchedule,
     alpha: f64,
-    cache: Option<DmCache>,
+    /// Decomposition-cache lease: a private cache for a standalone engine
+    /// (`Engine::new`), or one slice of a cluster's shared
+    /// `CacheService` (`Engine::with_cache_lease`).
+    cache: Option<CacheLease>,
     /// One compiled `DataflowPlan` per method seen (α baked in at compile
     /// time) — the "compiled once per (model, method)" contract.
     plans: Mutex<HashMap<Method, Arc<DataflowPlan>>>,
@@ -127,8 +203,16 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(model: BnnModel, cfg: EngineConfig) -> Self {
+        let lease = cfg.cache.enabled().then(|| CacheLease::private(&cfg.cache));
+        Self::with_cache_lease(model, cfg, lease)
+    }
+
+    /// Build an engine over an explicit cache lease — how the cluster
+    /// router shares ONE `CacheService` across its shard engines.
+    /// `cfg.cache` is ignored in favor of `cache` (pass `None` for a
+    /// cache-less engine); everything else behaves like [`Engine::new`].
+    pub fn with_cache_lease(model: BnnModel, cfg: EngineConfig, cache: Option<CacheLease>) -> Self {
         assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha must be in (0, 1]");
-        let cache = cfg.cache.enabled().then(|| DmCache::new(&cfg.cache));
         Self {
             model,
             workers: cfg.workers.max(1),
@@ -165,15 +249,24 @@ impl Engine {
     }
 
     /// The engine's decomposition cache bound to its model, if enabled.
+    /// Always attributed: on a private cache the attribution mirrors the
+    /// global counters; on a shared one it is this engine's slice.
     fn cache_view(&self) -> Option<CacheView<'_>> {
-        self.cache
-            .as_ref()
-            .map(|c| CacheView::new(c, self.model.fingerprint()))
+        let l = self.cache.as_ref()?;
+        Some(CacheView::attributed(&l.cache, self.model.fingerprint(), &l.attribution))
     }
 
-    /// Cache counters, `None` when the cache is disabled.
+    /// Cache counters, `None` when the cache is disabled.  On a shared
+    /// (cluster) cache these are the **aggregate** across all engines;
+    /// per-engine slices come from the cluster's shard breakdown.
     pub fn cache_stats(&self) -> Option<CacheStats> {
-        self.cache.as_ref().map(|c| c.stats())
+        self.cache.as_ref().map(|l| l.cache.stats())
+    }
+
+    /// Direct handle on the engine's cache (snapshot save/load), `None`
+    /// when disabled.
+    pub fn cache_ref(&self) -> Option<&DmCache> {
+        self.cache.as_ref().map(|l| l.cache.as_ref())
     }
 
     /// The SIMD kernel path this engine's batches execute with —
@@ -258,23 +351,9 @@ impl Engine {
     /// Batched test-set accuracy over a flat row-major image buffer,
     /// evaluated `batch` inputs at a time.
     pub fn accuracy(&self, images: &[f32], labels: &[u8], method: &Method, batch: usize) -> f64 {
-        assert!(batch > 0, "batch size must be positive");
-        let dim = self.input_dim();
-        assert_eq!(images.len(), labels.len() * dim, "image buffer size mismatch");
-        let mut correct = 0usize;
-        for (chunk_idx, chunk) in labels.chunks(batch).enumerate() {
-            let base = chunk_idx * batch;
-            let inputs: Vec<Vec<f32>> = (0..chunk.len())
-                .map(|j| images[(base + j) * dim..(base + j + 1) * dim].to_vec())
-                .collect();
-            let preds = self.predict_batch(&inputs, method);
-            for (&p, &l) in preds.iter().zip(chunk) {
-                if p == l as usize {
-                    correct += 1;
-                }
-            }
-        }
-        correct as f64 / labels.len().max(1) as f64
+        accuracy_over(images, labels, self.input_dim(), batch, |xs| {
+            self.predict_batch(xs, method)
+        })
     }
 }
 
@@ -287,24 +366,7 @@ impl InferenceBackend for Engine {
         // Reject malformed requests with an error instead of letting the
         // reference model's asserts panic (and kill) a server worker.
         let m = method.to_reference();
-        if let Method::DmBnn { schedule } = &m {
-            if schedule.len() != self.model.num_layers() {
-                return Err(format!(
-                    "schedule covers {} layers, model has {}",
-                    schedule.len(),
-                    self.model.num_layers()
-                ));
-            }
-        }
-        if m.voters() == 0 {
-            return Err("method has zero voters".to_string());
-        }
-        let dim = self.input_dim();
-        for (i, x) in inputs.iter().enumerate() {
-            if x.len() != dim {
-                return Err(format!("input {i}: dim {} != model dim {dim}", x.len()));
-            }
-        }
+        validate_request(self.model.num_layers(), self.input_dim(), inputs, &m)?;
         Ok(self.evaluate_batch(inputs, &m).logits)
     }
 }

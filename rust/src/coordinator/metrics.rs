@@ -8,6 +8,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::cluster::cacheservice::ShardBreakdown;
+use crate::cluster::memo::MemoStats;
 use crate::nn::dmcache::CacheStats;
 
 const RESERVOIR: usize = 4096;
@@ -71,6 +73,8 @@ impl Metrics {
             p99_us: self.latency_percentile_us(0.99),
             isa: crate::nn::simd::isa_label(),
             cache: None,
+            memo: None,
+            shards: Vec::new(),
         }
     }
 }
@@ -88,8 +92,15 @@ pub struct MetricsSummary {
     pub isa: &'static str,
     /// Feature-decomposition cache counters (hit/miss/eviction and the
     /// MULs/ADDs avoided), when a cache-enabled engine produced this
-    /// summary.
+    /// summary.  For a cluster deployment this is the shared service's
+    /// **aggregate**; `shards` carries the per-engine split.
     pub cache: Option<CacheStats>,
+    /// Response-memoization counters (`cluster::memo`), when a
+    /// memo-enabled cluster produced this summary.
+    pub memo: Option<MemoStats>,
+    /// Per-shard request/cache-attribution breakdown (empty for
+    /// single-engine deployments).
+    pub shards: Vec<ShardBreakdown>,
 }
 
 impl std::fmt::Display for MetricsSummary {
@@ -106,6 +117,12 @@ impl std::fmt::Display for MetricsSummary {
         )?;
         if let Some(c) = &self.cache {
             write!(f, "  cache[{c}]")?;
+        }
+        if let Some(m) = &self.memo {
+            write!(f, "  memo[{m}]")?;
+        }
+        for b in &self.shards {
+            write!(f, "  {b}")?;
         }
         Ok(())
     }
@@ -182,5 +199,24 @@ mod tests {
         let text = s.to_string();
         assert!(text.contains("cache[hits=3"), "{text}");
         assert!(text.contains("muls_avoided=99"), "{text}");
+    }
+
+    #[test]
+    fn display_includes_memo_and_shard_breakdown_when_present() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(7), 2);
+        let mut s = m.summary();
+        assert!(!s.to_string().contains("memo["), "no memo line when None");
+        assert!(!s.to_string().contains("shard0["), "no shard lines when empty");
+        s.memo = Some(MemoStats { hits: 5, muls_avoided: 123, ..MemoStats::default() });
+        s.shards = vec![
+            ShardBreakdown { shard: 0, requests: 4, ..ShardBreakdown::default() },
+            ShardBreakdown { shard: 1, requests: 3, ..ShardBreakdown::default() },
+        ];
+        let text = s.to_string();
+        assert!(text.contains("memo[hits=5"), "{text}");
+        assert!(text.contains("muls_avoided=123"), "{text}");
+        assert!(text.contains("shard0[requests=4"), "{text}");
+        assert!(text.contains("shard1[requests=3"), "{text}");
     }
 }

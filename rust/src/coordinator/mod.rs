@@ -22,7 +22,13 @@
 //!   returns predictions with latency metadata.
 //! * [`metrics`] — op/latency/throughput counters for the benches, plus
 //!   the decomposition-cache hit/miss/eviction and MULs-avoided counters
-//!   surfaced by cache-enabled engines (`nn::dmcache`, `--cache-mb`).
+//!   surfaced by cache-enabled engines (`nn::dmcache`, `--cache-mb`) and,
+//!   for cluster deployments (`crate::cluster`), the response-memo
+//!   counters and per-shard breakdown.
+//!
+//! A multi-engine deployment slots into the same [`server`] via
+//! `cluster::ClusterRouter`, which implements [`InferenceBackend`] — see
+//! `crate::cluster` for the sharding/memoization/persistence tier.
 
 pub mod engine;
 #[cfg(feature = "pjrt")]

@@ -36,6 +36,11 @@
 //! * [`hwsim`] — a cycle/energy/area model of the paper's 45 nm accelerator
 //!   (MAC datapath, CACTI-style SRAM, CLT GRNG cost) regenerating Table V
 //!   and Fig 7.
+//! * [`cluster`] — sharded multi-engine serving: hash-routed `Engine`
+//!   shards over one shared decomposition-cache service, response-level
+//!   memoization under content-derived seeds, and cache snapshot
+//!   persistence across restarts (`--shards`/`--memo-mb`/
+//!   `--cache-snapshot`).
 //!
 //! See `DESIGN.md` (repo root) for the architecture, the batched engine's
 //! threading/memoization model, the experiment index, and how to run the
@@ -46,6 +51,7 @@
 // algorithm listings.
 #![allow(clippy::needless_range_loop)]
 
+pub mod cluster;
 pub mod coordinator;
 pub mod dataset;
 pub mod util;

@@ -15,13 +15,18 @@
 //! artifact directory, or run on the self-contained synthetic model and
 //! dataset with `--synthetic` (no `make artifacts` needed).
 
+use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use bayesdm::bail;
+use bayesdm::cluster::router::shards_from_env;
+use bayesdm::cluster::{snapshot as cache_snapshot, ClusterRouter, MemoConfig};
 use bayesdm::coordinator::engine::default_workers;
 use bayesdm::coordinator::plan::{InferenceMethod, PlanSummary};
-use bayesdm::coordinator::{serve_engine, CacheConfig, Engine, EngineConfig, ServerConfig};
+use bayesdm::coordinator::{
+    serve, serve_engine, CacheConfig, Engine, EngineConfig, ServerConfig, ServerHandle,
+};
 use bayesdm::dataset::{load_images, load_weights, Dataset, SynthSpec, Synthesizer};
 use bayesdm::grng::uniform::XorShift128Plus;
 use bayesdm::grng::Ziggurat;
@@ -41,9 +46,11 @@ USAGE: bayesdm [--artifacts DIR] <subcommand> [flags]
 
 SUBCOMMANDS:
   serve    --method M --requests N --max-batch B --workers W [--synthetic]
-           [--cache-mb MB] [--alpha A] [--force-scalar]
+           [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
+           [--memo-mb MB] [--cache-snapshot PATH]
   eval     --method M --limit N --batch B --workers W [--synthetic]
-           [--cache-mb MB] [--alpha A] [--force-scalar]
+           [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
+           [--memo-mb MB] [--cache-snapshot PATH]
   tables   --table {3|4|5} [--limit N]
   fig6
   hwsweep
@@ -63,7 +70,19 @@ methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
 --force-scalar: pin the portable lane-blocked scalar kernels instead of
             the runtime-detected AVX2/NEON path (BAYESDM_FORCE_SCALAR=1
             does the same).  Results are bit-identical either way; the
-            selected kernel is reported in the run's metrics line.";
+            selected kernel is reported in the run's metrics line.
+--shards: engine shards of a cluster deployment (default 1, or the
+            BAYESDM_SHARDS env toggle).  >1 hash-routes each request over
+            N engines sharing ONE decomposition-cache budget; results are
+            bit-identical for every shard count (the cluster runs
+            content-derived seeds, per-request).
+--memo-mb: response-memoization budget in MiB (0 = off; BAYESDM_MEMO_MB
+            env toggle).  Exact (input, method) repeats skip the entire
+            voter sweep and replay memoized logits bit-exactly; implies a
+            cluster deployment even at --shards 1.
+--cache-snapshot: persist the decomposition cache to PATH at shutdown
+            and reload it at start (model-fingerprint-gated: stale
+            snapshots degrade to a cold start, never wrong results).";
 
 fn parse_method(s: &str, alpha: f64) -> Result<InferenceMethod> {
     InferenceMethod::parse(s, alpha)
@@ -86,6 +105,100 @@ fn cache_config(args: &mut Args) -> Result<CacheConfig> {
     let env_mb = env_default.capacity_bytes >> 20;
     let mb: usize = args.get_parse("cache-mb", env_mb).map_err(Error::msg)?;
     Ok(if mb > 0 { CacheConfig::with_mb(mb) } else { CacheConfig::disabled() })
+}
+
+/// The cluster trio shared by serve/eval: `--shards` (default from
+/// `BAYESDM_SHARDS`), `--memo-mb` (default from `BAYESDM_MEMO_MB`; an
+/// explicit 0 disables) and `--cache-snapshot` (empty = no persistence).
+fn cluster_flags(args: &mut Args) -> Result<(usize, MemoConfig, Option<String>)> {
+    let shards: usize = args.get_parse("shards", shards_from_env()).map_err(Error::msg)?;
+    if shards == 0 {
+        return Err(Error::msg("--shards must be >= 1"));
+    }
+    let env_mb = MemoConfig::from_env().capacity_bytes >> 20;
+    let memo_mb: usize = args.get_parse("memo-mb", env_mb).map_err(Error::msg)?;
+    let memo = if memo_mb > 0 { MemoConfig::with_mb(memo_mb) } else { MemoConfig::disabled() };
+    let snap = args.get("cache-snapshot", "");
+    Ok((shards, memo, (!snap.is_empty()).then_some(snap)))
+}
+
+/// `--cache-snapshot` persists the decomposition cache — with the cache
+/// disabled there is nothing to persist, and silently ignoring the flag
+/// would let an operator believe warm-up is configured when it is not.
+fn check_snapshot_needs_cache(snapshot: &Option<String>, cache: &CacheConfig) -> Result<()> {
+    if snapshot.is_some() && !cache.enabled() {
+        bail!("--cache-snapshot requires the decomposition cache (--cache-mb > 0)");
+    }
+    Ok(())
+}
+
+/// Submit `requests` test images through a running server and tally
+/// correctness — the serving loop shared by the single-engine and cluster
+/// deployments.
+fn run_serve_loop(
+    handle: &ServerHandle,
+    test: &Dataset,
+    m: &InferenceMethod,
+    requests: usize,
+) -> Result<(usize, usize, Duration)> {
+    let n = requests.min(test.len());
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        pending.push((
+            test.labels[i],
+            handle
+                .classify(test.image(i).to_vec(), m.clone())
+                .map_err(Error::msg)?,
+        ));
+    }
+    let mut correct = 0usize;
+    for (label, p) in pending {
+        match p.wait() {
+            Ok(r) if r.class == label as usize => correct += 1,
+            Ok(_) => {}
+            Err(e) => eprintln!("request failed: {e}"),
+        }
+    }
+    Ok((n, correct, t0.elapsed()))
+}
+
+fn print_serve_line(n: usize, correct: usize, dt: Duration) {
+    println!(
+        "served {n} requests in {:.2}s  ({:.1} req/s)  accuracy {:.2}%",
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64(),
+        100.0 * correct as f64 / n as f64
+    );
+}
+
+fn print_eval_line(method: &str, m: &InferenceMethod, n: usize, acc: f64, dt: Duration) {
+    println!(
+        "method={method} voters={} n={n} accuracy={:.2}% ({:.2}s, {:.1} ms/img)",
+        m.voters(),
+        100.0 * acc,
+        dt.as_secs_f64(),
+        dt.as_millis() as f64 / n as f64
+    );
+}
+
+/// Reload a single engine's private cache from `--cache-snapshot`, when
+/// both are configured (fingerprint-gated; failures degrade to cold).
+fn engine_snapshot_load(engine: &Engine, path: Option<&str>) {
+    if let (Some(path), Some(cache)) = (path, engine.cache_ref()) {
+        let rep = cache_snapshot::load(cache, engine.model().fingerprint(), Path::new(path));
+        println!("cache snapshot load: {rep}");
+    }
+}
+
+/// Persist a single engine's private cache to `--cache-snapshot`.
+fn engine_snapshot_save(engine: &Engine, path: Option<&str>) {
+    if let (Some(path), Some(cache)) = (path, engine.cache_ref()) {
+        match cache_snapshot::save(cache, engine.model().fingerprint(), Path::new(path)) {
+            Ok(rep) => println!("cache snapshot save: {rep}"),
+            Err(e) => eprintln!("cache snapshot save failed: {e}"),
+        }
+    }
 }
 
 /// Load the trained posterior + served test set, or the self-contained
@@ -125,47 +238,70 @@ fn main() -> Result<()> {
                 bayesdm::nn::simd::force_scalar();
             }
             let cache = cache_config(&mut args)?;
+            let (shards, memo, snapshot) = cluster_flags(&mut args)?;
             args.finish().map_err(Error::msg)?;
+            check_snapshot_needs_cache(&snapshot, &cache)?;
             let m = parse_method(&method, alpha)?;
             let (model, test) = load_model_and_data(&artifacts, synthetic)?;
-            let engine = Arc::new(Engine::new(
-                model,
-                EngineConfig { workers, seed: 0xBA135, cache, alpha, ..EngineConfig::default() },
-            ));
             // One dispatch worker: the engine pool is the parallelism.
             let cfg = ServerConfig { max_batch, workers: 1, ..ServerConfig::default() };
-            let handle = serve_engine(engine.clone(), cfg);
-            let n = requests.min(test.len());
-            let t0 = Instant::now();
-            let mut pending = Vec::with_capacity(n);
-            for i in 0..n {
-                pending.push((
-                    test.labels[i],
-                    handle
-                        .classify(test.image(i).to_vec(), m.clone())
-                        .map_err(Error::msg)?,
+            if shards > 1 || memo.enabled() {
+                // Cluster deployment: the router slots into the same
+                // server the single engine does.
+                let router = Arc::new(ClusterRouter::new(
+                    model,
+                    EngineConfig {
+                        workers,
+                        seed: 0xBA135,
+                        cache,
+                        alpha,
+                        shards,
+                        memo,
+                        snapshot,
+                        ..EngineConfig::default()
+                    },
                 ));
-            }
-            let mut correct = 0usize;
-            for (label, p) in pending {
-                match p.wait() {
-                    Ok(r) if r.class == label as usize => correct += 1,
-                    Ok(_) => {}
-                    Err(e) => eprintln!("request failed: {e}"),
+                if let Some(rep) = router.snapshot_load_report() {
+                    println!("cache snapshot load: {rep}");
                 }
+                let backend = router.clone();
+                let handle = serve(move || Ok(backend.clone()), cfg);
+                let (n, correct, dt) = run_serve_loop(&handle, &test, &m, requests)?;
+                print_serve_line(n, correct, dt);
+                let mut summary = handle.metrics.summary();
+                let cluster = router.metrics_summary();
+                summary.cache = cluster.cache;
+                summary.memo = cluster.memo;
+                summary.shards = cluster.shards;
+                println!("metrics: {summary}");
+                match router.save_snapshot() {
+                    Some(Ok(rep)) => println!("cache snapshot save: {rep}"),
+                    Some(Err(e)) => eprintln!("cache snapshot save failed: {e}"),
+                    None => {}
+                }
+                handle.shutdown();
+            } else {
+                let engine = Arc::new(Engine::new(
+                    model,
+                    EngineConfig {
+                        workers,
+                        seed: 0xBA135,
+                        cache,
+                        alpha,
+                        ..EngineConfig::default()
+                    },
+                ));
+                engine_snapshot_load(&engine, snapshot.as_deref());
+                let handle = serve_engine(engine.clone(), cfg);
+                let (n, correct, dt) = run_serve_loop(&handle, &test, &m, requests)?;
+                print_serve_line(n, correct, dt);
+                // fold the engine's cache counters into the server summary
+                let mut summary = handle.metrics.summary();
+                summary.cache = engine.cache_stats();
+                println!("metrics: {summary}");
+                engine_snapshot_save(&engine, snapshot.as_deref());
+                handle.shutdown();
             }
-            let dt = t0.elapsed();
-            println!(
-                "served {n} requests in {:.2}s  ({:.1} req/s)  accuracy {:.2}%",
-                dt.as_secs_f64(),
-                n as f64 / dt.as_secs_f64(),
-                100.0 * correct as f64 / n as f64
-            );
-            // fold the engine's cache counters into the server summary
-            let mut summary = handle.metrics.summary();
-            summary.cache = engine.cache_stats();
-            println!("metrics: {summary}");
-            handle.shutdown();
         }
         "eval" => {
             let method = args.get("method", "dm");
@@ -179,31 +315,77 @@ fn main() -> Result<()> {
                 bayesdm::nn::simd::force_scalar();
             }
             let cache = cache_config(&mut args)?;
+            let (shards, memo, snapshot) = cluster_flags(&mut args)?;
             args.finish().map_err(Error::msg)?;
+            check_snapshot_needs_cache(&snapshot, &cache)?;
             let m = parse_method(&method, alpha)?;
             let (model, test) = load_model_and_data(&artifacts, synthetic)?;
-            let engine = Engine::new(
-                model,
-                EngineConfig { workers, seed: 0xE7A1, cache, alpha, ..EngineConfig::default() },
-            );
             let n = limit.min(test.len());
             let t0 = Instant::now();
-            let acc = engine.accuracy(
-                &test.images[..n * test.dim],
-                &test.labels[..n],
-                &m.to_reference(),
-                batch,
-            );
-            println!(
-                "method={method} voters={} n={n} accuracy={:.2}% ({:.2}s, {:.1} ms/img)",
-                m.voters(),
-                100.0 * acc,
-                t0.elapsed().as_secs_f64(),
-                t0.elapsed().as_millis() as f64 / n as f64
-            );
-            println!("kernel: {}", engine.kernel_isa());
-            if let Some(stats) = engine.cache_stats() {
-                println!("cache: {stats}");
+            if shards > 1 || memo.enabled() {
+                let router = ClusterRouter::new(
+                    model,
+                    EngineConfig {
+                        workers,
+                        seed: 0xE7A1,
+                        cache,
+                        alpha,
+                        shards,
+                        memo,
+                        snapshot,
+                        ..EngineConfig::default()
+                    },
+                );
+                if let Some(rep) = router.snapshot_load_report() {
+                    println!("cache snapshot load: {rep}");
+                }
+                let acc = router.accuracy(
+                    &test.images[..n * test.dim],
+                    &test.labels[..n],
+                    &m.to_reference(),
+                    batch,
+                );
+                print_eval_line(&method, &m, n, acc, t0.elapsed());
+                let cluster = router.metrics_summary();
+                println!("kernel: {}  shards: {}", cluster.isa, router.shards());
+                if let Some(stats) = cluster.cache {
+                    println!("cache: {stats}");
+                }
+                if let Some(stats) = cluster.memo {
+                    println!("memo: {stats}");
+                }
+                for b in &cluster.shards {
+                    println!("{b}");
+                }
+                match router.save_snapshot() {
+                    Some(Ok(rep)) => println!("cache snapshot save: {rep}"),
+                    Some(Err(e)) => eprintln!("cache snapshot save failed: {e}"),
+                    None => {}
+                }
+            } else {
+                let engine = Engine::new(
+                    model,
+                    EngineConfig {
+                        workers,
+                        seed: 0xE7A1,
+                        cache,
+                        alpha,
+                        ..EngineConfig::default()
+                    },
+                );
+                engine_snapshot_load(&engine, snapshot.as_deref());
+                let acc = engine.accuracy(
+                    &test.images[..n * test.dim],
+                    &test.labels[..n],
+                    &m.to_reference(),
+                    batch,
+                );
+                print_eval_line(&method, &m, n, acc, t0.elapsed());
+                println!("kernel: {}", engine.kernel_isa());
+                if let Some(stats) = engine.cache_stats() {
+                    println!("cache: {stats}");
+                }
+                engine_snapshot_save(&engine, snapshot.as_deref());
             }
         }
         "tables" => {

@@ -77,6 +77,16 @@ pub struct BnnModel {
     fp: OnceLock<u64>,
 }
 
+/// Cloning copies the posterior and resets the fingerprint memo — the
+/// lazy recomputation is deterministic over the (identical) weight bits,
+/// so a clone fingerprints equal to its source.  Used by the cluster
+/// router, which gives each shard engine its own model copy.
+impl Clone for BnnModel {
+    fn clone(&self) -> Self {
+        Self { layers: self.layers.clone(), fp: OnceLock::new() }
+    }
+}
+
 impl BnnModel {
     pub fn new(layers: Vec<LayerPosterior>) -> Self {
         assert!(!layers.is_empty());

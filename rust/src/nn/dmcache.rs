@@ -31,12 +31,21 @@
 //! not cached.  Memory accounting covers the stored key and both product
 //! vectors plus a fixed per-entry overhead estimate.
 //!
-//! # Concurrency
+//! # Concurrency and sharing
 //!
 //! One mutex per shard (up to 16), held only for the map probe /
 //! insert — the GEMV itself always runs outside the lock, and the decomp
 //! payloads are shared read-only via `Arc`, so the scoped worker pool
 //! contends only on bucket metadata.  `DmCache` is `Sync` like `Engine`.
+//!
+//! A multi-engine deployment (`cluster::CacheService`) shares **one**
+//! `DmCache` across all engines through [`CacheLease`]s: one byte budget
+//! and one set of mutex shards re-partitioned across the engines instead
+//! of duplicated per engine, with per-engine hit/miss attribution tracked
+//! by each lease's [`ClientCounters`].  The global counters stay the
+//! aggregate; attribution is bookkeeping on the side and never affects
+//! results.  [`DmCache::export_for`] snapshots live entries for the
+//! warm-up/persistence path (`cluster::snapshot`).
 //!
 //! # Parity contract
 //!
@@ -226,6 +235,93 @@ impl std::fmt::Display for CacheStats {
     }
 }
 
+/// Per-client slice of a shared cache's traffic (see [`ClientCounters`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AttributionStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub muls_avoided: u64,
+    pub adds_avoided: u64,
+}
+
+impl std::fmt::Display for AttributionStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} muls_avoided={} adds_avoided={}",
+            self.hits, self.misses, self.muls_avoided, self.adds_avoided
+        )
+    }
+}
+
+/// Per-client attribution counters for a cache shared by several engines:
+/// the shared `DmCache` keeps the aggregate, one `ClientCounters` per
+/// lease splits it by engine.  Pure bookkeeping — attribution never
+/// affects lookup results.
+#[derive(Debug, Default)]
+pub struct ClientCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    muls_avoided: AtomicU64,
+    adds_avoided: AtomicU64,
+}
+
+impl ClientCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn record_hit(&self, decomp: &Decomp, x_len: usize) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        let skipped = LayerCost::new(decomp.eta.len(), x_len).precompute();
+        self.muls_avoided.fetch_add(skipped.muls, Ordering::Relaxed);
+        self.adds_avoided.fetch_add(skipped.adds, Ordering::Relaxed);
+    }
+
+    fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> AttributionStats {
+        AttributionStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            muls_avoided: self.muls_avoided.load(Ordering::Relaxed),
+            adds_avoided: self.adds_avoided.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One engine's handle on a (possibly shared) cache: the cache itself
+/// plus that engine's attribution counters.  `Engine::new` builds a
+/// private lease; `cluster::CacheService` hands out leases over one
+/// shared cache.
+#[derive(Clone)]
+pub struct CacheLease {
+    pub cache: Arc<DmCache>,
+    pub attribution: Arc<ClientCounters>,
+}
+
+impl CacheLease {
+    /// A lease over a cache nobody else shares (the single-engine shape).
+    pub fn private(cfg: &CacheConfig) -> Self {
+        Self {
+            cache: Arc::new(DmCache::new(cfg)),
+            attribution: Arc::new(ClientCounters::new()),
+        }
+    }
+}
+
+/// One live entry cloned out of the cache for snapshot persistence
+/// (`cluster::snapshot`): the full stored key minus the fingerprint the
+/// caller filtered on, plus the decomposition payload.
+#[derive(Debug, Clone)]
+pub struct ExportedEntry {
+    pub layer: u32,
+    pub x: Vec<f32>,
+    pub decomp: Arc<Decomp>,
+}
+
 /// The sharded, bounded-memory decomposition cache.
 pub struct DmCache {
     shards: Vec<Mutex<Shard>>,
@@ -349,6 +445,28 @@ impl DmCache {
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
     }
 
+    /// Clone every live entry belonging to model `fp` out of the cache —
+    /// the snapshot writer's source.  Order is not canonical (map
+    /// iteration); the set of entries is deterministic for a fixed cache
+    /// state.  Decomp payloads are `Arc`-shared, so this copies keys, not
+    /// matrices.
+    pub fn export_for(&self, fp: u64) -> Vec<ExportedEntry> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            for e in s.map.values() {
+                if e.fp == fp {
+                    out.push(ExportedEntry {
+                        layer: e.layer,
+                        x: e.x.clone(),
+                        decomp: e.decomp.clone(),
+                    });
+                }
+            }
+        }
+        out
+    }
+
     /// Counter snapshot (entry/byte totals take each shard lock briefly).
     pub fn stats(&self) -> CacheStats {
         let (mut entries, mut bytes) = (0u64, 0u64);
@@ -388,20 +506,36 @@ fn slices_bit_equal(a: &[f32], b: &[f32]) -> bool {
 }
 
 /// A cache bound to one model's fingerprint — the handle the evaluation
-/// paths thread down (copyable, lock-free by itself).
+/// paths thread down (copyable, lock-free by itself).  Optionally carries
+/// a client's [`ClientCounters`] so a shared cache can attribute traffic
+/// per engine.
 #[derive(Clone, Copy)]
 pub struct CacheView<'a> {
     cache: &'a DmCache,
     fp: u64,
+    attr: Option<&'a ClientCounters>,
 }
 
 impl<'a> CacheView<'a> {
     pub fn new(cache: &'a DmCache, fingerprint: u64) -> Self {
-        Self { cache, fp: fingerprint }
+        Self { cache, fp: fingerprint, attr: None }
+    }
+
+    /// A view that additionally books every hit/miss into `attr` — the
+    /// per-engine slice of a shared cache's aggregate counters.
+    pub fn attributed(cache: &'a DmCache, fingerprint: u64, attr: &'a ClientCounters) -> Self {
+        Self { cache, fp: fingerprint, attr: Some(attr) }
     }
 
     pub fn lookup(&self, layer: usize, x: &[f32]) -> Option<Arc<Decomp>> {
-        self.cache.lookup(self.fp, layer, x)
+        let got = self.cache.lookup(self.fp, layer, x);
+        if let Some(a) = self.attr {
+            match &got {
+                Some(d) => a.record_hit(d, x.len()),
+                None => a.record_miss(),
+            }
+        }
+        got
     }
 
     pub fn insert(&self, layer: usize, x: &[f32], decomp: &Arc<Decomp>) {
@@ -532,6 +666,61 @@ mod tests {
         assert!(CacheConfig::with_mb(8).enabled());
         assert_eq!(CacheConfig::with_mb(2).capacity_bytes, 2 << 20);
         assert_eq!(CacheConfig::default(), CacheConfig::disabled());
+    }
+
+    #[test]
+    fn attributed_views_split_the_aggregate() {
+        let c = DmCache::new(&CacheConfig::with_mb(1));
+        let (a, b) = (ClientCounters::new(), ClientCounters::new());
+        let va = CacheView::attributed(&c, 7, &a);
+        let vb = CacheView::attributed(&c, 7, &b);
+        let x = vec![1.0f32, 2.0, 3.0];
+        assert!(va.lookup(0, &x).is_none()); // a: miss
+        va.insert(0, &x, &decomp(4, 3, 0.5));
+        assert!(va.lookup(0, &x).is_some()); // a: hit
+        assert!(vb.lookup(0, &x).is_some()); // b: hit
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        assert_eq!((sa.hits, sa.misses), (1, 1));
+        assert_eq!((sb.hits, sb.misses), (1, 0));
+        assert_eq!(sa.muls_avoided, 24);
+        assert_eq!(sb.muls_avoided, 24);
+        // the global counters remain the aggregate of both clients
+        let total = c.stats();
+        assert_eq!(total.hits, sa.hits + sb.hits);
+        assert_eq!(total.misses, sa.misses + sb.misses);
+        assert_eq!(total.muls_avoided, sa.muls_avoided + sb.muls_avoided);
+    }
+
+    #[test]
+    fn export_filters_by_fingerprint_and_roundtrips() {
+        let c = DmCache::new(&CacheConfig::with_mb(1));
+        let x = vec![1.0f32, 2.0];
+        let y = vec![3.0f32, 4.0];
+        c.insert(1, 0, &x, &decomp(2, 2, 0.1));
+        c.insert(1, 1, &y, &decomp(3, 2, 0.2));
+        c.insert(2, 0, &x, &decomp(2, 2, 0.9)); // other model
+        let exported = c.export_for(1);
+        assert_eq!(exported.len(), 2);
+        // re-importing into a fresh cache reproduces the hits bit-exactly
+        let fresh = DmCache::new(&CacheConfig::with_mb(1));
+        for e in &exported {
+            fresh.insert(1, e.layer as usize, &e.x, &e.decomp);
+        }
+        assert_eq!(*fresh.lookup(1, 0, &x).expect("warm"), *c.lookup(1, 0, &x).unwrap());
+        assert_eq!(*fresh.lookup(1, 1, &y).expect("warm"), *c.lookup(1, 1, &y).unwrap());
+        assert!(fresh.lookup(2, 0, &x).is_none(), "other model stays cold");
+    }
+
+    #[test]
+    fn private_lease_is_self_contained() {
+        let lease = CacheLease::private(&CacheConfig::with_mb(1));
+        let x = vec![5.0f32; 3];
+        let view = CacheView::attributed(&lease.cache, 9, &lease.attribution);
+        assert!(view.lookup(0, &x).is_none());
+        view.insert(0, &x, &decomp(2, 3, 1.0));
+        assert!(view.lookup(0, &x).is_some());
+        let s = lease.attribution.snapshot();
+        assert_eq!((s.hits, s.misses), (1, 1));
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Parity and persistence contract of the cluster subsystem
+//! (`cluster::*`): shard count, shared cache, response memo and snapshot
+//! state are **invisible in the results** — logits and logical op counts
+//! are bit-identical between a 1-shard and an N-shard deployment, across
+//! every method, for cache/memo on and off; snapshots restore warm hits
+//! bit-exactly and stale snapshots degrade to a cold start.
+//!
+//! Zero artifact dependencies: everything runs on the synthetic posterior.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bayesdm::cluster::{ClusterRouter, MemoConfig};
+use bayesdm::coordinator::{
+    serve, CacheConfig, Engine, EngineConfig, InferenceMethod, SeedSchedule, ServerConfig,
+};
+use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+use bayesdm::nn::bnn::{BnnModel, Method};
+
+const SEED: u64 = 0xC1A57E8;
+const ARCH: [usize; 4] = [20, 16, 10, 6];
+
+fn model() -> BnnModel {
+    BnnModel::synthetic(&ARCH, 0xAB)
+}
+
+/// Fully explicit config — env toggles (the CI legs set cache/shard/memo
+/// defaults) must not leak into parity baselines.
+fn cfg(shards: usize, cache: CacheConfig, memo: MemoConfig) -> EngineConfig {
+    EngineConfig {
+        workers: 2,
+        seed: SEED,
+        cache,
+        seed_schedule: SeedSchedule::ContentHash,
+        alpha: 1.0,
+        shards,
+        memo,
+        snapshot: None,
+    }
+}
+
+fn router(shards: usize, cache: CacheConfig, memo: MemoConfig) -> ClusterRouter {
+    ClusterRouter::new(model(), cfg(shards, cache, memo))
+}
+
+/// `count` slots drawn from `distinct` underlying images (round-robin),
+/// so the stream carries exact repeats when `distinct < count`.
+fn dup_inputs(count: usize, distinct: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut r = XorShift128Plus::new(seed);
+    let pool: Vec<Vec<f32>> = (0..distinct)
+        .map(|_| (0..ARCH[0]).map(|_| r.next_f32()).collect())
+        .collect();
+    (0..count).map(|i| pool[i % distinct].clone()).collect()
+}
+
+fn methods() -> [Method; 3] {
+    [
+        Method::Standard { t: 5 },
+        Method::Hybrid { t: 5 },
+        Method::DmBnn { schedule: vec![2, 3, 2] },
+    ]
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bayesdm_cluster_{}_{name}.snap", std::process::id()))
+}
+
+/// The acceptance contract: N-shard output is bit-identical to the
+/// 1-shard baseline — logits AND logical op counts — for all three
+/// methods, with the shared cache and the response memo each on and off,
+/// on cold and warm rounds.
+#[test]
+fn n_shard_parity_across_methods_cache_and_memo() {
+    let xs = dup_inputs(12, 4, 7);
+    for method in &methods() {
+        let baseline = router(1, CacheConfig::disabled(), MemoConfig::disabled());
+        let want = baseline.evaluate(&xs, method).expect("baseline");
+        for shards in [2usize, 4] {
+            for cache_on in [false, true] {
+                for memo_on in [false, true] {
+                    let cache =
+                        if cache_on { CacheConfig::with_mb(8) } else { CacheConfig::disabled() };
+                    let memo =
+                        if memo_on { MemoConfig::with_mb(4) } else { MemoConfig::disabled() };
+                    let r = router(shards, cache, memo);
+                    for round in 0..2 {
+                        let got = r.evaluate(&xs, method).expect("cluster evaluate");
+                        let tag = format!(
+                            "{method:?} shards={shards} cache={cache_on} memo={memo_on} r{round}"
+                        );
+                        assert_eq!(got.logits, want.logits, "{tag}");
+                        assert_eq!(got.ops.muls, want.ops.muls, "{tag}");
+                        assert_eq!(got.ops.adds, want.ops.adds, "{tag}");
+                    }
+                    if memo_on {
+                        let stats = r.metrics_summary().memo.expect("memo enabled");
+                        assert!(stats.hits > 0, "{method:?}: repeats must hit the memo");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The cluster's evaluation unit is one request under `ContentHash`, so a
+/// bare engine evaluating single-request batches on the same seed is the
+/// single-engine baseline the router must reproduce bit-exactly.
+#[test]
+fn cluster_matches_single_engine_content_hash_baseline() {
+    let engine = Engine::new(model(), cfg(1, CacheConfig::disabled(), MemoConfig::disabled()));
+    let xs = dup_inputs(8, 3, 11);
+    for method in &methods() {
+        for shards in [1usize, 4] {
+            let r = router(shards, CacheConfig::disabled(), MemoConfig::disabled());
+            let got = r.evaluate(&xs, method).expect("cluster");
+            let mut engine_ops_muls = 0u64;
+            let mut engine_ops_adds = 0u64;
+            for (i, x) in xs.iter().enumerate() {
+                let one = engine.evaluate_batch(std::slice::from_ref(x), method);
+                assert_eq!(
+                    got.logits.input(i).flat(),
+                    one.logits.input(0).flat(),
+                    "{method:?} shards={shards} input {i}"
+                );
+                engine_ops_muls += one.ops.muls;
+                engine_ops_adds += one.ops.adds;
+            }
+            assert_eq!(got.ops.muls, engine_ops_muls, "{method:?} shards={shards}");
+            assert_eq!(got.ops.adds, engine_ops_adds, "{method:?} shards={shards}");
+        }
+    }
+}
+
+/// Fully-repeated traffic through a memo-enabled cluster: the second
+/// round performs zero arithmetic while reporting unchanged logical
+/// counts — the avoided ops are reported distinctly, not under-counted.
+#[test]
+fn warm_memo_round_avoids_every_operation() {
+    let r = router(2, CacheConfig::disabled(), MemoConfig::with_mb(8));
+    let xs = dup_inputs(6, 6, 13);
+    let m = Method::DmBnn { schedule: vec![2, 3, 2] };
+    let cold = r.evaluate(&xs, &m).expect("cold");
+    assert_eq!(cold.ops.muls_avoided, 0);
+    let warm = r.evaluate(&xs, &m).expect("warm");
+    assert_eq!(warm.logits, cold.logits);
+    assert_eq!(warm.ops.muls, cold.ops.muls, "logical counts must not move");
+    assert_eq!(warm.ops.performed_muls(), 0, "warm round is pure replay");
+    assert_eq!(warm.ops.performed_adds(), 0);
+}
+
+/// Snapshot round-trip: save a warm cache, "restart" into a fresh
+/// deployment, and the first evaluation of the same requests must be
+/// served warm (cache hits from request one) with bit-identical
+/// responses.
+#[test]
+fn snapshot_roundtrip_restores_warm_bit_identical_serving() {
+    let path = tmp("roundtrip");
+    let _ = std::fs::remove_file(&path);
+    let xs = dup_inputs(8, 4, 17);
+    let m = Method::DmBnn { schedule: vec![2, 3, 2] };
+
+    let mut snap_cfg = cfg(2, CacheConfig::with_mb(8), MemoConfig::disabled());
+    snap_cfg.snapshot = Some(path.to_string_lossy().into_owned());
+    let want = {
+        let first = ClusterRouter::new(model(), snap_cfg.clone());
+        let report = first.snapshot_load_report().expect("snapshot configured");
+        assert!(report.rejected.is_some(), "no file yet: must start cold, not fail");
+        let want = first.evaluate(&xs, &m).expect("first deployment");
+        let saved = first.save_snapshot().expect("configured").expect("save ok");
+        assert!(saved.entries > 0, "warm cache must export entries");
+        want
+        // drop saves again on shutdown — idempotent by construction
+    };
+
+    let restarted = ClusterRouter::new(model(), snap_cfg);
+    let loaded = restarted.snapshot_load_report().expect("snapshot configured").clone();
+    assert_eq!(loaded.rejected, None, "{loaded}");
+    assert!(loaded.entries > 0);
+    let got = restarted.evaluate(&xs, &m).expect("restarted deployment");
+    assert_eq!(got.logits, want.logits, "restart must replay bit-exactly");
+    assert_eq!(got.ops.muls, want.ops.muls);
+    let stats = restarted.metrics_summary().cache.expect("cache enabled");
+    assert!(stats.hits > 0, "first post-restart evaluation must hit warm entries: {stats}");
+    drop(restarted); // drop persists once more; remove only afterwards
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A snapshot written for another model is rejected wholesale: the
+/// deployment starts cold and still answers bit-identically to a
+/// never-persisted deployment.
+#[test]
+fn stale_fingerprint_snapshot_is_rejected_and_harmless() {
+    let path = tmp("stale");
+    let _ = std::fs::remove_file(&path);
+    let xs = dup_inputs(6, 3, 19);
+    let m = Method::Hybrid { t: 4 };
+
+    // persist a cache warmed by a DIFFERENT posterior
+    let mut other_cfg = cfg(1, CacheConfig::with_mb(8), MemoConfig::disabled());
+    other_cfg.snapshot = Some(path.to_string_lossy().into_owned());
+    {
+        let other = ClusterRouter::new(BnnModel::synthetic(&ARCH, 0xDEAD), other_cfg);
+        let _ = other.evaluate(&xs, &m).expect("other model");
+        other.save_snapshot().expect("configured").expect("save ok");
+    }
+
+    let mut stale_cfg = cfg(2, CacheConfig::with_mb(8), MemoConfig::disabled());
+    stale_cfg.snapshot = Some(path.to_string_lossy().into_owned());
+    let r = ClusterRouter::new(model(), stale_cfg);
+    let report = r.snapshot_load_report().expect("snapshot configured");
+    assert!(
+        report.rejected.as_deref().unwrap_or("").contains("fingerprint"),
+        "stale snapshot must be rejected: {report:?}"
+    );
+    assert_eq!(report.entries, 0);
+    let cold = router(2, CacheConfig::with_mb(8), MemoConfig::disabled());
+    let got = r.evaluate(&xs, &m).expect("stale-snapshot deployment");
+    let want = cold.evaluate(&xs, &m).expect("cold deployment");
+    assert_eq!(got.logits, want.logits, "rejected snapshot must behave exactly cold");
+    assert_eq!(got.ops.muls, want.ops.muls);
+    drop(r); // drop persists this deployment's own (valid) snapshot
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The router slots into the generic server exactly like an engine: the
+/// existing admission/batching/error paths run unchanged on top of a
+/// sharded deployment.
+#[test]
+fn cluster_serves_end_to_end_through_the_generic_server() {
+    let r = Arc::new(router(3, CacheConfig::with_mb(8), MemoConfig::with_mb(4)));
+    let backend = r.clone();
+    let handle = serve(
+        move || Ok(backend.clone()),
+        ServerConfig { max_batch: 4, workers: 2, ..ServerConfig::default() },
+    );
+    let m = InferenceMethod::Standard { t: 4 };
+    let n = 12;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let image = vec![i as f32 / n as f32; ARCH[0]];
+        pending.push(handle.classify(image, m.clone()).unwrap());
+    }
+    for p in pending {
+        let resp = p.wait().expect("response");
+        assert!(resp.class < ARCH[3]);
+        assert_eq!(resp.voters, 4);
+    }
+    // malformed traffic errors without killing the deployment
+    let bad = handle.classify(vec![0.0; 3], m.clone()).unwrap();
+    assert!(bad.wait().is_err());
+    let broken = InferenceMethod::DmBnn { schedule: vec![9], alpha: 1.0 };
+    let p = handle.classify(vec![0.5; ARCH[0]], broken).unwrap();
+    assert!(p.wait().is_err());
+    let p = handle.classify(vec![0.5; ARCH[0]], m).unwrap();
+    assert!(p.wait().is_ok());
+    assert_eq!(handle.metrics.summary().requests, n as u64 + 1);
+    assert_eq!(handle.metrics.summary().errors, 2);
+    handle.shutdown();
+    let total: u64 = r.shard_breakdown().iter().map(|b| b.requests).sum();
+    assert!(total > 0, "requests must be attributed to shards");
+}
+
+/// A deployment built from `EngineConfig::default()` — whatever the
+/// environment toggles say (the CI cluster leg sets `BAYESDM_SHARDS=4
+/// BAYESDM_MEMO_MB=32`) — answers bit-identically to the explicit
+/// 1-shard, cache-less, memo-less reference.
+#[test]
+fn env_default_deployment_is_parity_safe() {
+    let from_env = ClusterRouter::new(
+        model(),
+        EngineConfig { workers: 2, seed: SEED, ..EngineConfig::default() },
+    );
+    let reference = router(1, CacheConfig::disabled(), MemoConfig::disabled());
+    let xs = dup_inputs(10, 4, 23);
+    for method in &methods() {
+        let want = reference.evaluate(&xs, method).expect("reference");
+        for round in 0..2 {
+            let got = from_env.evaluate(&xs, method).expect("env deployment");
+            assert_eq!(got.logits, want.logits, "{method:?} r{round}");
+            assert_eq!(got.ops.muls, want.ops.muls, "{method:?} r{round}");
+            assert_eq!(got.ops.adds, want.ops.adds, "{method:?} r{round}");
+        }
+    }
+}
