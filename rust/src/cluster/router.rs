@@ -54,6 +54,7 @@ use crate::nn::bnn::{BnnModel, Method};
 use crate::nn::dmcache::CacheConfig;
 use crate::nn::plan::LogitBatch;
 use crate::opcount::counter::OpCounter;
+use crate::serve::ServeError;
 
 use super::cacheservice::{CacheService, ShardBreakdown};
 use super::memo::{request_key, slices_bit_equal, MemoConfig, MemoResponse, ResponseMemo};
@@ -229,7 +230,7 @@ impl ClusterRouter {
     /// `None` when no path or no cache is configured.  Drop saves too,
     /// but only if traffic arrived after the last successful save, so a
     /// clean CLI shutdown does not write the same snapshot twice.
-    pub fn save_snapshot(&self) -> Option<Result<SnapshotReport, String>> {
+    pub fn save_snapshot(&self) -> Option<Result<SnapshotReport, ServeError>> {
         let (svc, path) = match (&self.service, &self.snapshot_path) {
             (Some(svc), Some(path)) => (svc, path),
             _ => return None,
@@ -253,7 +254,11 @@ impl ClusterRouter {
     /// duplicates replay its response (sound for exactly the reason memo
     /// hits are — the answer is a pure function of `(input, method)`),
     /// booked as logical-but-avoided work like any other replay.
-    pub fn evaluate(&self, inputs: &[Vec<f32>], method: &Method) -> Result<BatchResult, String> {
+    pub fn evaluate(
+        &self,
+        inputs: &[Vec<f32>],
+        method: &Method,
+    ) -> Result<BatchResult, ServeError> {
         validate_request(self.num_layers, self.input_dim, inputs, method)?;
         let voters = method.voters();
         let stride = voters * self.classes;
@@ -289,13 +294,15 @@ impl ClusterRouter {
             let job =
                 ShardJob { slot, input: x.clone(), method: method.clone(), respond: rtx.clone() };
             // bounded queue: a full shard blocks the caller — backpressure
-            self.txs[shard].send(job).map_err(|_| "shard worker shut down".to_string())?;
+            self.txs[shard]
+                .send(job)
+                .map_err(|_| ServeError::internal("shard worker shut down"))?;
             self.dispatched[shard].fetch_add(1, Ordering::Relaxed);
         }
         drop(rtx);
 
         for _ in 0..dup_slots.len() {
-            let reply = rrx.recv().map_err(|_| "shard worker died".to_string())?;
+            let reply = rrx.recv().map_err(|_| ServeError::internal("shard worker died"))?;
             logits.data_mut()[reply.slot * stride..(reply.slot + 1) * stride]
                 .copy_from_slice(&reply.flat);
             ops += reply.ops;
@@ -368,7 +375,7 @@ impl InferenceBackend for ClusterRouter {
         &self,
         inputs: &[Vec<f32>],
         method: &InferenceMethod,
-    ) -> Result<LogitBatch, String> {
+    ) -> Result<LogitBatch, ServeError> {
         self.evaluate(inputs, &method.to_reference()).map(|r| r.logits)
     }
 }
@@ -459,11 +466,12 @@ mod tests {
         let r = router(2);
         let m = Method::Standard { t: 2 };
         let err = r.evaluate(&[vec![0.0; 3]], &m).unwrap_err();
-        assert!(err.contains("dim"), "{err}");
+        assert!(matches!(err, ServeError::DimMismatch(_)), "{err:?}");
+        assert!(err.to_string().contains("dim"), "{err}");
         let err = r.evaluate(&inputs(1, 2), &Method::DmBnn { schedule: vec![2, 2] }).unwrap_err();
-        assert!(err.contains("layers"), "{err}");
+        assert!(err.to_string().contains("layers"), "{err}");
         let err = r.evaluate(&inputs(1, 2), &Method::Standard { t: 0 }).unwrap_err();
-        assert!(err.contains("zero voters"), "{err}");
+        assert!(err.to_string().contains("zero voters"), "{err}");
     }
 
     #[test]

@@ -43,6 +43,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::nn::dmcache::{Decomp, DmCache};
+use crate::serve::ServeError;
 use crate::util::hash::{fnv1a_bytes, mix64, FNV_OFFSET};
 
 /// Snapshot file magic (8 bytes).
@@ -84,7 +85,7 @@ fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
 /// Serialize every live entry of model `fp` to `path` (written to a
 /// `.tmp` sibling first, then renamed, so a crash mid-save cannot leave a
 /// torn file where the next start expects a snapshot).
-pub fn save(cache: &DmCache, fp: u64, path: &Path) -> Result<SnapshotReport, String> {
+pub fn save(cache: &DmCache, fp: u64, path: &Path) -> Result<SnapshotReport, ServeError> {
     let entries = cache.export_for(fp);
     let mut payload = Vec::new();
     for e in &entries {
@@ -105,9 +106,11 @@ pub fn save(cache: &DmCache, fp: u64, path: &Path) -> Result<SnapshotReport, Str
     file.extend_from_slice(&payload);
 
     let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, &file).map_err(|e| format!("write {}: {e}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
-        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+    std::fs::write(&tmp, &file)
+        .map_err(|e| ServeError::internal(format!("write {}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        ServeError::internal(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+    })?;
     Ok(SnapshotReport { entries: entries.len(), payload_bytes: payload.len(), rejected: None })
 }
 

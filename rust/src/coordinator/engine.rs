@@ -38,6 +38,7 @@ use crate::nn::batch::{evaluate_batch_planned, BatchResult};
 use crate::nn::bnn::{BnnModel, Method};
 use crate::nn::dmcache::{CacheConfig, CacheLease, CacheStats, CacheView, DmCache};
 use crate::nn::plan::{DataflowPlan, LogitBatch, ScratchPool};
+use crate::serve::ServeError;
 use crate::util::hash::hash_f32_matrix;
 
 use super::metrics::{Metrics, MetricsSummary};
@@ -59,21 +60,24 @@ pub fn validate_request(
     input_dim: usize,
     inputs: &[Vec<f32>],
     method: &Method,
-) -> Result<(), String> {
+) -> Result<(), ServeError> {
     if let Method::DmBnn { schedule } = method {
         if schedule.len() != num_layers {
-            return Err(format!(
+            return Err(ServeError::BadRequest(format!(
                 "schedule covers {} layers, model has {num_layers}",
                 schedule.len()
-            ));
+            )));
         }
     }
     if method.voters() == 0 {
-        return Err("method has zero voters".to_string());
+        return Err(ServeError::BadRequest("method has zero voters".into()));
     }
     for (i, x) in inputs.iter().enumerate() {
         if x.len() != input_dim {
-            return Err(format!("input {i}: dim {} != model dim {input_dim}", x.len()));
+            return Err(ServeError::DimMismatch(format!(
+                "input {i}: dim {} != model dim {input_dim}",
+                x.len()
+            )));
         }
     }
     Ok(())
@@ -362,7 +366,7 @@ impl InferenceBackend for Engine {
         &self,
         inputs: &[Vec<f32>],
         method: &InferenceMethod,
-    ) -> Result<LogitBatch, String> {
+    ) -> Result<LogitBatch, ServeError> {
         // Reject malformed requests with an error instead of letting the
         // reference model's asserts panic (and kill) a server worker.
         let m = method.to_reference();
@@ -594,7 +598,8 @@ mod tests {
         let bad = vec![vec![0.0f32; 3]];
         let m = InferenceMethod::Standard { t: 2 };
         let err = e.run_batch(&bad, &m).unwrap_err();
-        assert!(err.contains("dim"), "{err}");
+        assert!(matches!(err, ServeError::DimMismatch(_)), "{err:?}");
+        assert!(err.to_string().contains("dim"), "{err}");
     }
 
     #[test]
@@ -605,9 +610,10 @@ mod tests {
         let xs = inputs(1, 16, 6);
         let short = InferenceMethod::DmBnn { schedule: vec![2, 2], alpha: 1.0 };
         let err = e.run_batch(&xs, &short).unwrap_err();
-        assert!(err.contains("layers"), "{err}");
+        assert!(matches!(err, ServeError::BadRequest(_)), "{err:?}");
+        assert!(err.to_string().contains("layers"), "{err}");
         let empty = InferenceMethod::Standard { t: 0 };
         let err = e.run_batch(&xs, &empty).unwrap_err();
-        assert!(err.contains("zero voters"), "{err}");
+        assert!(err.to_string().contains("zero voters"), "{err}");
     }
 }

@@ -315,11 +315,11 @@ impl super::server::InferenceBackend for Executor {
         &self,
         inputs: &[Vec<f32>],
         method: &super::plan::InferenceMethod,
-    ) -> std::result::Result<crate::nn::plan::LogitBatch, String> {
+    ) -> std::result::Result<crate::nn::plan::LogitBatch, crate::serve::ServeError> {
         let stacks = inputs
             .iter()
-            .map(|x| self.evaluate(x, method).map_err(|e| e.to_string()))
-            .collect::<std::result::Result<Vec<_>, String>>()?;
+            .map(|x| self.evaluate(x, method).map_err(crate::serve::ServeError::internal))
+            .collect::<std::result::Result<Vec<_>, crate::serve::ServeError>>()?;
         Ok(crate::nn::plan::LogitBatch::from_stacks(&stacks))
     }
 }

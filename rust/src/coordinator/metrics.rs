@@ -4,6 +4,7 @@
 //! a fixed-size ring guarded by a mutex that is only touched once per
 //! request (not per voter/dispatch).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -11,6 +12,7 @@ use std::time::Duration;
 use crate::cluster::cacheservice::ShardBreakdown;
 use crate::cluster::memo::MemoStats;
 use crate::nn::dmcache::CacheStats;
+use crate::util::json::Json;
 
 const RESERVOIR: usize = 4096;
 
@@ -101,6 +103,69 @@ pub struct MetricsSummary {
     /// Per-shard request/cache-attribution breakdown (empty for
     /// single-engine deployments).
     pub shards: Vec<ShardBreakdown>,
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+impl MetricsSummary {
+    /// Render as a JSON object — what `GET /metrics` and the binary
+    /// `MetricsRequest` frame serve.  Counters are exact up to 2⁵³ (JSON
+    /// numbers are f64); absent percentiles render as `null`, and the
+    /// cache/memo/shard sections appear only when present, mirroring
+    /// `Display`.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("requests".to_string(), num(self.requests));
+        o.insert("errors".to_string(), num(self.errors));
+        o.insert("voters".to_string(), num(self.voters));
+        o.insert("p50_us".to_string(), self.p50_us.map(num).unwrap_or(Json::Null));
+        o.insert("p99_us".to_string(), self.p99_us.map(num).unwrap_or(Json::Null));
+        o.insert("kernel".to_string(), Json::Str(self.isa.to_string()));
+        if let Some(c) = &self.cache {
+            let mut co = BTreeMap::new();
+            co.insert("hits".to_string(), num(c.hits));
+            co.insert("misses".to_string(), num(c.misses));
+            co.insert("insertions".to_string(), num(c.insertions));
+            co.insert("evictions".to_string(), num(c.evictions));
+            co.insert("entries".to_string(), num(c.entries));
+            co.insert("bytes".to_string(), num(c.bytes));
+            co.insert("muls_avoided".to_string(), num(c.muls_avoided));
+            co.insert("adds_avoided".to_string(), num(c.adds_avoided));
+            o.insert("cache".to_string(), Json::Obj(co));
+        }
+        if let Some(m) = &self.memo {
+            let mut mo = BTreeMap::new();
+            mo.insert("hits".to_string(), num(m.hits));
+            mo.insert("misses".to_string(), num(m.misses));
+            mo.insert("insertions".to_string(), num(m.insertions));
+            mo.insert("evictions".to_string(), num(m.evictions));
+            mo.insert("entries".to_string(), num(m.entries));
+            mo.insert("bytes".to_string(), num(m.bytes));
+            mo.insert("muls_avoided".to_string(), num(m.muls_avoided));
+            mo.insert("adds_avoided".to_string(), num(m.adds_avoided));
+            o.insert("memo".to_string(), Json::Obj(mo));
+        }
+        if !self.shards.is_empty() {
+            let shards = self
+                .shards
+                .iter()
+                .map(|b| {
+                    let mut so = BTreeMap::new();
+                    so.insert("shard".to_string(), num(b.shard as u64));
+                    so.insert("requests".to_string(), num(b.requests));
+                    so.insert("cache_hits".to_string(), num(b.cache.hits));
+                    so.insert("cache_misses".to_string(), num(b.cache.misses));
+                    so.insert("muls_avoided".to_string(), num(b.cache.muls_avoided));
+                    so.insert("adds_avoided".to_string(), num(b.cache.adds_avoided));
+                    Json::Obj(so)
+                })
+                .collect();
+            o.insert("shards".to_string(), Json::Arr(shards));
+        }
+        Json::Obj(o)
+    }
 }
 
 impl std::fmt::Display for MetricsSummary {
@@ -199,6 +264,33 @@ mod tests {
         let text = s.to_string();
         assert!(text.contains("cache[hits=3"), "{text}");
         assert!(text.contains("muls_avoided=99"), "{text}");
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(42), 10);
+        let mut s = m.summary();
+        s.cache = Some(CacheStats { hits: 3, misses: 1, ..CacheStats::default() });
+        s.memo = Some(MemoStats { hits: 5, ..MemoStats::default() });
+        s.shards = vec![ShardBreakdown { shard: 0, requests: 1, ..ShardBreakdown::default() }];
+        let text = s.to_json().to_string();
+        let back = Json::parse(&text).expect("valid json");
+        assert_eq!(back.get("requests").and_then(Json::as_usize), Some(1));
+        assert_eq!(back.get("p50_us").and_then(Json::as_usize), Some(42));
+        assert_eq!(
+            back.get("cache").and_then(|c| c.get("hits")).and_then(Json::as_usize),
+            Some(3)
+        );
+        assert_eq!(
+            back.get("memo").and_then(|c| c.get("hits")).and_then(Json::as_usize),
+            Some(5)
+        );
+        assert_eq!(back.get("shards").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+        // empty summary: nulls and no optional sections
+        let empty = Metrics::new().summary().to_json();
+        assert_eq!(empty.get("p50_us"), Some(&Json::Null));
+        assert_eq!(empty.get("cache"), None);
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::nn::plan::LogitBatch;
+use crate::serve::ServeError;
 
 use super::metrics::Metrics;
 use super::plan::InferenceMethod;
@@ -36,13 +37,14 @@ use super::vote;
 /// A serving backend: evaluates one micro-batch of inputs, returning the
 /// batch's flat voter-logit stacks (`nn::plan::LogitBatch` — one
 /// contiguous buffer, one view per input).  Implemented by the batched
-/// reference engine (always) and the PJRT executor (`pjrt` feature).
+/// reference engine (always), the cluster router, the deployment wrapper
+/// (`serve::Deployment`) and the PJRT executor (`pjrt` feature).
 pub trait InferenceBackend {
     fn run_batch(
         &self,
         inputs: &[Vec<f32>],
         method: &InferenceMethod,
-    ) -> Result<LogitBatch, String>;
+    ) -> Result<LogitBatch, ServeError>;
 }
 
 impl<B: InferenceBackend + ?Sized> InferenceBackend for Arc<B> {
@@ -50,7 +52,7 @@ impl<B: InferenceBackend + ?Sized> InferenceBackend for Arc<B> {
         &self,
         inputs: &[Vec<f32>],
         method: &InferenceMethod,
-    ) -> Result<LogitBatch, String> {
+    ) -> Result<LogitBatch, ServeError> {
         (**self).run_batch(inputs, method)
     }
 }
@@ -59,7 +61,7 @@ impl<B: InferenceBackend + ?Sized> InferenceBackend for Arc<B> {
 struct Request {
     image: Vec<f32>,
     method: InferenceMethod,
-    respond: Sender<Result<Response, String>>,
+    respond: Sender<Result<Response, ServeError>>,
     enqueued: Instant,
 }
 
@@ -108,13 +110,26 @@ pub struct ServerHandle {
 
 /// A pending response.
 pub struct Pending {
-    rx: Receiver<Result<Response, String>>,
+    rx: Receiver<Result<Response, ServeError>>,
 }
 
 impl Pending {
     /// Block until the response arrives.
-    pub fn wait(self) -> Result<Response, String> {
-        self.rx.recv().map_err(|_| "request dropped".to_string())?
+    pub fn wait(self) -> Result<Response, ServeError> {
+        self.rx
+            .recv()
+            .map_err(|_| ServeError::internal("request dropped"))?
+    }
+
+    /// Block until the response arrives or `timeout` elapses.  A timeout
+    /// abandons the request (the batcher's answer is discarded) and maps
+    /// to the wire-stable [`ServeError::Timeout`].
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Response, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::internal("request dropped")),
+        }
     }
 }
 
@@ -124,10 +139,10 @@ impl ServerHandle {
         &self,
         image: Vec<f32>,
         method: InferenceMethod,
-    ) -> Result<Pending, String> {
+    ) -> Result<Pending, ServeError> {
         let (tx, rx) = mpsc::channel();
         let req = Request { image, method, respond: tx, enqueued: Instant::now() };
-        self.tx.send(req).map_err(|_| "server shut down".to_string())?;
+        self.tx.send(req).map_err(|_| ServeError::ShuttingDown)?;
         Ok(Pending { rx })
     }
 
@@ -154,7 +169,7 @@ impl Drop for ServerHandle {
 pub fn serve<B, F>(factory: F, cfg: ServerConfig) -> ServerHandle
 where
     B: InferenceBackend + 'static,
-    F: Fn() -> Result<B, String> + Send + Sync + 'static,
+    F: Fn() -> Result<B, ServeError> + Send + Sync + 'static,
 {
     let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
     let metrics = Arc::new(Metrics::new());
@@ -189,7 +204,7 @@ fn router_loop<B, F>(
     shutdown: Arc<AtomicBool>,
 ) where
     B: InferenceBackend + 'static,
-    F: Fn() -> Result<B, String> + Send + Sync + 'static,
+    F: Fn() -> Result<B, ServeError> + Send + Sync + 'static,
 {
     let (btx, brx) = mpsc::channel::<Vec<Request>>();
     let brx = Arc::new(std::sync::Mutex::new(brx));
@@ -210,9 +225,9 @@ fn router_loop<B, F>(
                             while let Ok(batch) = { brx.lock().unwrap().recv() } {
                                 for req in batch {
                                     metrics.record_error();
-                                    let _ = req
-                                        .respond
-                                        .send(Err(format!("backend unavailable: {e}")));
+                                    let _ = req.respond.send(Err(ServeError::internal(
+                                        format!("backend unavailable: {e}"),
+                                    )));
                                 }
                             }
                             return;
@@ -285,7 +300,9 @@ fn run_batch<B: InferenceBackend>(backend: &B, mut batch: Vec<Request>, metrics:
                 let latency = req.enqueued.elapsed();
                 if logits.voters() == 0 {
                     metrics.record_error();
-                    let _ = req.respond.send(Err("backend returned no voters".to_string()));
+                    let _ = req
+                        .respond
+                        .send(Err(ServeError::internal("backend returned no voters")));
                     continue;
                 }
                 let probs = vote::softmax_mean_flat(logits.flat(), logits.classes());
@@ -301,14 +318,14 @@ fn run_batch<B: InferenceBackend>(backend: &B, mut batch: Vec<Request>, metrics:
             }
         }
         Ok(all) => {
-            let msg = format!(
+            let err = ServeError::internal(format!(
                 "backend returned {} results for a batch of {}",
                 all.len(),
                 batch.len()
-            );
+            ));
             for req in batch {
                 metrics.record_error();
-                let _ = req.respond.send(Err(msg.clone()));
+                let _ = req.respond.send(Err(err.clone()));
             }
         }
         Err(_) if batch.len() > 1 => {
@@ -416,13 +433,27 @@ mod tests {
     #[test]
     fn failing_factory_fails_requests_gracefully() {
         let handle = serve(
-            || -> Result<Arc<Engine>, String> { Err("no backend here".into()) },
+            || -> Result<Arc<Engine>, ServeError> { Err("no backend here".into()) },
             ServerConfig { workers: 1, ..ServerConfig::default() },
         );
         let m = InferenceMethod::Standard { t: 2 };
         let p = handle.classify(vec![0.0; 16], m).unwrap();
         let e = p.wait().unwrap_err();
-        assert!(e.contains("backend unavailable"), "{e}");
+        assert_eq!(e.code(), ServeError::internal("").code());
+        assert!(e.to_string().contains("backend unavailable"), "{e}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn wait_timeout_yields_timeout_error() {
+        let handle = serve_engine(test_engine(), ServerConfig::default());
+        let m = InferenceMethod::Standard { t: 64 };
+        let p = handle.classify(vec![0.5; 16], m.clone()).unwrap();
+        // A zero deadline cannot be met even by a warm engine.
+        assert_eq!(p.wait_timeout(Duration::ZERO), Err(ServeError::Timeout));
+        // A generous deadline behaves like `wait`.
+        let p = handle.classify(vec![0.5; 16], m).unwrap();
+        assert!(p.wait_timeout(Duration::from_secs(30)).is_ok());
         handle.shutdown();
     }
 }

@@ -41,6 +41,13 @@
 //!   memoization under content-derived seeds, and cache snapshot
 //!   persistence across restarts (`--shards`/`--memo-mb`/
 //!   `--cache-snapshot`).
+//! * [`serve`] — the network serving tier: one `ServeConfig` for the
+//!   whole stack, a `Deployment` wrapper choosing engine vs cluster, and
+//!   a zero-dependency TCP front door (`bayesdm serve --listen`)
+//!   speaking a length-prefixed binary protocol plus an HTTP/1.1 shim
+//!   (`POST /v1/classify`, `GET /metrics`, `GET /healthz`), with typed
+//!   wire-stable errors (`serve::ServeError`) shared by the in-process
+//!   path.
 //!
 //! See `DESIGN.md` (repo root) for the architecture, the batched engine's
 //! threading/memoization model, the experiment index, and how to run the
@@ -61,6 +68,7 @@ pub mod hwsim;
 pub mod nn;
 pub mod opcount;
 pub mod runtime;
+pub mod serve;
 
 /// The paper's MNIST architecture (§V-B): 3-layer fully-connected MLP.
 pub const MNIST_ARCH: [usize; 4] = [784, 200, 200, 10];

@@ -2,8 +2,9 @@
 //!
 //! Subcommands map 1:1 to the paper's experiments (see DESIGN.md):
 //!
-//! * `serve`   — run the router/batcher over the batched reference engine
-//!   and report latency/throughput (the end-to-end driver).
+//! * `serve`   — run the serving stack (engine or cluster behind one
+//!   `Deployment`) and either replay test images through the in-process
+//!   router/batcher, or open the TCP/HTTP front door with `--listen`.
 //! * `eval`    — batched multi-threaded test-set accuracy of a method.
 //! * `tables`  — print Table III / IV / V reproductions.
 //! * `fig6`    — render the accuracy-vs-shrink-ratio curves from
@@ -13,20 +14,18 @@
 //!
 //! `serve` and `eval` read the trained posterior + test set from the
 //! artifact directory, or run on the self-contained synthetic model and
-//! dataset with `--synthetic` (no `make artifacts` needed).
+//! dataset with `--synthetic` (no `make artifacts` needed).  Both build
+//! their deployment through `ServeConfig::builder`, so flag >
+//! environment > default precedence holds for every knob.
 
-use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use bayesdm::bail;
-use bayesdm::cluster::router::shards_from_env;
-use bayesdm::cluster::{snapshot as cache_snapshot, ClusterRouter, MemoConfig};
-use bayesdm::coordinator::engine::default_workers;
+use bayesdm::coordinator::engine::{default_workers, Engine, EngineConfig};
+use bayesdm::coordinator::metrics::Metrics;
 use bayesdm::coordinator::plan::{InferenceMethod, PlanSummary};
-use bayesdm::coordinator::{
-    serve, serve_engine, CacheConfig, Engine, EngineConfig, ServerConfig, ServerHandle,
-};
+use bayesdm::coordinator::ServerHandle;
 use bayesdm::dataset::{load_images, load_weights, Dataset, SynthSpec, Synthesizer};
 use bayesdm::grng::uniform::XorShift128Plus;
 use bayesdm::grng::Ziggurat;
@@ -34,6 +33,7 @@ use bayesdm::hwsim::report::{fig7_rows, render_fig7, render_table5, table5_rows}
 use bayesdm::nn::bnn::{BnnModel, Method as NnMethod};
 use bayesdm::nn::fixed_infer::QBnnModel;
 use bayesdm::opcount::report::{render_table3, render_table4, table4_rows};
+use bayesdm::serve::{serve_deployment, Deployment, NetServer, ServeConfig, ServeConfigBuilder};
 use bayesdm::util::cli::Args;
 use bayesdm::util::error::{Context, Error, Result};
 use bayesdm::util::Json;
@@ -48,6 +48,7 @@ SUBCOMMANDS:
   serve    --method M --requests N --max-batch B --workers W [--synthetic]
            [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
            [--memo-mb MB] [--cache-snapshot PATH]
+           [--listen ADDR] [--duration-s S]
   eval     --method M --limit N --batch B --workers W [--synthetic]
            [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
            [--memo-mb MB] [--cache-snapshot PATH]
@@ -82,59 +83,75 @@ methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
             cluster deployment even at --shards 1.
 --cache-snapshot: persist the decomposition cache to PATH at shutdown
             and reload it at start (model-fingerprint-gated: stale
-            snapshots degrade to a cold start, never wrong results).";
+            snapshots degrade to a cold start, never wrong results).
+--listen: serve over TCP on ADDR (e.g. 127.0.0.1:8484; port 0 =
+            OS-assigned, the bound address is printed).  One port speaks
+            both protocols: the length-prefixed binary framing and an
+            HTTP/1.1 shim (POST /v1/classify, GET /metrics, GET /healthz,
+            GET /admin/drain).  Runs until a drain is requested.
+--duration-s: with --listen, also stop after S seconds (0 = only on
+            drain).  Shutdown drains: in-flight requests are answered.";
 
 fn parse_method(s: &str, alpha: f64) -> Result<InferenceMethod> {
     InferenceMethod::parse(s, alpha)
         .with_context(|| format!("unknown method `{s}` (standard|hybrid|dm)"))
 }
 
-/// Validate the CLI `--alpha` before it reaches an engine assert.
-fn check_alpha(alpha: f64) -> Result<f64> {
-    if alpha > 0.0 && alpha <= 1.0 {
-        Ok(alpha)
-    } else {
-        Err(Error::msg(format!("--alpha must be in (0, 1], got {alpha}")))
+/// Optional typed flag: `Ok(None)` when absent, so the serve-config
+/// builder's environment/default fallback applies only when the operator
+/// said nothing.
+fn opt_parse<T: std::str::FromStr>(args: &mut Args, key: &str) -> Result<Option<T>> {
+    let raw = args.get(key, "");
+    if raw.is_empty() {
+        return Ok(None);
     }
+    raw.parse::<T>()
+        .map(Some)
+        .map_err(|_| Error::msg(format!("flag --{key}: cannot parse `{raw}`")))
 }
 
-/// `--cache-mb MB` → cache config; an explicit 0 disables, absence falls
-/// back to the `BAYESDM_CACHE_MB` environment default.
-fn cache_config(args: &mut Args) -> Result<CacheConfig> {
-    let env_default = CacheConfig::from_env();
-    let env_mb = env_default.capacity_bytes >> 20;
-    let mb: usize = args.get_parse("cache-mb", env_mb).map_err(Error::msg)?;
-    Ok(if mb > 0 { CacheConfig::with_mb(mb) } else { CacheConfig::disabled() })
-}
-
-/// The cluster trio shared by serve/eval: `--shards` (default from
-/// `BAYESDM_SHARDS`), `--memo-mb` (default from `BAYESDM_MEMO_MB`; an
-/// explicit 0 disables) and `--cache-snapshot` (empty = no persistence).
-fn cluster_flags(args: &mut Args) -> Result<(usize, MemoConfig, Option<String>)> {
-    let shards: usize = args.get_parse("shards", shards_from_env()).map_err(Error::msg)?;
-    if shards == 0 {
-        return Err(Error::msg("--shards must be >= 1"));
+/// Parse the deployment flags shared by `serve` and `eval` into the one
+/// serve-config builder (flag > environment > default).  Returns the
+/// builder plus α, which `--method dm` also needs.
+fn deployment_builder(args: &mut Args, seed: u64) -> Result<(ServeConfigBuilder, f64)> {
+    let mut b = ServeConfig::builder().seed(seed);
+    let alpha: f64 = args.get_parse("alpha", 1.0).map_err(Error::msg)?;
+    b = b.alpha(alpha);
+    if let Some(w) = opt_parse::<usize>(args, "workers")? {
+        b = b.workers(w);
     }
-    let env_mb = MemoConfig::from_env().capacity_bytes >> 20;
-    let memo_mb: usize = args.get_parse("memo-mb", env_mb).map_err(Error::msg)?;
-    let memo = if memo_mb > 0 { MemoConfig::with_mb(memo_mb) } else { MemoConfig::disabled() };
+    if let Some(mb) = opt_parse::<usize>(args, "cache-mb")? {
+        b = b.cache_mb(mb);
+    }
+    if let Some(s) = opt_parse::<usize>(args, "shards")? {
+        b = b.shards(s);
+    }
+    if let Some(mb) = opt_parse::<usize>(args, "memo-mb")? {
+        b = b.memo_mb(mb);
+    }
     let snap = args.get("cache-snapshot", "");
-    Ok((shards, memo, (!snap.is_empty()).then_some(snap)))
+    if !snap.is_empty() {
+        b = b.snapshot(snap);
+    }
+    Ok((b, alpha))
 }
 
-/// `--cache-snapshot` persists the decomposition cache — with the cache
-/// disabled there is nothing to persist, and silently ignoring the flag
-/// would let an operator believe warm-up is configured when it is not.
-fn check_snapshot_needs_cache(snapshot: &Option<String>, cache: &CacheConfig) -> Result<()> {
-    if snapshot.is_some() && !cache.enabled() {
-        bail!("--cache-snapshot requires the decomposition cache (--cache-mb > 0)");
+fn print_load_report(deployment: &Deployment) {
+    if let Some(rep) = deployment.load_report() {
+        println!("cache snapshot load: {rep}");
     }
-    Ok(())
+}
+
+fn print_save_report(deployment: &Deployment) {
+    match deployment.save_snapshot() {
+        Some(Ok(rep)) => println!("cache snapshot save: {rep}"),
+        Some(Err(e)) => eprintln!("cache snapshot save failed: {e}"),
+        None => {}
+    }
 }
 
 /// Submit `requests` test images through a running server and tally
-/// correctness — the serving loop shared by the single-engine and cluster
-/// deployments.
+/// correctness — the in-process serving loop.
 fn run_serve_loop(
     handle: &ServerHandle,
     test: &Dataset,
@@ -182,23 +199,23 @@ fn print_eval_line(method: &str, m: &InferenceMethod, n: usize, acc: f64, dt: Du
     );
 }
 
-/// Reload a single engine's private cache from `--cache-snapshot`, when
-/// both are configured (fingerprint-gated; failures degrade to cold).
-fn engine_snapshot_load(engine: &Engine, path: Option<&str>) {
-    if let (Some(path), Some(cache)) = (path, engine.cache_ref()) {
-        let rep = cache_snapshot::load(cache, engine.model().fingerprint(), Path::new(path));
-        println!("cache snapshot load: {rep}");
-    }
-}
-
-/// Persist a single engine's private cache to `--cache-snapshot`.
-fn engine_snapshot_save(engine: &Engine, path: Option<&str>) {
-    if let (Some(path), Some(cache)) = (path, engine.cache_ref()) {
-        match cache_snapshot::save(cache, engine.model().fingerprint(), Path::new(path)) {
-            Ok(rep) => println!("cache snapshot save: {rep}"),
-            Err(e) => eprintln!("cache snapshot save failed: {e}"),
+/// Block until a drain is requested (`GET /admin/drain`) or the optional
+/// deadline passes, then gracefully shut the server down.
+fn run_net_server(server: NetServer, duration_s: u64) {
+    let deadline = (duration_s > 0).then(|| Instant::now() + Duration::from_secs(duration_s));
+    loop {
+        if server.drain_requested() {
+            println!("drain requested — shutting down");
+            break;
         }
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            println!("duration elapsed — shutting down");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
     }
+    let summary = server.shutdown();
+    println!("metrics: {summary}");
 }
 
 /// Load the trained posterior + served test set, or the self-contained
@@ -229,164 +246,84 @@ fn main() -> Result<()> {
         "serve" => {
             let method = args.get("method", "dm");
             let requests: usize = args.get_parse("requests", 200).map_err(Error::msg)?;
-            let alpha: f64 = check_alpha(args.get_parse("alpha", 1.0).map_err(Error::msg)?)?;
             let max_batch: usize = args.get_parse("max-batch", 8).map_err(Error::msg)?;
-            let pool = default_workers();
-            let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
+            let duration_s: u64 = args.get_parse("duration-s", 0).map_err(Error::msg)?;
             let synthetic = args.has("synthetic");
             if args.has("force-scalar") {
                 bayesdm::nn::simd::force_scalar();
             }
-            let cache = cache_config(&mut args)?;
-            let (shards, memo, snapshot) = cluster_flags(&mut args)?;
+            let (mut b, alpha) = deployment_builder(&mut args, 0xBA135)?;
+            b = b.max_batch(max_batch);
+            let listen = args.get("listen", "");
+            if !listen.is_empty() {
+                b = b.listen(listen);
+            }
             args.finish().map_err(Error::msg)?;
-            check_snapshot_needs_cache(&snapshot, &cache)?;
+            let cfg = b.build()?;
             let m = parse_method(&method, alpha)?;
             let (model, test) = load_model_and_data(&artifacts, synthetic)?;
-            // One dispatch worker: the engine pool is the parallelism.
-            let cfg = ServerConfig { max_batch, workers: 1, ..ServerConfig::default() };
-            if shards > 1 || memo.enabled() {
-                // Cluster deployment: the router slots into the same
-                // server the single engine does.
-                let router = Arc::new(ClusterRouter::new(
-                    model,
-                    EngineConfig {
-                        workers,
-                        seed: 0xBA135,
-                        cache,
-                        alpha,
-                        shards,
-                        memo,
-                        snapshot,
-                        ..EngineConfig::default()
-                    },
-                ));
-                if let Some(rep) = router.snapshot_load_report() {
-                    println!("cache snapshot load: {rep}");
-                }
-                let backend = router.clone();
-                let handle = serve(move || Ok(backend.clone()), cfg);
-                let (n, correct, dt) = run_serve_loop(&handle, &test, &m, requests)?;
-                print_serve_line(n, correct, dt);
-                let mut summary = handle.metrics.summary();
-                let cluster = router.metrics_summary();
-                summary.cache = cluster.cache;
-                summary.memo = cluster.memo;
-                summary.shards = cluster.shards;
-                println!("metrics: {summary}");
-                match router.save_snapshot() {
-                    Some(Ok(rep)) => println!("cache snapshot save: {rep}"),
-                    Some(Err(e)) => eprintln!("cache snapshot save failed: {e}"),
-                    None => {}
-                }
-                handle.shutdown();
+            let deployment = Arc::new(Deployment::new(model, &cfg));
+            print_load_report(&deployment);
+            if cfg.net.listen.is_some() {
+                // Network front door: serve wire traffic until drained.
+                let server = NetServer::bind(deployment.clone(), &cfg)?;
+                println!(
+                    "listening on {}  (shards: {}, kernel: {})",
+                    server.local_addr(),
+                    deployment.shards(),
+                    deployment.kernel_isa()
+                );
+                run_net_server(server, duration_s);
             } else {
-                let engine = Arc::new(Engine::new(
-                    model,
-                    EngineConfig {
-                        workers,
-                        seed: 0xBA135,
-                        cache,
-                        alpha,
-                        ..EngineConfig::default()
-                    },
-                ));
-                engine_snapshot_load(&engine, snapshot.as_deref());
-                let handle = serve_engine(engine.clone(), cfg);
+                // In-process replay: the same deployment behind the same
+                // router/batcher, driven by the test set.
+                let handle = serve_deployment(&deployment, cfg.server.clone());
                 let (n, correct, dt) = run_serve_loop(&handle, &test, &m, requests)?;
                 print_serve_line(n, correct, dt);
-                // fold the engine's cache counters into the server summary
                 let mut summary = handle.metrics.summary();
-                summary.cache = engine.cache_stats();
+                deployment.fold_metrics(&mut summary);
                 println!("metrics: {summary}");
-                engine_snapshot_save(&engine, snapshot.as_deref());
                 handle.shutdown();
             }
+            print_save_report(&deployment);
         }
         "eval" => {
             let method = args.get("method", "dm");
             let limit: usize = args.get_parse("limit", 500).map_err(Error::msg)?;
-            let alpha: f64 = check_alpha(args.get_parse("alpha", 1.0).map_err(Error::msg)?)?;
             let batch: usize = args.get_parse("batch", 32).map_err(Error::msg)?;
-            let pool = default_workers();
-            let workers: usize = args.get_parse("workers", pool).map_err(Error::msg)?;
             let synthetic = args.has("synthetic");
             if args.has("force-scalar") {
                 bayesdm::nn::simd::force_scalar();
             }
-            let cache = cache_config(&mut args)?;
-            let (shards, memo, snapshot) = cluster_flags(&mut args)?;
+            let (b, alpha) = deployment_builder(&mut args, 0xE7A1)?;
             args.finish().map_err(Error::msg)?;
-            check_snapshot_needs_cache(&snapshot, &cache)?;
+            let cfg = b.build()?;
             let m = parse_method(&method, alpha)?;
             let (model, test) = load_model_and_data(&artifacts, synthetic)?;
+            let deployment = Deployment::new(model, &cfg);
+            print_load_report(&deployment);
             let n = limit.min(test.len());
             let t0 = Instant::now();
-            if shards > 1 || memo.enabled() {
-                let router = ClusterRouter::new(
-                    model,
-                    EngineConfig {
-                        workers,
-                        seed: 0xE7A1,
-                        cache,
-                        alpha,
-                        shards,
-                        memo,
-                        snapshot,
-                        ..EngineConfig::default()
-                    },
-                );
-                if let Some(rep) = router.snapshot_load_report() {
-                    println!("cache snapshot load: {rep}");
-                }
-                let acc = router.accuracy(
-                    &test.images[..n * test.dim],
-                    &test.labels[..n],
-                    &m.to_reference(),
-                    batch,
-                );
-                print_eval_line(&method, &m, n, acc, t0.elapsed());
-                let cluster = router.metrics_summary();
-                println!("kernel: {}  shards: {}", cluster.isa, router.shards());
-                if let Some(stats) = cluster.cache {
-                    println!("cache: {stats}");
-                }
-                if let Some(stats) = cluster.memo {
-                    println!("memo: {stats}");
-                }
-                for b in &cluster.shards {
-                    println!("{b}");
-                }
-                match router.save_snapshot() {
-                    Some(Ok(rep)) => println!("cache snapshot save: {rep}"),
-                    Some(Err(e)) => eprintln!("cache snapshot save failed: {e}"),
-                    None => {}
-                }
-            } else {
-                let engine = Engine::new(
-                    model,
-                    EngineConfig {
-                        workers,
-                        seed: 0xE7A1,
-                        cache,
-                        alpha,
-                        ..EngineConfig::default()
-                    },
-                );
-                engine_snapshot_load(&engine, snapshot.as_deref());
-                let acc = engine.accuracy(
-                    &test.images[..n * test.dim],
-                    &test.labels[..n],
-                    &m.to_reference(),
-                    batch,
-                );
-                print_eval_line(&method, &m, n, acc, t0.elapsed());
-                println!("kernel: {}", engine.kernel_isa());
-                if let Some(stats) = engine.cache_stats() {
-                    println!("cache: {stats}");
-                }
-                engine_snapshot_save(&engine, snapshot.as_deref());
+            let acc = deployment.accuracy(
+                &test.images[..n * test.dim],
+                &test.labels[..n],
+                &m.to_reference(),
+                batch,
+            );
+            print_eval_line(&method, &m, n, acc, t0.elapsed());
+            let mut s = Metrics::new().summary();
+            deployment.fold_metrics(&mut s);
+            println!("kernel: {}  shards: {}", deployment.kernel_isa(), deployment.shards());
+            if let Some(stats) = s.cache {
+                println!("cache: {stats}");
             }
+            if let Some(stats) = s.memo {
+                println!("memo: {stats}");
+            }
+            for shard in &s.shards {
+                println!("{shard}");
+            }
+            print_save_report(&deployment);
         }
         "tables" => {
             let table: u8 = args.get_parse("table", 0).map_err(Error::msg)?;

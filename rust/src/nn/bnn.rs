@@ -71,19 +71,25 @@ impl Method {
 pub type UncertaintyBanks = Vec<Vec<(Vec<f32>, Vec<f32>)>>;
 
 /// The reference multi-layer Bayesian MLP.
+///
+/// The posterior lives behind an `Arc`, so cloning a model — which the
+/// cluster router does once per shard engine — shares ONE copy of the
+/// weights instead of duplicating the (possibly hundreds of MB) layer
+/// buffers N times.  The posterior is immutable after construction
+/// (mutating `layers` through the `Arc` is not possible without sole
+/// ownership, which the sharing deliberately prevents).
 pub struct BnnModel {
-    pub layers: Vec<LayerPosterior>,
+    pub layers: Arc<Vec<LayerPosterior>>,
     /// Lazily computed posterior fingerprint (see [`BnnModel::fingerprint`]).
     fp: OnceLock<u64>,
 }
 
-/// Cloning copies the posterior and resets the fingerprint memo — the
-/// lazy recomputation is deterministic over the (identical) weight bits,
-/// so a clone fingerprints equal to its source.  Used by the cluster
-/// router, which gives each shard engine its own model copy.
+/// Cloning shares the posterior (`Arc`) and the fingerprint memo — the
+/// weight bits are identical by construction, so the memoized value is
+/// too.  An N-shard cluster therefore holds one posterior, not N.
 impl Clone for BnnModel {
     fn clone(&self) -> Self {
-        Self { layers: self.layers.clone(), fp: OnceLock::new() }
+        Self { layers: Arc::clone(&self.layers), fp: self.fp.clone() }
     }
 }
 
@@ -93,7 +99,7 @@ impl BnnModel {
         for w in layers.windows(2) {
             assert_eq!(w[1].n, w[0].m, "layer dims must chain");
         }
-        Self { layers, fp: OnceLock::new() }
+        Self { layers: Arc::new(layers), fp: OnceLock::new() }
     }
 
     /// A deterministic random (untrained) posterior over `arch` — the
@@ -123,7 +129,7 @@ impl BnnModel {
     pub fn fingerprint(&self) -> u64 {
         *self.fp.get_or_init(|| {
             let mut state = fnv1a_u64(FNV_OFFSET, self.layers.len() as u64);
-            for l in &self.layers {
+            for l in self.layers.iter() {
                 state = fnv1a_u64(state, l.m as u64);
                 state = fnv1a_u64(state, l.n as u64);
                 state = fnv1a_f32s(state, &l.mu);
@@ -460,6 +466,18 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn clones_share_one_posterior_and_its_fingerprint() {
+        let a = BnnModel::synthetic(&[16, 12, 8, 5], 7);
+        let fp = a.fingerprint(); // memoize before cloning
+        let b = a.clone();
+        assert!(Arc::ptr_eq(&a.layers, &b.layers), "clone must share, not copy");
+        assert_eq!(b.fingerprint(), fp, "shared memo carries over");
+        // an unfingerprinted clone still computes the same value lazily
+        let c = BnnModel::synthetic(&[16, 12, 8, 5], 7).clone();
+        assert_eq!(c.fingerprint(), fp);
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Per-connection handling: protocol sniffing, the binary reader/writer
+//! pair, and the shared state every connection sees.
+//!
+//! Each accepted socket is served by one bounded-pool thread
+//! (`serve::NetServer`).  The first peeked byte routes the connection:
+//! `B` (the frame magic) → binary protocol, anything else → the HTTP/1.1
+//! shim (`serve::http`).
+//!
+//! The binary path supports **pipelining**: the pool thread reads frames
+//! and submits them to the batcher without waiting, while a dedicated
+//! writer thread resolves each `Pending` and writes replies **in request
+//! order** — so a client may stream N requests and read N ordered
+//! responses.  Reads poll at [`POLL_TICK`] so every connection notices a
+//! drain within one tick; in-flight requests are still answered because
+//! the writer drains its queue before the connection closes.
+
+use std::io::{BufReader, ErrorKind};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::plan::InferenceMethod;
+use crate::coordinator::server::{Pending, Response, ServerHandle};
+use crate::nn::bnn::Method;
+
+use super::error::ServeError;
+use super::proto::{self, Frame, ReadOutcome, WireResponse, MAGIC};
+use super::Deployment;
+
+/// Socket read-timeout tick: how often blocked reads wake up to check
+/// the drain flag.  Bounds drain latency per connection.
+pub(crate) const POLL_TICK: Duration = Duration::from_millis(50);
+
+/// State shared by every connection of one `NetServer`.
+pub(crate) struct ConnShared {
+    pub handle: ServerHandle,
+    pub deployment: Arc<Deployment>,
+    /// End-to-end deadline for one request's answer (`Pending` wait).
+    pub request_timeout: Duration,
+    /// Deadline for completing one frame / HTTP request once started.
+    pub io_timeout: Duration,
+    /// Per-frame payload cap.
+    pub max_frame: usize,
+    /// Set by `NetServer::shutdown`: stop reading new requests.
+    pub draining: AtomicBool,
+    /// Set by `GET /admin/drain`: asks the host loop to begin shutdown.
+    pub drain_requested: AtomicBool,
+}
+
+impl ConnShared {
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Server metrics with the deployment's cache/memo/shard counters
+    /// folded in.
+    pub fn metrics_summary(&self) -> crate::coordinator::metrics::MetricsSummary {
+        let mut s = self.handle.metrics.summary();
+        self.deployment.fold_metrics(&mut s);
+        s
+    }
+
+    /// The deployment-wide metrics summary rendered as JSON (`/metrics`,
+    /// binary `MetricsRequest`).
+    pub fn metrics_text(&self) -> String {
+        self.metrics_summary().to_json().to_string()
+    }
+}
+
+/// Wire form of a served [`Response`].
+pub(crate) fn to_wire(r: &Response) -> WireResponse {
+    WireResponse {
+        class: r.class as u32,
+        voters: r.voters as u32,
+        confidence: r.confidence,
+        entropy: r.entropy,
+        latency_us: r.latency.as_micros() as u64,
+    }
+}
+
+/// Wire method → coordinator method.  α is not a wire concept: it shapes
+/// the engine's working set (`EngineConfig::alpha`), never results.
+pub(crate) fn to_inference(m: &Method) -> InferenceMethod {
+    match m {
+        Method::Standard { t } => InferenceMethod::Standard { t: *t },
+        Method::Hybrid { t } => InferenceMethod::Hybrid { t: *t },
+        Method::DmBnn { schedule } => {
+            InferenceMethod::DmBnn { schedule: schedule.clone(), alpha: 1.0 }
+        }
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Serve one accepted connection to completion (runs on a pool thread).
+pub(crate) fn handle_conn(stream: TcpStream, shared: &Arc<ConnShared>) {
+    if stream.set_read_timeout(Some(POLL_TICK)).is_err()
+        || stream.set_write_timeout(Some(shared.io_timeout)).is_err()
+    {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+
+    // Sniff the protocol from the first byte without consuming it.  A
+    // connection that stays silent for the I/O deadline is dropped.
+    let started = Instant::now();
+    let mut first = [0u8; 1];
+    loop {
+        if shared.draining() {
+            return;
+        }
+        match stream.peek(&mut first) {
+            Ok(0) => return,
+            Ok(_) => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if would_block(&e) => {
+                if started.elapsed() >= shared.io_timeout {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    if first[0] == MAGIC[0] {
+        serve_binary(stream, shared);
+    } else {
+        super::http::serve_http(stream, shared);
+    }
+}
+
+/// A message from the reader to the connection's writer thread.
+enum Outgoing {
+    /// Fully-formed frame (pong, metrics, error).
+    Ready(Frame),
+    /// A submitted request: the writer resolves it under the request
+    /// deadline and writes the response/error in queue (= request) order.
+    Job { id: u64, pending: Pending },
+}
+
+fn serve_binary(stream: TcpStream, shared: &Arc<ConnShared>) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let (tx, rx) = mpsc::channel::<Outgoing>();
+    let request_timeout = shared.request_timeout;
+    let writer = std::thread::Builder::new()
+        .name("bayesdm-conn-writer".into())
+        .spawn(move || writer_loop(write_half, rx, request_timeout))
+        .expect("spawn conn writer");
+
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shared.draining() {
+            break;
+        }
+        match proto::read_frame(&mut reader, shared.max_frame, shared.io_timeout) {
+            Ok(ReadOutcome::Idle) => continue,
+            Ok(ReadOutcome::Eof) => break,
+            Ok(ReadOutcome::Frame(frame)) => handle_frame(frame, shared, &tx),
+            Err(err) => {
+                // Protocol breakdown: the stream can no longer be framed,
+                // so report (id 0 = not attributable) and close.
+                let _ = tx.send(Outgoing::Ready(Frame::Error { id: 0, err }));
+                break;
+            }
+        }
+    }
+    // Closing the queue lets the writer finish every in-flight reply,
+    // then exit — the drain guarantee for this connection.
+    drop(tx);
+    let _ = writer.join();
+}
+
+fn handle_frame(frame: Frame, shared: &Arc<ConnShared>, tx: &Sender<Outgoing>) {
+    match frame {
+        Frame::Request { id, method, input } => {
+            match shared.handle.classify(input, to_inference(&method)) {
+                Ok(pending) => {
+                    let _ = tx.send(Outgoing::Job { id, pending });
+                }
+                Err(err) => {
+                    let _ = tx.send(Outgoing::Ready(Frame::Error { id, err }));
+                }
+            }
+        }
+        Frame::Ping { id } => {
+            let _ = tx.send(Outgoing::Ready(Frame::Pong { id }));
+        }
+        Frame::MetricsRequest { id } => {
+            let text = shared.metrics_text();
+            let _ = tx.send(Outgoing::Ready(Frame::MetricsText { id, text }));
+        }
+        // Server-to-client kinds arriving at the server are a client bug,
+        // but not a framing failure — answer and keep the connection.
+        other => {
+            let _ = tx.send(Outgoing::Ready(Frame::Error {
+                id: other.id(),
+                err: ServeError::bad_request("unexpected frame kind from client"),
+            }));
+        }
+    }
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Outgoing>, request_timeout: Duration) {
+    let mut broken = false;
+    while let Ok(out) = rx.recv() {
+        let frame = match out {
+            Outgoing::Ready(f) => f,
+            Outgoing::Job { id, pending } => match pending.wait_timeout(request_timeout) {
+                Ok(r) => Frame::Response { id, resp: to_wire(&r) },
+                Err(err) => Frame::Error { id, err },
+            },
+        };
+        // After a write failure keep draining (and discarding) replies so
+        // the reader side never blocks, but stop touching the socket.
+        if !broken && proto::write_frame(&mut stream, &frame).is_err() {
+            broken = true;
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Canonical serving errors with stable wire codes.
+//!
+//! Every fallible step on the request path — validation, dispatch, the
+//! batcher, the cluster router, snapshot persistence and the network
+//! front door — reports a [`ServeError`].  The enum is the single error
+//! vocabulary shared by the in-process API (`Pending::wait`,
+//! `ClusterRouter::evaluate`) and the wire protocol (`serve::proto`
+//! `Error` frames, HTTP statuses), replacing the former
+//! `Result<_, String>` plumbing.
+//!
+//! Wire codes are **stable**: they are part of the binary protocol and
+//! must never be renumbered (new variants append new codes).
+//!
+//! | code | variant        | HTTP | meaning                                   |
+//! |------|----------------|------|-------------------------------------------|
+//! | 1    | `BadRequest`   | 400  | malformed frame / body / method           |
+//! | 2    | `DimMismatch`  | 400  | input length ≠ model input dimension      |
+//! | 3    | `Overloaded`   | 503  | connection/queue capacity exhausted       |
+//! | 4    | `Timeout`      | 504  | request or I/O deadline exceeded          |
+//! | 5    | `ShuttingDown` | 503  | server is draining, request not admitted  |
+//! | 6    | `Internal`     | 500  | backend failure (message carries detail)  |
+
+use std::fmt;
+
+/// A serving-path error with a stable wire code.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Malformed request: bad frame, bad JSON, unusable method.
+    BadRequest(String),
+    /// Input vector length does not match the model's input dimension.
+    DimMismatch(String),
+    /// Capacity exhausted: the server cannot admit the connection/request.
+    Overloaded,
+    /// A read/write or end-to-end request deadline expired.
+    Timeout,
+    /// The server is draining and no longer admits new work.
+    ShuttingDown,
+    /// Backend-side failure; the message is diagnostic, not protocol.
+    Internal(String),
+}
+
+impl ServeError {
+    /// Build an `Internal` error from anything printable.
+    pub fn internal<M: fmt::Display>(msg: M) -> Self {
+        ServeError::Internal(msg.to_string())
+    }
+
+    /// Build a `BadRequest` error from anything printable.
+    pub fn bad_request<M: fmt::Display>(msg: M) -> Self {
+        ServeError::BadRequest(msg.to_string())
+    }
+
+    /// The stable wire code carried by binary `Error` frames.
+    pub const fn code(&self) -> u16 {
+        match self {
+            ServeError::BadRequest(_) => 1,
+            ServeError::DimMismatch(_) => 2,
+            ServeError::Overloaded => 3,
+            ServeError::Timeout => 4,
+            ServeError::ShuttingDown => 5,
+            ServeError::Internal(_) => 6,
+        }
+    }
+
+    /// Reconstruct from a wire code + detail message (the decode side of
+    /// [`ServeError::code`]).  Unknown codes map to `Internal` so old
+    /// clients survive new server variants.
+    pub fn from_wire(code: u16, msg: String) -> Self {
+        match code {
+            1 => ServeError::BadRequest(msg),
+            2 => ServeError::DimMismatch(msg),
+            3 => ServeError::Overloaded,
+            4 => ServeError::Timeout,
+            5 => ServeError::ShuttingDown,
+            6 => ServeError::Internal(msg),
+            other => ServeError::Internal(format!("unknown error code {other}: {msg}")),
+        }
+    }
+
+    /// The HTTP status line equivalent for the HTTP/1.1 shim.
+    pub const fn http_status(&self) -> (u16, &'static str) {
+        match self {
+            ServeError::BadRequest(_) | ServeError::DimMismatch(_) => (400, "Bad Request"),
+            ServeError::Overloaded | ServeError::ShuttingDown => (503, "Service Unavailable"),
+            ServeError::Timeout => (504, "Gateway Timeout"),
+            ServeError::Internal(_) => (500, "Internal Server Error"),
+        }
+    }
+
+    /// Stable short name (used in HTTP error bodies and logs).
+    pub const fn name(&self) -> &'static str {
+        match self {
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::DimMismatch(_) => "dim_mismatch",
+            ServeError::Overloaded => "overloaded",
+            ServeError::Timeout => "timeout",
+            ServeError::ShuttingDown => "shutting_down",
+            ServeError::Internal(_) => "internal",
+        }
+    }
+
+    /// The detail message (empty for the unit variants).
+    pub fn message(&self) -> &str {
+        match self {
+            ServeError::BadRequest(m) | ServeError::DimMismatch(m) | ServeError::Internal(m) => m,
+            ServeError::Overloaded => "server overloaded",
+            ServeError::Timeout => "request timed out",
+            ServeError::ShuttingDown => "server shutting down",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Message-forward: pre-redesign callers matched on substrings of
+        // the old `String` errors ("dim", "zero voters", "backend
+        // unavailable", ...), so Display stays the bare detail message.
+        f.write_str(self.message())
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Shim: legacy callers that still want a `String` error.
+impl From<ServeError> for String {
+    fn from(e: ServeError) -> String {
+        e.to_string()
+    }
+}
+
+/// Shim: legacy `Result<_, String>` producers entering the new API.
+impl From<String> for ServeError {
+    fn from(s: String) -> ServeError {
+        ServeError::Internal(s)
+    }
+}
+
+impl From<&str> for ServeError {
+    fn from(s: &str) -> ServeError {
+        ServeError::Internal(s.to_string())
+    }
+}
+
+/// Shim into the crate-wide string-backed [`crate::util::error::Error`].
+impl From<ServeError> for crate::util::error::Error {
+    fn from(e: ServeError) -> crate::util::error::Error {
+        crate::util::error::Error::msg(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all() -> Vec<ServeError> {
+        vec![
+            ServeError::BadRequest("bad frame".into()),
+            ServeError::DimMismatch("input 0: dim 3 != model dim 784".into()),
+            ServeError::Overloaded,
+            ServeError::Timeout,
+            ServeError::ShuttingDown,
+            ServeError::Internal("worker died".into()),
+        ]
+    }
+
+    #[test]
+    fn codes_are_stable_and_distinct() {
+        let codes: Vec<u16> = all().iter().map(|e| e.code()).collect();
+        assert_eq!(codes, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn wire_round_trip() {
+        for e in all() {
+            let back = ServeError::from_wire(e.code(), e.message().to_string());
+            assert_eq!(back.code(), e.code());
+            // Message-carrying variants round-trip exactly.
+            match &e {
+                ServeError::BadRequest(_)
+                | ServeError::DimMismatch(_)
+                | ServeError::Internal(_) => {
+                    assert_eq!(back, e)
+                }
+                _ => {}
+            }
+        }
+        // Unknown code degrades to Internal, not a panic.
+        let u = ServeError::from_wire(999, "later variant".into());
+        assert_eq!(u.code(), 6);
+    }
+
+    #[test]
+    fn string_shims() {
+        let e = ServeError::DimMismatch("input 0: dim 3 != model dim 16".into());
+        let s: String = e.clone().into();
+        assert!(s.contains("dim"));
+        let back: ServeError = s.into();
+        assert_eq!(back.code(), 6); // legacy strings arrive as Internal
+        assert_eq!(ServeError::from("oops").code(), 6);
+    }
+
+    #[test]
+    fn http_statuses() {
+        assert_eq!(ServeError::Overloaded.http_status().0, 503);
+        assert_eq!(ServeError::Timeout.http_status().0, 504);
+        assert_eq!(ServeError::bad_request("x").http_status().0, 400);
+        assert_eq!(ServeError::internal("x").http_status().0, 500);
+    }
+}

@@ -1,0 +1,357 @@
+//! Minimal HTTP/1.1 shim over the serving deployment — curl-ability for
+//! the binary front door.
+//!
+//! Routes:
+//!
+//! * `GET /healthz`       — liveness: `200 ok`
+//! * `GET /metrics`       — the deployment `MetricsSummary` as JSON
+//! * `GET /admin/drain`   — request a graceful drain (the host loop
+//!   observes it, stops accepting, flushes in-flight work and exits)
+//! * `POST /v1/classify`  — JSON body
+//!   `{"method":"standard"|"hybrid"|"dm","t":N,"schedule":[..],"input":[..]}`
+//!   → `{"class":..,"confidence":..,"entropy":..,"voters":..,"latency_us":..}`
+//!
+//! The shim speaks just enough HTTP/1.1 for `curl` and load-balancer
+//! probes: request-line + headers, `Content-Length` bodies (no chunked
+//! encoding), keep-alive by default.  Errors map through
+//! [`ServeError::http_status`] with a JSON body carrying the stable wire
+//! code, so HTTP clients see the same error taxonomy as binary clients.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::server::Response;
+use crate::nn::bnn::Method;
+use crate::util::json::Json;
+
+use super::conn::{to_inference, ConnShared};
+use super::error::ServeError;
+
+/// Default voter count when a classify body names a `t`-method without
+/// an explicit `t` (the paper's reference T).
+const DEFAULT_T: usize = 100;
+/// Default DM schedule when the body omits one: the paper's
+/// 10-voters-per-layer MNIST configuration.
+const DEFAULT_SCHEDULE: [usize; 3] = [10, 10, 10];
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Serve one HTTP connection (keep-alive loop) on a pool thread.
+pub(crate) fn serve_http(stream: TcpStream, shared: &Arc<ConnShared>) {
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    loop {
+        if !wait_for_request(&reader, shared) {
+            break;
+        }
+        let deadline = Instant::now() + shared.io_timeout;
+        let req = match read_request(&mut reader, deadline, shared.max_frame) {
+            Ok(Some(r)) => r,
+            Ok(None) => break,
+            Err(e) => {
+                let _ = write_error(&mut writer, &e, false);
+                break;
+            }
+        };
+        let keep_alive = req.keep_alive && !shared.draining();
+        let ok = match dispatch(&req, shared) {
+            Ok((status, reason, ctype, body)) => {
+                write_response(&mut writer, status, reason, ctype, &body, keep_alive)
+            }
+            Err(e) => write_error(&mut writer, &e, keep_alive),
+        };
+        if ok.is_err() || !keep_alive {
+            break;
+        }
+    }
+}
+
+/// Idle-wait for the next request's first byte, checking the drain flag
+/// each poll tick.  `false` = close the connection (EOF, error, drain).
+fn wait_for_request(reader: &BufReader<TcpStream>, shared: &ConnShared) -> bool {
+    let mut first = [0u8; 1];
+    loop {
+        if shared.draining() {
+            return false;
+        }
+        // pipelined bytes already buffered count as a waiting request
+        if !reader.buffer().is_empty() {
+            return true;
+        }
+        match reader.get_ref().peek(&mut first) {
+            Ok(0) => return false,
+            Ok(_) => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if would_block(&e) => {}
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Read one line (retrying poll-tick timeouts until `deadline`), with
+/// the trailing CRLF stripped.  `None` = clean EOF before any byte.
+fn read_line_deadline(
+    reader: &mut BufReader<TcpStream>,
+    deadline: Instant,
+) -> Result<Option<String>, ServeError> {
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(ServeError::bad_request("connection closed mid-request"));
+            }
+            Ok(_) => {
+                while line.ends_with('\n') || line.ends_with('\r') {
+                    line.pop();
+                }
+                return Ok(Some(line));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if would_block(&e) => {
+                if Instant::now() >= deadline {
+                    return Err(ServeError::Timeout);
+                }
+            }
+            Err(e) => return Err(ServeError::internal(format!("read: {e}"))),
+        }
+    }
+}
+
+fn read_body(
+    reader: &mut BufReader<TcpStream>,
+    len: usize,
+    deadline: Instant,
+) -> Result<Vec<u8>, ServeError> {
+    let mut buf = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match reader.read(&mut buf[got..]) {
+            Ok(0) => return Err(ServeError::bad_request("truncated request body")),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if would_block(&e) => {
+                if Instant::now() >= deadline {
+                    return Err(ServeError::Timeout);
+                }
+            }
+            Err(e) => return Err(ServeError::internal(format!("read: {e}"))),
+        }
+    }
+    Ok(buf)
+}
+
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    deadline: Instant,
+    max_body: usize,
+) -> Result<Option<HttpRequest>, ServeError> {
+    let Some(line) = read_line_deadline(reader, deadline)? else {
+        return Ok(None);
+    };
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(ServeError::bad_request("malformed request line"));
+    }
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // the HTTP/1.1 default
+    loop {
+        let Some(h) = read_line_deadline(reader, deadline)? else {
+            return Err(ServeError::bad_request("connection closed in headers"));
+        };
+        if h.is_empty() {
+            break;
+        }
+        let Some((k, v)) = h.split_once(':') else { continue };
+        let v = v.trim();
+        if k.trim().eq_ignore_ascii_case("content-length") {
+            content_length = v
+                .parse()
+                .map_err(|_| ServeError::bad_request(format!("bad content-length `{v}`")))?;
+        } else if k.trim().eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close") {
+            keep_alive = false;
+        }
+    }
+    if content_length > max_body {
+        return Err(ServeError::bad_request(format!(
+            "oversized body: {content_length} bytes exceeds the {max_body}-byte cap"
+        )));
+    }
+    let body = read_body(reader, content_length, deadline)?;
+    Ok(Some(HttpRequest { method, path, keep_alive, body }))
+}
+
+type HttpReply = (u16, &'static str, &'static str, String);
+
+fn dispatch(req: &HttpRequest, shared: &Arc<ConnShared>) -> Result<HttpReply, ServeError> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Ok((200, "OK", "text/plain", "ok\n".into())),
+        ("GET", "/metrics") => {
+            Ok((200, "OK", "application/json", shared.metrics_text() + "\n"))
+        }
+        ("GET", "/admin/drain") => {
+            shared.drain_requested.store(true, Ordering::SeqCst);
+            Ok((200, "OK", "text/plain", "draining\n".into()))
+        }
+        ("POST", "/v1/classify") => {
+            let body = std::str::from_utf8(&req.body)
+                .map_err(|_| ServeError::bad_request("body is not UTF-8"))?;
+            let (method, input) = parse_classify(body)?;
+            let pending = shared.handle.classify(input, to_inference(&method))?;
+            let r = pending.wait_timeout(shared.request_timeout)?;
+            Ok((200, "OK", "application/json", classify_json(&r)))
+        }
+        _ => Ok((404, "Not Found", "text/plain", "not found\n".into())),
+    }
+}
+
+/// Parse a classify body into the wire method + input vector.
+pub(crate) fn parse_classify(body: &str) -> Result<(Method, Vec<f32>), ServeError> {
+    let v = Json::parse(body).map_err(|e| ServeError::bad_request(format!("body: {e}")))?;
+    let name = v.get("method").and_then(Json::as_str).unwrap_or("standard");
+    let t = v.get("t").and_then(Json::as_usize);
+    let method = match name {
+        "standard" => Method::Standard { t: t.unwrap_or(DEFAULT_T) },
+        "hybrid" => Method::Hybrid { t: t.unwrap_or(DEFAULT_T) },
+        "dm" | "dmbnn" | "dm-bnn" => {
+            let schedule = match v.get("schedule").and_then(Json::as_arr) {
+                None => DEFAULT_SCHEDULE.to_vec(),
+                Some(a) => a
+                    .iter()
+                    .map(|x| {
+                        x.as_usize().ok_or_else(|| {
+                            ServeError::bad_request("`schedule` must be an array of integers")
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+            };
+            Method::DmBnn { schedule }
+        }
+        other => return Err(ServeError::bad_request(format!("unknown method `{other}`"))),
+    };
+    let input = v
+        .get("input")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServeError::bad_request("missing `input` array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| ServeError::bad_request("`input` must be an array of numbers"))
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok((method, input))
+}
+
+/// The classify success body.  `confidence`/`entropy` are serialized
+/// through f64 (exact for every f32), so clients recover the bit-exact
+/// values with a single `as f32` cast.
+pub(crate) fn classify_json(r: &Response) -> String {
+    let mut o = BTreeMap::new();
+    o.insert("class".to_string(), Json::Num(r.class as f64));
+    o.insert("confidence".to_string(), Json::Num(r.confidence as f64));
+    o.insert("entropy".to_string(), Json::Num(r.entropy as f64));
+    o.insert("voters".to_string(), Json::Num(r.voters as f64));
+    o.insert("latency_us".to_string(), Json::Num(r.latency.as_micros() as f64));
+    Json::Obj(o).to_string() + "\n"
+}
+
+fn write_response(
+    w: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    ctype: &str,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+fn write_error(w: &mut TcpStream, e: &ServeError, keep_alive: bool) -> std::io::Result<()> {
+    let (status, reason) = e.http_status();
+    let mut o = BTreeMap::new();
+    o.insert("error".to_string(), Json::Str(e.name().to_string()));
+    o.insert("code".to_string(), Json::Num(e.code() as f64));
+    o.insert("message".to_string(), Json::Str(e.message().to_string()));
+    let body = Json::Obj(o).to_string() + "\n";
+    write_response(w, status, reason, "application/json", &body, keep_alive)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_bodies_parse() {
+        let (m, x) = parse_classify(r#"{"method":"standard","t":5,"input":[0.5,1.0]}"#).unwrap();
+        assert_eq!(m, Method::Standard { t: 5 });
+        assert_eq!(x, vec![0.5, 1.0]);
+
+        let (m, _) = parse_classify(r#"{"method":"hybrid","input":[]}"#).unwrap();
+        assert_eq!(m, Method::Hybrid { t: DEFAULT_T });
+
+        let (m, _) =
+            parse_classify(r#"{"method":"dm","schedule":[2,3,2],"input":[1]}"#).unwrap();
+        assert_eq!(m, Method::DmBnn { schedule: vec![2, 3, 2] });
+
+        let (m, _) = parse_classify(r#"{"method":"dm","input":[1]}"#).unwrap();
+        assert_eq!(m, Method::DmBnn { schedule: DEFAULT_SCHEDULE.to_vec() });
+    }
+
+    #[test]
+    fn classify_bodies_reject_garbage() {
+        for (body, what) in [
+            ("not json", "syntax"),
+            (r#"{"method":"standard"}"#, "missing input"),
+            (r#"{"method":"warp","input":[1]}"#, "unknown method"),
+            (r#"{"method":"standard","input":["x"]}"#, "non-numeric input"),
+            (r#"{"method":"dm","schedule":[1.5],"input":[1]}"#, "fractional schedule"),
+        ] {
+            let e = parse_classify(body).unwrap_err();
+            assert!(matches!(e, ServeError::BadRequest(_)), "{what}: {e:?}");
+        }
+    }
+
+    #[test]
+    fn classify_json_is_parseable_and_bit_exact() {
+        let r = Response {
+            class: 3,
+            confidence: 0.62515837,
+            entropy: 1.0397208,
+            voters: 12,
+            latency: std::time::Duration::from_micros(777),
+        };
+        let v = Json::parse(&classify_json(&r)).expect("valid json");
+        assert_eq!(v.get("class").and_then(Json::as_usize), Some(3));
+        assert_eq!(v.get("voters").and_then(Json::as_usize), Some(12));
+        assert_eq!(v.get("latency_us").and_then(Json::as_usize), Some(777));
+        let conf = v.get("confidence").and_then(Json::as_f64).unwrap() as f32;
+        assert_eq!(conf.to_bits(), r.confidence.to_bits(), "f32 → f64 → f32 is exact");
+        let ent = v.get("entropy").and_then(Json::as_f64).unwrap() as f32;
+        assert_eq!(ent.to_bits(), r.entropy.to_bits());
+    }
+}

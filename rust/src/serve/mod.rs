@@ -1,0 +1,794 @@
+//! Network serving tier — the wire-ready front door over the coordinator.
+//!
+//! This module turns the in-process serving stack (router/batcher +
+//! engine or cluster backend) into a deployable network service without
+//! adding a single dependency:
+//!
+//! * [`error`] — [`ServeError`]: the canonical serving error with stable
+//!   wire codes, shared by every layer from request validation to the
+//!   socket (no more `Result<_, String>` plumbing).
+//! * [`proto`] — the length-prefixed binary protocol: a 20-byte versioned
+//!   frame header, typed request/response/error frames, f32 payloads by
+//!   bit pattern so wire responses can be compared bit-exactly against
+//!   in-process serving.
+//! * [`http`]  — a minimal HTTP/1.1 shim on the same port (`POST
+//!   /v1/classify`, `GET /metrics`, `GET /healthz`, `GET /admin/drain`)
+//!   so `curl` and load-balancer probes work out of the box.  The
+//!   protocol is sniffed from the first byte: `B` (the frame magic)
+//!   selects binary, anything else HTTP — no HTTP method starts with `B`.
+//! * [`conn`]  — per-connection handling: pipelined binary reads with a
+//!   per-connection writer that answers in request order, poll-tick
+//!   reads so drains are noticed promptly.
+//!
+//! On top of those sit the deployment-level types:
+//!
+//! * [`ServeConfig`] / [`ServeConfig::builder`] — ONE config for the
+//!   whole stack (engine knobs, batcher knobs, network knobs) with
+//!   builder > environment > default precedence.
+//! * [`Deployment`] — the backend selector: a single shared [`Engine`]
+//!   or a sharded `ClusterRouter`, chosen by the config exactly like the
+//!   CLI used to, behind one [`InferenceBackend`] face.  Owns snapshot
+//!   load/save so every frontend gets persistence for free.
+//! * [`serve_deployment`] — the in-process frontend: the same
+//!   router/batcher `serve_engine` uses, over a `Deployment`.
+//! * [`NetServer`] — the TCP frontend: bounded-thread-pool connection
+//!   handling, per-request timeouts, graceful drain on shutdown (stop
+//!   accepting, flush in-flight batches, then exit).
+//! * [`WireClient`] — a tiny blocking client for the binary protocol
+//!   (tests, smoke checks, CLI tooling).
+
+pub mod conn;
+pub mod error;
+pub mod http;
+pub mod proto;
+
+pub use error::ServeError;
+pub use proto::{Frame, WireResponse};
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cluster::router::shards_from_env;
+use crate::cluster::snapshot::{self, SnapshotReport};
+use crate::cluster::{ClusterRouter, MemoConfig};
+use crate::coordinator::engine::{default_workers, Engine, EngineConfig, SeedSchedule};
+use crate::coordinator::metrics::MetricsSummary;
+use crate::coordinator::plan::InferenceMethod;
+use crate::coordinator::server::{serve, InferenceBackend, ServerConfig, ServerHandle};
+use crate::nn::bnn::{BnnModel, Method};
+use crate::nn::dmcache::CacheConfig;
+use crate::nn::plan::LogitBatch;
+
+use conn::ConnShared;
+use proto::ReadOutcome;
+
+/// How often the accept loop polls its listener (it runs non-blocking so
+/// shutdown is never stuck in `accept`).
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+
+/// Network-frontend tuning knobs.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// `host:port` to listen on (`None` = no network frontend).  Port 0
+    /// asks the OS for a free port — read it back via
+    /// [`NetServer::local_addr`].
+    pub listen: Option<String>,
+    /// Connection-handling pool threads = max concurrent connections.
+    pub conn_threads: usize,
+    /// Accepted connections queued for a pool slot before new arrivals
+    /// are rejected with `503 / Overloaded`.
+    pub pending_conns: usize,
+    /// Deadline for completing one frame / HTTP request once its first
+    /// byte arrives (idle keep-alive time is unlimited).
+    pub io_timeout: Duration,
+    /// End-to-end deadline for answering one classify request.
+    pub request_timeout: Duration,
+    /// Per-frame payload cap (also the HTTP body cap).
+    pub max_frame_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            listen: None,
+            conn_threads: 8,
+            pending_conns: 64,
+            io_timeout: Duration::from_secs(10),
+            request_timeout: Duration::from_secs(30),
+            max_frame_bytes: proto::MAX_FRAME_PAYLOAD,
+        }
+    }
+}
+
+/// One config for the whole serving stack — engine, batcher, network.
+///
+/// Build through [`ServeConfig::builder`], which resolves every unset
+/// knob with **builder > environment > default** precedence (the
+/// environment toggles are `BAYESDM_CACHE_MB`, `BAYESDM_SHARDS` and
+/// `BAYESDM_MEMO_MB`, exactly the ones the engine defaults honor).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub engine: EngineConfig,
+    pub server: ServerConfig,
+    pub net: NetConfig,
+}
+
+impl ServeConfig {
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder::default()
+    }
+}
+
+/// Builder for [`ServeConfig`]; every knob is optional.  Validation
+/// happens in [`ServeConfigBuilder::build`] and returns
+/// [`ServeError::BadRequest`] instead of panicking deep in an engine
+/// assert.
+#[derive(Debug, Clone, Default)]
+pub struct ServeConfigBuilder {
+    workers: Option<usize>,
+    seed: Option<u64>,
+    cache_mb: Option<usize>,
+    seed_schedule: Option<SeedSchedule>,
+    alpha: Option<f64>,
+    shards: Option<usize>,
+    memo_mb: Option<usize>,
+    snapshot: Option<String>,
+    max_batch: Option<usize>,
+    max_wait: Option<Duration>,
+    dispatch_workers: Option<usize>,
+    queue_depth: Option<usize>,
+    listen: Option<String>,
+    conn_threads: Option<usize>,
+    pending_conns: Option<usize>,
+    io_timeout: Option<Duration>,
+    request_timeout: Option<Duration>,
+    max_frame_bytes: Option<usize>,
+}
+
+impl ServeConfigBuilder {
+    /// Engine pool threads per batch.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Decomposition-cache budget in MiB; 0 disables.  Unset falls back
+    /// to the `BAYESDM_CACHE_MB` environment default.
+    pub fn cache_mb(mut self, mb: usize) -> Self {
+        self.cache_mb = Some(mb);
+        self
+    }
+
+    pub fn seed_schedule(mut self, s: SeedSchedule) -> Self {
+        self.seed_schedule = Some(s);
+        self
+    }
+
+    /// Fractional α of the memory-friendly sweep, in (0, 1].
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.alpha = Some(alpha);
+        self
+    }
+
+    /// Cluster shard count (≥ 1).  Unset falls back to `BAYESDM_SHARDS`.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = Some(n);
+        self
+    }
+
+    /// Response-memo budget in MiB; 0 disables.  Unset falls back to
+    /// `BAYESDM_MEMO_MB`.
+    pub fn memo_mb(mut self, mb: usize) -> Self {
+        self.memo_mb = Some(mb);
+        self
+    }
+
+    /// Decomposition-cache snapshot path (requires the cache enabled).
+    pub fn snapshot<S: Into<String>>(mut self, path: S) -> Self {
+        self.snapshot = Some(path.into());
+        self
+    }
+
+    /// Max requests fused into one backend dispatch.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = Some(n);
+        self
+    }
+
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.max_wait = Some(d);
+        self
+    }
+
+    /// Batch-dispatch worker threads (batches in flight at once) — NOT
+    /// the engine pool.  Default 1: the engine pool is the parallelism.
+    pub fn dispatch_workers(mut self, n: usize) -> Self {
+        self.dispatch_workers = Some(n);
+        self
+    }
+
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = Some(n);
+        self
+    }
+
+    /// `host:port` for the TCP frontend (port 0 = OS-assigned).
+    pub fn listen<S: Into<String>>(mut self, addr: S) -> Self {
+        self.listen = Some(addr.into());
+        self
+    }
+
+    pub fn conn_threads(mut self, n: usize) -> Self {
+        self.conn_threads = Some(n);
+        self
+    }
+
+    pub fn pending_conns(mut self, n: usize) -> Self {
+        self.pending_conns = Some(n);
+        self
+    }
+
+    pub fn io_timeout(mut self, d: Duration) -> Self {
+        self.io_timeout = Some(d);
+        self
+    }
+
+    pub fn request_timeout(mut self, d: Duration) -> Self {
+        self.request_timeout = Some(d);
+        self
+    }
+
+    pub fn max_frame_bytes(mut self, n: usize) -> Self {
+        self.max_frame_bytes = Some(n);
+        self
+    }
+
+    /// Resolve every unset knob (builder > environment > default) and
+    /// validate the result.
+    pub fn build(self) -> Result<ServeConfig, ServeError> {
+        let engine_defaults = EngineConfig::default();
+        let workers = self.workers.unwrap_or_else(default_workers);
+        if workers == 0 {
+            return Err(ServeError::bad_request("workers must be >= 1"));
+        }
+        let alpha = self.alpha.unwrap_or(1.0);
+        if !(alpha > 0.0 && alpha <= 1.0) {
+            return Err(ServeError::bad_request(format!(
+                "alpha must be in (0, 1], got {alpha}"
+            )));
+        }
+        let cache = match self.cache_mb {
+            Some(0) => CacheConfig::disabled(),
+            Some(mb) => CacheConfig::with_mb(mb),
+            None => CacheConfig::from_env(),
+        };
+        let shards = self.shards.unwrap_or_else(shards_from_env);
+        if shards == 0 {
+            return Err(ServeError::bad_request("shards must be >= 1"));
+        }
+        let memo = match self.memo_mb {
+            Some(0) => MemoConfig::disabled(),
+            Some(mb) => MemoConfig::with_mb(mb),
+            None => MemoConfig::from_env(),
+        };
+        if self.snapshot.is_some() && !cache.enabled() {
+            return Err(ServeError::bad_request(
+                "cache snapshot requires the decomposition cache (cache_mb > 0)",
+            ));
+        }
+        let max_batch = self.max_batch.unwrap_or(8);
+        if max_batch == 0 {
+            return Err(ServeError::bad_request("max_batch must be >= 1"));
+        }
+        let server_defaults = ServerConfig::default();
+        let server = ServerConfig {
+            max_batch,
+            max_wait: self.max_wait.unwrap_or(server_defaults.max_wait),
+            // one dispatch worker by default: the engine pool is the
+            // parallelism (see `serve_engine`'s sizing note)
+            workers: self.dispatch_workers.unwrap_or(1).max(1),
+            queue_depth: self.queue_depth.unwrap_or(server_defaults.queue_depth),
+        };
+        let engine = EngineConfig {
+            workers,
+            seed: self.seed.unwrap_or(engine_defaults.seed),
+            cache,
+            seed_schedule: self.seed_schedule.unwrap_or_default(),
+            alpha,
+            shards,
+            memo,
+            snapshot: self.snapshot,
+        };
+        let net_defaults = NetConfig::default();
+        let net = NetConfig {
+            listen: self.listen,
+            conn_threads: self.conn_threads.unwrap_or(net_defaults.conn_threads).max(1),
+            pending_conns: self.pending_conns.unwrap_or(net_defaults.pending_conns).max(1),
+            io_timeout: self.io_timeout.unwrap_or(net_defaults.io_timeout),
+            request_timeout: self.request_timeout.unwrap_or(net_defaults.request_timeout),
+            max_frame_bytes: self.max_frame_bytes.unwrap_or(net_defaults.max_frame_bytes),
+        };
+        Ok(ServeConfig { engine, server, net })
+    }
+}
+
+enum Backend {
+    Engine(Arc<Engine>),
+    Cluster(Arc<ClusterRouter>),
+}
+
+/// A built serving backend: one shared engine, or a sharded cluster when
+/// the config asks for shards/memoization — the deployment-shape choice
+/// that used to be duplicated in every CLI arm, behind one
+/// [`InferenceBackend`] face.  Owns cache-snapshot persistence: the
+/// snapshot is loaded at construction and saved by
+/// [`Deployment::save_snapshot`] (the cluster additionally saves on
+/// drop).
+pub struct Deployment {
+    backend: Backend,
+    snapshot: Option<String>,
+    load_report: Option<SnapshotReport>,
+}
+
+impl Deployment {
+    /// Build the backend `cfg` describes.  Shards > 1 or an enabled
+    /// response memo select the cluster router; everything else runs the
+    /// single shared engine.
+    pub fn new(model: BnnModel, cfg: &ServeConfig) -> Self {
+        let e = &cfg.engine;
+        if e.shards > 1 || e.memo.enabled() {
+            let router = Arc::new(ClusterRouter::new(model, e.clone()));
+            let load_report = router.snapshot_load_report().cloned();
+            Self { backend: Backend::Cluster(router), snapshot: e.snapshot.clone(), load_report }
+        } else {
+            let engine = Arc::new(Engine::new(model, e.clone()));
+            let load_report = match (&e.snapshot, engine.cache_ref()) {
+                (Some(path), Some(cache)) => {
+                    Some(snapshot::load(cache, engine.model().fingerprint(), Path::new(path)))
+                }
+                _ => None,
+            };
+            Self { backend: Backend::Engine(engine), snapshot: e.snapshot.clone(), load_report }
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        match &self.backend {
+            Backend::Engine(e) => e.input_dim(),
+            Backend::Cluster(r) => r.input_dim(),
+        }
+    }
+
+    pub fn output_dim(&self) -> usize {
+        match &self.backend {
+            Backend::Engine(e) => e.output_dim(),
+            Backend::Cluster(r) => r.output_dim(),
+        }
+    }
+
+    /// Shard count (1 for the single-engine shape).
+    pub fn shards(&self) -> usize {
+        match &self.backend {
+            Backend::Engine(_) => 1,
+            Backend::Cluster(r) => r.shards(),
+        }
+    }
+
+    /// The SIMD kernel path this deployment's traffic executes with.
+    pub fn kernel_isa(&self) -> &'static str {
+        crate::nn::simd::isa_label()
+    }
+
+    /// What snapshot loading found at construction (`None` when no
+    /// snapshot/cache is configured).
+    pub fn load_report(&self) -> Option<&SnapshotReport> {
+        self.load_report.as_ref()
+    }
+
+    /// Fold this backend's cache/memo/shard counters into a server
+    /// summary — the single place `/metrics`, the CLI and the binary
+    /// metrics frame all get their numbers from.
+    pub fn fold_metrics(&self, s: &mut MetricsSummary) {
+        match &self.backend {
+            Backend::Engine(e) => {
+                s.cache = e.cache_stats();
+            }
+            Backend::Cluster(r) => {
+                let c = r.metrics_summary();
+                s.cache = c.cache;
+                s.memo = c.memo;
+                s.shards = c.shards;
+            }
+        }
+    }
+
+    /// Persist the decomposition cache to the configured snapshot path.
+    /// `None` when no path or no cache is configured.
+    pub fn save_snapshot(&self) -> Option<Result<SnapshotReport, ServeError>> {
+        match &self.backend {
+            Backend::Cluster(r) => r.save_snapshot(),
+            Backend::Engine(e) => {
+                let (path, cache) = match (&self.snapshot, e.cache_ref()) {
+                    (Some(path), Some(cache)) => (path, cache),
+                    _ => return None,
+                };
+                Some(snapshot::save(cache, e.model().fingerprint(), Path::new(path)))
+            }
+        }
+    }
+
+    /// Batched test-set accuracy (the `eval` driver), delegating to the
+    /// backend's shared implementation.
+    pub fn accuracy(&self, images: &[f32], labels: &[u8], method: &Method, batch: usize) -> f64 {
+        match &self.backend {
+            Backend::Engine(e) => e.accuracy(images, labels, method, batch),
+            Backend::Cluster(r) => r.accuracy(images, labels, method, batch),
+        }
+    }
+}
+
+impl InferenceBackend for Deployment {
+    fn run_batch(
+        &self,
+        inputs: &[Vec<f32>],
+        method: &InferenceMethod,
+    ) -> Result<LogitBatch, ServeError> {
+        match &self.backend {
+            Backend::Engine(e) => e.run_batch(inputs, method),
+            Backend::Cluster(r) => r.run_batch(inputs, method),
+        }
+    }
+}
+
+/// Start the in-process router/batcher over a deployment — the same
+/// frontend `serve_engine` provides for a bare engine, so in-process and
+/// network serving share one request path.
+pub fn serve_deployment(deployment: &Arc<Deployment>, cfg: ServerConfig) -> ServerHandle {
+    let backend = deployment.clone();
+    serve(move || Ok(backend.clone()), cfg)
+}
+
+/// The TCP front door: accept loop + bounded connection pool over one
+/// [`Deployment`], speaking both wire protocols (see the module docs).
+///
+/// Shutdown is a graceful drain: stop accepting, wake every connection,
+/// let each writer flush its in-flight replies, then stop the batcher.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    shared: Arc<ConnShared>,
+    stop_accept: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    conn_workers: Vec<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.net.listen`, start the batcher and the connection pool.
+    pub fn bind(deployment: Arc<Deployment>, cfg: &ServeConfig) -> Result<Self, ServeError> {
+        let addr = cfg
+            .net
+            .listen
+            .clone()
+            .ok_or_else(|| ServeError::bad_request("no listen address configured"))?;
+        let listener = TcpListener::bind(&addr)
+            .map_err(|e| ServeError::internal(format!("bind {addr}: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| ServeError::internal(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| ServeError::internal(format!("set_nonblocking: {e}")))?;
+
+        let handle = serve_deployment(&deployment, cfg.server.clone());
+        let shared = Arc::new(ConnShared {
+            handle,
+            deployment,
+            request_timeout: cfg.net.request_timeout,
+            io_timeout: cfg.net.io_timeout,
+            max_frame: cfg.net.max_frame_bytes,
+            draining: AtomicBool::new(false),
+            drain_requested: AtomicBool::new(false),
+        });
+
+        let (ctx, crx) = mpsc::sync_channel::<TcpStream>(cfg.net.pending_conns);
+        let crx = Arc::new(Mutex::new(crx));
+        let mut conn_workers = Vec::new();
+        for i in 0..cfg.net.conn_threads.max(1) {
+            let crx = crx.clone();
+            let shared = shared.clone();
+            conn_workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bayesdm-conn-{i}"))
+                    .spawn(move || loop {
+                        let stream = { crx.lock().unwrap().recv() };
+                        match stream {
+                            Ok(s) => conn::handle_conn(s, &shared),
+                            Err(_) => break,
+                        }
+                    })
+                    .map_err(|e| ServeError::internal(format!("spawn conn worker: {e}")))?,
+            );
+        }
+
+        let stop_accept = Arc::new(AtomicBool::new(false));
+        let stop = stop_accept.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("bayesdm-accept".into())
+            .spawn(move || {
+                // `ctx` lives here: joining this thread closes the conn
+                // queue, which is what lets the pool drain and exit.
+                loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((s, _peer)) => {
+                            // accepted sockets must be blocking regardless
+                            // of what they inherit from the listener
+                            if s.set_nonblocking(false).is_err() {
+                                continue;
+                            }
+                            match ctx.try_send(s) {
+                                Ok(()) => {}
+                                Err(TrySendError::Full(s)) => reject_overloaded(s),
+                                Err(TrySendError::Disconnected(_)) => break,
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => std::thread::sleep(ACCEPT_TICK),
+                    }
+                }
+            })
+            .map_err(|e| ServeError::internal(format!("spawn accept loop: {e}")))?;
+
+        Ok(Self {
+            local_addr,
+            shared,
+            stop_accept,
+            accept_thread: Some(accept_thread),
+            conn_workers,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the OS-assigned port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Whether a client asked for a drain (`GET /admin/drain`) — the
+    /// host loop polls this to decide when to call
+    /// [`NetServer::shutdown`].
+    pub fn drain_requested(&self) -> bool {
+        self.shared.drain_requested.load(Ordering::SeqCst)
+    }
+
+    /// Current metrics with the deployment's counters folded in.
+    pub fn metrics_summary(&self) -> MetricsSummary {
+        self.shared.metrics_summary()
+    }
+
+    /// Graceful drain: stop accepting, wake every connection, flush each
+    /// connection's in-flight replies, stop the batcher.  Returns the
+    /// final metrics summary.
+    pub fn shutdown(mut self) -> MetricsSummary {
+        self.stop_accept.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join(); // drops the conn queue sender
+        }
+        // Connections stop reading at the next poll tick; their writer
+        // threads drain queued replies before each connection closes.
+        self.shared.draining.store(true, Ordering::SeqCst);
+        for w in self.conn_workers.drain(..) {
+            let _ = w.join();
+        }
+        let summary = self.shared.metrics_summary();
+        let NetServer { shared, .. } = self;
+        if let Ok(s) = Arc::try_unwrap(shared) {
+            s.handle.shutdown(); // stop router + batch workers
+        }
+        summary
+    }
+}
+
+/// Best-effort `503` for connections arriving past the pending queue.
+/// Written as HTTP so curl/probes see a structured answer; binary
+/// clients observe the close and surface a truncation error.
+fn reject_overloaded(mut s: TcpStream) {
+    let err = ServeError::Overloaded;
+    let body = format!(
+        "{{\"error\":\"{}\",\"code\":{},\"message\":\"{}\"}}\n",
+        err.name(),
+        err.code(),
+        err.message()
+    );
+    let _ = s.set_write_timeout(Some(Duration::from_millis(250)));
+    let _ = write!(
+        s,
+        "HTTP/1.1 503 Service Unavailable\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+}
+
+/// A small blocking client for the binary protocol — what the protocol
+/// tests, the CI smoke leg and operator tooling speak.
+pub struct WireClient {
+    reader: std::io::BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl WireClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self, ServeError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| ServeError::internal(format!("connect: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream
+            .try_clone()
+            .map_err(|e| ServeError::internal(format!("clone stream: {e}")))?;
+        Ok(Self { reader: std::io::BufReader::new(stream), writer, next_id: 1 })
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send one frame (any kind — tests use this to send malformed
+    /// sequences too).
+    pub fn send(&mut self, frame: &Frame) -> Result<(), ServeError> {
+        proto::write_frame(&mut self.writer, frame)
+            .map_err(|e| ServeError::internal(format!("send: {e}")))
+    }
+
+    /// Receive the next frame (blocking; the socket has no read
+    /// timeout, so `Idle` cannot occur).
+    pub fn recv(&mut self) -> Result<Frame, ServeError> {
+        loop {
+            let out = proto::read_frame(
+                &mut self.reader,
+                proto::MAX_FRAME_PAYLOAD,
+                Duration::from_secs(60),
+            )?;
+            match out {
+                ReadOutcome::Frame(f) => return Ok(f),
+                ReadOutcome::Idle => continue,
+                ReadOutcome::Eof => {
+                    return Err(ServeError::internal("server closed the connection"));
+                }
+            }
+        }
+    }
+
+    /// Submit a classify request without waiting for the reply
+    /// (pipelining); returns the request id.
+    pub fn send_classify(&mut self, method: &Method, input: &[f32]) -> Result<u64, ServeError> {
+        let id = self.fresh_id();
+        self.send(&Frame::Request { id, method: method.clone(), input: input.to_vec() })?;
+        Ok(id)
+    }
+
+    /// One classify round-trip; an error frame becomes `Err`.
+    pub fn classify(&mut self, method: &Method, input: &[f32]) -> Result<WireResponse, ServeError> {
+        let id = self.send_classify(method, input)?;
+        match self.recv()? {
+            Frame::Response { id: rid, resp } if rid == id => Ok(resp),
+            Frame::Error { err, .. } => Err(err),
+            other => Err(ServeError::internal(format!(
+                "unexpected reply frame (id {})",
+                other.id()
+            ))),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<(), ServeError> {
+        let id = self.fresh_id();
+        self.send(&Frame::Ping { id })?;
+        match self.recv()? {
+            Frame::Pong { id: rid } if rid == id => Ok(()),
+            other => Err(ServeError::internal(format!(
+                "unexpected ping reply (id {})",
+                other.id()
+            ))),
+        }
+    }
+
+    /// Fetch the server's metrics JSON over the binary protocol.
+    pub fn metrics_text(&mut self) -> Result<String, ServeError> {
+        let id = self.fresh_id();
+        self.send(&Frame::MetricsRequest { id })?;
+        match self.recv()? {
+            Frame::MetricsText { id: rid, text } if rid == id => Ok(text),
+            Frame::Error { err, .. } => Err(err),
+            other => Err(ServeError::internal(format!(
+                "unexpected metrics reply (id {})",
+                other.id()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_fills_defaults_and_validates() {
+        let cfg = ServeConfig::builder().build().expect("default config");
+        assert!(cfg.engine.workers >= 1);
+        assert!(cfg.engine.shards >= 1);
+        assert_eq!(cfg.server.workers, 1, "one dispatch worker by default");
+        assert!(cfg.net.listen.is_none());
+
+        for (b, what) in [
+            (ServeConfig::builder().alpha(0.0), "alpha 0"),
+            (ServeConfig::builder().alpha(1.5), "alpha > 1"),
+            (ServeConfig::builder().shards(0), "zero shards"),
+            (ServeConfig::builder().workers(0), "zero workers"),
+            (ServeConfig::builder().max_batch(0), "zero max_batch"),
+            (ServeConfig::builder().cache_mb(0).snapshot("x.bin"), "snapshot sans cache"),
+        ] {
+            let err = b.build().unwrap_err();
+            assert!(matches!(err, ServeError::BadRequest(_)), "{what}: {err:?}");
+        }
+    }
+
+    #[test]
+    fn builder_overrides_beat_env_and_defaults() {
+        let cfg = ServeConfig::builder()
+            .workers(3)
+            .seed(42)
+            .cache_mb(4)
+            .shards(2)
+            .memo_mb(2)
+            .max_batch(1)
+            .listen("127.0.0.1:0")
+            .conn_threads(2)
+            .build()
+            .expect("explicit config");
+        assert_eq!(cfg.engine.workers, 3);
+        assert_eq!(cfg.engine.seed, 42);
+        assert!(cfg.engine.cache.enabled());
+        assert_eq!(cfg.engine.shards, 2);
+        assert!(cfg.engine.memo.enabled());
+        assert_eq!(cfg.server.max_batch, 1);
+        assert_eq!(cfg.net.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(cfg.net.conn_threads, 2);
+        // explicit 0 must mean "off", not "fall back to env"
+        let off = ServeConfig::builder().cache_mb(0).memo_mb(0).build().unwrap();
+        assert!(!off.engine.cache.enabled());
+        assert!(!off.engine.memo.enabled());
+    }
+
+    #[test]
+    fn deployment_selects_the_backend_shape() {
+        let model = || BnnModel::synthetic(&[16, 12, 8, 5], 11);
+        let single = ServeConfig::builder().shards(1).memo_mb(0).cache_mb(0).build().unwrap();
+        let d = Deployment::new(model(), &single);
+        assert_eq!(d.shards(), 1);
+        assert_eq!(d.input_dim(), 16);
+        assert_eq!(d.output_dim(), 5);
+        assert!(d.save_snapshot().is_none(), "no snapshot configured");
+
+        let sharded = ServeConfig::builder().shards(2).memo_mb(0).cache_mb(0).build().unwrap();
+        let d = Deployment::new(model(), &sharded);
+        assert_eq!(d.shards(), 2);
+        // a memo-enabled config is a cluster even at one shard
+        let memoed = ServeConfig::builder().shards(1).memo_mb(2).cache_mb(0).build().unwrap();
+        let d = Deployment::new(model(), &memoed);
+        let mut s = crate::coordinator::metrics::Metrics::new().summary();
+        d.fold_metrics(&mut s);
+        assert!(s.memo.is_some(), "cluster summary carries memo counters");
+    }
+}

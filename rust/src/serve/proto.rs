@@ -1,0 +1,603 @@
+//! The length-prefixed binary wire protocol (versioned frames).
+//!
+//! Every message is one frame: a fixed 20-byte little-endian header
+//! followed by a kind-specific payload.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic   "BDM1"
+//! 4       1     version (= 1)
+//! 5       1     kind    (see below)
+//! 6       2     reserved (0 on encode, ignored on decode)
+//! 8       8     request id (echoed verbatim in the reply)
+//! 16      4     payload length in bytes
+//! ```
+//!
+//! Frame kinds: 1 = Request, 2 = Response, 3 = Error, 4 = Ping,
+//! 5 = Pong, 6 = MetricsRequest, 7 = MetricsText.  Responses carry the
+//! raw f32 **bits** of confidence/entropy, so a wire client observes the
+//! exact values the in-process path computes (the bit-parity contract
+//! `tests/serve_proto.rs` pins).
+//!
+//! Request payloads encode the inference method (tag 0 = Standard,
+//! 1 = Hybrid, 2 = DM-BNN with an explicit per-layer schedule) and the
+//! input vector as raw f32 bits.  Error payloads carry the stable
+//! [`ServeError`] wire code plus a UTF-8 detail message.
+//!
+//! Decoding is defensive: bad magic, unknown version/kind, truncated or
+//! trailing payload bytes and oversized frames all surface as
+//! [`ServeError::BadRequest`]; a mid-frame stall longer than the I/O
+//! deadline surfaces as [`ServeError::Timeout`].
+
+use std::io::{ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
+
+use crate::nn::bnn::Method;
+
+use super::error::ServeError;
+
+/// Frame magic — also the protocol-sniffing prefix (no HTTP method
+/// starts with `B`, so one peeked byte routes a connection).
+pub const MAGIC: [u8; 4] = *b"BDM1";
+/// Wire protocol version carried in every frame header.
+pub const PROTO_VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 20;
+/// Default cap on a single frame's payload (16 MiB) — far above any
+/// legitimate request, small enough to bound a hostile length prefix.
+pub const MAX_FRAME_PAYLOAD: usize = 16 << 20;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+const KIND_ERROR: u8 = 3;
+const KIND_PING: u8 = 4;
+const KIND_PONG: u8 = 5;
+const KIND_METRICS_REQ: u8 = 6;
+const KIND_METRICS_TEXT: u8 = 7;
+
+const METHOD_STANDARD: u8 = 0;
+const METHOD_HYBRID: u8 = 1;
+const METHOD_DM: u8 = 2;
+
+/// Sanity bound on a DM schedule's length in a request frame.
+const MAX_SCHEDULE_LEN: usize = 1024;
+
+/// A served answer on the wire.  `confidence`/`entropy` round-trip by
+/// bits; `latency_us` is the server-side queue+compute latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireResponse {
+    pub class: u32,
+    pub voters: u32,
+    pub confidence: f32,
+    pub entropy: f32,
+    pub latency_us: u64,
+}
+
+/// One decoded protocol frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Classify `input` with `method`; the reply echoes `id`.
+    Request { id: u64, method: Method, input: Vec<f32> },
+    Response { id: u64, resp: WireResponse },
+    Error { id: u64, err: ServeError },
+    Ping { id: u64 },
+    Pong { id: u64 },
+    MetricsRequest { id: u64 },
+    /// Rendered `MetricsSummary` JSON (server → client).
+    MetricsText { id: u64, text: String },
+}
+
+impl Frame {
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Request { id, .. }
+            | Frame::Response { id, .. }
+            | Frame::Error { id, .. }
+            | Frame::Ping { id }
+            | Frame::Pong { id }
+            | Frame::MetricsRequest { id }
+            | Frame::MetricsText { id, .. } => *id,
+        }
+    }
+
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Request { .. } => KIND_REQUEST,
+            Frame::Response { .. } => KIND_RESPONSE,
+            Frame::Error { .. } => KIND_ERROR,
+            Frame::Ping { .. } => KIND_PING,
+            Frame::Pong { .. } => KIND_PONG,
+            Frame::MetricsRequest { .. } => KIND_METRICS_REQ,
+            Frame::MetricsText { .. } => KIND_METRICS_TEXT,
+        }
+    }
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        push_u32(buf, x.to_bits());
+    }
+}
+
+fn encode_payload(frame: &Frame) -> Vec<u8> {
+    let mut p = Vec::new();
+    match frame {
+        Frame::Request { method, input, .. } => {
+            match method {
+                Method::Standard { t } => {
+                    p.push(METHOD_STANDARD);
+                    push_u32(&mut p, *t as u32);
+                }
+                Method::Hybrid { t } => {
+                    p.push(METHOD_HYBRID);
+                    push_u32(&mut p, *t as u32);
+                }
+                Method::DmBnn { schedule } => {
+                    p.push(METHOD_DM);
+                    push_u32(&mut p, schedule.len() as u32);
+                    for &s in schedule {
+                        push_u32(&mut p, s as u32);
+                    }
+                }
+            }
+            push_u32(&mut p, input.len() as u32);
+            push_f32s(&mut p, input);
+        }
+        Frame::Response { resp, .. } => {
+            push_u32(&mut p, resp.class);
+            push_u32(&mut p, resp.voters);
+            push_u32(&mut p, resp.confidence.to_bits());
+            push_u32(&mut p, resp.entropy.to_bits());
+            p.extend_from_slice(&resp.latency_us.to_le_bytes());
+        }
+        Frame::Error { err, .. } => {
+            p.extend_from_slice(&err.code().to_le_bytes());
+            p.extend_from_slice(err.message().as_bytes());
+        }
+        Frame::MetricsText { text, .. } => p.extend_from_slice(text.as_bytes()),
+        Frame::Ping { .. } | Frame::Pong { .. } | Frame::MetricsRequest { .. } => {}
+    }
+    p
+}
+
+/// Encode one frame (header + payload) into a fresh buffer.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let payload = encode_payload(frame);
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.push(PROTO_VERSION);
+    buf.push(frame.kind());
+    buf.extend_from_slice(&0u16.to_le_bytes());
+    buf.extend_from_slice(&frame.id().to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    buf
+}
+
+/// Write one frame to `w` (single buffered write + flush).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode(frame))?;
+    w.flush()
+}
+
+/// Bounds-checked little-endian payload reader.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ServeError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| ServeError::bad_request("truncated frame payload"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ServeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ServeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ServeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ServeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, ServeError> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| ServeError::bad_request("frame length overflow"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn finish(&self) -> Result<(), ServeError> {
+        if self.pos != self.buf.len() {
+            return Err(ServeError::bad_request(format!(
+                "{} trailing bytes after frame payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode a frame payload given its header fields.  Exposed for the
+/// protocol test suite; `read_frame` is the streaming entry point.
+pub fn decode_payload(kind: u8, id: u64, payload: &[u8]) -> Result<Frame, ServeError> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let frame = match kind {
+        KIND_REQUEST => {
+            let method = match r.u8()? {
+                METHOD_STANDARD => Method::Standard { t: r.u32()? as usize },
+                METHOD_HYBRID => Method::Hybrid { t: r.u32()? as usize },
+                METHOD_DM => {
+                    let len = r.u32()? as usize;
+                    if len > MAX_SCHEDULE_LEN {
+                        return Err(ServeError::bad_request(format!(
+                            "schedule length {len} exceeds {MAX_SCHEDULE_LEN}"
+                        )));
+                    }
+                    let mut schedule = Vec::with_capacity(len);
+                    for _ in 0..len {
+                        schedule.push(r.u32()? as usize);
+                    }
+                    Method::DmBnn { schedule }
+                }
+                tag => return Err(ServeError::bad_request(format!("unknown method tag {tag}"))),
+            };
+            let n = r.u32()? as usize;
+            let input = r.f32s(n)?;
+            Frame::Request { id, method, input }
+        }
+        KIND_RESPONSE => Frame::Response {
+            id,
+            resp: WireResponse {
+                class: r.u32()?,
+                voters: r.u32()?,
+                confidence: f32::from_bits(r.u32()?),
+                entropy: f32::from_bits(r.u32()?),
+                latency_us: r.u64()?,
+            },
+        },
+        KIND_ERROR => {
+            let code = r.u16()?;
+            let msg = String::from_utf8_lossy(r.take(payload.len() - 2)?).into_owned();
+            Frame::Error { id, err: ServeError::from_wire(code, msg) }
+        }
+        KIND_PING => Frame::Ping { id },
+        KIND_PONG => Frame::Pong { id },
+        KIND_METRICS_REQ => Frame::MetricsRequest { id },
+        KIND_METRICS_TEXT => Frame::MetricsText {
+            id,
+            text: String::from_utf8_lossy(payload).into_owned(),
+        },
+        k => return Err(ServeError::bad_request(format!("unknown frame kind {k}"))),
+    };
+    r.finish()?;
+    Ok(frame)
+}
+
+/// Outcome of one streaming read attempt.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete frame arrived.
+    Frame(Frame),
+    /// Clean EOF at a frame boundary (peer closed the connection).
+    Eof,
+    /// The socket's poll tick expired with **zero** bytes of a new frame
+    /// read — the connection is idle, not timed out.  Callers loop on
+    /// this (checking their drain flag) to stay responsive.
+    Idle,
+}
+
+/// Fill `buf` from `r`, tolerating short reads.  `started` reports
+/// whether any byte of this frame had already arrived: a read timeout
+/// before the first byte is [`ReadOutcome::Idle`] territory (`Ok(false)`
+/// return), after it the frame is mid-flight and the `deadline` applies.
+fn read_full<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    mut got: usize,
+    deadline: &mut Option<Instant>,
+    io_timeout: Duration,
+) -> Result<Option<usize>, ServeError> {
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && deadline.is_none() {
+                    return Ok(None); // clean EOF at a frame boundary
+                }
+                return Err(ServeError::bad_request("truncated frame: peer closed mid-frame"));
+            }
+            Ok(n) => {
+                got += n;
+                if deadline.is_none() {
+                    *deadline = Some(Instant::now() + io_timeout);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                match *deadline {
+                    // no byte of this frame yet: idle tick, not an error
+                    None => return Ok(Some(got)),
+                    Some(d) if Instant::now() >= d => return Err(ServeError::Timeout),
+                    Some(_) => {}
+                }
+            }
+            Err(e) => return Err(ServeError::internal(format!("read: {e}"))),
+        }
+    }
+    Ok(Some(got))
+}
+
+/// Read one frame from `r`.
+///
+/// `r`'s read timeout should be a short poll tick (see
+/// `conn::POLL_TICK`); `io_timeout` is the end-to-end deadline for a
+/// frame once its first byte has arrived.  Returns [`ReadOutcome::Idle`]
+/// when the tick expires before any byte of a new frame, so callers can
+/// check shutdown flags between frames without dropping data.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    max_payload: usize,
+    io_timeout: Duration,
+) -> Result<ReadOutcome, ServeError> {
+    let mut hdr = [0u8; HEADER_BYTES];
+    let mut deadline: Option<Instant> = None;
+    let mut got = 0usize;
+    loop {
+        match read_full(r, &mut hdr, got, &mut deadline, io_timeout)? {
+            None => return Ok(ReadOutcome::Eof),
+            Some(n) if n < HEADER_BYTES => {
+                if n == 0 {
+                    return Ok(ReadOutcome::Idle);
+                }
+                got = n; // partial header: keep collecting under the deadline
+            }
+            Some(_) => break,
+        }
+    }
+
+    if hdr[0..4] != MAGIC {
+        return Err(ServeError::bad_request("bad frame magic"));
+    }
+    if hdr[4] != PROTO_VERSION {
+        return Err(ServeError::bad_request(format!(
+            "unsupported protocol version {} (expected {PROTO_VERSION})",
+            hdr[4]
+        )));
+    }
+    let kind = hdr[5];
+    let id = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+    let len = u32::from_le_bytes(hdr[16..20].try_into().unwrap()) as usize;
+    if len > max_payload {
+        return Err(ServeError::bad_request(format!(
+            "oversized frame: {len} bytes exceeds the {max_payload}-byte cap"
+        )));
+    }
+
+    let mut payload = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match read_full(r, &mut payload, got, &mut deadline, io_timeout)? {
+            None => unreachable!("EOF handled as truncation once the header arrived"),
+            Some(n) if n < len => got = n,
+            Some(_) => break,
+        }
+    }
+    Ok(ReadOutcome::Frame(decode_payload(kind, id, &payload)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const T: Duration = Duration::from_secs(1);
+
+    fn round_trip(f: &Frame) -> Frame {
+        let bytes = encode(f);
+        let mut c = Cursor::new(bytes);
+        match read_frame(&mut c, MAX_FRAME_PAYLOAD, T).expect("decode") {
+            ReadOutcome::Frame(g) => g,
+            other => panic!("expected a frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn all_kinds_round_trip() {
+        let frames = vec![
+            Frame::Request {
+                id: 7,
+                method: Method::Standard { t: 100 },
+                input: vec![0.25, -1.5, 3.25],
+            },
+            Frame::Request { id: 8, method: Method::Hybrid { t: 31 }, input: vec![] },
+            Frame::Request {
+                id: 9,
+                method: Method::DmBnn { schedule: vec![10, 10, 10] },
+                input: vec![f32::MIN_POSITIVE, f32::MAX],
+            },
+            Frame::Response {
+                id: 10,
+                resp: WireResponse {
+                    class: 3,
+                    voters: 12,
+                    confidence: 0.75,
+                    entropy: 1.0625,
+                    latency_us: 12345,
+                },
+            },
+            Frame::Error { id: 11, err: ServeError::DimMismatch("dim 3 != 784".into()) },
+            Frame::Error { id: 12, err: ServeError::Timeout },
+            Frame::Ping { id: 13 },
+            Frame::Pong { id: 14 },
+            Frame::MetricsRequest { id: 15 },
+            Frame::MetricsText { id: 16, text: "{\"requests\":3}".into() },
+        ];
+        for f in &frames {
+            assert_eq!(&round_trip(f), f, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn random_request_frames_round_trip() {
+        // Property test over generated frames: ids, methods, lengths and
+        // payload bit patterns all survive encode → decode exactly.
+        use crate::grng::uniform::{UniformSource, XorShift128Plus};
+        let mut r = XorShift128Plus::new(0xF4A3);
+        for round in 0..200 {
+            let id = ((r.next_f32().to_bits() as u64) << 20) | round;
+            let n = (r.next_f32() * 64.0) as usize;
+            let input: Vec<f32> = (0..n).map(|_| r.next_f32() * 2.0 - 1.0).collect();
+            let method = match round % 3 {
+                0 => Method::Standard { t: 1 + (r.next_f32() * 400.0) as usize },
+                1 => Method::Hybrid { t: 1 + (r.next_f32() * 400.0) as usize },
+                _ => Method::DmBnn {
+                    schedule: (0..3).map(|_| 1 + (r.next_f32() * 20.0) as usize).collect(),
+                },
+            };
+            let f = Frame::Request { id, method, input };
+            assert_eq!(round_trip(&f), f, "round {round}");
+        }
+    }
+
+    #[test]
+    fn nonfinite_floats_round_trip_by_bits() {
+        let f = Frame::Request {
+            id: 1,
+            method: Method::Standard { t: 1 },
+            input: vec![f32::INFINITY, f32::NEG_INFINITY, -0.0],
+        };
+        let g = round_trip(&f);
+        let (Frame::Request { input: a, .. }, Frame::Request { input: b, .. }) = (&f, &g) else {
+            panic!("kind changed in flight");
+        };
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(a), bits(b));
+    }
+
+    fn expect_bad(bytes: &[u8], what: &str) -> ServeError {
+        let mut c = Cursor::new(bytes.to_vec());
+        match read_frame(&mut c, MAX_FRAME_PAYLOAD, T) {
+            Err(e) => e,
+            Ok(o) => panic!("{what}: expected rejection, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn garbage_and_bad_magic_rejected() {
+        let e = expect_bad(&[0xDE; 64], "garbage");
+        assert!(matches!(e, ServeError::BadRequest(_)), "{e:?}");
+        let mut almost = encode(&Frame::Ping { id: 1 });
+        almost[0] = b'X';
+        let e = expect_bad(&almost, "bad magic");
+        assert!(e.to_string().contains("magic"), "{e}");
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut bytes = encode(&Frame::Ping { id: 1 });
+        bytes[4] = 9;
+        let e = expect_bad(&bytes, "version");
+        assert!(e.to_string().contains("version"), "{e}");
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut bytes = encode(&Frame::Ping { id: 1 });
+        bytes[5] = 200;
+        let e = expect_bad(&bytes, "kind");
+        assert!(e.to_string().contains("kind"), "{e}");
+    }
+
+    #[test]
+    fn truncated_header_and_payload_rejected() {
+        let bytes = encode(&Frame::Request {
+            id: 2,
+            method: Method::Standard { t: 3 },
+            input: vec![1.0, 2.0],
+        });
+        // cut inside the header and inside the payload
+        for cut in [1, HEADER_BYTES - 1, HEADER_BYTES + 3, bytes.len() - 1] {
+            let e = expect_bad(&bytes[..cut], "truncation");
+            assert!(e.to_string().contains("truncated"), "cut {cut}: {e}");
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected_without_allocation() {
+        let mut bytes = encode(&Frame::Ping { id: 3 });
+        bytes[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = expect_bad(&bytes, "oversized");
+        assert!(e.to_string().contains("oversized"), "{e}");
+    }
+
+    #[test]
+    fn payload_length_lies_are_rejected() {
+        // declared input length larger than the actual payload
+        let mut bytes = encode(&Frame::Request {
+            id: 4,
+            method: Method::Standard { t: 3 },
+            input: vec![1.0, 2.0],
+        });
+        let body = HEADER_BYTES + 1 + 4; // method tag + t
+        bytes[body..body + 4].copy_from_slice(&100u32.to_le_bytes());
+        let e = expect_bad(&bytes, "length lie");
+        assert!(e.to_string().contains("truncated"), "{e}");
+
+        // trailing junk after a well-formed payload
+        let mut bytes = encode(&Frame::Ping { id: 5 });
+        let len = bytes.len();
+        bytes.extend_from_slice(&[1, 2, 3]);
+        bytes[16..20].copy_from_slice(&3u32.to_le_bytes());
+        let e = expect_bad(&bytes[..len + 3], "trailing");
+        assert!(e.to_string().contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn eof_at_boundary_is_clean() {
+        let mut c = Cursor::new(Vec::new());
+        assert!(matches!(
+            read_frame(&mut c, MAX_FRAME_PAYLOAD, T).unwrap(),
+            ReadOutcome::Eof
+        ));
+    }
+
+    #[test]
+    fn error_frames_preserve_wire_codes() {
+        for err in [
+            ServeError::bad_request("x"),
+            ServeError::DimMismatch("y".into()),
+            ServeError::Overloaded,
+            ServeError::Timeout,
+            ServeError::ShuttingDown,
+            ServeError::internal("z"),
+        ] {
+            let f = Frame::Error { id: 1, err: err.clone() };
+            let Frame::Error { err: back, .. } = round_trip(&f) else {
+                panic!("kind changed");
+            };
+            assert_eq!(back.code(), err.code());
+        }
+    }
+}

@@ -381,11 +381,11 @@ mod pjrt {
             return;
         }
         let handle = serve(
-            || -> Result<Executor, String> {
+            || -> Result<Executor, bayesdm::serve::ServeError> {
                 let weights = load_weights(format!("{ARTIFACTS}/weights_mnist_bnn.bin"))
-                    .map_err(|e| e.to_string())?;
-                let engine = Engine::new(ARTIFACTS).map_err(|e| e.to_string())?;
-                Executor::new(engine, weights, 7).map_err(|e| e.to_string())
+                    .map_err(bayesdm::serve::ServeError::internal)?;
+                let engine = Engine::new(ARTIFACTS).map_err(bayesdm::serve::ServeError::internal)?;
+                Executor::new(engine, weights, 7).map_err(bayesdm::serve::ServeError::internal)
             },
             ServerConfig { max_batch: 4, workers: 1, ..ServerConfig::default() },
         );

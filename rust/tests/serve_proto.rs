@@ -1,0 +1,436 @@
+//! Wire-protocol integration suite (DESIGN.md §12).
+//!
+//! Three layers of guarantees:
+//!
+//! 1. **Codec hardening** — frames round-trip bit-exactly through the
+//!    public `serve::proto` API; garbage, truncation, length lies and
+//!    oversized frames are rejected as `BadRequest`, never panics.
+//! 2. **Loopback e2e parity** — responses served over a real TCP socket
+//!    are bit-identical to the in-process `serve_engine` /
+//!    `serve_deployment` path for all three methods, for the
+//!    single-engine and the sharded-cluster deployment shapes (under
+//!    `SeedSchedule::ContentHash` + single-request batches, the
+//!    per-request determinism contract).
+//! 3. **Operational semantics** — graceful shutdown answers every
+//!    admitted in-flight request, `/admin/drain` is visible to the host
+//!    loop, and `/metrics` (HTTP + binary) reflects served counts.
+
+use std::io::{BufReader, Cursor, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bayesdm::coordinator::{serve_engine, Engine, InferenceMethod, SeedSchedule};
+use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+use bayesdm::nn::bnn::{BnnModel, Method};
+use bayesdm::serve::proto::{self, ReadOutcome, MAX_FRAME_PAYLOAD};
+use bayesdm::serve::{
+    serve_deployment, Deployment, Frame, NetServer, ServeConfig, ServeError, WireClient,
+    WireResponse,
+};
+use bayesdm::util::Json;
+
+const ARCH: [usize; 4] = [16, 12, 8, 5];
+
+fn model() -> BnnModel {
+    BnnModel::synthetic(&ARCH, 0xC0FFEE)
+}
+
+/// The per-request-deterministic serving shape: content-derived seeds +
+/// single-request batches, caches off so every answer is recomputed.
+fn parity_config(shards: usize) -> ServeConfig {
+    ServeConfig::builder()
+        .seed(7)
+        .seed_schedule(SeedSchedule::ContentHash)
+        .workers(2)
+        .max_batch(1)
+        .cache_mb(0)
+        .memo_mb(0)
+        .shards(shards)
+        .listen("127.0.0.1:0")
+        .conn_threads(2)
+        .build()
+        .expect("parity config")
+}
+
+fn input(i: usize) -> Vec<f32> {
+    (0..ARCH[0]).map(|j| ((i * 31 + j * 7) % 17) as f32 / 16.0 - 0.5).collect()
+}
+
+fn methods() -> Vec<Method> {
+    vec![
+        Method::Standard { t: 6 },
+        Method::Hybrid { t: 6 },
+        Method::DmBnn { schedule: vec![3, 2, 3] },
+    ]
+}
+
+fn to_inference(m: &Method) -> InferenceMethod {
+    match m {
+        Method::Standard { t } => InferenceMethod::Standard { t: *t },
+        Method::Hybrid { t } => InferenceMethod::Hybrid { t: *t },
+        Method::DmBnn { schedule } => {
+            InferenceMethod::DmBnn { schedule: schedule.clone(), alpha: 1.0 }
+        }
+    }
+}
+
+fn assert_bit_identical(wire: &WireResponse, r: &bayesdm::coordinator::Response, what: &str) {
+    assert_eq!(wire.class as usize, r.class, "{what}: class");
+    assert_eq!(wire.voters as usize, r.voters, "{what}: voters");
+    assert_eq!(
+        wire.confidence.to_bits(),
+        r.confidence.to_bits(),
+        "{what}: confidence bits"
+    );
+    assert_eq!(wire.entropy.to_bits(), r.entropy.to_bits(), "{what}: entropy bits");
+}
+
+// ---------------------------------------------------------------- codec
+
+#[test]
+fn generated_frames_round_trip_bit_exactly() {
+    let mut r = XorShift128Plus::new(0x5EED);
+    for round in 0..300u64 {
+        let id = ((r.next_f32().to_bits() as u64) << 24) | round;
+        let n = (r.next_f32() * 48.0) as usize;
+        let input: Vec<f32> = (0..n).map(|_| r.next_f32() * 4.0 - 2.0).collect();
+        let method = match round % 3 {
+            0 => Method::Standard { t: 1 + (r.next_f32() * 300.0) as usize },
+            1 => Method::Hybrid { t: 1 + (r.next_f32() * 300.0) as usize },
+            _ => Method::DmBnn {
+                schedule: (0..3).map(|_| 1 + (r.next_f32() * 12.0) as usize).collect(),
+            },
+        };
+        let f = Frame::Request { id, method, input };
+        let mut c = Cursor::new(proto::encode(&f));
+        let out = proto::read_frame(&mut c, MAX_FRAME_PAYLOAD, Duration::from_secs(1))
+            .expect("decode");
+        match out {
+            ReadOutcome::Frame(g) => assert_eq!(g, f, "round {round}"),
+            other => panic!("round {round}: expected a frame, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn codec_rejects_malformed_bytes_without_panicking() {
+    let decode = |bytes: &[u8]| {
+        let mut c = Cursor::new(bytes.to_vec());
+        proto::read_frame(&mut c, MAX_FRAME_PAYLOAD, Duration::from_secs(1))
+    };
+    // pure garbage (bad magic)
+    assert!(matches!(decode(&[0xAB; 64]), Err(ServeError::BadRequest(_))));
+    // every truncation point of a real frame is a clean rejection
+    let f = Frame::Request { id: 9, method: Method::Hybrid { t: 3 }, input: input(0) };
+    let bytes = proto::encode(&f);
+    for cut in 1..bytes.len() {
+        match decode(&bytes[..cut]) {
+            Err(ServeError::BadRequest(_)) => {}
+            other => panic!("cut {cut}: {other:?}"),
+        }
+    }
+    // a header whose length prefix exceeds the cap is refused up front
+    let mut big = proto::encode(&Frame::Ping { id: 1 });
+    big[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+    let e = decode(&big).expect_err("oversized");
+    assert!(e.to_string().contains("oversized"), "{e}");
+    // header-level lies: wrong version, unknown kind
+    for (byte, val) in [(4usize, 9u8), (5, 200)] {
+        let mut b = proto::encode(&Frame::Ping { id: 1 });
+        b[byte] = val;
+        assert!(matches!(decode(&b), Err(ServeError::BadRequest(_))), "byte {byte}");
+    }
+}
+
+// ------------------------------------------------------ loopback parity
+
+#[test]
+fn wire_responses_match_in_process_serve_engine_bit_for_bit() {
+    let cfg = parity_config(1);
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+
+    // the in-process reference: a separately built engine with the SAME
+    // resolved config, behind the same router/batcher
+    let engine = Arc::new(Engine::new(model(), cfg.engine.clone()));
+    let handle = serve_engine(engine, cfg.server.clone());
+
+    for m in methods() {
+        for i in 0..4 {
+            let x = input(i);
+            let wire = client.classify(&m, &x).expect("wire classify");
+            let r = handle
+                .classify(x, to_inference(&m))
+                .expect("in-process classify")
+                .wait()
+                .expect("in-process response");
+            assert_bit_identical(&wire, &r, &format!("{m:?} #{i}"));
+        }
+    }
+    handle.shutdown();
+    let summary = server.shutdown();
+    assert_eq!(summary.requests, 12, "3 methods × 4 inputs served over the wire");
+    assert_eq!(summary.errors, 0);
+}
+
+#[test]
+fn sharded_wire_responses_match_in_process_cluster_bit_for_bit() {
+    let cfg = parity_config(2);
+    let wire_side = Arc::new(Deployment::new(model(), &cfg));
+    assert_eq!(wire_side.shards(), 2, "config selects the cluster shape");
+    let server = NetServer::bind(wire_side, &cfg).expect("bind");
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+
+    let reference = Arc::new(Deployment::new(model(), &cfg));
+    let handle = serve_deployment(&reference, cfg.server.clone());
+
+    for m in methods() {
+        for i in 0..3 {
+            let x = input(i);
+            let wire = client.classify(&m, &x).expect("wire classify");
+            let r = handle
+                .classify(x, to_inference(&m))
+                .expect("in-process classify")
+                .wait()
+                .expect("in-process response");
+            assert_bit_identical(&wire, &r, &format!("cluster {m:?} #{i}"));
+        }
+    }
+    handle.shutdown();
+    server.shutdown();
+}
+
+// ------------------------------------------------- operational contract
+
+#[test]
+fn wire_errors_carry_typed_codes() {
+    let cfg = parity_config(1);
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+
+    // wrong input dimension → DimMismatch, connection stays usable
+    let err = client.classify(&Method::Standard { t: 4 }, &[0.5; 3]).unwrap_err();
+    assert!(matches!(err, ServeError::DimMismatch(_)), "{err:?}");
+    // zero-voter method → BadRequest
+    let err = client.classify(&Method::Standard { t: 0 }, &input(0)).unwrap_err();
+    assert!(matches!(err, ServeError::BadRequest(_)), "{err:?}");
+    // the same connection still answers a valid request afterwards
+    let ok = client.classify(&Method::Standard { t: 4 }, &input(0));
+    assert!(ok.is_ok(), "{ok:?}");
+    client.ping().expect("pong after errors");
+    server.shutdown();
+}
+
+#[test]
+fn framing_garbage_gets_an_error_frame_then_close() {
+    let cfg = parity_config(1);
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+
+    // starts with the magic byte, so the sniffer routes it to the binary
+    // path; the header's version byte is garbage
+    let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+    s.write_all(b"BDM1 this is not a valid frame header").expect("write");
+    s.flush().expect("flush");
+    let mut reader = BufReader::new(s);
+    let out = proto::read_frame(&mut reader, MAX_FRAME_PAYLOAD, Duration::from_secs(10))
+        .expect("server reply");
+    match out {
+        ReadOutcome::Frame(Frame::Error { id, err }) => {
+            assert_eq!(id, 0, "framing failure is not attributable to a request");
+            assert!(matches!(err, ServeError::BadRequest(_)), "{err:?}");
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_every_admitted_request() {
+    let cfg = parity_config(1);
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+
+    let m = Method::Standard { t: 6 };
+    let n = 16u64;
+    for i in 0..n as usize {
+        client.send_classify(&m, &input(i)).expect("pipelined send");
+    }
+    // wait until the server has admitted all of them, then pull the rug
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while server.metrics_summary().requests < n {
+        assert!(Instant::now() < deadline, "server never admitted all requests");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let summary = server.shutdown();
+    assert_eq!(summary.requests, n);
+    assert_eq!(summary.errors, 0);
+
+    // every admitted request was answered, in request order, before the
+    // connection closed — the drain guarantee
+    let mut got = 0u64;
+    loop {
+        match client.recv() {
+            Ok(Frame::Response { id, .. }) => {
+                got += 1;
+                assert_eq!(id, got, "responses arrive in request order");
+            }
+            Ok(other) => panic!("unexpected frame {other:?}"),
+            Err(_) => break, // server closed after draining
+        }
+    }
+    assert_eq!(got, n, "an admitted request was dropped by shutdown");
+}
+
+#[test]
+fn binary_metrics_reflect_served_counts() {
+    let cfg = parity_config(1);
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+
+    client.ping().expect("pong");
+    let before = Json::parse(&client.metrics_text().expect("metrics")).expect("json");
+    assert_eq!(before.get("requests").and_then(Json::as_usize), Some(0));
+    client.classify(&Method::Standard { t: 4 }, &input(0)).expect("classify");
+    client.classify(&Method::Hybrid { t: 4 }, &input(1)).expect("classify");
+    let after = Json::parse(&client.metrics_text().expect("metrics")).expect("json");
+    assert_eq!(after.get("requests").and_then(Json::as_usize), Some(2));
+    assert_eq!(after.get("errors").and_then(Json::as_usize), Some(0));
+    server.shutdown();
+}
+
+// ------------------------------------------------------------ HTTP shim
+
+fn http_roundtrip(addr: SocketAddr, request: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(request.as_bytes()).expect("write");
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read");
+    out
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    http_roundtrip(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+fn body_of(response: &str) -> &str {
+    response.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+#[test]
+fn http_endpoints_answer_and_classify_is_bit_exact() {
+    let cfg = parity_config(1);
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    let addr = server.local_addr();
+
+    let health = http_get(addr, "/healthz");
+    assert!(health.starts_with("HTTP/1.1 200 OK"), "{health}");
+    assert_eq!(body_of(&health), "ok\n");
+
+    let missing = http_get(addr, "/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+    // HTTP classify matches the in-process answer bit-for-bit: the JSON
+    // body serializes f32 through f64, which is exact
+    let x = input(2);
+    let m = Method::Standard { t: 6 };
+    let body = format!(
+        "{{\"method\":\"standard\",\"t\":6,\"input\":[{}]}}",
+        x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+    );
+    let resp = http_roundtrip(
+        addr,
+        &format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+    let v = Json::parse(body_of(&resp).trim()).expect("classify json");
+
+    let reference = Arc::new(Deployment::new(model(), &cfg));
+    let handle = serve_deployment(&reference, cfg.server.clone());
+    let r = handle
+        .classify(x, to_inference(&m))
+        .expect("in-process classify")
+        .wait()
+        .expect("in-process response");
+    handle.shutdown();
+
+    assert_eq!(v.get("class").and_then(Json::as_usize), Some(r.class));
+    assert_eq!(v.get("voters").and_then(Json::as_usize), Some(r.voters));
+    let conf = v.get("confidence").and_then(Json::as_f64).expect("confidence") as f32;
+    assert_eq!(conf.to_bits(), r.confidence.to_bits(), "confidence bits over HTTP");
+    let ent = v.get("entropy").and_then(Json::as_f64).expect("entropy") as f32;
+    assert_eq!(ent.to_bits(), r.entropy.to_bits(), "entropy bits over HTTP");
+
+    // /metrics counts the served request and parses as JSON
+    let metrics = http_get(addr, "/metrics");
+    assert!(metrics.starts_with("HTTP/1.1 200 OK"), "{metrics}");
+    let mv = Json::parse(body_of(&metrics).trim()).expect("metrics json");
+    assert_eq!(mv.get("requests").and_then(Json::as_usize), Some(1));
+
+    // malformed classify body → structured 400 with the stable wire code
+    let bad = "garbage";
+    let resp = http_roundtrip(
+        addr,
+        &format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{bad}",
+            bad.len()
+        ),
+    );
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    let ev = Json::parse(body_of(&resp).trim()).expect("error json");
+    assert_eq!(ev.get("error").and_then(Json::as_str), Some("bad_request"));
+    assert_eq!(ev.get("code").and_then(Json::as_usize), Some(1));
+
+    server.shutdown();
+}
+
+#[test]
+fn admin_drain_reaches_the_host_loop() {
+    let cfg = parity_config(1);
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    assert!(!server.drain_requested());
+
+    let resp = http_get(server.local_addr(), "/admin/drain");
+    assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+    assert_eq!(body_of(&resp), "draining\n");
+    assert!(server.drain_requested(), "drain flag visible to the host loop");
+    let summary = server.shutdown();
+    assert_eq!(summary.errors, 0);
+}
+
+#[test]
+fn http_keep_alive_serves_sequential_requests_on_one_connection() {
+    let cfg = parity_config(1);
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+
+    let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+    for _ in 0..3 {
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").expect("write");
+        // each keep-alive response is 'ok\n' with Content-Length: 3
+        let mut buf = [0u8; 512];
+        let mut got = String::new();
+        while !got.ends_with("ok\n") {
+            let n = s.read(&mut buf).expect("read");
+            assert!(n > 0, "server closed a keep-alive connection early");
+            got.push_str(std::str::from_utf8(&buf[..n]).expect("utf8"));
+        }
+        assert!(got.starts_with("HTTP/1.1 200 OK"), "{got}");
+    }
+    server.shutdown();
+}
