@@ -1,0 +1,174 @@
+//! Bench: tail latency under synthetic load — deadline-aware batching
+//! and admission control on the serving router.
+//!
+//! Two scenarios over the bursty, Zipf-skewed traffic generator
+//! (`util::traffic`), both on the self-contained synthetic model:
+//!
+//! * `loaded` — paced arrivals (bursts included) against a deadline-on
+//!   server with headroom: reports the served p50/p99/p999 split, and
+//!   requires that nothing was shed or expired (the deadline machinery
+//!   must be invisible when capacity suffices);
+//! * `overload` — an unpaced burst into a tiny admission queue behind a
+//!   single slow dispatch lane: requires explicit `Overloaded` sheds
+//!   (no blocking, no silent drops) while the p99 of requests that WERE
+//!   admitted and served stays bounded — queue wait is capped by the
+//!   deadline, so tail latency cannot grow with offered load.
+//!
+//! Emits `BENCH_latency.json` at the repo root (shared `common` emitter).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bayesdm::coordinator::engine::default_workers;
+use bayesdm::coordinator::plan::InferenceMethod;
+use bayesdm::coordinator::{serve_engine, Engine, EngineConfig, ServerConfig, ServerHandle};
+use bayesdm::dataset::{SynthSpec, Synthesizer};
+use bayesdm::nn::bnn::BnnModel;
+use bayesdm::serve::ServeError;
+use bayesdm::util::bench::header;
+use bayesdm::util::traffic::{TrafficGen, TrafficSpec};
+use bayesdm::MNIST_ARCH;
+
+const CATALOG: usize = 32;
+
+fn engine() -> Arc<Engine> {
+    let model = BnnModel::synthetic(&MNIST_ARCH, 0x1A7E);
+    Arc::new(Engine::new(
+        model,
+        EngineConfig { workers: default_workers(), seed: 0x1A7E, ..EngineConfig::default() },
+    ))
+}
+
+fn catalog_images() -> Vec<Vec<f32>> {
+    let data = Synthesizer::new(SynthSpec::mnist()).dataset(CATALOG);
+    (0..data.len()).map(|i| data.image(i).to_vec()).collect()
+}
+
+struct Outcome {
+    served: usize,
+    shed: u64,
+    expired: u64,
+    errors: u64,
+    p50_us: u64,
+    p99_us: u64,
+    p999_us: u64,
+}
+
+/// Drive `n` arrivals through `handle`; `paced` sleeps each generator
+/// gap, unpaced submits the whole stream as one burst.
+fn drive(handle: &ServerHandle, images: &[Vec<f32>], n: usize, paced: bool) -> Outcome {
+    let method = InferenceMethod::DmBnn { schedule: vec![2, 2, 2], alpha: 1.0 };
+    let spec = TrafficSpec {
+        base_rate_hz: 200.0,
+        burst_factor: 8.0,
+        catalog: CATALOG,
+        ..TrafficSpec::default()
+    };
+    let mut gen = TrafficGen::new(spec, 0xBEA7);
+    let mut pending = Vec::with_capacity(n);
+    let mut served = 0usize;
+    for _ in 0..n {
+        let a = gen.next_arrival();
+        if paced {
+            std::thread::sleep(a.gap.min(Duration::from_millis(20)));
+        }
+        match handle.classify(images[a.item % images.len()].clone(), method.clone()) {
+            Ok(p) => pending.push(p),
+            Err(ServeError::Overloaded) => {} // counted by the server as shed
+            Err(e) => panic!("submit: {e}"),
+        }
+    }
+    for p in pending {
+        if p.wait().is_ok() {
+            served += 1;
+        }
+    }
+    let s = handle.metrics.summary();
+    Outcome {
+        served,
+        shed: s.shed,
+        expired: s.expired,
+        errors: s.errors,
+        p50_us: s.p50_us.unwrap_or(0),
+        p99_us: s.p99_us.unwrap_or(0),
+        p999_us: s.p999_us.unwrap_or(0),
+    }
+}
+
+fn row(scenario: &str, n: usize, deadline_ms: u64, o: &Outcome) -> String {
+    format!(
+        "{{\"scenario\": \"{scenario}\", \"requests\": {n}, \"deadline_ms\": {deadline_ms}, \
+         \"served\": {}, \"shed\": {}, \"expired\": {}, \"p50_us\": {}, \"p99_us\": {}, \
+         \"p999_us\": {}}}",
+        o.served, o.shed, o.expired, o.p50_us, o.p99_us, o.p999_us
+    )
+}
+
+fn main() {
+    header("Latency — deadline-aware batching & admission control under load");
+    println!("engine pool: {} threads, catalog {CATALOG} (Zipf), dm 2x2x2\n", default_workers());
+    let images = catalog_images();
+    let mut rows = Vec::new();
+
+    // --- loaded: paced bursty stream, ample queue, deadline as headroom.
+    let n = 400;
+    let deadline = Duration::from_millis(500);
+    let handle = serve_engine(
+        engine(),
+        ServerConfig {
+            max_batch: 8,
+            workers: 1,
+            deadline: Some(deadline),
+            ..ServerConfig::default()
+        },
+    );
+    let o = drive(&handle, &images, n, true);
+    handle.shutdown();
+    assert_eq!(o.served, n, "loaded: every paced request must be served");
+    assert_eq!((o.shed, o.expired, o.errors), (0, 0, 0), "loaded: no shedding with headroom");
+    println!(
+        "loaded    {n} reqs  p50 {}µs  p99 {}µs  p999 {}µs  (shed 0, expired 0)",
+        o.p50_us, o.p99_us, o.p999_us
+    );
+    rows.push(row("loaded", n, deadline.as_millis() as u64, &o));
+
+    // --- overload: unpaced burst into a tiny queue, one slow lane.
+    let n = 256;
+    let deadline = Duration::from_millis(250);
+    let handle = serve_engine(
+        engine(),
+        ServerConfig {
+            max_batch: 4,
+            workers: 1,
+            queue_depth: 4,
+            deadline: Some(deadline),
+            ..ServerConfig::default()
+        },
+    );
+    let o = drive(&handle, &images, n, false);
+    handle.shutdown();
+    assert!(o.shed > 0, "overload: a full queue must shed explicitly");
+    assert_eq!(o.shed as usize + o.served + o.expired as usize, n, "every request accounted");
+    let bound_us = 2 * deadline.as_micros() as u64;
+    assert!(
+        o.p99_us <= bound_us,
+        "overload: admitted p99 {}µs must stay within 2x the {}ms deadline",
+        o.p99_us,
+        deadline.as_millis()
+    );
+    println!(
+        "overload  {n} reqs  served {}  shed {}  expired {}  p99 {}µs (bound {bound_us}µs)",
+        o.served, o.shed, o.expired, o.p99_us
+    );
+    rows.push(row("overload", n, deadline.as_millis() as u64, &o));
+
+    let json = common::json_doc(
+        "latency",
+        &[("catalog", CATALOG.to_string()), ("method", "\"dm_2x2x2\"".to_string())],
+        &rows,
+    );
+    common::emit_bench_json("latency", &json);
+    println!("\nacceptance: overload sheds explicitly; admitted p99 bounded by the deadline");
+}

@@ -293,16 +293,17 @@ impl ClusterRouter {
             let shard = (key % self.txs.len() as u64) as usize;
             let job =
                 ShardJob { slot, input: x.clone(), method: method.clone(), respond: rtx.clone() };
-            // bounded queue: a full shard blocks the caller — backpressure
-            self.txs[shard]
-                .send(job)
-                .map_err(|_| ServeError::internal("shard worker shut down"))?;
+            // bounded queue: a full shard blocks the caller — backpressure.
+            // A disconnected shard is a capacity/lifecycle condition, not an
+            // input error: report `ShuttingDown` so the batcher fails the
+            // whole batch instead of retrying each member solo.
+            self.txs[shard].send(job).map_err(|_| ServeError::ShuttingDown)?;
             self.dispatched[shard].fetch_add(1, Ordering::Relaxed);
         }
         drop(rtx);
 
         for _ in 0..dup_slots.len() {
-            let reply = rrx.recv().map_err(|_| ServeError::internal("shard worker died"))?;
+            let reply = rrx.recv().map_err(|_| ServeError::ShuttingDown)?;
             logits.data_mut()[reply.slot * stride..(reply.slot + 1) * stride]
                 .copy_from_slice(&reply.flat);
             ops += reply.ops;

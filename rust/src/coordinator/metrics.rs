@@ -21,8 +21,19 @@ const RESERVOIR: usize = 4096;
 pub struct Metrics {
     pub requests: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests rejected at admission (`Overloaded`): never queued, never
+    /// dispatched, not counted in `requests` or `errors`.
+    pub shed: AtomicU64,
+    /// Requests whose deadline passed while queued: answered `Timeout`
+    /// without a backend dispatch, not counted in `requests` or `errors`.
+    pub expired: AtomicU64,
     pub voters_evaluated: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
+    /// Ring-overwrite cursor for the latency reservoir.  A dedicated
+    /// counter (not a re-load of `requests`) so concurrent recorders each
+    /// claim a distinct slot and the ring advances exactly once per
+    /// record.
+    cursor: AtomicU64,
 }
 
 impl Metrics {
@@ -34,10 +45,10 @@ impl Metrics {
     pub fn record(&self, latency: Duration, voters: usize) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.voters_evaluated.fetch_add(voters as u64, Ordering::Relaxed);
+        let idx = (self.cursor.fetch_add(1, Ordering::Relaxed) as usize) % RESERVOIR;
         let mut l = self.latencies_us.lock().unwrap();
         if l.len() >= RESERVOIR {
             // ring overwrite keeps the reservoir recent
-            let idx = (self.requests.load(Ordering::Relaxed) as usize) % RESERVOIR;
             l[idx] = latency.as_micros() as u64;
         } else {
             l.push(latency.as_micros() as u64);
@@ -46,6 +57,16 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request rejected at admission (queue full).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request that expired in the queue before dispatch.
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Latency percentile in µs (0.0..=1.0); None before any request.
@@ -70,9 +91,12 @@ impl Metrics {
         MetricsSummary {
             requests: self.requests.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
             voters: self.voters_evaluated.load(Ordering::Relaxed),
             p50_us: self.latency_percentile_us(0.50),
             p99_us: self.latency_percentile_us(0.99),
+            p999_us: self.latency_percentile_us(0.999),
             isa: crate::nn::simd::isa_label(),
             cache: None,
             memo: None,
@@ -86,9 +110,14 @@ impl Metrics {
 pub struct MetricsSummary {
     pub requests: u64,
     pub errors: u64,
+    /// Admission rejections (queue full → `Overloaded`).
+    pub shed: u64,
+    /// Deadline expiries in the queue (→ `Timeout`, no dispatch).
+    pub expired: u64,
     pub voters: u64,
     pub p50_us: Option<u64>,
     pub p99_us: Option<u64>,
+    pub p999_us: Option<u64>,
     /// The SIMD kernel path requests were served with (`nn::simd`
     /// dispatch): `"avx2"`, `"neon"`, `"scalar"` or `"scalar(forced)"`.
     pub isa: &'static str,
@@ -119,9 +148,12 @@ impl MetricsSummary {
         let mut o = BTreeMap::new();
         o.insert("requests".to_string(), num(self.requests));
         o.insert("errors".to_string(), num(self.errors));
+        o.insert("shed".to_string(), num(self.shed));
+        o.insert("expired".to_string(), num(self.expired));
         o.insert("voters".to_string(), num(self.voters));
         o.insert("p50_us".to_string(), self.p50_us.map(num).unwrap_or(Json::Null));
         o.insert("p99_us".to_string(), self.p99_us.map(num).unwrap_or(Json::Null));
+        o.insert("p999_us".to_string(), self.p999_us.map(num).unwrap_or(Json::Null));
         o.insert("kernel".to_string(), Json::Str(self.isa.to_string()));
         if let Some(c) = &self.cache {
             let mut co = BTreeMap::new();
@@ -172,12 +204,16 @@ impl std::fmt::Display for MetricsSummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "requests={} errors={} voters={} p50={}µs p99={}µs kernel={}",
+            "requests={} errors={} shed={} expired={} voters={} \
+             p50={}µs p99={}µs p999={}µs kernel={}",
             self.requests,
             self.errors,
+            self.shed,
+            self.expired,
             self.voters,
             self.p50_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
             self.p99_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            self.p999_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
             self.isa,
         )?;
         if let Some(c) = &self.cache {
@@ -227,6 +263,73 @@ mod tests {
         }
         assert!(m.latencies_us.lock().unwrap().len() <= RESERVOIR);
         assert_eq!(m.summary().requests, (RESERVOIR + 100) as u64);
+    }
+
+    /// Regression: the ring-overwrite index must come from a dedicated
+    /// cursor, not a racy re-load of the `requests` counter.  Saturate
+    /// the reservoir, then overwrite it exactly once from concurrent
+    /// recorders with distinct values — every record must land in its
+    /// own slot, so the final reservoir is exactly the overwrite set.
+    /// The old code let concurrent recorders observe the same `requests`
+    /// value and clobber one slot while another kept a stale entry.
+    #[test]
+    fn ring_cursor_gives_every_concurrent_record_its_own_slot() {
+        use std::sync::Arc;
+        const THREADS: usize = 4;
+        let m = Arc::new(Metrics::new());
+        for _ in 0..RESERVOIR {
+            m.record(Duration::from_micros(1), 0); // saturate: all 1s
+        }
+        let per = RESERVOIR / THREADS;
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    for i in 0..per {
+                        let v = 1_000_000 + (t * per + i) as u64;
+                        m.record(Duration::from_micros(v), 0);
+                    }
+                });
+            }
+        });
+        let mut l = m.latencies_us.lock().unwrap().clone();
+        l.sort_unstable();
+        let want: Vec<u64> = (0..RESERVOIR as u64).map(|i| 1_000_000 + i).collect();
+        assert_eq!(l, want, "an overwrite clobbered a sibling's slot");
+    }
+
+    #[test]
+    fn shed_and_expired_counters_are_separate_from_requests() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(5), 1);
+        m.record_shed();
+        m.record_shed();
+        m.record_expired();
+        let s = m.summary();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.errors, 0);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.expired, 1);
+        let text = s.to_string();
+        assert!(text.contains("shed=2"), "{text}");
+        assert!(text.contains("expired=1"), "{text}");
+        let j = s.to_json();
+        assert_eq!(j.get("shed").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("expired").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn p999_tracks_the_extreme_tail() {
+        let m = Metrics::new();
+        for i in 1..=1000u64 {
+            m.record(Duration::from_micros(i), 1);
+        }
+        let s = m.summary();
+        // sorted reservoir is 1..=1000 µs: p999 index = round(999·0.999) = 998
+        assert_eq!(s.p999_us, Some(999));
+        let (p99, p999) = (s.p99_us.unwrap(), s.p999_us.unwrap());
+        assert!(p999 > p99, "p999 {p999} must sit above p99 {p99}");
+        assert_eq!(s.to_json().get("p999_us").and_then(Json::as_usize), Some(999));
     }
 
     #[test]

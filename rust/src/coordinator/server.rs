@@ -1,13 +1,29 @@
 //! Request router + micro-batcher (std threads — tokio is not vendored
 //! in the offline build, see Cargo.toml).
 //!
-//! Requests enter through an mpsc channel; the router thread groups
-//! consecutive requests that share an inference method into micro-batches
-//! (up to `max_batch` or `max_wait`), dispatches each batch to a worker,
-//! and resolves each request's response channel with prediction,
-//! uncertainty and latency.  This is the vLLM-router shape scaled to the
-//! paper's workload: admission → batching → engine dispatch → per-request
-//! completion, metrics on the side.
+//! Requests enter through a bounded mpsc channel; the router thread
+//! groups consecutive requests that share an inference method into
+//! micro-batches (up to `max_batch` or the fill window), dispatches each
+//! batch to a worker, and resolves each request's response channel with
+//! prediction, uncertainty and latency.  This is the vLLM-router shape
+//! scaled to the paper's workload: admission → batching → engine
+//! dispatch → per-request completion, metrics on the side.
+//!
+//! Latency is a first-class input to that loop:
+//!
+//! * **Admission never blocks.**  [`ServerHandle::classify`] uses
+//!   `try_send`; a saturated queue sheds the request with the wire-stable
+//!   [`ServeError::Overloaded`] instead of propagating unbounded
+//!   queue-wait into tail latency (`Metrics::shed` counts these).
+//! * **Deadlines steer batching.**  Each request may carry a completion
+//!   budget ([`ServerHandle::classify_with_deadline`], defaulted from
+//!   [`ServerConfig::deadline`]).  The batcher's fill window rolls
+//!   forward while traffic is hot but closes early when the oldest
+//!   member's deadline approaches ([`fill_close`]), and a request whose
+//!   deadline passed while queued is answered [`ServeError::Timeout`]
+//!   without a backend dispatch (`Metrics::expired`).  With no deadline
+//!   configured the scheduler is byte-identical to the plain size/flush
+//!   batcher.
 //!
 //! Workers run an [`InferenceBackend`], which evaluates a whole
 //! micro-batch at once.  Two deployment shapes:
@@ -22,7 +38,7 @@
 //!   topology a multi-device deployment would use.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -63,6 +79,11 @@ struct Request {
     method: InferenceMethod,
     respond: Sender<Result<Response, ServeError>>,
     enqueued: Instant,
+    /// Absolute completion deadline.  Admission rejects nothing on its
+    /// account (that is the queue's job), but the batcher closes a
+    /// filling batch early as it approaches and answers `Timeout`
+    /// without dispatching once it has passed.
+    deadline: Option<Instant>,
 }
 
 /// The served answer.
@@ -87,6 +108,11 @@ pub struct ServerConfig {
     /// Worker threads (batches in flight at once).
     pub workers: usize,
     pub queue_depth: usize,
+    /// Default per-request completion deadline, applied to requests that
+    /// do not carry their own.  `None` (the default) disables deadline
+    /// handling entirely: no early batch close, no expiry — byte-identical
+    /// behavior to the pre-deadline server.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -96,6 +122,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             workers: 2,
             queue_depth: 1024,
+            deadline: None,
         }
     }
 }
@@ -106,6 +133,8 @@ pub struct ServerHandle {
     pub metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     router: Option<JoinHandle<()>>,
+    /// `ServerConfig::deadline`: applied to requests without their own.
+    default_deadline: Option<Duration>,
 }
 
 /// A pending response.
@@ -121,29 +150,71 @@ impl Pending {
             .map_err(|_| ServeError::internal("request dropped"))?
     }
 
+    /// Block until the response arrives or `timeout` elapses.  `None`
+    /// means the *local* timer fired first: the request is abandoned (the
+    /// batcher's eventual answer is discarded unrecorded) and the caller
+    /// owns reporting the timeout.  `Some` is the served outcome — already
+    /// accounted in [`Metrics`] by the batcher, whether success or error.
+    pub fn try_wait(self, timeout: Duration) -> Option<Result<Response, ServeError>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                Some(Err(ServeError::internal("request dropped")))
+            }
+        }
+    }
+
     /// Block until the response arrives or `timeout` elapses.  A timeout
     /// abandons the request (the batcher's answer is discarded) and maps
     /// to the wire-stable [`ServeError::Timeout`].
     pub fn wait_timeout(self, timeout: Duration) -> Result<Response, ServeError> {
-        match self.rx.recv_timeout(timeout) {
-            Ok(r) => r,
-            Err(RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
-            Err(RecvTimeoutError::Disconnected) => Err(ServeError::internal("request dropped")),
-        }
+        self.try_wait(timeout).unwrap_or(Err(ServeError::Timeout))
     }
 }
 
 impl ServerHandle {
-    /// Submit one image; returns a blocking pending handle.
+    /// Submit one image; returns a blocking pending handle.  The request
+    /// inherits the server's default deadline (if one is configured).
     pub fn classify(
         &self,
         image: Vec<f32>,
         method: InferenceMethod,
     ) -> Result<Pending, ServeError> {
+        self.classify_with_deadline(image, method, None)
+    }
+
+    /// Submit one image with an explicit completion budget (`None` falls
+    /// back to the server default).  Admission never blocks: a saturated
+    /// queue sheds the request with [`ServeError::Overloaded`] (wire code
+    /// 3 / HTTP 503) instead of propagating queue-wait into latency.
+    pub fn classify_with_deadline(
+        &self,
+        image: Vec<f32>,
+        method: InferenceMethod,
+        deadline: Option<Duration>,
+    ) -> Result<Pending, ServeError> {
         let (tx, rx) = mpsc::channel();
-        let req = Request { image, method, respond: tx, enqueued: Instant::now() };
-        self.tx.send(req).map_err(|_| ServeError::ShuttingDown)?;
-        Ok(Pending { rx })
+        let enqueued = Instant::now();
+        let budget = deadline.or(self.default_deadline);
+        let req = Request {
+            image,
+            method,
+            respond: tx,
+            enqueued,
+            deadline: budget.map(|d| enqueued + d),
+        };
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(Pending { rx }),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_shed();
+                Err(ServeError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.metrics.record_error();
+                Err(ServeError::ShuttingDown)
+            }
+        }
     }
 
     /// Stop the router and wait for it to drain.
@@ -174,6 +245,7 @@ where
     let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
     let metrics = Arc::new(Metrics::new());
     let shutdown = Arc::new(AtomicBool::new(false));
+    let default_deadline = cfg.deadline;
     let m = metrics.clone();
     let sd = shutdown.clone();
     let factory = Arc::new(factory);
@@ -181,7 +253,7 @@ where
         .name("bayesdm-router".into())
         .spawn(move || router_loop(factory, rx, cfg, m, sd))
         .expect("spawn router");
-    ServerHandle { tx, metrics, shutdown, router: Some(router) }
+    ServerHandle { tx, metrics, shutdown, router: Some(router), default_deadline }
 }
 
 /// Serve the shared batched reference engine: every worker dispatches
@@ -206,7 +278,13 @@ fn router_loop<B, F>(
     B: InferenceBackend + 'static,
     F: Fn() -> Result<B, ServeError> + Send + Sync + 'static,
 {
-    let (btx, brx) = mpsc::channel::<Vec<Request>>();
+    // Bounded: at most `workers` closed batches queue past the ones the
+    // workers are running.  An unbounded buffer here would let the router
+    // drain the admission channel freely — backlog would hide where
+    // `try_send` cannot see it and shedding could never fire.  With this
+    // bound, worker saturation backs the router up, the ingress channel
+    // fills, and admission starts answering `Overloaded`.
+    let (btx, brx) = mpsc::sync_channel::<Vec<Request>>(cfg.workers.max(1));
     let brx = Arc::new(std::sync::Mutex::new(brx));
     let mut workers = Vec::new();
     for wi in 0..cfg.workers.max(1) {
@@ -224,10 +302,12 @@ fn router_loop<B, F>(
                             // Drain and fail requests routed to this worker.
                             while let Ok(batch) = { brx.lock().unwrap().recv() } {
                                 for req in batch {
-                                    metrics.record_error();
-                                    let _ = req.respond.send(Err(ServeError::internal(
-                                        format!("backend unavailable: {e}"),
-                                    )));
+                                    let err = ServeError::internal(format!(
+                                        "backend unavailable: {e}"
+                                    ));
+                                    if req.respond.send(Err(err)).is_ok() {
+                                        metrics.record_error();
+                                    }
                                 }
                             }
                             return;
@@ -257,19 +337,27 @@ fn router_loop<B, F>(
             Err(RecvTimeoutError::Disconnected) => break 'outer,
         };
         let mut batch = vec![first];
-        let mut deadline = Instant::now() + cfg.max_wait;
+        let mut earliest = batch[0].deadline;
+        let mut close = fill_close(Instant::now(), earliest, cfg.max_wait);
         while batch.len() < cfg.max_batch {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= close {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(req) if req.method == batch[0].method => batch.push(req),
+            match rx.recv_timeout(close - now) {
+                Ok(req) if req.method == batch[0].method => {
+                    // Traffic is hot: refresh the fill window, still
+                    // capped by the oldest member's deadline.
+                    earliest = min_deadline(earliest, req.deadline);
+                    batch.push(req);
+                    close = fill_close(Instant::now(), earliest, cfg.max_wait);
+                }
                 Ok(req) => {
                     // Method boundary: flush the current batch and give the
                     // replacement batch a fresh fill window of its own.
                     let _ = btx.send(std::mem::replace(&mut batch, vec![req]));
-                    deadline = Instant::now() + cfg.max_wait;
+                    earliest = batch[0].deadline;
+                    close = fill_close(Instant::now(), earliest, cfg.max_wait);
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
@@ -286,7 +374,54 @@ fn router_loop<B, F>(
     }
 }
 
-fn run_batch<B: InferenceBackend>(backend: &B, mut batch: Vec<Request>, metrics: &Metrics) {
+/// When the currently-filling batch must close: a rolling fill window
+/// (`max_wait` past the latest arrival, so the batch stays open while
+/// traffic is hot), pulled earlier as the oldest member's deadline
+/// approaches — the batch dispatches with ~`max_wait` of headroom left
+/// instead of expiring in the queue.
+fn fill_close(now: Instant, earliest_deadline: Option<Instant>, max_wait: Duration) -> Instant {
+    let window = now + max_wait;
+    match earliest_deadline {
+        Some(d) => window.min(d.checked_sub(max_wait).unwrap_or(now)),
+        None => window,
+    }
+}
+
+fn min_deadline(a: Option<Instant>, b: Option<Instant>) -> Option<Instant> {
+    match (a, b) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
+    }
+}
+
+/// Whether a batch failure can be pinned on an individual input (and is
+/// therefore worth isolating with solo retries).  Capacity and lifecycle
+/// errors are a property of the system, not of any batch member —
+/// re-running each request alone on `Overloaded` would amplify load N×
+/// exactly when the system is saturated.
+fn input_attributable(e: &ServeError) -> bool {
+    !matches!(
+        e,
+        ServeError::Overloaded | ServeError::Timeout | ServeError::ShuttingDown
+    )
+}
+
+fn run_batch<B: InferenceBackend>(backend: &B, batch: Vec<Request>, metrics: &Metrics) {
+    // Expired-on-dequeue: answer `Timeout` without spending a backend
+    // dispatch on work nobody can use anymore.  Counted as `expired`,
+    // not `errors` — the distinction separates "we were too slow" from
+    // "something broke".  Delivery-gated like every outcome below: if
+    // the waiter already abandoned the request, the frontend owns the
+    // timeout accounting.
+    let now = Instant::now();
+    let (expired, mut batch): (Vec<_>, Vec<_>) = batch
+        .into_iter()
+        .partition(|r| r.deadline.is_some_and(|d| d <= now));
+    for req in expired {
+        if req.respond.send(Err(ServeError::Timeout)).is_ok() {
+            metrics.record_expired();
+        }
+    }
     if batch.is_empty() {
         return;
     }
@@ -299,22 +434,30 @@ fn run_batch<B: InferenceBackend>(backend: &B, mut batch: Vec<Request>, metrics:
             for (req, logits) in batch.into_iter().zip(all.iter()) {
                 let latency = req.enqueued.elapsed();
                 if logits.voters() == 0 {
-                    metrics.record_error();
-                    let _ = req
+                    if req
                         .respond
-                        .send(Err(ServeError::internal("backend returned no voters")));
+                        .send(Err(ServeError::internal("backend returned no voters")))
+                        .is_ok()
+                    {
+                        metrics.record_error();
+                    }
                     continue;
                 }
                 let probs = vote::softmax_mean_flat(logits.flat(), logits.classes());
                 let class = vote::argmax(&probs);
-                metrics.record(latency, logits.voters());
-                let _ = req.respond.send(Ok(Response {
+                let voters = logits.voters();
+                let delivered = req.respond.send(Ok(Response {
                     class,
                     confidence: probs[class],
                     entropy: vote::predictive_entropy_flat(logits.flat(), logits.classes()),
-                    voters: logits.voters(),
+                    voters,
                     latency,
                 }));
+                // An abandoned request (waiter timed out and hung up) is
+                // not a served success — the frontend records it.
+                if delivered.is_ok() {
+                    metrics.record(latency, voters);
+                }
             }
         }
         Ok(all) => {
@@ -324,11 +467,12 @@ fn run_batch<B: InferenceBackend>(backend: &B, mut batch: Vec<Request>, metrics:
                 batch.len()
             ));
             for req in batch {
-                metrics.record_error();
-                let _ = req.respond.send(Err(err.clone()));
+                if req.respond.send(Err(err.clone())).is_ok() {
+                    metrics.record_error();
+                }
             }
         }
-        Err(_) if batch.len() > 1 => {
+        Err(ref e) if batch.len() > 1 && input_attributable(e) => {
             // Isolate the failure: re-run each request alone so one
             // malformed input cannot fail its co-batched neighbors.
             for (req, image) in batch.into_iter().zip(inputs) {
@@ -338,8 +482,9 @@ fn run_batch<B: InferenceBackend>(backend: &B, mut batch: Vec<Request>, metrics:
         }
         Err(e) => {
             for req in batch {
-                metrics.record_error();
-                let _ = req.respond.send(Err(e.clone()));
+                if req.respond.send(Err(e.clone())).is_ok() {
+                    metrics.record_error();
+                }
             }
         }
     }
@@ -442,6 +587,191 @@ mod tests {
         assert_eq!(e.code(), ServeError::internal("").code());
         assert!(e.to_string().contains("backend unavailable"), "{e}");
         handle.shutdown();
+    }
+
+    use std::sync::atomic::AtomicUsize;
+
+    /// Wraps the engine, counting backend dispatches and optionally
+    /// holding each one for `delay` (to keep a worker busy) or failing
+    /// with a fixed error (to exercise the retry policy).
+    struct Instrumented {
+        engine: Arc<Engine>,
+        dispatches: AtomicUsize,
+        delay: Duration,
+        fail_with: Option<ServeError>,
+    }
+
+    impl Instrumented {
+        fn new(delay: Duration, fail_with: Option<ServeError>) -> Self {
+            Self {
+                engine: test_engine(),
+                dispatches: AtomicUsize::new(0),
+                delay,
+                fail_with,
+            }
+        }
+    }
+
+    impl InferenceBackend for Instrumented {
+        fn run_batch(
+            &self,
+            inputs: &[Vec<f32>],
+            method: &InferenceMethod,
+        ) -> Result<LogitBatch, ServeError> {
+            self.dispatches.fetch_add(1, Ordering::SeqCst);
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            if let Some(e) = &self.fail_with {
+                return Err(e.clone());
+            }
+            self.engine.run_batch(inputs, method)
+        }
+    }
+
+    #[test]
+    fn expired_requests_time_out_without_backend_dispatch() {
+        let backend = Arc::new(Instrumented::new(Duration::from_millis(300), None));
+        let b = backend.clone();
+        let handle = serve(
+            move || Ok(b.clone()),
+            ServerConfig { max_batch: 1, workers: 1, ..ServerConfig::default() },
+        );
+        let m = InferenceMethod::Standard { t: 2 };
+        // The blocker (no deadline) occupies the single worker…
+        let blocker = handle.classify(vec![0.5; 16], m.clone()).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        // …so these four expire in the queue long before dispatch.
+        let budget = Some(Duration::from_millis(100));
+        let doomed: Vec<Pending> = (0..4)
+            .map(|_| handle.classify_with_deadline(vec![0.5; 16], m.clone(), budget).unwrap())
+            .collect();
+        assert!(blocker.wait().is_ok());
+        for p in doomed {
+            assert_eq!(p.wait(), Err(ServeError::Timeout));
+        }
+        let s = handle.metrics.summary();
+        assert_eq!(s.expired, 4);
+        assert_eq!(s.requests, 1, "only the blocker was served");
+        assert_eq!(s.errors, 0, "expiry is not an error");
+        assert_eq!(
+            backend.dispatches.load(Ordering::SeqCst),
+            1,
+            "expired requests must not reach the backend"
+        );
+        handle.shutdown();
+    }
+
+    #[test]
+    fn full_queue_sheds_with_overloaded_instead_of_blocking() {
+        let backend = Arc::new(Instrumented::new(Duration::from_millis(100), None));
+        let b = backend.clone();
+        let handle = serve(
+            move || Ok(b.clone()),
+            ServerConfig { max_batch: 1, workers: 1, queue_depth: 1, ..ServerConfig::default() },
+        );
+        let m = InferenceMethod::Standard { t: 2 };
+        let mut admitted = Vec::new();
+        let mut shed = 0u64;
+        for _ in 0..10 {
+            match handle.classify_with_deadline(vec![0.5; 16], m.clone(), None) {
+                Ok(p) => admitted.push(p),
+                Err(e) => {
+                    assert_eq!(e, ServeError::Overloaded);
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed >= 1, "a depth-1 queue behind a 100ms backend must shed");
+        assert!(!admitted.is_empty(), "some requests must still be admitted");
+        // Every admitted request is still answered (no deadline set).
+        let n = admitted.len() as u64;
+        for p in admitted {
+            assert!(p.wait().is_ok());
+        }
+        let s = handle.metrics.summary();
+        assert_eq!(s.shed, shed);
+        assert_eq!(s.requests, n);
+        assert_eq!(s.errors, 0, "shedding is not an error outcome");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn default_deadline_comes_from_config() {
+        // A zero default deadline expires every request at dequeue — the
+        // deterministic extreme of `ServerConfig::deadline`.
+        let handle = serve_engine(
+            test_engine(),
+            ServerConfig { deadline: Some(Duration::ZERO), ..ServerConfig::default() },
+        );
+        let p = handle.classify(vec![0.5; 16], InferenceMethod::Standard { t: 2 }).unwrap();
+        assert_eq!(p.wait(), Err(ServeError::Timeout));
+        let s = handle.metrics.summary();
+        assert_eq!((s.expired, s.requests, s.errors), (1, 0, 0));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn per_request_deadline_overrides_the_default() {
+        let handle = serve_engine(test_engine(), ServerConfig::default());
+        let m = InferenceMethod::Standard { t: 2 };
+        // No server default; an explicit zero budget still expires…
+        let p = handle
+            .classify_with_deadline(vec![0.5; 16], m.clone(), Some(Duration::ZERO))
+            .unwrap();
+        assert_eq!(p.wait(), Err(ServeError::Timeout));
+        // …and a generous one serves normally.
+        let p = handle
+            .classify_with_deadline(vec![0.5; 16], m, Some(Duration::from_secs(30)))
+            .unwrap();
+        assert!(p.wait().is_ok());
+        assert_eq!(handle.metrics.summary().expired, 1);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn capacity_errors_fail_the_batch_without_solo_retry_amplification() {
+        let backend =
+            Arc::new(Instrumented::new(Duration::ZERO, Some(ServeError::Overloaded)));
+        let b = backend.clone();
+        let handle = serve(
+            move || Ok(b.clone()),
+            ServerConfig {
+                max_batch: 4,
+                // Wide fill window so the four requests fuse into one batch.
+                max_wait: Duration::from_secs(1),
+                workers: 1,
+                ..ServerConfig::default()
+            },
+        );
+        let m = InferenceMethod::Standard { t: 2 };
+        let pending: Vec<Pending> =
+            (0..4).map(|_| handle.classify(vec![0.5; 16], m.clone()).unwrap()).collect();
+        for p in pending {
+            assert_eq!(p.wait(), Err(ServeError::Overloaded));
+        }
+        assert_eq!(
+            backend.dispatches.load(Ordering::SeqCst),
+            1,
+            "a non-input-attributable failure must not re-run each request solo"
+        );
+        assert_eq!(handle.metrics.summary().errors, 4);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn fill_close_policy() {
+        let now = Instant::now();
+        let w = Duration::from_millis(2);
+        // No deadline: plain rolling window.
+        assert_eq!(fill_close(now, None, w), now + w);
+        // Distant deadline: the window wins.
+        assert_eq!(fill_close(now, Some(now + Duration::from_secs(1)), w), now + w);
+        // Approaching deadline: close early, keeping `max_wait` headroom.
+        let d = now + Duration::from_millis(3);
+        assert_eq!(fill_close(now, Some(d), w), d - w);
+        // Deadline already inside the headroom: close immediately.
+        assert!(fill_close(now, Some(now), w) <= now);
     }
 
     #[test]

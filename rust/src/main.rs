@@ -33,7 +33,9 @@ use bayesdm::hwsim::report::{fig7_rows, render_fig7, render_table5, table5_rows}
 use bayesdm::nn::bnn::{BnnModel, Method as NnMethod};
 use bayesdm::nn::fixed_infer::QBnnModel;
 use bayesdm::opcount::report::{render_table3, render_table4, table4_rows};
-use bayesdm::serve::{serve_deployment, Deployment, NetServer, ServeConfig, ServeConfigBuilder};
+use bayesdm::serve::{
+    serve_deployment, Deployment, NetServer, ServeConfig, ServeConfigBuilder, ServeError,
+};
 use bayesdm::util::cli::Args;
 use bayesdm::util::error::{Context, Error, Result};
 use bayesdm::util::Json;
@@ -48,6 +50,7 @@ SUBCOMMANDS:
   serve    --method M --requests N --max-batch B --workers W [--synthetic]
            [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
            [--memo-mb MB] [--cache-snapshot PATH]
+           [--queue-depth N] [--deadline-ms MS]
            [--listen ADDR] [--duration-s S]
   eval     --method M --limit N --batch B --workers W [--synthetic]
            [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
@@ -84,6 +87,15 @@ methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
 --cache-snapshot: persist the decomposition cache to PATH at shutdown
             and reload it at start (model-fingerprint-gated: stale
             snapshots degrade to a cold start, never wrong results).
+--queue-depth: admission-queue capacity (requests waiting to batch).
+            A full queue sheds new work with a wire-stable Overloaded
+            error (code 3 / HTTP 503) instead of blocking the caller.
+--deadline-ms: default per-request latency budget (0 = off).  Requests
+            that outlive their budget in the queue are answered Timeout
+            (code 4 / HTTP 504) without touching the backend; the batcher
+            also closes a filling batch early when the oldest member's
+            deadline approaches.  Per-request deadlines on the wire
+            (binary v2 frames, HTTP `deadline_ms` body key) override it.
 --listen: serve over TCP on ADDR (e.g. 127.0.0.1:8484; port 0 =
             OS-assigned, the bound address is printed).  One port speaks
             both protocols: the length-prefixed binary framing and an
@@ -133,6 +145,12 @@ fn deployment_builder(args: &mut Args, seed: u64) -> Result<(ServeConfigBuilder,
     if !snap.is_empty() {
         b = b.snapshot(snap);
     }
+    if let Some(n) = opt_parse::<usize>(args, "queue-depth")? {
+        b = b.queue_depth(n);
+    }
+    if let Some(ms) = opt_parse::<u64>(args, "deadline-ms")? {
+        b = b.deadline_ms(ms);
+    }
     Ok((b, alpha))
 }
 
@@ -152,30 +170,45 @@ fn print_save_report(deployment: &Deployment) {
 
 /// Submit `requests` test images through a running server and tally
 /// correctness — the in-process serving loop.
+///
+/// Admission is `try_send`-based: a full queue answers `Overloaded`
+/// instead of blocking, so this loop runs a sliding window — on
+/// `Overloaded` it settles the oldest in-flight reply to free a slot and
+/// resubmits, never dropping a request.
 fn run_serve_loop(
     handle: &ServerHandle,
     test: &Dataset,
     m: &InferenceMethod,
     requests: usize,
 ) -> Result<(usize, usize, Duration)> {
-    let n = requests.min(test.len());
-    let t0 = Instant::now();
-    let mut pending = Vec::with_capacity(n);
-    for i in 0..n {
-        pending.push((
-            test.labels[i],
-            handle
-                .classify(test.image(i).to_vec(), m.clone())
-                .map_err(Error::msg)?,
-        ));
-    }
-    let mut correct = 0usize;
-    for (label, p) in pending {
+    fn settle(label: u8, p: bayesdm::coordinator::server::Pending, correct: &mut usize) {
         match p.wait() {
-            Ok(r) if r.class == label as usize => correct += 1,
+            Ok(r) if r.class == label as usize => *correct += 1,
             Ok(_) => {}
             Err(e) => eprintln!("request failed: {e}"),
         }
+    }
+    let n = requests.min(test.len());
+    let t0 = Instant::now();
+    let mut pending = std::collections::VecDeque::with_capacity(n);
+    let mut correct = 0usize;
+    for i in 0..n {
+        loop {
+            match handle.classify(test.image(i).to_vec(), m.clone()) {
+                Ok(p) => {
+                    pending.push_back((test.labels[i], p));
+                    break;
+                }
+                Err(ServeError::Overloaded) => match pending.pop_front() {
+                    Some((label, p)) => settle(label, p, &mut correct),
+                    None => std::thread::sleep(Duration::from_millis(1)),
+                },
+                Err(e) => return Err(Error::msg(e.to_string())),
+            }
+        }
+    }
+    for (label, p) in pending {
+        settle(label, p, &mut correct);
     }
     Ok((n, correct, t0.elapsed()))
 }

@@ -145,9 +145,10 @@ fn serve_binary(stream: TcpStream, shared: &Arc<ConnShared>) {
     let Ok(write_half) = stream.try_clone() else { return };
     let (tx, rx) = mpsc::channel::<Outgoing>();
     let request_timeout = shared.request_timeout;
+    let metrics = shared.handle.metrics.clone();
     let writer = std::thread::Builder::new()
         .name("bayesdm-conn-writer".into())
-        .spawn(move || writer_loop(write_half, rx, request_timeout))
+        .spawn(move || writer_loop(write_half, rx, request_timeout, metrics))
         .expect("spawn conn writer");
 
     let mut reader = BufReader::new(stream);
@@ -175,8 +176,9 @@ fn serve_binary(stream: TcpStream, shared: &Arc<ConnShared>) {
 
 fn handle_frame(frame: Frame, shared: &Arc<ConnShared>, tx: &Sender<Outgoing>) {
     match frame {
-        Frame::Request { id, method, input } => {
-            match shared.handle.classify(input, to_inference(&method)) {
+        Frame::Request { id, method, input, deadline_ms } => {
+            let budget = deadline_ms.map(Duration::from_millis);
+            match shared.handle.classify_with_deadline(input, to_inference(&method), budget) {
                 Ok(pending) => {
                     let _ = tx.send(Outgoing::Job { id, pending });
                 }
@@ -203,14 +205,27 @@ fn handle_frame(frame: Frame, shared: &Arc<ConnShared>, tx: &Sender<Outgoing>) {
     }
 }
 
-fn writer_loop(mut stream: TcpStream, rx: Receiver<Outgoing>, request_timeout: Duration) {
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: Receiver<Outgoing>,
+    request_timeout: Duration,
+    metrics: Arc<crate::coordinator::metrics::Metrics>,
+) {
     let mut broken = false;
     while let Ok(out) = rx.recv() {
         let frame = match out {
             Outgoing::Ready(f) => f,
-            Outgoing::Job { id, pending } => match pending.wait_timeout(request_timeout) {
-                Ok(r) => Frame::Response { id, resp: to_wire(&r) },
-                Err(err) => Frame::Error { id, err },
+            // `try_wait`: `Some` outcomes were already accounted by the
+            // batcher; `None` means the frontend timer fired first — the
+            // request is abandoned, and this is the only place that
+            // failure can be counted.
+            Outgoing::Job { id, pending } => match pending.try_wait(request_timeout) {
+                Some(Ok(r)) => Frame::Response { id, resp: to_wire(&r) },
+                Some(Err(err)) => Frame::Error { id, err },
+                None => {
+                    metrics.record_error();
+                    Frame::Error { id, err: ServeError::Timeout }
+                }
             },
         };
         // After a write failure keep draining (and discarding) replies so

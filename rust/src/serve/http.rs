@@ -8,21 +8,28 @@
 //! * `GET /admin/drain`   — request a graceful drain (the host loop
 //!   observes it, stops accepting, flushes in-flight work and exits)
 //! * `POST /v1/classify`  — JSON body
-//!   `{"method":"standard"|"hybrid"|"dm","t":N,"schedule":[..],"input":[..]}`
+//!   `{"method":"standard"|"hybrid"|"dm","t":N,"schedule":[..],"input":[..],
+//!   "deadline_ms":N}` (the optional `deadline_ms` is the request's
+//!   completion budget, measured from server receipt)
 //!   → `{"class":..,"confidence":..,"entropy":..,"voters":..,"latency_us":..}`
 //!
 //! The shim speaks just enough HTTP/1.1 for `curl` and load-balancer
-//! probes: request-line + headers, `Content-Length` bodies (no chunked
-//! encoding), keep-alive by default.  Errors map through
-//! [`ServeError::http_status`] with a JSON body carrying the stable wire
-//! code, so HTTP clients see the same error taxonomy as binary clients.
+//! probes: request-line + headers (each capped at [`MAX_HEADER_LINE`]
+//! bytes), `Content-Length` bodies (no chunked encoding), keep-alive by
+//! default for HTTP/1.1 (HTTP/1.0 closes unless the client asks
+//! otherwise).  Errors map through [`ServeError::http_status`] with a
+//! JSON body carrying the stable wire code, so HTTP clients see the same
+//! error taxonomy as binary clients — and every request-level failure
+//! the shim answers is recorded in the shared [`Metrics`] error counter.
+//!
+//! [`Metrics`]: crate::coordinator::metrics::Metrics
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::server::Response;
 use crate::nn::bnn::Method;
@@ -37,6 +44,11 @@ const DEFAULT_T: usize = 100;
 /// Default DM schedule when the body omits one: the paper's
 /// 10-voters-per-layer MNIST configuration.
 const DEFAULT_SCHEDULE: [usize; 3] = [10, 10, 10];
+/// Cap on one request-line or header line.  `read_line` accumulates
+/// across poll-tick retries, so without a cap a client streaming bytes
+/// with no CRLF would grow the line buffer until OOM — the body cap
+/// (`max_frame`) never sees those bytes.
+const MAX_HEADER_LINE: usize = 8 << 10;
 
 struct HttpRequest {
     method: String,
@@ -62,6 +74,10 @@ pub(crate) fn serve_http(stream: TcpStream, shared: &Arc<ConnShared>) {
             Ok(Some(r)) => r,
             Ok(None) => break,
             Err(e) => {
+                // Frontend-local failure (malformed request, header-cap,
+                // read timeout): never reached the batcher, so this is
+                // the only place it can be counted.
+                shared.handle.metrics.record_error();
                 let _ = write_error(&mut writer, &e, false);
                 break;
             }
@@ -107,28 +123,50 @@ fn read_line_deadline(
     reader: &mut BufReader<TcpStream>,
     deadline: Instant,
 ) -> Result<Option<String>, ServeError> {
-    let mut line = String::new();
+    // Chunk-wise via `fill_buf`/`consume` rather than `read_line`: the
+    // latter returns only at a newline/EOF/error, so a client streaming
+    // bytes with no CRLF would grow the buffer without bound inside one
+    // call.  Here the cap is enforced per buffered chunk, bounding the
+    // line at `MAX_HEADER_LINE` plus one BufReader chunk.
+    let mut line: Vec<u8> = Vec::new();
     loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => {
-                if line.is_empty() {
-                    return Ok(None);
-                }
-                return Err(ServeError::bad_request("connection closed mid-request"));
+        // (bytes consumed, end-of-line seen); None = EOF
+        let chunk: Option<(usize, bool)> = match reader.fill_buf() {
+            Ok([]) => None,
+            Ok(buf) => {
+                let newline = buf.iter().position(|&b| b == b'\n');
+                let take = newline.map_or(buf.len(), |p| p + 1);
+                line.extend_from_slice(&buf[..take]);
+                Some((take, newline.is_some()))
             }
-            Ok(_) => {
-                while line.ends_with('\n') || line.ends_with('\r') {
-                    line.pop();
-                }
-                return Ok(Some(line));
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
             Err(e) if would_block(&e) => {
                 if Instant::now() >= deadline {
                     return Err(ServeError::Timeout);
                 }
+                continue;
             }
             Err(e) => return Err(ServeError::internal(format!("read: {e}"))),
+        };
+        let Some((take, eol)) = chunk else {
+            if line.is_empty() {
+                return Ok(None);
+            }
+            return Err(ServeError::bad_request("connection closed mid-request"));
+        };
+        reader.consume(take);
+        if line.len() > MAX_HEADER_LINE {
+            return Err(ServeError::bad_request(format!(
+                "header line exceeds the {MAX_HEADER_LINE}-byte cap"
+            )));
+        }
+        if eol {
+            while line.last().is_some_and(|&b| b == b'\n' || b == b'\r') {
+                line.pop();
+            }
+            return String::from_utf8(line)
+                .map(Some)
+                .map_err(|_| ServeError::bad_request("header line is not UTF-8"));
         }
     }
 }
@@ -170,8 +208,12 @@ fn read_request(
     if method.is_empty() || path.is_empty() {
         return Err(ServeError::bad_request("malformed request line"));
     }
+    let version = parts.next().unwrap_or("HTTP/1.1").to_ascii_uppercase();
     let mut content_length = 0usize;
-    let mut keep_alive = true; // the HTTP/1.1 default
+    // Persistent connections are the default only in HTTP/1.1; an
+    // HTTP/1.0 client expects the server to close (it would hang waiting
+    // for EOF otherwise) unless it explicitly asks for keep-alive.
+    let mut keep_alive = version != "HTTP/1.0";
     loop {
         let Some(h) = read_line_deadline(reader, deadline)? else {
             return Err(ServeError::bad_request("connection closed in headers"));
@@ -185,8 +227,8 @@ fn read_request(
             content_length = v
                 .parse()
                 .map_err(|_| ServeError::bad_request(format!("bad content-length `{v}`")))?;
-        } else if k.trim().eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close") {
-            keep_alive = false;
+        } else if k.trim().eq_ignore_ascii_case("connection") {
+            keep_alive = v.eq_ignore_ascii_case("keep-alive");
         }
     }
     if content_length > max_body {
@@ -211,19 +253,44 @@ fn dispatch(req: &HttpRequest, shared: &Arc<ConnShared>) -> Result<HttpReply, Se
             Ok((200, "OK", "text/plain", "draining\n".into()))
         }
         ("POST", "/v1/classify") => {
-            let body = std::str::from_utf8(&req.body)
-                .map_err(|_| ServeError::bad_request("body is not UTF-8"))?;
-            let (method, input) = parse_classify(body)?;
-            let pending = shared.handle.classify(input, to_inference(&method))?;
-            let r = pending.wait_timeout(shared.request_timeout)?;
-            Ok((200, "OK", "application/json", classify_json(&r)))
+            let parsed = std::str::from_utf8(&req.body)
+                .map_err(|_| ServeError::bad_request("body is not UTF-8"))
+                .and_then(parse_classify);
+            let (method, input, deadline_ms) = match parsed {
+                Ok(p) => p,
+                Err(e) => {
+                    // Rejected before submission: count it here — the
+                    // batcher never saw this request.
+                    shared.handle.metrics.record_error();
+                    return Err(e);
+                }
+            };
+            let budget = deadline_ms.map(Duration::from_millis);
+            // Submission errors (`Overloaded`/`ShuttingDown`) are already
+            // counted by the handle as shed/error — just propagate.
+            let pending =
+                shared.handle.classify_with_deadline(input, to_inference(&method), budget)?;
+            match pending.try_wait(shared.request_timeout) {
+                // Served outcomes were accounted by the batcher.
+                Some(Ok(r)) => Ok((200, "OK", "application/json", classify_json(&r))),
+                Some(Err(e)) => Err(e),
+                // Abandonment: the frontend timer fired first, so only
+                // the frontend can count the failure.
+                None => {
+                    shared.handle.metrics.record_error();
+                    Err(ServeError::Timeout)
+                }
+            }
         }
         _ => Ok((404, "Not Found", "text/plain", "not found\n".into())),
     }
 }
 
-/// Parse a classify body into the wire method + input vector.
-pub(crate) fn parse_classify(body: &str) -> Result<(Method, Vec<f32>), ServeError> {
+/// Parse a classify body into the wire method, input vector and optional
+/// completion budget (`deadline_ms`).
+pub(crate) fn parse_classify(
+    body: &str,
+) -> Result<(Method, Vec<f32>, Option<u64>), ServeError> {
     let v = Json::parse(body).map_err(|e| ServeError::bad_request(format!("body: {e}")))?;
     let name = v.get("method").and_then(Json::as_str).unwrap_or("standard");
     let t = v.get("t").and_then(Json::as_usize);
@@ -257,7 +324,13 @@ pub(crate) fn parse_classify(body: &str) -> Result<(Method, Vec<f32>), ServeErro
                 .ok_or_else(|| ServeError::bad_request("`input` must be an array of numbers"))
         })
         .collect::<Result<Vec<_>, _>>()?;
-    Ok((method, input))
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(d) => Some(d.as_usize().map(|ms| ms as u64).ok_or_else(|| {
+            ServeError::bad_request("`deadline_ms` must be a non-negative integer")
+        })?),
+    };
+    Ok((method, input, deadline_ms))
 }
 
 /// The classify success body.  `confidence`/`entropy` are serialized
@@ -307,19 +380,25 @@ mod tests {
 
     #[test]
     fn classify_bodies_parse() {
-        let (m, x) = parse_classify(r#"{"method":"standard","t":5,"input":[0.5,1.0]}"#).unwrap();
+        let (m, x, d) =
+            parse_classify(r#"{"method":"standard","t":5,"input":[0.5,1.0]}"#).unwrap();
         assert_eq!(m, Method::Standard { t: 5 });
         assert_eq!(x, vec![0.5, 1.0]);
+        assert_eq!(d, None, "no deadline unless asked for");
 
-        let (m, _) = parse_classify(r#"{"method":"hybrid","input":[]}"#).unwrap();
+        let (m, _, _) = parse_classify(r#"{"method":"hybrid","input":[]}"#).unwrap();
         assert_eq!(m, Method::Hybrid { t: DEFAULT_T });
 
-        let (m, _) =
+        let (m, _, _) =
             parse_classify(r#"{"method":"dm","schedule":[2,3,2],"input":[1]}"#).unwrap();
         assert_eq!(m, Method::DmBnn { schedule: vec![2, 3, 2] });
 
-        let (m, _) = parse_classify(r#"{"method":"dm","input":[1]}"#).unwrap();
+        let (m, _, _) = parse_classify(r#"{"method":"dm","input":[1]}"#).unwrap();
         assert_eq!(m, Method::DmBnn { schedule: DEFAULT_SCHEDULE.to_vec() });
+
+        let (_, _, d) =
+            parse_classify(r#"{"method":"standard","input":[1],"deadline_ms":250}"#).unwrap();
+        assert_eq!(d, Some(250));
     }
 
     #[test]
@@ -330,6 +409,8 @@ mod tests {
             (r#"{"method":"warp","input":[1]}"#, "unknown method"),
             (r#"{"method":"standard","input":["x"]}"#, "non-numeric input"),
             (r#"{"method":"dm","schedule":[1.5],"input":[1]}"#, "fractional schedule"),
+            (r#"{"method":"standard","input":[1],"deadline_ms":-5}"#, "negative deadline"),
+            (r#"{"method":"standard","input":[1],"deadline_ms":"soon"}"#, "string deadline"),
         ] {
             let e = parse_classify(body).unwrap_err();
             assert!(matches!(e, ServeError::BadRequest(_)), "{what}: {e:?}");

@@ -143,6 +143,7 @@ pub struct ServeConfigBuilder {
     max_wait: Option<Duration>,
     dispatch_workers: Option<usize>,
     queue_depth: Option<usize>,
+    deadline_ms: Option<u64>,
     listen: Option<String>,
     conn_threads: Option<usize>,
     pending_conns: Option<usize>,
@@ -223,6 +224,14 @@ impl ServeConfigBuilder {
         self
     }
 
+    /// Default per-request latency budget in milliseconds.  Requests that
+    /// carry no explicit deadline inherit this; `0` turns the default off
+    /// (requests without a deadline never expire).
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
     /// `host:port` for the TCP frontend (port 0 = OS-assigned).
     pub fn listen<S: Into<String>>(mut self, addr: S) -> Self {
         self.listen = Some(addr.into());
@@ -299,6 +308,10 @@ impl ServeConfigBuilder {
             // parallelism (see `serve_engine`'s sizing note)
             workers: self.dispatch_workers.unwrap_or(1).max(1),
             queue_depth: self.queue_depth.unwrap_or(server_defaults.queue_depth),
+            deadline: match self.deadline_ms {
+                Some(0) | None => server_defaults.deadline,
+                Some(ms) => Some(Duration::from_millis(ms)),
+            },
         };
         let engine = EngineConfig {
             workers,
@@ -674,14 +687,40 @@ impl WireClient {
     /// Submit a classify request without waiting for the reply
     /// (pipelining); returns the request id.
     pub fn send_classify(&mut self, method: &Method, input: &[f32]) -> Result<u64, ServeError> {
+        self.send_classify_with_deadline(method, input, None)
+    }
+
+    /// Like [`send_classify`](Self::send_classify) but carrying an
+    /// explicit latency budget; `Some` stamps the frame as protocol v2.
+    pub fn send_classify_with_deadline(
+        &mut self,
+        method: &Method,
+        input: &[f32],
+        deadline_ms: Option<u64>,
+    ) -> Result<u64, ServeError> {
         let id = self.fresh_id();
-        self.send(&Frame::Request { id, method: method.clone(), input: input.to_vec() })?;
+        self.send(&Frame::Request {
+            id,
+            method: method.clone(),
+            input: input.to_vec(),
+            deadline_ms,
+        })?;
         Ok(id)
     }
 
     /// One classify round-trip; an error frame becomes `Err`.
     pub fn classify(&mut self, method: &Method, input: &[f32]) -> Result<WireResponse, ServeError> {
-        let id = self.send_classify(method, input)?;
+        self.classify_with_deadline(method, input, None)
+    }
+
+    /// One classify round-trip with an explicit latency budget.
+    pub fn classify_with_deadline(
+        &mut self,
+        method: &Method,
+        input: &[f32],
+        deadline_ms: Option<u64>,
+    ) -> Result<WireResponse, ServeError> {
+        let id = self.send_classify_with_deadline(method, input, deadline_ms)?;
         match self.recv()? {
             Frame::Response { id: rid, resp } if rid == id => Ok(resp),
             Frame::Error { err, .. } => Err(err),
@@ -729,6 +768,7 @@ mod tests {
         assert!(cfg.engine.workers >= 1);
         assert!(cfg.engine.shards >= 1);
         assert_eq!(cfg.server.workers, 1, "one dispatch worker by default");
+        assert!(cfg.server.deadline.is_none(), "no default deadline");
         assert!(cfg.net.listen.is_none());
 
         for (b, what) in [
@@ -753,6 +793,7 @@ mod tests {
             .shards(2)
             .memo_mb(2)
             .max_batch(1)
+            .deadline_ms(250)
             .listen("127.0.0.1:0")
             .conn_threads(2)
             .build()
@@ -763,12 +804,14 @@ mod tests {
         assert_eq!(cfg.engine.shards, 2);
         assert!(cfg.engine.memo.enabled());
         assert_eq!(cfg.server.max_batch, 1);
+        assert_eq!(cfg.server.deadline, Some(Duration::from_millis(250)));
         assert_eq!(cfg.net.listen.as_deref(), Some("127.0.0.1:0"));
         assert_eq!(cfg.net.conn_threads, 2);
         // explicit 0 must mean "off", not "fall back to env"
-        let off = ServeConfig::builder().cache_mb(0).memo_mb(0).build().unwrap();
+        let off = ServeConfig::builder().cache_mb(0).memo_mb(0).deadline_ms(0).build().unwrap();
         assert!(!off.engine.cache.enabled());
         assert!(!off.engine.memo.enabled());
+        assert!(off.server.deadline.is_none(), "deadline 0 means off");
     }
 
     #[test]

@@ -6,12 +6,19 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic   "BDM1"
-//! 4       1     version (= 1)
+//! 4       1     version (1, or 2 for deadline-carrying requests)
 //! 5       1     kind    (see below)
 //! 6       2     reserved (0 on encode, ignored on decode)
 //! 8       8     request id (echoed verbatim in the reply)
 //! 16      4     payload length in bytes
 //! ```
+//!
+//! Versioning is **per frame**: a Request carrying a completion deadline
+//! appends a trailing `u64` deadline (milliseconds) to its payload and
+//! stamps version 2; every other frame — including deadline-less
+//! requests — still encodes version 1, so an old server only rejects the
+//! frames it genuinely cannot honor and an old client never sees a
+//! version it does not speak.
 //!
 //! Frame kinds: 1 = Request, 2 = Response, 3 = Error, 4 = Ping,
 //! 5 = Pong, 6 = MetricsRequest, 7 = MetricsText.  Responses carry the
@@ -39,8 +46,12 @@ use super::error::ServeError;
 /// Frame magic — also the protocol-sniffing prefix (no HTTP method
 /// starts with `B`, so one peeked byte routes a connection).
 pub const MAGIC: [u8; 4] = *b"BDM1";
-/// Wire protocol version carried in every frame header.
+/// Base wire protocol version.
 pub const PROTO_VERSION: u8 = 1;
+/// Version stamped on Request frames that carry a trailing `u64`
+/// deadline (ms).  Only emitted when a deadline is present, so
+/// deadline-less traffic stays byte-identical to version-1 clients.
+pub const PROTO_VERSION_DEADLINE: u8 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_BYTES: usize = 20;
 /// Default cap on a single frame's payload (16 MiB) — far above any
@@ -77,7 +88,10 @@ pub struct WireResponse {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Classify `input` with `method`; the reply echoes `id`.
-    Request { id: u64, method: Method, input: Vec<f32> },
+    /// `deadline_ms` is the client's completion budget, measured from
+    /// server receipt — `Some` upgrades the frame to version 2 on the
+    /// wire (trailing `u64`).
+    Request { id: u64, method: Method, input: Vec<f32>, deadline_ms: Option<u64> },
     Response { id: u64, resp: WireResponse },
     Error { id: u64, err: ServeError },
     Ping { id: u64 },
@@ -111,6 +125,15 @@ impl Frame {
             Frame::MetricsText { .. } => KIND_METRICS_TEXT,
         }
     }
+
+    /// The header version this frame encodes with (per-frame gating: see
+    /// the module docs).
+    fn version(&self) -> u8 {
+        match self {
+            Frame::Request { deadline_ms: Some(_), .. } => PROTO_VERSION_DEADLINE,
+            _ => PROTO_VERSION,
+        }
+    }
 }
 
 fn push_u32(buf: &mut Vec<u8>, v: u32) {
@@ -126,7 +149,7 @@ fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
 fn encode_payload(frame: &Frame) -> Vec<u8> {
     let mut p = Vec::new();
     match frame {
-        Frame::Request { method, input, .. } => {
+        Frame::Request { method, input, deadline_ms, .. } => {
             match method {
                 Method::Standard { t } => {
                     p.push(METHOD_STANDARD);
@@ -146,6 +169,9 @@ fn encode_payload(frame: &Frame) -> Vec<u8> {
             }
             push_u32(&mut p, input.len() as u32);
             push_f32s(&mut p, input);
+            if let Some(d) = deadline_ms {
+                p.extend_from_slice(&d.to_le_bytes());
+            }
         }
         Frame::Response { resp, .. } => {
             push_u32(&mut p, resp.class);
@@ -169,7 +195,7 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
     let payload = encode_payload(frame);
     let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
     buf.extend_from_slice(&MAGIC);
-    buf.push(PROTO_VERSION);
+    buf.push(frame.version());
     buf.push(frame.kind());
     buf.extend_from_slice(&0u16.to_le_bytes());
     buf.extend_from_slice(&frame.id().to_le_bytes());
@@ -242,7 +268,12 @@ impl<'a> Reader<'a> {
 
 /// Decode a frame payload given its header fields.  Exposed for the
 /// protocol test suite; `read_frame` is the streaming entry point.
-pub fn decode_payload(kind: u8, id: u64, payload: &[u8]) -> Result<Frame, ServeError> {
+pub fn decode_payload(
+    kind: u8,
+    id: u64,
+    payload: &[u8],
+    version: u8,
+) -> Result<Frame, ServeError> {
     let mut r = Reader { buf: payload, pos: 0 };
     let frame = match kind {
         KIND_REQUEST => {
@@ -266,7 +297,14 @@ pub fn decode_payload(kind: u8, id: u64, payload: &[u8]) -> Result<Frame, ServeE
             };
             let n = r.u32()? as usize;
             let input = r.f32s(n)?;
-            Frame::Request { id, method, input }
+            // Version ≥ 2 may append a u64 deadline; a v2 request
+            // without one (trailing bytes absent) is still well-formed.
+            let deadline_ms = if version >= PROTO_VERSION_DEADLINE && r.pos < payload.len() {
+                Some(r.u64()?)
+            } else {
+                None
+            };
+            Frame::Request { id, method, input, deadline_ms }
         }
         KIND_RESPONSE => Frame::Response {
             id,
@@ -380,10 +418,11 @@ pub fn read_frame<R: Read>(
     if hdr[0..4] != MAGIC {
         return Err(ServeError::bad_request("bad frame magic"));
     }
-    if hdr[4] != PROTO_VERSION {
+    let version = hdr[4];
+    if !(PROTO_VERSION..=PROTO_VERSION_DEADLINE).contains(&version) {
         return Err(ServeError::bad_request(format!(
-            "unsupported protocol version {} (expected {PROTO_VERSION})",
-            hdr[4]
+            "unsupported protocol version {version} \
+             (expected {PROTO_VERSION}..={PROTO_VERSION_DEADLINE})"
         )));
     }
     let kind = hdr[5];
@@ -404,7 +443,7 @@ pub fn read_frame<R: Read>(
             Some(_) => break,
         }
     }
-    Ok(ReadOutcome::Frame(decode_payload(kind, id, &payload)?))
+    Ok(ReadOutcome::Frame(decode_payload(kind, id, &payload, version)?))
 }
 
 #[cfg(test)]
@@ -430,12 +469,19 @@ mod tests {
                 id: 7,
                 method: Method::Standard { t: 100 },
                 input: vec![0.25, -1.5, 3.25],
+                deadline_ms: None,
             },
-            Frame::Request { id: 8, method: Method::Hybrid { t: 31 }, input: vec![] },
+            Frame::Request {
+                id: 8,
+                method: Method::Hybrid { t: 31 },
+                input: vec![],
+                deadline_ms: None,
+            },
             Frame::Request {
                 id: 9,
                 method: Method::DmBnn { schedule: vec![10, 10, 10] },
                 input: vec![f32::MIN_POSITIVE, f32::MAX],
+                deadline_ms: Some(250),
             },
             Frame::Response {
                 id: 10,
@@ -476,7 +522,9 @@ mod tests {
                     schedule: (0..3).map(|_| 1 + (r.next_f32() * 20.0) as usize).collect(),
                 },
             };
-            let f = Frame::Request { id, method, input };
+            let deadline_ms =
+                if round % 2 == 0 { Some((r.next_f32() * 1e6) as u64) } else { None };
+            let f = Frame::Request { id, method, input, deadline_ms };
             assert_eq!(round_trip(&f), f, "round {round}");
         }
     }
@@ -487,6 +535,7 @@ mod tests {
             id: 1,
             method: Method::Standard { t: 1 },
             input: vec![f32::INFINITY, f32::NEG_INFINITY, -0.0],
+            deadline_ms: None,
         };
         let g = round_trip(&f);
         let (Frame::Request { input: a, .. }, Frame::Request { input: b, .. }) = (&f, &g) else {
@@ -536,6 +585,7 @@ mod tests {
             id: 2,
             method: Method::Standard { t: 3 },
             input: vec![1.0, 2.0],
+            deadline_ms: None,
         });
         // cut inside the header and inside the payload
         for cut in [1, HEADER_BYTES - 1, HEADER_BYTES + 3, bytes.len() - 1] {
@@ -559,6 +609,7 @@ mod tests {
             id: 4,
             method: Method::Standard { t: 3 },
             input: vec![1.0, 2.0],
+            deadline_ms: None,
         });
         let body = HEADER_BYTES + 1 + 4; // method tag + t
         bytes[body..body + 4].copy_from_slice(&100u32.to_le_bytes());
@@ -581,6 +632,47 @@ mod tests {
             read_frame(&mut c, MAX_FRAME_PAYLOAD, T).unwrap(),
             ReadOutcome::Eof
         ));
+    }
+
+    #[test]
+    fn deadline_gates_the_frame_version() {
+        // Deadline-less requests stay byte-for-byte version 1 — an old
+        // server keeps accepting them.
+        let v1 = Frame::Request {
+            id: 1,
+            method: Method::Standard { t: 4 },
+            input: vec![0.5],
+            deadline_ms: None,
+        };
+        assert_eq!(encode(&v1)[4], PROTO_VERSION);
+        // A deadline upgrades the frame to version 2 with a trailing u64.
+        let v2 = Frame::Request {
+            id: 1,
+            method: Method::Standard { t: 4 },
+            input: vec![0.5],
+            deadline_ms: Some(1500),
+        };
+        let bytes = encode(&v2);
+        assert_eq!(bytes[4], PROTO_VERSION_DEADLINE);
+        assert_eq!(bytes.len(), encode(&v1).len() + 8);
+        assert_eq!(round_trip(&v2), v2);
+        // Non-request frames never leave version 1.
+        assert_eq!(encode(&Frame::Ping { id: 3 })[4], PROTO_VERSION);
+    }
+
+    #[test]
+    fn trailing_deadline_bytes_in_a_v1_frame_are_rejected() {
+        // A v1 request must not smuggle the v2 trailing field: without
+        // the version stamp those 8 bytes are trailing junk.
+        let mut bytes = encode(&Frame::Request {
+            id: 6,
+            method: Method::Standard { t: 2 },
+            input: vec![1.0],
+            deadline_ms: Some(99),
+        });
+        bytes[4] = PROTO_VERSION; // lie about the version
+        let e = expect_bad(&bytes, "v1 with deadline bytes");
+        assert!(e.to_string().contains("trailing"), "{e}");
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod cli;
 pub mod error;
 pub mod hash;
 pub mod json;
+pub mod traffic;
 
 pub use error::{Context, Error, Result};
 pub use json::Json;

@@ -1,0 +1,219 @@
+//! Synthetic serving traffic: bursty arrivals + Zipf-distributed repeats.
+//!
+//! Real request streams are neither uniformly spaced nor uniformly
+//! distributed over inputs — they arrive in bursts, and a small set of
+//! hot inputs dominates.  Both properties matter for this repo's serving
+//! tier: bursts are what deadline-aware batching and admission control
+//! exist for, and skewed repeats are what the decomposition cache and
+//! response memoizer feed on.  This module generates that shape
+//! deterministically (seeded, zero dependencies) so latency benches and
+//! overload tests are reproducible run to run.
+//!
+//! * **Arrivals** — a two-state Markov-modulated Poisson process: a
+//!   `calm` state at the base rate and a `burst` state at
+//!   `burst_factor ×` the base rate, with geometric dwell times.  The
+//!   long-run mean rate sits between the two; the burst state is what
+//!   fills queues and trips deadlines.
+//! * **Inputs** — ranks drawn from a Zipf(`s`) law over a finite
+//!   catalog via inverse-CDF lookup, so rank 0 is the hottest input and
+//!   the tail is long.
+//!
+//! Everything is pure computation on a caller-owned PRNG state: the
+//! generator never sleeps and never reads the clock — callers decide
+//! whether the gaps pace a live submission loop or are summed into a
+//! virtual timeline.
+
+use std::time::Duration;
+
+use crate::grng::uniform::{UniformSource, XorShift128Plus};
+
+/// Shape of one synthetic request stream.
+#[derive(Debug, Clone)]
+pub struct TrafficSpec {
+    /// Mean arrival rate of the calm state, requests/second.
+    pub base_rate_hz: f64,
+    /// Burst-state rate multiplier (>= 1; 1 disables burstiness).
+    pub burst_factor: f64,
+    /// Mean requests per burst episode (geometric dwell).
+    pub mean_burst_len: f64,
+    /// Probability that a calm-state arrival enters a burst.
+    pub burst_prob: f64,
+    /// Number of distinct inputs in the catalog.
+    pub catalog: usize,
+    /// Zipf exponent over catalog ranks (0 = uniform; ~1 = web-like skew).
+    pub zipf_s: f64,
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        Self {
+            base_rate_hz: 200.0,
+            burst_factor: 8.0,
+            mean_burst_len: 12.0,
+            burst_prob: 0.05,
+            catalog: 64,
+            zipf_s: 1.1,
+        }
+    }
+}
+
+/// One synthetic arrival: wait `gap` after the previous arrival, then
+/// submit catalog item `item`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    pub gap: Duration,
+    pub item: usize,
+}
+
+/// Deterministic, seeded generator over a [`TrafficSpec`].
+#[derive(Debug, Clone)]
+pub struct TrafficGen {
+    spec: TrafficSpec,
+    rng: XorShift128Plus,
+    /// Zipf CDF over ranks, cdf[r] = P(rank <= r); last entry is 1.
+    cdf: Vec<f64>,
+    in_burst: bool,
+}
+
+impl TrafficGen {
+    pub fn new(spec: TrafficSpec, seed: u64) -> Self {
+        let n = spec.catalog.max(1);
+        let s = spec.zipf_s.max(0.0);
+        let mut weights: Vec<f64> = (1..=n).map(|r| (r as f64).powf(-s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        for w in &mut weights {
+            acc += *w / total;
+            *w = acc;
+        }
+        // guard float drift so the final bucket is always reachable
+        if let Some(last) = weights.last_mut() {
+            *last = 1.0;
+        }
+        Self { spec, rng: XorShift128Plus::new(seed), cdf: weights, in_burst: false }
+    }
+
+    /// Uniform in (0, 1] — exponential sampling needs ln of a non-zero.
+    fn u(&mut self) -> f64 {
+        1.0 - self.rng.next_f64()
+    }
+
+    /// Gap to the next arrival: exponential at the current state's rate,
+    /// with geometric state switching (calm → burst on `burst_prob`,
+    /// burst → calm on `1 / mean_burst_len`).
+    pub fn next_gap(&mut self) -> Duration {
+        let p = self.u();
+        if self.in_burst {
+            if p < 1.0 / self.spec.mean_burst_len.max(1.0) {
+                self.in_burst = false;
+            }
+        } else if p < self.spec.burst_prob {
+            self.in_burst = true;
+        }
+        let rate = if self.in_burst {
+            self.spec.base_rate_hz * self.spec.burst_factor.max(1.0)
+        } else {
+            self.spec.base_rate_hz
+        };
+        let secs = -self.u().ln() / rate.max(1e-9);
+        Duration::from_secs_f64(secs.min(10.0))
+    }
+
+    /// Zipf-distributed catalog rank (0 = hottest).
+    pub fn next_item(&mut self) -> usize {
+        let p = self.rng.next_f64();
+        self.cdf.partition_point(|&c| c < p).min(self.cdf.len() - 1)
+    }
+
+    pub fn next_arrival(&mut self) -> Arrival {
+        Arrival { gap: self.next_gap(), item: self.next_item() }
+    }
+
+    /// Materialize `n` arrivals (gaps are relative, not cumulative).
+    pub fn take(&mut self, n: usize) -> Vec<Arrival> {
+        (0..n).map(|_| self.next_arrival()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let spec = TrafficSpec::default();
+        let a = TrafficGen::new(spec.clone(), 7).take(256);
+        let b = TrafficGen::new(spec.clone(), 7).take(256);
+        let c = TrafficGen::new(spec, 8).take(256);
+        assert_eq!(a, b, "same seed, same stream");
+        assert_ne!(a, c, "different seed, different stream");
+    }
+
+    #[test]
+    fn zipf_skews_toward_low_ranks() {
+        let spec = TrafficSpec { catalog: 50, zipf_s: 1.2, ..TrafficSpec::default() };
+        let mut g = TrafficGen::new(spec, 3);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..20_000 {
+            counts[g.next_item()] += 1;
+        }
+        assert!(
+            counts[0] > counts[10] && counts[10] > counts[40],
+            "rank frequency must decay: {} / {} / {}",
+            counts[0],
+            counts[10],
+            counts[40]
+        );
+        assert!(counts[0] > 20_000 / 10, "hottest rank dominates");
+    }
+
+    #[test]
+    fn zipf_zero_is_roughly_uniform() {
+        let spec = TrafficSpec { catalog: 8, zipf_s: 0.0, ..TrafficSpec::default() };
+        let mut g = TrafficGen::new(spec, 5);
+        let mut counts = vec![0usize; 8];
+        for _ in 0..16_000 {
+            counts[g.next_item()] += 1;
+        }
+        for (r, &c) in counts.iter().enumerate() {
+            assert!((1500..=2500).contains(&c), "rank {r} count {c} far from uniform");
+        }
+    }
+
+    #[test]
+    fn bursts_compress_inter_arrival_gaps() {
+        let calm = TrafficSpec {
+            base_rate_hz: 100.0,
+            burst_factor: 1.0,
+            burst_prob: 0.0,
+            ..TrafficSpec::default()
+        };
+        let bursty = TrafficSpec {
+            base_rate_hz: 100.0,
+            burst_factor: 50.0,
+            burst_prob: 0.2,
+            mean_burst_len: 20.0,
+            ..TrafficSpec::default()
+        };
+        let mean_gap = |spec: TrafficSpec| {
+            let mut g = TrafficGen::new(spec, 11);
+            let total: Duration = (0..10_000).map(|_| g.next_gap()).sum();
+            total / 10_000
+        };
+        let calm_gap = mean_gap(calm);
+        let bursty_gap = mean_gap(bursty);
+        assert!(
+            bursty_gap < calm_gap,
+            "burst episodes must raise the mean rate: calm {calm_gap:?} vs bursty {bursty_gap:?}"
+        );
+    }
+
+    #[test]
+    fn gaps_are_bounded() {
+        let mut g = TrafficGen::new(TrafficSpec::default(), 9);
+        for _ in 0..1000 {
+            let gap = g.next_gap();
+            assert!(gap <= Duration::from_secs(10));
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Deadline & admission-control integration suite (DESIGN.md §13).
+//!
+//! End-to-end guarantees for the latency-first router, exercised over
+//! both wire protocols against real servers:
+//!
+//! * a zero-budget request expires at dequeue and is answered `Timeout`
+//!   (code 4 / HTTP 504) without touching the backend — deterministic,
+//!   because the queue wait is always > 0;
+//! * a saturated admission queue answers `Overloaded` (code 3 /
+//!   HTTP 503) instead of blocking the caller, over binary pipelining
+//!   and over concurrent HTTP posts, and every request is accounted
+//!   exactly once (served, shed, or expired — never dropped);
+//! * a deadline-on server with capacity headroom answers bit-identically
+//!   to the deadline-off reference (the deadline machinery is invisible
+//!   until it has to act);
+//! * serving-tier regression checks: HTTP parse failures land in the
+//!   shared `errors` counter, over-long header lines are a clean 400
+//!   (not unbounded buffering), and HTTP/1.0 connections close after
+//!   the response instead of idling in keep-alive.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bayesdm::coordinator::SeedSchedule;
+use bayesdm::nn::bnn::{BnnModel, Method};
+use bayesdm::serve::{Deployment, NetServer, ServeConfig, ServeError, WireClient};
+use bayesdm::util::Json;
+
+const ARCH: [usize; 4] = [16, 12, 8, 5];
+
+fn model() -> BnnModel {
+    BnnModel::synthetic(&ARCH, 0xC0FFEE)
+}
+
+fn input(i: usize) -> Vec<f32> {
+    (0..ARCH[0]).map(|j| ((i * 31 + j * 7) % 17) as f32 / 16.0 - 0.5).collect()
+}
+
+/// A method slow enough (voter count) that pipelined submission always
+/// outruns the single service lane in the overload tests.
+fn slow_method() -> Method {
+    Method::Standard { t: 2000 }
+}
+
+fn config(queue_depth: usize, deadline_ms: u64, max_batch: usize) -> ServeConfig {
+    ServeConfig::builder()
+        .seed(7)
+        .seed_schedule(SeedSchedule::ContentHash)
+        .workers(1)
+        .max_batch(max_batch)
+        .cache_mb(0)
+        .memo_mb(0)
+        .queue_depth(queue_depth)
+        .deadline_ms(deadline_ms)
+        .listen("127.0.0.1:0")
+        .conn_threads(4)
+        .build()
+        .expect("config")
+}
+
+fn server(cfg: &ServeConfig) -> NetServer {
+    let deployment = Arc::new(Deployment::new(model(), cfg));
+    NetServer::bind(deployment, cfg).expect("bind")
+}
+
+// ------------------------------------------------------------ binary wire
+
+#[test]
+fn zero_budget_request_times_out_over_the_wire() {
+    let cfg = config(64, 0, 1);
+    let srv = server(&cfg);
+    let mut client = WireClient::connect(srv.local_addr()).expect("connect");
+
+    // deadline_ms 0 on the wire = "already out of budget": the request
+    // is admitted, expires at dequeue, and never reaches the backend.
+    let err = client
+        .classify_with_deadline(&Method::Standard { t: 4 }, &input(0), Some(0))
+        .expect_err("zero budget must not be served");
+    assert!(matches!(err, ServeError::Timeout), "got {err:?}");
+    assert_eq!(err.code(), 4, "stable wire code for Timeout");
+
+    // a deadline-less request on the same connection is unaffected
+    let ok = client.classify(&Method::Standard { t: 4 }, &input(0)).expect("served");
+    assert_eq!(ok.voters, 4);
+
+    let m = Json::parse(&client.metrics_text().expect("metrics")).expect("json");
+    assert_eq!(m.get("expired").and_then(Json::as_usize), Some(1));
+    assert_eq!(m.get("requests").and_then(Json::as_usize), Some(1));
+    assert_eq!(m.get("errors").and_then(Json::as_usize), Some(0));
+    srv.shutdown();
+}
+
+#[test]
+fn saturated_queue_sheds_overloaded_over_binary_pipelining() {
+    // one service lane, one-deep admission queue, no deadline: pipelined
+    // submission outruns service, so later frames must shed.
+    let cfg = config(1, 0, 1);
+    let srv = server(&cfg);
+    let mut client = WireClient::connect(srv.local_addr()).expect("connect");
+
+    const N: usize = 48;
+    let mut ids = Vec::with_capacity(N);
+    for i in 0..N {
+        ids.push(client.send_classify(&slow_method(), &input(i)).expect("submit"));
+    }
+    let (mut served, mut shed) = (0usize, 0usize);
+    for _ in 0..N {
+        match client.recv().expect("reply") {
+            bayesdm::serve::Frame::Response { id, resp } => {
+                assert!(ids.contains(&id));
+                assert_eq!(resp.voters, 2000);
+                served += 1;
+            }
+            bayesdm::serve::Frame::Error { id, err } => {
+                assert!(ids.contains(&id));
+                assert!(matches!(err, ServeError::Overloaded), "got {err:?}");
+                assert_eq!(err.code(), 3, "stable wire code for Overloaded");
+                shed += 1;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(served + shed, N, "every request answered exactly once");
+    assert!(shed > 0, "a one-deep queue must shed under pipelined load");
+    assert!(served > 0, "admitted requests must still be served");
+
+    let m = Json::parse(&client.metrics_text().expect("metrics")).expect("json");
+    assert_eq!(m.get("shed").and_then(Json::as_usize), Some(shed));
+    assert_eq!(m.get("requests").and_then(Json::as_usize), Some(served));
+    assert_eq!(m.get("errors").and_then(Json::as_usize), Some(0), "sheds are not errors");
+    srv.shutdown();
+}
+
+#[test]
+fn deadline_on_server_is_bit_identical_to_the_reference() {
+    // generous deadline + batching headroom: the deadline machinery must
+    // not change a single bit of any answer (sequential round-trips +
+    // ContentHash seeds are the per-request determinism contract, so any
+    // drift here is the deadline path's fault).
+    let with = config(64, 5_000, 4);
+    let without = config(64, 0, 1);
+    let (srv_a, srv_b) = (server(&with), server(&without));
+    let mut a = WireClient::connect(srv_a.local_addr()).expect("connect a");
+    let mut b = WireClient::connect(srv_b.local_addr()).expect("connect b");
+
+    let methods = [
+        Method::Standard { t: 6 },
+        Method::Hybrid { t: 6 },
+        Method::DmBnn { schedule: vec![3, 2, 3] },
+    ];
+    for (i, m) in methods.iter().enumerate() {
+        for j in 0..4 {
+            let x = input(i * 4 + j);
+            let ra = a.classify_with_deadline(m, &x, Some(5_000)).expect("deadline-on");
+            let rb = b.classify(m, &x).expect("reference");
+            assert_eq!(ra.class, rb.class, "class ({i},{j})");
+            assert_eq!(ra.voters, rb.voters, "voters ({i},{j})");
+            assert_eq!(
+                ra.confidence.to_bits(),
+                rb.confidence.to_bits(),
+                "confidence bits ({i},{j})"
+            );
+            assert_eq!(ra.entropy.to_bits(), rb.entropy.to_bits(), "entropy bits ({i},{j})");
+        }
+    }
+    let m = Json::parse(&a.metrics_text().expect("metrics")).expect("json");
+    assert_eq!(m.get("expired").and_then(Json::as_usize), Some(0), "nothing expired");
+    assert_eq!(m.get("shed").and_then(Json::as_usize), Some(0), "nothing shed");
+    srv_a.shutdown();
+    srv_b.shutdown();
+}
+
+// ------------------------------------------------------------------ http
+
+fn http_roundtrip(addr: SocketAddr, request: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(request.as_bytes()).expect("write");
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read");
+    out
+}
+
+fn classify_post(body: &str) -> String {
+    format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn classify_body(x: &[f32], t: usize, deadline_ms: Option<u64>) -> String {
+    let nums = x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",");
+    match deadline_ms {
+        Some(d) => {
+            format!("{{\"method\":\"standard\",\"t\":{t},\"deadline_ms\":{d},\"input\":[{nums}]}}")
+        }
+        None => format!("{{\"method\":\"standard\",\"t\":{t},\"input\":[{nums}]}}"),
+    }
+}
+
+fn body_of(response: &str) -> &str {
+    response.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+fn status_of(response: &str) -> &str {
+    response.split("\r\n").next().unwrap_or("")
+}
+
+#[test]
+fn zero_budget_http_request_gets_504_code_4() {
+    let cfg = config(64, 0, 1);
+    let srv = server(&cfg);
+
+    let body = classify_body(&input(0), 4, Some(0));
+    let resp = http_roundtrip(srv.local_addr(), &classify_post(&body));
+    assert!(status_of(&resp).starts_with("HTTP/1.1 504"), "{resp}");
+    let v = Json::parse(body_of(&resp).trim()).expect("error json");
+    assert_eq!(v.get("error").and_then(Json::as_str), Some("timeout"));
+    assert_eq!(v.get("code").and_then(Json::as_usize), Some(4));
+    srv.shutdown();
+}
+
+#[test]
+fn saturated_queue_sheds_503_code_3_over_http() {
+    let cfg = config(1, 0, 1);
+    let srv = server(&cfg);
+    let addr = srv.local_addr();
+
+    const N: usize = 24;
+    let replies: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..N)
+            .map(|i| {
+                scope.spawn(move || {
+                    http_roundtrip(addr, &classify_post(&classify_body(&input(i), 2000, None)))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("join")).collect()
+    });
+
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for resp in &replies {
+        match status_of(resp) {
+            s if s.starts_with("HTTP/1.1 200") => ok += 1,
+            s if s.starts_with("HTTP/1.1 503") => {
+                let v = Json::parse(body_of(resp).trim()).expect("error json");
+                assert_eq!(v.get("error").and_then(Json::as_str), Some("overloaded"));
+                assert_eq!(v.get("code").and_then(Json::as_usize), Some(3));
+                shed += 1;
+            }
+            s => panic!("unexpected status `{s}`"),
+        }
+    }
+    assert_eq!(ok + shed, N, "every post answered");
+    assert!(shed > 0, "concurrent posts into a one-deep queue must shed");
+    assert!(ok > 0, "admitted posts must still be served");
+    srv.shutdown();
+}
+
+#[test]
+fn http_parse_failures_land_in_the_errors_counter() {
+    let cfg = config(64, 0, 1);
+    let srv = server(&cfg);
+    let addr = srv.local_addr();
+
+    let resp = http_roundtrip(addr, &classify_post("this is not json"));
+    assert!(status_of(&resp).starts_with("HTTP/1.1 400"), "{resp}");
+
+    let metrics =
+        http_roundtrip(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    let v = Json::parse(body_of(&metrics).trim()).expect("metrics json");
+    assert_eq!(v.get("errors").and_then(Json::as_usize), Some(1), "parse failure counted");
+    assert_eq!(v.get("requests").and_then(Json::as_usize), Some(0));
+    srv.shutdown();
+}
+
+#[test]
+fn overlong_header_line_is_a_clean_400() {
+    let cfg = config(64, 0, 1);
+    let srv = server(&cfg);
+
+    // 16 KiB of request line with no newline: the reader must cap its
+    // buffer and answer 400 instead of accumulating until OOM.
+    let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(16 << 10));
+    let resp = http_roundtrip(srv.local_addr(), &long);
+    assert!(status_of(&resp).starts_with("HTTP/1.1 400"), "{}", status_of(&resp));
+    srv.shutdown();
+}
+
+#[test]
+fn http_1_0_connection_closes_after_the_response() {
+    let cfg = config(64, 0, 1);
+    let srv = server(&cfg);
+
+    let t0 = Instant::now();
+    let resp = http_roundtrip(srv.local_addr(), "GET /healthz HTTP/1.0\r\nHost: t\r\n\r\n");
+    assert!(status_of(&resp).starts_with("HTTP/1.1 200"), "{resp}");
+    assert_eq!(body_of(&resp), "ok\n");
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "an HTTP/1.0 response must close the connection, not idle in keep-alive"
+    );
+    srv.shutdown();
+}

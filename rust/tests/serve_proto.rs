@@ -102,7 +102,9 @@ fn generated_frames_round_trip_bit_exactly() {
                 schedule: (0..3).map(|_| 1 + (r.next_f32() * 12.0) as usize).collect(),
             },
         };
-        let f = Frame::Request { id, method, input };
+        // alternate deadline-less (v1) and deadline-carrying (v2) frames
+        let deadline_ms = (round % 2 == 1).then(|| 1 + (r.next_f32() * 5_000.0) as u64);
+        let f = Frame::Request { id, method, input, deadline_ms };
         let mut c = Cursor::new(proto::encode(&f));
         let out = proto::read_frame(&mut c, MAX_FRAME_PAYLOAD, Duration::from_secs(1))
             .expect("decode");
@@ -122,7 +124,12 @@ fn codec_rejects_malformed_bytes_without_panicking() {
     // pure garbage (bad magic)
     assert!(matches!(decode(&[0xAB; 64]), Err(ServeError::BadRequest(_))));
     // every truncation point of a real frame is a clean rejection
-    let f = Frame::Request { id: 9, method: Method::Hybrid { t: 3 }, input: input(0) };
+    let f = Frame::Request {
+        id: 9,
+        method: Method::Hybrid { t: 3 },
+        input: input(0),
+        deadline_ms: Some(75),
+    };
     let bytes = proto::encode(&f);
     for cut in 1..bytes.len() {
         match decode(&bytes[..cut]) {
