@@ -13,6 +13,10 @@
 //! first, then timed.  Acceptance shape: on the 90%-duplicate stream with
 //! a warm 64 MiB cache, throughput is ≥ 1.5× cache-off (the avoided-MUL
 //! fraction for dm 2x2x2 is ~45%, so the arithmetic alone predicts ~1.8×).
+//!
+//! Emits `BENCH_cache.json` at the repo root (shared `common` emitter).
+
+mod common;
 
 use std::time::Duration;
 
@@ -109,6 +113,13 @@ fn main() {
 
     let budget = Duration::from_millis(500);
     let mut headline: Option<(f64, f64)> = None;
+    let mut rows: Vec<String> = Vec::new();
+    let row = |rate: usize, mb: usize, ips: f64, speedup: f64| {
+        format!(
+            "{{\"duplicate_rate_pct\": {rate}, \"cache_mb\": {mb}, \
+             \"inputs_per_sec\": {ips:.1}, \"speedup_vs_off\": {speedup:.3}}}"
+        )
+    };
 
     for &rate in &[0usize, 50, 90] {
         println!("duplicate rate {rate}%:");
@@ -118,6 +129,7 @@ fn main() {
             run_stream(&e_off, &method, &mut stream)
         });
         let off_ips = inputs_per_sec(&m_off);
+        rows.push(row(rate, 0, off_ips, 1.0));
 
         for &mb in &[8usize, 64] {
             let e_on = engine(CacheConfig::with_mb(mb));
@@ -134,6 +146,7 @@ fn main() {
                 "  {label:<22} {on_ips:>9.1} in/s | off {off_ips:>9.1} in/s | {:>5.2}x | {stats}",
                 on_ips / off_ips,
             );
+            rows.push(row(rate, mb, on_ips, on_ips / off_ips));
             if rate == 90 && mb == 64 {
                 headline = Some((off_ips, on_ips));
             }
@@ -146,6 +159,18 @@ fn main() {
     println!(
         "headline: 90% duplicates, warm 64 MiB cache: {speedup:.2}x vs cache-off \
          ({on_ips:.1} vs {off_ips:.1} inputs/sec)"
+    );
+    common::emit_bench_json(
+        "cache",
+        &common::json_doc(
+            "cache",
+            &[
+                ("batch", BATCH.to_string()),
+                ("hot_pool", POOL.to_string()),
+                ("headline_speedup_64mb_rate90", format!("{speedup:.3}")),
+            ],
+            &rows,
+        ),
     );
     assert!(
         speedup >= 1.5,

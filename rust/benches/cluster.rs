@@ -73,6 +73,7 @@ fn router(shards: usize, memo: MemoConfig) -> ClusterRouter {
             shards,
             memo,
             snapshot: None,
+            sparse_threshold: None,
         },
     )
 }

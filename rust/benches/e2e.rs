@@ -6,6 +6,10 @@
 //! so it runs with zero artifact dependencies.  Reports req/s and the
 //! p50/p99 latency split per method, and the effect of the router's
 //! micro-batch size (the dynamic-batching win).
+//!
+//! Emits `BENCH_e2e.json` at the repo root (shared `common` emitter).
+
+mod common;
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -61,9 +65,17 @@ fn main() {
             InferenceMethod::DmBnn { schedule: vec![2, 2, 2], alpha: 1.0 },
         ),
     ];
+    let mut rows: Vec<String> = Vec::new();
+    let row = |method: &str, mb: usize, rps: f64, p50: u64, p99: u64| {
+        format!(
+            "{{\"method\": \"{method}\", \"max_batch\": {mb}, \"req_per_sec\": {rps:.1}, \
+             \"p50_us\": {p50}, \"p99_us\": {p99}}}"
+        )
+    };
     for (name, method) in &cases {
         let (rps, p50, p99) = round(&images, method, 8);
         println!("{name}: {rps:8.1} req/s  p50 {p50:>6} µs  p99 {p99:>6} µs");
+        rows.push(row(name.split_whitespace().next().unwrap_or(name), 8, rps, p50, p99));
     }
 
     println!("\nmicro-batch size sweep (dm 2x2x2):");
@@ -79,9 +91,21 @@ fn main() {
              p50 {p50:>6} µs  p99 {p99:>6} µs",
             rps / first
         );
+        rows.push(row("dm_batch_sweep", mb, rps, p50, p99));
     }
     println!(
         "\nbigger micro-batches amortize the per-batch Θ sampling across \
          more requests (the engine-level memoization win)."
+    );
+    common::emit_bench_json(
+        "e2e",
+        &common::json_doc(
+            "e2e",
+            &[
+                ("requests", images.len().to_string()),
+                ("workers", default_workers().to_string()),
+            ],
+            &rows,
+        ),
     );
 }

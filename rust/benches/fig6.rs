@@ -5,6 +5,10 @@
 //! curves, asserts the paper's qualitative claims on them, and times the
 //! rust-side pieces of the protocol (dataset synthesis + subset
 //! selection).
+//!
+//! Emits `BENCH_fig6.json` at the repo root (shared `common` emitter).
+
+mod common;
 
 use bayesdm::dataset::{shrink_subset, SynthSpec, Synthesizer};
 use bayesdm::util::bench::{bench, header};
@@ -13,11 +17,12 @@ use bayesdm::util::Json;
 fn main() {
     header("Fig 6 — NN vs BNN accuracy vs shrink ratio");
 
-    match std::fs::read_to_string("artifacts/fig6.json") {
+    let mut rows: Vec<String> = Vec::new();
+    let mut bnn_wins_small = 0usize;
+    let mut total_small = 0usize;
+    let have_artifacts = match std::fs::read_to_string("artifacts/fig6.json") {
         Ok(text) => {
             let v = Json::parse(&text).expect("fig6.json parse");
-            let mut bnn_wins_small = 0usize;
-            let mut total_small = 0usize;
             for (ds, curve) in v.get("datasets").and_then(Json::as_obj).unwrap() {
                 println!("dataset {ds}:");
                 let nn = curve.get("nn").and_then(Json::as_obj).unwrap();
@@ -34,6 +39,10 @@ fn main() {
                         100.0 * b,
                         100.0 * (b - a)
                     );
+                    rows.push(format!(
+                        "{{\"dataset\": \"{ds}\", \"ratio\": {r}, \"nn\": {a:.4}, \
+                         \"bnn\": {b:.4}}}"
+                    ));
                     if *r >= 256 {
                         total_small += 1;
                         if b >= a {
@@ -46,20 +55,39 @@ fn main() {
                 "\nBNN >= NN at large shrink ratios (>=256): {bnn_wins_small}/{total_small} \
                  (paper Fig 6: BNN wins as training data shrinks)"
             );
+            true
         }
-        Err(_) => println!("fig6.json not built — run `make fig6` (trains 20 models)"),
-    }
+        Err(_) => {
+            println!("fig6.json not built — run `make fig6` (trains 20 models)");
+            false
+        }
+    };
 
     // Rust-side protocol costs.
     println!("\nprotocol micro-benchmarks:");
     let mut synth = Synthesizer::new(SynthSpec::mnist());
-    let m = bench("synthesize 1000 images", 1, 5, || {
+    let m_synth = bench("synthesize 1000 images", 1, 5, || {
         std::hint::black_box(synth.dataset(1000));
     });
-    println!("  {m}");
+    println!("  {m_synth}");
     let pool = Synthesizer::new(SynthSpec::mnist()).dataset(5000);
-    let m = bench("shrink_subset ratio=256", 1, 20, || {
+    let m_shrink = bench("shrink_subset ratio=256", 1, 20, || {
         std::hint::black_box(shrink_subset(&pool, 256, 60_000, 7));
     });
-    println!("  {m}");
+    println!("  {m_shrink}");
+
+    common::emit_bench_json(
+        "fig6",
+        &common::json_doc(
+            "fig6",
+            &[
+                ("have_artifacts", have_artifacts.to_string()),
+                ("bnn_wins_large_ratio", bnn_wins_small.to_string()),
+                ("total_large_ratio", total_small.to_string()),
+                ("synthesize_1000_ms", format!("{:.4}", m_synth.mean_ms())),
+                ("shrink_subset_ms", format!("{:.4}", m_shrink.mean_ms())),
+            ],
+            &rows,
+        ),
+    );
 }

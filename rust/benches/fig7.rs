@@ -3,6 +3,10 @@
 //! Sweeps α over the DM-BNN organization, asserts monotonicity (the
 //! figure's claim) and prints the β-SRAM share so the mechanism is
 //! visible; also times the hwsim evaluation itself.
+//!
+//! Emits `BENCH_fig7.json` at the repo root (shared `common` emitter).
+
+mod common;
 
 use bayesdm::hwsim::arch::{AcceleratorConfig, Organization};
 use bayesdm::hwsim::report::{fig7_rows, render_fig7};
@@ -54,4 +58,17 @@ fn main() {
         ));
     });
     println!("\n{m}");
+
+    let rendered: Vec<String> = rows
+        .iter()
+        .map(|r| format!("{{\"alpha\": {}, \"area_mm2\": {:.4}}}", r.alpha, r.area_mm2))
+        .collect();
+    common::emit_bench_json(
+        "fig7",
+        &common::json_doc(
+            "fig7",
+            &[("simulate_ms", format!("{:.4}", m.mean_ms()))],
+            &rendered,
+        ),
+    );
 }

@@ -1,0 +1,293 @@
+//! Bench: density-dispatched sparse sweeps + the bit-packed ±1 sign
+//! backend, against their dense counterparts.
+//!
+//! Section 1 sweeps activation density over the f32 DM layer: for each
+//! density the sparse path (index build **included** in the timing, as
+//! the dispatch pays it per layer call) is first asserted bit-identical
+//! to the dense blocked sweep — logits and logical op counts — then
+//! timed.  The measured crossover (largest tested density where sparse
+//! is at least as fast as dense) is reported, and the bench asserts the
+//! sparse win is ≥ 1.5× somewhere at ≥ 70% sparsity (density ≤ 0.30).
+//!
+//! Section 2 times the packed ±1 XOR/popcount backend against the i8
+//! fixed-point kernels on all-±1 tensors at the frac-0 format, where the
+//! two are exact over the same arithmetic (see DESIGN.md §14); parity is
+//! asserted first, then the packed path must win by ≥ 2×.
+//!
+//! Emits `BENCH_sparsity.json` at the repo root (shared `common` emitter).
+
+mod common;
+
+use std::time::Duration;
+
+use bayesdm::dataset::LayerPosterior;
+use bayesdm::fixed::{sign_dm_layer, sign_precompute, SignBits, SignLayer, SignMatrix, SIGN_FMT};
+use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+use bayesdm::nn::fixed_infer::QLayer;
+use bayesdm::nn::kernels::{
+    build_sparse_index, dm_layer_blocked, dm_layer_sparse, q_dm_layer_banked, q_precompute,
+};
+use bayesdm::nn::linear::precompute;
+use bayesdm::nn::plan::TileGeometry;
+use bayesdm::nn::simd::{self, LANES};
+use bayesdm::opcount::OpCounter;
+use bayesdm::util::bench::{bench_for, header};
+
+const VOTERS: usize = 8;
+const M: usize = 256;
+const N: usize = 1024;
+const DENSITIES: [f64; 8] = [1.0, 0.9, 0.7, 0.5, 0.3, 0.1, 0.05, 0.01];
+
+/// Input with exactly `nnz` nonzero coordinates: positions from a
+/// full-period stride walk (769 is odd, hence coprime with N = 1024),
+/// values offset so they are never exactly zero.
+fn input_at(nnz: usize, seed: u64) -> Vec<f32> {
+    let mut r = XorShift128Plus::new(seed);
+    let mut x = vec![0.0f32; N];
+    for k in 0..nnz {
+        x[(k * 769) % N] = 0.1 + r.next_f32();
+    }
+    x
+}
+
+fn layer(seed: u64) -> LayerPosterior {
+    let mut r = XorShift128Plus::new(seed);
+    LayerPosterior {
+        m: M,
+        n: N,
+        mu: (0..M * N).map(|_| r.next_f32() - 0.5).collect(),
+        sigma: (0..M * N).map(|_| 0.01 + 0.05 * r.next_f32()).collect(),
+        mu_b: (0..M).map(|_| r.next_f32() - 0.5).collect(),
+        sigma_b: (0..M).map(|_| 0.01 + 0.05 * r.next_f32()).collect(),
+    }
+}
+
+fn pm1(len: usize, r: &mut XorShift128Plus) -> Vec<i8> {
+    (0..len).map(|_| if r.next_u64() & 1 == 0 { 1i8 } else { -1 }).collect()
+}
+
+struct Row {
+    density: f64,
+    nnz: usize,
+    dense_ms: f64,
+    sparse_ms: f64,
+    speedup: f64,
+}
+
+fn main() {
+    header("Sparsity — density-dispatched sparse sweeps + packed ±1 sign backend");
+    println!("kernel: {}  shape {M}x{N}, {VOTERS} voters\n", simd::isa_label());
+    let budget = Duration::from_millis(300);
+
+    // ---- Section 1: f32 DM layer, density sweep ------------------------
+    let l = layer(0x5A7A);
+    let mut r = XorShift128Plus::new(7);
+    let bank: Vec<(Vec<f32>, Vec<f32>)> = (0..VOTERS)
+        .map(|_| {
+            (
+                (0..M * N).map(|_| r.next_f32() * 2.0 - 1.0).collect(),
+                (0..M).map(|_| r.next_f32() * 2.0 - 1.0).collect(),
+            )
+        })
+        .collect();
+    let block_rows = M.min(64);
+    let tiles = TileGeometry::default();
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (di, &density) in DENSITIES.iter().enumerate() {
+        let nnz = ((N as f64) * density).round() as usize;
+        let x = input_at(nnz, 0xD0 + di as u64);
+        let mut beta = vec![0.0f32; M * N];
+        let mut eta = vec![0.0f32; M];
+        let mut ops = OpCounter::default();
+        precompute(&l, &x, &mut beta, &mut eta, &mut ops);
+
+        let mut nzmask = vec![0u64; N.div_ceil(64)];
+        let mut spidx = vec![0i32; N + LANES];
+
+        // parity gate before timing: sparse must be bit-identical to the
+        // dense blocked sweep with the same logical op counts
+        let mut want = vec![0.0f32; VOTERS * M];
+        let mut dense_ops = OpCounter::default();
+        dm_layer_blocked(
+            &l,
+            &beta,
+            &eta,
+            &bank,
+            block_rows,
+            tiles,
+            true,
+            &mut want,
+            &mut dense_ops,
+        );
+        if let Some((idx_rows, got_nnz)) = build_sparse_index(&x, &mut nzmask, &mut spidx) {
+            assert_eq!(got_nnz, nnz, "index nnz mismatch at density {density}");
+            let mut got = vec![0.0f32; VOTERS * M];
+            let mut sparse_ops = OpCounter::default();
+            dm_layer_sparse(
+                &l,
+                &beta,
+                &eta,
+                &bank,
+                true,
+                &mut got,
+                &spidx[..idx_rows * LANES],
+                nnz,
+                &mut sparse_ops,
+            );
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "density {density}: sparse logits must match");
+            assert_eq!(sparse_ops.muls, dense_ops.muls, "density {density}: logical muls moved");
+            assert_eq!(sparse_ops.adds, dense_ops.adds, "density {density}: logical adds moved");
+        }
+
+        let mut ys = vec![0.0f32; VOTERS * M];
+        let m_dense = bench_for(&format!("dense  density={density:<4}"), budget, || {
+            let mut ops = OpCounter::default();
+            dm_layer_blocked(&l, &beta, &eta, &bank, block_rows, tiles, true, &mut ys, &mut ops);
+            std::hint::black_box(&mut ys);
+        });
+        // sparse timing includes the per-call index build, exactly as the
+        // runtime dispatch pays it
+        let m_sparse = bench_for(&format!("sparse density={density:<4}"), budget, || {
+            let mut ops = OpCounter::default();
+            match build_sparse_index(&x, &mut nzmask, &mut spidx) {
+                Some((idx_rows, nz)) => dm_layer_sparse(
+                    &l,
+                    &beta,
+                    &eta,
+                    &bank,
+                    true,
+                    &mut ys,
+                    &spidx[..idx_rows * LANES],
+                    nz,
+                    &mut ops,
+                ),
+                None => dm_layer_blocked(
+                    &l,
+                    &beta,
+                    &eta,
+                    &bank,
+                    block_rows,
+                    tiles,
+                    true,
+                    &mut ys,
+                    &mut ops,
+                ),
+            }
+            std::hint::black_box(&mut ys);
+        });
+        let speedup = m_dense.mean.as_secs_f64() / m_sparse.mean.as_secs_f64();
+        println!(
+            "  density {density:<4} (nnz {nnz:>4}): dense {:>8.3} ms | sparse {:>8.3} ms  \
+             ({speedup:4.2}x)\n",
+            m_dense.mean_ms(),
+            m_sparse.mean_ms()
+        );
+        rows.push(Row {
+            density,
+            nnz,
+            dense_ms: m_dense.mean_ms(),
+            sparse_ms: m_sparse.mean_ms(),
+            speedup,
+        });
+    }
+
+    let crossover = rows
+        .iter()
+        .filter(|r| r.speedup >= 1.0)
+        .map(|r| r.density)
+        .fold(0.0f64, f64::max);
+    println!("measured crossover density: {crossover} (largest density where sparse >= dense)\n");
+
+    // ---- Section 2: packed ±1 sign backend vs i8 fixed-point -----------
+    let mut r = XorShift128Plus::new(0x516);
+    let q = QLayer {
+        m: M,
+        n: N,
+        mu: pm1(M * N, &mut r),
+        sigma: pm1(M * N, &mut r),
+        mu_b: pm1(M, &mut r),
+        sigma_b: pm1(M, &mut r),
+        wfmt: SIGN_FMT,
+    };
+    let xq = pm1(N, &mut r);
+    let qbank: Vec<(Vec<i8>, Vec<i8>)> =
+        (0..VOTERS).map(|_| (pm1(M * N, &mut r), pm1(M, &mut r))).collect();
+    let sl = SignLayer::binarize(&q);
+    let xs = SignBits::pack(&xq);
+    let sbank: Vec<(SignMatrix, Vec<i8>)> =
+        qbank.iter().map(|(h, hb)| (SignMatrix::pack_rows(h, M, N), hb.clone())).collect();
+
+    // parity gate: the packed path must reproduce the i8 kernels exactly
+    let mut qbeta = vec![0i8; M * N];
+    let mut qeta = vec![0i8; M];
+    q_precompute(&q, SIGN_FMT, &xq, &mut qbeta, &mut qeta);
+    let mut want = vec![0i8; VOTERS * M];
+    q_dm_layer_banked(&q, SIGN_FMT, &qbeta, &qeta, &qbank, block_rows, true, &mut want);
+    let mut sbeta = SignMatrix::zeroed(M, N);
+    let mut seta = vec![0i8; M];
+    sign_precompute(&sl, &xs, &mut sbeta, &mut seta);
+    let mut got = vec![0i8; VOTERS * M];
+    sign_dm_layer(&sl, &sbeta, &seta, &sbank, true, &mut got);
+    assert_eq!(got, want, "packed sign sweep must match the i8 kernels exactly");
+
+    let mut ys = vec![0i8; VOTERS * M];
+    let m_i8 = bench_for("i8 fixed  precompute+sweep", budget, || {
+        q_precompute(&q, SIGN_FMT, &xq, &mut qbeta, &mut qeta);
+        q_dm_layer_banked(&q, SIGN_FMT, &qbeta, &qeta, &qbank, block_rows, true, &mut ys);
+        std::hint::black_box(&mut ys);
+    });
+    let m_sign = bench_for("packed ±1 precompute+sweep", budget, || {
+        sign_precompute(&sl, &xs, &mut sbeta, &mut seta);
+        sign_dm_layer(&sl, &sbeta, &seta, &sbank, true, &mut ys);
+        std::hint::black_box(&mut ys);
+    });
+    let sign_speedup = m_i8.mean.as_secs_f64() / m_sign.mean.as_secs_f64();
+    println!(
+        "  packed sign: i8 {:>8.3} ms | packed {:>8.3} ms  ({sign_speedup:4.2}x)\n",
+        m_i8.mean_ms(),
+        m_sign.mean_ms()
+    );
+
+    let rendered: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"density\": {}, \"nnz\": {}, \"dense_ms\": {:.4}, \"sparse_ms\": {:.4}, \
+                 \"speedup\": {:.3}}}",
+                r.density, r.nnz, r.dense_ms, r.sparse_ms, r.speedup
+            )
+        })
+        .collect();
+    common::emit_bench_json(
+        "sparsity",
+        &common::json_doc(
+            "sparsity",
+            &[
+                ("isa", format!("\"{}\"", simd::isa_label())),
+                ("m", M.to_string()),
+                ("n", N.to_string()),
+                ("voters", VOTERS.to_string()),
+                ("crossover_density", format!("{crossover}")),
+                ("packed_sign_speedup", format!("{sign_speedup:.3}")),
+            ],
+            &rendered,
+        ),
+    );
+
+    let best_low_density =
+        rows.iter().filter(|r| r.density <= 0.30).map(|r| r.speedup).fold(0.0f64, f64::max);
+    assert!(
+        best_low_density >= 1.5,
+        "acceptance: sparse must be >= 1.5x dense somewhere at density <= 0.30, \
+         best measured {best_low_density:.2}x"
+    );
+    println!("OK: >= 1.5x over dense at >= 70% activation sparsity");
+    assert!(
+        sign_speedup >= 2.0,
+        "acceptance: packed ±1 backend must be >= 2x the i8 kernels, measured \
+         {sign_speedup:.2}x"
+    );
+    println!("OK: >= 2x over the i8 fixed-point kernels on the packed ±1 path");
+}

@@ -4,6 +4,10 @@
 //! (M=200, N=784) across T, verifies the instrumented dataflows match
 //! the closed forms exactly, and times the two single-layer dataflows to
 //! show the measured speedup tracks the 2-cycle-MUL model's prediction.
+//!
+//! Emits `BENCH_table3.json` at the repo root (shared `common` emitter).
+
+mod common;
 
 use bayesdm::dataset::LayerPosterior;
 use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
@@ -75,5 +79,24 @@ fn main() {
         / table3_dm(m as u64, n as u64, t as u64).weighted_cycles() as f64;
     println!(
         "\n  measured speedup {speedup:.2}x (paper's weighted-cycle model predicts {predicted:.2}x)"
+    );
+
+    let rows: Vec<String> = [3u64, 10, 100, 1000, 100000]
+        .iter()
+        .map(|&t| format!("{{\"t\": {t}, \"dm_mul_ratio\": {:.6}}}", dm_mul_ratio(t)))
+        .collect();
+    common::emit_bench_json(
+        "table3",
+        &common::json_doc(
+            "table3",
+            &[
+                ("m", m.to_string()),
+                ("n", n.to_string()),
+                ("t", t.to_string()),
+                ("measured_speedup", format!("{speedup:.3}")),
+                ("predicted_speedup", format!("{predicted:.3}")),
+            ],
+            &rows,
+        ),
     );
 }

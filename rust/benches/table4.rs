@@ -6,6 +6,10 @@
 //! #MUL/#ADD — which must equal the analytic model — and per-image time.
 //!
 //! Requires `make artifacts` (skips politely otherwise).
+//!
+//! Emits `BENCH_table4.json` at the repo root (shared `common` emitter).
+
+mod common;
 
 use bayesdm::dataset::{load_images, load_weights};
 use bayesdm::grng::uniform::XorShift128Plus;
@@ -20,6 +24,10 @@ fn main() {
     header("Table IV — software implementation results");
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("SKIP: run `make artifacts` first");
+        common::emit_bench_json(
+            "table4",
+            &common::json_doc("table4", &[("have_artifacts", "false".into())], &[]),
+        );
         return;
     }
     let weights = load_weights("artifacts/weights_mnist_bnn.bin").unwrap();
@@ -47,6 +55,7 @@ fn main() {
     ];
 
     let mut accs: Vec<Option<f64>> = Vec::new();
+    let mut rows: Vec<String> = Vec::new();
     println!("evaluating {n} test images per method (pure-rust reference):\n");
     println!(
         "  {:<14} {:>9} {:>12} {:>12} {:>10} {:>12}",
@@ -80,10 +89,25 @@ fn main() {
             if measured == want { "exact" } else { "MISMATCH" },
         );
         assert_eq!(measured, want, "instrumented counts must equal the model");
+        rows.push(format!(
+            "{{\"method\": \"{name}\", \"accuracy\": {acc:.4}, \"muls\": {}, \"adds\": {}, \
+             \"ms_per_img\": {:.2}}}",
+            measured.muls,
+            measured.adds,
+            dt.as_millis() as f64 / n as f64
+        ));
     }
 
     println!("\nanalytic table (accuracy columns = measured above):");
     println!("{}", render_table4(&table4_rows(), &accs));
     println!("paper reference: 96.73% / 96.73% / 96.7%, 39.8 / 24.2 / 6.9 Mmul");
     println!("(DM-BNN MULs land at ~9.1e6 under exact fan-out accounting — see DESIGN.md §6)");
+    common::emit_bench_json(
+        "table4",
+        &common::json_doc(
+            "table4",
+            &[("have_artifacts", "true".into()), ("images", n.to_string())],
+            &rows,
+        ),
+    );
 }

@@ -5,6 +5,10 @@
 //! with the quantized functional model — the full Table V row set, plus
 //! the ratio columns the paper's abstract quotes (−73 % energy, 4×
 //! speedup, +14 % area).
+//!
+//! Emits `BENCH_table5.json` at the repo root (shared `common` emitter).
+
+mod common;
 
 use bayesdm::dataset::{load_images, load_weights};
 use bayesdm::grng::uniform::XorShift128Plus;
@@ -57,4 +61,27 @@ fn main() {
     println!("  Standard 95.42%  5.76 mm²  172 µJ  392 µs");
     println!("  Hybrid   95.42%  7.33 mm²  122 µJ  259 µs  (−29% E, 1.5×)");
     println!("  DM-BNN   95.35%  6.63 mm²   46 µJ   97 µs  (−73% E, 4.0×)");
+
+    let rendered: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"method\": \"{}\", \"accuracy\": {}, \"area_mm2\": {:.4}, \
+                 \"energy_uj\": {:.2}, \"runtime_us\": {:.2}}}",
+                r.method,
+                r.accuracy.map_or("null".to_string(), |a| format!("{a:.4}")),
+                r.area_mm2,
+                r.energy_uj,
+                r.runtime_us
+            )
+        })
+        .collect();
+    common::emit_bench_json(
+        "table5",
+        &common::json_doc(
+            "table5",
+            &[("have_artifacts", have_artifacts.to_string())],
+            &rendered,
+        ),
+    );
 }

@@ -367,6 +367,9 @@ impl ClusterRouter {
         s.cache = self.service.as_ref().map(|svc| svc.stats());
         s.memo = self.memo.as_ref().map(|m| m.stats());
         s.shards = self.shard_breakdown();
+        // Shard engines share the process-wide sparse-dispatch counters,
+        // so any one engine reports the deployment-wide view.
+        s.sparsity = self.engines.first().and_then(|e| e.sparsity_stats());
         s
     }
 }
@@ -432,6 +435,7 @@ mod tests {
             shards: 1,
             memo: MemoConfig::disabled(),
             snapshot: None,
+            sparse_threshold: None,
         }
     }
 

@@ -166,6 +166,28 @@ pub struct EngineConfig {
     /// deployment start, written at shutdown (`cluster::snapshot`).
     /// `None` (the default) disables persistence.
     pub snapshot: Option<String>,
+    /// Activation-sparsity crossover threshold baked into every compiled
+    /// plan (`DataflowPlan::with_sparsity`): layer sweeps whose input has
+    /// a nonzero density at or below it run the sparse gather kernels.
+    /// `None` (the default; `BAYESDM_SPARSE_THRESHOLD` env toggle, CLI
+    /// `--sparse-threshold`) keeps every sweep on the dense kernels.
+    /// Results are bit-identical either way — like `alpha`, this shapes
+    /// the instruction stream, not the math — and
+    /// `--force-dense`/`BAYESDM_FORCE_DENSE` overrides it for parity
+    /// testing.
+    pub sparse_threshold: Option<f32>,
+}
+
+/// The `BAYESDM_SPARSE_THRESHOLD` env toggle behind
+/// [`EngineConfig::default`]: a density in [0, 1] enables sparse
+/// dispatch at that crossover; unset, empty or unparsable leaves it off.
+pub fn sparse_threshold_from_env() -> Option<f32> {
+    let v = std::env::var("BAYESDM_SPARSE_THRESHOLD").ok()?;
+    let v = v.trim();
+    if v.is_empty() {
+        return None;
+    }
+    v.parse::<f32>().ok().filter(|t| t.is_finite())
 }
 
 impl Default for EngineConfig {
@@ -179,6 +201,7 @@ impl Default for EngineConfig {
             shards: shards_from_env(),
             memo: MemoConfig::from_env(),
             snapshot: None,
+            sparse_threshold: sparse_threshold_from_env(),
         }
     }
 }
@@ -190,6 +213,7 @@ pub struct Engine {
     seed: u64,
     seed_schedule: SeedSchedule,
     alpha: f64,
+    sparse_threshold: Option<f32>,
     /// Decomposition-cache lease: a private cache for a standalone engine
     /// (`Engine::new`), or one slice of a cluster's shared
     /// `CacheService` (`Engine::with_cache_lease`).
@@ -223,6 +247,7 @@ impl Engine {
             seed: cfg.seed,
             seed_schedule: cfg.seed_schedule,
             alpha: cfg.alpha,
+            sparse_threshold: cfg.sparse_threshold,
             cache,
             plans: Mutex::new(HashMap::new()),
             scratch: ScratchPool::new(),
@@ -282,10 +307,27 @@ impl Engine {
         crate::nn::simd::isa_label()
     }
 
-    /// Serving metrics with the cache counters folded in.
+    /// Sparse-dispatch counters, `None` when no sparsity threshold is
+    /// configured.  The counters are process-wide, so on a multi-engine
+    /// deployment they aggregate across engines.
+    pub fn sparsity_stats(&self) -> Option<super::metrics::SparsityStats> {
+        let thr = self.sparse_threshold?;
+        let (sparse, dense, permille_sum) = crate::nn::kernels::sparsity_counters();
+        Some(super::metrics::SparsityStats {
+            threshold_permille: (thr.clamp(0.0, 1.0) * 1000.0) as u64,
+            sparse_sweeps: sparse,
+            dense_sweeps: dense,
+            mean_density_permille: permille_sum / (sparse + dense).max(1),
+        })
+    }
+
+    /// Serving metrics with the cache counters folded in, plus the
+    /// sparse-dispatch counters when this engine has a sparsity
+    /// threshold configured.
     pub fn metrics_summary(&self) -> MetricsSummary {
         let mut s = self.metrics.summary();
         s.cache = self.cache_stats();
+        s.sparsity = self.sparsity_stats();
         s
     }
 
@@ -302,7 +344,10 @@ impl Engine {
         if let Some(p) = plans.get(method) {
             return p.clone();
         }
-        let p = Arc::new(DataflowPlan::with_alpha(&self.model, method, self.alpha));
+        let p = Arc::new(
+            DataflowPlan::with_alpha(&self.model, method, self.alpha)
+                .with_sparsity(self.sparse_threshold),
+        );
         if plans.len() < MAX_MEMOIZED_PLANS {
             plans.insert(method.clone(), p.clone());
         }
@@ -590,6 +635,49 @@ mod tests {
         // while distinct content still draws distinct banks
         let a_ys = a.evaluate_batch(&ys, &Method::Standard { t: 3 });
         assert_ne!(a_xs.logits, a_ys.logits);
+    }
+
+    #[test]
+    fn sparse_threshold_engine_is_bit_identical_and_surfaces_stats() {
+        let mk = |thr: Option<f32>| {
+            Engine::new(
+                BnnModel::synthetic(&[16, 12, 8, 5], 11),
+                EngineConfig {
+                    workers: 2,
+                    seed: 0xFEED,
+                    sparse_threshold: thr,
+                    ..EngineConfig::default()
+                },
+            )
+        };
+        let plain = mk(None);
+        let sparse = mk(Some(0.9));
+        // zero-heavy inputs so the sparse path actually engages
+        let mut xs = inputs(5, 16, 21);
+        for x in xs.iter_mut() {
+            for v in x.iter_mut().step_by(2) {
+                *v = 0.0;
+            }
+        }
+        for m in [
+            Method::Standard { t: 3 },
+            Method::Hybrid { t: 3 },
+            Method::DmBnn { schedule: vec![2, 2, 1] },
+        ] {
+            let a = plain.evaluate_batch_seeded(&xs, &m, 909);
+            let b = sparse.evaluate_batch_seeded(&xs, &m, 909);
+            assert_eq!(a.logits, b.logits, "{m:?}");
+            assert_eq!(a.ops.muls, b.ops.muls, "{m:?}");
+            assert_eq!(a.ops.adds, b.ops.adds, "{m:?}");
+        }
+        assert_eq!(plain.metrics_summary().sparsity, None);
+        let stats = sparse.metrics_summary().sparsity.expect("threshold configured");
+        assert_eq!(stats.threshold_permille, 900);
+        if !crate::nn::kernels::dense_is_forced() {
+            // counters are process-global; sibling tests only add to them
+            assert!(stats.sparse_sweeps + stats.dense_sweeps > 0, "{stats}");
+            assert!(stats.mean_density_permille <= 1000, "{stats}");
+        }
     }
 
     #[test]

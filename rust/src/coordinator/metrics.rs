@@ -100,8 +100,39 @@ impl Metrics {
             isa: crate::nn::simd::isa_label(),
             cache: None,
             memo: None,
+            sparsity: None,
             shards: Vec::new(),
         }
+    }
+}
+
+/// Sparse-dispatch counters (`nn::kernels` activation-sparsity path),
+/// filled in by `Engine::metrics_summary` when a crossover threshold is
+/// configured.  The underlying counters are process-wide, so on a
+/// multi-engine deployment this is the aggregate across engines.
+/// Densities are reported in permille (integer fields keep
+/// [`MetricsSummary`] `Eq`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SparsityStats {
+    /// The configured crossover threshold, in permille of nonzero density
+    /// (sweeps at or below it run the sparse kernels).
+    pub threshold_permille: u64,
+    /// Layer sweeps dispatched to the sparse gather kernels.
+    pub sparse_sweeps: u64,
+    /// Layer sweeps that stayed on the dense blocked kernels.
+    pub dense_sweeps: u64,
+    /// Mean nonzero density of all measured activations, in permille.
+    pub mean_density_permille: u64,
+}
+
+impl std::fmt::Display for SparsityStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "threshold={}‰ sparse={} dense={} mean_density={}‰",
+            self.threshold_permille, self.sparse_sweeps, self.dense_sweeps,
+            self.mean_density_permille
+        )
     }
 }
 
@@ -129,6 +160,10 @@ pub struct MetricsSummary {
     /// Response-memoization counters (`cluster::memo`), when a
     /// memo-enabled cluster produced this summary.
     pub memo: Option<MemoStats>,
+    /// Sparse-dispatch counters, when the producing engine had an
+    /// activation-sparsity threshold configured
+    /// (`--sparse-threshold`/`BAYESDM_SPARSE_THRESHOLD`).
+    pub sparsity: Option<SparsityStats>,
     /// Per-shard request/cache-attribution breakdown (empty for
     /// single-engine deployments).
     pub shards: Vec<ShardBreakdown>,
@@ -179,6 +214,14 @@ impl MetricsSummary {
             mo.insert("adds_avoided".to_string(), num(m.adds_avoided));
             o.insert("memo".to_string(), Json::Obj(mo));
         }
+        if let Some(sp) = &self.sparsity {
+            let mut so = BTreeMap::new();
+            so.insert("threshold_permille".to_string(), num(sp.threshold_permille));
+            so.insert("sparse_sweeps".to_string(), num(sp.sparse_sweeps));
+            so.insert("dense_sweeps".to_string(), num(sp.dense_sweeps));
+            so.insert("mean_density_permille".to_string(), num(sp.mean_density_permille));
+            o.insert("sparsity".to_string(), Json::Obj(so));
+        }
         if !self.shards.is_empty() {
             let shards = self
                 .shards
@@ -221,6 +264,9 @@ impl std::fmt::Display for MetricsSummary {
         }
         if let Some(m) = &self.memo {
             write!(f, "  memo[{m}]")?;
+        }
+        if let Some(sp) = &self.sparsity {
+            write!(f, "  sparsity[{sp}]")?;
         }
         for b in &self.shards {
             write!(f, "  {b}")?;
@@ -394,6 +440,33 @@ mod tests {
         let empty = Metrics::new().summary().to_json();
         assert_eq!(empty.get("p50_us"), Some(&Json::Null));
         assert_eq!(empty.get("cache"), None);
+    }
+
+    #[test]
+    fn sparsity_section_renders_only_when_present() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(9), 1);
+        let mut s = m.summary();
+        assert!(!s.to_string().contains("sparsity["), "no sparsity line when None");
+        assert_eq!(s.to_json().get("sparsity"), None);
+        s.sparsity = Some(SparsityStats {
+            threshold_permille: 400,
+            sparse_sweeps: 7,
+            dense_sweeps: 3,
+            mean_density_permille: 250,
+        });
+        let text = s.to_string();
+        assert!(text.contains("sparsity[threshold=400‰ sparse=7 dense=3"), "{text}");
+        let j = s.to_json();
+        let sp = j.get("sparsity").expect("sparsity section");
+        assert_eq!(sp.get("sparse_sweeps").and_then(Json::as_usize), Some(7));
+        assert_eq!(sp.get("dense_sweeps").and_then(Json::as_usize), Some(3));
+        assert_eq!(sp.get("mean_density_permille").and_then(Json::as_usize), Some(250));
+        let back = Json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(
+            back.get("sparsity").and_then(|c| c.get("threshold_permille")).and_then(Json::as_usize),
+            Some(400)
+        );
     }
 
     #[test]

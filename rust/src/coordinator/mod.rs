@@ -41,6 +41,7 @@ pub mod vote;
 pub use crate::nn::dmcache::{CacheConfig, CacheStats};
 pub use crate::nn::plan::{DataflowPlan, LogitBatch, LogitStack};
 pub use engine::{Engine, EngineConfig, SeedSchedule};
+pub use metrics::{Metrics, MetricsSummary, SparsityStats};
 #[cfg(feature = "pjrt")]
 pub use exec::Executor;
 pub use plan::{InferenceMethod, PlanSummary};

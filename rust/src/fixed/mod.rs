@@ -7,8 +7,17 @@
 //! error analysis used by the `hwsim` functional model and the Table V
 //! accuracy column.
 
+//! [`signpack`] is the cheapest point on that curve: ±1 weight signs
+//! packed 64-per-u64 with XOR/popcount dot products, exact against the
+//! i8 kernels on sign-binarized models (see its module docs).
+
 pub mod q;
 pub mod quantize;
+pub mod signpack;
 
 pub use q::{Fx, QFormat};
 pub use quantize::{dequantize_vec, quantize_vec, QuantStats};
+pub use signpack::{
+    sign_dm_layer, sign_dot, sign_i8, sign_precompute, sign_xor_into, SignBits, SignLayer,
+    SignMatrix, SignModel, SIGN_FMT,
+};

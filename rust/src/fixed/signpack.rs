@@ -1,0 +1,452 @@
+//! Bit-packed ±1 sign inference — the XOR/popcount datapath.
+//!
+//! The cheapest point on the quantization curve collapses every weight to
+//! its sign.  A ±1 value needs one bit (1 ⇔ negative), 64 of them pack
+//! into a `u64`, and a ±1·±1 dot product becomes pure bit arithmetic:
+//!
+//! ```text
+//! a·b = Σ aⱼ·bⱼ = (#agreeing signs) − (#disagreeing) = n − 2·popcount(a ⊕ b)
+//! ```
+//!
+//! [`sign_dot`] is therefore the `q_dot`-shaped primitive of this module,
+//! and the DM schedule's β precompute degenerates to a word-wise XOR:
+//! β = σ∘x has sign σ ⊕ x and magnitude 1, so [`sign_precompute`] builds a
+//! whole β *row* with `n/64` XORs instead of `n` multiplies.
+//!
+//! # Exactness against the i8 path
+//!
+//! This is a **mode**, not an approximation of the general i8 kernels: on
+//! a fully sign-binarized model (every tensor entry ±1) evaluated at
+//! zero-fraction formats (`SIGN_FMT`, so every barrel shift in the i8
+//! kernels is by 0), [`sign_precompute`]/[`sign_dm_layer`] reproduce
+//! `q_precompute`/`q_dm_layer_banked` bit for bit:
+//!
+//! - β: `q_scale_store` computes `clamp(σⱼ·xⱼ >> 0)` = ±1, whose sign bit
+//!   is exactly `σbit ⊕ xbit`.
+//! - η: `requantize(q_dot(μ, x), 0 frac, 0 frac)` = `clamp(μ·x)` =
+//!   `sign_dot(μ, x)` clamped to i8.
+//! - per row: the banked kernel's `z = ⟨H, β⟩ >> 0` is `sign_dot(h, β)`,
+//!   its bias term `hb·σ_b + (μ_b << 0) >> 0` is the same i32 arithmetic,
+//!   and the writeback clamp+ReLU are copied verbatim.
+//!
+//! The tests below pin that equivalence layer-by-layer and end-to-end.
+//! Like the rest of the crate's kernel families this path is opt-in: it
+//! is only reached through the `Sign*` types, never by dispatch.
+
+use crate::fixed::q::QFormat;
+use crate::nn::fixed_infer::{QBnnModel, QLayer};
+
+/// Zero-fraction 8-bit format: raw i8 integers, every requantize shift a
+/// no-op.  The format sign-binarized models live in.
+pub const SIGN_FMT: QFormat = QFormat { int_bits: 7, frac_bits: 0 };
+
+/// Sign-binarize an i8 slice: negative → −1, everything else (incl. 0)
+/// → +1, matching the packing convention bit=1 ⇔ negative.
+pub fn sign_i8(v: &[i8]) -> Vec<i8> {
+    v.iter().map(|&a| if a < 0 { -1i8 } else { 1 }).collect()
+}
+
+/// A ±1 vector packed 64 signs per word: bit `j % 64` of word `j / 64`
+/// is 1 iff element `j` is negative (0 counts as +1).  Tail bits beyond
+/// `n` are zero, so word-wise XORs of two packs never light them and
+/// [`sign_dot`] needs no tail mask.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SignBits {
+    pub n: usize,
+    pub words: Vec<u64>,
+}
+
+impl SignBits {
+    pub fn pack(v: &[i8]) -> Self {
+        let n = v.len();
+        let mut words = vec![0u64; n.div_ceil(64)];
+        for (j, &a) in v.iter().enumerate() {
+            if a < 0 {
+                words[j / 64] |= 1u64 << (j % 64);
+            }
+        }
+        Self { n, words }
+    }
+}
+
+/// A row-major matrix of packed sign rows; each row starts on its own
+/// word boundary (`words_per_row` = ⌈n/64⌉) so row slices are plain
+/// word-aligned subslices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SignMatrix {
+    pub rows: usize,
+    pub n: usize,
+    words: Vec<u64>,
+}
+
+impl SignMatrix {
+    pub fn words_per_row(&self) -> usize {
+        self.n.div_ceil(64)
+    }
+
+    /// Pack `rows` rows of `n` signs from a row-major i8 matrix.
+    pub fn pack_rows(data: &[i8], rows: usize, n: usize) -> Self {
+        assert_eq!(data.len(), rows * n);
+        let wpr = n.div_ceil(64);
+        let mut words = vec![0u64; rows * wpr];
+        for i in 0..rows {
+            for j in 0..n {
+                if data[i * n + j] < 0 {
+                    words[i * wpr + j / 64] |= 1u64 << (j % 64);
+                }
+            }
+        }
+        Self { rows, n, words }
+    }
+
+    /// An all-(+1) matrix, e.g. scratch for [`sign_precompute`] output.
+    pub fn zeroed(rows: usize, n: usize) -> Self {
+        Self { rows, n, words: vec![0u64; rows * n.div_ceil(64)] }
+    }
+
+    pub fn row(&self, i: usize) -> &[u64] {
+        let wpr = self.words_per_row();
+        &self.words[i * wpr..(i + 1) * wpr]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [u64] {
+        let wpr = self.words_per_row();
+        &mut self.words[i * wpr..(i + 1) * wpr]
+    }
+}
+
+/// ±1 dot product over packed signs: `n − 2·popcount(a ⊕ b)`.  Exact for
+/// any `n` ≤ i32::MAX; the tail-bit invariant (see [`SignBits`]) makes
+/// the word loop maskless.
+#[inline]
+pub fn sign_dot(a: &[u64], b: &[u64], n: usize) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), n.div_ceil(64));
+    let mut neg = 0u32;
+    for (x, y) in a.iter().zip(b) {
+        neg += (x ^ y).count_ones();
+    }
+    n as i32 - 2 * neg as i32
+}
+
+/// Word-wise sign multiply: `out = a ⊕ b` (the sign of a ±1 product is
+/// the XOR of the operand signs).
+#[inline]
+pub fn sign_xor_into(a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for (o, (x, y)) in out.iter_mut().zip(a.iter().zip(b)) {
+        *o = x ^ y;
+    }
+}
+
+/// A layer posterior with every tensor collapsed to packed signs — the
+/// sign-mode counterpart of [`QLayer`].
+#[derive(Debug, Clone)]
+pub struct SignLayer {
+    pub m: usize,
+    pub n: usize,
+    pub mu: SignMatrix,
+    pub sigma: SignMatrix,
+    pub mu_b: Vec<i8>,
+    pub sigma_b: Vec<i8>,
+}
+
+impl SignLayer {
+    /// Collapse a quantized layer to its weight signs (±1, zero → +1).
+    pub fn binarize(q: &QLayer) -> Self {
+        Self {
+            m: q.m,
+            n: q.n,
+            mu: SignMatrix::pack_rows(&q.mu, q.m, q.n),
+            sigma: SignMatrix::pack_rows(&q.sigma, q.m, q.n),
+            mu_b: sign_i8(&q.mu_b),
+            sigma_b: sign_i8(&q.sigma_b),
+        }
+    }
+}
+
+/// Sign-domain DM precompute: β rows by word-wise XOR, η by XOR/popcount
+/// dot with the i8 writeback clamp (the `q_precompute` analogue — see the
+/// module docs for the exactness argument).
+pub fn sign_precompute(layer: &SignLayer, x: &SignBits, beta: &mut SignMatrix, eta: &mut [i8]) {
+    let (m, n) = (layer.m, layer.n);
+    assert_eq!(x.n, n);
+    assert_eq!((beta.rows, beta.n), (m, n));
+    assert_eq!(eta.len(), m);
+    for i in 0..m {
+        sign_xor_into(layer.sigma.row(i), &x.words, beta.row_mut(i));
+        let d = sign_dot(layer.mu.row(i), &x.words, n);
+        eta[i] = d.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+    }
+}
+
+/// Sign-domain banked DM layer sweep, mirroring `q_dm_layer_banked` at
+/// zero-fraction formats: per (voter, row), `z = ⟨H, β⟩` by XOR/popcount,
+/// plus η and the ±1 bias pair, saturating writeback, optional ReLU.
+/// `ys` is `bank.len() × M` voter-major.
+pub fn sign_dm_layer(
+    layer: &SignLayer,
+    beta: &SignMatrix,
+    eta: &[i8],
+    bank: &[(SignMatrix, Vec<i8>)],
+    relu: bool,
+    ys: &mut [i8],
+) {
+    let (m, n) = (layer.m, layer.n);
+    assert_eq!((beta.rows, beta.n), (m, n));
+    assert_eq!(eta.len(), m);
+    assert_eq!(ys.len(), bank.len() * m);
+    for (k, (h, hb)) in bank.iter().enumerate() {
+        assert_eq!((h.rows, h.n), (m, n));
+        assert_eq!(hb.len(), m);
+        for i in 0..m {
+            let z = sign_dot(h.row(i), beta.row(i), n);
+            let b2 = hb[i] as i32 * layer.sigma_b[i] as i32 + layer.mu_b[i] as i32;
+            let v32 = z + eta[i] as i32 + b2;
+            let mut v = v32.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+            if relu {
+                v = v.max(0);
+            }
+            ys[k * m + i] = v;
+        }
+    }
+}
+
+/// A fully sign-binarized model: the packed `fixed_infer` variant.
+#[derive(Debug, Clone)]
+pub struct SignModel {
+    pub layers: Vec<SignLayer>,
+}
+
+impl SignModel {
+    /// Collapse a quantized model to packed weight signs.
+    pub fn binarize(q: &QBnnModel) -> Self {
+        Self { layers: q.layers.iter().map(SignLayer::binarize).collect() }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].n
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().m
+    }
+
+    /// DM fan-out evaluation in the sign domain: `banks[li]` holds layer
+    /// `li`'s uncertainty draws (packed signs), every parent activation
+    /// fans out across them, so the voter count is ∏ `banks[li].len()`.
+    ///
+    /// Hidden activations are re-binarized with the sign activation (the
+    /// binarized-network nonlinearity — ReLU-then-sign would saturate to
+    /// all +1), keeping every layer input in the ±1 domain the XOR trick
+    /// needs; the last layer returns raw saturated i8 logits.  The
+    /// reference comparison in the tests drives the i8 kernels through
+    /// the identical schedule.
+    pub fn evaluate_dm(&self, x: &[i8], banks: &[Vec<(SignMatrix, Vec<i8>)>]) -> Vec<Vec<i8>> {
+        let nl = self.layers.len();
+        assert_eq!(banks.len(), nl);
+        assert_eq!(x.len(), self.input_dim());
+        let mut acts: Vec<Vec<i8>> = vec![sign_i8(x)];
+        for li in 0..nl {
+            let l = &self.layers[li];
+            let bank = &banks[li];
+            let last = li == nl - 1;
+            let mut beta = SignMatrix::zeroed(l.m, l.n);
+            let mut eta = vec![0i8; l.m];
+            let mut next = Vec::with_capacity(acts.len() * bank.len());
+            for a in &acts {
+                let xb = SignBits::pack(a);
+                sign_precompute(l, &xb, &mut beta, &mut eta);
+                let mut ys = vec![0i8; bank.len() * l.m];
+                sign_dm_layer(l, &beta, &eta, bank, false, &mut ys);
+                for y in ys.chunks_exact(l.m) {
+                    next.push(if last { y.to_vec() } else { sign_i8(y) });
+                }
+            }
+            acts = next;
+        }
+        acts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grng::uniform::{UniformSource, XorShift128Plus};
+    use crate::nn::kernels::{q_dm_layer_banked, q_precompute};
+
+    /// A random ±1 vector (never zero, so packing is lossless).
+    fn pm1(len: usize, r: &mut XorShift128Plus) -> Vec<i8> {
+        (0..len).map(|_| if r.next_u64() & 1 == 0 { 1i8 } else { -1 }).collect()
+    }
+
+    /// A ±1 layer in both representations: the i8 reference (`QLayer` at
+    /// zero-fraction formats) and its lossless sign packing.
+    fn pm1_layer(m: usize, n: usize, r: &mut XorShift128Plus) -> (QLayer, SignLayer) {
+        let q = QLayer {
+            m,
+            n,
+            mu: pm1(m * n, r),
+            sigma: pm1(m * n, r),
+            mu_b: pm1(m, r),
+            sigma_b: pm1(m, r),
+            wfmt: SIGN_FMT,
+        };
+        let s = SignLayer::binarize(&q);
+        (q, s)
+    }
+
+    #[test]
+    fn pack_roundtrip_and_tail_bits() {
+        let mut r = XorShift128Plus::new(1);
+        for n in [0usize, 1, 63, 64, 65, 100, 128, 130] {
+            let v = pm1(n, &mut r);
+            let b = SignBits::pack(&v);
+            assert_eq!(b.words.len(), n.div_ceil(64));
+            for (j, &a) in v.iter().enumerate() {
+                assert_eq!((b.words[j / 64] >> (j % 64)) & 1 == 1, a < 0, "n={n} bit {j}");
+            }
+            if n % 64 != 0 {
+                let tail = b.words[n / 64] >> (n % 64);
+                assert_eq!(tail, 0, "n={n} tail bits must stay clear");
+            }
+        }
+    }
+
+    #[test]
+    fn sign_dot_matches_integer_dot() {
+        let mut r = XorShift128Plus::new(2);
+        for n in [1usize, 7, 64, 65, 130, 1000] {
+            let a = pm1(n, &mut r);
+            let b = pm1(n, &mut r);
+            let want: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+            let (pa, pb) = (SignBits::pack(&a), SignBits::pack(&b));
+            assert_eq!(sign_dot(&pa.words, &pb.words, n), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn xor_is_the_sign_product() {
+        let mut r = XorShift128Plus::new(3);
+        let n = 130;
+        let a = pm1(n, &mut r);
+        let b = pm1(n, &mut r);
+        let prod: Vec<i8> = a.iter().zip(&b).map(|(&x, &y)| x * y).collect();
+        let (pa, pb) = (SignBits::pack(&a), SignBits::pack(&b));
+        let mut out = vec![0u64; pa.words.len()];
+        sign_xor_into(&pa.words, &pb.words, &mut out);
+        assert_eq!(out, SignBits::pack(&prod).words);
+    }
+
+    /// Layer-level exactness: on ±1 data at zero-fraction formats the
+    /// packed kernels reproduce `q_precompute` + `q_dm_layer_banked` bit
+    /// for bit — the module's headline claim.
+    #[test]
+    fn sign_layer_matches_i8_kernels_exactly() {
+        let mut r = XorShift128Plus::new(4);
+        // n = 70 > 64 exercises multi-word rows; n = 200 forces the η
+        // clamp (|μ·x| can exceed 127) on both paths.
+        for (m, n, t) in [(9usize, 70usize, 3usize), (5, 200, 2)] {
+            let (ql, sl) = pm1_layer(m, n, &mut r);
+            let x = pm1(n, &mut r);
+            let qbank: Vec<(Vec<i8>, Vec<i8>)> =
+                (0..t).map(|_| (pm1(m * n, &mut r), pm1(m, &mut r))).collect();
+            let sbank: Vec<(SignMatrix, Vec<i8>)> = qbank
+                .iter()
+                .map(|(h, hb)| (SignMatrix::pack_rows(h, m, n), hb.clone()))
+                .collect();
+
+            let mut qbeta = vec![0i8; m * n];
+            let mut qeta = vec![0i8; m];
+            q_precompute(&ql, SIGN_FMT, &x, &mut qbeta, &mut qeta);
+            let mut sbeta = SignMatrix::zeroed(m, n);
+            let mut seta = vec![0i8; m];
+            sign_precompute(&sl, &SignBits::pack(&x), &mut sbeta, &mut seta);
+            assert_eq!(sbeta, SignMatrix::pack_rows(&qbeta, m, n), "β m={m} n={n}");
+            assert_eq!(seta, qeta, "η m={m} n={n}");
+
+            for relu in [false, true] {
+                let mut want = vec![0i8; t * m];
+                q_dm_layer_banked(&ql, SIGN_FMT, &qbeta, &qeta, &qbank, 3, relu, &mut want);
+                let mut got = vec![0i8; t * m];
+                sign_dm_layer(&sl, &sbeta, &seta, &sbank, relu, &mut got);
+                assert_eq!(got, want, "m={m} n={n} relu={relu}");
+            }
+        }
+    }
+
+    /// End-to-end: the packed DM fan-out reproduces the i8 kernels driven
+    /// through the identical schedule (sign activation between layers).
+    #[test]
+    fn sign_model_matches_i8_reference_end_to_end() {
+        let mut r = XorShift128Plus::new(5);
+        let dims = [(8usize, 70usize), (6, 8), (4, 6)];
+        let pairs: Vec<(QLayer, SignLayer)> =
+            dims.iter().map(|&(m, n)| pm1_layer(m, n, &mut r)).collect();
+        let schedule = [2usize, 2, 1];
+        let x = pm1(70, &mut r);
+        let qbanks: Vec<Vec<(Vec<i8>, Vec<i8>)>> = dims
+            .iter()
+            .zip(schedule)
+            .map(|(&(m, n), t)| (0..t).map(|_| (pm1(m * n, &mut r), pm1(m, &mut r))).collect())
+            .collect();
+        let sbanks: Vec<Vec<(SignMatrix, Vec<i8>)>> = qbanks
+            .iter()
+            .zip(&dims)
+            .map(|(bank, &(m, n))| {
+                bank.iter().map(|(h, hb)| (SignMatrix::pack_rows(h, m, n), hb.clone())).collect()
+            })
+            .collect();
+
+        // i8 reference: same fan-out, same sign activation, frac-0 formats
+        let mut want: Vec<Vec<i8>> = vec![sign_i8(&x)];
+        for (li, (ql, _)) in pairs.iter().enumerate() {
+            let last = li == dims.len() - 1;
+            let mut next = Vec::new();
+            for a in &want {
+                let mut beta = vec![0i8; ql.m * ql.n];
+                let mut eta = vec![0i8; ql.m];
+                q_precompute(ql, SIGN_FMT, a, &mut beta, &mut eta);
+                let mut ys = vec![0i8; qbanks[li].len() * ql.m];
+                q_dm_layer_banked(ql, SIGN_FMT, &beta, &eta, &qbanks[li], 2, false, &mut ys);
+                for y in ys.chunks_exact(ql.m) {
+                    next.push(if last { y.to_vec() } else { sign_i8(y) });
+                }
+            }
+            want = next;
+        }
+
+        let model = SignModel { layers: pairs.into_iter().map(|(_, s)| s).collect() };
+        let got = model.evaluate_dm(&x, &sbanks);
+        assert_eq!(got.len(), 4, "∏ schedule voters");
+        assert_eq!(got, want);
+    }
+
+    /// `binarize` of a general (non-±1) quantized model is well-formed
+    /// and its sign evaluation is deterministic.
+    #[test]
+    fn binarize_general_model_is_well_formed() {
+        let mut r = XorShift128Plus::new(6);
+        let post = vec![crate::dataset::LayerPosterior {
+            m: 5,
+            n: 12,
+            mu: (0..60).map(|_| r.next_f32() - 0.5).collect(),
+            sigma: (0..60).map(|_| 0.05 + 0.1 * r.next_f32()).collect(),
+            mu_b: (0..5).map(|_| r.next_f32() - 0.5).collect(),
+            sigma_b: (0..5).map(|_| 0.05 + 0.1 * r.next_f32()).collect(),
+        }];
+        let q = QBnnModel::from_posterior(&post);
+        let s = SignModel::binarize(&q);
+        assert_eq!((s.input_dim(), s.output_dim()), (12, 5));
+        // σ quantizes to small positive values — sign +1 — while μ signs
+        // follow the posterior mean.
+        let banks = vec![vec![(SignMatrix::pack_rows(&pm1(60, &mut r), 5, 12), pm1(5, &mut r))]];
+        let x = pm1(12, &mut r);
+        let a = s.evaluate_dm(&x, &banks);
+        let b = s.evaluate_dm(&x, &banks);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].len(), 5);
+    }
+}

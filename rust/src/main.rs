@@ -51,10 +51,13 @@ SUBCOMMANDS:
            [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
            [--memo-mb MB] [--cache-snapshot PATH]
            [--queue-depth N] [--deadline-ms MS]
-           [--listen ADDR] [--duration-s S]
+           [--sparse-threshold D] [--force-dense]
+           [--listen ADDR] [--duration-s S] [--conn-threads N]
+           [--request-timeout-ms MS] [--io-timeout-ms MS]
   eval     --method M --limit N --batch B --workers W [--synthetic]
            [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
            [--memo-mb MB] [--cache-snapshot PATH]
+           [--sparse-threshold D] [--force-dense]
   tables   --table {3|4|5} [--limit N]
   fig6
   hwsweep
@@ -96,13 +99,32 @@ methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
             also closes a filling batch early when the oldest member's
             deadline approaches.  Per-request deadlines on the wire
             (binary v2 frames, HTTP `deadline_ms` body key) override it.
+--sparse-threshold: activation-density crossover for the sparse sweep
+            dispatch, in [0, 1] (unset honors BAYESDM_SPARSE_THRESHOLD,
+            then off; flag > environment > default).  A layer whose input
+            density (nonzero fraction) is at or below D runs the
+            index-compacted sparse kernel; results are bit-identical
+            either way, and sparse/dense sweep counts plus the mean
+            observed density are reported in the run's metrics line.
+--force-dense: pin the dense blocked kernels even when a sparse
+            threshold is configured (BAYESDM_FORCE_DENSE=1 does the
+            same).  The escape hatch for density-dispatch issues;
+            results are bit-identical either way.
 --listen: serve over TCP on ADDR (e.g. 127.0.0.1:8484; port 0 =
             OS-assigned, the bound address is printed).  One port speaks
             both protocols: the length-prefixed binary framing and an
             HTTP/1.1 shim (POST /v1/classify, GET /metrics, GET /healthz,
             GET /admin/drain).  Runs until a drain is requested.
 --duration-s: with --listen, also stop after S seconds (0 = only on
-            drain).  Shutdown drains: in-flight requests are answered.";
+            drain).  Shutdown drains: in-flight requests are answered.
+--conn-threads: with --listen, size of the connection-handler pool
+            (default 8).  Flag > environment > default, like every
+            serve-config knob.
+--request-timeout-ms: with --listen, wall-clock budget for one wire
+            request end-to-end (default 30000).
+--io-timeout-ms: with --listen, per-socket read/write timeout
+            (default 10000).  Slow-loris peers are disconnected instead
+            of pinning a connection thread.";
 
 fn parse_method(s: &str, alpha: f64) -> Result<InferenceMethod> {
     InferenceMethod::parse(s, alpha)
@@ -150,6 +172,9 @@ fn deployment_builder(args: &mut Args, seed: u64) -> Result<(ServeConfigBuilder,
     }
     if let Some(ms) = opt_parse::<u64>(args, "deadline-ms")? {
         b = b.deadline_ms(ms);
+    }
+    if let Some(t) = opt_parse::<f32>(args, "sparse-threshold")? {
+        b = b.sparse_threshold(t);
     }
     Ok((b, alpha))
 }
@@ -285,11 +310,23 @@ fn main() -> Result<()> {
             if args.has("force-scalar") {
                 bayesdm::nn::simd::force_scalar();
             }
+            if args.has("force-dense") {
+                bayesdm::nn::kernels::force_dense();
+            }
             let (mut b, alpha) = deployment_builder(&mut args, 0xBA135)?;
             b = b.max_batch(max_batch);
             let listen = args.get("listen", "");
             if !listen.is_empty() {
                 b = b.listen(listen);
+            }
+            if let Some(n) = opt_parse::<usize>(&mut args, "conn-threads")? {
+                b = b.conn_threads(n);
+            }
+            if let Some(ms) = opt_parse::<u64>(&mut args, "request-timeout-ms")? {
+                b = b.request_timeout(Duration::from_millis(ms));
+            }
+            if let Some(ms) = opt_parse::<u64>(&mut args, "io-timeout-ms")? {
+                b = b.io_timeout(Duration::from_millis(ms));
             }
             args.finish().map_err(Error::msg)?;
             let cfg = b.build()?;
@@ -328,6 +365,9 @@ fn main() -> Result<()> {
             if args.has("force-scalar") {
                 bayesdm::nn::simd::force_scalar();
             }
+            if args.has("force-dense") {
+                bayesdm::nn::kernels::force_dense();
+            }
             let (b, alpha) = deployment_builder(&mut args, 0xE7A1)?;
             args.finish().map_err(Error::msg)?;
             let cfg = b.build()?;
@@ -352,6 +392,9 @@ fn main() -> Result<()> {
             }
             if let Some(stats) = s.memo {
                 println!("memo: {stats}");
+            }
+            if let Some(stats) = s.sparsity {
+                println!("sparsity: {stats}");
             }
             for shard in &s.shards {
                 println!("{shard}");

@@ -47,6 +47,8 @@
 //! cache **miss** (the entry must own its floats to outlive the call);
 //! hits are `Arc` clones.
 
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
 use crate::dataset::LayerPosterior;
 use crate::fixed::q::QFormat;
 use crate::opcount::counter::OpCounter;
@@ -56,7 +58,144 @@ use super::dmcache::CacheView;
 use super::fixed_infer::QLayer;
 use super::linear::precompute;
 use super::plan::{DataflowPlan, EvalScratch, TileGeometry, MAX_ROW_TILE, MAX_VOTER_TILE};
-use super::simd::{self, Lanes};
+use super::simd::{self, Lanes, LANES};
+
+// ---------------------------------------------------------------------------
+// Activation-sparsity dispatch.
+//
+// ReLU-heavy activations make whole β columns provably inert: when
+// `x[j] == 0.0`, every product that column contributes is exactly ±0.0
+// (β[·,j] = σ·0 = ±0.0 for the DM sweep; w·0 = ±0.0 for the standard
+// sweep, with finite posteriors and bank draws).  Lane sums seed at +0.0
+// and IEEE addition only yields −0.0 from two −0.0 operands, so a lane
+// can never become −0.0 — which makes adding a ±0.0 product a bitwise
+// no-op.  Skipping those columns while keeping every remaining element
+// at its original `j % LANES` lane, in increasing-`j` order per lane, is
+// therefore **bit-identical** to the dense sweep — the same argument
+// that lets the dmcache skip whole precomputes.
+//
+// The sparse sweeps compact each lane's nonzero columns once per layer
+// input ([`build_sparse_index`]) and gather through the padded index
+// matrix (`nn::simd::sparse_dot_acc`).  Dispatch is by runtime density
+// against a *measured* crossover threshold (`benches/sparsity.rs`
+// reports it; `DataflowPlan::with_sparsity` / `EngineConfig` /
+// `--sparse-threshold` set it), with `BAYESDM_FORCE_DENSE=1` (or
+// [`force_dense`]) pinning the dense sweeps for parity testing.  Logical
+// op counts never move: skipped work is booked through
+// `OpCounter::avoided`, exactly like cache hits.
+// ---------------------------------------------------------------------------
+
+/// Environment variable pinning the dense sweeps even when a sparsity
+/// threshold is configured — the parity escape hatch mirroring
+/// `BAYESDM_FORCE_SCALAR`.
+pub const FORCE_DENSE_ENV: &str = "BAYESDM_FORCE_DENSE";
+
+const FD_UNINIT: u8 = 0;
+const FD_OFF: u8 = 1;
+const FD_ON: u8 = 2;
+/// Cached force-dense decision; 0 = env not read yet.
+static FORCE_DENSE: AtomicU8 = AtomicU8::new(FD_UNINIT);
+
+/// Sweeps dispatched to the sparse kernels (only counted while a
+/// threshold is configured).
+static SPARSE_SWEEPS: AtomicU64 = AtomicU64::new(0);
+/// Sweeps that measured too dense (or zero-free) and ran the dense path.
+static DENSE_SWEEPS: AtomicU64 = AtomicU64::new(0);
+/// Sum of measured per-sweep nonzero densities, in permille.
+static DENSITY_PERMILLE_SUM: AtomicU64 = AtomicU64::new(0);
+
+fn force_dense_env() -> bool {
+    match std::env::var(FORCE_DENSE_ENV) {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0"
+        }
+        Err(_) => false,
+    }
+}
+
+/// Pin the dense sweeps for the rest of the process (the `--force-dense`
+/// escape hatch).  Safe at any time: the sparse kernels are bit-identical
+/// to the dense ones, so flipping mid-flight can only change speed.
+pub fn force_dense() {
+    FORCE_DENSE.store(FD_ON, Ordering::Relaxed);
+}
+
+/// Whether sparse dispatch is pinned off via the env/CLI override.
+pub fn dense_is_forced() -> bool {
+    match FORCE_DENSE.load(Ordering::Relaxed) {
+        FD_UNINIT => {
+            let on = force_dense_env();
+            // A racing first call computes the same value — env is stable.
+            FORCE_DENSE.store(if on { FD_ON } else { FD_OFF }, Ordering::Relaxed);
+            on
+        }
+        v => v == FD_ON,
+    }
+}
+
+/// Process-wide sparse-dispatch counters, for metrics:
+/// `(sparse_sweeps, dense_sweeps, density_permille_sum)`.  Monotonic;
+/// only advanced while a sparsity threshold is configured.
+pub fn sparsity_counters() -> (u64, u64, u64) {
+    (
+        SPARSE_SWEEPS.load(Ordering::Relaxed),
+        DENSE_SWEEPS.load(Ordering::Relaxed),
+        DENSITY_PERMILLE_SUM.load(Ordering::Relaxed),
+    )
+}
+
+/// Scan one layer-input activation, filling `nzmask` (the per-block
+/// nonzero bitmap: bit `j % 64` of word `j / 64` set ⇔ `x[j] != 0.0`)
+/// and `spidx` with the padded per-lane index matrix the sparse sweeps
+/// gather through: row-major `L × LANES`, column `l` listing lane `l`'s
+/// nonzero columns (`j % LANES == l`) in increasing order, padded to the
+/// longest lane with the index of a zero element — whose products are
+/// exactly ±0.0 and thus bitwise no-ops.
+///
+/// Returns `Some((matrix_rows, nonzero_count))`, or `None` when `x` has
+/// no exact-zero element at all: the dense sweep is optimal by
+/// definition there, and the padding needs a zero column to point at.
+///
+/// `nzmask` must hold at least `⌈n/64⌉` words and `spidx` at least
+/// `n + LANES` entries ([`EvalScratch`] sizes both).  Every produced
+/// index is `< x.len()`, which is what lets the layer sweeps validate
+/// the matrix once and run the unsafe gather primitives per row.
+pub fn build_sparse_index(
+    x: &[f32],
+    nzmask: &mut [u64],
+    spidx: &mut [i32],
+) -> Option<(usize, usize)> {
+    let n = x.len();
+    let words = n.div_ceil(64);
+    assert!(nzmask.len() >= words, "nzmask too small: {} < {words}", nzmask.len());
+    nzmask[..words].fill(0);
+    let mut counts = [0usize; LANES];
+    let mut nnz = 0usize;
+    let mut pad = None;
+    for (j, &v) in x.iter().enumerate() {
+        if v != 0.0 {
+            nzmask[j / 64] |= 1u64 << (j % 64);
+            counts[j % LANES] += 1;
+            nnz += 1;
+        } else if pad.is_none() {
+            pad = Some(j as i32);
+        }
+    }
+    let pad = pad?;
+    let rows = counts.into_iter().max().unwrap_or(0);
+    assert!(spidx.len() >= rows * LANES, "spidx too small: {} < {}", spidx.len(), rows * LANES);
+    spidx[..rows * LANES].fill(pad);
+    let mut fill = [0usize; LANES];
+    for (j, &v) in x.iter().enumerate() {
+        if v != 0.0 {
+            let l = j % LANES;
+            spidx[fill[l] * LANES + l] = j as i32;
+            fill[l] += 1;
+        }
+    }
+    Some((rows, nnz))
+}
 
 /// The shared N×M×voter micro-kernel schedule both fused sweeps run.
 /// For every α row block, a register tile of `row_tile` rows feeds
@@ -227,6 +366,246 @@ pub fn standard_layer_blocked(
     ops.add(bank.len() * (m * n + m * (n - 1) + 2 * m));
 }
 
+/// Sparse DM layer sweep: every voter row gathers only the activation's
+/// nonzero columns through the padded index matrix `spidx` (built by
+/// [`build_sparse_index`] from the same activation that produced
+/// `beta`/`eta`).  Bit-identical to [`dm_layer_blocked`] — see the
+/// sparse-dispatch notes in the module header.  `nnz` is the matrix's
+/// nonzero count, used to book the skipped work: logical op counts stay
+/// equal to the dense sweep's, with the saving in `*_avoided`.
+#[allow(clippy::too_many_arguments)]
+pub fn dm_layer_sparse(
+    layer: &LayerPosterior,
+    beta: &[f32],
+    eta: &[f32],
+    bank: &[(Vec<f32>, Vec<f32>)],
+    relu: bool,
+    ys: &mut [f32],
+    spidx: &[i32],
+    nnz: usize,
+    ops: &mut OpCounter,
+) {
+    let (m, n) = (layer.m, layer.n);
+    assert_eq!(beta.len(), m * n);
+    assert_eq!(eta.len(), m);
+    assert_eq!(ys.len(), bank.len() * m);
+    assert_eq!(spidx.len() % LANES, 0);
+    assert!(nnz <= n);
+    // Validated once here, amortized over every (voter, row) gather.
+    assert!(
+        spidx.iter().all(|&j| j >= 0 && (j as usize) < n),
+        "sparse index out of bounds for n={n}"
+    );
+    for (k, (h, hb)) in bank.iter().enumerate() {
+        assert_eq!(h.len(), m * n);
+        assert_eq!(hb.len(), m);
+        for i in 0..m {
+            let row = i * n;
+            let mut lanes = Lanes::default();
+            // Safety: every index is in 0..n (asserted above) and both
+            // row slices are exactly n long.
+            unsafe {
+                simd::sparse_dot_acc(&mut lanes, &h[row..row + n], &beta[row..row + n], spidx);
+            }
+            // identical combine order to `dm_layer_blocked`
+            let mut v = lanes.reduce() + eta[i] + hb[i] * layer.sigma_b[i] + layer.mu_b[i];
+            if relu {
+                v = v.max(0.0);
+            }
+            ys[k * m + i] = v;
+        }
+    }
+    // Performed + avoided = the dense sweep's logical totals: per voter
+    // MN+M mul / M(N-1)+3M add, of which the z = N−nnz skipped columns
+    // cost z muls and z chain adds per row (all N−1 chain adds when the
+    // row had no products at all).
+    let chain = nnz.saturating_sub(1);
+    ops.mul(bank.len() * (m * nnz + m));
+    ops.add(bank.len() * (m * chain + 3 * m));
+    ops.avoided(&OpCounter::of(
+        (bank.len() * m * (n - nnz)) as u64,
+        (bank.len() * m * ((n - 1) - chain)) as u64,
+    ));
+}
+
+/// Sparse standard-voter layer sweep for **one** voter: gathers
+/// `h`, σ, μ and `x` through the padded index matrix, skipping every
+/// column whose activation is exactly zero.  Bit-identical to the same
+/// voter's slice of [`standard_layer_blocked`]; logical op counts stay
+/// equal with the saving booked into `*_avoided` (a zero column skips
+/// both of its muls, its μ add and its chain add).
+#[allow(clippy::too_many_arguments)]
+pub fn standard_layer_sparse(
+    layer: &LayerPosterior,
+    x: &[f32],
+    h: &[f32],
+    hb: &[f32],
+    relu: bool,
+    y: &mut [f32],
+    spidx: &[i32],
+    nnz: usize,
+    ops: &mut OpCounter,
+) {
+    let (m, n) = (layer.m, layer.n);
+    assert_eq!(x.len(), n);
+    assert_eq!(h.len(), m * n);
+    assert_eq!(hb.len(), m);
+    assert_eq!(y.len(), m);
+    assert_eq!(spidx.len() % LANES, 0);
+    assert!(nnz <= n);
+    assert!(
+        spidx.iter().all(|&j| j >= 0 && (j as usize) < n),
+        "sparse index out of bounds for n={n}"
+    );
+    for i in 0..m {
+        let row = i * n;
+        let mut lanes = Lanes::default();
+        // Safety: indices validated above; all four streams are n long
+        // (x directly, the others as row slices).
+        unsafe {
+            simd::sparse_std_dot_acc(
+                &mut lanes,
+                &h[row..row + n],
+                &layer.sigma[row..row + n],
+                &layer.mu[row..row + n],
+                x,
+                spidx,
+            );
+        }
+        // identical combine order to `standard_layer_blocked`
+        let mut v = lanes.reduce() + hb[i] * layer.sigma_b[i] + layer.mu_b[i];
+        if relu {
+            v = v.max(0.0);
+        }
+        y[i] = v;
+    }
+    // Dense per-voter totals: 2MN+M mul / MN+M(N-1)+2M add.
+    let z = n - nnz;
+    let chain = nnz.saturating_sub(1);
+    ops.mul(m * 2 * nnz + m);
+    ops.add(m * nnz + m * chain + 2 * m);
+    ops.avoided(&OpCounter::of((m * 2 * z) as u64, (m * z + m * ((n - 1) - chain)) as u64));
+}
+
+/// Runtime sparse-dispatch context threaded from [`execute_plan`] into
+/// the per-layer dispatchers: the plan's crossover threshold (already
+/// gated on the force-dense hatch) plus the scratch the index matrix is
+/// built into.
+struct SparseCtx<'s> {
+    threshold: Option<f32>,
+    nzmask: &'s mut [u64],
+    spidx: &'s mut [i32],
+}
+
+/// Measure one activation's density, record the dispatch stats, and
+/// return the built index matrix when the sparse path should run.
+fn sparse_decision(x: &[f32], thr: f32, ctx: &mut SparseCtx<'_>) -> Option<(usize, usize)> {
+    let nnz = x.iter().filter(|&&v| v != 0.0).count();
+    let density = nnz as f32 / x.len().max(1) as f32;
+    DENSITY_PERMILLE_SUM.fetch_add((density * 1000.0) as u64, Ordering::Relaxed);
+    if nnz < x.len() && density <= thr {
+        SPARSE_SWEEPS.fetch_add(1, Ordering::Relaxed);
+        build_sparse_index(x, ctx.nzmask, ctx.spidx)
+    } else {
+        DENSE_SWEEPS.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+}
+
+/// Density-dispatched DM layer: sparse gather sweep when the activation
+/// that produced `beta`/`eta` is sparse enough, the dense blocked sweep
+/// otherwise.  Results are bit-identical either way.
+#[allow(clippy::too_many_arguments)]
+fn dm_layer_auto(
+    layer: &LayerPosterior,
+    beta: &[f32],
+    eta: &[f32],
+    bank: &[(Vec<f32>, Vec<f32>)],
+    x: &[f32],
+    block_rows: usize,
+    tiles: TileGeometry,
+    relu: bool,
+    ys: &mut [f32],
+    ops: &mut OpCounter,
+    ctx: &mut SparseCtx<'_>,
+) {
+    if let Some(thr) = ctx.threshold {
+        if let Some((rows, nnz)) = sparse_decision(x, thr, ctx) {
+            dm_layer_sparse(layer, beta, eta, bank, relu, ys, &ctx.spidx[..rows * LANES], nnz, ops);
+            return;
+        }
+    }
+    dm_layer_blocked(layer, beta, eta, bank, block_rows, tiles, relu, ys, ops);
+}
+
+/// Density-dispatched standard layer: each voter's own activation is
+/// measured, sparse voters run the gather sweep, and maximal runs of
+/// dense voters keep the fused multi-voter blocked sweep.
+#[allow(clippy::too_many_arguments)]
+fn standard_layer_auto(
+    layer: &LayerPosterior,
+    xs: &[f32],
+    bank: &[(Vec<f32>, Vec<f32>)],
+    block_rows: usize,
+    tiles: TileGeometry,
+    relu: bool,
+    ys: &mut [f32],
+    ops: &mut OpCounter,
+    ctx: &mut SparseCtx<'_>,
+) {
+    let thr = match ctx.threshold {
+        Some(t) => t,
+        None => {
+            standard_layer_blocked(layer, xs, bank, block_rows, tiles, relu, ys, ops);
+            return;
+        }
+    };
+    let (m, n) = (layer.m, layer.n);
+    let voters = bank.len();
+    let mut k0 = 0; // start of the pending dense run
+    for k in 0..voters {
+        let x = &xs[k * n..(k + 1) * n];
+        if let Some((rows, nnz)) = sparse_decision(x, thr, ctx) {
+            if k0 < k {
+                standard_layer_blocked(
+                    layer,
+                    &xs[k0 * n..k * n],
+                    &bank[k0..k],
+                    block_rows,
+                    tiles,
+                    relu,
+                    &mut ys[k0 * m..k * m],
+                    ops,
+                );
+            }
+            standard_layer_sparse(
+                layer,
+                x,
+                &bank[k].0,
+                &bank[k].1,
+                relu,
+                &mut ys[k * m..(k + 1) * m],
+                &ctx.spidx[..rows * LANES],
+                nnz,
+                ops,
+            );
+            k0 = k + 1;
+        }
+    }
+    if k0 < voters {
+        standard_layer_blocked(
+            layer,
+            &xs[k0 * n..voters * n],
+            &bank[k0..],
+            block_rows,
+            tiles,
+            relu,
+            &mut ys[k0 * m..voters * m],
+            ops,
+        );
+    }
+}
+
 /// Sweep layers `first..nl` with the fused standard kernel, ping-ponging
 /// the activation buffers (shared by the Standard path and the Hybrid
 /// tail so the two cannot drift); returns the final activation width.
@@ -241,12 +620,13 @@ fn standard_tail<'s>(
     cur: &mut &'s mut [f32],
     nxt: &mut &'s mut [f32],
     ops: &mut OpCounter,
+    ctx: &mut SparseCtx<'_>,
 ) -> usize {
     let nl = plan.num_layers();
     for li in first..nl {
         let l = &model.layers[li];
         let relu = li != nl - 1;
-        standard_layer_blocked(
+        standard_layer_auto(
             l,
             &cur[..t * dim],
             &banks[li],
@@ -255,6 +635,7 @@ fn standard_tail<'s>(
             relu,
             &mut nxt[..t * l.m],
             ops,
+            ctx,
         );
         std::mem::swap(cur, nxt);
         dim = l.m;
@@ -292,9 +673,16 @@ pub fn execute_plan(
         assert_eq!(bank.len(), plan.draws[li], "bank {li} has the wrong voter count");
     }
     scratch.ensure(plan);
-    let EvalScratch { acts_a, acts_b, beta, eta } = scratch;
+    let EvalScratch { acts_a, acts_b, beta, eta, nzmask, spidx } = scratch;
     let (mut cur, mut nxt) = (acts_a.as_mut_slice(), acts_b.as_mut_slice());
     let (beta, eta) = (beta.as_mut_slice(), eta.as_mut_slice());
+    // Gate the plan's threshold on the force-dense hatch once, so every
+    // layer below sees a single `Option` and the hatch costs nothing on
+    // the hot path.  Dispatch stats only accumulate while a threshold is
+    // configured — plain plans touch no atomics.
+    let threshold = if dense_is_forced() { None } else { plan.sparse_threshold() };
+    let mut ctx =
+        SparseCtx { threshold, nzmask: nzmask.as_mut_slice(), spidx: spidx.as_mut_slice() };
 
     match &plan.method {
         Method::Standard { t } => {
@@ -303,7 +691,8 @@ pub fn execute_plan(
             for k in 0..t {
                 cur[k * n0..(k + 1) * n0].copy_from_slice(x);
             }
-            let dim = standard_tail(model, plan, banks, 0, t, n0, &mut cur, &mut nxt, ops);
+            let dim =
+                standard_tail(model, plan, banks, 0, t, n0, &mut cur, &mut nxt, ops, &mut ctx);
             out.copy_from_slice(&cur[..t * dim]);
         }
         Method::Hybrid { t } => {
@@ -318,19 +707,22 @@ pub fn execute_plan(
                 precompute(l0, x, &mut beta[..l0.m * l0.n], &mut eta[..l0.m], ops);
                 (&beta[..l0.m * l0.n], &eta[..l0.m])
             };
-            dm_layer_blocked(
+            dm_layer_auto(
                 l0,
                 db,
                 de,
                 &banks[0],
+                x,
                 plan.block_rows[0],
                 plan.tiles,
                 relu0,
                 &mut nxt[..t * l0.m],
                 ops,
+                &mut ctx,
             );
             std::mem::swap(&mut cur, &mut nxt);
-            let dim = standard_tail(model, plan, banks, 1, t, l0.m, &mut cur, &mut nxt, ops);
+            let dim =
+                standard_tail(model, plan, banks, 1, t, l0.m, &mut cur, &mut nxt, ops, &mut ctx);
             out.copy_from_slice(&cur[..t * dim]);
         }
         Method::DmBnn { .. } => {
@@ -355,16 +747,18 @@ pub fn execute_plan(
                         precompute(l, a, &mut beta[..l.m * l.n], &mut eta[..l.m], ops);
                         (&beta[..l.m * l.n], &eta[..l.m])
                     };
-                    dm_layer_blocked(
+                    dm_layer_auto(
                         l,
                         db,
                         de,
                         &banks[li],
+                        a,
                         plan.block_rows[li],
                         plan.tiles,
                         relu,
                         &mut nxt[p * tl * l.m..(p + 1) * tl * l.m],
                         ops,
+                        &mut ctx,
                     );
                 }
                 std::mem::swap(&mut cur, &mut nxt);
@@ -732,5 +1126,182 @@ mod tests {
         let mut y = vec![0i8; m];
         q_standard_layer(l, q.afmt, &x, h, hb, true, &mut y);
         assert_eq!(y.len(), m);
+    }
+
+    /// An n-vector with *exactly* `zeros` zero entries, scattered by a
+    /// coprime stride so the lane histogram is uneven — deterministic,
+    /// unlike thresholding a random draw.
+    fn sparse_x(n: usize, zeros: usize, seed: u64) -> Vec<f32> {
+        assert!(zeros <= n);
+        let mut r = XorShift128Plus::new(seed);
+        let mut x: Vec<f32> = (0..n).map(|_| r.next_f32() + 0.1).collect();
+        let mut j = seed as usize % n;
+        for _ in 0..zeros {
+            while x[j] == 0.0 {
+                j = (j + 7) % n;
+            }
+            x[j] = 0.0;
+            j = (j + 7) % n;
+        }
+        x
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|f| f.to_bits()).collect()
+    }
+
+    #[test]
+    fn build_sparse_index_layout_and_padding() {
+        let n = 37;
+        let x = sparse_x(n, 22, 21);
+        let mut nzmask = vec![0u64; n.div_ceil(64)];
+        let mut spidx = vec![0i32; n + LANES];
+        let (rows, nnz) = build_sparse_index(&x, &mut nzmask, &mut spidx).expect("has zeros");
+        assert_eq!(nnz, n - 22);
+        for (j, &v) in x.iter().enumerate() {
+            assert_eq!((nzmask[j / 64] >> (j % 64)) & 1 == 1, v != 0.0, "mask bit {j}");
+        }
+        // Lane l's column is exactly the nonzero j with j % LANES == l in
+        // increasing order, then padding that points at zero elements.
+        for l in 0..LANES {
+            let want: Vec<i32> =
+                (0..n).filter(|&j| j % LANES == l && x[j] != 0.0).map(|j| j as i32).collect();
+            let col: Vec<i32> = (0..rows).map(|t| spidx[t * LANES + l]).collect();
+            assert!(col.len() >= want.len(), "lane {l} truncated");
+            assert_eq!(&col[..want.len()], &want[..], "lane {l}");
+            for &p in &col[want.len()..] {
+                assert_eq!(x[p as usize], 0.0, "lane {l} pad must hit a zero");
+            }
+        }
+        // A fully dense input has no zero to pad with — no sparse index.
+        let dense: Vec<f32> = (0..n).map(|j| j as f32 + 1.0).collect();
+        assert!(build_sparse_index(&dense, &mut nzmask, &mut spidx).is_none());
+    }
+
+    /// The sparse sweeps are bit-identical to the dense blocked kernels
+    /// at every tested density, report the same *logical* op counts, and
+    /// book the skipped columns into the avoided channel.
+    #[test]
+    fn sparse_sweeps_match_dense_bitwise_and_keep_logical_counts() {
+        let (m, n, t) = (10usize, 37usize, 4usize);
+        let l = layer(m, n, 31);
+        let bank = bank(t, m, n, 32);
+        for zeros in [n, 33, 18, 4] {
+            let x = sparse_x(n, zeros, 40 + zeros as u64);
+            let mut nzmask = vec![0u64; n.div_ceil(64)];
+            let mut spidx = vec![0i32; n + LANES];
+            let (rows, nnz) =
+                build_sparse_index(&x, &mut nzmask, &mut spidx).expect("zeros present");
+            let idx = &spidx[..rows * LANES];
+
+            // DM: β/η derive from the same activation the index maps.
+            let mut beta = vec![0.0; m * n];
+            let mut eta = vec![0.0; m];
+            precompute(&l, &x, &mut beta, &mut eta, &mut OpCounter::default());
+            let mut want = vec![0.0; t * m];
+            let mut want_ops = OpCounter::default();
+            dm_layer_blocked(
+                &l,
+                &beta,
+                &eta,
+                &bank,
+                3,
+                TileGeometry::default(),
+                true,
+                &mut want,
+                &mut want_ops,
+            );
+            let mut got = vec![0.0; t * m];
+            let mut got_ops = OpCounter::default();
+            dm_layer_sparse(&l, &beta, &eta, &bank, true, &mut got, idx, nnz, &mut got_ops);
+            assert_eq!(bits(&got), bits(&want), "dm zeros={zeros}");
+            assert_eq!(
+                (got_ops.muls, got_ops.adds),
+                (want_ops.muls, want_ops.adds),
+                "dm logical zeros={zeros}"
+            );
+            assert!(
+                got_ops.muls_avoided > 0 && got_ops.adds_avoided > 0,
+                "dm avoided zeros={zeros}"
+            );
+
+            // Standard: each voter against its slice of the fused sweep.
+            let xs: Vec<f32> = (0..t).flat_map(|_| x.iter().copied()).collect();
+            let mut swant = vec![0.0; t * m];
+            let mut swant_ops = OpCounter::default();
+            standard_layer_blocked(
+                &l,
+                &xs,
+                &bank,
+                4,
+                TileGeometry::default(),
+                true,
+                &mut swant,
+                &mut swant_ops,
+            );
+            let mut sparse_ops = OpCounter::default();
+            for (k, (h, hb)) in bank.iter().enumerate() {
+                let mut sy = vec![0.0; m];
+                standard_layer_sparse(&l, &x, h, hb, true, &mut sy, idx, nnz, &mut sparse_ops);
+                assert_eq!(
+                    bits(&sy),
+                    bits(&swant[k * m..(k + 1) * m]),
+                    "std voter={k} zeros={zeros}"
+                );
+            }
+            assert_eq!(
+                (sparse_ops.muls, sparse_ops.adds),
+                (swant_ops.muls, swant_ops.adds),
+                "std logical zeros={zeros}"
+            );
+            assert!(sparse_ops.muls_avoided > 0, "std avoided zeros={zeros}");
+        }
+    }
+
+    /// A sparse-enabled plan reproduces the plain plan bit for bit on a
+    /// zero-heavy input for every method, keeps logical op counts intact,
+    /// and (unless the force-dense hatch is up) books nonzero savings
+    /// while the dispatch counters advance.
+    #[test]
+    fn execute_plan_with_sparsity_is_bit_identical_across_methods() {
+        let model = BnnModel::synthetic(&[16, 12, 8, 4], 19);
+        let x = sparse_x(16, 12, 20);
+        let mut scratch = EvalScratch::new();
+        for method in [
+            Method::Standard { t: 3 },
+            Method::Hybrid { t: 3 },
+            Method::DmBnn { schedule: vec![2, 2, 1] },
+        ] {
+            let mut g = crate::grng::default_grng(7);
+            let banks = model.sample_banks(&method, &mut g);
+            let plain = DataflowPlan::new(&model, &method);
+            let mut want = vec![0.0; plain.logit_floats()];
+            let mut want_ops = OpCounter::default();
+            execute_plan(&model, &plain, &x, &banks, None, &mut scratch, &mut want, &mut want_ops);
+
+            let (sp0, de0, _) = sparsity_counters();
+            let sparse = DataflowPlan::new(&model, &method).with_sparsity(Some(1.0));
+            let mut got = vec![0.0; sparse.logit_floats()];
+            let mut got_ops = OpCounter::default();
+            execute_plan(&model, &sparse, &x, &banks, None, &mut scratch, &mut got, &mut got_ops);
+            assert_eq!(bits(&got), bits(&want), "{method:?}");
+            assert_eq!(
+                (got_ops.muls, got_ops.adds),
+                (want_ops.muls, want_ops.adds),
+                "{method:?} logical"
+            );
+            if dense_is_forced() {
+                // hatch up (CI forced-dense leg): the sparse plan must
+                // degrade to exactly the plain execution
+                assert_eq!(got_ops, want_ops, "{method:?} forced-dense");
+            } else {
+                assert!(got_ops.muls_avoided > 0, "{method:?} avoided muls");
+                assert!(got_ops.adds_avoided > 0, "{method:?} avoided adds");
+                let (sp1, de1, _) = sparsity_counters();
+                // other tests may race on the process-global counters, so
+                // only monotonicity is asserted
+                assert!(sp1 + de1 > sp0 + de0, "{method:?} dispatch counters");
+            }
+        }
     }
 }

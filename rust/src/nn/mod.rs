@@ -40,7 +40,11 @@ pub mod simd;
 pub use batch::{evaluate_batch, evaluate_batch_cached, evaluate_batch_planned, BatchResult};
 pub use bnn::{BnnModel, Method, UncertaintyBanks};
 pub use dmcache::{CacheConfig, CacheStats, CacheView, Decomp, DmCache};
-pub use kernels::{dm_layer_blocked, execute_plan, standard_layer_blocked};
+pub use kernels::{
+    build_sparse_index, dense_is_forced, dm_layer_blocked, dm_layer_sparse, execute_plan,
+    force_dense, sparsity_counters, standard_layer_blocked, standard_layer_sparse,
+    FORCE_DENSE_ENV,
+};
 pub use linear::{dm_voter, precompute, standard_voter, standard_voter_rows};
 pub use plan::{
     alpha_block, DataflowPlan, EvalScratch, LogitBatch, LogitStack, ScratchPool, TileGeometry,

@@ -105,6 +105,14 @@ pub struct DataflowPlan {
     /// Micro-kernel tile geometry inside each α block (see
     /// [`TileGeometry`]); results are identical for every geometry.
     pub tiles: TileGeometry,
+    /// Activation-sparsity crossover threshold: when `Some(d)`, layer
+    /// sweeps whose input activation has a nonzero *density* ≤ `d` run
+    /// the sparse gather kernels instead of the dense sweeps.  `None`
+    /// (the default) never dispatches sparse — plain plans stay
+    /// byte-identical.  A results-invariant knob like `tiles`: the
+    /// sparse kernels are bit-identical to the dense ones (see
+    /// `nn::kernels`), so the threshold only moves speed.
+    sparse_threshold: Option<f32>,
     /// Leaf voter count.
     pub voters: usize,
     /// Output dimension of the last layer.
@@ -212,6 +220,7 @@ impl DataflowPlan {
             fan_in,
             block_rows,
             tiles: TileGeometry::default().clamped(),
+            sparse_threshold: None,
             act_capacity,
             beta_capacity,
             eta_capacity,
@@ -225,6 +234,20 @@ impl DataflowPlan {
     pub fn with_tiles(mut self, tiles: TileGeometry) -> Self {
         self.tiles = tiles.clamped();
         self
+    }
+
+    /// The same plan with an activation-sparsity crossover threshold
+    /// (clamped to `0.0..=1.0`; `None` disables sparse dispatch).  Like
+    /// `with_tiles`, a speed knob only — results never move.
+    pub fn with_sparsity(mut self, threshold: Option<f32>) -> Self {
+        self.sparse_threshold = threshold.map(|t| t.clamp(0.0, 1.0));
+        self
+    }
+
+    /// The activation-density crossover below which layer sweeps run the
+    /// sparse gather kernels (`None` = sparse dispatch off).
+    pub fn sparse_threshold(&self) -> Option<f32> {
+        self.sparse_threshold
     }
 
     /// Number of layers the plan spans.
@@ -320,6 +343,13 @@ pub struct EvalScratch {
     pub(crate) acts_b: AlignedF32,
     pub(crate) beta: AlignedF32,
     pub(crate) eta: AlignedF32,
+    /// Nonzero bitmap over one layer-input activation (bit `j` of word
+    /// `j / 64` set ⇔ element `j` is nonzero), rebuilt per layer input
+    /// by the sparse dispatch in `nn::kernels`.
+    pub(crate) nzmask: Vec<u64>,
+    /// Padded per-lane index matrix the sparse gather kernels sweep
+    /// (row-major `L × LANES`; see `nn::kernels::build_sparse_index`).
+    pub(crate) spidx: Vec<i32>,
 }
 
 impl EvalScratch {
@@ -341,6 +371,16 @@ impl EvalScratch {
         self.acts_b.grow(plan.act_capacity());
         self.beta.grow(plan.beta_capacity());
         self.eta.grow(plan.eta_capacity());
+        // Sparse-dispatch scratch: a bitmap word per 64 activation
+        // elements and a padded L×LANES index matrix (8·⌈n/8⌉ ≤ n + 7
+        // entries) over the widest layer input.
+        let max_n = plan.dims.iter().map(|&(_, n)| n).max().unwrap_or(0);
+        if self.nzmask.len() < max_n.div_ceil(64) {
+            self.nzmask.resize(max_n.div_ceil(64), 0);
+        }
+        if self.spidx.len() < max_n + LANES {
+            self.spidx.resize(max_n + LANES, 0);
+        }
     }
 
     /// Total floats currently resident (capacity telemetry for tests).

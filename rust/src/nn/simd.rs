@@ -297,6 +297,12 @@ pub fn q_dot(a: &[i8], b: &[i8]) -> i32 {
             return unsafe { avx2::q_dot(a, b) };
         }
     }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if active() == Isa::Neon {
+            return unsafe { neon::q_dot(a, b) };
+        }
+    }
     scalar::q_dot(a, b)
 }
 
@@ -315,6 +321,14 @@ pub fn q_std_dot(h: &[i8], sig: &[i8], mu: &[i8], x: &[i8], wf: u32) -> i64 {
         // that bound and fall back to the (equally exact) scalar sweep.
         if active() == Isa::Avx2 && h.len() <= 4096 {
             return unsafe { avx2::q_std_dot(h, sig, mu, x, wf) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // The NEON path widens every chunk's i32 partial sums into i64
+        // accumulators, so it has no length cap beyond the caller's.
+        if active() == Isa::Neon {
+            return unsafe { neon::q_std_dot(h, sig, mu, x, wf) };
         }
     }
     scalar::q_std_dot(h, sig, mu, x, wf)
@@ -336,6 +350,70 @@ pub fn q_scale_store(sig: &[i8], x: &[i8], shift: u32, beta: &mut [i8]) {
         }
     }
     scalar::q_scale_store(sig, x, shift, beta)
+}
+
+// ---------------------------------------------------------------------------
+// Sparse gather primitives.  The sparse sweeps in `nn::kernels` compact,
+// once per layer input, the nonzero columns of each lane into a padded
+// L×LANES index matrix (row-major; row t feeds lane l the column
+// `idx[t*LANES + l]`, padding entries point at a column whose activation
+// is exactly ±0.0).  Because lanes are independent until `Lanes::reduce`
+// and each lane's kept products arrive in increasing-j order — padding
+// products are exactly ±0.0, and adding ±0.0 to a lane that is never
+// −0.0 is a bitwise no-op — the result is bit-identical to the dense
+// sweep (the full argument lives in `nn::kernels`).  These functions are
+// `unsafe` so the in-bounds check can be amortized: callers validate the
+// index matrix once per layer input, not once per row.
+// ---------------------------------------------------------------------------
+
+/// Sparse `lanes[l] += a[idx[t·LANES+l]] * b[idx[t·LANES+l]]` for every
+/// row `t` of the padded index matrix, in increasing-`t` order.
+///
+/// # Safety
+///
+/// Every entry of `idx` must satisfy `0 <= idx[k] < a.len()` and
+/// `a.len() == b.len()`; `idx.len()` must be a multiple of [`LANES`].
+#[inline]
+pub unsafe fn sparse_dot_acc(lanes: &mut Lanes, a: &[f32], b: &[f32], idx: &[i32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(idx.len() % LANES, 0);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() == Isa::Avx2 {
+            return unsafe { avx2::sparse_dot_acc(lanes, a, b, idx) };
+        }
+    }
+    scalar::sparse_dot_acc(lanes, a, b, idx)
+}
+
+/// Sparse standard-voter accumulation:
+/// `lanes[l] += (h[j]·sig[j] + mu[j]) · x[j]` with `j = idx[t·LANES+l]`,
+/// for every row `t` of the padded index matrix.
+///
+/// # Safety
+///
+/// As [`sparse_dot_acc`]: all indices in `0..h.len()`, equal slice
+/// lengths, `idx.len()` a multiple of [`LANES`].
+#[inline]
+pub unsafe fn sparse_std_dot_acc(
+    lanes: &mut Lanes,
+    h: &[f32],
+    sig: &[f32],
+    mu: &[f32],
+    x: &[f32],
+    idx: &[i32],
+) {
+    debug_assert_eq!(h.len(), sig.len());
+    debug_assert_eq!(h.len(), mu.len());
+    debug_assert_eq!(h.len(), x.len());
+    debug_assert_eq!(idx.len() % LANES, 0);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if active() == Isa::Avx2 {
+            return unsafe { avx2::sparse_std_dot_acc(lanes, h, sig, mu, x, idx) };
+        }
+    }
+    scalar::sparse_std_dot_acc(lanes, h, sig, mu, x, idx)
 }
 
 // ---------------------------------------------------------------------------
@@ -413,6 +491,32 @@ pub(crate) mod scalar {
         for j in 0..x.len() {
             let p = sig[j] as i32 * x[j] as i32;
             beta[j] = (p >> shift).clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+        }
+    }
+
+    pub fn sparse_dot_acc(lanes: &mut Lanes, a: &[f32], b: &[f32], idx: &[i32]) {
+        for row in idx.chunks_exact(LANES) {
+            for l in 0..LANES {
+                let j = row[l] as usize;
+                lanes.0[l] += a[j] * b[j];
+            }
+        }
+    }
+
+    pub fn sparse_std_dot_acc(
+        lanes: &mut Lanes,
+        h: &[f32],
+        sig: &[f32],
+        mu: &[f32],
+        x: &[f32],
+        idx: &[i32],
+    ) {
+        for row in idx.chunks_exact(LANES) {
+            for l in 0..LANES {
+                let j = row[l] as usize;
+                let w = h[j] * sig[j] + mu[j];
+                lanes.0[l] += w * x[j];
+            }
         }
     }
 }
@@ -550,6 +654,47 @@ mod avx2 {
         total
     }
 
+    /// Safety: caller guarantees AVX2 and that every index is in bounds
+    /// for `a`/`b` (validated once per index matrix by `nn::kernels`).
+    /// Lane l of each gathered register IS lane l of the schedule, so
+    /// per-lane add order matches the scalar sparse reference exactly.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sparse_dot_acc(lanes: &mut Lanes, a: &[f32], b: &[f32], idx: &[i32]) {
+        let rows = idx.len() / LANES;
+        let mut acc = _mm256_loadu_ps(lanes.0.as_ptr());
+        for t in 0..rows {
+            let iv = _mm256_loadu_si256(idx.as_ptr().add(t * LANES) as *const __m256i);
+            let av = _mm256_i32gather_ps::<4>(a.as_ptr(), iv);
+            let bv = _mm256_i32gather_ps::<4>(b.as_ptr(), iv);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+        }
+        _mm256_storeu_ps(lanes.0.as_mut_ptr(), acc);
+    }
+
+    /// Safety: as `sparse_dot_acc`, over four gathered streams.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sparse_std_dot_acc(
+        lanes: &mut Lanes,
+        h: &[f32],
+        sig: &[f32],
+        mu: &[f32],
+        x: &[f32],
+        idx: &[i32],
+    ) {
+        let rows = idx.len() / LANES;
+        let mut acc = _mm256_loadu_ps(lanes.0.as_ptr());
+        for t in 0..rows {
+            let iv = _mm256_loadu_si256(idx.as_ptr().add(t * LANES) as *const __m256i);
+            let hv = _mm256_i32gather_ps::<4>(h.as_ptr(), iv);
+            let sv = _mm256_i32gather_ps::<4>(sig.as_ptr(), iv);
+            let mv = _mm256_i32gather_ps::<4>(mu.as_ptr(), iv);
+            let xv = _mm256_i32gather_ps::<4>(x.as_ptr(), iv);
+            let wv = _mm256_add_ps(_mm256_mul_ps(hv, sv), mv);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+        }
+        _mm256_storeu_ps(lanes.0.as_mut_ptr(), acc);
+    }
+
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn q_scale_store(sig: &[i8], x: &[i8], shift: u32, beta: &mut [i8]) {
         let n = x.len();
@@ -573,9 +718,11 @@ mod avx2 {
 }
 
 // ---------------------------------------------------------------------------
-// NEON backend (aarch64), f32 only: two 4-wide registers carry lanes
-// 0..3 and 4..7 of the schedule.  The i8 primitives use the scalar
-// backend on aarch64 — integer accumulation is exact there anyway.
+// NEON backend (aarch64): two 4-wide f32 registers carry lanes 0..3 and
+// 4..7 of the schedule.  The i8 primitives widen to i16/i32 (and i64 for
+// q_std_dot) before accumulating, so they are exact like every other
+// backend — integer accumulation is associative, overflow bounds are in
+// the per-function comments.
 // ---------------------------------------------------------------------------
 
 #[cfg(target_arch = "aarch64")]
@@ -670,6 +817,77 @@ mod neon {
             beta[j] = sig[j] * x[j];
             lanes.0[j % LANES] += mu[j] * x[j];
         }
+    }
+
+    /// Exact i8 dot product: widen to i16, multiply-accumulate into four
+    /// i32 lanes.  Each lane absorbs 4 products per 16-element chunk, so
+    /// per lane ≤ (n/16)·4·128² = n·4096 < 2³⁰ for n < 2¹⁶ (asserted by
+    /// the public wrapper) — no overflow.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn q_dot(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let chunks = n / 16;
+        let mut acc = vdupq_n_s32(0);
+        for c in 0..chunks {
+            let o = 16 * c;
+            let av = vld1q_s8(a.as_ptr().add(o));
+            let bv = vld1q_s8(b.as_ptr().add(o));
+            let alo = vmovl_s8(vget_low_s8(av));
+            let ahi = vmovl_s8(vget_high_s8(av));
+            let blo = vmovl_s8(vget_low_s8(bv));
+            let bhi = vmovl_s8(vget_high_s8(bv));
+            acc = vmlal_s16(acc, vget_low_s16(alo), vget_low_s16(blo));
+            acc = vmlal_s16(acc, vget_high_s16(alo), vget_high_s16(blo));
+            acc = vmlal_s16(acc, vget_low_s16(ahi), vget_low_s16(bhi));
+            acc = vmlal_s16(acc, vget_high_s16(ahi), vget_high_s16(bhi));
+        }
+        let mut total = vaddvq_s32(acc);
+        for j in chunks * 16..n {
+            total += a[j] as i32 * b[j] as i32;
+        }
+        total
+    }
+
+    /// Exact fixed-point standard-voter row sweep.  `w2 = h·sig +
+    /// (mu << wf)` fits i16 for wf ≤ 7 (|h·sig| ≤ 16256, |mu·2⁷| ≤
+    /// 16384, sum ≤ 32640 < 2¹⁵); each chunk's 16 products go through a
+    /// fresh i32×4 accumulator (lane ≤ 4·32640·128 < 2³¹) that is
+    /// widened into i64×2 before the next chunk, so there is no length
+    /// cap.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn q_std_dot(h: &[i8], sig: &[i8], mu: &[i8], x: &[i8], wf: u32) -> i64 {
+        let n = h.len();
+        let chunks = n / 16;
+        let shift = vdupq_n_s16(wf as i16);
+        let mut acc64 = vdupq_n_s64(0);
+        for c in 0..chunks {
+            let o = 16 * c;
+            let hv = vld1q_s8(h.as_ptr().add(o));
+            let sv = vld1q_s8(sig.as_ptr().add(o));
+            let mv = vld1q_s8(mu.as_ptr().add(o));
+            let xv = vld1q_s8(x.as_ptr().add(o));
+            let hlo = vmovl_s8(vget_low_s8(hv));
+            let hhi = vmovl_s8(vget_high_s8(hv));
+            let slo = vmovl_s8(vget_low_s8(sv));
+            let shi = vmovl_s8(vget_high_s8(sv));
+            let mlo = vmovl_s8(vget_low_s8(mv));
+            let mhi = vmovl_s8(vget_high_s8(mv));
+            let xlo = vmovl_s8(vget_low_s8(xv));
+            let xhi = vmovl_s8(vget_high_s8(xv));
+            let wlo = vaddq_s16(vmulq_s16(hlo, slo), vshlq_s16(mlo, shift));
+            let whi = vaddq_s16(vmulq_s16(hhi, shi), vshlq_s16(mhi, shift));
+            let mut chunk = vmull_s16(vget_low_s16(wlo), vget_low_s16(xlo));
+            chunk = vmlal_s16(chunk, vget_high_s16(wlo), vget_high_s16(xlo));
+            chunk = vmlal_s16(chunk, vget_low_s16(whi), vget_low_s16(xhi));
+            chunk = vmlal_s16(chunk, vget_high_s16(whi), vget_high_s16(xhi));
+            acc64 = vaddq_s64(acc64, vpaddlq_s32(chunk));
+        }
+        let mut total = vaddvq_s64(acc64);
+        for j in chunks * 16..n {
+            let w2 = h[j] as i32 * sig[j] as i32 + ((mu[j] as i32) << wf);
+            total += w2 as i64 * x[j] as i64;
+        }
+        total
     }
 }
 
@@ -792,6 +1010,42 @@ mod tests {
                 let mut got = vec![0i8; n];
                 q_scale_store(&a, &b, shift, &mut got);
                 assert_eq!(got, want, "q_scale_store n={n} shift={shift}");
+            }
+        }
+        set_active(prev);
+    }
+
+    /// The gather-based sparse primitives must land every product in the
+    /// same lane, in the same order, as the scalar sparse reference —
+    /// for arbitrary index matrices, not just ones built from a mask.
+    #[test]
+    fn sparse_gather_primitives_match_scalar_bitwise() {
+        let _g = isa_guard();
+        let prev = active();
+        set_active(detect());
+        for &n in &WIDTHS {
+            if n == 0 {
+                continue;
+            }
+            let (a, b, c, d) = (randv(n, 30), randv(n, 31), randv(n, 32), randv(n, 33));
+            let mut r = XorShift128Plus::new(34);
+            for rows in [0usize, 1, 2, 5] {
+                let idx: Vec<i32> =
+                    (0..rows * LANES).map(|_| (r.next_u64() as usize % n) as i32).collect();
+
+                let mut want = Lanes::default();
+                scalar::sparse_dot_acc(&mut want, &a, &b, &idx);
+                let mut got = Lanes::default();
+                // Safety: every index is drawn from 0..n.
+                unsafe { sparse_dot_acc(&mut got, &a, &b, &idx) };
+                assert_eq!(got, want, "sparse_dot n={n} rows={rows}");
+
+                let mut want = Lanes::default();
+                scalar::sparse_std_dot_acc(&mut want, &a, &b, &c, &d, &idx);
+                let mut got = Lanes::default();
+                // Safety: as above.
+                unsafe { sparse_std_dot_acc(&mut got, &a, &b, &c, &d, &idx) };
+                assert_eq!(got, want, "sparse_std_dot n={n} rows={rows}");
             }
         }
         set_active(prev);

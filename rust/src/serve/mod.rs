@@ -139,6 +139,7 @@ pub struct ServeConfigBuilder {
     shards: Option<usize>,
     memo_mb: Option<usize>,
     snapshot: Option<String>,
+    sparse_threshold: Option<f32>,
     max_batch: Option<usize>,
     max_wait: Option<Duration>,
     dispatch_workers: Option<usize>,
@@ -198,6 +199,14 @@ impl ServeConfigBuilder {
     /// Decomposition-cache snapshot path (requires the cache enabled).
     pub fn snapshot<S: Into<String>>(mut self, path: S) -> Self {
         self.snapshot = Some(path.into());
+        self
+    }
+
+    /// Activation-sparsity crossover threshold (density in [0, 1]) for
+    /// the engine's compiled plans; unset falls back to the
+    /// `BAYESDM_SPARSE_THRESHOLD` environment toggle, then off.
+    pub fn sparse_threshold(mut self, t: f32) -> Self {
+        self.sparse_threshold = Some(t);
         self
     }
 
@@ -296,6 +305,11 @@ impl ServeConfigBuilder {
                 "cache snapshot requires the decomposition cache (cache_mb > 0)",
             ));
         }
+        if let Some(t) = self.sparse_threshold {
+            if !t.is_finite() || !(0.0..=1.0).contains(&t) {
+                return Err(ServeError::bad_request("sparse threshold must be in [0, 1]"));
+            }
+        }
         let max_batch = self.max_batch.unwrap_or(8);
         if max_batch == 0 {
             return Err(ServeError::bad_request("max_batch must be >= 1"));
@@ -322,6 +336,7 @@ impl ServeConfigBuilder {
             shards,
             memo,
             snapshot: self.snapshot,
+            sparse_threshold: self.sparse_threshold.or(engine_defaults.sparse_threshold),
         };
         let net_defaults = NetConfig::default();
         let net = NetConfig {
@@ -416,12 +431,14 @@ impl Deployment {
         match &self.backend {
             Backend::Engine(e) => {
                 s.cache = e.cache_stats();
+                s.sparsity = e.sparsity_stats();
             }
             Backend::Cluster(r) => {
                 let c = r.metrics_summary();
                 s.cache = c.cache;
                 s.memo = c.memo;
                 s.shards = c.shards;
+                s.sparsity = c.sparsity;
             }
         }
     }

@@ -293,6 +293,68 @@ fn nan_logits_are_isa_invariant_through_total_cmp_argmax() {
     simd::set_active(prev);
 }
 
+/// `count` inputs of dimension `ARCH[0]` with exactly `density_pct`% of
+/// coordinates nonzero — deterministic positions via a stride walk
+/// (stride 7 is coprime with N = 20, so the walk is full-period and the
+/// positions are distinct), values offset so they are never exactly zero.
+fn inputs_at_density(count: usize, density_pct: usize, seed: u64) -> Vec<Vec<f32>> {
+    let n = ARCH[0];
+    let nnz = n * density_pct / 100;
+    let mut r = XorShift128Plus::new(seed);
+    (0..count)
+        .map(|i| {
+            let mut x = vec![0.0f32; n];
+            for k in 0..nnz {
+                x[(i + k * 7) % n] = 0.1 + r.next_f32();
+            }
+            x
+        })
+        .collect()
+}
+
+/// Zero-heavy inputs at fixed densities {0, 10, 50, 90, 100}%: a plan
+/// with the sparse dispatch armed (threshold 1.0, so any layer input
+/// containing a zero takes the index-compacted kernels) is bit-identical
+/// to the plain dense plan — logits and logical op counts — at every
+/// density, every method, cache on and off.  At low densities the sparse
+/// path must also actually *save* work (`muls_avoided` grows), unless the
+/// force-dense escape hatch pinned the dense kernels process-wide.
+#[test]
+fn sparse_dispatch_is_bit_identical_across_densities() {
+    let model = model();
+    for density_pct in [0usize, 10, 50, 90, 100] {
+        let xs = inputs_at_density(6, density_pct, 0x5EED + density_pct as u64);
+        for method in &methods() {
+            let dense_plan = DataflowPlan::with_block_rows(&model, method, 4);
+            let sparse_plan =
+                DataflowPlan::with_block_rows(&model, method, 4).with_sparsity(Some(1.0));
+            for cached in [false, true] {
+                let cache = DmCache::new(&CacheConfig::with_mb(8));
+                let run = |plan: &DataflowPlan| {
+                    let view = cached.then(|| CacheView::new(&cache, model.fingerprint()));
+                    let mut g = default_grng(SEED);
+                    evaluate_batch_planned(&model, plan, &xs, &mut g, 2, view, None)
+                };
+                let want = run(&dense_plan);
+                let got = run(&sparse_plan);
+                let tag = format!("density={density_pct}% {method:?} cached={cached}");
+                assert_eq!(got.logits, want.logits, "{tag}");
+                // logical counts only: the sparse round may re-read the
+                // cache the dense round warmed, and the sparse kernels
+                // book their skipped columns as `*_avoided`
+                assert_eq!(got.ops.muls, want.ops.muls, "{tag}");
+                assert_eq!(got.ops.adds, want.ops.adds, "{tag}");
+                if density_pct <= 50 && !cached && !bayesdm::nn::kernels::dense_is_forced() {
+                    assert!(
+                        got.ops.muls_avoided > want.ops.muls_avoided,
+                        "{tag}: sparse sweeps must avoid work at this density"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Steady-state arena discipline: a pooled batch run parks its arenas
 /// back (never more than the worker count — a fast worker's arena may be
 /// reused by a slower sibling, so fewer is legitimate), and replaying

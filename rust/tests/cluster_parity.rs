@@ -36,6 +36,7 @@ fn cfg(shards: usize, cache: CacheConfig, memo: MemoConfig) -> EngineConfig {
         shards,
         memo,
         snapshot: None,
+        sparse_threshold: None,
     }
 }
 
