@@ -34,13 +34,30 @@
 //! logical-but-avoided ops.  `EngineConfig::snapshot` persists the shared
 //! cache across restarts (`cluster::snapshot`): loaded at construction,
 //! saved on [`ClusterRouter::save_snapshot`] and on drop.
+//!
+//! # Supervision: shards are a fault domain, not a fate-sharing unit
+//!
+//! Each shard worker runs its evaluation under `catch_unwind`; a panic
+//! (a kernel bug, or the armed `worker.panic` fault point) answers the
+//! in-flight request with a typed failure marker and retires the thread.
+//! `evaluate` supervises: on a failure reply it respawns the shard — same
+//! engine `Arc`, same `ContentHash` seed schedule — and resubmits the
+//! slot; a shard that stops answering entirely (`shard.stall`) trips a
+//! watchdog ([`watchdog_from_env`], `BAYESDM_WATCHDOG_MS`) with the same
+//! heal-and-resubmit recovery.  Because each answer is a pure function of
+//! `(seed, input)`, a resubmitted request — and even a late duplicate
+//! reply from a stalled-but-alive worker — is bit-identical to the answer
+//! the dead shard would have produced, so recovery is invisible in the
+//! results (chaos-tested in `tests/chaos.rs`).  Restarts are counted in
+//! `MetricsSummary::shard_restarts`, caught panics in `panics_caught`.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, SyncSender};
-use std::sync::Arc;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::engine::{
     accuracy_over, validate_request, Engine, EngineConfig, SeedSchedule,
@@ -55,6 +72,7 @@ use crate::nn::dmcache::CacheConfig;
 use crate::nn::plan::LogitBatch;
 use crate::opcount::counter::OpCounter;
 use crate::serve::ServeError;
+use crate::util::fault;
 
 use super::cacheservice::{CacheService, ShardBreakdown};
 use super::memo::{request_key, slices_bit_equal, MemoConfig, MemoResponse, ResponseMemo};
@@ -81,6 +99,30 @@ pub fn shards_from_env() -> usize {
 /// across scheduling hiccups.
 pub const SHARD_QUEUE_DEPTH: usize = 256;
 
+/// Resubmissions one request slot may consume across shard failures
+/// before `evaluate` gives up with a typed `Internal` error.  Failures
+/// are counted per slot, so one crash-looping shard cannot starve a
+/// request forever, and a healthy run never touches the budget.
+pub const MAX_SLOT_RETRIES: u32 = 8;
+
+/// Environment variable overriding the shard watchdog (milliseconds).
+/// A shard that produces no reply for a whole watchdog period while work
+/// is pending is presumed wedged and is respawned.  The 30 s default is
+/// far above any legitimate single-request evaluation; tests and chaos
+/// runs shrink it.
+pub const WATCHDOG_ENV: &str = "BAYESDM_WATCHDOG_MS";
+
+/// `BAYESDM_WATCHDOG_MS` with a 30 s default; unset, unparsable or zero
+/// values fall back to the default.
+pub fn watchdog_from_env() -> Duration {
+    let ms = std::env::var(WATCHDOG_ENV)
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .unwrap_or(30_000);
+    Duration::from_millis(ms)
+}
+
 struct ShardJob {
     slot: usize,
     input: Vec<f32>,
@@ -90,15 +132,80 @@ struct ShardJob {
 
 struct ShardReply {
     slot: usize,
-    flat: Vec<f32>,
-    ops: OpCounter,
+    /// `Err` marks a caught worker panic while evaluating this slot: the
+    /// worker answered (so the caller can recover immediately instead of
+    /// waiting out the watchdog) and then retired its thread.
+    outcome: Result<(Vec<f32>, OpCounter), ()>,
+}
+
+/// One shard's supervised serving lane: the live queue sender, the worker
+/// thread, and a generation counter that de-duplicates concurrent heal
+/// attempts (every observer of generation `g`'s failure races to heal;
+/// only the first wins, the rest see `g+1` and stand down).
+struct Lane {
+    tx: SyncSender<ShardJob>,
+    handle: Option<JoinHandle<()>>,
+    generation: u64,
+}
+
+/// Supervision state for one dispatched representative slot: where it
+/// ran, which lane generation accepted it (the heal guard), and how much
+/// of its [`MAX_SLOT_RETRIES`] budget is spent.
+#[derive(Clone, Copy)]
+struct PendingSlot {
+    shard: usize,
+    generation: u64,
+    attempts: u32,
+}
+
+/// Spawn one shard worker: evaluate jobs one at a time under
+/// `catch_unwind`, reply `Err(())` and retire on a caught panic.  The
+/// `worker.panic` and `shard.stall` fault points live here — inside the
+/// unwind barrier and under the caller's watchdog respectively — so chaos
+/// runs exercise exactly the recovery paths real faults would.
+fn spawn_shard_worker(
+    shard: usize,
+    generation: u64,
+    engine: Arc<Engine>,
+    rx: Receiver<ShardJob>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("bayesdm-shard-{shard}-g{generation}"))
+        .spawn(move || {
+            while let Ok(job) = rx.recv() {
+                let ShardJob { slot, input, method, respond } = job;
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    fault::maybe_panic("worker.panic");
+                    if let Some(ms) = fault::fire_ms("shard.stall") {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    let res = engine.evaluate_batch(std::slice::from_ref(&input), &method);
+                    (res.logits.input(0).flat().to_vec(), res.ops)
+                }));
+                match outcome {
+                    Ok(reply) => {
+                        let _ = respond.send(ShardReply { slot, outcome: Ok(reply) });
+                    }
+                    Err(_) => {
+                        // Answer first (fast resubmit), then retire: the
+                        // supervisor respawns this shard on the same
+                        // engine, so the retried answer is bit-identical
+                        // to what this thread would have produced.
+                        let _ = respond.send(ShardReply { slot, outcome: Err(()) });
+                        break;
+                    }
+                }
+            }
+        })
+        .expect("spawn shard worker")
 }
 
 /// The shard-aware multi-engine backend.
 pub struct ClusterRouter {
     engines: Vec<Arc<Engine>>,
-    txs: Vec<SyncSender<ShardJob>>,
-    workers: Vec<JoinHandle<()>>,
+    lanes: Vec<Mutex<Lane>>,
+    /// Watchdog period for wedged-shard detection (see [`WATCHDOG_ENV`]).
+    watchdog: Duration,
     /// Jobs actually dispatched to each shard for computation (memo hits
     /// and intra-batch duplicate replays are not counted — their saving
     /// shows up in the memo stats and the `*_avoided` op counters).
@@ -149,8 +256,7 @@ impl ClusterRouter {
         };
 
         let mut engines = Vec::with_capacity(shards);
-        let mut txs = Vec::with_capacity(shards);
-        let mut workers = Vec::with_capacity(shards);
+        let mut lanes = Vec::with_capacity(shards);
         for i in 0..shards {
             let shard_cfg = EngineConfig {
                 // the shard leases the shared cache below; a private one
@@ -165,29 +271,15 @@ impl ClusterRouter {
             let lease = service.as_ref().map(|s| s.lease(i));
             let engine = Arc::new(Engine::with_cache_lease(model.clone(), shard_cfg, lease));
             let (tx, rx) = mpsc::sync_channel::<ShardJob>(SHARD_QUEUE_DEPTH);
-            let worker_engine = engine.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("bayesdm-shard-{i}"))
-                    .spawn(move || {
-                        while let Ok(job) = rx.recv() {
-                            let ShardJob { slot, input, method, respond } = job;
-                            let res = worker_engine
-                                .evaluate_batch(std::slice::from_ref(&input), &method);
-                            let flat = res.logits.input(0).flat().to_vec();
-                            let _ = respond.send(ShardReply { slot, flat, ops: res.ops });
-                        }
-                    })
-                    .expect("spawn shard worker"),
-            );
+            let handle = spawn_shard_worker(i, 0, engine.clone(), rx);
             engines.push(engine);
-            txs.push(tx);
+            lanes.push(Mutex::new(Lane { tx, handle: Some(handle), generation: 0 }));
         }
 
         Self {
             engines,
-            txs,
-            workers,
+            lanes,
+            watchdog: watchdog_from_env(),
             dispatched: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             memo,
             service,
@@ -243,6 +335,113 @@ impl ClusterRouter {
         Some(result)
     }
 
+    /// Respawn `shard` if it is still at `observed_generation` — the
+    /// generation the caller saw fail.  Concurrent observers of the same
+    /// failure all call this; the generation guard makes exactly one of
+    /// them rebuild the lane (fresh bounded queue, fresh worker on the
+    /// SAME engine `Arc` and seed schedule) while the rest stand down.
+    ///
+    /// A dead worker is joined; a wedged one is detached — its queue
+    /// sender is gone, so it exits on its own when it next touches the
+    /// channel, and the purity contract makes any late reply it manages
+    /// to deliver bit-identical (and deduplicated) anyway.
+    fn heal_shard(&self, shard: usize, observed_generation: u64) {
+        let old_handle = {
+            let mut lane = self.lanes[shard].lock().unwrap_or_else(|e| e.into_inner());
+            if lane.generation != observed_generation {
+                return; // another observer already healed this failure
+            }
+            lane.generation += 1;
+            let (tx, rx) = mpsc::sync_channel::<ShardJob>(SHARD_QUEUE_DEPTH);
+            lane.tx = tx; // dropping the old sender retires a live worker
+            let old = lane.handle.take();
+            lane.handle = Some(spawn_shard_worker(
+                shard,
+                lane.generation,
+                self.engines[shard].clone(),
+                rx,
+            ));
+            old
+        };
+        if let Some(h) = old_handle {
+            if h.is_finished() {
+                let _ = h.join();
+            }
+            // else: stalled-but-alive — detach rather than block recovery
+            // on a thread the watchdog already gave up on.
+        }
+        self.metrics.record_shard_restart();
+    }
+
+    /// Deterministically retire and respawn one shard worker,
+    /// synchronously: the old worker drains its queue and exits (its
+    /// sender is dropped), is joined, and a fresh generation takes over.
+    /// In-flight requests are unaffected — they hold their own clone of
+    /// the old sender and the old worker answers them before exiting.
+    /// This is the test/chaos entry point for exercising the same respawn
+    /// path the panic and watchdog recoveries use.
+    pub fn kill_shard(&self, shard: usize) {
+        let old_handle = {
+            let mut lane = self.lanes[shard].lock().unwrap_or_else(|e| e.into_inner());
+            lane.generation += 1;
+            let (tx, rx) = mpsc::sync_channel::<ShardJob>(SHARD_QUEUE_DEPTH);
+            lane.tx = tx; // the old sender drops: the old worker drains + exits
+            let old = lane.handle.take();
+            lane.handle = Some(spawn_shard_worker(
+                shard,
+                lane.generation,
+                self.engines[shard].clone(),
+                rx,
+            ));
+            old
+        };
+        if let Some(h) = old_handle {
+            let _ = h.join();
+        }
+        self.metrics.record_shard_restart();
+    }
+
+    /// Enqueue one job on `shard`, healing through dead lanes, and return
+    /// the generation that accepted it.  A full queue is backpressure:
+    /// the caller polls (bounded by the watchdog) instead of blocking,
+    /// because a blocking send into a wedged shard could never recover.
+    fn dispatch(&self, shard: usize, mut job: ShardJob) -> Result<u64, ServeError> {
+        let mut deadline = Instant::now() + self.watchdog;
+        let mut heals = 0u32;
+        loop {
+            let (tx, generation) = {
+                let lane = self.lanes[shard].lock().unwrap_or_else(|e| e.into_inner());
+                (lane.tx.clone(), lane.generation)
+            };
+            match tx.try_send(job) {
+                Ok(()) => return Ok(generation),
+                Err(TrySendError::Disconnected(j)) => {
+                    // worker died with the queue open: respawn and retry
+                    job = j;
+                    self.heal_shard(shard, generation);
+                    heals += 1;
+                }
+                Err(TrySendError::Full(j)) => {
+                    job = j;
+                    if Instant::now() >= deadline {
+                        // a full queue for a whole watchdog period is a
+                        // wedged worker, not backpressure
+                        self.heal_shard(shard, generation);
+                        heals += 1;
+                        deadline = Instant::now() + self.watchdog;
+                    } else {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+            if heals > MAX_SLOT_RETRIES {
+                return Err(ServeError::internal(format!(
+                    "shard {shard} unavailable after {heals} restarts"
+                )));
+            }
+        }
+    }
+
     /// Evaluate a set of requests across the cluster: memo probe, hash
     /// route, per-shard evaluation, reassembly in request order.  Logits
     /// and logical op counts are bit-identical for every shard count and
@@ -271,6 +470,8 @@ impl ClusterRouter {
         let mut dup_slots: HashMap<usize, Vec<usize>> = HashMap::new();
         // memo key -> representative slots (collisions verified by bits)
         let mut reps_by_key: HashMap<u64, Vec<usize>> = HashMap::new();
+        // representative slot -> (shard, accepted generation, resubmits)
+        let mut pending: HashMap<usize, PendingSlot> = HashMap::new();
         for (slot, x) in inputs.iter().enumerate() {
             if let Some(hit) = self.memo.as_ref().and_then(|m| m.lookup(method, x)) {
                 logits.data_mut()[slot * stride..(slot + 1) * stride].copy_from_slice(&hit.flat);
@@ -290,42 +491,107 @@ impl ClusterRouter {
                 reps.push(slot);
             }
             dup_slots.insert(slot, Vec::new());
-            let shard = (key % self.txs.len() as u64) as usize;
+            let shard = (key % self.lanes.len() as u64) as usize;
             let job =
                 ShardJob { slot, input: x.clone(), method: method.clone(), respond: rtx.clone() };
-            // bounded queue: a full shard blocks the caller — backpressure.
-            // A disconnected shard is a capacity/lifecycle condition, not an
-            // input error: report `ShuttingDown` so the batcher fails the
-            // whole batch instead of retrying each member solo.
-            self.txs[shard].send(job).map_err(|_| ServeError::ShuttingDown)?;
+            let generation = self.dispatch(shard, job)?;
+            // resubmissions after a failure are recovery, not traffic:
+            // only first dispatches count toward shard attribution, so
+            // the breakdown (and snapshot dirty marker) stay independent
+            // of how many faults were ridden out along the way
             self.dispatched[shard].fetch_add(1, Ordering::Relaxed);
+            pending.insert(slot, PendingSlot { shard, generation, attempts: 0 });
         }
-        drop(rtx);
 
-        for _ in 0..dup_slots.len() {
-            let reply = rrx.recv().map_err(|_| ServeError::ShuttingDown)?;
-            logits.data_mut()[reply.slot * stride..(reply.slot + 1) * stride]
-                .copy_from_slice(&reply.flat);
-            ops += reply.ops;
-            for &dup in &dup_slots[&reply.slot] {
-                logits.data_mut()[dup * stride..(dup + 1) * stride].copy_from_slice(&reply.flat);
-                ops += replay_ops(reply.ops.muls, reply.ops.adds);
+        // Reassemble under supervision.  Every pending slot either fills
+        // its logits bit-exactly — possibly after a heal + resubmit — or
+        // the whole call fails with a typed error once a slot exhausts
+        // [`MAX_SLOT_RETRIES`].  `rtx` stays alive until the loop exits,
+        // so `recv_timeout` can only yield replies or a true timeout.
+        while !pending.is_empty() {
+            let reply = match rrx.recv_timeout(self.watchdog) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => {
+                    // Nothing answered for a whole watchdog period with
+                    // work outstanding: presume the involved shards are
+                    // wedged, respawn them, resubmit what is pending.  A
+                    // merely-slow shard's late answer remains harmless —
+                    // bit-identical by purity and dropped as a duplicate.
+                    let slots: Vec<usize> = pending.keys().copied().collect();
+                    for slot in slots {
+                        self.resubmit(slot, &inputs[slot], method, &rtx, &mut pending)?;
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(ServeError::ShuttingDown),
+            };
+            let slot = reply.slot;
+            if !pending.contains_key(&slot) {
+                continue; // stale duplicate from a detached worker
             }
-            if let Some(m) = &self.memo {
-                m.insert(
-                    method,
-                    &inputs[reply.slot],
-                    MemoResponse {
-                        flat: reply.flat,
-                        voters,
-                        classes: self.classes,
-                        muls: reply.ops.muls,
-                        adds: reply.ops.adds,
-                    },
-                );
+            match reply.outcome {
+                Ok((flat, rops)) => {
+                    pending.remove(&slot);
+                    logits.data_mut()[slot * stride..(slot + 1) * stride].copy_from_slice(&flat);
+                    ops += rops;
+                    for &dup in &dup_slots[&slot] {
+                        logits.data_mut()[dup * stride..(dup + 1) * stride]
+                            .copy_from_slice(&flat);
+                        ops += replay_ops(rops.muls, rops.adds);
+                    }
+                    if let Some(m) = &self.memo {
+                        m.insert(
+                            method,
+                            &inputs[slot],
+                            MemoResponse {
+                                flat,
+                                voters,
+                                classes: self.classes,
+                                muls: rops.muls,
+                                adds: rops.adds,
+                            },
+                        );
+                    }
+                }
+                Err(()) => {
+                    // the worker caught its own panic, answered, and
+                    // retired; respawn the shard and run the slot again
+                    self.metrics.record_panic_caught();
+                    self.resubmit(slot, &inputs[slot], method, &rtx, &mut pending)?;
+                }
             }
         }
         Ok(BatchResult { logits, ops })
+    }
+
+    /// Heal the shard a failed slot was dispatched to, then dispatch the
+    /// slot again, debiting its retry budget.  Shared by the panic-reply
+    /// and watchdog-timeout recovery paths.
+    fn resubmit(
+        &self,
+        slot: usize,
+        input: &[f32],
+        method: &Method,
+        rtx: &mpsc::Sender<ShardReply>,
+        pending: &mut HashMap<usize, PendingSlot>,
+    ) -> Result<(), ServeError> {
+        let PendingSlot { shard, generation, attempts } =
+            *pending.get(&slot).expect("slot is pending");
+        self.heal_shard(shard, generation);
+        if attempts >= MAX_SLOT_RETRIES {
+            return Err(ServeError::internal(format!(
+                "request slot {slot} failed {attempts} resubmissions on shard {shard}"
+            )));
+        }
+        let job = ShardJob {
+            slot,
+            input: input.to_vec(),
+            method: method.clone(),
+            respond: rtx.clone(),
+        };
+        let accepted = self.dispatch(shard, job)?;
+        pending.insert(slot, PendingSlot { shard, generation: accepted, attempts: attempts + 1 });
+        Ok(())
     }
 
     /// Predicted class per input (mean-logit vote + argmax), mirroring
@@ -394,15 +660,26 @@ fn replay_ops(muls: u64, adds: u64) -> OpCounter {
 impl Drop for ClusterRouter {
     fn drop(&mut self) {
         // persist first (workers are still parked, cache is quiescent
-        // once txs close) unless an explicit save already captured the
-        // final traffic; then close the queues and reap the shards
+        // once the queues close) unless an explicit save already captured
+        // the final traffic; then close the queues and reap the shards
         if self.saved_version.load(Ordering::Relaxed) != self.traffic_version() {
             if let Some(Err(e)) = self.save_snapshot() {
                 eprintln!("cluster: cache snapshot save failed: {e}");
             }
         }
-        self.txs.clear();
-        for h in self.workers.drain(..) {
+        let mut handles = Vec::with_capacity(self.lanes.len());
+        for lane in &self.lanes {
+            let mut lane = lane.lock().unwrap_or_else(|e| e.into_inner());
+            // swap in a pre-disconnected sender: dropping the real one
+            // ends the current worker's recv loop
+            let (tx, rx) = mpsc::sync_channel::<ShardJob>(1);
+            drop(rx);
+            lane.tx = tx;
+            if let Some(h) = lane.handle.take() {
+                handles.push(h);
+            }
+        }
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -561,6 +838,54 @@ mod tests {
         let got = r.evaluate(&[], &Method::Standard { t: 2 }).unwrap();
         assert!(got.logits.is_empty());
         assert_eq!(got.ops, OpCounter::default());
+    }
+
+    #[test]
+    fn kill_shard_respawns_on_the_same_seed_schedule() {
+        let r = router(3);
+        let xs = inputs(6, 17);
+        let m = Method::Standard { t: 3 };
+        let before = r.evaluate(&xs, &m).expect("pre-restart evaluate");
+        for shard in 0..3 {
+            r.kill_shard(shard);
+        }
+        let after = r.evaluate(&xs, &m).expect("post-restart evaluate");
+        // respawned workers share the engines (and ContentHash schedule),
+        // so a full cluster restart is invisible in the results
+        assert_eq!(before.logits, after.logits);
+        assert_eq!(before.ops.muls, after.ops.muls);
+        assert_eq!(before.ops.adds, after.ops.adds);
+        let s = r.metrics_summary();
+        if fault::armed() {
+            // a chaos run may ride out extra panics/restarts on the side
+            assert!(s.shard_restarts >= 3, "{}", s.shard_restarts);
+        } else {
+            assert_eq!(s.shard_restarts, 3);
+            assert_eq!(s.panics_caught, 0, "a clean restart catches nothing");
+        }
+    }
+
+    #[test]
+    fn repeated_restarts_of_one_shard_keep_serving() {
+        let r = router(2);
+        let xs = inputs(4, 23);
+        let m = Method::Standard { t: 2 };
+        let reference = r.evaluate(&xs, &m).unwrap();
+        for _ in 0..5 {
+            r.kill_shard(0);
+            let again = r.evaluate(&xs, &m).unwrap();
+            assert_eq!(again.logits, reference.logits);
+        }
+        if !fault::armed() {
+            assert_eq!(r.metrics_summary().shard_restarts, 5);
+        }
+    }
+
+    #[test]
+    fn watchdog_env_parses_defensively() {
+        // unset in the default test environment ⇒ the 30 s default; chaos
+        // tests shrink it via BAYESDM_WATCHDOG_MS
+        assert!(watchdog_from_env() >= Duration::from_millis(1));
     }
 
     #[test]

@@ -154,6 +154,10 @@ fn cold(why: impl Into<String>) -> SnapshotReport {
 /// returns a report with [`SnapshotReport::rejected`] set and the cache
 /// untouched (cold start).
 pub fn load(cache: &DmCache, fp: u64, path: &Path) -> SnapshotReport {
+    if crate::util::fault::should_fire("snapshot.corrupt") {
+        // exercise the cold-start degradation without real disk damage
+        return cold("fault injected: snapshot.corrupt");
+    }
     let bytes = match std::fs::read(path) {
         Ok(b) => b,
         Err(e) => return cold(format!("unreadable snapshot {}: {e}", path.display())),

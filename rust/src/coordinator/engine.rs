@@ -340,7 +340,11 @@ impl Engine {
     /// compiles fresh plans per call instead of growing the map without
     /// bound — odd methods get slower, never a leak.
     pub fn plan_for(&self, method: &Method) -> Arc<DataflowPlan> {
-        let mut plans = self.plans.lock().unwrap();
+        // A panic elsewhere while this lock was held leaves the memo map
+        // in a valid state (worst case: one method not yet inserted), so
+        // poisoning is recoverable — don't let it cascade into every
+        // later batch.
+        let mut plans = self.plans.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(p) = plans.get(method) {
             return p.clone();
         }
@@ -416,7 +420,19 @@ impl InferenceBackend for Engine {
         // reference model's asserts panic (and kill) a server worker.
         let m = method.to_reference();
         validate_request(self.model.num_layers(), self.input_dim(), inputs, &m)?;
-        Ok(self.evaluate_batch(inputs, &m).logits)
+        // Belt-and-braces panic isolation: validation is supposed to make
+        // evaluation infallible, but a kernel bug (or an armed fault
+        // point upstream) must surface as a typed error on THIS request,
+        // not unwind into whichever thread called the backend.
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.evaluate_batch(inputs, &m).logits
+        })) {
+            Ok(logits) => Ok(logits),
+            Err(_) => {
+                self.metrics.record_panic_caught();
+                Err(ServeError::internal("engine panicked during batch evaluation"))
+            }
+        }
     }
 }
 

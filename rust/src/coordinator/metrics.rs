@@ -28,6 +28,11 @@ pub struct Metrics {
     /// without a backend dispatch, not counted in `requests` or `errors`.
     pub expired: AtomicU64,
     pub voters_evaluated: AtomicU64,
+    /// Panics caught at a thread boundary (batch dispatch, shard worker,
+    /// connection handler) and converted into typed `Internal` errors.
+    pub panics_caught: AtomicU64,
+    /// Cluster shard workers respawned after dying or wedging.
+    pub shard_restarts: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
     /// Ring-overwrite cursor for the latency reservoir.  A dedicated
     /// counter (not a re-load of `requests`) so concurrent recorders each
@@ -46,7 +51,7 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.voters_evaluated.fetch_add(voters as u64, Ordering::Relaxed);
         let idx = (self.cursor.fetch_add(1, Ordering::Relaxed) as usize) % RESERVOIR;
-        let mut l = self.latencies_us.lock().unwrap();
+        let mut l = self.latencies_us.lock().unwrap_or_else(|e| e.into_inner());
         if l.len() >= RESERVOIR {
             // ring overwrite keeps the reservoir recent
             l[idx] = latency.as_micros() as u64;
@@ -69,9 +74,23 @@ impl Metrics {
         self.expired.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one panic caught at a thread boundary and converted into a
+    /// typed error instead of a hang or a torn batch.
+    pub fn record_panic_caught(&self) {
+        self.panics_caught.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one shard worker respawned by the cluster supervisor.
+    pub fn record_shard_restart(&self) {
+        self.shard_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Latency percentile in µs (0.0..=1.0); None before any request.
+    /// A poisoned reservoir lock is recovered, not propagated: latency
+    /// samples are always valid values, a panicking recorder can at worst
+    /// lose its own sample.
     pub fn latency_percentile_us(&self, q: f64) -> Option<u64> {
-        let mut l = self.latencies_us.lock().unwrap().clone();
+        let mut l = self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).clone();
         if l.is_empty() {
             return None;
         }
@@ -98,6 +117,9 @@ impl Metrics {
             p99_us: self.latency_percentile_us(0.99),
             p999_us: self.latency_percentile_us(0.999),
             isa: crate::nn::simd::isa_label(),
+            faults_injected: crate::util::fault::injected(),
+            panics_caught: self.panics_caught.load(Ordering::Relaxed),
+            shard_restarts: self.shard_restarts.load(Ordering::Relaxed),
             cache: None,
             memo: None,
             sparsity: None,
@@ -152,6 +174,17 @@ pub struct MetricsSummary {
     /// The SIMD kernel path requests were served with (`nn::simd`
     /// dispatch): `"avx2"`, `"neon"`, `"scalar"` or `"scalar(forced)"`.
     pub isa: &'static str,
+    /// Faults fired by the deterministic injection registry
+    /// (`util::fault`).  Process-wide: 0 in every build without the
+    /// `chaos` capability and in unarmed chaos builds, so plain
+    /// invocations render byte-identically.
+    pub faults_injected: u64,
+    /// Panics caught at thread boundaries and converted into typed
+    /// errors (this instance's counter).
+    pub panics_caught: u64,
+    /// Shard workers respawned by the cluster supervisor (folded in from
+    /// the cluster tier on cluster deployments).
+    pub shard_restarts: u64,
     /// Feature-decomposition cache counters (hit/miss/eviction and the
     /// MULs/ADDs avoided), when a cache-enabled engine produced this
     /// summary.  For a cluster deployment this is the shared service's
@@ -174,6 +207,13 @@ fn num(v: u64) -> Json {
 }
 
 impl MetricsSummary {
+    /// Whether any fault-domain counter is nonzero.  The `faults[..]`
+    /// Display section and the JSON keys render only then, so fault-free
+    /// runs keep their pre-existing output byte-identical.
+    fn has_fault_counters(&self) -> bool {
+        self.faults_injected > 0 || self.panics_caught > 0 || self.shard_restarts > 0
+    }
+
     /// Render as a JSON object — what `GET /metrics` and the binary
     /// `MetricsRequest` frame serve.  Counters are exact up to 2⁵³ (JSON
     /// numbers are f64); absent percentiles render as `null`, and the
@@ -190,6 +230,11 @@ impl MetricsSummary {
         o.insert("p99_us".to_string(), self.p99_us.map(num).unwrap_or(Json::Null));
         o.insert("p999_us".to_string(), self.p999_us.map(num).unwrap_or(Json::Null));
         o.insert("kernel".to_string(), Json::Str(self.isa.to_string()));
+        if self.has_fault_counters() {
+            o.insert("faults_injected".to_string(), num(self.faults_injected));
+            o.insert("panics_caught".to_string(), num(self.panics_caught));
+            o.insert("shard_restarts".to_string(), num(self.shard_restarts));
+        }
         if let Some(c) = &self.cache {
             let mut co = BTreeMap::new();
             co.insert("hits".to_string(), num(c.hits));
@@ -200,6 +245,9 @@ impl MetricsSummary {
             co.insert("bytes".to_string(), num(c.bytes));
             co.insert("muls_avoided".to_string(), num(c.muls_avoided));
             co.insert("adds_avoided".to_string(), num(c.adds_avoided));
+            if c.poison_recoveries > 0 {
+                co.insert("poison_recoveries".to_string(), num(c.poison_recoveries));
+            }
             o.insert("cache".to_string(), Json::Obj(co));
         }
         if let Some(m) = &self.memo {
@@ -259,6 +307,13 @@ impl std::fmt::Display for MetricsSummary {
             self.p999_us.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
             self.isa,
         )?;
+        if self.has_fault_counters() {
+            write!(
+                f,
+                "  faults[injected={} panics={} restarts={}]",
+                self.faults_injected, self.panics_caught, self.shard_restarts
+            )?;
+        }
         if let Some(c) = &self.cache {
             write!(f, "  cache[{c}]")?;
         }
@@ -376,6 +431,58 @@ mod tests {
         let (p99, p999) = (s.p99_us.unwrap(), s.p999_us.unwrap());
         assert!(p999 > p99, "p999 {p999} must sit above p99 {p99}");
         assert_eq!(s.to_json().get("p999_us").and_then(Json::as_usize), Some(999));
+    }
+
+    #[test]
+    fn fault_counters_render_only_when_nonzero() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(5), 1);
+        let mut s = m.summary();
+        // Pin the global injection count locally: the chaos CI leg runs
+        // this test with the registry armed process-wide.
+        s.faults_injected = 0;
+        assert_eq!(s.panics_caught, 0);
+        assert_eq!(s.shard_restarts, 0);
+        assert!(!s.to_string().contains("faults["), "no faults section on a clean run");
+        assert_eq!(s.to_json().get("panics_caught"), None);
+        s.faults_injected = 7;
+        s.panics_caught = 2;
+        s.shard_restarts = 1;
+        let text = s.to_string();
+        assert!(text.contains("faults[injected=7 panics=2 restarts=1]"), "{text}");
+        let j = s.to_json();
+        assert_eq!(j.get("faults_injected").and_then(Json::as_usize), Some(7));
+        assert_eq!(j.get("panics_caught").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("shard_restarts").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn panic_and_restart_recorders_feed_the_summary() {
+        let m = Metrics::new();
+        m.record_panic_caught();
+        m.record_panic_caught();
+        m.record_shard_restart();
+        let s = m.summary();
+        assert_eq!(s.panics_caught, 2);
+        assert_eq!(s.shard_restarts, 1);
+    }
+
+    #[test]
+    fn poisoned_reservoir_lock_is_recovered_not_propagated() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        m.record(Duration::from_micros(10), 1);
+        // Poison the reservoir lock by panicking while holding it.
+        let p = Arc::clone(&m);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _g = p.latencies_us.lock().unwrap();
+            panic!("simulated recorder panic");
+        }));
+        // Recording and reading must keep working (samples stay valid —
+        // the panicking recorder can at worst lose its own sample).
+        m.record(Duration::from_micros(20), 1);
+        assert!(m.latency_percentile_us(1.0).is_some());
+        assert_eq!(m.summary().requests, 2);
     }
 
     #[test]

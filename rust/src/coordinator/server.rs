@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use crate::nn::plan::LogitBatch;
 use crate::serve::ServeError;
+use crate::util::fault;
 
 use super::metrics::Metrics;
 use super::plan::InferenceMethod;
@@ -300,7 +301,9 @@ fn router_loop<B, F>(
                         Err(e) => {
                             eprintln!("worker {wi}: backend build failed: {e}");
                             // Drain and fail requests routed to this worker.
-                            while let Ok(batch) = { brx.lock().unwrap().recv() } {
+                            while let Ok(batch) =
+                                { brx.lock().unwrap_or_else(|e| e.into_inner()).recv() }
+                            {
                                 for req in batch {
                                     let err = ServeError::internal(format!(
                                         "backend unavailable: {e}"
@@ -314,7 +317,8 @@ fn router_loop<B, F>(
                         }
                     };
                     loop {
-                        let batch = { brx.lock().unwrap().recv() };
+                        let batch =
+                            { brx.lock().unwrap_or_else(|e| e.into_inner()).recv() };
                         match batch {
                             Ok(batch) => run_batch(&backend, batch, &metrics),
                             Err(_) => break,
@@ -427,7 +431,33 @@ fn run_batch<B: InferenceBackend>(backend: &B, batch: Vec<Request>, metrics: &Me
     }
     let method = batch[0].method.clone();
     let inputs: Vec<Vec<f32>> = batch.iter_mut().map(|r| std::mem::take(&mut r.image)).collect();
-    match backend.run_batch(&inputs, &method) {
+    // Panic isolation: a panicking backend (a kernel bug, or the armed
+    // `worker.panic` fault point) must never unwind through the worker
+    // thread — that would strand every queued waiter behind a dead
+    // `brx` consumer.  The batch inputs are untouched by an unwound
+    // dispatch, so a caught panic is retried in place; after the retry
+    // budget the whole batch degrades to a typed `Internal` response.
+    const PANIC_RETRIES: usize = 5;
+    let mut outcome = None;
+    for _ in 0..PANIC_RETRIES {
+        let dispatch = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fault::maybe_panic("worker.panic");
+            backend.run_batch(&inputs, &method)
+        }));
+        match dispatch {
+            Ok(r) => {
+                outcome = Some(r);
+                break;
+            }
+            Err(_) => metrics.record_panic_caught(),
+        }
+    }
+    let outcome = outcome.unwrap_or_else(|| {
+        Err(ServeError::internal(format!(
+            "backend panicked {PANIC_RETRIES} times; batch abandoned"
+        )))
+    });
+    match outcome {
         Ok(all) if all.len() == batch.len() => {
             // `LogitBatch::iter` always yields `len()` views, so the zip
             // answers every request even for degenerate voter shapes.
@@ -756,6 +786,83 @@ mod tests {
             "a non-input-attributable failure must not re-run each request solo"
         );
         assert_eq!(handle.metrics.summary().errors, 4);
+        handle.shutdown();
+    }
+
+    /// Panics on the first `panics` dispatches, then delegates to the
+    /// engine — exercises the worker's catch_unwind retry loop.
+    struct PanicsFirst {
+        engine: Arc<Engine>,
+        remaining: AtomicUsize,
+    }
+
+    impl PanicsFirst {
+        fn new(panics: usize) -> Self {
+            Self { engine: test_engine(), remaining: AtomicUsize::new(panics) }
+        }
+    }
+
+    impl InferenceBackend for PanicsFirst {
+        fn run_batch(
+            &self,
+            inputs: &[Vec<f32>],
+            method: &InferenceMethod,
+        ) -> Result<LogitBatch, ServeError> {
+            if self
+                .remaining
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+                .is_ok()
+            {
+                panic!("synthetic backend panic");
+            }
+            self.engine.run_batch(inputs, method)
+        }
+    }
+
+    #[test]
+    fn transient_backend_panic_is_retried_in_place() {
+        let backend = Arc::new(PanicsFirst::new(2));
+        let b = backend.clone();
+        let handle = serve(
+            move || Ok(b.clone()),
+            ServerConfig { max_batch: 1, workers: 1, ..ServerConfig::default() },
+        );
+        let p = handle.classify(vec![0.5; 16], InferenceMethod::Standard { t: 2 }).unwrap();
+        let outcome = p.wait();
+        let s = handle.metrics.summary();
+        if fault::armed() {
+            // The chaos leg injects extra worker.panic fires on top of
+            // the two synthetic ones: counts (and, rarely, the retry
+            // budget) loosen, but every panic must still be accounted.
+            assert!(s.panics_caught >= 2, "{}", s.panics_caught);
+        } else {
+            assert!(outcome.is_ok(), "two panics fit inside the retry budget: {outcome:?}");
+            assert_eq!(s.panics_caught, 2);
+            assert_eq!((s.requests, s.errors), (1, 0));
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn persistent_backend_panic_degrades_to_a_typed_error() {
+        let backend = Arc::new(PanicsFirst::new(usize::MAX));
+        let b = backend.clone();
+        let handle = serve(
+            move || Ok(b.clone()),
+            ServerConfig { max_batch: 1, workers: 1, ..ServerConfig::default() },
+        );
+        let m = InferenceMethod::Standard { t: 2 };
+        let p = handle.classify(vec![0.5; 16], m.clone()).unwrap();
+        let e = p.wait().unwrap_err();
+        assert_eq!(e.code(), ServeError::internal("").code());
+        assert!(e.to_string().contains("panicked"), "{e}");
+        // The worker thread survived: the next request is still answered
+        // (with the same typed error — the backend never recovers).
+        let p = handle.classify(vec![0.5; 16], m).unwrap();
+        assert!(p.wait().is_err());
+        let s = handle.metrics.summary();
+        assert!(s.panics_caught >= 10, "five per request: {}", s.panics_caught);
+        assert_eq!(s.errors, 2);
         handle.shutdown();
     }
 

@@ -11,6 +11,8 @@
 //!   `artifacts/fig6.json` (built by `make fig6`).
 //! * `hwsweep` — Fig 7: area vs α.
 //! * `plan`    — show a method's artifact dispatch schedule.
+//! * `probe`   — connect to a running `--listen` server (with optional
+//!   retry/backoff), ping it, and print its metrics JSON.
 //!
 //! `serve` and `eval` read the trained posterior + test set from the
 //! artifact directory, or run on the self-contained synthetic model and
@@ -34,7 +36,8 @@ use bayesdm::nn::bnn::{BnnModel, Method as NnMethod};
 use bayesdm::nn::fixed_infer::QBnnModel;
 use bayesdm::opcount::report::{render_table3, render_table4, table4_rows};
 use bayesdm::serve::{
-    serve_deployment, Deployment, NetServer, ServeConfig, ServeConfigBuilder, ServeError,
+    serve_deployment, Deployment, NetServer, RetryPolicy, ServeConfig, ServeConfigBuilder,
+    ServeError, WireClient,
 };
 use bayesdm::util::cli::Args;
 use bayesdm::util::error::{Context, Error, Result};
@@ -54,6 +57,7 @@ SUBCOMMANDS:
            [--sparse-threshold D] [--force-dense]
            [--listen ADDR] [--duration-s S] [--conn-threads N]
            [--request-timeout-ms MS] [--io-timeout-ms MS]
+           [--fault-spec SPEC]
   eval     --method M --limit N --batch B --workers W [--synthetic]
            [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
            [--memo-mb MB] [--cache-snapshot PATH]
@@ -62,6 +66,7 @@ SUBCOMMANDS:
   fig6
   hwsweep
   plan     --method M --alpha A
+  probe    --connect ADDR [--retry-max N] [--retry-base-ms MS]
 
 methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
 --workers: engine pool threads (default: one per core)
@@ -124,7 +129,21 @@ methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
             request end-to-end (default 30000).
 --io-timeout-ms: with --listen, per-socket read/write timeout
             (default 10000).  Slow-loris peers are disconnected instead
-            of pinning a connection thread.";
+            of pinning a connection thread.
+--fault-spec: arm deterministic fault injection for this run (requires
+            a build with the `chaos` feature; other builds refuse the
+            flag with an error).  Comma-separated clauses of
+            point[:p=PROB][:seed=S][:ms=MS], e.g.
+            `worker.panic:p=0.01:seed=7,io.read:p=0.02`.  Points:
+            io.read io.write frame.corrupt worker.panic shard.stall
+            snapshot.corrupt cache.poison.  BAYESDM_FAULT_SPEC does the
+            same; the flag wins.  Unarmed runs are byte-identical to
+            builds without the feature.
+--retry-max / --retry-base-ms: probe's retry budget — attempts after
+            the first try (default 0 = off) and the initial backoff
+            delay (default 50, doubling per attempt, capped at 5 s,
+            with deterministic jitter).  Only transient transport
+            errors are retried; request errors surface immediately.";
 
 fn parse_method(s: &str, alpha: f64) -> Result<InferenceMethod> {
     InferenceMethod::parse(s, alpha)
@@ -313,6 +332,13 @@ fn main() -> Result<()> {
             if args.has("force-dense") {
                 bayesdm::nn::kernels::force_dense();
             }
+            // Arm before the deployment exists so snapshot-load faults
+            // land too.  Without the `chaos` feature this is a clean
+            // refusal, not a silent no-op.
+            let fault_spec = args.get("fault-spec", "");
+            if !fault_spec.is_empty() {
+                bayesdm::util::fault::arm(&fault_spec).map_err(Error::msg)?;
+            }
             let (mut b, alpha) = deployment_builder(&mut args, 0xBA135)?;
             b = b.max_batch(max_batch);
             let listen = args.get("listen", "");
@@ -469,6 +495,22 @@ fn main() -> Result<()> {
                 println!("  {count:>5} × {name}");
             }
             println!("  total dispatches/request: {}", p.total_dispatches());
+        }
+        "probe" => {
+            let addr = args.get("connect", "127.0.0.1:8484");
+            let retry_max: u32 = args.get_parse("retry-max", 0).map_err(Error::msg)?;
+            let retry_base_ms: u64 = args.get_parse("retry-base-ms", 50).map_err(Error::msg)?;
+            args.finish().map_err(Error::msg)?;
+            let policy = RetryPolicy { max: retry_max, base_ms: retry_base_ms };
+            let t0 = Instant::now();
+            let mut client = WireClient::connect_with_retry(&addr, policy)
+                .map_err(|e| Error::msg(format!("probe {addr}: {e}")))?;
+            client.ping().map_err(|e| Error::msg(format!("probe {addr}: ping: {e}")))?;
+            println!("probe {addr}: ok ({:.1} ms)", t0.elapsed().as_secs_f64() * 1e3);
+            let text = client
+                .metrics_text()
+                .map_err(|e| Error::msg(format!("probe {addr}: metrics: {e}")))?;
+            println!("{text}");
         }
         other => {
             eprintln!("unknown subcommand `{other}`\n{USAGE}");

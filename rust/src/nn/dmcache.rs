@@ -64,6 +64,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::opcount::model::LayerCost;
+use crate::util::fault;
 use crate::util::hash::{fnv1a_f32s, fnv1a_u64, mix64, FNV_OFFSET};
 
 /// Estimated fixed overhead per entry (map slot, ring slot, `Arc` header,
@@ -217,6 +218,9 @@ pub struct CacheStats {
     pub muls_avoided: u64,
     /// Additions skipped by hits.
     pub adds_avoided: u64,
+    /// Shards reset after a panic poisoned their mutex — each is a
+    /// one-time loss of that shard's entries, degraded to cold misses.
+    pub poison_recoveries: u64,
 }
 
 impl std::fmt::Display for CacheStats {
@@ -231,7 +235,11 @@ impl std::fmt::Display for CacheStats {
             self.bytes,
             self.muls_avoided,
             self.adds_avoided,
-        )
+        )?;
+        if self.poison_recoveries > 0 {
+            write!(f, " poison_recoveries={}", self.poison_recoveries)?;
+        }
+        Ok(())
     }
 }
 
@@ -332,6 +340,7 @@ pub struct DmCache {
     evictions: AtomicU64,
     muls_avoided: AtomicU64,
     adds_avoided: AtomicU64,
+    poison_recoveries: AtomicU64,
 }
 
 impl DmCache {
@@ -351,6 +360,28 @@ impl DmCache {
             evictions: AtomicU64::new(0),
             muls_avoided: AtomicU64::new(0),
             adds_avoided: AtomicU64::new(0),
+            poison_recoveries: AtomicU64::new(0),
+        }
+    }
+
+    /// Take one shard's lock, recovering from poisoning: a panic that
+    /// unwound through a guard may have left the shard mid-update (a
+    /// half-linked ring, unaccounted bytes), so the afflicted shard is
+    /// reset to empty — every entry it held degrades to a future cold
+    /// miss, counted in [`CacheStats::poison_recoveries`] — and the
+    /// poison flag is cleared so the *next* lock is an ordinary hit path
+    /// again.  One panicking request must never disable the cache
+    /// service for every engine sharing it.
+    fn lock_shard<'a>(&self, m: &'a Mutex<Shard>) -> std::sync::MutexGuard<'a, Shard> {
+        match m.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                m.clear_poison();
+                let mut g = poisoned.into_inner();
+                *g = Shard::default();
+                self.poison_recoveries.fetch_add(1, Ordering::Relaxed);
+                g
+            }
         }
     }
 
@@ -373,8 +404,18 @@ impl DmCache {
     /// own copy — see `nn::bnn`).
     pub fn lookup(&self, fp: u64, layer: usize, x: &[f32]) -> Option<Arc<Decomp>> {
         let key = Self::key(fp, layer, x);
+        if fault::should_fire("cache.poison") {
+            // Genuinely poison the shard's mutex (panic while holding the
+            // guard) so the chaos suite exercises the real recovery path,
+            // not a simulation of it.
+            let m = self.shard(key);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _g = m.lock().unwrap_or_else(|e| e.into_inner());
+                panic!("fault injected: cache.poison");
+            }));
+        }
         let found = {
-            let mut shard = self.shard(key).lock().unwrap();
+            let mut shard = self.lock_shard(self.shard(key));
             match shard.map.get_mut(&key) {
                 Some(e)
                     if e.fp == fp
@@ -414,7 +455,7 @@ impl DmCache {
         let key = Self::key(fp, layer, x);
         let mut evicted = 0u64;
         {
-            let mut shard = self.shard(key).lock().unwrap();
+            let mut shard = self.lock_shard(self.shard(key));
             while shard.bytes + bytes > self.shard_budget {
                 if !shard.clock_evict() {
                     break;
@@ -453,7 +494,7 @@ impl DmCache {
     pub fn export_for(&self, fp: u64) -> Vec<ExportedEntry> {
         let mut out = Vec::new();
         for s in &self.shards {
-            let s = s.lock().unwrap();
+            let s = self.lock_shard(s);
             for e in s.map.values() {
                 if e.fp == fp {
                     out.push(ExportedEntry {
@@ -471,7 +512,7 @@ impl DmCache {
     pub fn stats(&self) -> CacheStats {
         let (mut entries, mut bytes) = (0u64, 0u64);
         for s in &self.shards {
-            let s = s.lock().unwrap();
+            let s = self.lock_shard(s);
             entries += s.map.len() as u64;
             bytes += s.bytes as u64;
         }
@@ -484,6 +525,7 @@ impl DmCache {
             bytes,
             muls_avoided: self.muls_avoided.load(Ordering::Relaxed),
             adds_avoided: self.adds_avoided.load(Ordering::Relaxed),
+            poison_recoveries: self.poison_recoveries.load(Ordering::Relaxed),
         }
     }
 }
@@ -652,6 +694,34 @@ mod tests {
         // different input: spurious miss, never a wrong hit.
         assert!(c.lookup(0, 0, &[-0.0f32]).is_none());
         assert!(c.lookup(0, 0, &[0.0f32]).is_some());
+    }
+
+    #[test]
+    fn poisoned_shard_degrades_to_cold_misses_then_recovers() {
+        let cfg = CacheConfig { capacity_bytes: 64 << 10, shards: 1 };
+        let c = DmCache::new(&cfg);
+        let x = vec![1.0f32, 2.0, 3.0];
+        c.insert(7, 0, &x, &decomp(4, 3, 0.5));
+        assert!(c.lookup(7, 0, &x).is_some());
+
+        // Panic while holding the shard lock: the mutex is now poisoned.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = c.shards[0].lock().unwrap();
+            panic!("simulated panic mid-update");
+        }));
+
+        // First touch after the poison: the shard is reset (cold miss,
+        // never an unwrap panic) and the recovery is counted once.
+        assert!(c.lookup(7, 0, &x).is_none(), "poisoned shard degrades to a miss");
+        assert_eq!(c.stats().poison_recoveries, 1);
+
+        // The cache keeps serving: re-insert warms it again, and later
+        // locks are ordinary (no further recoveries, entries persist).
+        c.insert(7, 0, &x, &decomp(4, 3, 0.5));
+        assert!(c.lookup(7, 0, &x).is_some(), "cache must re-warm after recovery");
+        assert_eq!(c.stats().poison_recoveries, 1, "recovery is one-time, not per-lock");
+        let s = c.stats().to_string();
+        assert!(s.contains("poison_recoveries=1"), "{s}");
     }
 
     #[test]

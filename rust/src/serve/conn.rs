@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::plan::InferenceMethod;
 use crate::coordinator::server::{Pending, Response, ServerHandle};
 use crate::nn::bnn::Method;
+use crate::util::fault;
 
 use super::error::ServeError;
 use super::proto::{self, Frame, ReadOutcome, WireResponse, MAGIC};
@@ -156,6 +157,12 @@ fn serve_binary(stream: TcpStream, shared: &Arc<ConnShared>) {
         if shared.draining() {
             break;
         }
+        if fault::should_fire("io.read") {
+            // simulated EAGAIN: skip one read attempt without touching
+            // the stream — the retry semantics every poll-tick read
+            // already has, just forced
+            continue;
+        }
         match proto::read_frame(&mut reader, shared.max_frame, shared.io_timeout) {
             Ok(ReadOutcome::Idle) => continue,
             Ok(ReadOutcome::Eof) => break,
@@ -230,8 +237,25 @@ fn writer_loop(
         };
         // After a write failure keep draining (and discarding) replies so
         // the reader side never blocks, but stop touching the socket.
+        if !broken && fault::should_fire("io.write") {
+            // simulated dead peer: identical degraded mode to a real
+            // write failure below
+            broken = true;
+            shutdown_both(&stream);
+        }
         if !broken && proto::write_frame(&mut stream, &frame).is_err() {
             broken = true;
+            shutdown_both(&stream);
         }
     }
+}
+
+/// A reply stream that broke mid-conversation is closed in BOTH
+/// directions immediately: the peer blocked on its read sees EOF
+/// promptly — a typed "server closed the connection" — instead of
+/// waiting out its read timeout, and our own reader loop (a clone of
+/// the same socket) sees EOF too, so the whole connection winds down
+/// instead of idling until the client gives up.
+fn shutdown_both(stream: &TcpStream) {
+    let _ = stream.shutdown(std::net::Shutdown::Both);
 }

@@ -439,6 +439,13 @@ impl Deployment {
                 s.memo = c.memo;
                 s.shards = c.shards;
                 s.sparsity = c.sparsity;
+                // fault-domain counters recorded by the cluster's own
+                // supervisor, additive to the server tier's.  NOT
+                // `faults_injected`: that one is process-global and the
+                // server summary already carries it — adding the
+                // cluster's copy would double-count.
+                s.panics_caught += c.panics_caught;
+                s.shard_restarts += c.shard_restarts;
             }
         }
     }
@@ -540,9 +547,25 @@ impl NetServer {
                 std::thread::Builder::new()
                     .name(format!("bayesdm-conn-{i}"))
                     .spawn(move || loop {
-                        let stream = { crx.lock().unwrap().recv() };
+                        // lock poisoning: a sibling that panicked between
+                        // recv and handle left nothing torn (the guard
+                        // only covers the recv call), so recover and keep
+                        // serving instead of wedging the whole pool
+                        let stream = { crx.lock().unwrap_or_else(|e| e.into_inner()).recv() };
                         match stream {
-                            Ok(s) => conn::handle_conn(s, &shared),
+                            Ok(s) => {
+                                // a panicking connection handler must cost
+                                // exactly one connection, never the pool
+                                // thread (each would be a permanent slot
+                                // leak — N panics = a dead server)
+                                let caught =
+                                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                        conn::handle_conn(s, &shared)
+                                    }));
+                                if caught.is_err() {
+                                    shared.handle.metrics.record_panic_caught();
+                                }
+                            }
                             Err(_) => break,
                         }
                     })
@@ -650,12 +673,60 @@ fn reject_overloaded(mut s: TcpStream) {
     );
 }
 
+/// Client-side retry policy for transient transport failures: capped
+/// exponential backoff with deterministic jitter.  The default (`max:
+/// 0`) disables retries entirely — existing callers see byte-identical
+/// behavior unless they opt in (CLI: `--retry-max` / `--retry-base-ms`).
+///
+/// What retries and what doesn't is the load-bearing part:
+///
+/// * **Retried**: connection refusal and transport-level failures
+///   (`connect: `/`send: `/`read: ` IO errors, a server that closed the
+///   connection mid-stream) — the failure modes of a restarting or
+///   momentarily unreachable server — plus [`ServeError::Overloaded`],
+///   which is the server explicitly asking for later, spread by backoff.
+/// * **Never retried**: `BadRequest`/`DimMismatch` (resending a bad
+///   request yields the same answer), `Timeout` (the budget is spent;
+///   the caller owns deciding whether more waiting is acceptable) and
+///   `ShuttingDown` (the server told us not to come back).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retry attempts after the initial try; 0 = retries off.
+    pub max: u32,
+    /// First backoff delay in milliseconds; doubles per attempt, capped
+    /// at 5 s.
+    pub base_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max: 0, base_ms: 50 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (0-based): `base · 2^attempt`,
+    /// capped, plus up to 25% deterministic jitter (hash of the attempt
+    /// and a caller salt — no entropy source, so test runs replay).
+    fn delay(&self, attempt: u32, salt: u64) -> Duration {
+        const CAP_MS: u64 = 5_000;
+        let exp = self.base_ms.max(1).saturating_mul(1u64 << attempt.min(12)).min(CAP_MS);
+        let jitter = crate::util::hash::mix64(salt ^ u64::from(attempt)) % (exp / 4).max(1);
+        Duration::from_millis(exp + jitter)
+    }
+}
+
 /// A small blocking client for the binary protocol — what the protocol
 /// tests, the CI smoke leg and operator tooling speak.
 pub struct WireClient {
     reader: std::io::BufReader<TcpStream>,
     writer: TcpStream,
     next_id: u64,
+    /// Where we connected, for transparent reconnects mid-retry.  `None`
+    /// when the peer address could not be observed — retries then fail
+    /// over to surfacing the original error.
+    peer: Option<SocketAddr>,
+    policy: RetryPolicy,
 }
 
 impl WireClient {
@@ -663,10 +734,78 @@ impl WireClient {
         let stream = TcpStream::connect(addr)
             .map_err(|e| ServeError::internal(format!("connect: {e}")))?;
         let _ = stream.set_nodelay(true);
+        let peer = stream.peer_addr().ok();
         let writer = stream
             .try_clone()
             .map_err(|e| ServeError::internal(format!("clone stream: {e}")))?;
-        Ok(Self { reader: std::io::BufReader::new(stream), writer, next_id: 1 })
+        Ok(Self {
+            reader: std::io::BufReader::new(stream),
+            writer,
+            next_id: 1,
+            peer,
+            policy: RetryPolicy::default(),
+        })
+    }
+
+    /// Connect with retries on refusal (a server that is still binding,
+    /// or restarting) and install `policy` for subsequent requests.
+    pub fn connect_with_retry<A: ToSocketAddrs>(
+        addr: A,
+        policy: RetryPolicy,
+    ) -> Result<Self, ServeError> {
+        let mut attempt = 0u32;
+        loop {
+            match Self::connect(&addr) {
+                Ok(mut client) => {
+                    client.policy = policy;
+                    return Ok(client);
+                }
+                Err(e) if attempt < policy.max && Self::transient(&e) => {
+                    std::thread::sleep(policy.delay(attempt, 0x5EED));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Install a retry policy on an existing client.
+    pub fn set_retry(&mut self, policy: RetryPolicy) {
+        self.policy = policy;
+    }
+
+    /// Whether `e` is worth retrying at all (see [`RetryPolicy`]).
+    fn transient(e: &ServeError) -> bool {
+        match e {
+            ServeError::Overloaded => true,
+            ServeError::Internal(msg) => {
+                msg.starts_with("connect: ")
+                    || msg.starts_with("send: ")
+                    || msg.starts_with("read: ")
+                    || msg == "server closed the connection"
+            }
+            _ => false,
+        }
+    }
+
+    /// Transport failures invalidate the stream (a half-written frame
+    /// would desynchronize the protocol); `Overloaded` arrives as a
+    /// well-formed error frame on a healthy connection.
+    fn needs_reconnect(e: &ServeError) -> bool {
+        !matches!(e, ServeError::Overloaded)
+    }
+
+    /// Replace the underlying stream with a fresh connection to the
+    /// original peer.  Request ids stay monotonic across reconnects so
+    /// late replies from the old stream can never match a new id.
+    fn reconnect(&mut self) -> Result<(), ServeError> {
+        let peer = self
+            .peer
+            .ok_or_else(|| ServeError::internal("connect: peer address unknown"))?;
+        let fresh = Self::connect(peer)?;
+        self.reader = fresh.reader;
+        self.writer = fresh.writer;
+        Ok(())
     }
 
     fn fresh_id(&mut self) -> u64 {
@@ -686,6 +825,9 @@ impl WireClient {
     /// timeout, so `Idle` cannot occur).
     pub fn recv(&mut self) -> Result<Frame, ServeError> {
         loop {
+            if crate::util::fault::should_fire("io.read") {
+                continue; // simulated EAGAIN, client side: skip one read
+            }
             let out = proto::read_frame(
                 &mut self.reader,
                 proto::MAX_FRAME_PAYLOAD,
@@ -730,8 +872,34 @@ impl WireClient {
         self.classify_with_deadline(method, input, None)
     }
 
-    /// One classify round-trip with an explicit latency budget.
+    /// One classify round-trip with an explicit latency budget.  Under a
+    /// non-default [`RetryPolicy`] transient failures are retried with
+    /// backoff (reconnecting when the transport broke); request errors
+    /// surface immediately — see [`RetryPolicy`] for the split.
     pub fn classify_with_deadline(
+        &mut self,
+        method: &Method,
+        input: &[f32],
+        deadline_ms: Option<u64>,
+    ) -> Result<WireResponse, ServeError> {
+        let mut attempt = 0u32;
+        loop {
+            match self.classify_once(method, input, deadline_ms) {
+                Ok(resp) => return Ok(resp),
+                Err(e) if attempt < self.policy.max && Self::transient(&e) => {
+                    let policy = self.policy;
+                    std::thread::sleep(policy.delay(attempt, self.next_id));
+                    attempt += 1;
+                    if Self::needs_reconnect(&e) && self.reconnect().is_err() {
+                        return Err(e);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn classify_once(
         &mut self,
         method: &Method,
         input: &[f32],
@@ -850,5 +1018,43 @@ mod tests {
         let mut s = crate::coordinator::metrics::Metrics::new().summary();
         d.fold_metrics(&mut s);
         assert!(s.memo.is_some(), "cluster summary carries memo counters");
+    }
+
+    #[test]
+    fn retry_policy_classifies_errors_and_caps_backoff() {
+        // retried: capacity + transport
+        assert!(WireClient::transient(&ServeError::Overloaded));
+        assert!(WireClient::transient(&ServeError::internal("connect: refused")));
+        assert!(WireClient::transient(&ServeError::internal("send: broken pipe")));
+        assert!(WireClient::transient(&ServeError::internal("read: reset")));
+        assert!(WireClient::transient(&ServeError::internal("server closed the connection")));
+        // never retried: request errors, spent budgets, lifecycle
+        assert!(!WireClient::transient(&ServeError::BadRequest("x".into())));
+        assert!(!WireClient::transient(&ServeError::DimMismatch("x".into())));
+        assert!(!WireClient::transient(&ServeError::Timeout));
+        assert!(!WireClient::transient(&ServeError::ShuttingDown));
+        assert!(!WireClient::transient(&ServeError::internal("backend exploded")));
+
+        let p = RetryPolicy { max: 5, base_ms: 50 };
+        for attempt in 0..40 {
+            let d = p.delay(attempt, 7);
+            assert!(d >= Duration::from_millis(50), "attempt {attempt}: {d:?}");
+            // 5s cap + 25% jitter headroom
+            assert!(d <= Duration::from_millis(6_250), "attempt {attempt}: {d:?}");
+        }
+        assert_eq!(p.delay(3, 9), p.delay(3, 9), "backoff must be deterministic");
+        assert_eq!(RetryPolicy::default().max, 0, "retries are strictly opt-in");
+    }
+
+    #[test]
+    fn connect_with_retry_gives_up_with_the_connect_error() {
+        // a port with no listener: refusal is transient, so the budget is
+        // spent, then the underlying error surfaces
+        let e = WireClient::connect_with_retry(
+            "127.0.0.1:1",
+            RetryPolicy { max: 2, base_ms: 1 },
+        )
+        .unwrap_err();
+        assert!(e.to_string().starts_with("connect: "), "{e}");
     }
 }

@@ -206,7 +206,13 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
 
 /// Write one frame to `w` (single buffered write + flush).
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
-    w.write_all(&encode(frame))?;
+    let mut buf = encode(frame);
+    if crate::util::fault::should_fire("frame.corrupt") {
+        // flip the first magic byte: the receiver deterministically
+        // rejects the frame ("bad frame magic") instead of misparsing it
+        buf[0] ^= 0xFF;
+    }
+    w.write_all(&buf)?;
     w.flush()
 }
 

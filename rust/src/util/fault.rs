@@ -1,0 +1,374 @@
+//! Deterministic fault injection for the chaos suite and operator drills.
+//!
+//! A registry of **named fault points** threaded through the serving
+//! stack.  Each point is armed with a firing probability, an optional
+//! seed and an optional duration via a spec string:
+//!
+//! ```text
+//! worker.panic:p=0.01:seed=7,io.read:p=0.02
+//! ```
+//!
+//! Grammar: comma-separated clauses, each `name:p=PROB[:seed=U64][:ms=U64]`
+//! with `PROB` in `[0, 1]`.  Unknown names, malformed pairs and
+//! out-of-range probabilities are rejected with a message naming the
+//! offending clause — an operator typo must never arm a partial spec.
+//!
+//! Arming comes from `--fault-spec` (explicit, [`arm`]) or the
+//! `BAYESDM_FAULT_SPEC` environment variable (picked up once, at the
+//! first probe); an explicit [`arm`]/[`disarm`] always overrides the
+//! environment.
+//!
+//! # Determinism
+//!
+//! A fault point fires as a pure function of `(seed, point, trial#)`:
+//! trial `n` hashes through the same FNV-1a + SplitMix64 pipeline the
+//! engine's content-derived seed schedule uses, and fires iff the
+//! resulting 53-bit fraction is below `p`.  Re-arming the same spec
+//! replays the identical fire/no-fire sequence, which is what lets
+//! `tests/chaos.rs` make exact assertions instead of statistical ones.
+//!
+//! # The `chaos` capability
+//!
+//! Injection is compiled in only with the `chaos` cargo feature.  Without
+//! it every probe is a constant `false` (the hot path carries no
+//! injection cost and plain invocations stay byte-identical) and [`arm`]
+//! returns a clean error — a release serving build rejects `--fault-spec`
+//! instead of silently ignoring it.  Panic *isolation* and poison
+//! *recovery* are not feature-gated: the stack always degrades, the
+//! feature only adds the ability to prove it on demand.
+
+/// Every registered fault point, in registry order.
+///
+/// | point              | site                                      | effect when fired |
+/// |--------------------|-------------------------------------------|-------------------|
+/// | `io.read`          | serve read loops (server + client)        | simulated EAGAIN: one poll tick is skipped |
+/// | `io.write`         | connection writer loop                    | the connection's write half breaks; the socket is shut down |
+/// | `frame.corrupt`    | `proto::write_frame`                      | first byte (magic) of the encoded frame is flipped |
+/// | `worker.panic`     | batch dispatch (`server::run_batch`), cluster shard workers | a `panic!` the isolation layer must catch |
+/// | `shard.stall`      | cluster shard workers                     | the worker sleeps `ms` before evaluating (wedge) |
+/// | `snapshot.corrupt` | `snapshot::load`                          | the snapshot is rejected → reported cold start |
+/// | `cache.poison`     | `DmCache::lookup`                         | the shard mutex is poisoned mid-lookup |
+pub const FAULT_POINTS: [&str; 7] = [
+    "io.read",
+    "io.write",
+    "frame.corrupt",
+    "worker.panic",
+    "shard.stall",
+    "snapshot.corrupt",
+    "cache.poison",
+];
+
+/// One parsed `name:p=..[:seed=..][:ms=..]` clause.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Clause {
+    /// Index into [`FAULT_POINTS`].
+    pub point: usize,
+    /// Firing probability in `[0, 1]`.
+    pub p: f64,
+    /// Trial-sequence seed (default 0).
+    pub seed: u64,
+    /// Duration knob for stall-style points, milliseconds (default 0).
+    pub ms: u64,
+}
+
+/// Parse a fault spec (see the module docs for the grammar).  Pure — no
+/// registry state is touched, so the grammar is testable in every build.
+pub fn parse_spec(spec: &str) -> Result<Vec<Clause>, String> {
+    let mut out = Vec::new();
+    for clause in spec.split(',') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let mut parts = clause.split(':');
+        let name = parts.next().unwrap_or("").trim();
+        let point = FAULT_POINTS.iter().position(|&n| n == name).ok_or_else(|| {
+            format!(
+                "fault-spec: unknown fault point `{name}` (known: {})",
+                FAULT_POINTS.join(", ")
+            )
+        })?;
+        let (mut p, mut seed, mut ms) = (None, 0u64, 0u64);
+        for kv in parts {
+            let kv = kv.trim();
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("fault-spec: `{kv}` is not a key=value pair"))?;
+            let v = v.trim();
+            match k.trim() {
+                "p" => {
+                    let prob: f64 = v
+                        .parse()
+                        .map_err(|_| format!("fault-spec: p=`{v}` is not a number"))?;
+                    if !(0.0..=1.0).contains(&prob) {
+                        return Err(format!("fault-spec: p={prob} is outside [0, 1]"));
+                    }
+                    p = Some(prob);
+                }
+                "seed" => {
+                    seed = v
+                        .parse()
+                        .map_err(|_| format!("fault-spec: seed=`{v}` is not a u64"))?;
+                }
+                "ms" => {
+                    ms = v.parse().map_err(|_| format!("fault-spec: ms=`{v}` is not a u64"))?;
+                }
+                other => {
+                    return Err(format!("fault-spec: unknown key `{other}` (p, seed, ms)"));
+                }
+            }
+        }
+        let p = p.ok_or_else(|| format!("fault-spec: `{name}` is missing p=PROB"))?;
+        out.push(Clause { point, p, seed, ms });
+    }
+    if out.is_empty() {
+        return Err("fault-spec: empty spec".into());
+    }
+    Ok(out)
+}
+
+/// Panic with the canonical injected-fault message iff `point` fires.
+/// The isolation layers downstream must convert this into a typed error.
+pub fn maybe_panic(point: &str) {
+    if should_fire(point) {
+        panic!("fault injected: {point}");
+    }
+}
+
+#[cfg(feature = "chaos")]
+mod registry {
+    use super::{parse_spec, FAULT_POINTS};
+    use crate::util::hash::{fnv1a_u64, mix64, FNV_OFFSET};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Once;
+
+    struct PointState {
+        /// `f64::to_bits` of the firing probability; 0 ⇒ disarmed.
+        p_bits: AtomicU64,
+        seed: AtomicU64,
+        ms: AtomicU64,
+        trials: AtomicU64,
+    }
+
+    impl PointState {
+        const fn new() -> Self {
+            Self {
+                p_bits: AtomicU64::new(0),
+                seed: AtomicU64::new(0),
+                ms: AtomicU64::new(0),
+                trials: AtomicU64::new(0),
+            }
+        }
+    }
+
+    static POINTS: [PointState; 7] = [
+        PointState::new(),
+        PointState::new(),
+        PointState::new(),
+        PointState::new(),
+        PointState::new(),
+        PointState::new(),
+        PointState::new(),
+    ];
+    static ARMED: AtomicBool = AtomicBool::new(false);
+    /// Process-wide count of faults actually fired (all points).
+    static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+    /// Consume `BAYESDM_FAULT_SPEC` exactly once, before the first probe
+    /// or explicit arm, so an explicit spec always wins afterwards.
+    fn ensure_env_spec() {
+        static ONCE: Once = Once::new();
+        ONCE.call_once(|| {
+            if let Ok(spec) = std::env::var("BAYESDM_FAULT_SPEC") {
+                let spec = spec.trim().to_owned();
+                if !spec.is_empty() {
+                    if let Err(e) = install(&spec) {
+                        eprintln!("BAYESDM_FAULT_SPEC ignored: {e}");
+                    }
+                }
+            }
+        });
+    }
+
+    fn install(spec: &str) -> Result<(), String> {
+        let clauses = parse_spec(spec)?;
+        for s in &POINTS {
+            s.p_bits.store(0, Ordering::SeqCst);
+            s.seed.store(0, Ordering::SeqCst);
+            s.ms.store(0, Ordering::SeqCst);
+            s.trials.store(0, Ordering::SeqCst);
+        }
+        for c in clauses {
+            let s = &POINTS[c.point];
+            s.p_bits.store(c.p.to_bits(), Ordering::SeqCst);
+            s.seed.store(c.seed, Ordering::SeqCst);
+            s.ms.store(c.ms, Ordering::SeqCst);
+        }
+        ARMED.store(true, Ordering::SeqCst);
+        Ok(())
+    }
+
+    pub fn arm(spec: &str) -> Result<(), String> {
+        ensure_env_spec();
+        install(spec)
+    }
+
+    pub fn disarm() {
+        ensure_env_spec();
+        ARMED.store(false, Ordering::SeqCst);
+        for s in &POINTS {
+            s.p_bits.store(0, Ordering::SeqCst);
+            s.trials.store(0, Ordering::SeqCst);
+        }
+    }
+
+    pub fn armed() -> bool {
+        ensure_env_spec();
+        ARMED.load(Ordering::SeqCst)
+    }
+
+    fn index_of(point: &str) -> usize {
+        FAULT_POINTS
+            .iter()
+            .position(|&n| n == point)
+            .unwrap_or_else(|| panic!("unregistered fault point `{point}`"))
+    }
+
+    /// Deterministic trial: fire iff the hash of `(seed, point, trial#)`
+    /// as a 53-bit fraction is below `p`.
+    fn fire(i: usize) -> bool {
+        let s = &POINTS[i];
+        let p = f64::from_bits(s.p_bits.load(Ordering::Relaxed));
+        if p <= 0.0 {
+            return false;
+        }
+        let trial = s.trials.fetch_add(1, Ordering::Relaxed);
+        let seed = s.seed.load(Ordering::Relaxed);
+        let h = mix64(fnv1a_u64(fnv1a_u64(fnv1a_u64(FNV_OFFSET, seed), i as u64), trial));
+        let frac = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let fired = frac < p;
+        if fired {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+        }
+        fired
+    }
+
+    pub fn should_fire(point: &str) -> bool {
+        ensure_env_spec();
+        if !ARMED.load(Ordering::Relaxed) {
+            return false;
+        }
+        fire(index_of(point))
+    }
+
+    pub fn fire_ms(point: &str) -> Option<u64> {
+        if should_fire(point) {
+            Some(POINTS[index_of(point)].ms.load(Ordering::Relaxed))
+        } else {
+            None
+        }
+    }
+
+    pub fn injected() -> u64 {
+        INJECTED.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(feature = "chaos")]
+pub use registry::{arm, armed, disarm, fire_ms, injected, should_fire};
+
+/// Arm a fault spec.  Without the `chaos` feature this is a clean,
+/// deliberate refusal: serving builds must not half-support injection.
+#[cfg(not(feature = "chaos"))]
+pub fn arm(_spec: &str) -> Result<(), String> {
+    Err("fault injection requires a build with the `chaos` capability \
+         (cargo build --features chaos)"
+        .into())
+}
+
+/// No-op without the `chaos` feature.
+#[cfg(not(feature = "chaos"))]
+pub fn disarm() {}
+
+/// Always `false` without the `chaos` feature.
+#[cfg(not(feature = "chaos"))]
+pub fn armed() -> bool {
+    false
+}
+
+/// Constant `false` without the `chaos` feature: the serving hot path
+/// carries no injection branches.
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+pub fn should_fire(_point: &str) -> bool {
+    false
+}
+
+/// Constant `None` without the `chaos` feature.
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+pub fn fire_ms(_point: &str) -> Option<u64> {
+    None
+}
+
+/// Always 0 without the `chaos` feature.
+#[cfg(not(feature = "chaos"))]
+pub fn injected() -> u64 {
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_accepts_the_documented_forms() {
+        let v = parse_spec("worker.panic:p=0.01:seed=7,io.read:p=0.02").unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0], Clause { point: 3, p: 0.01, seed: 7, ms: 0 });
+        assert_eq!(v[1], Clause { point: 0, p: 0.02, seed: 0, ms: 0 });
+        let v = parse_spec("shard.stall:p=1:ms=250").unwrap();
+        assert_eq!(v[0], Clause { point: 4, p: 1.0, seed: 0, ms: 250 });
+        // whitespace tolerated around clauses and pairs
+        let v = parse_spec(" cache.poison : p=0.5 , snapshot.corrupt:p=1 ").unwrap();
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn grammar_rejects_bad_specs_with_named_clauses() {
+        for (spec, needle) in [
+            ("", "empty"),
+            ("worker.explode:p=0.5", "unknown fault point `worker.explode`"),
+            ("worker.panic", "missing p="),
+            ("worker.panic:p=1.5", "outside [0, 1]"),
+            ("worker.panic:p=-0.1", "outside [0, 1]"),
+            ("worker.panic:p=abc", "not a number"),
+            ("worker.panic:p=0.5:seed=xyz", "not a u64"),
+            ("worker.panic:p=0.5:q=2", "unknown key `q`"),
+            ("worker.panic:banana", "not a key=value pair"),
+        ] {
+            let e = parse_spec(spec).unwrap_err();
+            assert!(e.contains(needle), "spec `{spec}`: {e}");
+        }
+    }
+
+    #[test]
+    fn every_point_name_parses() {
+        for (i, name) in FAULT_POINTS.iter().enumerate() {
+            let v = parse_spec(&format!("{name}:p=0.5")).unwrap();
+            assert_eq!(v[0].point, i, "{name}");
+        }
+    }
+
+    #[cfg(not(feature = "chaos"))]
+    #[test]
+    fn without_the_capability_arming_is_a_clean_refusal() {
+        let e = arm("worker.panic:p=0.5").unwrap_err();
+        assert!(e.contains("chaos"), "{e}");
+        assert!(!armed());
+        assert!(!should_fire("worker.panic"));
+        assert_eq!(fire_ms("shard.stall"), None);
+        assert_eq!(injected(), 0);
+        disarm(); // no-op, must not panic
+    }
+}

@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod fault;
 pub mod hash;
 pub mod json;
 pub mod traffic;

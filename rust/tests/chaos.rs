@@ -1,0 +1,398 @@
+//! Chaos suite (DESIGN.md §15): armed-fault integration tests.
+//!
+//! Compiled only with the `chaos` feature — the suite arms the
+//! deterministic fault registry and drives real traffic through the
+//! injection points, asserting the three hardening contracts:
+//!
+//! 1. **Typed, never torn** — injected panics and transport faults
+//!    surface as typed `ServeError`s (or succeed outright), never a
+//!    hang, a poisoned lock, or a half-written batch.
+//! 2. **Self-healing** — dead or wedged cluster shards are respawned on
+//!    the same `ContentHash` seed schedule, so post-recovery answers are
+//!    bit-identical to a fault-free run.
+//! 3. **Accounted** — every caught panic, shard restart and cache
+//!    poison recovery shows up in the metrics counters.
+//!
+//! The registry is process-global, so every test serializes on one lock
+//! and disarms on entry and on drop (panic-safe).  Zero artifact
+//! dependencies: everything runs on the synthetic posterior.
+
+#![cfg(feature = "chaos")]
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use bayesdm::cluster::{ClusterRouter, MemoConfig};
+use bayesdm::coordinator::{
+    serve_engine, CacheConfig, Engine, EngineConfig, InferenceMethod, SeedSchedule, ServerConfig,
+};
+use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+use bayesdm::nn::bnn::{BnnModel, Method};
+use bayesdm::serve::{Deployment, NetServer, RetryPolicy, ServeConfig, ServeError, WireClient};
+use bayesdm::util::fault;
+
+const SEED: u64 = 0xC4A0_5EED;
+const ARCH: [usize; 4] = [20, 16, 10, 6];
+
+/// Serializes registry use across the whole binary and guarantees a
+/// disarmed registry on entry and exit, even when a test panics.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+struct Disarmed {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for Disarmed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn exclusive() -> Disarmed {
+    let lock = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::disarm();
+    Disarmed { _lock: lock }
+}
+
+fn model() -> BnnModel {
+    BnnModel::synthetic(&ARCH, 0xAB)
+}
+
+fn cfg(shards: usize, cache: CacheConfig) -> EngineConfig {
+    EngineConfig {
+        workers: 2,
+        seed: SEED,
+        cache,
+        seed_schedule: SeedSchedule::ContentHash,
+        alpha: 1.0,
+        shards,
+        memo: MemoConfig::disabled(),
+        snapshot: None,
+        sparse_threshold: None,
+    }
+}
+
+fn router(shards: usize) -> ClusterRouter {
+    ClusterRouter::new(model(), cfg(shards, CacheConfig::disabled()))
+}
+
+fn inputs(count: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut r = XorShift128Plus::new(seed);
+    (0..count).map(|_| (0..ARCH[0]).map(|_| r.next_f32()).collect()).collect()
+}
+
+fn dm() -> Method {
+    Method::DmBnn { schedule: vec![2, 3, 2] }
+}
+
+// ------------------------------------------------------------- registry
+
+#[test]
+fn registry_is_deterministic_and_replayable() {
+    let _g = exclusive();
+    fault::arm("worker.panic:p=0.5:seed=9").expect("arm");
+    let first: Vec<bool> = (0..64).map(|_| fault::should_fire("worker.panic")).collect();
+    assert!(first.iter().any(|&b| b), "p=0.5 over 64 trials must fire");
+    assert!(first.iter().any(|&b| !b), "p=0.5 over 64 trials must also miss");
+    assert!(fault::injected() > 0);
+
+    // Re-arming the same spec resets the trial counter: the exact same
+    // fire/miss sequence replays — the property that makes a chaos run
+    // reproducible from its spec alone.
+    fault::arm("worker.panic:p=0.5:seed=9").expect("re-arm");
+    let second: Vec<bool> = (0..64).map(|_| fault::should_fire("worker.panic")).collect();
+    assert_eq!(first, second, "same spec must replay the same schedule");
+
+    fault::disarm();
+    assert!(!fault::armed());
+    assert!(!fault::should_fire("worker.panic"), "disarmed registry must never fire");
+
+    assert!(fault::arm("bogus.point:p=0.5").is_err(), "unknown point must be rejected");
+    assert!(fault::arm("worker.panic").is_err(), "missing p= must be rejected");
+    assert!(fault::arm("worker.panic:p=nope").is_err(), "bad probability must be rejected");
+}
+
+// ----------------------------------------------------- panic isolation
+
+#[test]
+fn injected_worker_panics_surface_as_typed_internal_errors() {
+    let _g = exclusive();
+    let engine = Arc::new(Engine::new(model(), cfg(1, CacheConfig::disabled())));
+    let handle = serve_engine(
+        engine,
+        ServerConfig { max_batch: 1, workers: 1, ..ServerConfig::default() },
+    );
+    let m = InferenceMethod::Standard { t: 3 };
+    let x = vec![0.5f32; ARCH[0]];
+
+    // p=1: every dispatch attempt panics, the retry budget drains, and
+    // the request is answered with a typed internal error — not a hang.
+    fault::arm("worker.panic:p=1:seed=1").expect("arm");
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        let e = handle.classify(x.clone(), m.clone()).unwrap().wait().unwrap_err();
+        assert!(matches!(e, ServeError::Internal(_)), "{e:?}");
+        assert!(e.to_string().contains("panicked"), "{e}");
+    }
+    assert!(t0.elapsed() < Duration::from_secs(30), "typed failure must be prompt");
+    let s = handle.metrics.summary();
+    assert!(s.panics_caught >= 5, "every retry books a caught panic: {}", s.panics_caught);
+    assert!(s.faults_injected >= 5, "injections are accounted: {}", s.faults_injected);
+
+    // Disarm: the same worker threads keep serving — isolation, not
+    // respawn-on-every-request.
+    fault::disarm();
+    let r = handle.classify(x, m).unwrap().wait().expect("healthy after disarm");
+    assert!(r.class < ARCH[3]);
+    handle.shutdown();
+}
+
+// ------------------------------------------------- self-healing shards
+
+#[test]
+fn cluster_worker_panics_heal_and_preserve_bit_parity() {
+    let _g = exclusive();
+    let xs = inputs(12, 7);
+    let m = dm();
+    let want = router(1).evaluate(&xs, &m).expect("fault-free baseline");
+
+    // A panic rate of 25% across 4 rounds of 12 requests: shards die and
+    // respawn underneath the traffic, yet every answer is bit-identical
+    // to the fault-free baseline — the ContentHash purity contract.
+    fault::arm("worker.panic:p=0.25:seed=11").expect("arm");
+    let r = router(3);
+    for round in 0..4 {
+        let got = r.evaluate(&xs, &m).expect("evaluate under injected panics");
+        assert_eq!(got.logits, want.logits, "round {round}: logits must not change");
+        assert_eq!(got.ops.muls, want.ops.muls, "round {round}");
+        assert_eq!(got.ops.adds, want.ops.adds, "round {round}");
+    }
+    let s = r.metrics_summary();
+    assert!(s.panics_caught >= 1, "48 trials at p=0.25 must catch panics");
+    assert!(s.shard_restarts >= 1, "a caught panic heals the shard");
+}
+
+#[test]
+fn persistent_worker_panics_exhaust_the_resubmit_budget_with_a_typed_error() {
+    let _g = exclusive();
+    let xs = inputs(1, 13);
+    let m = dm();
+    let want = router(1).evaluate(&xs, &m).expect("fault-free baseline");
+
+    let r = router(2);
+    fault::arm("worker.panic:p=1:seed=2").expect("arm");
+    let t0 = Instant::now();
+    let e = r.evaluate(&xs, &m).expect_err("every attempt panics: the budget must drain");
+    assert!(matches!(e, ServeError::Internal(_)), "{e:?}");
+    assert!(e.to_string().contains("resubmissions"), "{e}");
+    assert!(t0.elapsed() < Duration::from_secs(30), "budget exhaustion must be prompt");
+    let s = r.metrics_summary();
+    assert!(s.panics_caught >= 8, "{}", s.panics_caught);
+    assert!(s.shard_restarts >= 8, "{}", s.shard_restarts);
+
+    // Disarm: the next dispatch finds the dead lane, heals it once more
+    // and serves the identical answer.
+    fault::disarm();
+    let got = r.evaluate(&xs, &m).expect("healed after disarm");
+    assert_eq!(got.logits, want.logits);
+    assert_eq!(got.ops.muls, want.ops.muls);
+}
+
+#[test]
+fn wedged_shard_is_detected_by_the_watchdog_and_healed() {
+    let _g = exclusive();
+    let xs = inputs(1, 17);
+    let m = dm();
+    let want = router(1).evaluate(&xs, &m).expect("fault-free baseline");
+
+    // Every dispatch stalls 400 ms; the watchdog fires at 100 ms and
+    // resubmits on a respawned worker.  The stalled workers eventually
+    // wake and reply too — and because every answer is a pure function
+    // of (seed, input), accepting whichever reply lands first is safe.
+    // One input keeps the attempt budget far from the ~400 ms at which
+    // the first stalled worker wakes and resolves the slot.
+    std::env::set_var("BAYESDM_WATCHDOG_MS", "100");
+    let r = router(2);
+    std::env::remove_var("BAYESDM_WATCHDOG_MS");
+    fault::arm("shard.stall:p=1:ms=400").expect("arm");
+    let t0 = Instant::now();
+    let got = r.evaluate(&xs, &m).expect("stalls are healed, not fatal");
+    assert!(t0.elapsed() < Duration::from_secs(20), "watchdog must bound the stall");
+    assert_eq!(got.logits, want.logits, "post-recovery answers are bit-identical");
+    assert_eq!(got.ops.muls, want.ops.muls);
+    assert!(r.metrics_summary().shard_restarts >= 1, "the wedge must be healed");
+    fault::disarm();
+    let again = r.evaluate(&xs, &m).expect("healthy after disarm");
+    assert_eq!(again.logits, want.logits);
+}
+
+#[test]
+fn killed_shards_respawn_on_the_same_seed_schedule() {
+    let _g = exclusive();
+    let xs = inputs(8, 19);
+    let m = dm();
+    let r = router(3);
+    let want = r.evaluate(&xs, &m).expect("first pass");
+    for shard in 0..3 {
+        r.kill_shard(shard);
+    }
+    let got = r.evaluate(&xs, &m).expect("after respawn");
+    assert_eq!(got.logits, want.logits, "respawned shards replay the seed schedule");
+    assert_eq!(got.ops.muls, want.ops.muls);
+    assert!(r.metrics_summary().shard_restarts >= 3);
+}
+
+// ------------------------------------------------------- state domains
+
+#[test]
+fn cache_poison_degrades_to_cold_misses_with_bit_parity() {
+    let _g = exclusive();
+    let xs = inputs(6, 23);
+    let m = dm();
+    let want = router(1).evaluate(&xs, &m).expect("cache-off baseline");
+
+    // Every lookup genuinely poisons its shard mutex first: the cache
+    // degrades to all-cold misses (identical arithmetic to cache-off),
+    // never a propagated panic, and each reset is counted.
+    fault::arm("cache.poison:p=1:seed=3").expect("arm");
+    let r = ClusterRouter::new(model(), cfg(2, CacheConfig::with_mb(8)));
+    for round in 0..2 {
+        let got = r.evaluate(&xs, &m).expect("poisoned cache keeps serving");
+        assert_eq!(got.logits, want.logits, "round {round}");
+        assert_eq!(got.ops.muls, want.ops.muls, "round {round}: all-miss == cache-off");
+    }
+    let stats = r.metrics_summary().cache.expect("cache enabled");
+    assert!(stats.poison_recoveries >= 1, "{stats}");
+    assert_eq!(stats.hits, 0, "a shard poisoned on every probe cannot hit: {stats}");
+}
+
+#[test]
+fn corrupt_snapshot_is_rejected_into_a_cold_start() {
+    let _g = exclusive();
+    let path =
+        std::env::temp_dir().join(format!("bayesdm_chaos_{}_snapshot.snap", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let xs = inputs(6, 29);
+    let m = dm();
+
+    let mut snap_cfg = cfg(1, CacheConfig::with_mb(8));
+    snap_cfg.snapshot = Some(path.to_string_lossy().into_owned());
+    let want = {
+        let warm = ClusterRouter::new(model(), snap_cfg.clone());
+        let want = warm.evaluate(&xs, &m).expect("warming pass");
+        warm.save_snapshot().expect("configured").expect("save ok");
+        want
+    };
+
+    fault::arm("snapshot.corrupt:p=1").expect("arm");
+    let r = ClusterRouter::new(model(), snap_cfg);
+    let report = r.snapshot_load_report().expect("snapshot configured");
+    assert!(
+        report.rejected.as_deref().unwrap_or("").contains("fault injected"),
+        "corrupt load must be rejected, not trusted: {report:?}"
+    );
+    let got = r.evaluate(&xs, &m).expect("cold start keeps serving");
+    assert_eq!(got.logits, want.logits, "cold start answers bit-identically");
+    fault::disarm();
+    drop(r); // drop persists a fresh, valid snapshot
+    let _ = std::fs::remove_file(&path);
+}
+
+// ------------------------------------------------------------ the wire
+
+fn net_config() -> ServeConfig {
+    ServeConfig::builder()
+        .seed(7)
+        .seed_schedule(SeedSchedule::ContentHash)
+        .workers(2)
+        .max_batch(1)
+        .cache_mb(0)
+        .memo_mb(0)
+        .shards(1)
+        .listen("127.0.0.1:0")
+        .conn_threads(2)
+        .build()
+        .expect("net config")
+}
+
+#[test]
+fn read_faults_are_invisible_to_wire_clients() {
+    let _g = exclusive();
+    let cfg = net_config();
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+    let m = Method::Standard { t: 4 };
+    let x: Vec<f32> = (0..ARCH[0]).map(|j| j as f32 / ARCH[0] as f32).collect();
+    let want = client.classify(&m, &x).expect("fault-free reference");
+
+    // io.read skips read attempts on both sides of the socket — the
+    // retry semantics every poll-tick read already has, just forced.
+    // Traffic is delayed, never altered.
+    fault::arm("io.read:p=0.6:seed=2").expect("arm");
+    for round in 0..4 {
+        let got = client.classify(&m, &x).expect("read skips must be invisible");
+        assert_eq!(got.class, want.class, "round {round}");
+        assert_eq!(got.voters, want.voters, "round {round}");
+        assert_eq!(got.confidence.to_bits(), want.confidence.to_bits(), "round {round}");
+        assert_eq!(got.entropy.to_bits(), want.entropy.to_bits(), "round {round}");
+    }
+    fault::disarm();
+    let summary = server.shutdown();
+    assert!(summary.faults_injected >= 1, "injections must be visible in /metrics");
+}
+
+#[test]
+fn broken_reply_stream_is_a_typed_error_and_a_fresh_connection_recovers() {
+    let _g = exclusive();
+    let cfg = net_config();
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    let m = Method::Standard { t: 4 };
+    let x = vec![0.25f32; ARCH[0]];
+
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+    client.classify(&m, &x).expect("healthy before arming");
+
+    // io.write breaks the server's reply stream: the connection is shut
+    // down so the client sees a prompt typed error, never a stuck read.
+    fault::arm("io.write:p=1:seed=4").expect("arm");
+    let t0 = Instant::now();
+    let e = client.classify(&m, &x).expect_err("no reply can arrive");
+    assert!(matches!(e, ServeError::Internal(_)), "{e:?}");
+    assert!(t0.elapsed() < Duration::from_secs(30), "failure must be prompt, not a hang");
+
+    // The fault domain is one connection: a fresh one works once the
+    // fault clears, and the retrying client does this automatically.
+    fault::disarm();
+    let mut fresh =
+        WireClient::connect_with_retry(server.local_addr(), RetryPolicy { max: 2, base_ms: 1 })
+            .expect("reconnect");
+    fresh.classify(&m, &x).expect("server is unharmed");
+    server.shutdown();
+}
+
+#[test]
+fn corrupted_frames_are_detected_not_trusted() {
+    let _g = exclusive();
+    let cfg = net_config();
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    let m = Method::Standard { t: 4 };
+    let x = vec![0.75f32; ARCH[0]];
+
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+    client.classify(&m, &x).expect("healthy before arming");
+
+    // frame.corrupt flips the magic of every written frame: whichever
+    // side reads it rejects the stream with a typed framing error — a
+    // corrupt frame must never be decoded into a plausible answer.
+    fault::arm("frame.corrupt:p=1:seed=6").expect("arm");
+    // (which side detects it first depends on whose write fired)
+    client.classify(&m, &x).expect_err("corruption must be detected");
+
+    fault::disarm();
+    let mut fresh = WireClient::connect(server.local_addr()).expect("fresh connection");
+    fresh.classify(&m, &x).expect("server is unharmed");
+    server.shutdown();
+}
