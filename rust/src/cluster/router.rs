@@ -53,7 +53,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -71,7 +71,8 @@ use crate::nn::bnn::{BnnModel, Method};
 use crate::nn::dmcache::CacheConfig;
 use crate::nn::plan::LogitBatch;
 use crate::opcount::counter::OpCounter;
-use crate::serve::ServeError;
+use crate::serve::{RetryPolicy, ServeError};
+use crate::trace::{self, EventId};
 use crate::util::fault;
 
 use super::cacheservice::{CacheService, ShardBreakdown};
@@ -174,6 +175,9 @@ fn spawn_shard_worker(
         .spawn(move || {
             while let Ok(job) = rx.recv() {
                 let ShardJob { slot, input, method, respond } = job;
+                if trace::armed() {
+                    trace::emit(EventId::ShardDequeue, shard as u64, slot as u64, generation);
+                }
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     fault::maybe_panic("worker.panic");
                     if let Some(ms) = fault::fire_ms("shard.stall") {
@@ -210,6 +214,9 @@ pub struct ClusterRouter {
     /// and intra-batch duplicate replays are not counted — their saving
     /// shows up in the memo stats and the `*_avoided` op counters).
     dispatched: Vec<AtomicU64>,
+    /// Consecutive heals per shard since its last accepted dispatch —
+    /// drives the crash-loop respawn backoff (see [`heal_backoff`]).
+    heal_streaks: Vec<AtomicU32>,
     memo: Option<ResponseMemo>,
     service: Option<CacheService>,
     snapshot_path: Option<String>,
@@ -281,6 +288,7 @@ impl ClusterRouter {
             lanes,
             watchdog: watchdog_from_env(),
             dispatched: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            heal_streaks: (0..shards).map(|_| AtomicU32::new(0)).collect(),
             memo,
             service,
             snapshot_path,
@@ -346,7 +354,7 @@ impl ClusterRouter {
     /// channel, and the purity contract makes any late reply it manages
     /// to deliver bit-identical (and deduplicated) anyway.
     fn heal_shard(&self, shard: usize, observed_generation: u64) {
-        let old_handle = {
+        let (old_handle, new_generation) = {
             let mut lane = self.lanes[shard].lock().unwrap_or_else(|e| e.into_inner());
             if lane.generation != observed_generation {
                 return; // another observer already healed this failure
@@ -361,7 +369,7 @@ impl ClusterRouter {
                 self.engines[shard].clone(),
                 rx,
             ));
-            old
+            (old, lane.generation)
         };
         if let Some(h) = old_handle {
             if h.is_finished() {
@@ -370,6 +378,21 @@ impl ClusterRouter {
             // else: stalled-but-alive — detach rather than block recovery
             // on a thread the watchdog already gave up on.
         }
+        // Pace crash-loops: consecutive heals of the same shard back off
+        // exponentially with deterministic jitter; any accepted dispatch
+        // resets the streak.  The sleep is outside the lane lock, so the
+        // fresh worker (and every other shard) serves while we pause.
+        let streak = self.heal_streaks[shard].fetch_add(1, Ordering::Relaxed);
+        let pause = heal_backoff(streak, shard);
+        if trace::armed() {
+            trace::emit(
+                EventId::ShardRestart,
+                shard as u64,
+                new_generation,
+                pause.as_millis() as u64,
+            );
+        }
+        std::thread::sleep(pause);
         self.metrics.record_shard_restart();
     }
 
@@ -381,7 +404,7 @@ impl ClusterRouter {
     /// This is the test/chaos entry point for exercising the same respawn
     /// path the panic and watchdog recoveries use.
     pub fn kill_shard(&self, shard: usize) {
-        let old_handle = {
+        let (old_handle, new_generation) = {
             let mut lane = self.lanes[shard].lock().unwrap_or_else(|e| e.into_inner());
             lane.generation += 1;
             let (tx, rx) = mpsc::sync_channel::<ShardJob>(SHARD_QUEUE_DEPTH);
@@ -393,10 +416,15 @@ impl ClusterRouter {
                 self.engines[shard].clone(),
                 rx,
             ));
-            old
+            (old, lane.generation)
         };
         if let Some(h) = old_handle {
             let _ = h.join();
+        }
+        // A deliberate restart is not a crash-loop: no backoff, streak
+        // untouched (the next real failure starts from where it was).
+        if trace::armed() {
+            trace::emit(EventId::ShardRestart, shard as u64, new_generation, 0);
         }
         self.metrics.record_shard_restart();
     }
@@ -406,6 +434,7 @@ impl ClusterRouter {
     /// the caller polls (bounded by the watchdog) instead of blocking,
     /// because a blocking send into a wedged shard could never recover.
     fn dispatch(&self, shard: usize, mut job: ShardJob) -> Result<u64, ServeError> {
+        let slot = job.slot;
         let mut deadline = Instant::now() + self.watchdog;
         let mut heals = 0u32;
         loop {
@@ -414,7 +443,13 @@ impl ClusterRouter {
                 (lane.tx.clone(), lane.generation)
             };
             match tx.try_send(job) {
-                Ok(()) => return Ok(generation),
+                Ok(()) => {
+                    self.heal_streaks[shard].store(0, Ordering::Relaxed);
+                    if trace::armed() {
+                        trace::emit(EventId::ShardEnqueue, shard as u64, slot as u64, generation);
+                    }
+                    return Ok(generation);
+                }
                 Err(TrySendError::Disconnected(j)) => {
                     // worker died with the queue open: respawn and retry
                     job = j;
@@ -474,6 +509,9 @@ impl ClusterRouter {
         let mut pending: HashMap<usize, PendingSlot> = HashMap::new();
         for (slot, x) in inputs.iter().enumerate() {
             if let Some(hit) = self.memo.as_ref().and_then(|m| m.lookup(method, x)) {
+                if trace::armed() {
+                    trace::emit(EventId::MemoReplay, slot as u64, 0, 0);
+                }
                 logits.data_mut()[slot * stride..(slot + 1) * stride].copy_from_slice(&hit.flat);
                 ops += replay_ops(hit.muls, hit.adds);
                 continue;
@@ -655,6 +693,15 @@ impl InferenceBackend for ClusterRouter {
 /// and all of it is marked avoided.
 fn replay_ops(muls: u64, adds: u64) -> OpCounter {
     OpCounter { muls, adds, muls_avoided: muls, adds_avoided: adds }
+}
+
+/// Backoff before the `streak`-th consecutive respawn of one shard: the
+/// client-side [`RetryPolicy`] curve (capped doubling, deterministic
+/// jitter, no entropy source) from a 1 ms base, exponent clamped so the
+/// worst crash-loop pause stays under ~80 ms — far below the watchdog,
+/// so recovery paces itself without ever looking like a stall.
+fn heal_backoff(streak: u32, shard: usize) -> Duration {
+    RetryPolicy { max: 0, base_ms: 1 }.delay(streak.min(6), 0x5A1D ^ shard as u64)
 }
 
 impl Drop for ClusterRouter {
@@ -879,6 +926,23 @@ mod tests {
         if !fault::armed() {
             assert_eq!(r.metrics_summary().shard_restarts, 5);
         }
+    }
+
+    #[test]
+    fn heal_backoff_is_deterministic_and_bounded() {
+        for shard in 0..4usize {
+            for streak in 0..20u32 {
+                let d = heal_backoff(streak, shard);
+                assert_eq!(d, heal_backoff(streak, shard), "backoff must replay");
+                assert!(d >= Duration::from_millis(1), "streak {streak}: {d:?}");
+                // 1 ms base, exponent clamped at 6, +25% jitter: < 80 ms
+                assert!(d <= Duration::from_millis(80), "streak {streak}: {d:?}");
+            }
+        }
+        // the streak actually escalates the pause
+        assert!(heal_backoff(6, 0) > heal_backoff(0, 0));
+        // distinct shards draw distinct jitter at the same streak
+        assert!((0..64).any(|s| heal_backoff(5, s) != heal_backoff(5, 0)));
     }
 
     #[test]

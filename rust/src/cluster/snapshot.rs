@@ -108,6 +108,16 @@ pub fn save(cache: &DmCache, fp: u64, path: &Path) -> Result<SnapshotReport, Ser
     let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, &file)
         .map_err(|e| ServeError::internal(format!("write {}: {e}", tmp.display())))?;
+    if crate::util::fault::should_fire("snapshot.save") {
+        // Simulated write failure after the `.tmp` landed but before the
+        // rename: clean the sibling up and fail — an existing snapshot at
+        // `path` must be untouched (the atomicity the chaos suite pins).
+        let _ = std::fs::remove_file(&tmp);
+        return Err(ServeError::internal(format!(
+            "fault injected: snapshot.save ({})",
+            tmp.display()
+        )));
+    }
     std::fs::rename(&tmp, path).map_err(|e| {
         ServeError::internal(format!("rename {} -> {}: {e}", tmp.display(), path.display()))
     })?;

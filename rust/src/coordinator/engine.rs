@@ -389,6 +389,14 @@ impl Engine {
             SeedSchedule::Sequence => idx,
             SeedSchedule::ContentHash => hash_f32_matrix(inputs),
         };
+        if crate::trace::armed() {
+            let tag = match method {
+                Method::Standard { .. } => 0,
+                Method::Hybrid { .. } => 1,
+                Method::DmBnn { .. } => 2,
+            };
+            crate::trace::emit(crate::trace::EventId::EngineBatch, stream, inputs.len() as u64, tag);
+        }
         self.evaluate_batch_seeded(inputs, method, split_seed(self.seed, stream))
     }
 

@@ -33,6 +33,11 @@ pub struct Metrics {
     pub panics_caught: AtomicU64,
     /// Cluster shard workers respawned after dying or wedging.
     pub shard_restarts: AtomicU64,
+    /// Live queue-depth gauge for flight-recorder events.  Touched only
+    /// for traced requests (`trace != 0`), so it stays balanced across
+    /// mid-flight arming and costs nothing disarmed.  Not part of the
+    /// summary: it is an instantaneous gauge, not a counter.
+    pub(crate) queued: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
     /// Ring-overwrite cursor for the latency reservoir.  A dedicated
     /// counter (not a re-load of `requests`) so concurrent recorders each
@@ -123,6 +128,7 @@ impl Metrics {
             cache: None,
             memo: None,
             sparsity: None,
+            trace: crate::trace::stats(),
             shards: Vec::new(),
         }
     }
@@ -197,6 +203,11 @@ pub struct MetricsSummary {
     /// activation-sparsity threshold configured
     /// (`--sparse-threshold`/`BAYESDM_SPARSE_THRESHOLD`).
     pub sparsity: Option<SparsityStats>,
+    /// Flight-recorder counters (`crate::trace`), once the recorder has
+    /// been armed (`--trace-buf-kb`/`BAYESDM_TRACE_KB`).  Process-wide
+    /// and `None` for never-traced runs, so plain invocations render
+    /// byte-identically.
+    pub trace: Option<crate::trace::TraceStats>,
     /// Per-shard request/cache-attribution breakdown (empty for
     /// single-engine deployments).
     pub shards: Vec<ShardBreakdown>,
@@ -270,6 +281,14 @@ impl MetricsSummary {
             so.insert("mean_density_permille".to_string(), num(sp.mean_density_permille));
             o.insert("sparsity".to_string(), Json::Obj(so));
         }
+        if let Some(t) = &self.trace {
+            let mut to = BTreeMap::new();
+            to.insert("recorded".to_string(), num(t.recorded));
+            to.insert("dropped".to_string(), num(t.dropped));
+            to.insert("buffer_bytes".to_string(), num(t.buffer_bytes));
+            to.insert("threads".to_string(), num(t.threads));
+            o.insert("trace".to_string(), Json::Obj(to));
+        }
         if !self.shards.is_empty() {
             let shards = self
                 .shards
@@ -322,6 +341,13 @@ impl std::fmt::Display for MetricsSummary {
         }
         if let Some(sp) = &self.sparsity {
             write!(f, "  sparsity[{sp}]")?;
+        }
+        if let Some(t) = &self.trace {
+            write!(
+                f,
+                "  trace[recorded={} dropped={} buf={}B threads={}]",
+                t.recorded, t.dropped, t.buffer_bytes, t.threads
+            )?;
         }
         for b in &self.shards {
             write!(f, "  {b}")?;
@@ -574,6 +600,30 @@ mod tests {
             back.get("sparsity").and_then(|c| c.get("threshold_permille")).and_then(Json::as_usize),
             Some(400)
         );
+    }
+
+    #[test]
+    fn trace_section_renders_only_when_present() {
+        let m = Metrics::new();
+        m.record(Duration::from_micros(3), 1);
+        let mut s = m.summary();
+        // Pin locally: recorder tests in this binary may arm the
+        // process-wide recorder, exactly like the fault counters.
+        s.trace = None;
+        assert!(!s.to_string().contains("trace["), "no trace line when None");
+        assert_eq!(s.to_json().get("trace"), None);
+        s.trace = Some(crate::trace::TraceStats {
+            recorded: 40,
+            dropped: 2,
+            buffer_bytes: 65536,
+            threads: 3,
+        });
+        let text = s.to_string();
+        assert!(text.contains("trace[recorded=40 dropped=2 buf=65536B threads=3]"), "{text}");
+        let j = s.to_json();
+        let t = j.get("trace").expect("trace section");
+        assert_eq!(t.get("recorded").and_then(Json::as_usize), Some(40));
+        assert_eq!(t.get("buffer_bytes").and_then(Json::as_usize), Some(65536));
     }
 
     #[test]

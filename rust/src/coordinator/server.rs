@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use crate::nn::plan::LogitBatch;
 use crate::serve::ServeError;
+use crate::trace::{self, EventId};
 use crate::util::fault;
 
 use super::metrics::Metrics;
@@ -85,6 +86,9 @@ struct Request {
     /// filling batch early as it approaches and answers `Timeout`
     /// without dispatching once it has passed.
     deadline: Option<Instant>,
+    /// Flight-recorder correlation id (0 = admitted while the recorder
+    /// was disarmed; no events carry it).
+    trace: u64,
 }
 
 /// The served answer.
@@ -97,6 +101,10 @@ pub struct Response {
     pub entropy: f32,
     pub voters: usize,
     pub latency: Duration,
+    /// Flight-recorder correlation id for this request (0 when the
+    /// recorder was disarmed at admission).  Internal observability
+    /// only — never serialized onto the wire.
+    pub trace_id: u64,
 }
 
 /// Server tuning knobs.
@@ -198,20 +206,36 @@ impl ServerHandle {
         let (tx, rx) = mpsc::channel();
         let enqueued = Instant::now();
         let budget = deadline.or(self.default_deadline);
+        let trace = trace::next_request_id();
+        if trace != 0 {
+            // Admission is recorded *before* try_send so a fast router
+            // can never timestamp the dequeue ahead of the admit.
+            let depth = self.metrics.queued.fetch_add(1, Ordering::Relaxed) + 1;
+            let dl_ms = budget.map(|d| d.as_millis() as u64).unwrap_or(0);
+            trace::emit(EventId::RequestAdmit, trace, depth, dl_ms);
+        }
         let req = Request {
             image,
             method,
             respond: tx,
             enqueued,
             deadline: budget.map(|d| enqueued + d),
+            trace,
         };
         match self.tx.try_send(req) {
             Ok(()) => Ok(Pending { rx }),
             Err(TrySendError::Full(_)) => {
+                if trace != 0 {
+                    let depth = self.metrics.queued.fetch_sub(1, Ordering::Relaxed) - 1;
+                    trace::emit(EventId::RequestShed, trace, depth, 0);
+                }
                 self.metrics.record_shed();
                 Err(ServeError::Overloaded)
             }
             Err(TrySendError::Disconnected(_)) => {
+                if trace != 0 {
+                    self.metrics.queued.fetch_sub(1, Ordering::Relaxed);
+                }
                 self.metrics.record_error();
                 Err(ServeError::ShuttingDown)
             }
@@ -285,7 +309,7 @@ fn router_loop<B, F>(
     // `try_send` cannot see it and shedding could never fire.  With this
     // bound, worker saturation backs the router up, the ingress channel
     // fills, and admission starts answering `Overloaded`.
-    let (btx, brx) = mpsc::sync_channel::<Vec<Request>>(cfg.workers.max(1));
+    let (btx, brx) = mpsc::sync_channel::<(u64, Vec<Request>)>(cfg.workers.max(1));
     let brx = Arc::new(std::sync::Mutex::new(brx));
     let mut workers = Vec::new();
     for wi in 0..cfg.workers.max(1) {
@@ -301,7 +325,7 @@ fn router_loop<B, F>(
                         Err(e) => {
                             eprintln!("worker {wi}: backend build failed: {e}");
                             // Drain and fail requests routed to this worker.
-                            while let Ok(batch) =
+                            while let Ok((_, batch)) =
                                 { brx.lock().unwrap_or_else(|e| e.into_inner()).recv() }
                             {
                                 for req in batch {
@@ -320,7 +344,7 @@ fn router_loop<B, F>(
                         let batch =
                             { brx.lock().unwrap_or_else(|e| e.into_inner()).recv() };
                         match batch {
-                            Ok(batch) => run_batch(&backend, batch, &metrics),
+                            Ok((bid, batch)) => run_batch(&backend, bid, batch, &metrics),
                             Err(_) => break,
                         }
                     }
@@ -340,6 +364,7 @@ fn router_loop<B, F>(
             }
             Err(RecvTimeoutError::Disconnected) => break 'outer,
         };
+        let mut batch_id = note_batch_open(&metrics, &first);
         let mut batch = vec![first];
         let mut earliest = batch[0].deadline;
         let mut close = fill_close(Instant::now(), earliest, cfg.max_wait);
@@ -353,29 +378,71 @@ fn router_loop<B, F>(
                     // Traffic is hot: refresh the fill window, still
                     // capped by the oldest member's deadline.
                     earliest = min_deadline(earliest, req.deadline);
+                    note_dequeue(&metrics, &req, batch_id);
                     batch.push(req);
                     close = fill_close(Instant::now(), earliest, cfg.max_wait);
                 }
                 Ok(req) => {
                     // Method boundary: flush the current batch and give the
                     // replacement batch a fresh fill window of its own.
-                    let _ = btx.send(std::mem::replace(&mut batch, vec![req]));
+                    note_batch_dispatch(&metrics, batch_id, batch.len());
+                    let flushed = (batch_id, std::mem::replace(&mut batch, vec![req]));
+                    batch_id = note_batch_open(&metrics, &batch[0]);
+                    let _ = btx.send(flushed);
                     earliest = batch[0].deadline;
                     close = fill_close(Instant::now(), earliest, cfg.max_wait);
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
-                    let _ = btx.send(batch);
+                    note_batch_dispatch(&metrics, batch_id, batch.len());
+                    let _ = btx.send((batch_id, batch));
                     break 'outer;
                 }
             }
         }
-        let _ = btx.send(batch);
+        note_batch_dispatch(&metrics, batch_id, batch.len());
+        let _ = btx.send((batch_id, batch));
     }
     drop(btx);
     for w in workers {
         let _ = w.join();
     }
+}
+
+/// Open a flight-recorder batch: assign an id, record the open and the
+/// first member's dequeue.  Returns 0 (emitting nothing) disarmed.
+fn note_batch_open(metrics: &Metrics, first: &Request) -> u64 {
+    if !trace::armed() {
+        return 0;
+    }
+    let batch_id = trace::next_batch_id();
+    trace::emit(EventId::BatchOpen, batch_id, first.trace, 0);
+    note_dequeue(metrics, first, batch_id);
+    batch_id
+}
+
+/// Record one request leaving the admission queue into a batch.
+fn note_dequeue(metrics: &Metrics, req: &Request, batch_id: u64) {
+    if req.trace == 0 {
+        return;
+    }
+    let depth = metrics.queued.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+    trace::emit(EventId::RequestDequeue, req.trace, batch_id, depth);
+}
+
+/// Record a batch closing and being handed to a worker, with the
+/// residual admission-queue depth at dispatch time.
+fn note_batch_dispatch(metrics: &Metrics, batch_id: u64, len: usize) {
+    if batch_id == 0 {
+        return;
+    }
+    trace::emit(EventId::BatchClose, batch_id, len as u64, 0);
+    trace::emit(
+        EventId::BatchDispatch,
+        batch_id,
+        len as u64,
+        metrics.queued.load(Ordering::Relaxed),
+    );
 }
 
 /// When the currently-filling batch must close: a rolling fill window
@@ -410,7 +477,12 @@ fn input_attributable(e: &ServeError) -> bool {
     )
 }
 
-fn run_batch<B: InferenceBackend>(backend: &B, batch: Vec<Request>, metrics: &Metrics) {
+fn run_batch<B: InferenceBackend>(
+    backend: &B,
+    batch_id: u64,
+    batch: Vec<Request>,
+    metrics: &Metrics,
+) {
     // Expired-on-dequeue: answer `Timeout` without spending a backend
     // dispatch on work nobody can use anymore.  Counted as `expired`,
     // not `errors` — the distinction separates "we were too slow" from
@@ -422,6 +494,9 @@ fn run_batch<B: InferenceBackend>(backend: &B, batch: Vec<Request>, metrics: &Me
         .into_iter()
         .partition(|r| r.deadline.is_some_and(|d| d <= now));
     for req in expired {
+        if req.trace != 0 {
+            trace::emit(EventId::RequestExpire, req.trace, batch_id, 0);
+        }
         if req.respond.send(Err(ServeError::Timeout)).is_ok() {
             metrics.record_expired();
         }
@@ -457,6 +532,14 @@ fn run_batch<B: InferenceBackend>(backend: &B, batch: Vec<Request>, metrics: &Me
             "backend panicked {PANIC_RETRIES} times; batch abandoned"
         )))
     });
+    if batch_id != 0 {
+        trace::emit(
+            EventId::BatchDone,
+            batch_id,
+            batch.len() as u64,
+            u64::from(outcome.is_ok()),
+        );
+    }
     match outcome {
         Ok(all) if all.len() == batch.len() => {
             // `LogitBatch::iter` always yields `len()` views, so the zip
@@ -476,12 +559,21 @@ fn run_batch<B: InferenceBackend>(backend: &B, batch: Vec<Request>, metrics: &Me
                 let probs = vote::softmax_mean_flat(logits.flat(), logits.classes());
                 let class = vote::argmax(&probs);
                 let voters = logits.voters();
+                if req.trace != 0 {
+                    trace::emit(
+                        EventId::RequestReply,
+                        req.trace,
+                        class as u64,
+                        latency.as_micros() as u64,
+                    );
+                }
                 let delivered = req.respond.send(Ok(Response {
                     class,
                     confidence: probs[class],
                     entropy: vote::predictive_entropy_flat(logits.flat(), logits.classes()),
                     voters,
                     latency,
+                    trace_id: req.trace,
                 }));
                 // An abandoned request (waiter timed out and hung up) is
                 // not a served success — the frontend records it.
@@ -507,7 +599,7 @@ fn run_batch<B: InferenceBackend>(backend: &B, batch: Vec<Request>, metrics: &Me
             // malformed input cannot fail its co-batched neighbors.
             for (req, image) in batch.into_iter().zip(inputs) {
                 let solo = Request { image, ..req };
-                run_batch(backend, vec![solo], metrics);
+                run_batch(backend, batch_id, vec![solo], metrics);
             }
         }
         Err(e) => {

@@ -48,6 +48,11 @@
 //!   (`POST /v1/classify`, `GET /metrics`, `GET /healthz`), with typed
 //!   wire-stable errors (`serve::ServeError`) shared by the in-process
 //!   path.
+//! * [`trace`] — flight-recorder tracing: lock-free per-thread binary
+//!   event rings across every tier (admission, batching, cache, shard
+//!   supervision, the wire), a versioned checksummed trace-file format
+//!   and the offline decoder behind `bayesdm trace decode`
+//!   (`--trace-buf-kb`, off by default).
 //!
 //! See `DESIGN.md` (repo root) for the architecture, the batched engine's
 //! threading/memoization model, the experiment index, and how to run the
@@ -69,6 +74,7 @@ pub mod nn;
 pub mod opcount;
 pub mod runtime;
 pub mod serve;
+pub mod trace;
 
 /// The paper's MNIST architecture (§V-B): 3-layer fully-connected MLP.
 pub const MNIST_ARCH: [usize; 4] = [784, 200, 200, 10];

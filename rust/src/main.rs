@@ -57,7 +57,7 @@ SUBCOMMANDS:
            [--sparse-threshold D] [--force-dense]
            [--listen ADDR] [--duration-s S] [--conn-threads N]
            [--request-timeout-ms MS] [--io-timeout-ms MS]
-           [--fault-spec SPEC]
+           [--fault-spec SPEC] [--trace-buf-kb KB] [--trace-out PATH]
   eval     --method M --limit N --batch B --workers W [--synthetic]
            [--cache-mb MB] [--alpha A] [--force-scalar] [--shards S]
            [--memo-mb MB] [--cache-snapshot PATH]
@@ -67,6 +67,8 @@ SUBCOMMANDS:
   hwsweep
   plan     --method M --alpha A
   probe    --connect ADDR [--retry-max N] [--retry-base-ms MS]
+  trace    decode FILE [--json] [--limit N]
+           | dump --addr ADDR [--out FILE]
 
 methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
 --workers: engine pool threads (default: one per core)
@@ -136,9 +138,17 @@ methods: standard | hybrid | dm   (paper defaults: T=100 / 10x10x10)
             point[:p=PROB][:seed=S][:ms=MS], e.g.
             `worker.panic:p=0.01:seed=7,io.read:p=0.02`.  Points:
             io.read io.write frame.corrupt worker.panic shard.stall
-            snapshot.corrupt cache.poison.  BAYESDM_FAULT_SPEC does the
-            same; the flag wins.  Unarmed runs are byte-identical to
-            builds without the feature.
+            snapshot.corrupt cache.poison snapshot.save.
+            BAYESDM_FAULT_SPEC does the same; the flag wins.  Unarmed
+            runs are byte-identical to builds without the feature.
+--trace-buf-kb: arm the flight recorder with KB KiB of lock-free event
+            ring per thread (BAYESDM_TRACE_KB does the same; off by
+            default, and disarmed runs are byte-identical).  While
+            serving, drain the binary trace with `GET /admin/trace` or
+            `bayesdm trace dump`; whatever remains at shutdown lands at
+            --trace-out.  Decode with `bayesdm trace decode`.
+--trace-out: with --trace-buf-kb, where serve writes the remaining
+            trace at shutdown (default bayesdm_trace.bin).
 --retry-max / --retry-base-ms: probe's retry budget — attempts after
             the first try (default 0 = off) and the initial backoff
             delay (default 50, doubling per attempt, capped at 5 s,
@@ -310,6 +320,12 @@ fn load_model_and_data(artifacts: &str, synthetic: bool) -> Result<(BnnModel, Da
 }
 
 fn main() -> Result<()> {
+    // `trace` takes positional operands (`decode FILE`), which the
+    // flag-oriented Args parser rejects — route it on raw argv first.
+    let raw: Vec<String> = std::env::args().collect();
+    if raw.get(1).map(String::as_str) == Some("trace") {
+        return run_trace(&raw[2..]);
+    }
     let mut args = Args::parse(std::env::args()).map_err(Error::msg)?;
     let artifacts = args.get("artifacts", "artifacts");
     let sub = match args.subcommand.clone() {
@@ -338,6 +354,18 @@ fn main() -> Result<()> {
             let fault_spec = args.get("fault-spec", "");
             if !fault_spec.is_empty() {
                 bayesdm::util::fault::arm(&fault_spec).map_err(Error::msg)?;
+            }
+            // Arm the flight recorder before the deployment exists so
+            // build-time events (snapshot load, shard spawn) land too.
+            let trace_out = args.get("trace-out", "bayesdm_trace.bin");
+            match opt_parse::<usize>(&mut args, "trace-buf-kb")? {
+                Some(kb) => {
+                    let slots = bayesdm::trace::arm(kb);
+                    println!("flight recorder armed: {slots} slots/thread");
+                }
+                None => {
+                    bayesdm::trace::arm_from_env();
+                }
             }
             let (mut b, alpha) = deployment_builder(&mut args, 0xBA135)?;
             b = b.max_batch(max_batch);
@@ -382,6 +410,13 @@ fn main() -> Result<()> {
                 handle.shutdown();
             }
             print_save_report(&deployment);
+            if bayesdm::trace::armed() {
+                let events = bayesdm::trace::drain();
+                match bayesdm::trace::format::save(std::path::Path::new(&trace_out), &events) {
+                    Ok(n) => println!("trace: {n} events -> {trace_out}"),
+                    Err(e) => eprintln!("trace save failed: {e}"),
+                }
+            }
         }
         "eval" => {
             let method = args.get("method", "dm");
@@ -518,6 +553,116 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+const TRACE_USAGE: &str = "\
+bayesdm trace — flight-recorder tooling
+
+USAGE:
+  bayesdm trace decode FILE [--json] [--limit N]
+  bayesdm trace dump --addr HOST:PORT [--out FILE]
+
+decode prints a trace file as a per-event timeline plus per-phase
+latency histograms (queue wait, batch fill, backend, write-out);
+--json emits the machine-readable summary instead, and --limit caps
+the timeline rows (default 200, 0 = unlimited).
+
+dump fetches GET /admin/trace from a serving --listen process armed
+with --trace-buf-kb / BAYESDM_TRACE_KB and writes the binary trace to
+FILE (default bayesdm_trace.bin) after verifying its checksum.";
+
+/// The `trace` subcommand: offline decoder + live-server dumper.
+fn run_trace(rest: &[String]) -> Result<()> {
+    use bayesdm::trace::{decode, format};
+    let mut it = rest.iter();
+    match it.next().map(String::as_str) {
+        Some("decode") => {
+            let mut file: Option<&str> = None;
+            let mut json = false;
+            let mut limit = 200usize;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--json" => json = true,
+                    "--limit" => {
+                        let v = it.next().context("--limit needs a value")?;
+                        limit = v
+                            .parse()
+                            .map_err(|_| Error::msg(format!("--limit: cannot parse `{v}`")))?;
+                    }
+                    flag if flag.starts_with("--") => {
+                        bail!("trace decode: unknown flag `{flag}`\n{TRACE_USAGE}")
+                    }
+                    operand if file.is_none() => file = Some(operand),
+                    extra => bail!("trace decode: unexpected operand `{extra}`"),
+                }
+            }
+            let path = file.context("trace decode: missing FILE operand")?;
+            let events = format::load(std::path::Path::new(path)).map_err(Error::msg)?;
+            let report = decode::report(&events);
+            if json {
+                println!("{}", decode::render_json(&report));
+            } else {
+                print!("{}", decode::render_timeline(&events, limit));
+                print!("{}", decode::render_summary(&report));
+                match decode::check_ordering(&events) {
+                    Ok(()) => println!("ordering: ok"),
+                    Err(e) => println!("ordering: VIOLATION — {e}"),
+                }
+            }
+        }
+        Some("dump") => {
+            let mut addr = String::new();
+            let mut out = "bayesdm_trace.bin".to_string();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--addr" => addr = it.next().context("--addr needs a value")?.clone(),
+                    "--out" => out = it.next().context("--out needs a value")?.clone(),
+                    other => bail!("trace dump: unexpected argument `{other}`\n{TRACE_USAGE}"),
+                }
+            }
+            if addr.is_empty() {
+                bail!("trace dump: --addr HOST:PORT is required");
+            }
+            let body = http_get_binary(&addr, "/admin/trace")?;
+            // Validate before persisting: a truncated or corrupt download
+            // must fail loudly, not land on disk looking like a trace.
+            let events = format::decode(&body).map_err(Error::msg)?;
+            std::fs::write(&out, &body).with_context(|| format!("writing {out}"))?;
+            println!("trace: {} events from {addr} -> {out}", events.len());
+        }
+        Some(other) => bail!("trace: unknown verb `{other}`\n{TRACE_USAGE}"),
+        None => println!("{TRACE_USAGE}"),
+    }
+    Ok(())
+}
+
+/// One-shot `GET` returning the response body — the only HTTP the CLI
+/// speaks, so no client stack: `Connection: close` and read to EOF.
+fn http_get_binary(addr: &str, path: &str) -> Result<Vec<u8>> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| Error::msg(format!("connect {addr}: {e}")))?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream
+        .write_all(req.as_bytes())
+        .map_err(|e| Error::msg(format!("send to {addr}: {e}")))?;
+    let mut raw = Vec::new();
+    stream
+        .read_to_end(&mut raw)
+        .map_err(|e| Error::msg(format!("read from {addr}: {e}")))?;
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .context("malformed HTTP response: no header/body boundary")?;
+    let status_line = raw[..split]
+        .split(|&b| b == b'\r')
+        .next()
+        .map(|l| String::from_utf8_lossy(l).to_string())
+        .unwrap_or_default();
+    if !status_line.contains(" 200") {
+        bail!("GET {path} on {addr}: `{status_line}` — is the server traced (--trace-buf-kb)?");
+    }
+    Ok(raw[split + 4..].to_vec())
 }
 
 /// Measure the three methods' accuracies with the pure-rust reference

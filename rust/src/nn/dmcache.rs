@@ -436,10 +436,26 @@ impl DmCache {
                 let skipped = LayerCost::new(d.eta.len(), x.len()).precompute();
                 self.muls_avoided.fetch_add(skipped.muls, Ordering::Relaxed);
                 self.adds_avoided.fetch_add(skipped.adds, Ordering::Relaxed);
+                if crate::trace::armed() {
+                    crate::trace::emit(
+                        crate::trace::EventId::CacheHit,
+                        layer as u64,
+                        x.len() as u64,
+                        0,
+                    );
+                }
                 Some(d)
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                if crate::trace::armed() {
+                    crate::trace::emit(
+                        crate::trace::EventId::CacheMiss,
+                        layer as u64,
+                        x.len() as u64,
+                        0,
+                    );
+                }
                 None
             }
         }
@@ -466,6 +482,9 @@ impl DmCache {
                 // nothing evictable (empty shard with budget < bytes is
                 // already excluded above) — give up rather than overrun
                 self.evictions.fetch_add(evicted, Ordering::Relaxed);
+                if evicted > 0 && crate::trace::armed() {
+                    crate::trace::emit(crate::trace::EventId::CacheEvict, layer as u64, evicted, 0);
+                }
                 return;
             }
             let entry = Entry {
@@ -484,6 +503,9 @@ impl DmCache {
         }
         self.insertions.fetch_add(1, Ordering::Relaxed);
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        if evicted > 0 && crate::trace::armed() {
+            crate::trace::emit(crate::trace::EventId::CacheEvict, layer as u64, evicted, 0);
+        }
     }
 
     /// Clone every live entry belonging to model `fp` out of the cache —

@@ -502,12 +502,19 @@ struct SparseCtx<'s> {
 fn sparse_decision(x: &[f32], thr: f32, ctx: &mut SparseCtx<'_>) -> Option<(usize, usize)> {
     let nnz = x.iter().filter(|&&v| v != 0.0).count();
     let density = nnz as f32 / x.len().max(1) as f32;
-    DENSITY_PERMILLE_SUM.fetch_add((density * 1000.0) as u64, Ordering::Relaxed);
+    let permille = (density * 1000.0) as u64;
+    DENSITY_PERMILLE_SUM.fetch_add(permille, Ordering::Relaxed);
     if nnz < x.len() && density <= thr {
         SPARSE_SWEEPS.fetch_add(1, Ordering::Relaxed);
+        if crate::trace::armed() {
+            crate::trace::emit(crate::trace::EventId::DispatchSparse, nnz as u64, permille, 0);
+        }
         build_sparse_index(x, ctx.nzmask, ctx.spidx)
     } else {
         DENSE_SWEEPS.fetch_add(1, Ordering::Relaxed);
+        if crate::trace::armed() {
+            crate::trace::emit(crate::trace::EventId::DispatchDense, nnz as u64, permille, 0);
+        }
         None
     }
 }

@@ -166,7 +166,17 @@ fn serve_binary(stream: TcpStream, shared: &Arc<ConnShared>) {
         match proto::read_frame(&mut reader, shared.max_frame, shared.io_timeout) {
             Ok(ReadOutcome::Idle) => continue,
             Ok(ReadOutcome::Eof) => break,
-            Ok(ReadOutcome::Frame(frame)) => handle_frame(frame, shared, &tx),
+            Ok(ReadOutcome::Frame(frame)) => {
+                if crate::trace::armed() {
+                    crate::trace::emit(
+                        crate::trace::EventId::FrameRead,
+                        frame.id(),
+                        u64::from(frame.kind()),
+                        0,
+                    );
+                }
+                handle_frame(frame, shared, &tx)
+            }
             Err(err) => {
                 // Protocol breakdown: the stream can no longer be framed,
                 // so report (id 0 = not attributable) and close.
@@ -220,6 +230,10 @@ fn writer_loop(
 ) {
     let mut broken = false;
     while let Ok(out) = rx.recv() {
+        // The flight-recorder correlation id of the request this reply
+        // answers (0 for pongs/errors/metrics): stitched to the write-out
+        // phase by the offline decoder, never serialized onto the wire.
+        let mut trace_of = 0u64;
         let frame = match out {
             Outgoing::Ready(f) => f,
             // `try_wait`: `Some` outcomes were already accounted by the
@@ -227,7 +241,10 @@ fn writer_loop(
             // request is abandoned, and this is the only place that
             // failure can be counted.
             Outgoing::Job { id, pending } => match pending.try_wait(request_timeout) {
-                Some(Ok(r)) => Frame::Response { id, resp: to_wire(&r) },
+                Some(Ok(r)) => {
+                    trace_of = r.trace_id;
+                    Frame::Response { id, resp: to_wire(&r) }
+                }
                 Some(Err(err)) => Frame::Error { id, err },
                 None => {
                     metrics.record_error();
@@ -243,9 +260,18 @@ fn writer_loop(
             broken = true;
             shutdown_both(&stream);
         }
-        if !broken && proto::write_frame(&mut stream, &frame).is_err() {
-            broken = true;
-            shutdown_both(&stream);
+        if !broken {
+            if proto::write_frame(&mut stream, &frame).is_err() {
+                broken = true;
+                shutdown_both(&stream);
+            } else if crate::trace::armed() {
+                crate::trace::emit(
+                    crate::trace::EventId::FrameWrite,
+                    frame.id(),
+                    u64::from(frame.kind()),
+                    trace_of,
+                );
+            }
         }
     }
 }

@@ -7,6 +7,9 @@
 //! * `GET /metrics`       — the deployment `MetricsSummary` as JSON
 //! * `GET /admin/drain`   — request a graceful drain (the host loop
 //!   observes it, stops accepting, flushes in-flight work and exits)
+//! * `GET /admin/trace`   — drain the flight recorder and return the
+//!   binary trace file (`trace::format`); 404 while tracing is disarmed
+//!   (`bayesdm trace dump` wraps this route)
 //! * `POST /v1/classify`  — JSON body
 //!   `{"method":"standard"|"hybrid"|"dm","t":N,"schedule":[..],"input":[..],
 //!   "deadline_ms":N}` (the optional `deadline_ms` is the request's
@@ -240,17 +243,32 @@ fn read_request(
     Ok(Some(HttpRequest { method, path, keep_alive, body }))
 }
 
-type HttpReply = (u16, &'static str, &'static str, String);
+// Body is bytes, not text: `GET /admin/trace` returns the binary trace
+// file through the same writer the JSON routes use.
+type HttpReply = (u16, &'static str, &'static str, Vec<u8>);
 
 fn dispatch(req: &HttpRequest, shared: &Arc<ConnShared>) -> Result<HttpReply, ServeError> {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Ok((200, "OK", "text/plain", "ok\n".into())),
         ("GET", "/metrics") => {
-            Ok((200, "OK", "application/json", shared.metrics_text() + "\n"))
+            Ok((200, "OK", "application/json", (shared.metrics_text() + "\n").into_bytes()))
         }
         ("GET", "/admin/drain") => {
             shared.drain_requested.store(true, Ordering::SeqCst);
             Ok((200, "OK", "text/plain", "draining\n".into()))
+        }
+        ("GET", "/admin/trace") => {
+            if crate::trace::armed() {
+                let events = crate::trace::drain();
+                Ok((
+                    200,
+                    "OK",
+                    "application/octet-stream",
+                    crate::trace::format::encode(&events),
+                ))
+            } else {
+                Ok((404, "Not Found", "text/plain", "tracing is not armed\n".into()))
+            }
         }
         ("POST", "/v1/classify") => {
             let parsed = std::str::from_utf8(&req.body)
@@ -272,7 +290,9 @@ fn dispatch(req: &HttpRequest, shared: &Arc<ConnShared>) -> Result<HttpReply, Se
                 shared.handle.classify_with_deadline(input, to_inference(&method), budget)?;
             match pending.try_wait(shared.request_timeout) {
                 // Served outcomes were accounted by the batcher.
-                Some(Ok(r)) => Ok((200, "OK", "application/json", classify_json(&r))),
+                Some(Ok(r)) => {
+                    Ok((200, "OK", "application/json", classify_json(&r).into_bytes()))
+                }
                 Some(Err(e)) => Err(e),
                 // Abandonment: the frontend timer fired first, so only
                 // the frontend can count the failure.
@@ -351,7 +371,7 @@ fn write_response(
     status: u16,
     reason: &str,
     ctype: &str,
-    body: &str,
+    body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
     let head = format!(
@@ -360,7 +380,7 @@ fn write_response(
         if keep_alive { "keep-alive" } else { "close" },
     );
     w.write_all(head.as_bytes())?;
-    w.write_all(body.as_bytes())?;
+    w.write_all(body)?;
     w.flush()
 }
 
@@ -371,7 +391,7 @@ fn write_error(w: &mut TcpStream, e: &ServeError, keep_alive: bool) -> std::io::
     o.insert("code".to_string(), Json::Num(e.code() as f64));
     o.insert("message".to_string(), Json::Str(e.message().to_string()));
     let body = Json::Obj(o).to_string() + "\n";
-    write_response(w, status, reason, "application/json", &body, keep_alive)
+    write_response(w, status, reason, "application/json", body.as_bytes(), keep_alive)
 }
 
 #[cfg(test)]
@@ -425,6 +445,7 @@ mod tests {
             entropy: 1.0397208,
             voters: 12,
             latency: std::time::Duration::from_micros(777),
+            trace_id: 0,
         };
         let v = Json::parse(&classify_json(&r)).expect("valid json");
         assert_eq!(v.get("class").and_then(Json::as_usize), Some(3));

@@ -591,6 +591,9 @@ impl NetServer {
                             if s.set_nonblocking(false).is_err() {
                                 continue;
                             }
+                            if crate::trace::armed() {
+                                crate::trace::emit(crate::trace::EventId::ConnAccept, 0, 0, 0);
+                            }
                             match ctx.try_send(s) {
                                 Ok(()) => {}
                                 Err(TrySendError::Full(s)) => reject_overloaded(s),
@@ -708,7 +711,8 @@ impl RetryPolicy {
     /// Backoff before retry `attempt` (0-based): `base · 2^attempt`,
     /// capped, plus up to 25% deterministic jitter (hash of the attempt
     /// and a caller salt — no entropy source, so test runs replay).
-    fn delay(&self, attempt: u32, salt: u64) -> Duration {
+    /// Public because the cluster's shard-heal backoff reuses it.
+    pub fn delay(&self, attempt: u32, salt: u64) -> Duration {
         const CAP_MS: u64 = 5_000;
         let exp = self.base_ms.max(1).saturating_mul(1u64 << attempt.min(12)).min(CAP_MS);
         let jitter = crate::util::hash::mix64(salt ^ u64::from(attempt)) % (exp / 4).max(1);

@@ -20,6 +20,14 @@
 //! frames it genuinely cannot honor and an old client never sees a
 //! version it does not speak.
 //!
+//! Version 3 appends a CRC-32 (IEEE) of the payload as the final four
+//! payload bytes, so payload corruption — not just a smashed magic —
+//! is detectable.  Decoding always accepts v3; *emitting* v3 is opt-in
+//! ([`set_crc_frames`] / `BAYESDM_PROTO_CRC=1`) so default traffic
+//! stays byte-identical to v1/v2 peers.  After the checksum is
+//! verified and stripped, a v3 payload parses exactly like v2 (the
+//! optional trailing deadline included).
+//!
 //! Frame kinds: 1 = Request, 2 = Response, 3 = Error, 4 = Ping,
 //! 5 = Pong, 6 = MetricsRequest, 7 = MetricsText.  Responses carry the
 //! raw f32 **bits** of confidence/entropy, so a wire client observes the
@@ -37,7 +45,11 @@
 //! deadline surfaces as [`ServeError::Timeout`].
 
 use std::io::{ErrorKind, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
 use std::time::{Duration, Instant};
+
+use crate::util::hash::crc32;
 
 use crate::nn::bnn::Method;
 
@@ -52,6 +64,10 @@ pub const PROTO_VERSION: u8 = 1;
 /// deadline (ms).  Only emitted when a deadline is present, so
 /// deadline-less traffic stays byte-identical to version-1 clients.
 pub const PROTO_VERSION_DEADLINE: u8 = 2;
+/// Version whose payloads end in a CRC-32 (IEEE) of the preceding
+/// payload bytes.  Always accepted on decode; emitted only when CRC
+/// frames are enabled ([`set_crc_frames`] / `BAYESDM_PROTO_CRC`).
+pub const PROTO_VERSION_CRC: u8 = 3;
 /// Fixed header size in bytes.
 pub const HEADER_BYTES: usize = 20;
 /// Default cap on a single frame's payload (16 MiB) — far above any
@@ -114,7 +130,9 @@ impl Frame {
         }
     }
 
-    fn kind(&self) -> u8 {
+    /// Wire kind code (1 = Request … 7 = MetricsText); stable, also
+    /// used as the frame-kind word in flight-recorder events.
+    pub fn kind(&self) -> u8 {
         match self {
             Frame::Request { .. } => KIND_REQUEST,
             Frame::Response { .. } => KIND_RESPONSE,
@@ -190,12 +208,48 @@ fn encode_payload(frame: &Frame) -> Vec<u8> {
     p
 }
 
-/// Encode one frame (header + payload) into a fresh buffer.
+static CRC_ENV: Once = Once::new();
+static CRC_FRAMES: AtomicBool = AtomicBool::new(false);
+
+/// Whether this process emits v3 CRC frames.  Resolved once from
+/// `BAYESDM_PROTO_CRC` on first use; defaults off so the wire stays
+/// byte-identical to v1/v2 peers.
+pub fn crc_frames() -> bool {
+    CRC_ENV.call_once(|| {
+        let on = std::env::var("BAYESDM_PROTO_CRC")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        CRC_FRAMES.store(on, Ordering::Relaxed);
+    });
+    CRC_FRAMES.load(Ordering::Relaxed)
+}
+
+/// Force CRC-frame emission on or off (overrides the environment).
+pub fn set_crc_frames(on: bool) {
+    CRC_ENV.call_once(|| {}); // pin env resolution so it cannot undo this
+    CRC_FRAMES.store(on, Ordering::Relaxed);
+}
+
+/// Encode one frame (header + payload) into a fresh buffer, emitting
+/// v3 when CRC frames are enabled process-wide.
 pub fn encode(frame: &Frame) -> Vec<u8> {
-    let payload = encode_payload(frame);
+    encode_with(frame, crc_frames())
+}
+
+/// Encode with an explicit CRC choice (the test seam; `encode` applies
+/// the process-wide setting).
+pub fn encode_with(frame: &Frame, crc: bool) -> Vec<u8> {
+    let mut payload = encode_payload(frame);
+    let version = if crc {
+        let sum = crc32(&payload);
+        payload.extend_from_slice(&sum.to_le_bytes());
+        PROTO_VERSION_CRC
+    } else {
+        frame.version()
+    };
     let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
     buf.extend_from_slice(&MAGIC);
-    buf.push(frame.version());
+    buf.push(version);
     buf.push(frame.kind());
     buf.extend_from_slice(&0u16.to_le_bytes());
     buf.extend_from_slice(&frame.id().to_le_bytes());
@@ -208,9 +262,12 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
     let mut buf = encode(frame);
     if crate::util::fault::should_fire("frame.corrupt") {
-        // flip the first magic byte: the receiver deterministically
-        // rejects the frame ("bad frame magic") instead of misparsing it
-        buf[0] ^= 0xFF;
+        // flip the first payload byte: detectable by the v3 CRC, and
+        // exactly the corruption v1/v2 frames cannot see.  Frames with
+        // no payload fall back to smashing the magic, which every
+        // version rejects.
+        let i = if buf.len() > HEADER_BYTES { HEADER_BYTES } else { 0 };
+        buf[i] ^= 0xFF;
     }
     w.write_all(&buf)?;
     w.flush()
@@ -280,6 +337,21 @@ pub fn decode_payload(
     payload: &[u8],
     version: u8,
 ) -> Result<Frame, ServeError> {
+    // v3: the last four payload bytes are a CRC-32 of everything before
+    // them; verify, strip, then parse like v2.
+    let payload = if version >= PROTO_VERSION_CRC {
+        let Some(split) = payload.len().checked_sub(4) else {
+            return Err(ServeError::bad_request("v3 frame too short for its checksum"));
+        };
+        let (body, tail) = payload.split_at(split);
+        let want = u32::from_le_bytes(tail.try_into().unwrap());
+        if crc32(body) != want {
+            return Err(ServeError::bad_request("frame payload checksum mismatch"));
+        }
+        body
+    } else {
+        payload
+    };
     let mut r = Reader { buf: payload, pos: 0 };
     let frame = match kind {
         KIND_REQUEST => {
@@ -425,10 +497,10 @@ pub fn read_frame<R: Read>(
         return Err(ServeError::bad_request("bad frame magic"));
     }
     let version = hdr[4];
-    if !(PROTO_VERSION..=PROTO_VERSION_DEADLINE).contains(&version) {
+    if !(PROTO_VERSION..=PROTO_VERSION_CRC).contains(&version) {
         return Err(ServeError::bad_request(format!(
             "unsupported protocol version {version} \
-             (expected {PROTO_VERSION}..={PROTO_VERSION_DEADLINE})"
+             (expected {PROTO_VERSION}..={PROTO_VERSION_CRC})"
         )));
     }
     let kind = hdr[5];
@@ -679,6 +751,82 @@ mod tests {
         bytes[4] = PROTO_VERSION; // lie about the version
         let e = expect_bad(&bytes, "v1 with deadline bytes");
         assert!(e.to_string().contains("trailing"), "{e}");
+    }
+
+    fn round_trip_crc(f: &Frame) -> Frame {
+        let bytes = encode_with(f, true);
+        let mut c = Cursor::new(bytes);
+        match read_frame(&mut c, MAX_FRAME_PAYLOAD, T).expect("decode v3") {
+            ReadOutcome::Frame(g) => g,
+            other => panic!("expected a frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn crc_frames_round_trip_every_kind() {
+        let frames = vec![
+            Frame::Request {
+                id: 20,
+                method: Method::DmBnn { schedule: vec![8, 8, 8] },
+                input: vec![0.5, -0.25],
+                deadline_ms: Some(750), // deadline still parses after the CRC strips
+            },
+            Frame::Request {
+                id: 21,
+                method: Method::Standard { t: 9 },
+                input: vec![1.0],
+                deadline_ms: None,
+            },
+            Frame::Response {
+                id: 22,
+                resp: WireResponse {
+                    class: 1,
+                    voters: 7,
+                    confidence: 0.5,
+                    entropy: 0.25,
+                    latency_us: 99,
+                },
+            },
+            Frame::Ping { id: 23 },
+            Frame::MetricsText { id: 24, text: "{}".into() },
+        ];
+        for f in &frames {
+            let bytes = encode_with(f, true);
+            assert_eq!(bytes[4], PROTO_VERSION_CRC, "{f:?}");
+            assert_eq!(bytes.len(), encode_with(f, false).len() + 4, "{f:?}");
+            assert_eq!(&round_trip_crc(f), f, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn crc_detects_any_flipped_payload_byte() {
+        let f = Frame::Request {
+            id: 30,
+            method: Method::Standard { t: 5 },
+            input: vec![0.125, 2.5, -3.0],
+            deadline_ms: Some(100),
+        };
+        let bytes = encode_with(&f, true);
+        for i in HEADER_BYTES..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0xFF;
+            let e = expect_bad(&bad, "payload flip");
+            assert!(e.to_string().contains("checksum"), "byte {i}: {e}");
+        }
+        // The same flip in a v1 frame parses "successfully" — the gap
+        // v3 exists to close.
+        let v1 = encode_with(&Frame::Ping { id: 31 }, false);
+        assert_eq!(v1.len(), HEADER_BYTES, "ping has no payload to flip");
+    }
+
+    #[test]
+    fn v3_frame_shorter_than_its_checksum_is_rejected() {
+        let mut bytes = encode_with(&Frame::Ping { id: 32 }, true);
+        assert_eq!(bytes.len(), HEADER_BYTES + 4); // payload is just the CRC
+        bytes[4] = PROTO_VERSION_CRC;
+        bytes[16..20].copy_from_slice(&2u32.to_le_bytes());
+        let e = expect_bad(&bytes[..HEADER_BYTES + 2], "short v3");
+        assert!(e.to_string().contains("checksum"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,399 @@
+//! Offline trace decoder: timeline, per-phase latency histograms and
+//! a JSON summary (`bayesdm trace decode <file> [--json]`).
+//!
+//! Phases are stitched from event pairs by their correlation ids:
+//!
+//! * `queue_wait`  — `request.admit` → `request.dequeue` (trace id)
+//! * `batch_fill`  — `batch.open` → `batch.close` (batch id)
+//! * `backend`     — `batch.dispatch` → `batch.done` (batch id)
+//! * `write_out`   — `request.reply` → `frame.write` (trace id)
+
+use std::collections::BTreeMap;
+
+use super::events::{self, TraceEvent};
+use crate::util::json::Json;
+
+/// Log2-bucketed microsecond histogram plus exact percentiles.
+#[derive(Debug, Default, Clone)]
+pub struct Phase {
+    samples_us: Vec<u64>,
+}
+
+impl Phase {
+    fn push(&mut self, ns: u64) {
+        self.samples_us.push(ns / 1_000);
+    }
+
+    /// Number of stitched intervals.
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    fn sorted(&self) -> Vec<u64> {
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        v
+    }
+
+    fn percentile(sorted: &[u64], p: f64) -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// `(count, p50, p99, max)` in microseconds.
+    pub fn stats(&self) -> (usize, u64, u64, u64) {
+        let s = self.sorted();
+        (
+            s.len(),
+            Self::percentile(&s, 0.50),
+            Self::percentile(&s, 0.99),
+            s.last().copied().unwrap_or(0),
+        )
+    }
+
+    /// `(bucket_floor_us, count)` pairs; bucket n holds `[2^n, 2^(n+1))`.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        let mut counts: BTreeMap<u32, u64> = BTreeMap::new();
+        for &us in &self.samples_us {
+            let b = 64 - us.max(1).leading_zeros() - 1;
+            *counts.entry(b).or_insert(0) += 1;
+        }
+        counts.into_iter().map(|(b, n)| (1u64 << b, n)).collect()
+    }
+}
+
+/// Everything the decoder derives from one trace.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Per-event-name occurrence counts.
+    pub counts: BTreeMap<String, u64>,
+    /// Stitched latency phases keyed by phase name.
+    pub phases: BTreeMap<&'static str, Phase>,
+    /// Trace span in nanoseconds (last ts − first ts).
+    pub span_ns: u64,
+    /// Total events in the trace.
+    pub events: usize,
+}
+
+/// Stitch `open[key] → close[key]` intervals into a phase.
+fn stitch(
+    events: &[TraceEvent],
+    open_id: u32,
+    close_id: u32,
+    key: fn(&TraceEvent) -> u64,
+) -> Phase {
+    let mut opens: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut phase = Phase::default();
+    for e in events {
+        if e.id == open_id {
+            let k = key(e);
+            if k != 0 {
+                opens.entry(k).or_insert(e.ts_ns);
+            }
+        } else if e.id == close_id {
+            if let Some(start) = opens.remove(&key(e)) {
+                phase.push(e.ts_ns.saturating_sub(start));
+            }
+        }
+    }
+    phase
+}
+
+/// Build the summary report for a decoded trace.
+pub fn report(events: &[TraceEvent]) -> Report {
+    let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+    for e in events {
+        let label = match events::name(e.id) {
+            Some(n) => n.to_string(),
+            None => format!("unknown.{}", e.id),
+        };
+        *counts.entry(label).or_insert(0) += 1;
+    }
+    use events::EventId as E;
+    let mut phases = BTreeMap::new();
+    phases.insert(
+        "queue_wait",
+        stitch(events, E::RequestAdmit as u32, E::RequestDequeue as u32, |e| e.a),
+    );
+    phases.insert(
+        "batch_fill",
+        stitch(events, E::BatchOpen as u32, E::BatchClose as u32, |e| e.a),
+    );
+    phases.insert(
+        "backend",
+        stitch(events, E::BatchDispatch as u32, E::BatchDone as u32, |e| e.a),
+    );
+    // frame.write carries the trace id in word c, request.reply in a.
+    let write_out = {
+        let mut opens: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut phase = Phase::default();
+        for e in events {
+            if e.id == E::RequestReply as u32 && e.a != 0 {
+                opens.entry(e.a).or_insert(e.ts_ns);
+            } else if e.id == E::FrameWrite as u32 && e.c != 0 {
+                if let Some(start) = opens.remove(&e.c) {
+                    phase.push(e.ts_ns.saturating_sub(start));
+                }
+            }
+        }
+        phase
+    };
+    phases.insert("write_out", write_out);
+    let span_ns = match (events.first(), events.last()) {
+        (Some(a), Some(b)) => b.ts_ns.saturating_sub(a.ts_ns),
+        _ => 0,
+    };
+    Report {
+        counts,
+        phases,
+        span_ns,
+        events: events.len(),
+    }
+}
+
+/// Check the per-request lifecycle ordering the trace format promises:
+/// for every trace id, admit ≤ dequeue ≤ reply, and for every batch
+/// id, open ≤ close ≤ dispatch ≤ done.  Returns the first violation.
+pub fn check_ordering(events: &[TraceEvent]) -> Result<(), String> {
+    use events::EventId as E;
+    let mut per_req: BTreeMap<u64, [Option<u64>; 3]> = BTreeMap::new();
+    let mut per_batch: BTreeMap<u64, [Option<u64>; 4]> = BTreeMap::new();
+    for e in events {
+        if e.a == 0 {
+            continue;
+        }
+        let (map, idx): (_, usize) = match e.id {
+            id if id == E::RequestAdmit as u32 => (&mut per_req, 0),
+            id if id == E::RequestDequeue as u32 => (&mut per_req, 1),
+            id if id == E::RequestReply as u32 => (&mut per_req, 2),
+            _ => {
+                let idx = match e.id {
+                    id if id == E::BatchOpen as u32 => 0,
+                    id if id == E::BatchClose as u32 => 1,
+                    id if id == E::BatchDispatch as u32 => 2,
+                    id if id == E::BatchDone as u32 => 3,
+                    _ => continue,
+                };
+                let stamps = per_batch.entry(e.a).or_insert([None; 4]);
+                if stamps[idx].is_none() {
+                    stamps[idx] = Some(e.ts_ns);
+                }
+                continue;
+            }
+        };
+        let stamps = map.entry(e.a).or_insert([None; 3]);
+        if stamps[idx].is_none() {
+            stamps[idx] = Some(e.ts_ns);
+        }
+    }
+    for (req, stamps) in &per_req {
+        let pairs = [("admit", 0, "dequeue", 1), ("dequeue", 1, "reply", 2)];
+        for (an, ai, bn, bi) in pairs {
+            if let (Some(a), Some(b)) = (stamps[ai], stamps[bi]) {
+                if a > b {
+                    return Err(format!("request {req}: {an} at {a}ns after {bn} at {b}ns"));
+                }
+            }
+        }
+    }
+    for (batch, stamps) in &per_batch {
+        for w in [(0usize, 1usize), (1, 2), (2, 3)] {
+            if let (Some(a), Some(b)) = (stamps[w.0], stamps[w.1]) {
+                if a > b {
+                    return Err(format!("batch {batch}: stage {} after stage {}", w.0, w.1));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn fmt_payload(e: &TraceEvent) -> String {
+    let labels = events::payload_labels(e.id);
+    let mut out = String::new();
+    for (label, value) in labels.iter().zip([e.a, e.b, e.c]) {
+        if label.is_empty() {
+            continue;
+        }
+        if !out.is_empty() {
+            out.push(' ');
+        }
+        out.push_str(&format!("{label}={value}"));
+    }
+    out
+}
+
+/// Render the human-readable timeline, newest-last, at most `limit`
+/// lines (0 = unlimited).
+pub fn render_timeline(events: &[TraceEvent], limit: usize) -> String {
+    let shown = if limit > 0 && events.len() > limit {
+        &events[events.len() - limit..]
+    } else {
+        events
+    };
+    let mut out = String::new();
+    if shown.len() < events.len() {
+        out.push_str(&format!(
+            "... {} earlier events elided (--limit {limit})\n",
+            events.len() - shown.len()
+        ));
+    }
+    for e in shown {
+        let name = events::name(e.id)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("unknown.{}", e.id));
+        out.push_str(&format!(
+            "{:>12.3}us t{:02} {:<16} {}\n",
+            e.ts_ns as f64 / 1_000.0,
+            e.tid,
+            name,
+            fmt_payload(e)
+        ));
+    }
+    out
+}
+
+/// Render the summary: counts, span and per-phase histograms.
+pub fn render_summary(report: &Report) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} events over {:.3}ms\n",
+        report.events,
+        report.span_ns as f64 / 1_000_000.0
+    ));
+    out.push_str("event counts:\n");
+    for (name, n) in &report.counts {
+        out.push_str(&format!("  {name:<18} {n}\n"));
+    }
+    out.push_str("phases (us):\n");
+    for (name, phase) in &report.phases {
+        let (count, p50, p99, max) = phase.stats();
+        out.push_str(&format!(
+            "  {name:<12} count={count} p50={p50} p99={p99} max={max}\n"
+        ));
+        for (floor, n) in phase.buckets() {
+            out.push_str(&format!("    >={floor:>8}us {n}\n"));
+        }
+    }
+    out
+}
+
+/// JSON summary for tooling (`--json`).
+pub fn render_json(report: &Report) -> Json {
+    let mut counts = BTreeMap::new();
+    for (name, n) in &report.counts {
+        counts.insert(name.clone(), Json::Num(*n as f64));
+    }
+    let mut phases = BTreeMap::new();
+    for (name, phase) in &report.phases {
+        let (count, p50, p99, max) = phase.stats();
+        let mut obj = BTreeMap::new();
+        obj.insert("count".to_string(), Json::Num(count as f64));
+        obj.insert("p50_us".to_string(), Json::Num(p50 as f64));
+        obj.insert("p99_us".to_string(), Json::Num(p99 as f64));
+        obj.insert("max_us".to_string(), Json::Num(max as f64));
+        phases.insert(name.to_string(), Json::Obj(obj));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("version".to_string(), Json::Num(f64::from(super::format::VERSION)));
+    root.insert("events".to_string(), Json::Num(report.events as f64));
+    root.insert(
+        "span_us".to_string(),
+        Json::Num(report.span_ns as f64 / 1_000.0),
+    );
+    root.insert("counts".to_string(), Json::Obj(counts));
+    root.insert("phases".to_string(), Json::Obj(phases));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::events::EventId as E;
+
+    fn ev(id: E, ts_us: u64, a: u64, b: u64, c: u64) -> TraceEvent {
+        TraceEvent {
+            id: id as u32,
+            tid: 1,
+            ts_ns: ts_us * 1_000,
+            a,
+            b,
+            c,
+        }
+    }
+
+    fn lifecycle() -> Vec<TraceEvent> {
+        vec![
+            ev(E::RequestAdmit, 0, 1, 1, 0),
+            ev(E::BatchOpen, 10, 5, 1, 0),
+            ev(E::RequestDequeue, 10, 1, 5, 0),
+            ev(E::BatchClose, 40, 5, 1, 0),
+            ev(E::BatchDispatch, 41, 5, 1, 0),
+            ev(E::BatchDone, 141, 5, 1, 1),
+            ev(E::RequestReply, 142, 1, 3, 142),
+            ev(E::FrameWrite, 150, 9, 4, 1),
+        ]
+    }
+
+    #[test]
+    fn phases_are_stitched_from_correlated_pairs() {
+        let r = report(&lifecycle());
+        assert_eq!(r.phases["queue_wait"].stats().1, 10);
+        assert_eq!(r.phases["batch_fill"].stats().1, 30);
+        assert_eq!(r.phases["backend"].stats().1, 100);
+        assert_eq!(r.phases["write_out"].stats().1, 8);
+        assert_eq!(r.counts["request.admit"], 1);
+        assert_eq!(r.events, 8);
+    }
+
+    #[test]
+    fn ordering_check_accepts_a_well_formed_lifecycle() {
+        assert!(check_ordering(&lifecycle()).is_ok());
+    }
+
+    #[test]
+    fn ordering_check_flags_a_reply_before_dequeue() {
+        let mut events = lifecycle();
+        events[6].ts_ns = 5_000; // reply before its dequeue at 10us
+        let err = check_ordering(&events).unwrap_err();
+        assert!(err.contains("request 1"), "{err}");
+    }
+
+    #[test]
+    fn timeline_renders_names_and_respects_limit() {
+        let text = render_timeline(&lifecycle(), 0);
+        assert!(text.contains("request.admit"));
+        assert!(text.contains("batch.dispatch"));
+        assert!(text.contains("req=1"));
+        let cut = render_timeline(&lifecycle(), 3);
+        assert!(cut.contains("elided"));
+        assert_eq!(cut.lines().count(), 4);
+    }
+
+    #[test]
+    fn json_summary_parses_back() {
+        let r = report(&lifecycle());
+        let text = render_json(&r).to_string();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("events").and_then(|j| j.as_usize()), Some(8));
+        assert!(parsed.get("phases").is_some());
+    }
+
+    #[test]
+    fn unknown_event_ids_decode_without_panicking() {
+        let events = vec![TraceEvent {
+            id: 999,
+            tid: 2,
+            ts_ns: 1,
+            a: 1,
+            b: 2,
+            c: 3,
+        }];
+        let r = report(&events);
+        assert_eq!(r.counts["unknown.999"], 1);
+        assert!(render_timeline(&events, 0).contains("unknown.999"));
+    }
+}

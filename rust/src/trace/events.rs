@@ -1,0 +1,167 @@
+//! Event schema for the flight recorder.
+//!
+//! Every record is one event id plus three u64 payload words; the
+//! meaning of the words is fixed per event and documented in the table
+//! below (and in DESIGN.md §16).  Ids are part of the on-disk format:
+//! once shipped they are never renumbered, only appended.
+//!
+//! | event             | a                | b                | c              |
+//! |-------------------|------------------|------------------|----------------|
+//! | `request.admit`   | trace id         | queue depth      | deadline ms    |
+//! | `request.shed`    | trace id         | queue depth      | 0              |
+//! | `request.expire`  | trace id         | batch id         | 0              |
+//! | `request.dequeue` | trace id         | batch id         | queue depth    |
+//! | `request.reply`   | trace id         | predicted class  | latency µs     |
+//! | `batch.open`      | batch id         | first trace id   | 0              |
+//! | `batch.close`     | batch id         | batch len        | 0              |
+//! | `batch.dispatch`  | batch id         | batch len        | queue depth    |
+//! | `batch.done`      | batch id         | batch len        | 1 = ok         |
+//! | `cache.hit`       | layer            | input len        | 0              |
+//! | `cache.miss`      | layer            | input len        | 0              |
+//! | `cache.evict`     | layer            | entries evicted  | 0              |
+//! | `memo.replay`     | shard slot       | 0                | 0              |
+//! | `dispatch.sparse` | nonzeros         | density permille | 0              |
+//! | `dispatch.dense`  | nonzeros         | density permille | 0              |
+//! | `shard.enqueue`   | shard            | slot             | generation     |
+//! | `shard.dequeue`   | shard            | slot             | generation     |
+//! | `shard.restart`   | shard            | new generation   | backoff ms     |
+//! | `conn.accept`     | 0                | 0                | 0              |
+//! | `frame.read`      | frame id         | frame kind       | 0              |
+//! | `frame.write`     | frame id         | frame kind       | trace id       |
+//! | `fault.fire`      | point index      | trial            | 0              |
+//! | `engine.batch`    | stream index     | batch len        | method tag     |
+
+/// One decoded flight-recorder event.  Field order matches the wire
+/// record layout in [`crate::trace::format`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Event id (`EventId` as u32; unknown ids survive decode).
+    pub id: u32,
+    /// Recorder-assigned id of the thread that wrote the event.
+    pub tid: u32,
+    /// Nanoseconds since the recorder's process-start epoch.
+    pub ts_ns: u64,
+    /// First payload word (see the schema table).
+    pub a: u64,
+    /// Second payload word.
+    pub b: u64,
+    /// Third payload word.
+    pub c: u64,
+}
+
+/// Event identifiers.  Values are stable wire constants.
+#[repr(u32)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventId {
+    RequestAdmit = 1,
+    RequestShed = 2,
+    RequestExpire = 3,
+    RequestDequeue = 4,
+    RequestReply = 5,
+    BatchOpen = 6,
+    BatchClose = 7,
+    BatchDispatch = 8,
+    BatchDone = 9,
+    CacheHit = 10,
+    CacheMiss = 11,
+    CacheEvict = 12,
+    MemoReplay = 13,
+    DispatchSparse = 14,
+    DispatchDense = 15,
+    ShardEnqueue = 16,
+    ShardDequeue = 17,
+    ShardRestart = 18,
+    ConnAccept = 19,
+    FrameRead = 20,
+    FrameWrite = 21,
+    FaultFire = 22,
+    EngineBatch = 23,
+}
+
+/// Dotted human-readable name for a raw event id, or `None` for ids
+/// this build does not know (newer traces decode without panicking).
+pub fn name(id: u32) -> Option<&'static str> {
+    Some(match id {
+        1 => "request.admit",
+        2 => "request.shed",
+        3 => "request.expire",
+        4 => "request.dequeue",
+        5 => "request.reply",
+        6 => "batch.open",
+        7 => "batch.close",
+        8 => "batch.dispatch",
+        9 => "batch.done",
+        10 => "cache.hit",
+        11 => "cache.miss",
+        12 => "cache.evict",
+        13 => "memo.replay",
+        14 => "dispatch.sparse",
+        15 => "dispatch.dense",
+        16 => "shard.enqueue",
+        17 => "shard.dequeue",
+        18 => "shard.restart",
+        19 => "conn.accept",
+        20 => "frame.read",
+        21 => "frame.write",
+        22 => "fault.fire",
+        23 => "engine.batch",
+        _ => return None,
+    })
+}
+
+/// Labels for the three payload words of a known event id, used by the
+/// timeline renderer.  Empty label means "omit the word".
+pub fn payload_labels(id: u32) -> [&'static str; 3] {
+    match id {
+        1 => ["req", "depth", "deadline_ms"],
+        2 => ["req", "depth", ""],
+        3 => ["req", "batch", ""],
+        4 => ["req", "batch", "depth"],
+        5 => ["req", "class", "latency_us"],
+        6 => ["batch", "req", ""],
+        7 => ["batch", "len", ""],
+        8 => ["batch", "len", "depth"],
+        9 => ["batch", "len", "ok"],
+        10 | 11 => ["layer", "len", ""],
+        12 => ["layer", "evicted", ""],
+        13 => ["slot", "", ""],
+        14 | 15 => ["nnz", "permille", ""],
+        16 | 17 => ["shard", "slot", "gen"],
+        18 => ["shard", "gen", "backoff_ms"],
+        19 => ["", "", ""],
+        20 => ["frame", "kind", ""],
+        21 => ["frame", "kind", "req"],
+        22 => ["point", "trial", ""],
+        23 => ["stream", "len", "method"],
+        _ => ["a", "b", "c"],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_variant_has_a_name() {
+        for id in 1..=23u32 {
+            assert!(name(id).is_some(), "event id {id} is missing a name");
+        }
+        assert_eq!(name(0), None);
+        assert_eq!(name(24), None);
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for id in 1..=23u32 {
+            assert!(seen.insert(name(id).unwrap()), "duplicate name for {id}");
+        }
+    }
+
+    #[test]
+    fn enum_values_round_trip_through_names() {
+        assert_eq!(name(EventId::RequestAdmit as u32), Some("request.admit"));
+        assert_eq!(name(EventId::FaultFire as u32), Some("fault.fire"));
+        assert_eq!(name(EventId::EngineBatch as u32), Some("engine.batch"));
+    }
+}

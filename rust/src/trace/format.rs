@@ -1,0 +1,182 @@
+//! Versioned, checksummed binary trace-file format.
+//!
+//! Layout (all little-endian, modeled on `cluster/snapshot.rs`):
+//!
+//! ```text
+//! [0..8)    magic      b"BDMTRC\x01\0"
+//! [8..12)   version    u32 (currently 1)
+//! [12..20)  count      u64 — number of records
+//! [20..28)  checksum   u64 — mix64(fnv1a(payload))
+//! [28..]    payload    count × 40-byte records
+//! ```
+//!
+//! Each record is `id: u32, tid: u32, ts_ns: u64, a: u64, b: u64,
+//! c: u64`.  Decoding is all-or-nothing: a truncated file, a length
+//! mismatch or a checksum mismatch rejects the whole trace with a
+//! reason string rather than yielding partial events.
+
+use std::io;
+use std::path::Path;
+
+use super::events::TraceEvent;
+use super::recorder::RECORD_BYTES;
+use crate::util::hash::{fnv1a_bytes, mix64, FNV_OFFSET};
+
+/// File magic; the trailing byte pair versions the header shape.
+pub const MAGIC: [u8; 8] = *b"BDMTRC\x01\0";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 28;
+
+/// Serialize events into the versioned, checksummed container.
+pub fn encode(events: &[TraceEvent]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(events.len() * RECORD_BYTES);
+    for e in events {
+        payload.extend_from_slice(&e.id.to_le_bytes());
+        payload.extend_from_slice(&e.tid.to_le_bytes());
+        payload.extend_from_slice(&e.ts_ns.to_le_bytes());
+        payload.extend_from_slice(&e.a.to_le_bytes());
+        payload.extend_from_slice(&e.b.to_le_bytes());
+        payload.extend_from_slice(&e.c.to_le_bytes());
+    }
+    let checksum = mix64(fnv1a_bytes(FNV_OFFSET, &payload));
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(events.len() as u64).to_le_bytes());
+    out.extend_from_slice(&checksum.to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b.try_into().unwrap())
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b.try_into().unwrap())
+}
+
+/// Parse a trace container.  Every failure names its reason.
+pub fn decode(bytes: &[u8]) -> Result<Vec<TraceEvent>, String> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(format!(
+            "trace file too short: {} bytes < {HEADER_BYTES}-byte header",
+            bytes.len()
+        ));
+    }
+    if bytes[..8] != MAGIC {
+        return Err("bad trace magic".to_string());
+    }
+    let version = le_u32(&bytes[8..12]);
+    if version != VERSION {
+        return Err(format!("unsupported trace version {version}"));
+    }
+    let count = le_u64(&bytes[12..20]);
+    let checksum = le_u64(&bytes[20..28]);
+    let payload = &bytes[HEADER_BYTES..];
+    let want = (count as usize).checked_mul(RECORD_BYTES);
+    if want != Some(payload.len()) {
+        return Err(format!(
+            "trace length mismatch: header promises {count} records, payload is {} bytes",
+            payload.len()
+        ));
+    }
+    if mix64(fnv1a_bytes(FNV_OFFSET, payload)) != checksum {
+        return Err("trace checksum mismatch".to_string());
+    }
+    let mut events = Vec::with_capacity(count as usize);
+    for rec in payload.chunks_exact(RECORD_BYTES) {
+        events.push(TraceEvent {
+            id: le_u32(&rec[0..4]),
+            tid: le_u32(&rec[4..8]),
+            ts_ns: le_u64(&rec[8..16]),
+            a: le_u64(&rec[16..24]),
+            b: le_u64(&rec[24..32]),
+            c: le_u64(&rec[32..40]),
+        });
+    }
+    Ok(events)
+}
+
+/// Write a trace file atomically (`.tmp` + rename, like snapshots).
+pub fn save(path: &Path, events: &[TraceEvent]) -> io::Result<usize> {
+    let bytes = encode(events);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(bytes.len())
+}
+
+/// Read and validate a trace file.
+pub fn load(path: &Path) -> Result<Vec<TraceEvent>, String> {
+    let bytes =
+        std::fs::read(path).map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    decode(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: u64) -> Vec<TraceEvent> {
+        (0..n)
+            .map(|i| TraceEvent {
+                id: (i % 23 + 1) as u32,
+                tid: (i % 4 + 1) as u32,
+                ts_ns: i * 17,
+                a: mix64(i),
+                b: i,
+                c: i.wrapping_mul(3),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        for n in [0u64, 1, 7, 100] {
+            let events = sample(n);
+            assert_eq!(decode(&encode(&events)).unwrap(), events);
+        }
+    }
+
+    #[test]
+    fn truncation_is_rejected_at_every_length() {
+        let bytes = encode(&sample(5));
+        for cut in 0..bytes.len() {
+            assert!(decode(&bytes[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn any_flipped_byte_is_rejected() {
+        let bytes = encode(&sample(8));
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            assert!(decode(&bad).is_err(), "flip at byte {i} accepted");
+        }
+    }
+
+    #[test]
+    fn wrong_version_is_rejected() {
+        let mut bytes = encode(&sample(2));
+        bytes[8..12].copy_from_slice(&9u32.to_le_bytes());
+        assert!(decode(&bytes).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn save_and_load_round_trip_atomically() {
+        let events = sample(12);
+        let path = std::env::temp_dir().join(format!(
+            "bayesdm_trace_fmt_{}_{}.bin",
+            std::process::id(),
+            events.len()
+        ));
+        save(&path, &events).unwrap();
+        assert!(!path.with_extension("tmp").exists());
+        assert_eq!(load(&path).unwrap(), events);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,45 @@
+//! Flight-recorder tracing: lock-free binary event rings with an
+//! offline decoder (DESIGN.md §16).
+//!
+//! When a p999 spike or a shed burst happens, aggregate counters say
+//! *that* it happened but not *why*.  This module records the serving
+//! stack's hot seams — admission, batching, dispatch, cache probes,
+//! shard supervision, the wire — as fixed-size binary events in
+//! per-thread ring buffers, cheap enough to leave armed in production
+//! and exactly free when disarmed:
+//!
+//! * [`recorder`] — the per-thread rings: seqlock-style slots holding a
+//!   u32 event id, the writer's thread id, a monotonic nanosecond
+//!   timestamp and three u64 payload words.  Writing is wait-free (no
+//!   lock, no allocation, wrapping overwrite of the oldest record);
+//!   with the recorder disarmed every [`emit`] is a single relaxed
+//!   load-and-branch, so plain invocations stay byte-identical like
+//!   every other feature in this crate.
+//! * [`events`] — the event schema: request admit/shed/expire, batch
+//!   open/close/dispatch (with queue depth), cache hit/miss/evict,
+//!   memo replay, the sparse-vs-dense dispatch decision, shard
+//!   enqueue/dequeue/restart, connection accept and frame read/write,
+//!   and fault fires on chaos builds.
+//! * [`format`] — the versioned, checksummed binary trace-file format
+//!   (modeled on `cluster/snapshot.rs` headers): what a drain dump,
+//!   `GET /admin/trace` and `bayesdm trace dump` produce.
+//! * [`decode`] — the offline decoder behind `bayesdm trace decode`:
+//!   a human-readable timeline, per-phase latency histograms (queue
+//!   wait vs batch fill vs backend vs write-out) and a `--json` mode.
+//!
+//! Arming is process-wide (`--trace-buf-kb` / `BAYESDM_TRACE_KB`, off
+//! by default).  [`stats`] feeds the `trace` section of
+//! `MetricsSummary` — events recorded/dropped and buffer bytes —
+//! which, mirroring the fault counters, renders only once the recorder
+//! has been armed.
+
+pub mod decode;
+pub mod events;
+pub mod format;
+pub mod recorder;
+
+pub use events::{EventId, TraceEvent};
+pub use recorder::{
+    arm, arm_from_env, armed, disarm, drain, emit, next_batch_id, next_request_id, stats,
+    TraceStats,
+};

@@ -1,0 +1,373 @@
+//! Lock-free per-thread event rings.
+//!
+//! Each recording thread owns one ring of fixed-size slots; writes are
+//! wait-free (a seqlock-style sequence word per slot, wrapping
+//! overwrite of the oldest record, no allocation after the ring is
+//! created).  A drain walks every registered ring from any thread and
+//! discards torn slots instead of blocking writers.
+//!
+//! Slot protocol (single writer per ring, many readers):
+//!
+//! * the writer stores `seq = 2*e + 1` (odd) for event number `e`,
+//!   then the five data words, then `seq = 2*(e + 1)` (even, release);
+//! * a reader loads `seq` (acquire), reads the data words, reloads
+//!   `seq`, and keeps the record only if both loads saw the same even
+//!   value.  The even value encodes the event number, so a drain can
+//!   skip records it already returned.
+//!
+//! Disarmed (the default), [`emit`] is one relaxed bool load and a
+//! branch — no ring is ever allocated and no clock is read, so plain
+//! invocations stay byte-identical.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::events::{EventId, TraceEvent};
+
+/// Data words per slot: packed id/tid, timestamp, three payload words.
+const DATA_WORDS: usize = 5;
+/// Floor on ring capacity so tiny `--trace-buf-kb` values still work.
+const MIN_SLOTS: usize = 64;
+/// Serialized size of one record in the file format (id u32 + tid u32
+/// + ts u64 + 3×u64 payload).
+pub const RECORD_BYTES: usize = 40;
+/// Default per-thread buffer when arming from the environment without
+/// an explicit size.
+pub const DEFAULT_BUF_KB: usize = 256;
+
+struct Slot {
+    seq: AtomicU64,
+    data: [AtomicU64; DATA_WORDS],
+}
+
+struct Ring {
+    tid: u32,
+    /// Events ever written by the owning thread (next event number).
+    head: AtomicU64,
+    /// Event numbers below this were already returned by a drain.
+    drained: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl Ring {
+    fn new(tid: u32, slots: usize) -> Self {
+        let slots = (0..slots.max(MIN_SLOTS))
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                data: Default::default(),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ring {
+            tid,
+            head: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+            slots,
+        }
+    }
+
+    /// Single-writer append; overwrites the oldest record when full.
+    fn push(&self, id: u32, ts_ns: u64, a: u64, b: u64, c: u64) {
+        let e = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(e % self.slots.len() as u64) as usize];
+        if e >= self.slots.len() as u64 {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+        slot.seq.store(2 * e + 1, Ordering::Release);
+        slot.data[0].store(u64::from(id) | (u64::from(self.tid) << 32), Ordering::Relaxed);
+        slot.data[1].store(ts_ns, Ordering::Relaxed);
+        slot.data[2].store(a, Ordering::Relaxed);
+        slot.data[3].store(b, Ordering::Relaxed);
+        slot.data[4].store(c, Ordering::Relaxed);
+        slot.seq.store(2 * (e + 1), Ordering::Release);
+        self.head.store(e + 1, Ordering::Relaxed);
+        RECORDED.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Collect every stable, not-yet-drained record.  Torn slots (the
+    /// writer is mid-store) are skipped, never waited on.
+    fn collect(&self, out: &mut Vec<TraceEvent>) {
+        let floor = self.drained.load(Ordering::Acquire);
+        let mut newest = floor;
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                continue;
+            }
+            let w0 = slot.data[0].load(Ordering::Relaxed);
+            let ts = slot.data[1].load(Ordering::Relaxed);
+            let a = slot.data[2].load(Ordering::Relaxed);
+            let b = slot.data[3].load(Ordering::Relaxed);
+            let c = slot.data[4].load(Ordering::Relaxed);
+            let s2 = slot.seq.load(Ordering::Acquire);
+            if s1 != s2 {
+                continue; // torn: overwritten while we read
+            }
+            let e = s1 / 2 - 1; // event number encoded in the even seq
+            if e < floor {
+                continue; // already returned by an earlier drain
+            }
+            newest = newest.max(e + 1);
+            out.push(TraceEvent {
+                id: (w0 & 0xFFFF_FFFF) as u32,
+                tid: (w0 >> 32) as u32,
+                ts_ns: ts,
+                a,
+                b,
+                c,
+            });
+        }
+        self.drained.fetch_max(newest, Ordering::AcqRel);
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Latches true on first arm; `stats()` reports `None` until then so
+/// never-traced runs keep byte-identical metrics output.
+static EVER_ARMED: AtomicBool = AtomicBool::new(false);
+static SLOTS_PER_THREAD: AtomicUsize = AtomicUsize::new(MIN_SLOTS);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static RECORDED: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_REQUEST: AtomicU64 = AtomicU64::new(1);
+static NEXT_BATCH: AtomicU64 = AtomicU64::new(1);
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn epoch() -> Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+fn clock_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+thread_local! {
+    static RING: RefCell<Option<Arc<Ring>>> = const { RefCell::new(None) };
+}
+
+/// Arm the recorder process-wide with roughly `buf_kb` KiB of ring per
+/// recording thread.  Returns the per-thread slot count.  Threads that
+/// already own a ring keep its original size.
+pub fn arm(buf_kb: usize) -> usize {
+    let slots = (buf_kb.saturating_mul(1024) / RECORD_BYTES).max(MIN_SLOTS);
+    SLOTS_PER_THREAD.store(slots, Ordering::Relaxed);
+    epoch(); // pin the timestamp epoch before the first event
+    EVER_ARMED.store(true, Ordering::Relaxed);
+    ARMED.store(true, Ordering::Release);
+    slots
+}
+
+/// Arm from `BAYESDM_TRACE_KB` if it is set to a nonzero size; returns
+/// whether the recorder ended up armed.
+pub fn arm_from_env() -> bool {
+    if let Ok(v) = std::env::var("BAYESDM_TRACE_KB") {
+        if let Ok(kb) = v.trim().parse::<usize>() {
+            if kb > 0 {
+                arm(kb);
+                return true;
+            }
+        }
+    }
+    armed()
+}
+
+/// Stop recording.  Rings stay registered so a later drain still sees
+/// everything written before the disarm.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Whether the recorder is currently armed.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Record one event.  Disarmed this is a relaxed load and a branch;
+/// armed it is a few nanoseconds of atomic stores into the calling
+/// thread's ring.
+#[inline]
+pub fn emit(id: EventId, a: u64, b: u64, c: u64) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    emit_armed(id as u32, a, b, c);
+}
+
+#[cold]
+fn new_ring() -> Arc<Ring> {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed) as u32;
+    let ring = Arc::new(Ring::new(tid, SLOTS_PER_THREAD.load(Ordering::Relaxed)));
+    registry().lock().unwrap().push(Arc::clone(&ring));
+    ring
+}
+
+fn emit_armed(id: u32, a: u64, b: u64, c: u64) {
+    RING.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let ring = slot.get_or_insert_with(new_ring);
+        ring.push(id, clock_ns(), a, b, c);
+    });
+}
+
+/// Next request trace id, or 0 when disarmed so untraced requests
+/// carry an inert marker.
+#[inline]
+pub fn next_request_id() -> u64 {
+    if !armed() {
+        return 0;
+    }
+    NEXT_REQUEST.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Next batch id, or 0 when disarmed.
+#[inline]
+pub fn next_batch_id() -> u64 {
+    if !armed() {
+        return 0;
+    }
+    NEXT_BATCH.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Snapshot every ring and return the records written since the last
+/// drain, ordered by timestamp.  Counters are monotonic and survive
+/// the drain (mirroring `fault::injected`).
+pub fn drain() -> Vec<TraceEvent> {
+    let rings = registry().lock().unwrap();
+    let mut out = Vec::new();
+    for ring in rings.iter() {
+        ring.collect(&mut out);
+    }
+    out.sort_by_key(|e| (e.ts_ns, e.tid, e.id));
+    out
+}
+
+/// Recorder counters for the `trace` section of `MetricsSummary`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceStats {
+    /// Events written to any ring since process start.
+    pub recorded: u64,
+    /// Events overwritten before a drain collected them.
+    pub dropped: u64,
+    /// Total bytes of ring buffer currently allocated.
+    pub buffer_bytes: u64,
+    /// Threads that have registered a ring.
+    pub threads: u64,
+}
+
+/// `None` until the recorder has ever been armed, so metrics output is
+/// byte-identical for plain invocations.
+pub fn stats() -> Option<TraceStats> {
+    if !EVER_ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let rings = registry().lock().unwrap();
+    let buffer_bytes = rings
+        .iter()
+        .map(|r| (r.slots.len() * RECORD_BYTES) as u64)
+        .sum();
+    Some(TraceStats {
+        recorded: RECORDED.load(Ordering::Relaxed),
+        dropped: DROPPED.load(Ordering::Relaxed),
+        buffer_bytes,
+        threads: rings.len() as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Arming is process-global, so recorder tests serialize and always
+    // disarm before returning.
+    fn exclusive() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        let guard = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        disarm();
+        let _ = drain(); // start from a clean slate
+        guard
+    }
+
+    #[test]
+    fn disarmed_emit_records_nothing() {
+        let _g = exclusive();
+        let before = RECORDED.load(Ordering::Relaxed);
+        emit(EventId::CacheHit, 1, 2, 3);
+        assert_eq!(RECORDED.load(Ordering::Relaxed), before);
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn armed_events_drain_in_timestamp_order_with_payloads() {
+        let _g = exclusive();
+        arm(64);
+        emit(EventId::BatchOpen, 7, 1, 0);
+        emit(EventId::BatchClose, 7, 3, 0);
+        emit(EventId::BatchDispatch, 7, 3, 9);
+        disarm();
+        let events = drain();
+        assert_eq!(events.len(), 3);
+        assert!(events.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+        assert_eq!(events[0].id, EventId::BatchOpen as u32);
+        assert_eq!(events[0].a, 7);
+        assert_eq!(events[2].c, 9);
+        assert!(events.iter().all(|e| e.tid != 0));
+        // A second drain returns nothing new.
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let _g = exclusive();
+        let slots = arm(1); // clamps to MIN_SLOTS
+        assert_eq!(slots, MIN_SLOTS);
+        let dropped_before = DROPPED.load(Ordering::Relaxed);
+        // A fresh thread gets a ring sized by the arm(1) above; the
+        // test harness thread may already own a larger ring.
+        std::thread::spawn(|| {
+            for i in 0..(MIN_SLOTS as u64 + 10) {
+                emit(EventId::CacheMiss, i, 0, 0);
+            }
+        })
+        .join()
+        .unwrap();
+        disarm();
+        let events = drain();
+        assert!(events.len() <= MIN_SLOTS);
+        assert_eq!(DROPPED.load(Ordering::Relaxed) - dropped_before, 10);
+        // The survivors are the newest records.
+        assert!(events.iter().all(|e| e.a >= 10));
+    }
+
+    #[test]
+    fn stats_report_buffers_after_arming() {
+        let _g = exclusive();
+        arm(64);
+        emit(EventId::ConnAccept, 0, 0, 0);
+        disarm();
+        let _ = drain();
+        let s = stats().expect("armed at least once");
+        assert!(s.recorded >= 1);
+        assert!(s.buffer_bytes >= (MIN_SLOTS * RECORD_BYTES) as u64);
+        assert!(s.threads >= 1);
+    }
+
+    #[test]
+    fn request_and_batch_ids_are_zero_when_disarmed() {
+        let _g = exclusive();
+        assert_eq!(next_request_id(), 0);
+        assert_eq!(next_batch_id(), 0);
+        arm(64);
+        let r1 = next_request_id();
+        let r2 = next_request_id();
+        assert!(r1 > 0 && r2 > r1);
+        disarm();
+    }
+}

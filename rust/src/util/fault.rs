@@ -48,7 +48,8 @@
 /// | `shard.stall`      | cluster shard workers                     | the worker sleeps `ms` before evaluating (wedge) |
 /// | `snapshot.corrupt` | `snapshot::load`                          | the snapshot is rejected → reported cold start |
 /// | `cache.poison`     | `DmCache::lookup`                         | the shard mutex is poisoned mid-lookup |
-pub const FAULT_POINTS: [&str; 7] = [
+/// | `snapshot.save`    | `snapshot::save`                          | the `.tmp` write fails before the rename — the existing snapshot must survive |
+pub const FAULT_POINTS: [&str; 8] = [
     "io.read",
     "io.write",
     "frame.corrupt",
@@ -56,6 +57,7 @@ pub const FAULT_POINTS: [&str; 7] = [
     "shard.stall",
     "snapshot.corrupt",
     "cache.poison",
+    "snapshot.save",
 ];
 
 /// One parsed `name:p=..[:seed=..][:ms=..]` clause.
@@ -161,7 +163,8 @@ mod registry {
         }
     }
 
-    static POINTS: [PointState; 7] = [
+    static POINTS: [PointState; 8] = [
+        PointState::new(),
         PointState::new(),
         PointState::new(),
         PointState::new(),
@@ -249,6 +252,9 @@ mod registry {
         let fired = frac < p;
         if fired {
             INJECTED.fetch_add(1, Ordering::Relaxed);
+            if crate::trace::armed() {
+                crate::trace::emit(crate::trace::EventId::FaultFire, i as u64, trial, 0);
+            }
         }
         fired
     }

@@ -55,6 +55,39 @@ pub fn hash_f32_matrix(rows: &[Vec<f32>]) -> u64 {
     mix64(state)
 }
 
+/// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) lookup table,
+/// built at compile time.  Used by wire-protocol v3 frames, where the
+/// checksum must match what standard `crc32` tools compute — unlike
+/// the FNV/mix64 pair above, which is internal-only.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0xEDB8_8320
+            } else {
+                crc >> 1
+            };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE) over a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ u32::from(b)) & 0xFF) as usize];
+    }
+    !crc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,6 +117,15 @@ mod tests {
         let b = hash_f32_matrix(&[vec![1.0], vec![2.0, 3.0]]);
         assert_ne!(a, b);
         assert_eq!(a, hash_f32_matrix(&[vec![1.0, 2.0], vec![3.0]]));
+    }
+
+    #[test]
+    fn crc32_matches_the_standard_check_value() {
+        // The canonical CRC-32/IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Sensitive to single-bit flips anywhere.
+        assert_ne!(crc32(b"123456788"), crc32(b"123456789"));
     }
 
     #[test]

@@ -384,9 +384,10 @@ fn corrupted_frames_are_detected_not_trusted() {
     let mut client = WireClient::connect(server.local_addr()).expect("connect");
     client.classify(&m, &x).expect("healthy before arming");
 
-    // frame.corrupt flips the magic of every written frame: whichever
-    // side reads it rejects the stream with a typed framing error — a
-    // corrupt frame must never be decoded into a plausible answer.
+    // frame.corrupt flips the first payload byte of every written frame
+    // (the magic for payload-less frames): whichever side reads it
+    // rejects the stream with a typed error — a corrupt frame must
+    // never be decoded into a plausible answer.
     fault::arm("frame.corrupt:p=1:seed=6").expect("arm");
     // (which side detects it first depends on whose write fired)
     client.classify(&m, &x).expect_err("corruption must be detected");
@@ -395,4 +396,89 @@ fn corrupted_frames_are_detected_not_trusted() {
     let mut fresh = WireClient::connect(server.local_addr()).expect("fresh connection");
     fresh.classify(&m, &x).expect("server is unharmed");
     server.shutdown();
+}
+
+/// Restores default (non-CRC) frame emission even when a test panics.
+struct CrcOff;
+
+impl Drop for CrcOff {
+    fn drop(&mut self) {
+        bayesdm::serve::proto::set_crc_frames(false);
+    }
+}
+
+/// With v3 CRC frames enabled, flipped payload bytes are caught by the
+/// checksum — the corruption class v1/v2 structural validation cannot
+/// always see — and an uncorrupted CRC wire round-trips cleanly.
+#[test]
+fn crc_frames_catch_payload_corruption_on_the_wire() {
+    let _g = exclusive();
+    let _crc = CrcOff;
+    bayesdm::serve::proto::set_crc_frames(true);
+    let cfg = net_config();
+    let deployment = Arc::new(Deployment::new(model(), &cfg));
+    let server = NetServer::bind(deployment, &cfg).expect("bind");
+    let m = Method::Standard { t: 4 };
+    let x = vec![0.5f32; ARCH[0]];
+
+    let mut client = WireClient::connect(server.local_addr()).expect("connect");
+    client.classify(&m, &x).expect("v3 frames serve cleanly before arming");
+
+    fault::arm("frame.corrupt:p=1:seed=8").expect("arm");
+    let e = client.classify(&m, &x).expect_err("checksum must catch the flip");
+    assert!(
+        e.to_string().contains("checksum") || matches!(e, ServeError::Internal(_)),
+        "corruption must surface as a checksum or transport error: {e:?}"
+    );
+
+    fault::disarm();
+    let mut fresh = WireClient::connect(server.local_addr()).expect("fresh connection");
+    fresh.classify(&m, &x).expect("server is unharmed");
+    server.shutdown();
+}
+
+/// A failed snapshot save must never damage the snapshot already on
+/// disk: the `.tmp`-then-rename protocol fails before the rename, the
+/// sibling is cleaned up and the original file still loads.
+#[test]
+fn failed_snapshot_save_leaves_the_existing_snapshot_intact() {
+    let _g = exclusive();
+    let path =
+        std::env::temp_dir().join(format!("bayesdm_chaos_{}_snapsave.snap", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let xs = inputs(6, 31);
+    let m = dm();
+
+    let mut snap_cfg = cfg(1, CacheConfig::with_mb(8));
+    snap_cfg.snapshot = Some(path.to_string_lossy().into_owned());
+    let warm = ClusterRouter::new(model(), snap_cfg.clone());
+    let want = warm.evaluate(&xs, &m).expect("warming pass");
+    warm.save_snapshot().expect("configured").expect("save ok");
+    let good = std::fs::read(&path).expect("snapshot on disk");
+
+    fault::arm("snapshot.save:p=1").expect("arm");
+    let err = warm.save_snapshot().expect("configured").expect_err("injected save failure");
+    assert!(err.to_string().contains("fault injected"), "{err}");
+    assert_eq!(
+        std::fs::read(&path).expect("still on disk"),
+        good,
+        "a failed save must not touch the existing snapshot"
+    );
+    assert!(
+        !path.with_extension("tmp").exists(),
+        "the torn .tmp sibling must be cleaned up"
+    );
+    fault::disarm();
+
+    // The surviving file is a fully valid snapshot: a restart loads it
+    // warm and answers bit-identically.
+    drop(warm); // drop persists once more, now fault-free
+    let restarted = ClusterRouter::new(model(), snap_cfg);
+    let report = restarted.snapshot_load_report().expect("snapshot configured");
+    assert_eq!(report.rejected, None, "{report:?}");
+    assert!(report.entries > 0);
+    let got = restarted.evaluate(&xs, &m).expect("restarted deployment");
+    assert_eq!(got.logits, want.logits, "restart must replay bit-exactly");
+    drop(restarted);
+    let _ = std::fs::remove_file(&path);
 }

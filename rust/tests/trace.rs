@@ -1,0 +1,230 @@
+//! Flight-recorder contract (DESIGN.md §16): arming the trace recorder
+//! never changes results, armed serving yields a decodable well-ordered
+//! timeline, and the trace-file format rejects damage.
+//!
+//! The recorder is process-global (one armed flag, one ring registry),
+//! so every test serializes on one lock and disarms + drains on entry
+//! and on drop (panic-safe) — the same discipline the chaos suite uses
+//! for the fault registry.  Zero artifact dependencies: everything runs
+//! on the synthetic posterior.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use bayesdm::cluster::{ClusterRouter, MemoConfig};
+use bayesdm::coordinator::{
+    serve_engine, CacheConfig, Engine, EngineConfig, InferenceMethod, SeedSchedule, ServerConfig,
+};
+use bayesdm::grng::uniform::{UniformSource, XorShift128Plus};
+use bayesdm::nn::bnn::{BnnModel, Method};
+use bayesdm::trace::{self, decode, format, EventId, TraceEvent};
+use bayesdm::util::Json;
+
+const SEED: u64 = 0x7ACE_5EED;
+const ARCH: [usize; 4] = [20, 16, 10, 6];
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+struct Disarmed {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for Disarmed {
+    fn drop(&mut self) {
+        trace::disarm();
+        let _ = trace::drain();
+    }
+}
+
+/// Serializes recorder use across the whole binary and guarantees a
+/// disarmed, empty recorder on entry and exit, even on panic.
+fn exclusive() -> Disarmed {
+    let lock = TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    trace::disarm();
+    let _ = trace::drain();
+    Disarmed { _lock: lock }
+}
+
+fn model() -> BnnModel {
+    BnnModel::synthetic(&ARCH, 0xAB)
+}
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        workers: 2,
+        seed: SEED,
+        cache: CacheConfig::with_mb(4),
+        seed_schedule: SeedSchedule::ContentHash,
+        alpha: 1.0,
+        shards: 2,
+        memo: MemoConfig::with_mb(2),
+        snapshot: None,
+        sparse_threshold: None,
+    }
+}
+
+fn inputs(count: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut r = XorShift128Plus::new(seed);
+    (0..count).map(|_| (0..ARCH[0]).map(|_| r.next_f32()).collect()).collect()
+}
+
+fn methods() -> [Method; 3] {
+    [
+        Method::Standard { t: 5 },
+        Method::Hybrid { t: 5 },
+        Method::DmBnn { schedule: vec![2, 3, 2] },
+    ]
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bayesdm_trace_{}_{name}.bin", std::process::id()))
+}
+
+/// The acceptance contract: logits and op counts are bit-identical with
+/// the recorder armed and disarmed, across all three methods, through a
+/// full cluster deployment (cache + memo + shards — every probe site on
+/// the evaluate path fires).
+#[test]
+fn armed_and_disarmed_results_are_bit_identical() {
+    let _g = exclusive();
+    let xs = inputs(10, 7);
+    for method in &methods() {
+        let baseline = {
+            let r = ClusterRouter::new(model(), cfg());
+            let cold = r.evaluate(&xs, method).expect("disarmed cold");
+            let warm = r.evaluate(&xs, method).expect("disarmed warm");
+            (cold, warm)
+        };
+        trace::arm(256);
+        let armed = {
+            let r = ClusterRouter::new(model(), cfg());
+            let cold = r.evaluate(&xs, method).expect("armed cold");
+            let warm = r.evaluate(&xs, method).expect("armed warm");
+            (cold, warm)
+        };
+        trace::disarm();
+        assert_eq!(armed.0.logits, baseline.0.logits, "{method:?} cold");
+        assert_eq!(armed.0.ops.muls, baseline.0.ops.muls, "{method:?} cold");
+        assert_eq!(armed.1.logits, baseline.1.logits, "{method:?} warm");
+        assert_eq!(armed.1.ops.muls, baseline.1.ops.muls, "{method:?} warm");
+        let events = trace::drain();
+        assert!(!events.is_empty(), "{method:?}: armed evaluation must record events");
+    }
+}
+
+/// Armed end-to-end serving produces a trace whose per-request and
+/// per-batch lifecycles are well ordered, that survives a file
+/// round-trip bit-exactly, and that both renderers accept.
+#[test]
+fn served_traffic_yields_a_well_ordered_decodable_timeline() {
+    let _g = exclusive();
+    trace::arm(512);
+    let engine = Arc::new(Engine::new(model(), cfg()));
+    let handle = serve_engine(
+        engine,
+        ServerConfig { max_batch: 4, workers: 2, ..ServerConfig::default() },
+    );
+    let m = InferenceMethod::Standard { t: 4 };
+    let pending: Vec<_> = inputs(12, 11)
+        .into_iter()
+        .map(|x| handle.classify(x, m.clone()).expect("admit"))
+        .collect();
+    for p in pending {
+        p.wait().expect("response");
+    }
+    handle.shutdown();
+    trace::disarm();
+    let events = trace::drain();
+
+    let count = |id: EventId| events.iter().filter(|e| e.id == id as u32).count();
+    assert_eq!(count(EventId::RequestAdmit), 12, "one admit per request");
+    assert_eq!(count(EventId::RequestReply), 12, "one reply per request");
+    assert!(count(EventId::BatchOpen) > 0, "batches must open");
+    assert!(count(EventId::BatchDispatch) > 0, "batches must dispatch");
+    assert_eq!(
+        count(EventId::BatchDispatch),
+        count(EventId::BatchDone),
+        "every dispatched batch completes"
+    );
+    assert!(count(EventId::EngineBatch) > 0, "the backend must record its batches");
+    decode::check_ordering(&events).expect("admit <= dequeue <= reply, open <= ... <= done");
+
+    // file round-trip: what the decoder reads is exactly what was drained
+    let path = tmp("roundtrip");
+    let n = format::save(&path, &events).expect("save");
+    assert_eq!(n, events.len());
+    let loaded = format::load(&path).expect("load");
+    assert_eq!(loaded, events, "trace file round-trip must be bit-exact");
+    let _ = std::fs::remove_file(&path);
+
+    let report = decode::report(&events);
+    assert!(report.phases["queue_wait"].count() > 0, "queue-wait phase must stitch");
+    assert!(report.phases["backend"].count() > 0, "backend phase must stitch");
+    let text = decode::render_timeline(&events, 0);
+    assert!(text.contains("request.admit") && text.contains("batch.dispatch"), "{text}");
+    let json = decode::render_json(&report).to_string();
+    let parsed = Json::parse(&json).expect("summary json parses");
+    assert_eq!(parsed.get("events").and_then(|j| j.as_usize()), Some(events.len()));
+}
+
+/// Encode→decode is the identity for arbitrary event payloads — the
+/// round-trip property over pseudo-random records.
+#[test]
+fn format_round_trips_arbitrary_events() {
+    let mut r = XorShift128Plus::new(0xF0F0);
+    let mut next = || {
+        let hi = u64::from(r.next_f32().to_bits());
+        let lo = u64::from(r.next_f32().to_bits());
+        (hi << 32) | lo
+    };
+    for len in [0usize, 1, 7, 64, 513] {
+        let events: Vec<TraceEvent> = (0..len)
+            .map(|i| TraceEvent {
+                id: (next() % 64) as u32,
+                tid: (next() % 16) as u32,
+                ts_ns: i as u64 * 1000 + next() % 1000,
+                a: next(),
+                b: next(),
+                c: next(),
+            })
+            .collect();
+        let bytes = format::encode(&events);
+        let back = format::decode(&bytes).expect("round trip");
+        assert_eq!(back, events, "len={len}");
+    }
+}
+
+/// A damaged trace file is rejected wholesale — truncation anywhere and
+/// a flipped byte anywhere both fail the load; nothing decodes "mostly".
+#[test]
+fn truncated_or_corrupt_trace_files_are_rejected() {
+    let _g = exclusive();
+    trace::arm(64);
+    for i in 0..20u64 {
+        trace::emit(EventId::CacheHit, i, i * 2, i * 3);
+    }
+    trace::disarm();
+    let events = trace::drain();
+    assert_eq!(events.len(), 20);
+    let path = tmp("damage");
+    format::save(&path, &events).expect("save");
+    let good = std::fs::read(&path).expect("read back");
+    assert!(format::decode(&good).is_ok());
+
+    for cut in [0usize, 7, good.len() / 2, good.len() - 1] {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        assert!(format::load(&path).is_err(), "truncation at {cut} must be rejected");
+    }
+    let mut r = XorShift128Plus::new(0xBAD);
+    for _ in 0..16 {
+        let mut bad = good.clone();
+        let at = (u64::from(r.next_f32().to_bits()) as usize) % bad.len();
+        bad[at] ^= 0x40;
+        if bad == good {
+            continue;
+        }
+        std::fs::write(&path, &bad).unwrap();
+        assert!(format::load(&path).is_err(), "flipped byte at {at} must be rejected");
+    }
+    let _ = std::fs::remove_file(&path);
+}
